@@ -1,0 +1,69 @@
+//! Robustness demo (§VI / experiment A2): SQS at-least-once duplicates,
+//! executor crashes, and the 300 s duration cap, all hitting one query —
+//! and the answer staying exact.
+//!
+//! Run: `cargo run --release --example failure_injection`
+
+use flint::compute::oracle;
+use flint::compute::queries::QueryId;
+use flint::config::FlintConfig;
+use flint::data::generate_taxi_dataset;
+use flint::exec::{Engine, FlintEngine};
+use flint::services::SimEnv;
+
+fn main() {
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.data.object_bytes = 4 * 1024 * 1024;
+    cfg.flint.input_split_bytes = 4 * 1024 * 1024;
+    // Hostile conditions: 20% duplicate deliveries, 5% invocation
+    // crashes, and a duration cap tight enough to force chaining.
+    cfg.sim.sqs_duplicate_prob = 0.20;
+    cfg.sim.lambda_failure_prob = 0.05;
+    cfg.sim.compute_scale = 50.0; // CPython-era executor speed
+    // Margin must cover one batch of scaled compute (the chain check
+    // runs between batches).
+    cfg.sim.lambda_time_limit_s = 0.6;
+    cfg.sim.lambda_chain_margin_s = 0.2;
+    cfg.flint.max_task_retries = 8;
+
+    let env = SimEnv::new(cfg);
+    println!("generating 300k trips; injecting duplicates (20%), crashes (5%), 0.6s duration cap...");
+    let dataset = generate_taxi_dataset(&env, "trips", 300_000);
+    let engine = FlintEngine::new(env.clone());
+    engine.prewarm();
+
+    let query = QueryId::Q5;
+    let expect = oracle::evaluate(&env, &dataset, query);
+    let report = engine.run_query(query, &dataset).expect("query survives");
+
+    println!("\n{}", report.summary());
+    println!("  chains (duration cap):      {}", report.chains);
+    println!("  retries (injected crashes): {}", report.retries);
+    println!("  duplicate msgs dropped:     {}", report.duplicates_dropped);
+    println!("  sqs messages nacked:        {}", env.metrics().get("sqs.nacked"));
+    println!(
+        "  result exact despite all of the above: {}",
+        report.result.approx_eq(&expect)
+    );
+    assert!(report.result.approx_eq(&expect));
+
+    // Negative control: §VI dedup off → the same conditions corrupt Q5.
+    let mut cfg2 = FlintConfig::default();
+    cfg2.artifacts_dir = "artifacts".into();
+    cfg2.data.object_bytes = 4 * 1024 * 1024;
+    cfg2.flint.input_split_bytes = 4 * 1024 * 1024;
+    cfg2.sim.sqs_duplicate_prob = 0.20;
+    cfg2.flint.dedup_enabled = false;
+    let env2 = SimEnv::new(cfg2);
+    let ds2 = generate_taxi_dataset(&env2, "trips", 300_000);
+    let engine2 = FlintEngine::new(env2.clone());
+    let expect2 = oracle::evaluate(&env2, &ds2, query);
+    let r2 = engine2.run_query(query, &ds2).expect("runs");
+    println!(
+        "\nnegative control (dedup disabled): result exact = {} (expected: false)",
+        r2.result.approx_eq(&expect2)
+    );
+    assert!(!r2.result.approx_eq(&expect2), "duplicates must corrupt without dedup");
+    println!("\nFAILURE-INJECTION DEMO OK");
+}

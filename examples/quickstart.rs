@@ -1,0 +1,82 @@
+//! Quickstart: the paper's Q1 driver program, written against Flint's
+//! generic PySpark-like RDD API, running on the serverless engine.
+//!
+//! This is the Rust analogue of the paper's §IV snippet:
+//!
+//! ```python
+//! arr = src.map(lambda x: x.split(',')) \
+//!          .filter(lambda x: inside(x, goldman)) \
+//!          .map(lambda x: (get_hour(x[2]), 1)) \
+//!          .reduceByKey(add, 30) \
+//!          .collect()
+//! ```
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use flint::compute::value::Value;
+use flint::config::FlintConfig;
+use flint::data::schema::{TripRecord, GOLDMAN};
+use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
+use flint::exec::flint::run_rdd_collect;
+use flint::exec::FlintEngine;
+use flint::plan::Rdd;
+use flint::services::SimEnv;
+
+fn main() {
+    // A small simulated environment with a fresh synthetic TLC dataset.
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.data.object_bytes = 4 * 1024 * 1024;
+    cfg.flint.input_split_bytes = 4 * 1024 * 1024;
+    let env = SimEnv::new(cfg);
+    println!("generating 200k synthetic taxi trips into simulated S3...");
+    let dataset = generate_taxi_dataset(&env, "trips", 200_000);
+
+    // The driver program — arbitrary user closures, exactly like PySpark.
+    let src = Rdd::text_file(INPUT_BUCKET, "trips/");
+    let hourly = src
+        .map(|line| {
+            // x.split(',') — parse the CSV record.
+            let text = line.as_str().expect("text input");
+            match TripRecord::parse_csv(text.as_bytes()) {
+                Some(r) => Value::List(vec![
+                    Value::F64(r.dropoff_lon as f64),
+                    Value::F64(r.dropoff_lat as f64),
+                    Value::I64(flint::data::chrono::hour_of_day(r.dropoff_ts) as i64),
+                ]),
+                None => Value::Null,
+            }
+        })
+        .filter(|v| {
+            // inside(x, goldman)
+            let Value::List(f) = v else { return false };
+            GOLDMAN.contains(f[0].as_f64().unwrap() as f32, f[1].as_f64().unwrap() as f32)
+        })
+        .map(|v| {
+            // (get_hour(x[2]), 1)
+            let Value::List(f) = v else { unreachable!() };
+            Value::pair(f[2].clone(), Value::I64(1))
+        })
+        .reduce_by_key(30, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
+
+    // Execute serverlessly: tasks in simulated Lambdas, shuffle via SQS.
+    let engine = FlintEngine::new(env.clone());
+    engine.prewarm();
+    let result = run_rdd_collect(&engine, &hourly, &dataset).expect("query");
+
+    println!("\nGoldman Sachs drop-offs by hour:");
+    let mut rows: Vec<(i64, i64)> = result
+        .iter()
+        .map(|v| (v.key().as_i64().unwrap(), v.val().as_i64().unwrap()))
+        .collect();
+    rows.sort();
+    let max = rows.iter().map(|(_, n)| *n).max().unwrap_or(1);
+    for (hour, n) in &rows {
+        println!("  {hour:02}:00  {n:5}  {}", "#".repeat((n * 40 / max) as usize));
+    }
+    println!(
+        "\n(ran {} Lambda invocations, {} SQS operations, $0 idle cost — pay as you go)",
+        env.metrics().get("lambda.invocations"),
+        env.metrics().get("sqs.send_batch") + env.metrics().get("sqs.receive_batch"),
+    );
+}

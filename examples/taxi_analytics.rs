@@ -1,0 +1,78 @@
+//! Domain example: the full NYC-taxi exploratory-analysis session from
+//! the paper's §IV — all seven queries on the Flint engine, with their
+//! actual analytical answers (the part the paper's blog-post inspiration
+//! cared about).
+//!
+//! Run: `cargo run --release --example taxi_analytics`
+
+use flint::compute::queries::{QueryId, QueryResult};
+use flint::config::FlintConfig;
+use flint::data::generate_taxi_dataset;
+use flint::exec::{Engine, FlintEngine};
+use flint::services::SimEnv;
+
+fn main() {
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.data.object_bytes = 8 * 1024 * 1024;
+    cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+    let env = SimEnv::new(cfg);
+    println!("generating 500k synthetic taxi trips...");
+    let dataset = generate_taxi_dataset(&env, "trips", 500_000);
+    let engine = FlintEngine::new(env.clone());
+    engine.prewarm();
+    println!(
+        "PJRT artifacts: {}\n",
+        if engine.uses_pjrt() { "loaded (AOT kernels on the hot path)" } else { "absent (native fallback; run `make artifacts`)" }
+    );
+
+    for q in QueryId::ALL {
+        let report = engine.run_query(q, &dataset).expect("query");
+        println!("=== {} — {}", q, q.description());
+        println!("    {}", report.summary());
+        match (&report.result, q) {
+            (QueryResult::Count(n), _) => println!("    {n} trips total"),
+            (QueryResult::Buckets(rows), QueryId::Q4) => {
+                // Credit share trend: first vs last year observed.
+                let early: Vec<_> = rows.iter().filter(|(k, _, _)| *k < 12).collect();
+                let late: Vec<_> = rows.iter().filter(|(k, _, _)| *k >= 78).collect();
+                let share = |rs: &[&(i64, f64, f64)]| {
+                    let c: f64 = rs.iter().map(|(_, s, _)| s).sum();
+                    let n: f64 = rs.iter().map(|(_, _, n)| n).sum();
+                    100.0 * c / n.max(1.0)
+                };
+                println!(
+                    "    credit-card share: {:.1}% (2009) -> {:.1}% (2015-16) — the cash->credit flip",
+                    share(&early),
+                    share(&late)
+                );
+            }
+            (QueryResult::Buckets(rows), QueryId::Q5) => {
+                let green: f64 = rows.iter().filter(|(k, _, _)| k % 2 == 1).map(|(_, _, n)| n).sum();
+                let yellow: f64 = rows.iter().filter(|(k, _, _)| k % 2 == 0).map(|(_, _, n)| n).sum();
+                println!(
+                    "    {yellow:.0} yellow vs {green:.0} green trips ({:.1}% green; green cabs launched Aug 2013)",
+                    100.0 * green / (green + yellow)
+                );
+            }
+            (QueryResult::Buckets(rows), QueryId::Q6) => {
+                println!("    trips by precipitation:");
+                let names = ["dry", "trace", "light", "moderate", "heavy", "extreme"];
+                for (k, _, n) in rows {
+                    println!("      {:9} {n:8.0}", names[*k as usize]);
+                }
+            }
+            (QueryResult::Buckets(rows), _) => {
+                let busiest = rows.iter().max_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+                let total: f64 = rows.iter().map(|(_, _, n)| n).sum();
+                if let Some((hour, _, n)) = busiest {
+                    println!(
+                        "    {total:.0} matching drop-offs; busiest hour {hour:02}:00 ({n:.0} trips)"
+                    );
+                }
+            }
+        }
+        println!();
+    }
+    println!("cumulative simulated cost: ${:.4}", env.cost().total());
+}

@@ -1,0 +1,81 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest.
+
+Run once by ``make artifacts``. Python never executes at query time; the
+Rust runtime loads these files through PJRT.
+
+Interchange is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile.model import all_query_fns, example_args, make_combine_fn  # noqa: E402
+from compile.specs import DEFAULT_BATCH_ROWS, QUERY_SPECS  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True, so
+    the Rust side unwraps with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str, batch_rows: int) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "batch_rows": batch_rows,
+        "jax_version": jax.__version__,
+        "queries": {},
+    }
+    for spec, fn, args in all_query_fns(batch_rows):
+        lowered = fn.lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["queries"][spec.name] = {"buckets": spec.buckets}
+        print(f"  {spec.name}: {len(text)} chars -> {path}")
+
+    # Combine graphs (reduce stage), one per distinct bucket count.
+    combine = make_combine_fn()
+    for buckets in sorted({s.buckets for s in QUERY_SPECS}):
+        h = jax.ShapeDtypeStruct((buckets, 2), jnp.float32)
+        lowered = jax.jit(combine).lower(h, h)
+        name = f"combine_{buckets}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["queries"][name] = {"buckets": buckets}
+        print(f"  {name} -> {path}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--batch-rows", type=int, default=DEFAULT_BATCH_ROWS)
+    args = ap.parse_args()
+    manifest = lower_all(args.out, args.batch_rows)
+    print(f"wrote {len(manifest['queries'])} artifacts (batch_rows={args.batch_rows})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""L1 — the fused filter+histogram Pallas kernel.
+
+The hot spot of every Flint query is the same dense loop: test each trip
+row against the query's geo box and tip threshold, then scatter-add its
+value into a small histogram keyed by a precomputed bucket column. On
+GPU one would write this as a warp-per-chunk atomically-accumulating
+scatter; the TPU-idiomatic formulation (DESIGN.md §Hardware-Adaptation)
+is instead:
+
+* rows are tiled into ``(BLOCK_ROWS,)`` VMEM blocks via ``BlockSpec`` —
+  the HBM→VMEM schedule a CUDA kernel would express with threadblocks;
+* the scatter becomes a dense one-hot contraction (``eq @ val``), which
+  the VPU/MXU execute without atomics — histogram width K ≤ 180 keeps
+  the one-hot tile (BLOCK_ROWS × K) small;
+* the ``(K, 2)`` accumulator lives in the output block, revisited by
+  every grid step (grid-accumulate pattern: zeroed on step 0).
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO ops that run anywhere (and is what ships in the artifacts).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(lon_ref, lat_ref, tip_ref, key_ref, val_ref, out_ref, *, bbox, tip_min, buckets):
+    """One grid step: accumulate a row block into the shared output."""
+    # Zero the accumulator on the first block.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    lon = lon_ref[...]
+    lat = lat_ref[...]
+    tip = tip_ref[...]
+    key = key_ref[...]
+    val = val_ref[...]
+
+    lon_min, lon_max, lat_min, lat_max = bbox
+    mask = (
+        (lon >= lon_min)
+        & (lon <= lon_max)
+        & (lat >= lat_min)
+        & (lat <= lat_max)
+        & (tip >= tip_min)
+        & (key >= 0)
+        & (key < buckets)
+    )
+    # Dense one-hot contraction instead of scatter: rows × buckets tile in
+    # VMEM, reduced along rows. No atomics, fully vectorized.
+    onehot = (key[:, None] == jnp.arange(buckets, dtype=jnp.int32)[None, :]) & mask[:, None]
+    onehot_f = onehot.astype(jnp.float32)
+    sums = jnp.sum(onehot_f * val[:, None], axis=0)  # f32[K]
+    counts = jnp.sum(onehot_f, axis=0)  # f32[K]
+    out_ref[...] += jnp.stack([sums, counts], axis=1)
+
+
+def filter_hist_pallas(
+    lon, lat, tip, key, val, *, bbox, tip_min, buckets, block_rows=512, interpret=True
+):
+    """Pallas version of :func:`ref.filter_hist_ref` (same signature plus
+    tiling knobs). Rows must be a multiple of ``block_rows``; callers pad
+    (the Rust executor always supplies full batches)."""
+    rows = lon.shape[0]
+    if rows % block_rows != 0:
+        # Tests drive odd sizes; fall back to one block covering all rows.
+        block_rows = rows
+    grid = (rows // block_rows,)
+
+    row_spec = pl.BlockSpec((block_rows,), lambda i: (i,))
+    out_spec = pl.BlockSpec((buckets, 2), lambda i: (0, 0))  # revisited per step
+
+    kernel = functools.partial(_kernel, bbox=bbox, tip_min=tip_min, buckets=buckets)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_spec, row_spec, row_spec, row_spec, row_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((buckets, 2), jnp.float32),
+        interpret=interpret,
+    )(lon, lat, tip, key, val)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the fused filter+histogram kernel.
+
+This is the semantic ground truth both implementations are held to:
+* the Pallas kernel (``filter_hist.py``) is asserted against it in
+  ``python/tests/test_kernel.py`` (hypothesis sweeps), and
+* the Rust native kernel implements the same math
+  (``rust/src/compute/kernels.rs``), cross-checked end-to-end against the
+  Rust oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def filter_hist_ref(lon, lat, tip, key, val, *, bbox, tip_min, buckets):
+    """Masked histogram: rows passing the geo/tip filter scatter ``val``
+    (and a count of 1) into ``hist[key]``.
+
+    Args:
+      lon, lat, tip, val: f32[N]; key: i32[N].
+      bbox: (lon_min, lon_max, lat_min, lat_max) — inclusive bounds.
+      tip_min: minimum tip (inclusive); -inf disables the filter.
+      buckets: K, the histogram width.
+
+    Returns:
+      f32[K, 2]: per-bucket (sum of val, count). Rows with key outside
+      [0, K) never contribute. NaN coordinates never pass the box test
+      (this is how padding rows are masked).
+    """
+    lon_min, lon_max, lat_min, lat_max = bbox
+    mask = (
+        (lon >= lon_min)
+        & (lon <= lon_max)
+        & (lat >= lat_min)
+        & (lat <= lat_max)
+        & (tip >= tip_min)
+        & (key >= 0)
+        & (key < buckets)
+    )
+    # Out-of-range keys clamp to 0 but are masked, so they add nothing.
+    safe_key = jnp.clip(key, 0, buckets - 1)
+    sums = jnp.zeros((buckets,), jnp.float32).at[safe_key].add(
+        jnp.where(mask, val, 0.0)
+    )
+    counts = jnp.zeros((buckets,), jnp.float32).at[safe_key].add(
+        jnp.where(mask, 1.0, 0.0)
+    )
+    return jnp.stack([sums, counts], axis=1)

@@ -1,0 +1,76 @@
+"""L2 — per-query JAX compute graphs.
+
+Each Table I query lowers to one jitted function over a fixed-size
+columnar batch, calling the L1 Pallas kernel with the query's constants
+(geo box, tip threshold, bucket count) baked in. ``aot.py`` lowers these
+once to HLO text; the Rust executors run them via PJRT on every batch.
+
+The function signature is the artifact ABI shared with
+``rust/src/runtime/mod.rs``:
+
+    (lon f32[B], lat f32[B], tip f32[B], key i32[B], val f32[B])
+        -> (hist f32[K, 2],)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.filter_hist import filter_hist_pallas
+from compile.kernels.ref import filter_hist_ref
+from compile.specs import DEFAULT_BLOCK_ROWS, QUERY_SPECS, QuerySpec
+
+
+def make_query_fn(spec: QuerySpec, *, block_rows: int = DEFAULT_BLOCK_ROWS, use_pallas=True):
+    """Build the batch-processing function for one query."""
+
+    def fn(lon, lat, tip, key, val):
+        if use_pallas:
+            hist = filter_hist_pallas(
+                lon,
+                lat,
+                tip,
+                key,
+                val,
+                bbox=spec.bbox,
+                tip_min=spec.tip_min,
+                buckets=spec.buckets,
+                block_rows=block_rows,
+            )
+        else:
+            hist = filter_hist_ref(
+                lon, lat, tip, key, val, bbox=spec.bbox, tip_min=spec.tip_min, buckets=spec.buckets
+            )
+        # 1-tuple: the Rust side unwraps with to_tuple1 (return_tuple=True).
+        return (hist,)
+
+    fn.__name__ = f"flint_{spec.name}"
+    return fn
+
+
+def make_combine_fn():
+    """Reduce-stage partial-histogram combine: (a, b) -> (a + b,).
+
+    Kept as a separate tiny graph so the reduce stage is also PJRT-served
+    (DESIGN.md §3); shapes are per-query, so aot.py lowers one per spec.
+    """
+
+    def fn(a, b):
+        return (a + b,)
+
+    return fn
+
+
+def example_args(batch_rows: int):
+    """ShapeDtypeStructs matching the artifact ABI."""
+    f = jax.ShapeDtypeStruct((batch_rows,), jnp.float32)
+    i = jax.ShapeDtypeStruct((batch_rows,), jnp.int32)
+    return (f, f, f, i, f)
+
+
+def all_query_fns(batch_rows: int, *, use_pallas=True):
+    """(spec, jitted fn, example args) per query."""
+    out = []
+    for spec in QUERY_SPECS:
+        fn = make_query_fn(spec, use_pallas=use_pallas)
+        out.append((spec, jax.jit(fn), example_args(batch_rows)))
+    return out

@@ -1,0 +1,48 @@
+"""Query specifications — the Python mirror of `rust/src/compute/queries.rs`.
+
+The geo boxes, tip thresholds, bucket counts, and key sources here are
+baked as constants into the AOT HLO artifacts, so they MUST match the
+Rust definitions bit-for-bit. The end-to-end integration test (Flint
+with PJRT vs the Rust oracle) catches any drift.
+"""
+
+from dataclasses import dataclass
+
+# Landmark bounding boxes (rust/src/data/schema.rs).
+GOLDMAN = (-74.0156, -74.0138, 40.7139, 40.7155)  # lon_min, lon_max, lat_min, lat_max
+CITIGROUP = (-74.0124, -74.0106, 40.7189, 40.7205)
+EVERYWHERE = (float("-inf"), float("inf"), float("-inf"), float("inf"))
+
+NEG_INF = float("-inf")
+
+
+@dataclass(frozen=True)
+class QuerySpec:
+    """One fused filter+histogram kernel configuration."""
+
+    name: str  # artifact stem, e.g. "q1_hist"
+    bbox: tuple  # (lon_min, lon_max, lat_min, lat_max)
+    tip_min: float
+    buckets: int
+
+
+# Mirrors QueryId::spec() in rust/src/compute/queries.rs. The key/value
+# *columns* are prepared by the Rust executor (weather lookup, month×taxi
+# composition); the artifact only sees dense (lon, lat, tip, key, val).
+QUERY_SPECS = [
+    QuerySpec("q0_hist", EVERYWHERE, NEG_INF, 1),
+    QuerySpec("q1_hist", GOLDMAN, NEG_INF, 24),
+    QuerySpec("q2_hist", CITIGROUP, NEG_INF, 24),
+    QuerySpec("q3_hist", GOLDMAN, 10.0, 24),
+    QuerySpec("q4_hist", EVERYWHERE, NEG_INF, 90),
+    QuerySpec("q5_hist", EVERYWHERE, NEG_INF, 180),
+    QuerySpec("q6_hist", EVERYWHERE, NEG_INF, 6),
+]
+
+# Static row count per batch (must match flint.batch_rows in Rust config).
+DEFAULT_BATCH_ROWS = 8192
+
+# Pallas row-block size: 512 rows × 180 buckets × 4 B one-hot ≈ 360 KiB of
+# VMEM for the widest query — comfortably under a TPU core's ~16 MiB (see
+# DESIGN.md §Hardware-Adaptation).
+DEFAULT_BLOCK_ROWS = 512

@@ -1,0 +1,147 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, bucket counts, filter parameters, and data
+distributions; counts must match exactly (they're small integers in f32),
+sums to float tolerance.
+"""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.filter_hist import filter_hist_pallas
+from compile.kernels.ref import filter_hist_ref
+from compile.specs import CITIGROUP, GOLDMAN, NEG_INF, QUERY_SPECS
+
+
+def random_batch(rng, rows, buckets, *, nan_frac=0.0, near_box=None):
+    lon = rng.uniform(-74.05, -73.90, rows).astype(np.float32)
+    lat = rng.uniform(40.60, 40.90, rows).astype(np.float32)
+    if near_box is not None:
+        # Half the rows land inside the target box so the filter is exercised.
+        k = rows // 2
+        lon[:k] = rng.uniform(near_box[0], near_box[1], k).astype(np.float32)
+        lat[:k] = rng.uniform(near_box[2], near_box[3], k).astype(np.float32)
+    if nan_frac > 0:
+        m = rng.random(rows) < nan_frac
+        lon[m] = np.nan
+        lat[m] = np.nan
+    tip = rng.exponential(4.0, rows).astype(np.float32)
+    key = rng.integers(-2, buckets + 2, rows).astype(np.int32)
+    val = rng.uniform(0.0, 2.0, rows).astype(np.float32)
+    return lon, lat, tip, key, val
+
+
+def run_both(args, **kw):
+    got = np.asarray(filter_hist_pallas(*args, **kw))
+    want = np.asarray(filter_hist_ref(*args, **{k: v for k, v in kw.items() if k != "block_rows"}))
+    return got, want
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.sampled_from([64, 128, 512, 1024]),
+    buckets=st.sampled_from([1, 6, 24, 90, 180]),
+    seed=st.integers(0, 2**31 - 1),
+    tip_min=st.sampled_from([NEG_INF, 0.0, 5.0, 10.0]),
+)
+def test_pallas_matches_ref_random(rows, buckets, seed, tip_min):
+    rng = np.random.default_rng(seed)
+    args = random_batch(rng, rows, buckets)
+    got, want = run_both(
+        args, bbox=GOLDMAN, tip_min=tip_min, buckets=buckets, block_rows=64
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    box=st.sampled_from([GOLDMAN, CITIGROUP]),
+)
+def test_pallas_matches_ref_dense_hits(seed, box):
+    # Rows concentrated inside the filter box: exercises real accumulation.
+    rng = np.random.default_rng(seed)
+    args = random_batch(rng, 512, 24, near_box=box)
+    got, want = run_both(args, bbox=box, tip_min=NEG_INF, buckets=24, block_rows=128)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert got[:, 1].sum() > 0, "some rows must pass the filter"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_nan_padding_rows_never_count(seed):
+    rng = np.random.default_rng(seed)
+    lon, lat, tip, key, val = random_batch(rng, 256, 8, nan_frac=0.3)
+    got, want = run_both(
+        (lon, lat, tip, key, val),
+        bbox=(float("-inf"), float("inf"), float("-inf"), float("inf")),
+        tip_min=NEG_INF,
+        buckets=8,
+        block_rows=64,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    valid = (~np.isnan(lon)) & (key >= 0) & (key < 8)
+    assert got[:, 1].sum() == pytest.approx(valid.sum())
+
+
+def test_out_of_range_keys_dropped():
+    lon = np.zeros(64, np.float32)
+    lat = np.zeros(64, np.float32)
+    tip = np.zeros(64, np.float32)
+    val = np.ones(64, np.float32)
+    key = np.full(64, -1, np.int32)
+    key[:4] = 99  # above bucket range too
+    got = np.asarray(
+        filter_hist_pallas(
+            lon, lat, tip, key, val,
+            bbox=(-1.0, 1.0, -1.0, 1.0), tip_min=NEG_INF, buckets=4, block_rows=32,
+        )
+    )
+    assert got.sum() == 0.0
+
+
+def test_multi_block_accumulation_equals_single_block():
+    rng = np.random.default_rng(7)
+    args = random_batch(rng, 1024, 24, near_box=GOLDMAN)
+    multi = np.asarray(
+        filter_hist_pallas(*args, bbox=GOLDMAN, tip_min=NEG_INF, buckets=24, block_rows=128)
+    )
+    single = np.asarray(
+        filter_hist_pallas(*args, bbox=GOLDMAN, tip_min=NEG_INF, buckets=24, block_rows=1024)
+    )
+    np.testing.assert_allclose(multi, single, rtol=1e-5, atol=1e-5)
+
+
+def test_all_query_spec_constants_work():
+    rng = np.random.default_rng(11)
+    for spec in QUERY_SPECS:
+        args = random_batch(rng, 256, spec.buckets, near_box=spec.bbox if spec.bbox[0] > -75 else None)
+        got, want = run_both(
+            args, bbox=spec.bbox, tip_min=spec.tip_min, buckets=spec.buckets, block_rows=64
+        )
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5, err_msg=spec.name)
+
+
+def test_exact_counts_small_case():
+    # Hand-computed: 3 rows in box, keys 1,1,3; vals 2,3,4; one row outside.
+    lon = np.array([0.5, 0.5, 0.5, 9.0], np.float32)
+    lat = np.array([0.5, 0.5, 0.5, 0.5], np.float32)
+    tip = np.zeros(4, np.float32)
+    key = np.array([1, 1, 3, 1], np.int32)
+    val = np.array([2.0, 3.0, 4.0, 7.0], np.float32)
+    got = np.asarray(
+        filter_hist_pallas(
+            lon, lat, tip, key, val, bbox=(0.0, 1.0, 0.0, 1.0), tip_min=NEG_INF, buckets=4,
+            block_rows=4,
+        )
+    )
+    assert got[1, 0] == 5.0 and got[1, 1] == 2.0
+    assert got[3, 0] == 4.0 and got[3, 1] == 1.0
+    assert got[0].sum() == 0 and got[2].sum() == 0

@@ -1,0 +1,42 @@
+//! `cargo bench --bench cold_start` — experiment M2 (DESIGN.md §6): the
+//! §III-B claims that (a) Python Lambdas start fast enough to give each
+//! task its own invocation and (b) "the cost of using chained executors
+//! is relatively low".
+
+use flint::bench::micro::cold_warm_chain;
+use flint::config::FlintConfig;
+
+fn main() {
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.data.object_bytes = 8 * 1024 * 1024;
+    cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+
+    let trips = std::env::var("FLINT_BENCH_TRIPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400_000);
+    let (cold, warm, chained, unchained, links) = cold_warm_chain(&cfg, trips).expect("bench");
+
+    println!("## M2 — cold vs warm starts, chaining overhead\n");
+    println!("| condition | latency (s) |");
+    println!("|---|---|");
+    println!("| Q0, cold container pool | {cold:.2} |");
+    println!("| Q0, warm container pool | {warm:.2} |");
+    println!(
+        "| warm-up saving | {:.2}s ({:.1}%) |",
+        cold - warm,
+        (1.0 - warm / cold) * 100.0
+    );
+    println!("| Q1, duration-capped ({links} chain links) | {chained:.2} |");
+    println!("| Q1, uncapped (no chaining) | {unchained:.2} |");
+    println!(
+        "| chaining overhead | {:+.1}% |",
+        (chained / unchained - 1.0) * 100.0
+    );
+    println!(
+        "\nconfig: cold start {:.0} ms, warm start {:.0} ms (Python-runtime figures, §III-B)",
+        cfg.sim.lambda_cold_start_s * 1e3,
+        cfg.sim.lambda_warm_start_s * 1e3
+    );
+}

@@ -1,0 +1,145 @@
+//! `cargo bench --bench hotpath` — experiment P1 (DESIGN.md §6/§9): the
+//! L3 hot-path microbenchmarks driving the performance pass. Reports
+//! real wall-clock throughput of the executor inner loops: CSV parse →
+//! columnar batch, native kernel, PJRT artifact dispatch, shuffle record
+//! codec, and the makespan scheduler.
+
+use flint::compute::batch::ColumnBatch;
+use flint::compute::kernels::{prepare_keys, prepare_values, run_batch_native, HistAccum};
+use flint::compute::queries::QueryId;
+use flint::data::taxi::generate_csv_object;
+use flint::exec::shuffle::ShuffleRec;
+use flint::runtime::PjrtRuntime;
+use flint::simtime::makespan;
+use std::time::Instant;
+
+fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    println!("## P1 — L3 hot-path throughput (real wall clock)\n");
+    let rows: u64 = std::env::var("FLINT_BENCH_ROWS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000_000);
+    let csv = generate_csv_object(7, 0, rows);
+    let mb = csv.len() as f64 / 1e6;
+    println!("corpus: {rows} rows, {mb:.1} MB\n");
+    println!("| path | throughput | detail |");
+    println!("|---|---|---|");
+
+    // 1. Line splitting only (Q0's loop).
+    let (count, dt) = time(|| {
+        let mut n = 0u64;
+        for _ in flint::compute::csv::SplitLines::new(&csv, csv.len() as u64, true) {
+            n += 1;
+        }
+        n
+    });
+    assert_eq!(count, rows);
+    println!(
+        "| line split (Q0) | {:.0} MB/s | {:.1} Mrows/s |",
+        mb / dt,
+        rows as f64 / dt / 1e6
+    );
+
+    // 2. Full parse into columnar batches.
+    let spec = QueryId::Q1.spec();
+    let capacity = 8192;
+    let (parsed, dt) = time(|| {
+        let mut batch = ColumnBatch::with_capacity(capacity);
+        let mut total = 0u64;
+        let mut acc = HistAccum::new(spec.buckets);
+        for line in flint::compute::csv::SplitLines::new(&csv, csv.len() as u64, true) {
+            if batch.push_line(line) {
+                total += 1;
+            }
+            if batch.is_full() {
+                let keys = prepare_keys(&spec, &batch, None);
+                let values = prepare_values(&spec, &batch);
+                run_batch_native(&spec, &batch, &keys, &values, &mut acc);
+                batch.clear();
+            }
+        }
+        if !batch.is_empty() {
+            let keys = prepare_keys(&spec, &batch, None);
+            let values = prepare_values(&spec, &batch);
+            run_batch_native(&spec, &batch, &keys, &values, &mut acc);
+        }
+        (total, acc)
+    });
+    assert_eq!(parsed.0, rows);
+    println!(
+        "| parse + native Q1 kernel | {:.0} MB/s | {:.2} Mrows/s |",
+        mb / dt,
+        rows as f64 / dt / 1e6
+    );
+
+    // 3. PJRT artifact dispatch (when artifacts are built).
+    if PjrtRuntime::available("artifacts") {
+        let rt = PjrtRuntime::open("artifacts").expect("artifacts");
+        rt.warmup().expect("warmup");
+        let b = rt.batch_rows();
+        let mut batch = ColumnBatch::with_capacity(b);
+        for line in flint::compute::csv::SplitLines::new(&csv, csv.len() as u64, true) {
+            if batch.is_full() {
+                break;
+            }
+            batch.push_line(line);
+        }
+        batch.pad_to_capacity();
+        let keys = prepare_keys(&spec, &batch, None);
+        let values = prepare_values(&spec, &batch);
+        let iters = 200;
+        let (_, dt) = time(|| {
+            let mut acc = HistAccum::new(spec.buckets);
+            for _ in 0..iters {
+                rt.run_hist(&spec, &batch, &keys, &values, &mut acc).expect("pjrt");
+            }
+        });
+        let rps = (iters * b) as f64 / dt;
+        println!(
+            "| PJRT q1_hist dispatch | {:.2} Mrows/s | {:.0} µs/batch of {b} |",
+            rps / 1e6,
+            dt / iters as f64 * 1e6
+        );
+    } else {
+        println!("| PJRT q1_hist dispatch | (skipped) | run `make artifacts` first |");
+    }
+
+    // 4. Shuffle record codec.
+    let recs: Vec<ShuffleRec> = (0..100_000)
+        .map(|i| ShuffleRec::Kernel { key: i % 180, sum: i as f64, count: 1.0 })
+        .collect();
+    let (buf, enc_dt) = time(|| {
+        let mut buf = Vec::new();
+        for r in &recs {
+            r.encode_into(&mut buf);
+        }
+        buf
+    });
+    let (decoded, dec_dt) = time(|| ShuffleRec::decode_all(&buf).expect("decode"));
+    assert_eq!(decoded.len(), recs.len());
+    println!(
+        "| shuffle codec | enc {:.1} / dec {:.1} Mrec/s | {} bytes |",
+        recs.len() as f64 / enc_dt / 1e6,
+        recs.len() as f64 / dec_dt / 1e6,
+        buf.len()
+    );
+
+    // 5. Makespan scheduler at paper scale.
+    let durations: Vec<f64> = (0..3440).map(|i| 2.0 + (i % 7) as f64 * 0.1).collect();
+    let iters = 1000;
+    let (_, dt) = time(|| {
+        for _ in 0..iters {
+            std::hint::black_box(makespan(&durations, 80));
+        }
+    });
+    println!(
+        "| makespan (3440 tasks, 80 slots) | {:.0} µs/call | {iters} iters |",
+        dt / iters as f64 * 1e6
+    );
+}

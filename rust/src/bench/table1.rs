@@ -1,0 +1,191 @@
+//! Table I harness: measured-mode trials over the simulated stack.
+
+use crate::compute::queries::QueryId;
+use crate::config::FlintConfig;
+use crate::cost::report::Cell;
+use crate::data::{generate_taxi_dataset, Dataset};
+use crate::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine, QueryReport};
+use crate::services::SimEnv;
+use crate::util::stats::Summary;
+use anyhow::Result;
+
+/// Options for a Table I run.
+#[derive(Debug, Clone)]
+pub struct Table1Options {
+    pub trips: u64,
+    /// Flint trials (the paper: five, after warm-up).
+    pub trials_flint: usize,
+    /// Cluster trials (the paper: three, low variance).
+    pub trials_cluster: usize,
+    pub queries: Vec<QueryId>,
+    /// Also compute the analytic paper-scale estimate per cell.
+    pub paper_scale: bool,
+}
+
+impl Default for Table1Options {
+    fn default() -> Self {
+        Table1Options {
+            trips: 1_000_000,
+            trials_flint: 5,
+            trials_cluster: 3,
+            queries: QueryId::ALL.to_vec(),
+            paper_scale: true,
+        }
+    }
+}
+
+/// One query's row: cells for Flint, PySpark, Spark (paper column order)
+/// plus optional paper-scale estimates.
+pub struct Table1Row {
+    pub query: QueryId,
+    pub cells: Vec<Cell>,
+    /// `(latency_s, cost_usd)` per engine at 215 GB, when requested.
+    pub paper_estimate: Option<Vec<(f64, f64)>>,
+    /// Last Flint report (diagnostics for the detailed dump).
+    pub flint_report: QueryReport,
+}
+
+/// Run the Table I experiment. One environment/dataset serves all
+/// engines; cost is separated per trial via snapshots.
+pub fn run_table1(config: &FlintConfig, opts: &Table1Options) -> Result<(Dataset, Vec<Table1Row>)> {
+    let env = SimEnv::new(config.clone());
+    let dataset = generate_taxi_dataset(&env, "trips", opts.trips);
+
+    let flint = FlintEngine::new(env.clone());
+    let pyspark = ClusterEngine::new(env.clone(), ClusterMode::PySpark);
+    let spark = ClusterEngine::new(env.clone(), ClusterMode::Spark);
+    // The paper measures after warm-up.
+    flint.prewarm();
+
+    let mut rows = Vec::new();
+    for &q in &opts.queries {
+        let mut cells = Vec::new();
+        let mut flint_report = None;
+
+        // Flint trials.
+        let mut lat = Vec::new();
+        let mut cost = Vec::new();
+        let mut detail = None;
+        for _ in 0..opts.trials_flint {
+            let r = flint.run_query(q, &dataset)?;
+            lat.push(r.latency_s);
+            cost.push(r.cost_usd);
+            detail = Some(r.cost.clone());
+            flint_report = Some(r);
+        }
+        cells.push(Cell {
+            latency: Summary::of(&lat),
+            cost: Summary::of(&cost),
+            cost_detail: detail.clone().unwrap_or_default(),
+        });
+
+        // Cluster trials (PySpark then Spark — paper column order).
+        for engine in [&pyspark as &dyn Engine, &spark] {
+            let mut lat = Vec::new();
+            let mut cost = Vec::new();
+            let mut detail = None;
+            for _ in 0..opts.trials_cluster {
+                let r = engine.run_query(q, &dataset)?;
+                lat.push(r.latency_s);
+                cost.push(r.cost_usd);
+                detail = Some(r.cost.clone());
+            }
+            cells.push(Cell {
+                latency: Summary::of(&lat),
+                cost: Summary::of(&cost),
+                cost_detail: detail.unwrap_or_default(),
+            });
+        }
+
+        let flint_report = flint_report.expect("at least one flint trial");
+        let paper_estimate = opts.paper_scale.then(|| {
+            vec![
+                crate::bench::paper::estimate(q, &flint_report, config, &dataset, PaperEngine::Flint),
+                crate::bench::paper::estimate(q, &flint_report, config, &dataset, PaperEngine::PySpark),
+                crate::bench::paper::estimate(q, &flint_report, config, &dataset, PaperEngine::Spark),
+            ]
+        });
+        rows.push(Table1Row { query: q, cells, paper_estimate, flint_report });
+    }
+    Ok((dataset, rows))
+}
+
+pub use crate::bench::paper::PaperEngine;
+
+/// Render rows in the paper's layout (measured mode).
+pub fn render_measured(rows: &[Table1Row]) -> String {
+    let table: Vec<(String, Vec<Cell>)> = rows
+        .iter()
+        .map(|r| (r.query.name().trim_start_matches('Q').to_string(), r.cells.clone()))
+        .collect();
+    crate::cost::report::render_table1(
+        "Table I (measured mode: simulated stack, generated data)",
+        &["Flint", "PySpark", "Spark"],
+        &table,
+        true,
+    )
+}
+
+/// Render the paper-scale estimates next to the published numbers.
+pub fn render_paper_scale(rows: &[Table1Row]) -> String {
+    // Published Table I values for side-by-side comparison.
+    const PUBLISHED: [(f64, f64, f64, f64, f64, f64); 7] = [
+        (101.0, 211.0, 188.0, 0.20, 0.41, 0.37),
+        (190.0, 316.0, 189.0, 0.59, 0.61, 0.37),
+        (203.0, 314.0, 187.0, 0.68, 0.61, 0.36),
+        (165.0, 312.0, 188.0, 0.48, 0.61, 0.36),
+        (132.0, 225.0, 189.0, 0.33, 0.44, 0.37),
+        (159.0, 312.0, 189.0, 0.45, 0.60, 0.37),
+        (277.0, 337.0, 191.0, 0.56, 0.66, 0.37),
+    ];
+    let mut out = String::from(
+        "## Table I (paper scale: 215 GiB / 1.3 B trips, analytic extrapolation)\n\n\
+         |   | Flint (est/paper) | PySpark (est/paper) | Spark (est/paper) | \
+         Flint $ (est/paper) | PySpark $ | Spark $ |\n|---|---|---|---|---|---|---|\n",
+    );
+    for row in rows {
+        let Some(est) = &row.paper_estimate else { continue };
+        let qi = row.query.name()[1..].parse::<usize>().unwrap();
+        let p = PUBLISHED[qi];
+        out.push_str(&format!(
+            "| {} | {:.0} / {:.0} | {:.0} / {:.0} | {:.0} / {:.0} | {:.2} / {:.2} | {:.2} / {:.2} | {:.2} / {:.2} |\n",
+            qi,
+            est[0].0, p.0, est[1].0, p.1, est[2].0, p.2,
+            est[0].1, p.3, est[1].1, p.4, est[2].1, p.5,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_table1_run_produces_all_rows() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        let opts = Table1Options {
+            trips: 10_000,
+            trials_flint: 2,
+            trials_cluster: 1,
+            queries: vec![QueryId::Q0, QueryId::Q1],
+            paper_scale: true,
+        };
+        let (_, rows) = run_table1(&cfg, &opts).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.cells.len(), 3);
+            assert!(row.cells.iter().all(|c| c.latency.mean > 0.0));
+            assert!(row.cells.iter().all(|c| c.cost.mean > 0.0));
+            let est = row.paper_estimate.as_ref().unwrap();
+            assert_eq!(est.len(), 3);
+            assert!(est.iter().all(|(l, c)| *l > 0.0 && *c > 0.0));
+        }
+        let text = render_measured(&rows);
+        assert!(text.contains("| 0 |"), "{text}");
+        let paper = render_paper_scale(&rows);
+        assert!(paper.contains("| 1 |"), "{paper}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Minimal command-line parsing (clap is not in the offline vendor set).
+//!
+//! Grammar: `flint <command> [--key value | --key=value | --flag] ...`.
+//! Repeated `--set k=v` accumulate into config overrides.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse(raw: impl Iterator<Item = String>) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut raw = raw.peekable();
+        if let Some(first) = raw.peek() {
+            if !first.starts_with("--") {
+                args.command = raw.next();
+            }
+        }
+        while let Some(tok) = raw.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                return Err(format!("unexpected positional argument `{tok}`"));
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                args.options.entry(k.to_string()).or_default().push(v.to_string());
+            } else if raw.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                let v = raw.next().expect("peeked");
+                args.options.entry(key.to_string()).or_default().push(v);
+            } else {
+                // Bare flag.
+                args.options.entry(key.to_string()).or_default().push(String::new());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of an option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).and_then(|v| v.last()).map(String::as_str)
+    }
+
+    /// All values of a repeatable option.
+    pub fn all(&self, key: &str) -> &[String] {
+        self.options.get(key).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Presence of a bare flag (or any value).
+    pub fn flag(&self, key: &str) -> bool {
+        self.options.contains_key(key)
+    }
+
+    /// Typed option with default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value `{v}` for --{key}")),
+        }
+    }
+
+    /// Config overrides from repeated `--set k=v`.
+    pub fn overrides(&self) -> Result<Vec<(String, String)>, String> {
+        self.all("set")
+            .iter()
+            .map(|kv| {
+                kv.split_once('=')
+                    .map(|(k, v)| (k.to_string(), v.to_string()))
+                    .ok_or_else(|| format!("--set expects key=value, got `{kv}`"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_options() {
+        let a = parse("table1 --trips 50000 --paper --set sim.max_concurrency=40");
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.get("trips"), Some("50000"));
+        assert!(a.flag("paper"));
+        assert!(!a.flag("missing"));
+        assert_eq!(a.overrides().unwrap(), vec![("sim.max_concurrency".into(), "40".into())]);
+    }
+
+    #[test]
+    fn equals_form_and_repeats() {
+        let a = parse("run --query=Q1 --set a=1 --set b=2");
+        assert_eq!(a.get("query"), Some("Q1"));
+        assert_eq!(a.all("set").len(), 2);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run --trips 10");
+        assert_eq!(a.get_parsed("trips", 5u64).unwrap(), 10);
+        assert_eq!(a.get_parsed("other", 7u64).unwrap(), 7);
+        assert!(parse("run --trips xyz").get_parsed("trips", 0u64).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positionals() {
+        assert!(Args::parse(["run".into(), "oops".into()].into_iter()).is_err());
+    }
+
+    #[test]
+    fn bad_set_reports() {
+        assert!(parse("run --set novalue").overrides().is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! Columnar trip batches — the unit of work handed to the compute
+//! kernels (native or PJRT).
+//!
+//! The executor parses CSV lines directly into column vectors (no
+//! per-row struct allocation on the hot path) and flushes a full batch
+//! through the query kernel. Batch capacity matches the AOT artifacts'
+//! static row dimension (`flint.batch_rows`).
+
+use crate::data::chrono::{day_index, hour_of_day, month_index, parse_datetime};
+use crate::data::schema::{parse_f32, parse_u8};
+
+/// Column-oriented batch of the fields the evaluation queries touch.
+#[derive(Debug, Clone)]
+pub struct ColumnBatch {
+    pub capacity: usize,
+    pub len: usize,
+    /// Dropoff coordinates (Q1–Q3 filter on these).
+    pub lon: Vec<f32>,
+    pub lat: Vec<f32>,
+    /// Dropoff hour-of-day (Q1–Q3 key).
+    pub hour: Vec<i32>,
+    /// Months since 2009-01 (Q4/Q5 key).
+    pub month: Vec<i32>,
+    /// Days since 2009-01-01 (Q6 weather-join key).
+    pub day: Vec<i32>,
+    /// 1.0 if paid by credit card (Q4 numerator), else 0.0.
+    pub credit: Vec<f32>,
+    /// 0 = yellow, 1 = green (Q5).
+    pub taxi_type: Vec<i32>,
+    /// Tip in dollars (Q3 filter).
+    pub tip: Vec<f32>,
+}
+
+impl ColumnBatch {
+    pub fn with_capacity(capacity: usize) -> ColumnBatch {
+        assert!(capacity > 0);
+        ColumnBatch {
+            capacity,
+            len: 0,
+            lon: Vec::with_capacity(capacity),
+            lat: Vec::with_capacity(capacity),
+            hour: Vec::with_capacity(capacity),
+            month: Vec::with_capacity(capacity),
+            day: Vec::with_capacity(capacity),
+            credit: Vec::with_capacity(capacity),
+            taxi_type: Vec::with_capacity(capacity),
+            tip: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.len >= self.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+        self.lon.clear();
+        self.lat.clear();
+        self.hour.clear();
+        self.month.clear();
+        self.day.clear();
+        self.credit.clear();
+        self.taxi_type.clear();
+        self.tip.clear();
+    }
+
+    /// Parse one CSV line straight into the columns. Returns `false` (and
+    /// appends nothing) for malformed rows. Column order is defined in
+    /// [`crate::data::schema`].
+    ///
+    /// Hot path (§Perf): comma positions come from SIMD `memchr` rather
+    /// than a byte loop, and only the six needed fields (0 taxi_type,
+    /// 2 dropoff datetime, 7/8 dropoff lon/lat, 9 payment, 11 tip) are
+    /// decoded.
+    pub fn push_line(&mut self, line: &[u8]) -> bool {
+        debug_assert!(!self.is_full());
+        let mut taxi: Option<u8> = None;
+        let mut ts: Option<i64> = None;
+        let mut lon: Option<f32> = None;
+        let mut lat: Option<f32> = None;
+        let mut pay: Option<u8> = None;
+        let mut tip: Option<f32> = None;
+        let mut field_start = 0usize;
+        let mut field_idx = 0usize;
+        for comma in memchr::memchr_iter(b',', line).chain(std::iter::once(line.len())) {
+            let f = &line[field_start..comma];
+            match field_idx {
+                0 => taxi = parse_u8(f),
+                2 => ts = parse_datetime(f),
+                7 => lon = parse_f32(f),
+                8 => lat = parse_f32(f),
+                9 => pay = parse_u8(f),
+                11 => tip = parse_f32(f),
+                _ => {}
+            }
+            field_idx += 1;
+            if field_idx > crate::data::schema::NUM_COLUMNS {
+                return false; // too many columns
+            }
+            field_start = comma + 1;
+        }
+        if field_idx != crate::data::schema::NUM_COLUMNS {
+            return false;
+        }
+        match (taxi, ts, lon, lat, pay, tip) {
+            (Some(taxi), Some(ts), Some(lon), Some(lat), Some(pay), Some(tip)) => {
+                self.lon.push(lon);
+                self.lat.push(lat);
+                self.hour.push(hour_of_day(ts) as i32);
+                self.month.push(month_index(ts));
+                self.day.push(day_index(ts));
+                self.credit
+                    .push(if pay == crate::data::schema::PAYMENT_CREDIT { 1.0 } else { 0.0 });
+                self.taxi_type.push(taxi as i32);
+                self.tip.push(tip);
+                self.len += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Pad every column to `capacity` (PJRT artifacts have a static row
+    /// dimension). Padding rows carry an out-of-range key so kernels mask
+    /// them out; returns the pre-pad length.
+    pub fn pad_to_capacity(&mut self) -> usize {
+        let real = self.len;
+        while self.lon.len() < self.capacity {
+            self.lon.push(f32::NAN);
+            self.lat.push(f32::NAN);
+            self.hour.push(-1);
+            self.month.push(-1);
+            self.day.push(-1);
+            self.credit.push(0.0);
+            self.taxi_type.push(0);
+            self.tip.push(0.0);
+        }
+        real
+    }
+
+    /// Approximate heap bytes held (executor memory accounting).
+    pub fn mem_bytes(&self) -> usize {
+        self.capacity * (4 * 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chrono::epoch_from_datetime;
+    use crate::data::schema::{TripRecord, PAYMENT_CASH, PAYMENT_CREDIT};
+
+    fn record(hour: u32, credit: bool, tip: f32) -> String {
+        TripRecord {
+            taxi_type: 0,
+            pickup_ts: epoch_from_datetime(2014, 3, 10, hour, 0, 0) - 600,
+            dropoff_ts: epoch_from_datetime(2014, 3, 10, hour, 12, 0),
+            passenger_count: 1,
+            trip_distance: 2.0,
+            pickup_lon: -73.99,
+            pickup_lat: 40.74,
+            dropoff_lon: -74.0144,
+            dropoff_lat: 40.7147,
+            payment_type: if credit { PAYMENT_CREDIT } else { PAYMENT_CASH },
+            fare_amount: 10.0,
+            tip_amount: tip,
+            total_amount: 10.0 + tip,
+        }
+        .to_csv()
+    }
+
+    #[test]
+    fn push_line_extracts_fields() {
+        let mut b = ColumnBatch::with_capacity(8);
+        assert!(b.push_line(record(9, true, 12.5).as_bytes()));
+        assert_eq!(b.len, 1);
+        assert_eq!(b.hour[0], 9);
+        assert_eq!(b.credit[0], 1.0);
+        assert!((b.tip[0] - 12.5).abs() < 1e-4);
+        assert!((b.lon[0] + 74.0144).abs() < 1e-3);
+        assert_eq!(b.month[0], (2014 - 2009) * 12 + 2);
+        assert!(b.push_line(record(17, false, 0.0).as_bytes()));
+        assert_eq!(b.credit[1], 0.0);
+        assert_eq!(b.hour[1], 17);
+    }
+
+    #[test]
+    fn malformed_lines_rejected_without_partial_rows() {
+        let mut b = ColumnBatch::with_capacity(8);
+        assert!(!b.push_line(b"1,2,3"));
+        assert!(!b.push_line(b""));
+        assert!(!b.push_line(record(9, true, 1.0).replace(',', ";").as_bytes()));
+        // Bad float in the tip field.
+        let bad = record(9, true, 1.0).replace("1.00,11.00", "x.00,11.00");
+        let _ = b.push_line(bad.as_bytes());
+        assert_eq!(b.len, b.lon.len());
+        assert_eq!(b.len, b.tip.len());
+    }
+
+    #[test]
+    fn padding_marks_invalid_keys() {
+        let mut b = ColumnBatch::with_capacity(4);
+        b.push_line(record(9, true, 0.0).as_bytes());
+        let real = b.pad_to_capacity();
+        assert_eq!(real, 1);
+        assert_eq!(b.lon.len(), 4);
+        assert_eq!(b.hour[3], -1);
+        assert!(b.lon[3].is_nan());
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = ColumnBatch::with_capacity(2);
+        b.push_line(record(9, true, 0.0).as_bytes());
+        b.push_line(record(10, true, 0.0).as_bytes());
+        assert!(b.is_full());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.lon.len(), 0);
+    }
+}

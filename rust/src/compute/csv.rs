@@ -1,0 +1,207 @@
+//! Byte-range split handling for CSV objects — the Hadoop/Spark input
+//! split rule the Flint executors follow (§III-A: "this iterator will
+//! fetch a range of bytes from an S3 object").
+//!
+//! Ownership rule (Hadoop `LineRecordReader`): a non-first split discards
+//! everything up to and including the first newline in its range, then
+//! owns every line starting at an offset in `(start, end]`; the first
+//! split additionally owns the line at offset 0. A reader whose last
+//! owned line crosses the range end keeps reading past it (executors
+//! fetch `end + MAX_LINE_BYTES`, capped at the object size, for that
+//! reason). Together the splits of an object yield each line exactly
+//! once.
+
+use memchr::memchr;
+
+/// Upper bound on one CSV line; generated TLC rows are ~131 bytes, so 4
+/// KiB is a comfortable margin for the overfetch window.
+pub const MAX_LINE_BYTES: u64 = 4096;
+
+/// Cut `[0, object_size)` into ranges of at most `split_bytes`.
+pub fn split_ranges(object_size: u64, split_bytes: u64) -> Vec<(u64, u64)> {
+    assert!(split_bytes > 0);
+    if object_size == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity((object_size / split_bytes + 1) as usize);
+    let mut start = 0;
+    while start < object_size {
+        let end = (start + split_bytes).min(object_size);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+/// The byte range an executor must fetch to process split
+/// `[start, end)` of an object of `object_size` bytes (overfetch for the
+/// trailing line).
+pub fn fetch_range(start: u64, end: u64, object_size: u64) -> (u64, u64) {
+    (start, (end + MAX_LINE_BYTES).min(object_size))
+}
+
+/// Iterator over the lines owned by a split.
+///
+/// `window` is the fetched bytes covering `[start, fetch_end)`;
+/// `split_len = end - start` is the owned range length. Lines are yielded
+/// without their trailing `\n`. Empty lines are skipped.
+pub struct SplitLines<'a> {
+    window: &'a [u8],
+    /// Cursor into `window`.
+    pos: usize,
+    /// Offset (into `window`) at/after which no new line may *start*.
+    own_end: usize,
+    done: bool,
+}
+
+impl<'a> SplitLines<'a> {
+    /// `is_first` is true when the split starts at object offset 0 (no
+    /// leading partial line to skip).
+    pub fn new(window: &'a [u8], split_len: u64, is_first: bool) -> SplitLines<'a> {
+        let mut pos = 0;
+        if !is_first {
+            // Skip the partial line owned by the previous split.
+            pos = match memchr(b'\n', window) {
+                Some(nl) => nl + 1,
+                None => window.len(), // no newline at all: nothing owned
+            };
+        }
+        SplitLines { window, pos, own_end: split_len as usize, done: false }
+    }
+
+    /// Byte offset of the cursor within the *fetched window* — the resume
+    /// point executor chaining records.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Restart from a recorded offset (chained executor resume).
+    pub fn seek(&mut self, offset: usize) {
+        self.pos = offset.min(self.window.len());
+    }
+}
+
+impl<'a> Iterator for SplitLines<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        loop {
+            // Hadoop's LineRecordReader rule: a non-first split discards
+            // everything through its first newline and then owns every
+            // line *starting* at offset <= end (note `>` not `>=`: a line
+            // beginning exactly at the range end belongs to this split,
+            // because the next split will discard it).
+            if self.done || self.pos > self.own_end || self.pos >= self.window.len() {
+                return None;
+            }
+            let start = self.pos;
+            match memchr(b'\n', &self.window[start..]) {
+                Some(rel) => {
+                    self.pos = start + rel + 1;
+                    if rel == 0 {
+                        continue; // empty line
+                    }
+                    return Some(&self.window[start..start + rel]);
+                }
+                None => {
+                    // Last line of the object (no trailing newline).
+                    self.done = true;
+                    if start < self.window.len() {
+                        return Some(&self.window[start..]);
+                    }
+                    return None;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    fn collect_all_lines(data: &[u8], split_bytes: u64) -> Vec<Vec<u8>> {
+        let mut out = Vec::new();
+        for (start, end) in split_ranges(data.len() as u64, split_bytes) {
+            let (fs, fe) = fetch_range(start, end, data.len() as u64);
+            let window = &data[fs as usize..fe as usize];
+            for line in SplitLines::new(window, end - start, start == 0) {
+                out.push(line.to_vec());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn ranges_cover_exactly() {
+        assert_eq!(split_ranges(100, 30), vec![(0, 30), (30, 60), (60, 90), (90, 100)]);
+        assert_eq!(split_ranges(0, 10), vec![]);
+        assert_eq!(split_ranges(10, 100), vec![(0, 10)]);
+    }
+
+    #[test]
+    fn every_line_exactly_once_regardless_of_split() {
+        let data = b"alpha\nbravo\ncharlie\ndelta\necho\n";
+        let expect: Vec<Vec<u8>> =
+            data.split(|&b| b == b'\n').filter(|l| !l.is_empty()).map(|l| l.to_vec()).collect();
+        for split in 1..(data.len() as u64 + 5) {
+            let got = collect_all_lines(data, split);
+            assert_eq!(got, expect, "split_bytes={split}");
+        }
+    }
+
+    #[test]
+    fn missing_trailing_newline() {
+        let data = b"one\ntwo\nthree";
+        for split in 1..(data.len() as u64 + 2) {
+            let got = collect_all_lines(data, split);
+            assert_eq!(got.len(), 3, "split={split}");
+            assert_eq!(got[2], b"three");
+        }
+    }
+
+    #[test]
+    fn prop_splits_partition_lines() {
+        forall("split-lines-partition", 150, |g| {
+            // Random small "CSV": lines of random lengths.
+            let nlines = g.usize(30) + 1;
+            let mut data = Vec::new();
+            let mut expect = Vec::new();
+            for i in 0..nlines {
+                let len = g.usize(20) + 1;
+                let line: Vec<u8> = (0..len).map(|j| b'a' + ((i + j) % 26) as u8).collect();
+                expect.push(line.clone());
+                data.extend_from_slice(&line);
+                data.push(b'\n');
+            }
+            if g.bool() {
+                data.pop(); // sometimes strip the trailing newline
+            }
+            let split = g.u64(40) + 1;
+            let got = collect_all_lines(&data, split);
+            if got != expect {
+                return Err(format!(
+                    "split={split} got {} lines, want {}",
+                    got.len(),
+                    expect.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seek_resumes_iteration() {
+        let data = b"aa\nbb\ncc\ndd\n";
+        let mut it = SplitLines::new(data, data.len() as u64, true);
+        assert_eq!(it.next().unwrap(), b"aa");
+        let resume = it.offset();
+        assert_eq!(it.next().unwrap(), b"bb");
+        // A fresh iterator seeked to `resume` sees the same remainder.
+        let mut it2 = SplitLines::new(data, data.len() as u64, true);
+        it2.seek(resume);
+        let rest: Vec<&[u8]> = it2.collect();
+        assert_eq!(rest, vec![b"bb" as &[u8], b"cc", b"dd"]);
+    }
+}

@@ -1,0 +1,311 @@
+//! Query kernels: the native Rust implementation of the fused
+//! *filter → key → masked histogram* loop, plus the key/value
+//! preparation shared with the PJRT path.
+//!
+//! Two execution paths produce identical results:
+//! * **native** ([`run_batch_native`]) — scalar Rust, used by the cluster
+//!   baselines and as a fallback when artifacts are absent;
+//! * **PJRT** ([`crate::runtime`]) — executes the AOT-lowered L2/L1
+//!   artifact on the same prepared columns.
+//!
+//! The key precomputation (weather lookup, month×taxi composition) is
+//! done here for both paths so the AOT kernel stays a pure dense
+//! filter+histogram — the TPU-idiomatic formulation (DESIGN.md
+//! §Hardware-Adaptation).
+
+use crate::compute::batch::ColumnBatch;
+use crate::compute::queries::{KernelSpec, KeySource, QueryResult, ValueSource};
+use crate::data::weather::WeatherTable;
+
+/// Histogram accumulator: per-bucket value sum and row count, plus the
+/// total rows seen (Q0 and diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistAccum {
+    pub sums: Vec<f64>,
+    pub counts: Vec<f64>,
+    pub rows_seen: u64,
+}
+
+impl HistAccum {
+    pub fn new(buckets: usize) -> HistAccum {
+        HistAccum { sums: vec![0.0; buckets], counts: vec![0.0; buckets], rows_seen: 0 }
+    }
+
+    /// Merge another accumulator (reduce stage / combine artifact).
+    pub fn merge(&mut self, other: &HistAccum) {
+        assert_eq!(self.sums.len(), other.sums.len());
+        for i in 0..self.sums.len() {
+            self.sums[i] += other.sums[i];
+            self.counts[i] += other.counts[i];
+        }
+        self.rows_seen += other.rows_seen;
+    }
+
+    /// Non-empty buckets as sorted `(key, sum, count)` rows.
+    pub fn to_rows(&self) -> Vec<(i64, f64, f64)> {
+        (0..self.sums.len())
+            .filter(|&i| self.counts[i] > 0.0)
+            .map(|i| (i as i64, self.sums[i], self.counts[i]))
+            .collect()
+    }
+
+    pub fn into_result(self, spec: &KernelSpec) -> QueryResult {
+        if spec.key == KeySource::None {
+            QueryResult::Count(self.rows_seen)
+        } else {
+            QueryResult::Buckets(self.to_rows())
+        }
+    }
+}
+
+/// Compute the bucket key column for a batch under `spec`. Returns -1 for
+/// rows with no valid key (padding, out-of-range months). The weather
+/// table must be provided iff `spec.needs_weather()`.
+pub fn prepare_keys(spec: &KernelSpec, batch: &ColumnBatch, weather: Option<&WeatherTable>) -> Vec<i32> {
+    let n = batch.lon.len();
+    match spec.key {
+        KeySource::None => vec![0; n],
+        KeySource::Hour => batch.hour.clone(),
+        KeySource::Month => batch
+            .month
+            .iter()
+            .map(|&m| if (0..spec.buckets as i32).contains(&m) { m } else { -1 })
+            .collect(),
+        KeySource::MonthTaxiType => batch
+            .month
+            .iter()
+            .zip(&batch.taxi_type)
+            .map(|(&m, &t)| {
+                let k = m * 2 + t;
+                if m >= 0 && (0..spec.buckets as i32).contains(&k) {
+                    k
+                } else {
+                    -1
+                }
+            })
+            .collect(),
+        KeySource::PrecipBucket => {
+            let w = weather.expect("Q6 requires the weather table");
+            batch
+                .day
+                .iter()
+                .map(|&d| if d >= 0 { w.bucket(d) } else { -1 })
+                .collect()
+        }
+    }
+}
+
+/// Compute the value column (what's summed per bucket).
+pub fn prepare_values(spec: &KernelSpec, batch: &ColumnBatch) -> Vec<f32> {
+    match spec.value {
+        ValueSource::One => vec![1.0; batch.lon.len()],
+        ValueSource::CreditFlag => batch.credit.clone(),
+    }
+}
+
+/// Native fused kernel: filter rows by `spec`'s geo box and tip
+/// threshold, scatter-add `values` into `accum` by `keys`. Mirrors the
+/// Pallas kernel's semantics exactly (python/compile/kernels/ref.py is
+/// the shared oracle).
+pub fn run_batch_native(
+    spec: &KernelSpec,
+    batch: &ColumnBatch,
+    keys: &[i32],
+    values: &[f32],
+    accum: &mut HistAccum,
+) {
+    let n = batch.len; // only real rows; padding has no effect natively
+    accum.rows_seen += n as u64;
+    let b = spec.bbox;
+    for i in 0..n {
+        let lon = batch.lon[i];
+        let lat = batch.lat[i];
+        if lon < b.lon_min || lon > b.lon_max || lat < b.lat_min || lat > b.lat_max {
+            continue;
+        }
+        if batch.tip[i] < spec.tip_min {
+            continue;
+        }
+        let k = keys[i];
+        if k < 0 || k as usize >= accum.sums.len() {
+            continue;
+        }
+        accum.sums[k as usize] += values[i] as f64;
+        accum.counts[k as usize] += 1.0;
+    }
+}
+
+/// Convenience wrapper: prepare keys/values and run the native kernel.
+pub fn process_batch_native(
+    spec: &KernelSpec,
+    batch: &ColumnBatch,
+    weather: Option<&WeatherTable>,
+    accum: &mut HistAccum,
+) {
+    let keys = prepare_keys(spec, batch, weather);
+    let values = prepare_values(spec, batch);
+    run_batch_native(spec, batch, &keys, &values, accum);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::queries::QueryId;
+    use crate::data::chrono::epoch_from_datetime;
+    use crate::data::schema::{TripRecord, PAYMENT_CASH, PAYMENT_CREDIT};
+    use crate::data::weather::WeatherTable;
+
+    fn push(batch: &mut ColumnBatch, lon: f32, lat: f32, hour: u32, credit: bool, tip: f32) {
+        let line = TripRecord {
+            taxi_type: 0,
+            pickup_ts: epoch_from_datetime(2014, 3, 10, hour, 0, 0),
+            dropoff_ts: epoch_from_datetime(2014, 3, 10, hour, 12, 0),
+            passenger_count: 1,
+            trip_distance: 2.0,
+            pickup_lon: -73.99,
+            pickup_lat: 40.74,
+            dropoff_lon: lon,
+            dropoff_lat: lat,
+            payment_type: if credit { PAYMENT_CREDIT } else { PAYMENT_CASH },
+            fare_amount: 10.0,
+            tip_amount: tip,
+            total_amount: 10.0 + tip,
+        }
+        .to_csv();
+        assert!(batch.push_line(line.as_bytes()));
+    }
+
+    #[test]
+    fn q1_counts_only_goldman_rows() {
+        let spec = QueryId::Q1.spec();
+        let mut batch = ColumnBatch::with_capacity(16);
+        push(&mut batch, -74.0144, 40.7147, 8, true, 2.0); // Goldman, 8am
+        push(&mut batch, -74.0144, 40.7147, 8, false, 0.0); // Goldman, 8am
+        push(&mut batch, -73.9800, 40.7500, 8, true, 2.0); // elsewhere
+        push(&mut batch, -74.0144, 40.7147, 18, true, 2.0); // Goldman, 6pm
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, None, &mut acc);
+        assert_eq!(acc.rows_seen, 4);
+        assert_eq!(acc.counts[8], 2.0);
+        assert_eq!(acc.counts[18], 1.0);
+        assert_eq!(acc.counts.iter().sum::<f64>(), 3.0);
+    }
+
+    #[test]
+    fn q3_applies_tip_threshold() {
+        let spec = QueryId::Q3.spec();
+        let mut batch = ColumnBatch::with_capacity(16);
+        push(&mut batch, -74.0144, 40.7147, 9, true, 15.0); // counted
+        push(&mut batch, -74.0144, 40.7147, 9, true, 5.0); // tip too small
+        push(&mut batch, -73.9800, 40.7500, 9, true, 20.0); // wrong place
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, None, &mut acc);
+        assert_eq!(acc.counts[9], 1.0);
+        assert_eq!(acc.counts.iter().sum::<f64>(), 1.0);
+    }
+
+    #[test]
+    fn q4_sums_credit_flags_and_counts() {
+        let spec = QueryId::Q4.spec();
+        let mut batch = ColumnBatch::with_capacity(16);
+        push(&mut batch, -73.98, 40.75, 9, true, 2.0);
+        push(&mut batch, -73.98, 40.75, 9, false, 0.0);
+        push(&mut batch, -73.98, 40.75, 9, false, 0.0);
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, None, &mut acc);
+        let month = ((2014 - 2009) * 12 + 2) as usize;
+        assert_eq!(acc.sums[month], 1.0, "one credit trip");
+        assert_eq!(acc.counts[month], 3.0, "three trips");
+    }
+
+    #[test]
+    fn q6_uses_weather_lookup() {
+        let spec = QueryId::Q6.spec();
+        let weather = WeatherTable::generate(1234);
+        let mut batch = ColumnBatch::with_capacity(16);
+        push(&mut batch, -73.98, 40.75, 9, true, 2.0);
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, Some(&weather), &mut acc);
+        let day = batch.day[0];
+        let expect_bucket = weather.bucket(day) as usize;
+        assert_eq!(acc.counts[expect_bucket], 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "Q6 requires the weather table")]
+    fn q6_without_weather_panics() {
+        let spec = QueryId::Q6.spec();
+        let batch = ColumnBatch::with_capacity(4);
+        prepare_keys(&spec, &batch, None);
+    }
+
+    #[test]
+    fn padding_rows_are_masked_out() {
+        let spec = QueryId::Q1.spec();
+        let mut batch = ColumnBatch::with_capacity(8);
+        push(&mut batch, -74.0144, 40.7147, 8, true, 2.0);
+        batch.pad_to_capacity();
+        let keys = prepare_keys(&spec, &batch, None);
+        let values = prepare_values(&spec, &batch);
+        let mut acc = HistAccum::new(spec.buckets);
+        run_batch_native(&spec, &batch, &keys, &values, &mut acc);
+        assert_eq!(acc.counts[8], 1.0);
+        assert_eq!(acc.counts.iter().sum::<f64>(), 1.0, "padding contributed nothing");
+    }
+
+    #[test]
+    fn merge_accumulators() {
+        let mut a = HistAccum::new(4);
+        a.sums[1] = 2.0;
+        a.counts[1] = 2.0;
+        a.rows_seen = 10;
+        let mut b = HistAccum::new(4);
+        b.sums[1] = 3.0;
+        b.counts[1] = 3.0;
+        b.counts[2] = 1.0;
+        b.rows_seen = 5;
+        a.merge(&b);
+        assert_eq!(a.sums[1], 5.0);
+        assert_eq!(a.counts[2], 1.0);
+        assert_eq!(a.rows_seen, 15);
+        assert_eq!(a.to_rows(), vec![(1, 5.0, 5.0), (2, 0.0, 1.0)]);
+    }
+
+    #[test]
+    fn q0_result_is_count() {
+        let spec = QueryId::Q0.spec();
+        let mut batch = ColumnBatch::with_capacity(8);
+        push(&mut batch, -73.98, 40.75, 9, true, 2.0);
+        push(&mut batch, -73.98, 40.75, 10, true, 2.0);
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, None, &mut acc);
+        assert_eq!(acc.into_result(&spec), QueryResult::Count(2));
+    }
+
+    #[test]
+    fn q5_composes_month_and_taxi_type() {
+        let spec = QueryId::Q5.spec();
+        let mut batch = ColumnBatch::with_capacity(8);
+        // A green cab (taxi_type=1) in March 2014.
+        let line = TripRecord {
+            taxi_type: 1,
+            pickup_ts: epoch_from_datetime(2014, 3, 10, 9, 0, 0),
+            dropoff_ts: epoch_from_datetime(2014, 3, 10, 9, 12, 0),
+            passenger_count: 1,
+            trip_distance: 2.0,
+            pickup_lon: -73.99,
+            pickup_lat: 40.74,
+            dropoff_lon: -73.95,
+            dropoff_lat: 40.78,
+            payment_type: PAYMENT_CREDIT,
+            fare_amount: 10.0,
+            tip_amount: 1.0,
+            total_amount: 11.0,
+        }
+        .to_csv();
+        assert!(batch.push_line(line.as_bytes()));
+        let keys = prepare_keys(&spec, &batch, None);
+        let month = (2014 - 2009) * 12 + 2;
+        assert_eq!(keys[0], month * 2 + 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! The compute layer: CSV split handling, columnar batches, the paper's
+//! seven evaluation queries, and both execution paths for their inner
+//! loop — the native Rust kernels and the PJRT-loaded AOT artifacts
+//! (L1/L2, built by `make artifacts`).
+
+pub mod batch;
+pub mod csv;
+pub mod kernels;
+pub mod oracle;
+pub mod queries;
+pub mod value;

@@ -1,0 +1,328 @@
+//! The paper's evaluation queries Q0–Q6 (§IV), expressed as kernel
+//! specifications over the columnar batch.
+//!
+//! Every query reduces to the same fused shape — *filter → bucket-key →
+//! masked histogram* — which is exactly what the L1 Pallas kernel
+//! implements (`python/compile/kernels/filter_hist.py`). A query is a
+//! [`KernelSpec`]: which geo box and tip threshold filter rows, how the
+//! bucket key is derived, what value is summed, and how many reduce
+//! partitions the shuffle uses (Q1's `reduceByKey(add, 30)`).
+
+use crate::data::schema::{GeoBox, CITIGROUP, GOLDMAN};
+use crate::data::weather::PRECIP_BUCKETS;
+
+/// The seven Table I queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QueryId {
+    /// Line count — raw S3 read throughput.
+    Q0,
+    /// Goldman Sachs drop-offs by hour.
+    Q1,
+    /// Citigroup drop-offs by hour.
+    Q2,
+    /// Goldman drop-offs with tips > $10, by hour.
+    Q3,
+    /// Credit-card payment share by month.
+    Q4,
+    /// Yellow vs green trips by month.
+    Q5,
+    /// Trips by precipitation bucket.
+    Q6,
+}
+
+impl QueryId {
+    pub const ALL: [QueryId; 7] = [
+        QueryId::Q0,
+        QueryId::Q1,
+        QueryId::Q2,
+        QueryId::Q3,
+        QueryId::Q4,
+        QueryId::Q5,
+        QueryId::Q6,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueryId::Q0 => "Q0",
+            QueryId::Q1 => "Q1",
+            QueryId::Q2 => "Q2",
+            QueryId::Q3 => "Q3",
+            QueryId::Q4 => "Q4",
+            QueryId::Q5 => "Q5",
+            QueryId::Q6 => "Q6",
+        }
+    }
+
+    pub fn description(&self) -> &'static str {
+        match self {
+            QueryId::Q0 => "line count (raw S3 throughput)",
+            QueryId::Q1 => "Goldman Sachs drop-offs by hour",
+            QueryId::Q2 => "Citigroup drop-offs by hour",
+            QueryId::Q3 => "Goldman drop-offs with tip > $10, by hour",
+            QueryId::Q4 => "credit vs cash share by month",
+            QueryId::Q5 => "yellow vs green trips by month",
+            QueryId::Q6 => "trips by precipitation bucket",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QueryId> {
+        match s.to_ascii_uppercase().as_str() {
+            "Q0" | "0" => Some(QueryId::Q0),
+            "Q1" | "1" => Some(QueryId::Q1),
+            "Q2" | "2" => Some(QueryId::Q2),
+            "Q3" | "3" => Some(QueryId::Q3),
+            "Q4" | "4" => Some(QueryId::Q4),
+            "Q5" | "5" => Some(QueryId::Q5),
+            "Q6" | "6" => Some(QueryId::Q6),
+            _ => None,
+        }
+    }
+
+    /// The kernel spec implementing this query.
+    pub fn spec(&self) -> KernelSpec {
+        match self {
+            QueryId::Q0 => KernelSpec {
+                query: *self,
+                bbox: GeoBox::EVERYWHERE,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::None,
+                value: ValueSource::One,
+                buckets: 1,
+                reduce_partitions: 0, // map-only: counts merge at the driver
+            },
+            QueryId::Q1 => KernelSpec {
+                query: *self,
+                bbox: GOLDMAN,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::Hour,
+                value: ValueSource::One,
+                buckets: 24,
+                reduce_partitions: 30, // the paper's reduceByKey(add, 30)
+            },
+            QueryId::Q2 => KernelSpec {
+                query: *self,
+                bbox: CITIGROUP,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::Hour,
+                value: ValueSource::One,
+                buckets: 24,
+                reduce_partitions: 30,
+            },
+            QueryId::Q3 => KernelSpec {
+                query: *self,
+                bbox: GOLDMAN,
+                tip_min: 10.0,
+                key: KeySource::Hour,
+                value: ValueSource::One,
+                buckets: 24,
+                reduce_partitions: 30,
+            },
+            QueryId::Q4 => KernelSpec {
+                query: *self,
+                bbox: GeoBox::EVERYWHERE,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::Month,
+                value: ValueSource::CreditFlag,
+                buckets: 90, // Jan 2009 .. Jun 2016
+                reduce_partitions: 30,
+            },
+            QueryId::Q5 => KernelSpec {
+                query: *self,
+                bbox: GeoBox::EVERYWHERE,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::MonthTaxiType,
+                value: ValueSource::One,
+                buckets: 180, // month × {yellow, green}
+                reduce_partitions: 30,
+            },
+            QueryId::Q6 => KernelSpec {
+                query: *self,
+                bbox: GeoBox::EVERYWHERE,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::PrecipBucket,
+                value: ValueSource::One,
+                buckets: PRECIP_BUCKETS,
+                reduce_partitions: PRECIP_BUCKETS,
+            },
+        }
+    }
+
+    /// Whether the physical plan has a shuffle stage.
+    pub fn has_shuffle(&self) -> bool {
+        self.spec().reduce_partitions > 0
+    }
+
+    /// Relative number of intermediate groups — the paper observes Flint
+    /// latency tracks this (Q0 < Q1 ≈ Q3 < Q4 < Q5 < Q6-ish ordering by
+    /// shuffle volume per task).
+    pub fn intermediate_groups(&self) -> usize {
+        self.spec().buckets * usize::from(self.has_shuffle())
+    }
+}
+
+impl std::fmt::Display for QueryId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// How the bucket key is derived for a row.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeySource {
+    /// No key (count-only, Q0).
+    None,
+    /// Dropoff hour of day, 0..24.
+    Hour,
+    /// Months since 2009-01, 0..90.
+    Month,
+    /// `month * 2 + taxi_type`, 0..180.
+    MonthTaxiType,
+    /// Precipitation bucket of the dropoff day (weather-table lookup).
+    PrecipBucket,
+}
+
+/// What gets summed per bucket (a count is always kept alongside).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueSource {
+    /// Sum of 1s (plain count).
+    One,
+    /// Sum of the credit-payment indicator (Q4's numerator).
+    CreditFlag,
+}
+
+/// The fused filter+histogram kernel parameters for one query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelSpec {
+    pub query: QueryId,
+    pub bbox: GeoBox,
+    pub tip_min: f32,
+    pub key: KeySource,
+    pub value: ValueSource,
+    /// Number of histogram buckets (static in the AOT artifact).
+    pub buckets: usize,
+    /// Reduce-side partition count (0 = map-only).
+    pub reduce_partitions: usize,
+}
+
+impl KernelSpec {
+    /// Artifact file stem for this query (`artifacts/<stem>.hlo.txt`).
+    pub fn artifact_stem(&self) -> String {
+        format!("{}_hist", self.query.name().to_ascii_lowercase())
+    }
+
+    /// Whether the spec needs the weather side table.
+    pub fn needs_weather(&self) -> bool {
+        self.key == KeySource::PrecipBucket
+    }
+}
+
+/// A query's final answer, in a directly comparable form.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryResult {
+    /// Q0: total line count.
+    Count(u64),
+    /// Everything else: sorted `(bucket_key, value_sum, row_count)` rows,
+    /// one per non-empty bucket.
+    Buckets(Vec<(i64, f64, f64)>),
+}
+
+impl QueryResult {
+    /// Human-readable rendering for examples/CLI.
+    pub fn render(&self, query: QueryId) -> String {
+        match self {
+            QueryResult::Count(n) => format!("{query}: {n} lines"),
+            QueryResult::Buckets(rows) => {
+                let mut out = format!("{query}: {} groups\n", rows.len());
+                for (k, sum, count) in rows {
+                    match query {
+                        QueryId::Q4 => {
+                            let share = if *count > 0.0 { sum / count } else { 0.0 };
+                            out.push_str(&format!(
+                                "  month {k:3}: {:.1}% credit of {count:.0} trips\n",
+                                share * 100.0
+                            ));
+                        }
+                        _ => out.push_str(&format!("  key {k:4}: {count:.0}\n")),
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Approximate equality (floating sums may differ in low bits across
+    /// engines; counts must match exactly).
+    pub fn approx_eq(&self, other: &QueryResult) -> bool {
+        match (self, other) {
+            (QueryResult::Count(a), QueryResult::Count(b)) => a == b,
+            (QueryResult::Buckets(a), QueryResult::Buckets(b)) => {
+                a.len() == b.len()
+                    && a.iter().zip(b).all(|((ka, sa, ca), (kb, sb, cb))| {
+                        ka == kb
+                            && (sa - sb).abs() <= 1e-6 * (1.0 + sa.abs())
+                            && (ca - cb).abs() <= 1e-6 * (1.0 + ca.abs())
+                    })
+            }
+            _ => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_queries_have_distinct_specs() {
+        for q in QueryId::ALL {
+            let s = q.spec();
+            assert_eq!(s.query, q);
+            assert!(s.buckets >= 1);
+        }
+        assert!(!QueryId::Q0.has_shuffle());
+        assert!(QueryId::Q1.has_shuffle());
+        assert_eq!(QueryId::Q1.spec().reduce_partitions, 30);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(QueryId::parse("q3"), Some(QueryId::Q3));
+        assert_eq!(QueryId::parse("5"), Some(QueryId::Q5));
+        assert_eq!(QueryId::parse("Q9"), None);
+    }
+
+    #[test]
+    fn intermediate_group_ordering_matches_paper_narrative() {
+        // Q0 has none; Q6 (6 buckets) is small-group but join-heavy;
+        // Q5 has the most groups.
+        assert_eq!(QueryId::Q0.intermediate_groups(), 0);
+        assert!(QueryId::Q5.intermediate_groups() > QueryId::Q4.intermediate_groups());
+        assert!(QueryId::Q4.intermediate_groups() > QueryId::Q1.intermediate_groups());
+    }
+
+    #[test]
+    fn q3_filters_tips() {
+        let s = QueryId::Q3.spec();
+        assert_eq!(s.tip_min, 10.0);
+        assert_eq!(s.bbox, crate::data::schema::GOLDMAN);
+    }
+
+    #[test]
+    fn result_approx_eq() {
+        let a = QueryResult::Buckets(vec![(1, 10.0, 10.0), (2, 5.0, 5.0)]);
+        let b = QueryResult::Buckets(vec![(1, 10.0 + 1e-9, 10.0), (2, 5.0, 5.0)]);
+        assert!(a.approx_eq(&b));
+        let c = QueryResult::Buckets(vec![(1, 11.0, 10.0), (2, 5.0, 5.0)]);
+        assert!(!a.approx_eq(&c));
+        assert!(!a.approx_eq(&QueryResult::Count(3)));
+        assert!(QueryResult::Count(5).approx_eq(&QueryResult::Count(5)));
+    }
+
+    #[test]
+    fn artifact_stems_unique() {
+        let mut stems: Vec<String> = QueryId::ALL.iter().map(|q| q.spec().artifact_stem()).collect();
+        stems.sort();
+        stems.dedup();
+        assert_eq!(stems.len(), 7);
+    }
+}

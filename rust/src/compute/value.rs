@@ -1,0 +1,324 @@
+//! Dynamic values for the generic RDD path — the PySpark-like API where
+//! user code is arbitrary closures over records (`examples/quickstart.rs`
+//! drives this path). The benchmarked queries use the typed kernel path
+//! instead; this exists because Flint is a *general* execution engine,
+//! not a seven-query appliance.
+//!
+//! Values serialize to a compact binary format for SQS shuffle transport
+//! (tag byte + payload), mirroring how Flint pickles Python objects into
+//! SQS message bodies.
+
+use crate::util::fnv1a64;
+use std::cmp::Ordering;
+
+/// A dynamically-typed record value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    /// A key-value pair (what shuffles operate on).
+    Pair(Box<Value>, Box<Value>),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn pair(k: Value, v: Value) -> Value {
+        Value::Pair(Box::new(k), Box::new(v))
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+
+    /// Key of a pair (panics otherwise — shuffle stages require pairs,
+    /// same as Spark's `reduceByKey` on non-pair RDDs failing at runtime).
+    pub fn key(&self) -> &Value {
+        match self {
+            Value::Pair(k, _) => k,
+            other => panic!("expected a key-value pair, got {other:?}"),
+        }
+    }
+
+    pub fn val(&self) -> &Value {
+        match self {
+            Value::Pair(_, v) => v,
+            other => panic!("expected a key-value pair, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::I64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::F64(v) => Some(*v),
+            Value::I64(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Stable 64-bit hash (used by the hash partitioner; must not depend
+    /// on process-level state, because map tasks run "anywhere").
+    pub fn stable_hash(&self) -> u64 {
+        let mut buf = Vec::with_capacity(16);
+        self.encode_into(&mut buf);
+        fnv1a64(&buf)
+    }
+
+    /// Binary encoding: tag byte + little-endian payload.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            Value::Null => out.push(0),
+            Value::Bool(b) => {
+                out.push(1);
+                out.push(*b as u8);
+            }
+            Value::I64(v) => {
+                out.push(2);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::F64(v) => {
+                out.push(3);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::Str(s) => {
+                out.push(4);
+                out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+                out.extend_from_slice(s.as_bytes());
+            }
+            Value::Pair(k, v) => {
+                out.push(5);
+                k.encode_into(out);
+                v.encode_into(out);
+            }
+            Value::List(items) => {
+                out.push(6);
+                out.extend_from_slice(&(items.len() as u32).to_le_bytes());
+                for item in items {
+                    item.encode_into(out);
+                }
+            }
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode one value from `bytes`, returning it and the bytes consumed.
+    pub fn decode(bytes: &[u8]) -> Option<(Value, usize)> {
+        let tag = *bytes.first()?;
+        match tag {
+            0 => Some((Value::Null, 1)),
+            1 => Some((Value::Bool(*bytes.get(1)? != 0), 2)),
+            2 => {
+                let raw: [u8; 8] = bytes.get(1..9)?.try_into().ok()?;
+                Some((Value::I64(i64::from_le_bytes(raw)), 9))
+            }
+            3 => {
+                let raw: [u8; 8] = bytes.get(1..9)?.try_into().ok()?;
+                Some((Value::F64(f64::from_le_bytes(raw)), 9))
+            }
+            4 => {
+                let len_raw: [u8; 4] = bytes.get(1..5)?.try_into().ok()?;
+                let len = u32::from_le_bytes(len_raw) as usize;
+                let s = bytes.get(5..5 + len)?;
+                Some((Value::Str(String::from_utf8(s.to_vec()).ok()?), 5 + len))
+            }
+            5 => {
+                let (k, nk) = Value::decode(&bytes[1..])?;
+                let (v, nv) = Value::decode(&bytes[1 + nk..])?;
+                Some((Value::pair(k, v), 1 + nk + nv))
+            }
+            6 => {
+                let len_raw: [u8; 4] = bytes.get(1..5)?.try_into().ok()?;
+                let len = u32::from_le_bytes(len_raw) as usize;
+                let mut pos = 5;
+                let mut items = Vec::with_capacity(len.min(1024));
+                for _ in 0..len {
+                    let (v, n) = Value::decode(&bytes[pos..])?;
+                    items.push(v);
+                    pos += n;
+                }
+                Some((Value::List(items), pos))
+            }
+            _ => None,
+        }
+    }
+
+    /// Decode a concatenated sequence of values.
+    pub fn decode_stream(mut bytes: &[u8]) -> Option<Vec<Value>> {
+        let mut out = Vec::new();
+        while !bytes.is_empty() {
+            let (v, n) = Value::decode(bytes)?;
+            out.push(v);
+            bytes = &bytes[n..];
+        }
+        Some(out)
+    }
+
+    /// Total-order comparison for deterministic result sorting (type tag
+    /// first, then value; floats via total_cmp).
+    pub fn total_cmp(&self, other: &Value) -> Ordering {
+        fn rank(v: &Value) -> u8 {
+            match v {
+                Value::Null => 0,
+                Value::Bool(_) => 1,
+                Value::I64(_) => 2,
+                Value::F64(_) => 3,
+                Value::Str(_) => 4,
+                Value::Pair(_, _) => 5,
+                Value::List(_) => 6,
+            }
+        }
+        match (self, other) {
+            (Value::Bool(a), Value::Bool(b)) => a.cmp(b),
+            (Value::I64(a), Value::I64(b)) => a.cmp(b),
+            (Value::F64(a), Value::F64(b)) => a.total_cmp(b),
+            (Value::Str(a), Value::Str(b)) => a.cmp(b),
+            (Value::Pair(ak, av), Value::Pair(bk, bv)) => {
+                ak.total_cmp(bk).then_with(|| av.total_cmp(bv))
+            }
+            (Value::List(a), Value::List(b)) => {
+                for (x, y) in a.iter().zip(b.iter()) {
+                    let c = x.total_cmp(y);
+                    if c != Ordering::Equal {
+                        return c;
+                    }
+                }
+                a.len().cmp(&b.len())
+            }
+            (a, b) => rank(a).cmp(&rank(b)),
+        }
+    }
+
+    /// Rough in-memory footprint (executor memory accounting).
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            Value::Null | Value::Bool(_) => 8,
+            Value::I64(_) | Value::F64(_) => 16,
+            Value::Str(s) => 32 + s.len(),
+            Value::Pair(k, v) => 16 + k.mem_bytes() + v.mem_bytes(),
+            Value::List(items) => 32 + items.iter().map(Value::mem_bytes).sum::<usize>(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{forall, Gen};
+
+    fn arbitrary_value(g: &mut Gen, depth: usize) -> Value {
+        let max_kind = if depth == 0 { 5 } else { 7 };
+        match g.usize(max_kind) {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::I64(g.i64(i64::MIN / 2, i64::MAX / 2)),
+            3 => Value::F64(g.f64(-1e12, 1e12)),
+            4 => Value::Str(g.string(24)),
+            5 => Value::pair(arbitrary_value(g, 0), arbitrary_value(g, 0)),
+            _ => {
+                let n = g.usize(4);
+                Value::List((0..n).map(|_| arbitrary_value(g, depth - 1)).collect())
+            }
+        }
+    }
+
+    #[test]
+    fn prop_encode_decode_roundtrip() {
+        forall("value-roundtrip", 400, |g| {
+            let v = arbitrary_value(g, 2);
+            let enc = v.encode();
+            match Value::decode(&enc) {
+                Some((back, n)) if back == v && n == enc.len() => Ok(()),
+                other => Err(format!("{v:?} -> {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_stream_roundtrip() {
+        forall("value-stream-roundtrip", 100, |g| {
+            let vals: Vec<Value> = (0..g.usize(8)).map(|_| arbitrary_value(g, 1)).collect();
+            let mut bytes = Vec::new();
+            for v in &vals {
+                v.encode_into(&mut bytes);
+            }
+            match Value::decode_stream(&bytes) {
+                Some(back) if back == vals => Ok(()),
+                other => Err(format!("{vals:?} -> {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn hash_stability_and_spread() {
+        // Same value -> same hash; different values overwhelmingly differ.
+        assert_eq!(Value::I64(7).stable_hash(), Value::I64(7).stable_hash());
+        let hashes: std::collections::HashSet<u64> =
+            (0..1000).map(|i| Value::I64(i).stable_hash()).collect();
+        assert!(hashes.len() > 990);
+        // Typed differently -> different hash (tag byte).
+        assert_ne!(Value::I64(1).stable_hash(), Value::F64(1.0).stable_hash());
+    }
+
+    #[test]
+    fn pair_accessors() {
+        let p = Value::pair(Value::I64(8), Value::F64(1.0));
+        assert_eq!(p.key().as_i64(), Some(8));
+        assert_eq!(p.val().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected a key-value pair")]
+    fn key_on_non_pair_panics() {
+        Value::I64(3).key();
+    }
+
+    #[test]
+    fn total_order_is_deterministic() {
+        let mut vals = vec![
+            Value::Str("b".into()),
+            Value::I64(2),
+            Value::Null,
+            Value::I64(1),
+            Value::Str("a".into()),
+        ];
+        vals.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(
+            vals,
+            vec![
+                Value::Null,
+                Value::I64(1),
+                Value::I64(2),
+                Value::Str("a".into()),
+                Value::Str("b".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Value::decode(&[]).is_none());
+        assert!(Value::decode(&[99]).is_none());
+        assert!(Value::decode(&[2, 1, 2]).is_none(), "truncated i64");
+        assert!(Value::decode_stream(&[4, 255, 255, 255, 255]).is_none());
+    }
+}

@@ -1,0 +1,352 @@
+//! Configuration for the whole system: simulation parameters (service
+//! latency/throughput models, Lambda limits), pricing tables, engine
+//! knobs, and data-generation settings.
+//!
+//! Config is layered: built-in defaults (calibrated to the paper's 2018
+//! AWS environment, DESIGN.md §5) → optional TOML file → CLI `--set
+//! key=value` overrides. The TOML reader is a self-contained subset
+//! parser (`parse.rs`); `serde`/`toml` are unavailable offline.
+
+pub mod parse;
+
+use crate::util::json::Json;
+
+/// Service-model parameters. All durations in seconds, rates in MB/s.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimParams {
+    /// Per-stream S3 read throughput for Flint's executors (the paper's
+    /// boto finding: "much better throughput than the library Spark uses").
+    pub s3_flint_mbps: f64,
+    /// Per-stream S3 read throughput for the Spark cluster's Hadoop S3A
+    /// connector.
+    pub s3_spark_mbps: f64,
+    /// S3 GET first-byte latency.
+    pub s3_first_byte_s: f64,
+    /// S3 PUT throughput per stream.
+    pub s3_put_mbps: f64,
+    /// Lambda cold-start latency (Python runtime; the paper's motivation
+    /// for Python executors over Java).
+    pub lambda_cold_start_s: f64,
+    /// Warm invocation dispatch latency.
+    pub lambda_warm_start_s: f64,
+    /// Lambda memory allocation (paper: maximum, 3008 MB).
+    pub lambda_memory_mb: u64,
+    /// Lambda execution duration cap (paper-era: 300 s).
+    pub lambda_time_limit_s: f64,
+    /// Safety margin before the cap at which executors checkpoint & chain.
+    pub lambda_chain_margin_s: f64,
+    /// Invocation request payload cap (6 MB).
+    pub lambda_payload_limit_bytes: u64,
+    /// Maximum concurrent invocations (paper: 80, matching 80 vCores).
+    pub max_concurrency: usize,
+    /// Cluster-internal shuffle bandwidth (Spark's local-disk + network
+    /// path; the baseline's analogue of Flint's SQS hop).
+    pub cluster_shuffle_mbps: f64,
+    /// SQS request round-trip contribution per API call.
+    pub sqs_rtt_s: f64,
+    /// SQS bandwidth while streaming message bodies.
+    pub sqs_mbps: f64,
+    /// Max messages per SQS batch API call.
+    pub sqs_batch_max_msgs: usize,
+    /// Max total payload per batch call (256 KB).
+    pub sqs_batch_max_bytes: usize,
+    /// Probability a delivered message is duplicated (at-least-once).
+    pub sqs_duplicate_prob: f64,
+    /// Probability an invocation crashes before completing (retry path).
+    pub lambda_failure_prob: f64,
+    /// Multiplier applied to *measured* compute time, to model slower/
+    /// faster hardware than this host (1.0 = as measured).
+    pub compute_scale: f64,
+    /// Per-record JVM→Python pipe overhead for the PySpark baseline.
+    pub pyspark_pipe_per_record_s: f64,
+    /// Driver-side overhead per stage (task serialization, bookkeeping).
+    pub scheduler_overhead_per_stage_s: f64,
+    /// Per-task scheduler-side serialization/launch overhead.
+    pub scheduler_overhead_per_task_s: f64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            // Effective per-stream S3 throughput, *including* client-side
+            // overhead, calibrated from the paper's Q0 (DESIGN.md §5):
+            // Flint/boto: 215 GB / (80 × 101 s) ≈ 27.5 MB/s;
+            // Spark/Hadoop-S3A: 215 GB / (80 × 188 s) ≈ 14.6 MB/s.
+            s3_flint_mbps: 27.5,
+            s3_spark_mbps: 14.6,
+            s3_first_byte_s: 0.020,
+            s3_put_mbps: 60.0,
+            lambda_cold_start_s: 0.250,
+            lambda_warm_start_s: 0.015,
+            lambda_memory_mb: 3008,
+            lambda_time_limit_s: 300.0,
+            lambda_chain_margin_s: 10.0,
+            lambda_payload_limit_bytes: 6 * 1024 * 1024,
+            max_concurrency: 80,
+            cluster_shuffle_mbps: 300.0,
+            sqs_rtt_s: 0.0015,
+            sqs_mbps: 80.0,
+            sqs_batch_max_msgs: 10,
+            sqs_batch_max_bytes: 256 * 1024,
+            sqs_duplicate_prob: 0.0,
+            lambda_failure_prob: 0.0,
+            compute_scale: 1.0,
+            pyspark_pipe_per_record_s: 1.2e-6,
+            scheduler_overhead_per_stage_s: 0.35,
+            scheduler_overhead_per_task_s: 0.002,
+        }
+    }
+}
+
+/// AWS pricing circa the paper (2018, us-east-1), USD.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pricing {
+    /// Lambda: $ per GB-second.
+    pub lambda_gb_s: f64,
+    /// Lambda: $ per request.
+    pub lambda_per_request: f64,
+    /// SQS: $ per million requests (each 64 KB chunk is one request).
+    pub sqs_per_million_requests: f64,
+    /// S3: $ per 1000 GET requests.
+    pub s3_get_per_1000: f64,
+    /// S3: $ per 1000 PUT requests.
+    pub s3_put_per_1000: f64,
+    /// Cluster: $ per hour for the whole 11 × m4.2xlarge Databricks
+    /// deployment (calibrated from Table I: 188 s ↔ $0.37).
+    pub cluster_per_hour: f64,
+}
+
+impl Default for Pricing {
+    fn default() -> Self {
+        Pricing {
+            lambda_gb_s: 0.00001667,
+            lambda_per_request: 0.0000002,
+            sqs_per_million_requests: 0.40,
+            s3_get_per_1000: 0.0004,
+            s3_put_per_1000: 0.005,
+            cluster_per_hour: 7.08,
+        }
+    }
+}
+
+/// Flint engine knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlintParams {
+    /// Target split size for S3 input partitions (bytes).
+    pub input_split_bytes: u64,
+    /// Default number of reduce partitions when a query doesn't specify.
+    pub default_shuffle_partitions: usize,
+    /// Executor in-memory shuffle buffer before flushing to SQS (bytes).
+    pub shuffle_buffer_bytes: usize,
+    /// Max task retries before the query fails.
+    pub max_task_retries: u32,
+    /// Shuffle transport: "sqs" (the paper) or "s3" (the Qubole ablation).
+    pub shuffle_backend: ShuffleBackend,
+    /// Enable sequence-id dedup of SQS messages (§VI).
+    pub dedup_enabled: bool,
+    /// Rows per columnar batch handed to the PJRT kernels.
+    pub batch_rows: usize,
+    /// Use the AOT HLO artifacts via PJRT when available (fall back to the
+    /// native kernels when artifacts are absent, e.g. unit tests).
+    pub use_pjrt: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShuffleBackend {
+    Sqs,
+    S3,
+}
+
+impl std::str::FromStr for ShuffleBackend {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sqs" => Ok(ShuffleBackend::Sqs),
+            "s3" => Ok(ShuffleBackend::S3),
+            other => Err(format!("unknown shuffle backend `{other}` (want sqs|s3)")),
+        }
+    }
+}
+
+impl Default for FlintParams {
+    fn default() -> Self {
+        FlintParams {
+            input_split_bytes: 64 * 1024 * 1024,
+            default_shuffle_partitions: 30,
+            shuffle_buffer_bytes: 48 * 1024 * 1024,
+            max_task_retries: 3,
+            shuffle_backend: ShuffleBackend::Sqs,
+            dedup_enabled: true,
+            batch_rows: 8192,
+            use_pjrt: true,
+        }
+    }
+}
+
+/// Spark-cluster baseline parameters (11 × m4.2xlarge, 80 vCores).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterParams {
+    pub workers: usize,
+    pub cores: usize,
+    /// Cluster startup time — reported but excluded from latency, exactly
+    /// as the paper does ("around five minutes").
+    pub startup_s: f64,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        ClusterParams { workers: 10, cores: 80, startup_s: 300.0 }
+    }
+}
+
+/// Data-generation parameters for the synthetic TLC dataset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataParams {
+    /// Number of trips to generate for measured-mode runs.
+    pub trips: u64,
+    /// Object size per generated S3 object (bytes).
+    pub object_bytes: u64,
+    /// Paper-scale totals used by `--mode paper` extrapolation.
+    pub paper_total_bytes: u64,
+    pub paper_total_trips: u64,
+}
+
+impl Default for DataParams {
+    fn default() -> Self {
+        DataParams {
+            trips: 1_000_000,
+            object_bytes: 32 * 1024 * 1024,
+            paper_total_bytes: 215 * 1024 * 1024 * 1024,
+            paper_total_trips: 1_300_000_000,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FlintConfig {
+    pub seed: u64,
+    pub sim: SimParams,
+    pub pricing: Pricing,
+    pub flint: FlintParams,
+    pub cluster: ClusterParams,
+    pub data: DataParams,
+    /// Directory containing the AOT HLO artifacts.
+    pub artifacts_dir: String,
+}
+
+impl FlintConfig {
+    /// Defaults plus a fixed seed.
+    pub fn with_seed(seed: u64) -> FlintConfig {
+        FlintConfig { seed, ..Default::default() }
+    }
+
+    /// A configuration tuned for fast unit tests: tiny splits/buffers so
+    /// small datasets still exercise multi-task, multi-flush paths; PJRT
+    /// off by default (tests that want it opt in).
+    pub fn for_tests() -> FlintConfig {
+        let mut c = FlintConfig::with_seed(1234);
+        c.flint.input_split_bytes = 64 * 1024;
+        c.flint.shuffle_buffer_bytes = 64 * 1024;
+        c.flint.batch_rows = 256;
+        c.flint.use_pjrt = false;
+        c.data.trips = 5_000;
+        c.data.object_bytes = 256 * 1024;
+        c.sim.max_concurrency = 8;
+        c.artifacts_dir = "artifacts".into();
+        c
+    }
+
+    /// Apply a `key=value` override (dotted keys, e.g.
+    /// `sim.max_concurrency=160`). Returns an error naming the key if it
+    /// doesn't exist or the value doesn't parse.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        parse::apply_override(self, key, value)
+    }
+
+    /// Load from a TOML file then apply overrides.
+    pub fn load(path: &str, overrides: &[(String, String)]) -> Result<FlintConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let mut cfg = FlintConfig::default();
+        parse::apply_toml(&mut cfg, &text)?;
+        for (k, v) in overrides {
+            cfg.set(k, v)?;
+        }
+        Ok(cfg)
+    }
+
+    /// JSON dump (for reports / `flint config --print`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seed", self.seed)
+            .set("artifacts_dir", self.artifacts_dir.as_str())
+            .set(
+                "sim",
+                Json::obj()
+                    .set("s3_flint_mbps", self.sim.s3_flint_mbps)
+                    .set("s3_spark_mbps", self.sim.s3_spark_mbps)
+                    .set("s3_first_byte_s", self.sim.s3_first_byte_s)
+                    .set("lambda_cold_start_s", self.sim.lambda_cold_start_s)
+                    .set("lambda_warm_start_s", self.sim.lambda_warm_start_s)
+                    .set("lambda_memory_mb", self.sim.lambda_memory_mb)
+                    .set("lambda_time_limit_s", self.sim.lambda_time_limit_s)
+                    .set("max_concurrency", self.sim.max_concurrency)
+                    .set("sqs_rtt_s", self.sim.sqs_rtt_s)
+                    .set("sqs_duplicate_prob", self.sim.sqs_duplicate_prob)
+                    .set("lambda_failure_prob", self.sim.lambda_failure_prob)
+                    .set("compute_scale", self.sim.compute_scale),
+            )
+            .set(
+                "flint",
+                Json::obj()
+                    .set("input_split_bytes", self.flint.input_split_bytes)
+                    .set("default_shuffle_partitions", self.flint.default_shuffle_partitions)
+                    .set("shuffle_buffer_bytes", self.flint.shuffle_buffer_bytes)
+                    .set(
+                        "shuffle_backend",
+                        match self.flint.shuffle_backend {
+                            ShuffleBackend::Sqs => "sqs",
+                            ShuffleBackend::S3 => "s3",
+                        },
+                    )
+                    .set("dedup_enabled", self.flint.dedup_enabled)
+                    .set("batch_rows", self.flint.batch_rows)
+                    .set("use_pjrt", self.flint.use_pjrt),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = FlintConfig::default();
+        assert_eq!(c.sim.lambda_memory_mb, 3008);
+        assert_eq!(c.sim.lambda_time_limit_s, 300.0);
+        assert_eq!(c.sim.lambda_payload_limit_bytes, 6 * 1024 * 1024);
+        assert_eq!(c.sim.max_concurrency, 80);
+        assert_eq!(c.cluster.cores, 80);
+        assert_eq!(c.cluster.workers, 10);
+        assert_eq!(c.flint.default_shuffle_partitions, 30); // Q1's reduceByKey(add, 30)
+    }
+
+    #[test]
+    fn override_roundtrip() {
+        let mut c = FlintConfig::default();
+        c.set("sim.max_concurrency", "160").unwrap();
+        assert_eq!(c.sim.max_concurrency, 160);
+        c.set("flint.shuffle_backend", "s3").unwrap();
+        assert_eq!(c.flint.shuffle_backend, ShuffleBackend::S3);
+        assert!(c.set("sim.nonexistent", "1").is_err());
+        assert!(c.set("sim.max_concurrency", "abc").is_err());
+    }
+
+    #[test]
+    fn json_dump_contains_sections() {
+        let j = FlintConfig::default().to_json();
+        assert!(j.get("sim").is_some());
+        assert!(j.get("flint").is_some());
+    }
+}

@@ -1,0 +1,203 @@
+//! TOML-subset parsing and dotted-key overrides for [`FlintConfig`].
+//!
+//! Supported TOML subset: `[section]` / `[section.sub]` headers, `key =
+//! value` with string / integer / float / boolean values, `#` comments.
+//! That covers every config file this project ships; exotic TOML (arrays
+//! of tables, datetimes, multi-line strings) is intentionally rejected.
+
+use super::{FlintConfig, ShuffleBackend};
+
+/// Apply the contents of a TOML document to `cfg`.
+pub fn apply_toml(cfg: &mut FlintConfig, text: &str) -> Result<(), String> {
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let value = unquote(value.trim());
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        apply_override(cfg, &full_key, &value)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+    }
+    Ok(())
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Only strip # outside of quotes (our values never contain # anyway,
+    // but be careful with quoted strings).
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+macro_rules! parse_to {
+    ($field:expr, $value:expr, $key:expr) => {
+        $field = $value
+            .parse()
+            .map_err(|_| format!("bad value `{}` for `{}`", $value, $key))?
+    };
+}
+
+/// Apply one dotted-key override.
+pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(), String> {
+    match key {
+        "seed" => parse_to!(cfg.seed, value, key),
+        "artifacts_dir" => cfg.artifacts_dir = value.to_string(),
+
+        "sim.s3_flint_mbps" => parse_to!(cfg.sim.s3_flint_mbps, value, key),
+        "sim.s3_spark_mbps" => parse_to!(cfg.sim.s3_spark_mbps, value, key),
+        "sim.s3_first_byte_s" => parse_to!(cfg.sim.s3_first_byte_s, value, key),
+        "sim.s3_put_mbps" => parse_to!(cfg.sim.s3_put_mbps, value, key),
+        "sim.lambda_cold_start_s" => parse_to!(cfg.sim.lambda_cold_start_s, value, key),
+        "sim.lambda_warm_start_s" => parse_to!(cfg.sim.lambda_warm_start_s, value, key),
+        "sim.lambda_memory_mb" => parse_to!(cfg.sim.lambda_memory_mb, value, key),
+        "sim.lambda_time_limit_s" => parse_to!(cfg.sim.lambda_time_limit_s, value, key),
+        "sim.lambda_chain_margin_s" => parse_to!(cfg.sim.lambda_chain_margin_s, value, key),
+        "sim.lambda_payload_limit_bytes" => {
+            parse_to!(cfg.sim.lambda_payload_limit_bytes, value, key)
+        }
+        "sim.max_concurrency" => parse_to!(cfg.sim.max_concurrency, value, key),
+        "sim.cluster_shuffle_mbps" => parse_to!(cfg.sim.cluster_shuffle_mbps, value, key),
+        "sim.sqs_rtt_s" => parse_to!(cfg.sim.sqs_rtt_s, value, key),
+        "sim.sqs_mbps" => parse_to!(cfg.sim.sqs_mbps, value, key),
+        "sim.sqs_batch_max_msgs" => parse_to!(cfg.sim.sqs_batch_max_msgs, value, key),
+        "sim.sqs_batch_max_bytes" => parse_to!(cfg.sim.sqs_batch_max_bytes, value, key),
+        "sim.sqs_duplicate_prob" => parse_to!(cfg.sim.sqs_duplicate_prob, value, key),
+        "sim.lambda_failure_prob" => parse_to!(cfg.sim.lambda_failure_prob, value, key),
+        "sim.compute_scale" => parse_to!(cfg.sim.compute_scale, value, key),
+        "sim.pyspark_pipe_per_record_s" => {
+            parse_to!(cfg.sim.pyspark_pipe_per_record_s, value, key)
+        }
+        "sim.scheduler_overhead_per_stage_s" => {
+            parse_to!(cfg.sim.scheduler_overhead_per_stage_s, value, key)
+        }
+        "sim.scheduler_overhead_per_task_s" => {
+            parse_to!(cfg.sim.scheduler_overhead_per_task_s, value, key)
+        }
+
+        "pricing.lambda_gb_s" => parse_to!(cfg.pricing.lambda_gb_s, value, key),
+        "pricing.lambda_per_request" => parse_to!(cfg.pricing.lambda_per_request, value, key),
+        "pricing.sqs_per_million_requests" => {
+            parse_to!(cfg.pricing.sqs_per_million_requests, value, key)
+        }
+        "pricing.s3_get_per_1000" => parse_to!(cfg.pricing.s3_get_per_1000, value, key),
+        "pricing.s3_put_per_1000" => parse_to!(cfg.pricing.s3_put_per_1000, value, key),
+        "pricing.cluster_per_hour" => parse_to!(cfg.pricing.cluster_per_hour, value, key),
+
+        "flint.input_split_bytes" => parse_to!(cfg.flint.input_split_bytes, value, key),
+        "flint.default_shuffle_partitions" => {
+            parse_to!(cfg.flint.default_shuffle_partitions, value, key)
+        }
+        "flint.shuffle_buffer_bytes" => parse_to!(cfg.flint.shuffle_buffer_bytes, value, key),
+        "flint.max_task_retries" => parse_to!(cfg.flint.max_task_retries, value, key),
+        "flint.shuffle_backend" => {
+            cfg.flint.shuffle_backend = value.parse::<ShuffleBackend>()?
+        }
+        "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
+        "flint.batch_rows" => parse_to!(cfg.flint.batch_rows, value, key),
+        "flint.use_pjrt" => parse_to!(cfg.flint.use_pjrt, value, key),
+
+        "cluster.workers" => parse_to!(cfg.cluster.workers, value, key),
+        "cluster.cores" => parse_to!(cfg.cluster.cores, value, key),
+        "cluster.startup_s" => parse_to!(cfg.cluster.startup_s, value, key),
+
+        "data.trips" => parse_to!(cfg.data.trips, value, key),
+        "data.object_bytes" => parse_to!(cfg.data.object_bytes, value, key),
+        "data.paper_total_bytes" => parse_to!(cfg.data.paper_total_bytes, value, key),
+        "data.paper_total_trips" => parse_to!(cfg.data.paper_total_trips, value, key),
+
+        other => return Err(format!("unknown config key `{other}`")),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_sections_and_values() {
+        let mut cfg = FlintConfig::default();
+        apply_toml(
+            &mut cfg,
+            r#"
+            # a comment
+            seed = 99
+
+            [sim]
+            max_concurrency = 40   # inline comment
+            s3_flint_mbps = 92.5
+
+            [flint]
+            shuffle_backend = "s3"
+            dedup_enabled = false
+
+            [data]
+            trips = 250000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 99);
+        assert_eq!(cfg.sim.max_concurrency, 40);
+        assert_eq!(cfg.sim.s3_flint_mbps, 92.5);
+        assert_eq!(cfg.flint.shuffle_backend, ShuffleBackend::S3);
+        assert!(!cfg.flint.dedup_enabled);
+        assert_eq!(cfg.data.trips, 250_000);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let mut cfg = FlintConfig::default();
+        let err = apply_toml(&mut cfg, "[sim]\nbogus_key = 1\n").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        assert!(err.contains("bogus_key"), "{err}");
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let mut cfg = FlintConfig::default();
+        let err = apply_override(&mut cfg, "sim.max_concurrency", "many").unwrap_err();
+        assert!(err.contains("sim.max_concurrency"), "{err}");
+    }
+
+    #[test]
+    fn quoted_strings_unquoted() {
+        let mut cfg = FlintConfig::default();
+        apply_toml(&mut cfg, "artifacts_dir = \"my/arts\"\n").unwrap();
+        assert_eq!(cfg.artifacts_dir, "my/arts");
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let mut cfg = FlintConfig::default();
+        apply_toml(&mut cfg, "artifacts_dir = \"a#b\"\n").unwrap();
+        assert_eq!(cfg.artifacts_dir, "a#b");
+    }
+}

@@ -1,0 +1,188 @@
+//! USD cost accounting — the second column of the paper's Table I.
+//!
+//! Every simulated service charges into a shared [`CostTracker`] under a
+//! [`CostCategory`]; the per-engine totals become the "Estimated Cost"
+//! column. Pricing constants live in [`crate::config::Pricing`].
+
+pub mod report;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Mutex;
+
+/// Cost buckets, mirroring the paper's accounting: Lambda GB-seconds +
+/// requests and SQS requests for Flint; instance-hours for the cluster;
+/// S3 requests for both.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CostCategory {
+    LambdaCompute,
+    LambdaRequests,
+    SqsRequests,
+    S3Requests,
+    ClusterTime,
+}
+
+impl CostCategory {
+    pub const ALL: [CostCategory; 5] = [
+        CostCategory::LambdaCompute,
+        CostCategory::LambdaRequests,
+        CostCategory::SqsRequests,
+        CostCategory::S3Requests,
+        CostCategory::ClusterTime,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostCategory::LambdaCompute => "lambda_compute",
+            CostCategory::LambdaRequests => "lambda_requests",
+            CostCategory::SqsRequests => "sqs_requests",
+            CostCategory::S3Requests => "s3_requests",
+            CostCategory::ClusterTime => "cluster_time",
+        }
+    }
+}
+
+/// Thread-safe accumulating cost ledger.
+#[derive(Debug, Default)]
+pub struct CostTracker {
+    usd: Mutex<BTreeMap<CostCategory, f64>>,
+}
+
+impl CostTracker {
+    pub fn new() -> CostTracker {
+        CostTracker::default()
+    }
+
+    /// Add `usd` dollars under `category`.
+    pub fn charge(&self, category: CostCategory, usd: f64) {
+        debug_assert!(usd >= 0.0, "negative charge {usd}");
+        if usd > 0.0 {
+            let mut book = self.usd.lock().expect("cost book poisoned");
+            *book.entry(category).or_insert(0.0) += usd;
+        }
+    }
+
+    /// Total across all categories.
+    pub fn total(&self) -> f64 {
+        self.usd.lock().expect("cost book poisoned").values().sum()
+    }
+
+    pub fn get(&self, category: CostCategory) -> f64 {
+        self.usd
+            .lock()
+            .expect("cost book poisoned")
+            .get(&category)
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Snapshot of all non-zero categories.
+    pub fn snapshot(&self) -> CostSnapshot {
+        CostSnapshot { usd: self.usd.lock().expect("cost book poisoned").clone() }
+    }
+
+    /// Zero the ledger (between bench trials).
+    pub fn reset(&self) {
+        self.usd.lock().expect("cost book poisoned").clear();
+    }
+}
+
+/// An immutable point-in-time copy of the ledger, subtractable so a trial
+/// can be costed as `after - before`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CostSnapshot {
+    usd: BTreeMap<CostCategory, f64>,
+}
+
+impl CostSnapshot {
+    pub fn total(&self) -> f64 {
+        self.usd.values().sum()
+    }
+
+    pub fn get(&self, category: CostCategory) -> f64 {
+        self.usd.get(&category).copied().unwrap_or(0.0)
+    }
+
+    /// Component-wise `self - earlier` (clamped at 0).
+    pub fn since(&self, earlier: &CostSnapshot) -> CostSnapshot {
+        let mut usd = BTreeMap::new();
+        for cat in CostCategory::ALL {
+            let d = self.get(cat) - earlier.get(cat);
+            if d > 0.0 {
+                usd.insert(cat, d);
+            }
+        }
+        CostSnapshot { usd }
+    }
+
+    pub fn breakdown(&self) -> Vec<(CostCategory, f64)> {
+        self.usd.iter().map(|(c, v)| (*c, *v)).collect()
+    }
+}
+
+impl fmt::Display for CostSnapshot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "${:.4} [", self.total())?;
+        for (i, (c, v)) in self.breakdown().iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{}=${:.4}", c.name(), v)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charges_accumulate() {
+        let t = CostTracker::new();
+        t.charge(CostCategory::LambdaCompute, 0.10);
+        t.charge(CostCategory::LambdaCompute, 0.05);
+        t.charge(CostCategory::SqsRequests, 0.01);
+        assert!((t.total() - 0.16).abs() < 1e-12);
+        assert!((t.get(CostCategory::LambdaCompute) - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_diff() {
+        let t = CostTracker::new();
+        t.charge(CostCategory::S3Requests, 0.02);
+        let before = t.snapshot();
+        t.charge(CostCategory::S3Requests, 0.03);
+        t.charge(CostCategory::ClusterTime, 0.50);
+        let delta = t.snapshot().since(&before);
+        assert!((delta.get(CostCategory::S3Requests) - 0.03).abs() < 1e-12);
+        assert!((delta.get(CostCategory::ClusterTime) - 0.50).abs() < 1e-12);
+        assert!((delta.total() - 0.53).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let t = CostTracker::new();
+        t.charge(CostCategory::ClusterTime, 1.0);
+        t.reset();
+        assert_eq!(t.total(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_charges() {
+        let t = std::sync::Arc::new(CostTracker::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let t = std::sync::Arc::clone(&t);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    t.charge(CostCategory::SqsRequests, 0.001);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((t.total() - 8.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,98 @@
+//! Cost/latency report formatting shared by examples and benches —
+//! renders rows in the paper's Table I style.
+
+use crate::cost::CostSnapshot;
+use crate::util::stats::Summary;
+
+/// One engine's result for one query.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    /// Latency trials in seconds.
+    pub latency: Summary,
+    /// Cost trials in USD (mean reported, like the paper).
+    pub cost: Summary,
+    /// Cost breakdown from the last trial, for the detailed report.
+    pub cost_detail: CostSnapshot,
+}
+
+/// Render Table I: one row per query, engines across.
+pub fn render_table1(
+    title: &str,
+    engines: &[&str],
+    rows: &[(String, Vec<Cell>)],
+    show_ci: bool,
+) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n\n"));
+    out.push_str("|   | Query Latency (s) |");
+    for _ in 1..engines.len() {
+        out.push_str("   |");
+    }
+    out.push_str(" Estimated Cost (USD) |");
+    for _ in 1..engines.len() {
+        out.push_str("   |");
+    }
+    out.push('\n');
+    out.push_str("|---|");
+    for _ in 0..engines.len() * 2 {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    out.push_str("|   |");
+    for e in engines {
+        out.push_str(&format!(" {e} |"));
+    }
+    for e in engines {
+        out.push_str(&format!(" {e} |"));
+    }
+    out.push('\n');
+    for (name, cells) in rows {
+        out.push_str(&format!("| {name} |"));
+        for (i, cell) in cells.iter().enumerate() {
+            // Paper convention: CI shown for Flint (col 0), mean only for
+            // the low-variance cluster engines.
+            if show_ci && i == 0 && cell.latency.n > 1 {
+                out.push_str(&format!(" {} |", cell.latency.fmt_ci(1.0)));
+            } else if cell.latency.mean < 10.0 {
+                out.push_str(&format!(" {:.2} |", cell.latency.mean));
+            } else {
+                out.push_str(&format!(" {:.0} |", cell.latency.mean));
+            }
+        }
+        for cell in cells {
+            if cell.cost.mean < 0.01 {
+                out.push_str(&format!(" {:.4} |", cell.cost.mean));
+            } else {
+                out.push_str(&format!(" {:.2} |", cell.cost.mean));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(lat: &[f64], cost: f64) -> Cell {
+        Cell {
+            latency: Summary::of(lat),
+            cost: Summary::of(&[cost]),
+            cost_detail: CostSnapshot::default(),
+        }
+    }
+
+    #[test]
+    fn renders_paper_shape() {
+        let rows = vec![
+            ("0".to_string(), vec![cell(&[101.0, 99.0, 103.0], 0.20), cell(&[211.0], 0.41), cell(&[188.0], 0.37)]),
+            ("1".to_string(), vec![cell(&[190.0], 0.59), cell(&[316.0], 0.61), cell(&[189.0], 0.37)]),
+        ];
+        let table = render_table1("Table I", &["Flint", "PySpark", "Spark"], &rows, true);
+        assert!(table.contains("| 0 |"), "{table}");
+        assert!(table.contains("101 ["), "CI for Flint: {table}");
+        assert!(table.contains("| 211 |"), "{table}");
+        assert!(table.contains("0.20"), "{table}");
+    }
+}

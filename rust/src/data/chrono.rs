@@ -1,0 +1,229 @@
+//! Civil-calendar ↔ epoch conversions (Howard Hinnant's algorithms).
+//!
+//! The TLC dataset carries `YYYY-MM-DD HH:MM:SS` timestamps; queries
+//! aggregate by hour (Q1–Q3), by month across 2009–2016 (Q4, Q5), and by
+//! day for the weather join (Q6). No date crate is vendored, so the two
+//! classic algorithms live here, tested against known fixed points.
+
+/// Days since 1970-01-01 for a civil date (proleptic Gregorian).
+pub fn days_from_civil(y: i64, m: u32, d: u32) -> i64 {
+    debug_assert!((1..=12).contains(&m), "month {m}");
+    debug_assert!((1..=31).contains(&d), "day {d}");
+    let y = if m <= 2 { y - 1 } else { y };
+    let era = if y >= 0 { y } else { y - 399 } / 400;
+    let yoe = (y - era * 400) as u64; // [0, 399]
+    let mp = (m as u64 + 9) % 12; // [0, 11]
+    let doy = (153 * mp + 2) / 5 + d as u64 - 1; // [0, 365]
+    let doe = yoe * 365 + yoe / 4 - yoe / 100 + doy; // [0, 146096]
+    era * 146097 + doe as i64 - 719468
+}
+
+/// Civil date `(y, m, d)` for days since 1970-01-01.
+pub fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719468;
+    let era = if z >= 0 { z } else { z - 146096 } / 146097;
+    let doe = (z - era * 146097) as u64; // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146096) / 365; // [0, 399]
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100); // [0, 365]
+    let mp = (5 * doy + 2) / 153; // [0, 11]
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32; // [1, 31]
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32; // [1, 12]
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+/// Unix timestamp (UTC, seconds) for a civil datetime.
+pub fn epoch_from_datetime(y: i64, mo: u32, d: u32, h: u32, mi: u32, s: u32) -> i64 {
+    days_from_civil(y, mo, d) * 86400 + h as i64 * 3600 + mi as i64 * 60 + s as i64
+}
+
+/// `(y, mo, d, h, mi, s)` from a unix timestamp.
+pub fn datetime_from_epoch(ts: i64) -> (i64, u32, u32, u32, u32, u32) {
+    let days = ts.div_euclid(86400);
+    let secs = ts.rem_euclid(86400);
+    let (y, mo, d) = civil_from_days(days);
+    (y, mo, d, (secs / 3600) as u32, ((secs % 3600) / 60) as u32, (secs % 60) as u32)
+}
+
+/// Format as the TLC CSV `YYYY-MM-DD HH:MM:SS`.
+pub fn format_datetime(ts: i64) -> String {
+    let (y, mo, d, h, mi, s) = datetime_from_epoch(ts);
+    format!("{y:04}-{mo:02}-{d:02} {h:02}:{mi:02}:{s:02}")
+}
+
+/// Parse `YYYY-MM-DD HH:MM:SS` (fast, byte-level; the executor hot path).
+/// Returns `None` on malformed input.
+#[inline]
+pub fn parse_datetime(b: &[u8]) -> Option<i64> {
+    if b.len() < 19 {
+        return None;
+    }
+    #[inline]
+    fn num(b: &[u8]) -> Option<i64> {
+        let mut v: i64 = 0;
+        for &c in b {
+            if !c.is_ascii_digit() {
+                return None;
+            }
+            v = v * 10 + (c - b'0') as i64;
+        }
+        Some(v)
+    }
+    if b[4] != b'-' || b[7] != b'-' || b[10] != b' ' || b[13] != b':' || b[16] != b':' {
+        return None;
+    }
+    let y = num(&b[0..4])?;
+    let mo = num(&b[5..7])? as u32;
+    let d = num(&b[8..10])? as u32;
+    let h = num(&b[11..13])? as u32;
+    let mi = num(&b[14..16])? as u32;
+    let s = num(&b[17..19])? as u32;
+    if !(1..=12).contains(&mo) || !(1..=31).contains(&d) || h > 23 || mi > 59 || s > 59 {
+        return None;
+    }
+    Some(epoch_from_datetime(y, mo, d, h, mi, s))
+}
+
+/// Hour-of-day from a unix timestamp (what Q1–Q3 key on).
+#[inline]
+pub fn hour_of_day(ts: i64) -> u32 {
+    (ts.rem_euclid(86400) / 3600) as u32
+}
+
+/// Months elapsed since January 2009 — the Q4/Q5 aggregation key across
+/// the paper's Jan 2009 … Jun 2016 dataset (0..=89).
+///
+/// Hot path (§Perf): a day→month lookup table covering 2009–2017 avoids
+/// the civil-calendar divisions for in-range timestamps (the common case
+/// — every generated trip); out-of-range falls back to the full
+/// conversion.
+#[inline]
+pub fn month_index(ts: i64) -> i32 {
+    let day = ts.div_euclid(86400) - EPOCH_2009_DAYS;
+    if (0..DAY_TO_MONTH_DAYS as i64).contains(&day) {
+        day_month_lut()[day as usize] as i32
+    } else {
+        month_index_slow(ts)
+    }
+}
+
+/// Uncached month index (the LUT's oracle).
+pub fn month_index_slow(ts: i64) -> i32 {
+    let (y, m, _) = civil_from_days(ts.div_euclid(86400));
+    ((y - 2009) * 12 + (m as i64 - 1)) as i32
+}
+
+/// Days since epoch of 2009-01-01 (`days_from_civil(2009, 1, 1)`).
+const EPOCH_2009_DAYS: i64 = 14245;
+/// LUT coverage: 2009-01-01 .. 2017-12-31.
+const DAY_TO_MONTH_DAYS: usize = 3287;
+
+fn day_month_lut() -> &'static [u8; DAY_TO_MONTH_DAYS] {
+    static LUT: once_cell::sync::OnceCell<[u8; DAY_TO_MONTH_DAYS]> =
+        once_cell::sync::OnceCell::new();
+    LUT.get_or_init(|| {
+        let mut lut = [0u8; DAY_TO_MONTH_DAYS];
+        for (d, slot) in lut.iter_mut().enumerate() {
+            let (y, m, _) = civil_from_days(EPOCH_2009_DAYS + d as i64);
+            *slot = ((y - 2009) * 12 + (m as i64 - 1)) as u8;
+        }
+        lut
+    })
+}
+
+/// Days elapsed since 2009-01-01 — the Q6 weather-join key.
+#[inline]
+pub fn day_index(ts: i64) -> i32 {
+    (ts.div_euclid(86400) - days_from_civil(2009, 1, 1)) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall;
+
+    #[test]
+    fn known_fixed_points() {
+        assert_eq!(days_from_civil(1970, 1, 1), 0);
+        assert_eq!(days_from_civil(2000, 3, 1), 11017);
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        // Paper's dataset bounds.
+        assert_eq!(civil_from_days(days_from_civil(2009, 1, 1)), (2009, 1, 1));
+        assert_eq!(civil_from_days(days_from_civil(2016, 6, 30)), (2016, 6, 30));
+    }
+
+    #[test]
+    fn leap_years() {
+        assert_eq!(
+            days_from_civil(2012, 3, 1) - days_from_civil(2012, 2, 28),
+            2,
+            "2012 is a leap year"
+        );
+        assert_eq!(
+            days_from_civil(2013, 3, 1) - days_from_civil(2013, 2, 28),
+            1,
+            "2013 is not"
+        );
+    }
+
+    #[test]
+    fn prop_roundtrip_days() {
+        forall("civil-roundtrip", 500, |g| {
+            let z = g.i64(-200_000, 200_000);
+            let (y, m, d) = civil_from_days(z);
+            if days_from_civil(y, m, d) != z {
+                return Err(format!("day {z} -> {y}-{m}-{d} -> {}", days_from_civil(y, m, d)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn format_and_parse_roundtrip() {
+        forall("datetime-roundtrip", 300, |g| {
+            let ts = g.i64(1230768000, 1467244800); // 2009-01-01 .. 2016-06-30
+            let text = format_datetime(ts);
+            match parse_datetime(text.as_bytes()) {
+                Some(back) if back == ts => Ok(()),
+                other => Err(format!("{ts} -> {text} -> {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert_eq!(parse_datetime(b"2013-13-01 00:00:00"), None);
+        assert_eq!(parse_datetime(b"2013-01-01T00:00:00"), None);
+        assert_eq!(parse_datetime(b"short"), None);
+        assert_eq!(parse_datetime(b"2013-01-01 25:00:00"), None);
+        assert_eq!(parse_datetime(b"2x13-01-01 00:00:00"), None);
+    }
+
+    #[test]
+    fn month_lut_matches_slow_path_everywhere() {
+        // Every day the LUT covers, plus out-of-range fallbacks.
+        for day in 0..3287i64 {
+            let ts = (14245 + day) * 86400 + 7261;
+            assert_eq!(month_index(ts), month_index_slow(ts), "day {day}");
+        }
+        let before = epoch_from_datetime(2008, 12, 31, 23, 0, 0);
+        assert_eq!(month_index(before), month_index_slow(before));
+        let after = epoch_from_datetime(2020, 2, 2, 2, 2, 2);
+        assert_eq!(month_index(after), month_index_slow(after));
+    }
+
+    #[test]
+    fn epoch_constant_is_right() {
+        assert_eq!(days_from_civil(2009, 1, 1), 14245);
+    }
+
+    #[test]
+    fn aggregation_keys() {
+        let ts = epoch_from_datetime(2013, 5, 14, 17, 30, 0);
+        assert_eq!(hour_of_day(ts), 17);
+        assert_eq!(month_index(ts), (2013 - 2009) * 12 + 4);
+        assert_eq!(day_index(epoch_from_datetime(2009, 1, 2, 0, 0, 0)), 1);
+        assert_eq!(month_index(epoch_from_datetime(2009, 1, 31, 23, 59, 59)), 0);
+        assert_eq!(month_index(epoch_from_datetime(2016, 6, 1, 0, 0, 0)), 89);
+    }
+}

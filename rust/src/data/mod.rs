@@ -1,0 +1,182 @@
+//! Dataset management: the synthetic TLC corpus, its manifest, and the
+//! upload path into the simulated S3.
+
+pub mod chrono;
+pub mod schema;
+pub mod taxi;
+pub mod weather;
+
+use crate::services::SimEnv;
+use crate::util::ThreadPool;
+
+/// Default bucket layout.
+pub const INPUT_BUCKET: &str = "nyc-tlc";
+pub const OUTPUT_BUCKET: &str = "flint-results";
+pub const SHUFFLE_BUCKET: &str = "flint-shuffle";
+pub const WEATHER_KEY: &str = "weather/daily.csv";
+
+/// Manifest of a generated dataset living in the simulated S3.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub bucket: String,
+    pub prefix: String,
+    /// `(key, size_bytes)` per object, ordered by key.
+    pub objects: Vec<(String, u64)>,
+    pub total_bytes: u64,
+    pub trips: u64,
+    /// Key of the weather side table (same bucket).
+    pub weather_key: String,
+    /// Seed it was generated from (for reproducibility records).
+    pub seed: u64,
+}
+
+impl Dataset {
+    pub fn num_objects(&self) -> usize {
+        self.objects.len()
+    }
+
+    /// Mean bytes per trip — used by the paper-scale extrapolation.
+    pub fn bytes_per_trip(&self) -> f64 {
+        if self.trips == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.trips as f64
+        }
+    }
+}
+
+/// Generate `trips` synthetic trips into the simulated S3, in objects of
+/// roughly `config.data.object_bytes`, plus the weather side table.
+/// Deterministic per config seed; parallel across objects.
+pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset {
+    let seed = env.config().seed;
+    let object_bytes = env.config().data.object_bytes.max(64 * 1024);
+    // ~131 bytes per row (measured from the generator's output format).
+    let rows_per_object = (object_bytes / 131).max(1);
+    let num_objects = trips.div_ceil(rows_per_object).max(1) as usize;
+
+    env.s3().create_bucket(INPUT_BUCKET);
+    env.s3().create_bucket(OUTPUT_BUCKET);
+    env.s3().create_bucket(SHUFFLE_BUCKET);
+
+    // Weather side table first (small).
+    let weather = weather::WeatherTable::generate(seed);
+    env.s3()
+        .put_object(INPUT_BUCKET, WEATHER_KEY, weather.to_csv())
+        .expect("bucket exists");
+
+    // Objects in parallel; each object is an independent RNG stream.
+    let pool = ThreadPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
+    let prefix_owned = prefix.to_string();
+    let env2 = env.clone();
+    let specs: Vec<(usize, u64)> = (0..num_objects)
+        .map(|i| {
+            let start = i as u64 * rows_per_object;
+            let count = rows_per_object.min(trips - start);
+            (i, count)
+        })
+        .collect();
+    let results = pool.map(specs, move |(i, count)| {
+        let key = format!("{}/part-{:05}.csv", prefix_owned, i);
+        let data = taxi::generate_csv_object(seed, 1000 + i as u64, count);
+        let size = data.len() as u64;
+        env2.s3().put_object(INPUT_BUCKET, &key, data).expect("bucket exists");
+        (key, size)
+    });
+
+    let mut objects: Vec<(String, u64)> = results
+        .into_iter()
+        .map(|r| r.expect("generation must not panic"))
+        .collect();
+    objects.sort();
+    let total_bytes = objects.iter().map(|(_, s)| s).sum();
+
+    Dataset {
+        bucket: INPUT_BUCKET.to_string(),
+        prefix: prefix.to_string(),
+        objects,
+        total_bytes,
+        trips,
+        weather_key: WEATHER_KEY.to_string(),
+        seed,
+    }
+}
+
+/// Rebuild a manifest by listing the bucket (e.g. after a prior
+/// generation in the same process).
+pub fn load_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Option<Dataset> {
+    let listed = env.s3().list(INPUT_BUCKET, &format!("{prefix}/")).ok()?;
+    if listed.is_empty() {
+        return None;
+    }
+    let total_bytes = listed.iter().map(|(_, s)| s).sum();
+    Some(Dataset {
+        bucket: INPUT_BUCKET.to_string(),
+        prefix: prefix.to_string(),
+        objects: listed,
+        total_bytes,
+        trips,
+        weather_key: WEATHER_KEY.to_string(),
+        seed: env.config().seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FlintConfig;
+
+    fn weather_size(env: &SimEnv) -> u64 {
+        env.s3().head_object(INPUT_BUCKET, WEATHER_KEY).unwrap()
+    }
+
+    #[test]
+    fn generate_creates_manifest_and_objects() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = generate_taxi_dataset(&env, "trips", 3_000);
+        assert_eq!(ds.trips, 3_000);
+        assert!(ds.num_objects() >= 2, "test config uses small objects");
+        assert_eq!(ds.total_bytes, env.s3().bucket_bytes(INPUT_BUCKET) - weather_size(&env));
+        // Every manifest object exists with the declared size.
+        for (key, size) in &ds.objects {
+            assert_eq!(env.s3().head_object(INPUT_BUCKET, key).unwrap(), *size);
+        }
+        // Row count across objects matches.
+        let mut rows = 0u64;
+        for (key, _) in &ds.objects {
+            let (obj, _) = env
+                .s3()
+                .get_object(INPUT_BUCKET, key, env.flint_read_profile())
+                .unwrap();
+            rows += obj.split(|&b| b == b'\n').filter(|l| !l.is_empty()).count() as u64;
+        }
+        assert_eq!(rows, 3_000);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let env1 = SimEnv::new(FlintConfig::for_tests());
+        let env2 = SimEnv::new(FlintConfig::for_tests());
+        let d1 = generate_taxi_dataset(&env1, "trips", 1_000);
+        let d2 = generate_taxi_dataset(&env2, "trips", 1_000);
+        assert_eq!(d1.objects, d2.objects);
+        let (a, _) = env1
+            .s3()
+            .get_object(INPUT_BUCKET, &d1.objects[0].0, env1.flint_read_profile())
+            .unwrap();
+        let (b, _) = env2
+            .s3()
+            .get_object(INPUT_BUCKET, &d2.objects[0].0, env2.flint_read_profile())
+            .unwrap();
+        assert_eq!(a.bytes(), b.bytes());
+    }
+
+    #[test]
+    fn load_rebuilds_manifest() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = generate_taxi_dataset(&env, "trips", 1_000);
+        let loaded = load_dataset(&env, "trips", 1_000).unwrap();
+        assert_eq!(loaded.objects, ds.objects);
+        assert!(load_dataset(&env, "nothing-here", 0).is_none());
+    }
+}

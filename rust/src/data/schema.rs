@@ -1,0 +1,270 @@
+//! The trip-record schema: a simplified NYC TLC CSV layout carrying every
+//! field the paper's queries touch, plus the landmark geometry (Goldman
+//! Sachs and Citigroup headquarters) that Q1–Q3 filter on.
+
+use crate::data::chrono::{format_datetime, parse_datetime};
+
+/// CSV column order (header-less files, like the TLC drops of the era):
+///
+/// ```text
+/// taxi_type,pickup_datetime,dropoff_datetime,passenger_count,
+/// trip_distance,pickup_longitude,pickup_latitude,dropoff_longitude,
+/// dropoff_latitude,payment_type,fare_amount,tip_amount,total_amount
+/// ```
+pub const NUM_COLUMNS: usize = 13;
+
+/// Taxi colors (Q5).
+pub const TAXI_YELLOW: u8 = 0;
+pub const TAXI_GREEN: u8 = 1;
+
+/// TLC payment codes (Q4): 1 = credit card, 2 = cash (others exist in the
+/// real data — dispute, no-charge — and appear rarely here too).
+pub const PAYMENT_CREDIT: u8 = 1;
+pub const PAYMENT_CASH: u8 = 2;
+pub const PAYMENT_OTHER: u8 = 3;
+
+/// One parsed trip record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TripRecord {
+    pub taxi_type: u8,
+    pub pickup_ts: i64,
+    pub dropoff_ts: i64,
+    pub passenger_count: u8,
+    pub trip_distance: f32,
+    pub pickup_lon: f32,
+    pub pickup_lat: f32,
+    pub dropoff_lon: f32,
+    pub dropoff_lat: f32,
+    pub payment_type: u8,
+    pub fare_amount: f32,
+    pub tip_amount: f32,
+    pub total_amount: f32,
+}
+
+impl TripRecord {
+    /// Serialize as one CSV line (no trailing newline).
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{:.2},{:.6},{:.6},{:.6},{:.6},{},{:.2},{:.2},{:.2}",
+            self.taxi_type,
+            format_datetime(self.pickup_ts),
+            format_datetime(self.dropoff_ts),
+            self.passenger_count,
+            self.trip_distance,
+            self.pickup_lon,
+            self.pickup_lat,
+            self.dropoff_lon,
+            self.dropoff_lat,
+            self.payment_type,
+            self.fare_amount,
+            self.tip_amount,
+            self.total_amount
+        )
+    }
+
+    /// Parse one CSV line. Returns `None` for malformed rows (the real
+    /// TLC data has them; engines must skip, not crash).
+    pub fn parse_csv(line: &[u8]) -> Option<TripRecord> {
+        let mut fields = [b"" as &[u8]; NUM_COLUMNS];
+        let mut n = 0;
+        for part in line.split(|&b| b == b',') {
+            if n >= NUM_COLUMNS {
+                return None; // too many columns
+            }
+            fields[n] = part;
+            n += 1;
+        }
+        if n != NUM_COLUMNS {
+            return None;
+        }
+        Some(TripRecord {
+            taxi_type: parse_u8(fields[0])?,
+            pickup_ts: parse_datetime(fields[1])?,
+            dropoff_ts: parse_datetime(fields[2])?,
+            passenger_count: parse_u8(fields[3])?,
+            trip_distance: parse_f32(fields[4])?,
+            pickup_lon: parse_f32(fields[5])?,
+            pickup_lat: parse_f32(fields[6])?,
+            dropoff_lon: parse_f32(fields[7])?,
+            dropoff_lat: parse_f32(fields[8])?,
+            payment_type: parse_u8(fields[9])?,
+            fare_amount: parse_f32(fields[10])?,
+            tip_amount: parse_f32(fields[11])?,
+            total_amount: parse_f32(fields[12])?,
+        })
+    }
+}
+
+#[inline]
+pub fn parse_u8(b: &[u8]) -> Option<u8> {
+    if b.is_empty() || b.len() > 3 {
+        return None;
+    }
+    let mut v: u32 = 0;
+    for &c in b {
+        if !c.is_ascii_digit() {
+            return None;
+        }
+        v = v * 10 + (c - b'0') as u32;
+    }
+    u8::try_from(v).ok()
+}
+
+/// Fast decimal parse for the fixed-precision floats the generator emits
+/// (sign, digits, optional fraction). Falls back to `str::parse` for
+/// anything fancier (exponents).
+#[inline]
+pub fn parse_f32(b: &[u8]) -> Option<f32> {
+    let (neg, rest) = match b.first() {
+        Some(b'-') => (true, &b[1..]),
+        _ => (false, b),
+    };
+    if rest.is_empty() {
+        return None;
+    }
+    let mut int_part: i64 = 0;
+    let mut i = 0;
+    while i < rest.len() && rest[i].is_ascii_digit() {
+        int_part = int_part * 10 + (rest[i] - b'0') as i64;
+        if int_part > 1 << 52 {
+            return std::str::from_utf8(b).ok()?.parse().ok();
+        }
+        i += 1;
+    }
+    let mut value = int_part as f64;
+    if i < rest.len() {
+        if rest[i] != b'.' {
+            return std::str::from_utf8(b).ok()?.parse().ok();
+        }
+        i += 1;
+        let mut frac: i64 = 0;
+        let mut scale: f64 = 1.0;
+        while i < rest.len() {
+            if !rest[i].is_ascii_digit() {
+                return std::str::from_utf8(b).ok()?.parse().ok();
+            }
+            frac = frac * 10 + (rest[i] - b'0') as i64;
+            scale *= 10.0;
+            i += 1;
+        }
+        value += frac as f64 / scale;
+    }
+    Some(if neg { -value as f32 } else { value as f32 })
+}
+
+/// An axis-aligned geo bounding box (the paper filters "by geo
+/// coordinates"; we use tight boxes around the buildings).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeoBox {
+    pub lon_min: f32,
+    pub lon_max: f32,
+    pub lat_min: f32,
+    pub lat_max: f32,
+}
+
+impl GeoBox {
+    #[inline]
+    pub fn contains(&self, lon: f32, lat: f32) -> bool {
+        lon >= self.lon_min && lon <= self.lon_max && lat >= self.lat_min && lat <= self.lat_max
+    }
+
+    /// A box that accepts everything (used when a query has no geo filter).
+    pub const EVERYWHERE: GeoBox = GeoBox {
+        lon_min: f32::NEG_INFINITY,
+        lon_max: f32::INFINITY,
+        lat_min: f32::NEG_INFINITY,
+        lat_max: f32::INFINITY,
+    };
+}
+
+/// Goldman Sachs HQ, 200 West St (Q1, Q3).
+pub const GOLDMAN: GeoBox = GeoBox {
+    lon_min: -74.0156,
+    lon_max: -74.0138,
+    lat_min: 40.7139,
+    lat_max: 40.7155,
+};
+
+/// Citigroup HQ, 388 Greenwich St (Q2).
+pub const CITIGROUP: GeoBox = GeoBox {
+    lon_min: -74.0124,
+    lon_max: -74.0106,
+    lat_min: 40.7189,
+    lat_max: 40.7205,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chrono::epoch_from_datetime;
+
+    fn sample() -> TripRecord {
+        TripRecord {
+            taxi_type: TAXI_YELLOW,
+            pickup_ts: epoch_from_datetime(2013, 5, 14, 17, 5, 0),
+            dropoff_ts: epoch_from_datetime(2013, 5, 14, 17, 30, 0),
+            passenger_count: 2,
+            trip_distance: 3.25,
+            pickup_lon: -73.9857,
+            pickup_lat: 40.7484,
+            dropoff_lon: -74.0144,
+            dropoff_lat: 40.7147,
+            payment_type: PAYMENT_CREDIT,
+            fare_amount: 14.5,
+            tip_amount: 2.9,
+            total_amount: 17.4,
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = sample();
+        let line = r.to_csv();
+        let back = TripRecord::parse_csv(line.as_bytes()).unwrap();
+        assert_eq!(back.taxi_type, r.taxi_type);
+        assert_eq!(back.pickup_ts, r.pickup_ts);
+        assert_eq!(back.dropoff_ts, r.dropoff_ts);
+        assert!((back.dropoff_lon - r.dropoff_lon).abs() < 1e-4);
+        assert!((back.tip_amount - r.tip_amount).abs() < 1e-4);
+        assert_eq!(back.payment_type, r.payment_type);
+    }
+
+    #[test]
+    fn malformed_rows_rejected() {
+        assert!(TripRecord::parse_csv(b"").is_none());
+        assert!(TripRecord::parse_csv(b"1,2,3").is_none());
+        let r = sample().to_csv();
+        let too_many = format!("{r},extra");
+        assert!(TripRecord::parse_csv(too_many.as_bytes()).is_none());
+        let bad_date = r.replace("2013-05-14 17:05:00", "not-a-date-at-all!");
+        assert!(TripRecord::parse_csv(bad_date.as_bytes()).is_none());
+    }
+
+    #[test]
+    fn geo_boxes() {
+        // The sample drops off at Goldman.
+        let r = sample();
+        assert!(GOLDMAN.contains(r.dropoff_lon, r.dropoff_lat));
+        assert!(!CITIGROUP.contains(r.dropoff_lon, r.dropoff_lat));
+        assert!(GeoBox::EVERYWHERE.contains(0.0, 0.0));
+        assert!(!GOLDMAN.contains(-74.0144, 40.7200), "outside latitude band");
+        // Goldman and Citigroup boxes are disjoint.
+        assert!(GOLDMAN.lat_max < CITIGROUP.lat_min);
+    }
+
+    #[test]
+    fn numeric_parsers() {
+        assert_eq!(parse_u8(b"0"), Some(0));
+        assert_eq!(parse_u8(b"255"), Some(255));
+        assert_eq!(parse_u8(b"256"), None);
+        assert_eq!(parse_u8(b"1a"), None);
+        assert_eq!(parse_u8(b""), None);
+        assert!((parse_f32(b"3.25").unwrap() - 3.25).abs() < 1e-6);
+        assert!((parse_f32(b"-74.0144").unwrap() + 74.0144).abs() < 1e-4);
+        assert_eq!(parse_f32(b"12").unwrap(), 12.0);
+        assert_eq!(parse_f32(b""), None);
+        assert_eq!(parse_f32(b"x"), None);
+        // exponent falls back to std parse
+        assert_eq!(parse_f32(b"1e2"), Some(100.0));
+    }
+}

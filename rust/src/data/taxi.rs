@@ -1,0 +1,332 @@
+//! Synthetic NYC TLC trip generator.
+//!
+//! The paper's 215 GB / ~1.3 B-trip dataset is not redistributable (and
+//! would not fit here); this generator produces TLC-schema CSV with the
+//! *structure* the seven evaluation queries measure (DESIGN.md §2):
+//!
+//! * commute-shaped hourly drop-off profile, with dedicated hot spots at
+//!   the Goldman Sachs and Citigroup headquarters (Q1–Q3),
+//! * credit-card share rising over the 2009→2016 months (Q4 — Schneider's
+//!   famous cash→credit crossover),
+//! * green cabs appearing in Aug 2013 and growing (Q5),
+//! * daily volume coupled to the synthetic weather table (Q6),
+//! * generous tippers (> $10) concentrated at the banks (Q3).
+//!
+//! Generation is deterministic per `(seed, object_index)` and
+//! parallelizes across objects.
+
+use crate::data::chrono::{days_from_civil, epoch_from_datetime, month_index};
+use crate::data::schema::{
+    TripRecord, CITIGROUP, GOLDMAN, PAYMENT_CASH, PAYMENT_CREDIT, PAYMENT_OTHER, TAXI_GREEN,
+    TAXI_YELLOW,
+};
+use crate::data::weather::WeatherTable;
+use crate::util::rng::Pcg64;
+
+/// Fraction of trips that drop off at each bank hot spot.
+pub const P_GOLDMAN: f64 = 0.0020;
+pub const P_CITIGROUP: f64 = 0.0018;
+
+/// Hour-of-day weights for ordinary trips (sums to anything; sampled via
+/// cumulative table). Two commute peaks plus an evening shoulder.
+const HOUR_WEIGHTS: [f64; 24] = [
+    1.7, 1.1, 0.8, 0.6, 0.5, 0.7, 1.5, 2.8, 3.6, 3.0, 2.6, 2.6, 2.8, 2.7, 2.8, 3.0, 3.2, 3.8,
+    4.2, 4.0, 3.6, 3.2, 2.8, 2.2,
+];
+
+/// Hour weights for bank drop-offs: strongly morning-peaked (people
+/// arriving at work) with a lunch shoulder — gives Q1/Q2 a distinctive,
+/// assertable shape.
+const BANK_HOUR_WEIGHTS: [f64; 24] = [
+    0.2, 0.1, 0.1, 0.1, 0.2, 0.8, 2.5, 5.5, 7.0, 5.0, 2.5, 2.0, 2.2, 1.8, 1.5, 1.2, 1.0, 1.2,
+    1.5, 1.6, 1.2, 0.8, 0.5, 0.3,
+];
+
+/// Trip generator: draws independent trips, deterministic per stream.
+pub struct TripGenerator {
+    rng: Pcg64,
+    weather: WeatherTable,
+    hour_cum: [f64; 24],
+    bank_hour_cum: [f64; 24],
+    first_day: i64,
+    num_days: i64,
+}
+
+fn cumulative(w: &[f64; 24]) -> [f64; 24] {
+    let mut cum = [0.0; 24];
+    let mut acc = 0.0;
+    for (i, &x) in w.iter().enumerate() {
+        acc += x;
+        cum[i] = acc;
+    }
+    cum
+}
+
+impl TripGenerator {
+    pub fn new(seed: u64, stream: u64) -> TripGenerator {
+        TripGenerator {
+            rng: Pcg64::new(seed, stream),
+            weather: WeatherTable::generate(seed),
+            hour_cum: cumulative(&HOUR_WEIGHTS),
+            bank_hour_cum: cumulative(&BANK_HOUR_WEIGHTS),
+            first_day: days_from_civil(2009, 1, 1),
+            num_days: days_from_civil(2016, 6, 30) - days_from_civil(2009, 1, 1) + 1,
+        }
+    }
+
+    /// Generate one trip.
+    pub fn next_trip(&mut self) -> TripRecord {
+        // Day: uniform over the range, thinned by weather demand so rainy
+        // days genuinely have fewer trips (the Q6 signal).
+        let day = loop {
+            let d = self.rng.range_i64(0, self.num_days);
+            if self.rng.f64() < self.weather.demand_multiplier(d as i32) {
+                break d;
+            }
+        };
+        let day_abs = self.first_day + day;
+        let (y, mo, dd) = crate::data::chrono::civil_from_days(day_abs);
+
+        // Destination class.
+        let roll = self.rng.f64();
+        let (dropoff_lon, dropoff_lat, at_bank) = if roll < P_GOLDMAN {
+            (
+                self.rng.range_f64(GOLDMAN.lon_min as f64, GOLDMAN.lon_max as f64) as f32,
+                self.rng.range_f64(GOLDMAN.lat_min as f64, GOLDMAN.lat_max as f64) as f32,
+                true,
+            )
+        } else if roll < P_GOLDMAN + P_CITIGROUP {
+            (
+                self.rng.range_f64(CITIGROUP.lon_min as f64, CITIGROUP.lon_max as f64) as f32,
+                self.rng.range_f64(CITIGROUP.lat_min as f64, CITIGROUP.lat_max as f64) as f32,
+                true,
+            )
+        } else {
+            // Manhattan-ish scatter; a slice of these will land in the
+            // boxes only with negligible probability (the boxes are tiny).
+            (
+                (-73.98 + self.rng.normal() * 0.035) as f32,
+                (40.75 + self.rng.normal() * 0.045) as f32,
+                false,
+            )
+        };
+
+        let hour_cum = if at_bank { &self.bank_hour_cum } else { &self.hour_cum };
+        let hour = self.rng.pick_cumulative(hour_cum) as u32;
+        let minute = self.rng.below(60) as u32;
+        let second = self.rng.below(60) as u32;
+        let dropoff_ts = epoch_from_datetime(y, mo, dd, hour, minute, second);
+
+        let trip_minutes = 4.0 + self.rng.exp(1.0 / 9.0).min(90.0);
+        let pickup_ts = dropoff_ts - (trip_minutes * 60.0) as i64;
+        let trip_distance = (0.4 + trip_minutes * self.rng.range_f64(0.12, 0.35)) as f32;
+
+        // Pickup scatter.
+        let pickup_lon = (-73.97 + self.rng.normal() * 0.03) as f32;
+        let pickup_lat = (40.75 + self.rng.normal() * 0.04) as f32;
+
+        // Green cabs exist only from Aug 2013, growing to ~22% share.
+        let m_idx = month_index(dropoff_ts);
+        let green_start = (2013 - 2009) * 12 + 7; // Aug 2013
+        let taxi_type = if m_idx >= green_start {
+            let ramp = ((m_idx - green_start) as f64 / 36.0).min(1.0);
+            if self.rng.chance(0.22 * ramp) {
+                TAXI_GREEN
+            } else {
+                TAXI_YELLOW
+            }
+        } else {
+            TAXI_YELLOW
+        };
+
+        // Credit share rises linearly ~32% (2009) -> ~62% (2016).
+        let p_credit = 0.32 + 0.30 * (m_idx as f64 / 89.0).clamp(0.0, 1.0);
+        let pay_roll = self.rng.f64();
+        let payment_type = if pay_roll < p_credit {
+            PAYMENT_CREDIT
+        } else if pay_roll < 0.985 {
+            PAYMENT_CASH
+        } else {
+            PAYMENT_OTHER
+        };
+
+        let fare = (2.5 + trip_distance as f64 * 2.5 + trip_minutes * 0.35) as f32;
+        // Tips: card tips recorded; bank drop-offs tip generously — Q3's
+        // "who are the generous tippers?" needs > $10 tips to exist and be
+        // concentrated at Goldman.
+        let tip_amount = if payment_type == PAYMENT_CREDIT {
+            let base = fare as f64 * self.rng.range_f64(0.08, 0.30);
+            let generous = if at_bank { self.rng.chance(0.18) } else { self.rng.chance(0.01) };
+            let tip = if generous { base + self.rng.range_f64(8.0, 30.0) } else { base };
+            tip as f32
+        } else {
+            0.0
+        };
+
+        TripRecord {
+            taxi_type,
+            pickup_ts,
+            dropoff_ts,
+            passenger_count: 1 + self.rng.below(5) as u8,
+            trip_distance,
+            pickup_lon,
+            pickup_lat,
+            dropoff_lon,
+            dropoff_lat,
+            payment_type,
+            fare_amount: fare,
+            tip_amount,
+            total_amount: fare + tip_amount,
+        }
+    }
+
+    /// The weather table this generator couples to.
+    pub fn weather(&self) -> &WeatherTable {
+        &self.weather
+    }
+}
+
+/// Render `count` trips from `(seed, stream)` as CSV bytes.
+pub fn generate_csv_object(seed: u64, stream: u64, count: u64) -> Vec<u8> {
+    let mut g = TripGenerator::new(seed, stream);
+    // ~131 bytes/row observed; reserve generously to avoid re-allocs.
+    let mut out = Vec::with_capacity((count as usize) * 140);
+    for _ in 0..count {
+        let trip = g.next_trip();
+        out.extend_from_slice(trip.to_csv().as_bytes());
+        out.push(b'\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::chrono::hour_of_day;
+
+    #[test]
+    fn deterministic_per_stream() {
+        let a = generate_csv_object(42, 0, 100);
+        let b = generate_csv_object(42, 0, 100);
+        assert_eq!(a, b);
+        let c = generate_csv_object(42, 1, 100);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn all_rows_parse_and_are_in_range() {
+        let csv = generate_csv_object(42, 0, 2_000);
+        let mut n = 0;
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).expect("generated row must parse");
+            let m = month_index(r.dropoff_ts);
+            assert!((0..=89).contains(&m), "month index {m}");
+            assert!(r.pickup_ts < r.dropoff_ts);
+            assert!(r.total_amount >= r.fare_amount);
+            n += 1;
+        }
+        assert_eq!(n, 2_000);
+    }
+
+    #[test]
+    fn hotspots_present_at_expected_rate() {
+        let csv = generate_csv_object(7, 3, 50_000);
+        let mut goldman = 0u32;
+        let mut citi = 0u32;
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).unwrap();
+            if GOLDMAN.contains(r.dropoff_lon, r.dropoff_lat) {
+                goldman += 1;
+            }
+            if CITIGROUP.contains(r.dropoff_lon, r.dropoff_lat) {
+                citi += 1;
+            }
+        }
+        // ~100 and ~90 expected on 50k; allow generous slack.
+        assert!((50..200).contains(&goldman), "goldman={goldman}");
+        assert!((40..180).contains(&citi), "citi={citi}");
+    }
+
+    #[test]
+    fn bank_dropoffs_morning_peaked() {
+        let csv = generate_csv_object(7, 4, 200_000);
+        let mut bank_hours = [0u32; 24];
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).unwrap();
+            if GOLDMAN.contains(r.dropoff_lon, r.dropoff_lat) {
+                bank_hours[hour_of_day(r.dropoff_ts) as usize] += 1;
+            }
+        }
+        let morning: u32 = bank_hours[7..10].iter().sum();
+        let night: u32 = bank_hours[0..5].iter().sum();
+        assert!(morning > night * 3, "morning={morning} night={night}");
+    }
+
+    #[test]
+    fn credit_share_rises_over_time() {
+        let csv = generate_csv_object(11, 5, 100_000);
+        let (mut early_credit, mut early_n, mut late_credit, mut late_n) = (0u32, 0u32, 0u32, 0u32);
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).unwrap();
+            let m = month_index(r.dropoff_ts);
+            if m < 24 {
+                early_n += 1;
+                if r.payment_type == PAYMENT_CREDIT {
+                    early_credit += 1;
+                }
+            } else if m >= 66 {
+                late_n += 1;
+                if r.payment_type == PAYMENT_CREDIT {
+                    late_credit += 1;
+                }
+            }
+        }
+        let early = early_credit as f64 / early_n as f64;
+        let late = late_credit as f64 / late_n as f64;
+        assert!(late > early + 0.15, "early={early:.2} late={late:.2}");
+    }
+
+    #[test]
+    fn green_cabs_only_after_aug_2013() {
+        let csv = generate_csv_object(11, 6, 100_000);
+        let green_start = (2013 - 2009) * 12 + 7;
+        let mut green_after = 0u32;
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).unwrap();
+            if r.taxi_type == TAXI_GREEN {
+                assert!(month_index(r.dropoff_ts) >= green_start, "green cab before Aug 2013");
+                green_after += 1;
+            }
+        }
+        assert!(green_after > 1000, "green cabs exist: {green_after}");
+    }
+
+    #[test]
+    fn generous_tips_concentrated_at_banks() {
+        let csv = generate_csv_object(13, 7, 200_000);
+        let (mut bank_big, mut bank_n, mut other_big, mut other_n) = (0u32, 0u32, 0u32, 0u32);
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).unwrap();
+            let at_bank = GOLDMAN.contains(r.dropoff_lon, r.dropoff_lat)
+                || CITIGROUP.contains(r.dropoff_lon, r.dropoff_lat);
+            let big = r.tip_amount > 10.0;
+            if at_bank {
+                bank_n += 1;
+                if big {
+                    bank_big += 1;
+                }
+            } else {
+                other_n += 1;
+                if big {
+                    other_big += 1;
+                }
+            }
+        }
+        let bank_rate = bank_big as f64 / bank_n.max(1) as f64;
+        let other_rate = other_big as f64 / other_n.max(1) as f64;
+        assert!(
+            bank_rate > other_rate * 2.0,
+            "bank_rate={bank_rate:.3} other_rate={other_rate:.3}"
+        );
+    }
+}

@@ -1,0 +1,181 @@
+//! Synthetic daily precipitation for Central Park, 2009-01-01 …
+//! 2016-06-30 — the side table Q6 joins against ("do people take the taxi
+//! more when it rains?"). The paper uses NOAA daily observations; this
+//! generator reproduces the relevant statistics: ~30% of days have
+//! measurable precipitation, amounts are roughly exponential, and wet
+//! days *reduce* trip volume slightly (the generator couples trip counts
+//! to this table so Q6 has a real signal to find).
+
+use crate::data::chrono::days_from_civil;
+use crate::util::rng::Pcg64;
+
+/// Number of days covered (2009-01-01 .. 2016-06-30 inclusive).
+pub fn num_days() -> usize {
+    (days_from_civil(2016, 6, 30) - days_from_civil(2009, 1, 1) + 1) as usize
+}
+
+/// The daily precipitation table, indexed by day-index (days since
+/// 2009-01-01).
+#[derive(Debug, Clone)]
+pub struct WeatherTable {
+    /// Daily precipitation in inches.
+    pub precip: Vec<f32>,
+}
+
+/// Precipitation histogram buckets used by Q6 (inches):
+/// 0: dry (0), 1: trace (<0.1), 2: light (<0.25), 3: moderate (<0.5),
+/// 4: heavy (<1.0), 5: extreme (>=1.0).
+pub const PRECIP_BUCKETS: usize = 6;
+
+pub fn precip_bucket(inches: f32) -> i32 {
+    if inches <= 0.0 {
+        0
+    } else if inches < 0.1 {
+        1
+    } else if inches < 0.25 {
+        2
+    } else if inches < 0.5 {
+        3
+    } else if inches < 1.0 {
+        4
+    } else {
+        5
+    }
+}
+
+impl WeatherTable {
+    /// Deterministic table from a seed.
+    pub fn generate(seed: u64) -> WeatherTable {
+        let mut rng = Pcg64::new(seed, 4242);
+        let n = num_days();
+        let mut precip = Vec::with_capacity(n);
+        for day in 0..n {
+            // Wet-day probability with a mild seasonal swing (wetter
+            // spring/summer storms).
+            let season = (day as f64 / 365.25 * std::f64::consts::TAU).sin();
+            let p_wet = 0.30 + 0.05 * season;
+            let amount = if rng.chance(p_wet) {
+                // Exponential-ish amounts, mean ~0.3in, capped at 4in.
+                (rng.exp(1.0 / 0.3)).min(4.0) as f32
+            } else {
+                0.0
+            };
+            precip.push(amount);
+        }
+        WeatherTable { precip }
+    }
+
+    pub fn get(&self, day_index: i32) -> f32 {
+        if day_index < 0 || day_index as usize >= self.precip.len() {
+            0.0
+        } else {
+            self.precip[day_index as usize]
+        }
+    }
+
+    pub fn bucket(&self, day_index: i32) -> i32 {
+        precip_bucket(self.get(day_index))
+    }
+
+    /// Trip-volume multiplier for a day: rain suppresses trips a little
+    /// (this is what Q6 measures; the sign matters more than magnitude).
+    pub fn demand_multiplier(&self, day_index: i32) -> f64 {
+        let p = self.get(day_index) as f64;
+        (1.0 - 0.15 * (p / (p + 0.5))).max(0.5)
+    }
+
+    /// Serialize as CSV `day_index,precip` (the broadcast side table the
+    /// Q6 executors read from S3).
+    pub fn to_csv(&self) -> Vec<u8> {
+        let mut out = String::with_capacity(self.precip.len() * 12);
+        for (i, p) in self.precip.iter().enumerate() {
+            out.push_str(&format!("{i},{p:.3}\n"));
+        }
+        out.into_bytes()
+    }
+
+    /// Parse the CSV form back.
+    pub fn from_csv(data: &[u8]) -> Option<WeatherTable> {
+        let text = std::str::from_utf8(data).ok()?;
+        let mut precip = Vec::new();
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let (idx, val) = line.split_once(',')?;
+            let idx: usize = idx.parse().ok()?;
+            if idx != precip.len() {
+                return None; // must be dense and ordered
+            }
+            precip.push(val.parse().ok()?);
+        }
+        Some(WeatherTable { precip })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_paper_date_range() {
+        // 2009-2015 full years (2557 days incl leaps) + Jan-Jun 2016 (182).
+        assert_eq!(num_days(), 2738);
+        let w = WeatherTable::generate(7);
+        assert_eq!(w.precip.len(), 2738);
+    }
+
+    #[test]
+    fn wet_day_fraction_realistic() {
+        let w = WeatherTable::generate(7);
+        let wet = w.precip.iter().filter(|&&p| p > 0.0).count();
+        let frac = wet as f64 / w.precip.len() as f64;
+        assert!((0.2..0.4).contains(&frac), "wet fraction {frac}");
+    }
+
+    #[test]
+    fn buckets_partition_the_range() {
+        assert_eq!(precip_bucket(0.0), 0);
+        assert_eq!(precip_bucket(0.05), 1);
+        assert_eq!(precip_bucket(0.2), 2);
+        assert_eq!(precip_bucket(0.4), 3);
+        assert_eq!(precip_bucket(0.9), 4);
+        assert_eq!(precip_bucket(2.5), 5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = WeatherTable::generate(99);
+        let b = WeatherTable::generate(99);
+        assert_eq!(a.precip, b.precip);
+        let c = WeatherTable::generate(100);
+        assert_ne!(a.precip, c.precip);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let w = WeatherTable::generate(5);
+        let csv = w.to_csv();
+        let back = WeatherTable::from_csv(&csv).unwrap();
+        assert_eq!(back.precip.len(), w.precip.len());
+        for (a, b) in w.precip.iter().zip(back.precip.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rain_reduces_demand() {
+        let w = WeatherTable::generate(5);
+        let dry_day = w.precip.iter().position(|&p| p == 0.0).unwrap() as i32;
+        let wet_day = w.precip.iter().position(|&p| p > 0.5).unwrap() as i32;
+        assert!(w.demand_multiplier(dry_day) > w.demand_multiplier(wet_day));
+        assert_eq!(w.demand_multiplier(dry_day), 1.0);
+    }
+
+    #[test]
+    fn out_of_range_days_dry() {
+        let w = WeatherTable::generate(5);
+        assert_eq!(w.get(-1), 0.0);
+        assert_eq!(w.get(1_000_000), 0.0);
+    }
+}

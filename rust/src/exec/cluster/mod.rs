@@ -1,0 +1,110 @@
+//! The cluster baselines: Scala Spark and PySpark on an always-on
+//! 11 × m4.2xlarge Databricks-style deployment (80 vCores) — the
+//! comparison conditions of Table I.
+//!
+//! Differences from Flint, mirroring the paper's analysis:
+//! * S3 reads go through the Hadoop-S3A-class profile (slower per stream
+//!   than Flint's boto — the paper's Q0 finding),
+//! * PySpark additionally pays a per-record JVM→Python pipe overhead
+//!   ("every input record passes from the JVM to the Python
+//!   interpreter"),
+//! * shuffle is cluster-local (memory/disk/network), not SQS,
+//! * executors are long-running: no cold starts, no per-invocation
+//!   billing — instead the whole cluster bills by the hour, idle or not.
+
+use crate::compute::queries::QueryId;
+use crate::data::Dataset;
+use crate::exec::driver::{run_plan, RunParams};
+use crate::exec::executor::IoMode;
+use crate::exec::flint::{host_parallelism, report};
+use crate::exec::shuffle::{MemoryShuffle, Transport};
+use crate::exec::{Engine, QueryReport};
+use crate::plan::{kernel_plan, Action, Rdd};
+use crate::services::SimEnv;
+use anyhow::{Context, Result};
+
+/// Which language binding the baseline models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// Scala Spark: native JVM execution.
+    Spark,
+    /// PySpark: per-record pipe overhead on top.
+    PySpark,
+}
+
+impl ClusterMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterMode::Spark => "spark",
+            ClusterMode::PySpark => "pyspark",
+        }
+    }
+}
+
+pub struct ClusterEngine {
+    env: SimEnv,
+    mode: ClusterMode,
+}
+
+impl ClusterEngine {
+    pub fn new(env: SimEnv, mode: ClusterMode) -> ClusterEngine {
+        ClusterEngine { env, mode }
+    }
+
+    pub fn env(&self) -> &SimEnv {
+        &self.env
+    }
+
+    fn params(&self) -> RunParams {
+        RunParams {
+            mode: match self.mode {
+                ClusterMode::Spark => IoMode::Spark,
+                ClusterMode::PySpark => IoMode::PySpark,
+            },
+            transport: Transport::Memory(MemoryShuffle::new()),
+            slots: self.env.config().cluster.cores,
+            lambda: false,
+            host_parallelism: host_parallelism(),
+        }
+    }
+
+    fn run(&self, plan: &crate::plan::PhysicalPlan) -> Result<QueryReport> {
+        self.env.s3().create_bucket(crate::data::OUTPUT_BUCKET);
+        let before = self.env.cost().snapshot();
+        // The cluster executes the same physical plan; Spark's kernels are
+        // the native Rust path (no PJRT — that's Flint's build pipeline).
+        let out = run_plan(&self.env, None, plan, &self.params())
+            .with_context(|| format!("{} plan {}", self.mode.name(), plan.plan_id))?;
+        // Per the paper: cost = query latency × per-second cluster price
+        // (startup excluded, favourably for Spark).
+        let usd = out.latency_s * self.env.config().pricing.cluster_per_hour / 3600.0;
+        self.env
+            .cost()
+            .charge(crate::cost::CostCategory::ClusterTime, usd);
+        let cost = self.env.cost().snapshot().since(&before);
+        Ok(report(self.mode.name(), plan.query, out, cost))
+    }
+
+    /// Generic RDD execution on the cluster.
+    pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
+        let cfg = self.env.config();
+        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |_, _| {
+            crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+        });
+        self.run(&plan)
+    }
+}
+
+impl Engine for ClusterEngine {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            ClusterMode::Spark => "spark",
+            ClusterMode::PySpark => "pyspark",
+        }
+    }
+
+    fn run_query(&self, query: QueryId, dataset: &Dataset) -> Result<QueryReport> {
+        let plan = kernel_plan(query, dataset, self.env.config());
+        self.run(&plan)
+    }
+}

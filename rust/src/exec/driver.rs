@@ -1,0 +1,410 @@
+//! The stage driver — the engine-agnostic core of the scheduler
+//! (`SchedulerBackend` in the paper's terms): executes a physical plan
+//! stage by stage with a barrier between stages, manages shuffle queue
+//! lifecycle, launches tasks, handles retries and executor chaining, and
+//! folds per-task timelines into the virtual-time stage makespan.
+
+use crate::compute::queries::QueryResult;
+use crate::compute::value::Value;
+use crate::exec::executor::{run_task, Emitted, ExecCtx, IoMode, TaskOutcome};
+use crate::exec::shuffle::{queue_name, Transport};
+use crate::plan::{
+    PhysicalPlan, ResumeState, Stage, StageInput, StageOutput, TaskDescriptor, TaskInput,
+    TaskOutput,
+};
+use crate::runtime::PjrtRuntime;
+use crate::services::SimEnv;
+use crate::simtime::{makespan, Component, Timeline};
+use anyhow::{anyhow, Result};
+
+/// Engine-specific run parameters.
+pub struct RunParams {
+    pub mode: IoMode,
+    pub transport: Transport,
+    /// Virtual concurrency slots (Lambda concurrency limit or cluster
+    /// cores) for the makespan model.
+    pub slots: usize,
+    /// Whether tasks run as Lambda invocations (cold starts, payload and
+    /// duration limits, GB-second billing).
+    pub lambda: bool,
+    /// Real worker threads driving the simulation.
+    pub host_parallelism: usize,
+}
+
+/// Merged result of a plan's final stage.
+#[derive(Debug, Clone)]
+pub enum ActionOut {
+    Count(u64),
+    KernelRows(Vec<(i64, f64, f64)>),
+    Values(Vec<Value>),
+    Saved(u64),
+}
+
+impl ActionOut {
+    /// Convert to the benchmark-comparable form (kernel queries only).
+    pub fn to_query_result(&self) -> Option<QueryResult> {
+        match self {
+            ActionOut::Count(n) => Some(QueryResult::Count(*n)),
+            ActionOut::KernelRows(rows) => {
+                let mut rows = rows.clone();
+                rows.sort_by_key(|(k, _, _)| *k);
+                Some(QueryResult::Buckets(rows))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Everything a plan run produces.
+#[derive(Debug)]
+pub struct RunOutput {
+    pub out: ActionOut,
+    /// Virtual query latency (Σ stage makespans + driver overhead).
+    pub latency_s: f64,
+    pub stage_latencies: Vec<f64>,
+    /// Component-wise sum over all tasks (where the time went).
+    pub timeline: Timeline,
+    pub tasks: u64,
+    pub invocations: u64,
+    pub retries: u64,
+    pub chains: u64,
+    pub shuffle_msgs: u64,
+    pub duplicates_dropped: u64,
+    pub rows: u64,
+}
+
+/// Per-task accumulated stats returned by the task worker.
+struct TaskStats {
+    duration_s: f64,
+    timeline: Timeline,
+    invocations: u64,
+    retries: u64,
+    chains: u64,
+    msgs_sent: u64,
+    msgs_received: u64,
+    duplicates_dropped: u64,
+    rows: u64,
+    emitted: Emitted,
+}
+
+const LAMBDA_FN: &str = "flint-exec";
+
+/// Execute a physical plan.
+pub fn run_plan(
+    env: &SimEnv,
+    runtime: Option<&PjrtRuntime>,
+    plan: &PhysicalPlan,
+    params: &RunParams,
+) -> Result<RunOutput> {
+    let cfg = env.config();
+    let ctx = ExecCtx {
+        env,
+        runtime,
+        plan,
+        transport: params.transport.clone(),
+        mode: params.mode,
+        time_limit_s: params.lambda.then_some(cfg.sim.lambda_time_limit_s),
+        chain_margin_s: cfg.sim.lambda_chain_margin_s,
+        memory_limit_bytes: if params.lambda {
+            env.lambda().memory_bytes()
+        } else {
+            // m4.2xlarge: 32 GiB over 8 task slots.
+            4 * 1024 * 1024 * 1024
+        },
+    };
+
+    let mut stage_latencies = Vec::new();
+    let mut merged_tl = Timeline::new();
+    let mut totals = RunOutput {
+        out: ActionOut::Count(0),
+        latency_s: 0.0,
+        stage_latencies: Vec::new(),
+        timeline: Timeline::new(),
+        tasks: 0,
+        invocations: 0,
+        retries: 0,
+        chains: 0,
+        shuffle_msgs: 0,
+        duplicates_dropped: 0,
+        rows: 0,
+    };
+    let mut final_emits: Vec<Emitted> = Vec::new();
+    let mut prev_stage_tasks = 0u32;
+
+    for stage in &plan.stages {
+        // Queue management is performed by the scheduler (§III-A):
+        // create this stage's output queues before launching it.
+        if let (StageOutput::Shuffle { partitions, .. }, Transport::Sqs) =
+            (&stage.output, &params.transport)
+        {
+            for p in 0..*partitions {
+                env.sqs().create_queue(&queue_name(&plan.plan_id, stage.id, p as u32));
+            }
+        }
+
+        let descriptors = build_descriptors(plan, stage, prev_stage_tasks);
+        let n_tasks = descriptors.len();
+        let results = crate::util::threadpool::scoped_map(
+            &descriptors,
+            params.host_parallelism,
+            |_, desc| run_task_with_recovery(&ctx, desc, params),
+        );
+
+        let mut durations = Vec::with_capacity(n_tasks);
+        for r in results {
+            let stats = r.map_err(|panic| anyhow!("task worker panicked: {panic}"))??;
+            durations.push(stats.duration_s);
+            merged_tl.merge(&stats.timeline);
+            totals.invocations += stats.invocations;
+            totals.retries += stats.retries;
+            totals.chains += stats.chains;
+            totals.shuffle_msgs += stats.msgs_sent + stats.msgs_received;
+            totals.duplicates_dropped += stats.duplicates_dropped;
+            totals.rows += stats.rows;
+            if matches!(stage.output, StageOutput::Act(_)) {
+                final_emits.push(stats.emitted);
+            }
+        }
+        totals.tasks += n_tasks as u64;
+
+        // Barrier: the stage finishes when its last task does.
+        let overhead = cfg.sim.scheduler_overhead_per_stage_s
+            + n_tasks as f64 * cfg.sim.scheduler_overhead_per_task_s;
+        merged_tl.charge(Component::Scheduler, overhead);
+        let stage_latency = makespan(&durations, params.slots) + overhead;
+        stage_latencies.push(stage_latency);
+
+        // Tear down the queues this stage consumed.
+        if let (StageInput::Shuffle { partitions }, Transport::Sqs) =
+            (&stage.input, &params.transport)
+        {
+            for p in 0..*partitions {
+                let _ = env
+                    .sqs()
+                    .delete_queue(&queue_name(&plan.plan_id, stage.id - 1, p as u32));
+            }
+        }
+        prev_stage_tasks = n_tasks as u32;
+    }
+
+    totals.out = merge_emits(final_emits)?;
+    totals.latency_s = stage_latencies.iter().sum();
+    totals.stage_latencies = stage_latencies;
+    totals.timeline = merged_tl;
+    Ok(totals)
+}
+
+fn build_descriptors(plan: &PhysicalPlan, stage: &Stage, prev_tasks: u32) -> Vec<TaskDescriptor> {
+    let output = match &stage.output {
+        StageOutput::Shuffle { partitions, .. } => {
+            TaskOutput::Shuffle { partitions: *partitions as u32 }
+        }
+        StageOutput::Act(crate::plan::Action::SaveAsText { bucket, prefix }) => {
+            TaskOutput::S3 { bucket: bucket.clone(), prefix: prefix.clone() }
+        }
+        StageOutput::Act(_) => TaskOutput::Driver,
+    };
+    let code_bytes = match &stage.compute {
+        crate::plan::StageCompute::DynScan { ops } => {
+            ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 1024
+        }
+        crate::plan::StageCompute::DynReduce { post_ops, .. } => {
+            post_ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 2048
+        }
+        // Kernel tasks reference a named AOT artifact, not shipped code.
+        _ => 256,
+    };
+    match &stage.input {
+        StageInput::S3Splits(splits) => splits
+            .iter()
+            .enumerate()
+            .map(|(i, split)| TaskDescriptor {
+                plan_id: plan.plan_id.clone(),
+                stage_id: stage.id,
+                task_index: i as u32,
+                attempt: 0,
+                input: TaskInput::Split(split.clone()),
+                output: output.clone(),
+                resume: None,
+                code_bytes,
+            })
+            .collect(),
+        StageInput::Shuffle { partitions } => (0..*partitions)
+            .map(|p| TaskDescriptor {
+                plan_id: plan.plan_id.clone(),
+                stage_id: stage.id,
+                task_index: p as u32,
+                attempt: 0,
+                input: TaskInput::ShufflePartition {
+                    partition: p as u32,
+                    map_tasks: prev_tasks,
+                },
+                output: output.clone(),
+                resume: None,
+                code_bytes,
+            })
+            .collect(),
+    }
+}
+
+/// Drive one task through chains and retries to completion.
+fn run_task_with_recovery(
+    ctx: &ExecCtx,
+    base: &TaskDescriptor,
+    params: &RunParams,
+) -> Result<TaskStats> {
+    let cfg = ctx.env.config();
+    let max_retries = cfg.flint.max_task_retries;
+    let mut stats = TaskStats {
+        duration_s: 0.0,
+        timeline: Timeline::new(),
+        invocations: 0,
+        retries: 0,
+        chains: 0,
+        msgs_sent: 0,
+        msgs_received: 0,
+        duplicates_dropped: 0,
+        rows: 0,
+        emitted: Emitted::Nothing,
+    };
+    let mut attempt: u32 = 0;
+    // Chain checkpoints survive retries: a failed link restarts from the
+    // last checkpoint, not from scratch (§III-B + §VI determinism).
+    let mut resume: Option<ResumeState> = None;
+
+    loop {
+        let mut desc = base.clone();
+        desc.attempt = attempt;
+        desc.resume = resume.clone();
+
+        let mut base_tl = Timeline::new();
+        let mut will_fail = false;
+        if params.lambda {
+            // Payload-split workaround (§III-B): oversized task state is
+            // staged through S3 instead of the invocation payload.
+            let mut payload_len = desc.payload_len();
+            if payload_len > cfg.sim.lambda_payload_limit_bytes {
+                ctx.env.metrics().incr("scheduler.payload_spills");
+                let spilled = desc.resume.as_ref().map(|r| r.partial.len()).unwrap_or(0) as u64
+                    + desc.code_bytes;
+                // Driver uploads, executor downloads.
+                let put_dt = ctx.env.config().sim.s3_first_byte_s
+                    + spilled as f64 / (ctx.env.config().sim.s3_put_mbps * 1e6);
+                let get_dt = ctx.env.flint_read_profile().read_time_s(spilled);
+                base_tl.charge(Component::S3Write, put_dt);
+                base_tl.charge(Component::S3Read, get_dt);
+                payload_len = 256; // the S3 reference that remains inline
+            }
+            let ticket = ctx
+                .env
+                .lambda()
+                .begin_invoke(LAMBDA_FN, payload_len)
+                .map_err(|e| anyhow!("invoke: {e}"))?;
+            base_tl.charge(
+                if ticket.cold { Component::ColdStart } else { Component::WarmStart },
+                ticket.start_latency_s,
+            );
+            will_fail = ticket.will_fail;
+            stats.invocations += 1;
+        }
+
+        let outcome = if will_fail {
+            // The container died underneath the executor; whatever it had
+            // received stays in flight until the visibility timeout. Our
+            // model nacks immediately via the retry path (reducers nack in
+            // their own failure handling; an early crash received nothing).
+            TaskOutcome::Failed { error: "injected invocation crash".into(), timeline: base_tl }
+        } else {
+            run_task(ctx, &desc, base_tl)
+        };
+
+        match outcome {
+            TaskOutcome::Done(resp) => {
+                if params.lambda {
+                    finish_lambda(ctx, &resp.timeline)?;
+                }
+                stats.duration_s += resp.timeline.total();
+                stats.timeline.merge(&resp.timeline);
+                stats.msgs_sent += resp.msgs_sent;
+                stats.msgs_received += resp.shuffle_msgs_received;
+                stats.duplicates_dropped += resp.duplicates_dropped;
+                stats.rows = resp.rows;
+                stats.emitted = resp.emitted;
+                return Ok(stats);
+            }
+            TaskOutcome::Chained { resume: r, resp } => {
+                if params.lambda {
+                    finish_lambda(ctx, &resp.timeline)?;
+                }
+                ctx.env.metrics().incr("scheduler.chains");
+                stats.duration_s += resp.timeline.total();
+                stats.timeline.merge(&resp.timeline);
+                stats.msgs_sent += resp.msgs_sent;
+                stats.msgs_received += resp.shuffle_msgs_received;
+                stats.chains += 1;
+                resume = Some(r);
+                // Same attempt continues in a fresh (warm) invocation.
+            }
+            TaskOutcome::Failed { error, timeline } => {
+                if params.lambda {
+                    // AWS bills the crashed invocation too.
+                    let billed = crate::exec::executor::billed_duration(&timeline)
+                        .min(ctx.env.config().sim.lambda_time_limit_s);
+                    let _ = ctx.env.lambda().finish_invoke(LAMBDA_FN, billed);
+                }
+                stats.duration_s += timeline.total();
+                stats.timeline.merge(&timeline);
+                stats.retries += 1;
+                ctx.env.metrics().incr("scheduler.task_retries");
+                attempt += 1;
+                if attempt > max_retries {
+                    return Err(anyhow!(
+                        "task s{}t{} failed after {} attempts: {error}",
+                        base.stage_id,
+                        base.task_index,
+                        attempt
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn finish_lambda(ctx: &ExecCtx, tl: &Timeline) -> Result<()> {
+    ctx.env
+        .lambda()
+        .finish_invoke(LAMBDA_FN, crate::exec::executor::billed_duration(tl))
+        .map_err(|e| anyhow!("lambda duration cap: {e} — chaining should have fired"))
+}
+
+fn merge_emits(emits: Vec<Emitted>) -> Result<ActionOut> {
+    let mut count: Option<u64> = None;
+    let mut rows: Vec<(i64, f64, f64)> = Vec::new();
+    let mut values: Vec<Value> = Vec::new();
+    let mut saved: Option<u64> = None;
+    let mut saw_rows = false;
+    for e in emits {
+        match e {
+            Emitted::Nothing => {}
+            Emitted::Count(n) => *count.get_or_insert(0) += n,
+            Emitted::KernelRows(mut r) => {
+                saw_rows = true;
+                rows.append(&mut r);
+            }
+            Emitted::Values(mut v) => values.append(&mut v),
+            Emitted::Saved(n) => *saved.get_or_insert(0) += n,
+        }
+    }
+    if let Some(n) = count {
+        return Ok(ActionOut::Count(n));
+    }
+    if let Some(n) = saved {
+        return Ok(ActionOut::Saved(n));
+    }
+    if saw_rows {
+        rows.sort_by_key(|(k, _, _)| *k);
+        return Ok(ActionOut::KernelRows(rows));
+    }
+    values.sort_by(|a, b| a.total_cmp(b));
+    Ok(ActionOut::Values(values))
+}

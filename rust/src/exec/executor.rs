@@ -1,0 +1,1078 @@
+//! The task executor — the code that runs "inside" a Lambda invocation
+//! (§III-A) or a cluster executor slot, shared by every engine via
+//! [`IoMode`].
+//!
+//! Responsibilities, mirroring the paper's executor:
+//! 1. deserialize the task, build the input iterator (S3 byte range or
+//!    shuffle partition),
+//! 2. run the stage's compute (kernel batches through PJRT/native, or
+//!    the dynamic op chain),
+//! 3. route output (hash-partitioned shuffle writes, driver response, or
+//!    S3 materialization),
+//! 4. **chain** before the Lambda duration cap: serialize read offset +
+//!    partial state back to the scheduler (§III-B),
+//! 5. respect the memory cap (flush shuffle buffers; error with the
+//!    paper's "increase the number of partitions" advice if aggregation
+//!    state can't fit).
+
+use crate::compute::batch::ColumnBatch;
+use crate::compute::csv::{fetch_range, SplitLines};
+use crate::compute::kernels::{prepare_keys, prepare_values, run_batch_native, HistAccum};
+use crate::compute::queries::KeySource;
+use crate::compute::value::Value;
+use crate::data::weather::WeatherTable;
+use crate::exec::shuffle::{
+    dyn_partition, kernel_partition, ShuffleReader, ShuffleRec, ShuffleWriter, Transport,
+};
+use crate::plan::{
+    Action, PhysicalPlan, ResumeState, StageCompute, StageOutput, TaskDescriptor, TaskInput,
+    TaskOutput,
+};
+use crate::runtime::PjrtRuntime;
+use crate::services::SimEnv;
+use crate::simtime::{Component, CpuStopwatch, Timeline};
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashSet};
+
+/// Which engine's I/O model this executor runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IoMode {
+    /// Flint: boto-class S3 reads, Lambda limits apply.
+    Flint,
+    /// Scala Spark on the cluster: Hadoop-S3A-class reads.
+    Spark,
+    /// PySpark on the cluster: Hadoop reads + per-record pipe overhead.
+    PySpark,
+}
+
+/// Execution context shared by all tasks of one stage.
+pub struct ExecCtx<'a> {
+    pub env: &'a SimEnv,
+    pub runtime: Option<&'a PjrtRuntime>,
+    pub plan: &'a PhysicalPlan,
+    pub transport: Transport,
+    pub mode: IoMode,
+    /// Virtual duration cap per invocation (Lambda limit); None on the
+    /// cluster.
+    pub time_limit_s: Option<f64>,
+    /// Chain this long before the cap.
+    pub chain_margin_s: f64,
+    /// Memory cap per executor.
+    pub memory_limit_bytes: u64,
+}
+
+impl<'a> ExecCtx<'a> {
+    fn read_profile(&self) -> crate::services::ReadProfile {
+        match self.mode {
+            IoMode::Flint => self.env.flint_read_profile(),
+            IoMode::Spark | IoMode::PySpark => self.env.spark_read_profile(),
+        }
+    }
+
+    fn compute_scale(&self) -> f64 {
+        self.env.config().sim.compute_scale
+    }
+
+    /// Should we checkpoint-and-chain now? Compares *billed* execution
+    /// time: AWS's duration cap starts at handler entry, after container
+    /// provisioning, so cold/warm start latency doesn't count against it.
+    fn should_chain(&self, tl: &Timeline) -> bool {
+        match self.time_limit_s {
+            Some(limit) => billed_duration(tl) >= limit - self.chain_margin_s,
+            None => false,
+        }
+    }
+}
+
+/// What a finished task hands back to the scheduler.
+#[derive(Debug, Clone)]
+pub enum Emitted {
+    Nothing,
+    Count(u64),
+    /// Kernel-path rows: (bucket, sum, count).
+    KernelRows(Vec<(i64, f64, f64)>),
+    /// Dyn-path collected values.
+    Values(Vec<Value>),
+    /// Objects written by saveAsTextFile.
+    Saved(u64),
+}
+
+/// Executor response (the paper: "a response containing a variety of
+/// diagnostic information").
+#[derive(Debug, Clone)]
+pub struct TaskResponse {
+    pub timeline: Timeline,
+    pub emitted: Emitted,
+    pub rows: u64,
+    pub malformed: u64,
+    pub msgs_sent: u64,
+    pub shuffle_msgs_received: u64,
+    pub duplicates_dropped: u64,
+}
+
+impl TaskResponse {
+    fn new() -> TaskResponse {
+        TaskResponse {
+            timeline: Timeline::new(),
+            emitted: Emitted::Nothing,
+            rows: 0,
+            malformed: 0,
+            msgs_sent: 0,
+            shuffle_msgs_received: 0,
+            duplicates_dropped: 0,
+        }
+    }
+}
+
+/// Task outcome, as seen by the scheduler.
+pub enum TaskOutcome {
+    Done(TaskResponse),
+    /// Hit the duration guard: partial response + resume state (§III-B).
+    Chained { resume: ResumeState, resp: TaskResponse },
+    /// Crashed (injected or real); timeline covers what was consumed.
+    Failed { error: String, timeline: Timeline },
+}
+
+/// Run one task attempt. `start_latency` (cold/warm start) is already
+/// charged by the caller into `base_timeline`.
+pub fn run_task(ctx: &ExecCtx, task: &TaskDescriptor, base_timeline: Timeline) -> TaskOutcome {
+    let mut resp = TaskResponse::new();
+    resp.timeline = base_timeline;
+    // Payload decode: a fixed small cost plus size-proportional parse.
+    resp.timeline
+        .charge(Component::PayloadDecode, 0.002 + task.payload_len() as f64 * 2e-9);
+
+    let stage = &ctx.plan.stages[task.stage_id as usize];
+    let result = match (&stage.compute, &task.input) {
+        (StageCompute::KernelScan { spec }, TaskInput::Split(_)) => {
+            kernel_scan(ctx, task, *spec, &mut resp)
+        }
+        (StageCompute::KernelReduce { spec }, TaskInput::ShufflePartition { .. }) => {
+            kernel_reduce(ctx, task, *spec, &mut resp)
+        }
+        (StageCompute::DynScan { ops }, TaskInput::Split(_)) => dyn_scan(ctx, task, ops, &mut resp),
+        (StageCompute::DynReduce { combine, post_ops }, TaskInput::ShufflePartition { .. }) => {
+            dyn_reduce(ctx, task, combine.clone(), post_ops, &mut resp)
+        }
+        (c, i) => Err(anyhow!("task/stage mismatch: {c:?} with {i:?}")),
+    };
+    match result {
+        Ok(Some(resume)) => TaskOutcome::Chained { resume, resp },
+        Ok(None) => TaskOutcome::Done(resp),
+        Err(e) => TaskOutcome::Failed { error: format!("{e:#}"), timeline: resp.timeline },
+    }
+}
+
+/// Billed execution duration of an invocation: everything except the
+/// provisioning (cold/warm start) latency.
+pub fn billed_duration(tl: &Timeline) -> f64 {
+    (tl.total() - tl.get(Component::ColdStart) - tl.get(Component::WarmStart)).max(0.0)
+}
+
+// ---------------------------------------------------------------------
+// Kernel scan (map stage of the benchmark queries)
+// ---------------------------------------------------------------------
+
+fn load_weather(ctx: &ExecCtx, tl: &mut Timeline) -> Result<Option<WeatherTable>> {
+    match &ctx.plan.weather {
+        None => Ok(None),
+        Some((bucket, key)) => {
+            let (obj, dt) = ctx
+                .env
+                .s3()
+                .get_object(bucket, key, ctx.read_profile())
+                .map_err(|e| anyhow!("weather table: {e}"))?;
+            tl.charge(Component::S3Read, dt);
+            Ok(Some(
+                WeatherTable::from_csv(obj.bytes()).ok_or_else(|| anyhow!("weather corrupt"))?,
+            ))
+        }
+    }
+}
+
+fn kernel_scan(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    spec: crate::compute::queries::KernelSpec,
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::Split(split) = &task.input else { unreachable!() };
+
+    let mut accum = HistAccum::new(spec.buckets);
+    let mut writer = match &stage_output_partitions(ctx, task) {
+        Some(parts) => Some(ShuffleWriter::new(
+            ctx.env,
+            ctx.transport.clone(),
+            &ctx.plan.plan_id,
+            task.stage_id,
+            task.producer_id(),
+            *parts,
+            task.resume.as_ref().map(|r| r.next_seqs.clone()),
+        )),
+        None => None,
+    };
+    let count_only = spec.key == KeySource::None && spec.reduce_partitions == 0;
+    if let Some(r) = &task.resume {
+        resp.rows = r.rows_done;
+        if !r.partial.is_empty() {
+            decode_hist(&r.partial, &mut accum)?;
+        }
+        if r.input_done {
+            // Emit-only continuation: the previous link consumed all
+            // input but chained before the output flush would have blown
+            // the duration cap.
+            return kernel_emit(ctx, task, &spec, &accum, writer.as_mut(), count_only, resp);
+        }
+    }
+    // Fetch the unconsumed remainder of the split (continuations resume
+    // mid-split with a fresh range GET — §III-B: "continue processing
+    // the uncompleted input split where the previous invocation left
+    // off"), plus the overfetch window for the trailing line.
+    //
+    // `consumed` may exceed the owned length: the last owned line can
+    // extend into (or start at the very end of) the overfetch region.
+    // In that case there is nothing left to read — go straight to emit.
+    let consumed = task.resume.as_ref().map(|r| r.input_offset).unwrap_or(0);
+    if consumed > split.len() {
+        return kernel_emit(ctx, task, &spec, &accum, writer.as_mut(), count_only, resp);
+    }
+    let weather = load_weather(ctx, &mut resp.timeline)?;
+    let read_start = split.start + consumed;
+    let (_, fe) = fetch_range(split.start, split.end, split.object_size);
+    let (window, dt) = ctx
+        .env
+        .s3()
+        .get_range(&split.bucket, &split.key, read_start, fe, ctx.read_profile())
+        .map_err(|e| anyhow!("input split: {e}"))?;
+    resp.timeline.charge(Component::S3Read, dt);
+
+    if window.len() as u64 > ctx.memory_limit_bytes {
+        return Err(anyhow!(
+            "split of {} bytes exceeds executor memory {} — lower flint.input_split_bytes",
+            window.len(),
+            ctx.memory_limit_bytes
+        ));
+    }
+
+    // Ownership within the sub-window: a line starting at window-relative
+    // q is owned iff read_start + q <= split.end. A resumed offset always
+    // sits at a line boundary, so no leading-line skip is needed there.
+    let own_len = split.end - read_start;
+    let is_first = split.start == 0 || consumed > 0;
+    let mut lines = SplitLines::new(window.bytes(), own_len, is_first);
+
+    let mut batch = ColumnBatch::with_capacity(batch_capacity(ctx));
+    let pipe_rate = ctx.env.config().sim.pyspark_pipe_per_record_s;
+    let mut lines_since_check = 0u64;
+
+    loop {
+        let sw = CpuStopwatch::start();
+        let mut batch_lines = 0u64;
+        // Fill one batch (or count a block of lines for Q0).
+        if count_only {
+            for _ in 0..65_536 {
+                match lines.next() {
+                    Some(_) => {
+                        resp.rows += 1;
+                        batch_lines += 1;
+                    }
+                    None => break,
+                }
+            }
+        } else {
+            while !batch.is_full() {
+                match lines.next() {
+                    Some(line) => {
+                        batch_lines += 1;
+                        if batch.push_line(line) {
+                            resp.rows += 1;
+                        } else {
+                            resp.malformed += 1;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            if !batch.is_empty() {
+                run_kernel_batch(ctx, &spec, &mut batch, weather.as_ref(), &mut accum)?;
+                batch.clear();
+            }
+        }
+        resp.timeline
+            .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+        if ctx.mode == IoMode::PySpark && batch_lines > 0 {
+            resp.timeline
+                .charge(Component::PipeOverhead, batch_lines as f64 * pipe_rate);
+        }
+        lines_since_check += batch_lines;
+
+        if batch_lines == 0 {
+            break; // input exhausted
+        }
+
+        // Deterministic crash point for forced failures: after the first
+        // block, before output flush.
+        if lines_since_check > 0
+            && ctx
+                .env
+                .failure()
+                .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+        {
+            return Err(anyhow!(
+                "injected executor crash (stage {} task {} attempt {})",
+                task.stage_id,
+                task.task_index,
+                task.attempt
+            ));
+        }
+
+        // Chain before the Lambda duration cap (§III-B).
+        if ctx.should_chain(&resp.timeline) {
+            let resume = ResumeState {
+                input_offset: consumed + lines.offset() as u64,
+                input_done: false,
+                rows_done: resp.rows,
+                partial: encode_hist(&accum),
+                next_seqs: writer.as_ref().map(|w| w.seqs()).unwrap_or_default(),
+                links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
+            };
+            return Ok(Some(resume));
+        }
+    }
+
+    // Input exhausted. If the output flush wouldn't fit under the
+    // remaining duration budget, chain once more and flush from a fresh
+    // invocation (the flush itself has no intermediate chain points).
+    if writer.is_some() {
+        let flush_est = estimate_flush_s(ctx, &accum, stage_output_partitions(ctx, task).unwrap());
+        let mut projected = resp.timeline.clone();
+        projected.charge(Component::SqsSend, flush_est);
+        if ctx.should_chain(&projected) {
+            let resume = ResumeState {
+                input_offset: consumed + lines.offset() as u64,
+                input_done: true,
+                rows_done: resp.rows,
+                partial: encode_hist(&accum),
+                next_seqs: writer.as_ref().map(|w| w.seqs()).unwrap_or_default(),
+                links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
+            };
+            return Ok(Some(resume));
+        }
+    }
+
+    kernel_emit(ctx, task, &spec, &accum, writer.as_mut(), count_only, resp)
+}
+
+/// Rough cost of flushing a kernel histogram to the shuffle: one send
+/// per distinct destination partition (records are tiny).
+fn estimate_flush_s(ctx: &ExecCtx, accum: &HistAccum, partitions: u32) -> f64 {
+    let distinct: std::collections::HashSet<u32> = accum
+        .to_rows()
+        .iter()
+        .map(|(k, _, _)| kernel_partition(*k, partitions))
+        .collect();
+    distinct.len() as f64 * ctx.env.config().sim.sqs_rtt_s * 1.5
+}
+
+fn kernel_emit(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    spec: &crate::compute::queries::KernelSpec,
+    accum: &HistAccum,
+    writer: Option<&mut ShuffleWriter>,
+    count_only: bool,
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let _ = spec;
+    let _ = ctx;
+    match (&task.output, writer) {
+        (TaskOutput::Shuffle { partitions }, Some(w)) => {
+            for (key, sum, count) in accum.to_rows() {
+                let p = kernel_partition(key, *partitions);
+                w.write(p, &ShuffleRec::Kernel { key, sum, count }, &mut resp.timeline)?;
+            }
+            w.flush_all(&mut resp.timeline)?;
+            resp.msgs_sent = w.msgs_sent;
+            resp.emitted = Emitted::Nothing;
+        }
+        (TaskOutput::Driver, _) => {
+            resp.emitted = if count_only {
+                Emitted::Count(resp.rows)
+            } else {
+                Emitted::KernelRows(accum.to_rows())
+            };
+        }
+        (out, _) => return Err(anyhow!("kernel scan cannot emit to {out:?}")),
+    }
+    Ok(None)
+}
+
+fn batch_capacity(ctx: &ExecCtx) -> usize {
+    match ctx.runtime {
+        Some(rt) => rt.batch_rows(),
+        None => ctx.env.config().flint.batch_rows,
+    }
+}
+
+fn run_kernel_batch(
+    ctx: &ExecCtx,
+    spec: &crate::compute::queries::KernelSpec,
+    batch: &mut ColumnBatch,
+    weather: Option<&WeatherTable>,
+    accum: &mut HistAccum,
+) -> Result<()> {
+    match ctx.runtime {
+        Some(rt) => {
+            batch.pad_to_capacity();
+            let keys = prepare_keys(spec, batch, weather);
+            let values = prepare_values(spec, batch);
+            rt.run_hist(spec, batch, &keys, &values, accum)
+        }
+        None => {
+            let keys = prepare_keys(spec, batch, weather);
+            let values = prepare_values(spec, batch);
+            run_batch_native(spec, batch, &keys, &values, accum);
+            Ok(())
+        }
+    }
+}
+
+fn stage_output_partitions(ctx: &ExecCtx, task: &TaskDescriptor) -> Option<u32> {
+    match &ctx.plan.stages[task.stage_id as usize].output {
+        StageOutput::Shuffle { partitions, .. } => Some(*partitions as u32),
+        StageOutput::Act(_) => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel reduce
+// ---------------------------------------------------------------------
+
+fn kernel_reduce(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    spec: crate::compute::queries::KernelSpec,
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::ShufflePartition { partition, .. } = task.input else { unreachable!() };
+    let producing_stage = task.stage_id - 1;
+    let mut reader = ShuffleReader::new(
+        ctx.env,
+        ctx.transport.clone(),
+        &ctx.plan.plan_id,
+        producing_stage,
+        partition,
+        ctx.env.config().flint.dedup_enabled,
+    );
+    let mut agg: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    if let Some(r) = &task.resume {
+        decode_reduce_state(&r.partial, &mut agg, &mut reader.seen)?;
+    }
+
+    let read = match reader.drain(&mut resp.timeline) {
+        Ok(r) => r,
+        Err(e) => {
+            reader.abandon();
+            return Err(e);
+        }
+    };
+    resp.shuffle_msgs_received = read.messages;
+    resp.duplicates_dropped = read.duplicates_dropped;
+
+    // Injected crash point: after drain, before ack — the retry must see
+    // the messages again (visibility timeout semantics).
+    if ctx
+        .env
+        .failure()
+        .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+    {
+        reader.abandon();
+        return Err(anyhow!(
+            "injected reducer crash (stage {} task {} attempt {})",
+            task.stage_id,
+            task.task_index,
+            task.attempt
+        ));
+    }
+
+    let sw = CpuStopwatch::start();
+    for rec in read.records {
+        match rec {
+            ShuffleRec::Kernel { key, sum, count } => {
+                let e = agg.entry(key).or_insert((0.0, 0.0));
+                e.0 += sum;
+                e.1 += count;
+                resp.rows += 1;
+            }
+            ShuffleRec::Dyn { .. } => return Err(anyhow!("dyn record in kernel reduce")),
+        }
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+
+    // Memory guard — the paper's answer is more partitions, not spill.
+    let agg_bytes = agg.len() as u64 * 32;
+    if agg_bytes > ctx.memory_limit_bytes {
+        return Err(anyhow!(
+            "aggregation state ({agg_bytes} B) exceeds executor memory — \
+             increase the number of partitions (spec has {})",
+            spec.reduce_partitions
+        ));
+    }
+
+    if ctx.should_chain(&resp.timeline) {
+        reader.ack(&mut resp.timeline)?;
+        let resume = ResumeState {
+            input_offset: 0,
+            input_done: false,
+            rows_done: resp.rows,
+            partial: encode_reduce_state(&agg, &reader.seen),
+            next_seqs: Vec::new(),
+            links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
+        };
+        return Ok(Some(resume));
+    }
+
+    reader.ack(&mut resp.timeline)?;
+    match &task.output {
+        TaskOutput::Driver => {
+            resp.emitted =
+                Emitted::KernelRows(agg.into_iter().map(|(k, (s, c))| (k, s, c)).collect());
+        }
+        TaskOutput::S3 { bucket, prefix } => {
+            let mut text = String::new();
+            for (k, (s, c)) in &agg {
+                text.push_str(&format!("{k}\t{s}\t{c}\n"));
+            }
+            let key = format!("{prefix}/part-{:05}", task.task_index);
+            let dt = ctx
+                .env
+                .s3()
+                .put_object(bucket, &key, text.into_bytes())
+                .map_err(|e| anyhow!("save: {e}"))?;
+            resp.timeline.charge(Component::S3Write, dt);
+            resp.emitted = Emitted::Saved(1);
+        }
+        out => return Err(anyhow!("kernel reduce cannot emit to {out:?}")),
+    }
+    Ok(None)
+}
+
+// ---------------------------------------------------------------------
+// Dynamic scan / reduce (generic RDD path)
+// ---------------------------------------------------------------------
+
+fn dyn_scan(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    ops: &[crate::plan::DynOp],
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::Split(split) = &task.input else { unreachable!() };
+    let (fs, fe) = fetch_range(split.start, split.end, split.object_size);
+    let (window, dt) = ctx
+        .env
+        .s3()
+        .get_range(&split.bucket, &split.key, fs, fe, ctx.read_profile())
+        .map_err(|e| anyhow!("input split: {e}"))?;
+    resp.timeline.charge(Component::S3Read, dt);
+
+    let mut lines = SplitLines::new(window.bytes(), split.len(), split.start == 0);
+    if let Some(r) = &task.resume {
+        lines.seek(r.input_offset as usize);
+        resp.rows = r.rows_done;
+    }
+
+    let out_parts = stage_output_partitions(ctx, task);
+    let combine = match &ctx.plan.stages[task.stage_id as usize].output {
+        StageOutput::Shuffle { combine, .. } => combine.clone(),
+        _ => None,
+    };
+    let mut writer = out_parts.map(|parts| {
+        ShuffleWriter::new(
+            ctx.env,
+            ctx.transport.clone(),
+            &ctx.plan.plan_id,
+            task.stage_id,
+            task.producer_id(),
+            parts,
+            task.resume.as_ref().map(|r| r.next_seqs.clone()),
+        )
+    });
+
+    // Map-side combine buffer (deterministic BTreeMap by encoded key).
+    let mut side: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    if let Some(r) = &task.resume {
+        if !r.partial.is_empty() {
+            decode_side(&r.partial, &mut side)?;
+        }
+    }
+    let mut collected: Vec<Value> = Vec::new();
+    let mut count: u64 = 0;
+    let mut emitted_buf: Vec<Value> = Vec::new();
+    let pipe_rate = ctx.env.config().sim.pyspark_pipe_per_record_s;
+    let flush_bytes = ctx.env.config().flint.shuffle_buffer_bytes;
+
+    loop {
+        let sw = CpuStopwatch::start();
+        let mut block_lines = 0u64;
+        for _ in 0..4096 {
+            let Some(line) = lines.next() else { break };
+            block_lines += 1;
+            resp.rows += 1;
+            let input = Value::Str(String::from_utf8_lossy(line).into_owned());
+            emitted_buf.clear();
+            crate::plan::DynOp::apply_chain(ops, input, &mut emitted_buf);
+            for v in emitted_buf.drain(..) {
+                match (&task.output, combine.as_ref()) {
+                    (TaskOutput::Shuffle { .. }, Some(c)) => {
+                        // reduceByKey: map-side combine.
+                        let key_bytes = v.key().encode();
+                        let val = v.val().clone();
+                        match side.remove(&key_bytes) {
+                            Some(prev) => {
+                                side.insert(key_bytes, c(prev, val));
+                            }
+                            None => {
+                                side.insert(key_bytes, val);
+                            }
+                        }
+                    }
+                    (TaskOutput::Shuffle { partitions }, None) => {
+                        let p = dyn_partition(v.key(), *partitions);
+                        writer.as_mut().unwrap().write(
+                            p,
+                            &ShuffleRec::Dyn { pair: v },
+                            &mut resp.timeline,
+                        )?;
+                    }
+                    (TaskOutput::Driver, _) => match &ctx.plan.action {
+                        Action::Count => count += 1,
+                        _ => collected.push(v),
+                    },
+                    (TaskOutput::S3 { .. }, _) => collected.push(v),
+                }
+            }
+        }
+        resp.timeline
+            .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+        if ctx.mode == IoMode::PySpark && block_lines > 0 {
+            resp.timeline
+                .charge(Component::PipeOverhead, block_lines as f64 * pipe_rate);
+        }
+        if block_lines == 0 {
+            break;
+        }
+
+        if ctx
+            .env
+            .failure()
+            .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+        {
+            return Err(anyhow!(
+                "injected executor crash (stage {} task {} attempt {})",
+                task.stage_id,
+                task.task_index,
+                task.attempt
+            ));
+        }
+
+        // Memory pressure: flush combined groups to the shuffle (the
+        // paper's executors do exactly this).
+        let side_bytes: usize = side.iter().map(|(k, v)| k.len() + v.mem_bytes()).sum();
+        if let (Some(w), true) = (writer.as_mut(), side_bytes > flush_bytes) {
+            flush_side(&mut side, w, &mut resp.timeline)?;
+        }
+        let mem_used = window.len() as u64
+            + side_bytes as u64
+            + writer.as_ref().map(|w| w.buffered_bytes() as u64).unwrap_or(0)
+            + collected.iter().map(|v| v.mem_bytes() as u64).sum::<u64>();
+        if mem_used > ctx.memory_limit_bytes {
+            return Err(anyhow!(
+                "executor memory exceeded ({mem_used} B) — increase partitions or split size"
+            ));
+        }
+
+        if ctx.should_chain(&resp.timeline) {
+            let resume = ResumeState {
+                input_offset: lines.offset() as u64,
+                input_done: false,
+                rows_done: resp.rows,
+                partial: encode_side(&side),
+                next_seqs: writer.as_ref().map(|w| w.seqs()).unwrap_or_default(),
+                links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
+            };
+            return Ok(Some(resume));
+        }
+    }
+
+    match &task.output {
+        TaskOutput::Shuffle { .. } => {
+            let w = writer.as_mut().expect("writer for shuffle output");
+            flush_side(&mut side, w, &mut resp.timeline)?;
+            w.flush_all(&mut resp.timeline)?;
+            resp.msgs_sent = w.msgs_sent;
+        }
+        TaskOutput::Driver => {
+            resp.emitted = match &ctx.plan.action {
+                Action::Count => Emitted::Count(count),
+                _ => Emitted::Values(std::mem::take(&mut collected)),
+            };
+        }
+        TaskOutput::S3 { bucket, prefix } => {
+            resp.emitted =
+                save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)?;
+        }
+    }
+    Ok(None)
+}
+
+fn flush_side(
+    side: &mut BTreeMap<Vec<u8>, Value>,
+    writer: &mut ShuffleWriter,
+    tl: &mut Timeline,
+) -> Result<()> {
+    let partitions = writer_partitions(writer);
+    for (key_bytes, val) in std::mem::take(side) {
+        let (key, _) = Value::decode(&key_bytes).ok_or_else(|| anyhow!("corrupt side key"))?;
+        let p = dyn_partition(&key, partitions);
+        writer.write(p, &ShuffleRec::Dyn { pair: Value::pair(key, val) }, tl)?;
+    }
+    Ok(())
+}
+
+fn writer_partitions(w: &ShuffleWriter) -> u32 {
+    w.seqs().len() as u32
+}
+
+fn dyn_reduce(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    combine: crate::plan::rdd::CombineFn,
+    post_ops: &[crate::plan::DynOp],
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::ShufflePartition { partition, .. } = task.input else { unreachable!() };
+    let producing_stage = task.stage_id - 1;
+    let mut reader = ShuffleReader::new(
+        ctx.env,
+        ctx.transport.clone(),
+        &ctx.plan.plan_id,
+        producing_stage,
+        partition,
+        ctx.env.config().flint.dedup_enabled,
+    );
+    let read = match reader.drain(&mut resp.timeline) {
+        Ok(r) => r,
+        Err(e) => {
+            reader.abandon();
+            return Err(e);
+        }
+    };
+    resp.shuffle_msgs_received = read.messages;
+    resp.duplicates_dropped = read.duplicates_dropped;
+
+    if ctx
+        .env
+        .failure()
+        .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+    {
+        reader.abandon();
+        return Err(anyhow!("injected reducer crash"));
+    }
+
+    let sw = CpuStopwatch::start();
+    let mut agg: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    for rec in read.records {
+        let ShuffleRec::Dyn { pair } = rec else {
+            return Err(anyhow!("kernel record in dyn reduce"));
+        };
+        resp.rows += 1;
+        let key_bytes = pair.key().encode();
+        let val = pair.val().clone();
+        match agg.remove(&key_bytes) {
+            Some(prev) => {
+                agg.insert(key_bytes, combine(prev, val));
+            }
+            None => {
+                agg.insert(key_bytes, val);
+            }
+        }
+    }
+
+    // Post-shuffle narrow ops, then route.
+    let out_parts = stage_output_partitions(ctx, task);
+    let next_combine = match &ctx.plan.stages[task.stage_id as usize].output {
+        StageOutput::Shuffle { combine, .. } => combine.clone(),
+        _ => None,
+    };
+    let mut writer = out_parts.map(|parts| {
+        ShuffleWriter::new(
+            ctx.env,
+            ctx.transport.clone(),
+            &ctx.plan.plan_id,
+            task.stage_id,
+            task.producer_id(),
+            parts,
+            None,
+        )
+    });
+    let mut collected = Vec::new();
+    let mut count = 0u64;
+    let mut buf = Vec::new();
+    let mut next_side: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    for (key_bytes, val) in agg {
+        let (key, _) = Value::decode(&key_bytes).ok_or_else(|| anyhow!("corrupt agg key"))?;
+        buf.clear();
+        crate::plan::DynOp::apply_chain(post_ops, Value::pair(key, val), &mut buf);
+        for v in buf.drain(..) {
+            match (&task.output, next_combine.as_ref()) {
+                (TaskOutput::Shuffle { .. }, Some(c)) => {
+                    let kb = v.key().encode();
+                    let vv = v.val().clone();
+                    match next_side.remove(&kb) {
+                        Some(prev) => {
+                            next_side.insert(kb, c(prev, vv));
+                        }
+                        None => {
+                            next_side.insert(kb, vv);
+                        }
+                    }
+                }
+                (TaskOutput::Shuffle { partitions }, None) => {
+                    let p = dyn_partition(v.key(), *partitions);
+                    writer.as_mut().unwrap().write(
+                        p,
+                        &ShuffleRec::Dyn { pair: v },
+                        &mut resp.timeline,
+                    )?;
+                }
+                (TaskOutput::Driver, _) => match &ctx.plan.action {
+                    Action::Count => count += 1,
+                    _ => collected.push(v),
+                },
+                (TaskOutput::S3 { .. }, _) => collected.push(v),
+            }
+        }
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+
+    reader.ack(&mut resp.timeline)?;
+    match &task.output {
+        TaskOutput::Shuffle { .. } => {
+            let w = writer.as_mut().expect("writer");
+            flush_side(&mut next_side, w, &mut resp.timeline)?;
+            w.flush_all(&mut resp.timeline)?;
+            resp.msgs_sent = w.msgs_sent;
+        }
+        TaskOutput::Driver => {
+            resp.emitted = match &ctx.plan.action {
+                Action::Count => Emitted::Count(count),
+                _ => Emitted::Values(collected),
+            };
+        }
+        TaskOutput::S3 { bucket, prefix } => {
+            resp.emitted =
+                save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)?;
+        }
+    }
+    Ok(None)
+}
+
+fn save_values(
+    ctx: &ExecCtx,
+    bucket: &str,
+    prefix: &str,
+    task_index: u32,
+    values: &[Value],
+    tl: &mut Timeline,
+) -> Result<Emitted> {
+    let mut text = String::new();
+    for v in values {
+        match v {
+            Value::Pair(k, val) => text.push_str(&format!("{k:?}\t{val:?}\n")),
+            other => text.push_str(&format!("{other:?}\n")),
+        }
+    }
+    let key = format!("{prefix}/part-{task_index:05}");
+    let dt = ctx
+        .env
+        .s3()
+        .put_object(bucket, &key, text.into_bytes())
+        .map_err(|e| anyhow!("save: {e}"))?;
+    tl.charge(Component::S3Write, dt);
+    Ok(Emitted::Saved(1))
+}
+
+// ---------------------------------------------------------------------
+// Partial-state (chaining) serialization
+// ---------------------------------------------------------------------
+
+fn encode_hist(h: &HistAccum) -> Vec<u8> {
+    let k = h.sums.len();
+    let mut out = Vec::with_capacity(8 + k * 16 + 8);
+    out.extend_from_slice(&(k as u64).to_le_bytes());
+    for v in &h.sums {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &h.counts {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&h.rows_seen.to_le_bytes());
+    out
+}
+
+fn decode_hist(bytes: &[u8], h: &mut HistAccum) -> Result<()> {
+    let err = || anyhow!("corrupt hist partial");
+    if bytes.len() < 8 {
+        return Err(err());
+    }
+    let k = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    if k != h.sums.len() || bytes.len() != 8 + k * 16 + 8 {
+        return Err(err());
+    }
+    for i in 0..k {
+        let off = 8 + i * 8;
+        h.sums[i] = f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    }
+    for i in 0..k {
+        let off = 8 + k * 8 + i * 8;
+        h.counts[i] = f64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    }
+    h.rows_seen = u64::from_le_bytes(bytes[8 + k * 16..].try_into().unwrap());
+    Ok(())
+}
+
+fn encode_reduce_state(agg: &BTreeMap<i64, (f64, f64)>, seen: &HashSet<(u64, u64)>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(agg.len() as u64).to_le_bytes());
+    for (k, (s, c)) in agg {
+        out.extend_from_slice(&k.to_le_bytes());
+        out.extend_from_slice(&s.to_le_bytes());
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    let mut seen_sorted: Vec<(u64, u64)> = seen.iter().copied().collect();
+    seen_sorted.sort_unstable();
+    out.extend_from_slice(&(seen_sorted.len() as u64).to_le_bytes());
+    for (p, s) in seen_sorted {
+        out.extend_from_slice(&p.to_le_bytes());
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+fn decode_reduce_state(
+    bytes: &[u8],
+    agg: &mut BTreeMap<i64, (f64, f64)>,
+    seen: &mut HashSet<(u64, u64)>,
+) -> Result<()> {
+    let err = || anyhow!("corrupt reduce partial");
+    let mut pos = 0usize;
+    let take8 = |pos: &mut usize| -> Result<[u8; 8]> {
+        let out: [u8; 8] = bytes.get(*pos..*pos + 8).ok_or_else(err)?.try_into().unwrap();
+        *pos += 8;
+        Ok(out)
+    };
+    let n = u64::from_le_bytes(take8(&mut pos)?) as usize;
+    for _ in 0..n {
+        let k = i64::from_le_bytes(take8(&mut pos)?);
+        let s = f64::from_le_bytes(take8(&mut pos)?);
+        let c = f64::from_le_bytes(take8(&mut pos)?);
+        agg.insert(k, (s, c));
+    }
+    let m = u64::from_le_bytes(take8(&mut pos)?) as usize;
+    for _ in 0..m {
+        let p = u64::from_le_bytes(take8(&mut pos)?);
+        let s = u64::from_le_bytes(take8(&mut pos)?);
+        seen.insert((p, s));
+    }
+    if pos != bytes.len() {
+        return Err(err());
+    }
+    Ok(())
+}
+
+fn encode_side(side: &BTreeMap<Vec<u8>, Value>) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(side.len() as u64).to_le_bytes());
+    for (k, v) in side {
+        out.extend_from_slice(&(k.len() as u64).to_le_bytes());
+        out.extend_from_slice(k);
+        v.encode_into(&mut out);
+    }
+    out
+}
+
+fn decode_side(bytes: &[u8], side: &mut BTreeMap<Vec<u8>, Value>) -> Result<()> {
+    let err = || anyhow!("corrupt side partial");
+    let mut pos = 0usize;
+    if bytes.len() < 8 {
+        return Err(err());
+    }
+    let n = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+    pos += 8;
+    for _ in 0..n {
+        let klen =
+            u64::from_le_bytes(bytes.get(pos..pos + 8).ok_or_else(err)?.try_into().unwrap())
+                as usize;
+        pos += 8;
+        let k = bytes.get(pos..pos + klen).ok_or_else(err)?.to_vec();
+        pos += klen;
+        let (v, used) = Value::decode(&bytes[pos..]).ok_or_else(err)?;
+        pos += used;
+        side.insert(k, v);
+    }
+    if pos != bytes.len() {
+        return Err(err());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_partial_roundtrip() {
+        let mut h = HistAccum::new(5);
+        h.sums[2] = 1.5;
+        h.counts[2] = 3.0;
+        h.rows_seen = 99;
+        let enc = encode_hist(&h);
+        let mut back = HistAccum::new(5);
+        decode_hist(&enc, &mut back).unwrap();
+        assert_eq!(back, h);
+        // Wrong bucket count rejected.
+        let mut wrong = HistAccum::new(4);
+        assert!(decode_hist(&enc, &mut wrong).is_err());
+    }
+
+    #[test]
+    fn reduce_state_roundtrip() {
+        let mut agg = BTreeMap::new();
+        agg.insert(3i64, (1.0, 2.0));
+        agg.insert(-9i64, (0.5, 1.0));
+        let mut seen = HashSet::new();
+        seen.insert((7u64, 0u64));
+        seen.insert((7u64, 1u64));
+        let enc = encode_reduce_state(&agg, &seen);
+        let mut agg2 = BTreeMap::new();
+        let mut seen2 = HashSet::new();
+        decode_reduce_state(&enc, &mut agg2, &mut seen2).unwrap();
+        assert_eq!(agg2, agg);
+        assert_eq!(seen2, seen);
+        assert!(decode_reduce_state(&enc[..enc.len() - 1], &mut agg2, &mut seen2).is_err());
+    }
+
+    #[test]
+    fn side_state_roundtrip() {
+        let mut side = BTreeMap::new();
+        side.insert(Value::str("a").encode(), Value::I64(3));
+        side.insert(Value::I64(9).encode(), Value::F64(0.5));
+        let enc = encode_side(&side);
+        let mut back = BTreeMap::new();
+        decode_side(&enc, &mut back).unwrap();
+        assert_eq!(back, side);
+    }
+}

@@ -1,0 +1,192 @@
+//! The Flint engine: serverless execution on the simulated Lambda + SQS
+//! substrates — the paper's system.
+//!
+//! Construction loads the AOT PJRT artifacts (when present and enabled)
+//! and pre-compiles them, so artifact compilation never lands on the
+//! query path. `prewarm()` mirrors the paper's measurement protocol
+//! ("averages over five trials *after warm-up*").
+
+use crate::compute::queries::{QueryId, QueryResult};
+use crate::data::Dataset;
+use crate::exec::driver::{run_plan, RunParams};
+use crate::exec::executor::IoMode;
+use crate::exec::shuffle::Transport;
+use crate::exec::{Engine, QueryReport};
+use crate::plan::{kernel_plan, Action, PhysicalPlan, Rdd};
+use crate::runtime::PjrtRuntime;
+use crate::services::SimEnv;
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+pub struct FlintEngine {
+    env: SimEnv,
+    runtime: Option<Arc<PjrtRuntime>>,
+}
+
+impl FlintEngine {
+    /// Build the engine; loads + pre-compiles PJRT artifacts if
+    /// `flint.use_pjrt` and the bundle exists (falls back to the native
+    /// kernels otherwise, e.g. in unit tests).
+    pub fn new(env: SimEnv) -> FlintEngine {
+        let cfg = env.config();
+        let runtime = if cfg.flint.use_pjrt && PjrtRuntime::available(&cfg.artifacts_dir) {
+            match PjrtRuntime::open(&cfg.artifacts_dir).and_then(|rt| {
+                rt.warmup()?;
+                Ok(rt)
+            }) {
+                Ok(rt) => Some(Arc::new(rt)),
+                Err(e) => {
+                    log::warn!("PJRT artifacts unavailable ({e:#}); using native kernels");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        FlintEngine { env, runtime }
+    }
+
+    /// Inject a pre-opened runtime (sharing one PJRT client across
+    /// engines in benches).
+    pub fn with_runtime(env: SimEnv, runtime: Option<Arc<PjrtRuntime>>) -> FlintEngine {
+        FlintEngine { env, runtime }
+    }
+
+    pub fn env(&self) -> &SimEnv {
+        &self.env
+    }
+
+    pub fn uses_pjrt(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Warm the Lambda container pool (the paper benchmarks post-warm-up).
+    pub fn prewarm(&self) {
+        self.env
+            .lambda()
+            .prewarm("flint-exec", self.env.config().sim.max_concurrency);
+    }
+
+    fn transport(&self) -> Transport {
+        match self.env.config().flint.shuffle_backend {
+            crate::config::ShuffleBackend::Sqs => Transport::Sqs,
+            crate::config::ShuffleBackend::S3 => Transport::S3,
+        }
+    }
+
+    fn params(&self) -> RunParams {
+        let cfg = self.env.config();
+        RunParams {
+            mode: IoMode::Flint,
+            transport: self.transport(),
+            slots: cfg.sim.max_concurrency,
+            lambda: true,
+            host_parallelism: host_parallelism(),
+        }
+    }
+
+    /// Execute an arbitrary physical plan.
+    pub fn run_plan(&self, plan: &PhysicalPlan) -> Result<QueryReport> {
+        self.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
+        self.env.s3().create_bucket(crate::data::OUTPUT_BUCKET);
+        let before = self.env.cost().snapshot();
+        let out = run_plan(
+            &self.env,
+            self.runtime.as_deref(),
+            plan,
+            &self.params(),
+        )
+        .with_context(|| format!("flint plan {}", plan.plan_id))?;
+        let cost = self.env.cost().snapshot().since(&before);
+        Ok(report("flint", plan.query, out, cost))
+    }
+
+    /// Execute a generic RDD action (the PySpark-like API).
+    pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
+        let cfg = self.env.config();
+        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |_, _| {
+            crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+        });
+        self.run_plan(&plan)
+    }
+}
+
+impl Engine for FlintEngine {
+    fn name(&self) -> &'static str {
+        "flint"
+    }
+
+    fn run_query(&self, query: QueryId, dataset: &Dataset) -> Result<QueryReport> {
+        let plan = kernel_plan(query, dataset, self.env.config());
+        self.run_plan(&plan)
+    }
+}
+
+pub(crate) fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+pub(crate) fn report(
+    engine: &str,
+    query: Option<QueryId>,
+    out: crate::exec::driver::RunOutput,
+    cost: crate::cost::CostSnapshot,
+) -> QueryReport {
+    let result = out
+        .out
+        .to_query_result()
+        .unwrap_or(QueryResult::Count(0));
+    QueryReport {
+        engine: engine.to_string(),
+        query,
+        result,
+        latency_s: out.latency_s,
+        cost_usd: cost.total(),
+        cost,
+        stage_latencies: out.stage_latencies,
+        timeline: out.timeline,
+        tasks: out.tasks,
+        invocations: out.invocations,
+        retries: out.retries,
+        chains: out.chains,
+        shuffle_msgs: out.shuffle_msgs,
+        duplicates_dropped: out.duplicates_dropped,
+    }
+}
+
+/// Raw plan output access for callers that need `ActionOut::Values`
+/// (generic collect) rather than the benchmark `QueryResult`.
+pub fn run_rdd_collect(
+    engine: &FlintEngine,
+    rdd: &Rdd,
+    dataset: &Dataset,
+) -> Result<Vec<crate::compute::value::Value>> {
+    let cfg = engine.env.config();
+    let plan = crate::plan::dag::build_dyn_plan(rdd, Action::Collect, |_, _| {
+        crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+    });
+    engine.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
+    let out = run_plan(
+        &engine.env,
+        engine.runtime.as_deref(),
+        &plan,
+        &engine.params(),
+    )?;
+    match out.out {
+        crate::exec::driver::ActionOut::Values(v) => Ok(v),
+        crate::exec::driver::ActionOut::KernelRows(rows) => Ok(rows
+            .into_iter()
+            .map(|(k, s, c)| {
+                crate::compute::value::Value::pair(
+                    crate::compute::value::Value::I64(k),
+                    crate::compute::value::Value::pair(
+                        crate::compute::value::Value::F64(s),
+                        crate::compute::value::Value::F64(c),
+                    ),
+                )
+            })
+            .collect()),
+        other => anyhow::bail!("collect produced {other:?}"),
+    }
+}
+

@@ -1,0 +1,66 @@
+//! Execution engines: Flint (serverless, the paper's system) and the
+//! cluster baselines (Scala Spark / PySpark) it is evaluated against.
+
+pub mod cluster;
+pub mod driver;
+pub mod executor;
+pub mod flint;
+pub mod shuffle;
+
+pub use cluster::{ClusterEngine, ClusterMode};
+pub use driver::{ActionOut, RunOutput};
+pub use flint::FlintEngine;
+
+use crate::compute::queries::{QueryId, QueryResult};
+use crate::cost::CostSnapshot;
+use crate::data::Dataset;
+use crate::simtime::Timeline;
+use anyhow::Result;
+
+/// What every engine reports per query — the two Table I columns plus
+/// the diagnostics behind them.
+#[derive(Debug)]
+pub struct QueryReport {
+    pub engine: String,
+    pub query: Option<QueryId>,
+    pub result: QueryResult,
+    /// Virtual query latency in seconds (Table I column 1).
+    pub latency_s: f64,
+    /// USD for this query (Table I column 2).
+    pub cost_usd: f64,
+    pub cost: CostSnapshot,
+    pub stage_latencies: Vec<f64>,
+    /// Where task time went, summed across tasks.
+    pub timeline: Timeline,
+    pub tasks: u64,
+    pub invocations: u64,
+    pub retries: u64,
+    pub chains: u64,
+    pub shuffle_msgs: u64,
+    pub duplicates_dropped: u64,
+}
+
+impl QueryReport {
+    /// One-line summary for examples/CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:8} {}: latency {:7.1}s  cost ${:.4}  ({} tasks, {} invocations, {} chains, {} retries)",
+            self.engine,
+            self.query.map(|q| q.name()).unwrap_or("plan"),
+            self.latency_s,
+            self.cost_usd,
+            self.tasks,
+            self.invocations,
+            self.chains,
+            self.retries
+        )
+    }
+}
+
+/// A query execution engine.
+pub trait Engine {
+    fn name(&self) -> &'static str;
+
+    /// Run one of the paper's benchmark queries over a dataset.
+    fn run_query(&self, query: QueryId, dataset: &Dataset) -> Result<QueryReport>;
+}

@@ -1,0 +1,640 @@
+//! Shuffle transport: how intermediate `(key, value)` data moves between
+//! stages.
+//!
+//! Three backends behind one interface:
+//! * **SQS** — the paper's design (§III-A): one queue per reduce
+//!   partition; map tasks flush message batches, reduce tasks drain.
+//! * **S3** — the Qubole alternative the paper contrasts with (§V/§VI):
+//!   one object per flush under a partition prefix; reducers list + get.
+//! * **Memory** — the cluster baseline's local shuffle (bytes/second
+//!   model of Spark's disk+network path).
+//!
+//! Determinism contract (what makes §VI dedup sound): a task's shuffle
+//! output — record order, message boundaries, sequence numbers — is a
+//! pure function of its input, never of timing. Buffers flush on byte
+//! thresholds; a retried attempt therefore re-sends byte-identical
+//! `(producer, seq)` messages and the reduce side drops duplicates of
+//! both kinds (SQS at-least-once redelivery *and* retry re-sends) with
+//! one mechanism.
+
+use crate::compute::value::Value;
+use crate::data::SHUFFLE_BUCKET;
+use crate::services::{Message, SimEnv};
+use crate::simtime::{Component, Timeline};
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+/// A shuffle record: the typed kernel path ships `(bucket, sum, count)`;
+/// the generic path ships encoded [`Value`] pairs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShuffleRec {
+    Kernel { key: i64, sum: f64, count: f64 },
+    Dyn { pair: Value },
+}
+
+impl ShuffleRec {
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match self {
+            ShuffleRec::Kernel { key, sum, count } => {
+                out.push(0);
+                out.extend_from_slice(&key.to_le_bytes());
+                out.extend_from_slice(&sum.to_le_bytes());
+                out.extend_from_slice(&count.to_le_bytes());
+            }
+            ShuffleRec::Dyn { pair } => {
+                out.push(1);
+                pair.encode_into(out);
+            }
+        }
+    }
+
+    fn decode(bytes: &[u8]) -> Option<(ShuffleRec, usize)> {
+        match *bytes.first()? {
+            0 => {
+                if bytes.len() < 25 {
+                    return None;
+                }
+                let key = i64::from_le_bytes(bytes[1..9].try_into().ok()?);
+                let sum = f64::from_le_bytes(bytes[9..17].try_into().ok()?);
+                let count = f64::from_le_bytes(bytes[17..25].try_into().ok()?);
+                Some((ShuffleRec::Kernel { key, sum, count }, 25))
+            }
+            1 => {
+                let (pair, n) = Value::decode(&bytes[1..])?;
+                Some((ShuffleRec::Dyn { pair }, 1 + n))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn decode_all(mut bytes: &[u8]) -> Option<Vec<ShuffleRec>> {
+        let mut out = Vec::new();
+        while !bytes.is_empty() {
+            let (rec, n) = ShuffleRec::decode(bytes)?;
+            out.push(rec);
+            bytes = &bytes[n..];
+        }
+        Some(out)
+    }
+
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            ShuffleRec::Kernel { .. } => 25,
+            ShuffleRec::Dyn { pair } => {
+                let mut buf = Vec::new();
+                pair.encode_into(&mut buf);
+                1 + buf.len()
+            }
+        }
+    }
+}
+
+/// The in-process backend for the cluster baseline.
+#[derive(Default)]
+pub struct MemoryShuffle {
+    parts: Mutex<BTreeMap<(u32, u32), Vec<Message>>>,
+}
+
+impl MemoryShuffle {
+    pub fn new() -> Arc<MemoryShuffle> {
+        Arc::new(MemoryShuffle::default())
+    }
+
+    fn push(&self, stage: u32, part: u32, msg: Message) {
+        self.parts
+            .lock()
+            .expect("mem shuffle")
+            .entry((stage, part))
+            .or_default()
+            .push(msg);
+    }
+
+    fn drain(&self, stage: u32, part: u32) -> Vec<Message> {
+        self.parts
+            .lock()
+            .expect("mem shuffle")
+            .remove(&(stage, part))
+            .unwrap_or_default()
+    }
+}
+
+/// Which transport a writer/reader uses.
+#[derive(Clone)]
+pub enum Transport {
+    Sqs,
+    S3,
+    Memory(Arc<MemoryShuffle>),
+}
+
+impl Transport {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Sqs => "sqs",
+            Transport::S3 => "s3",
+            Transport::Memory(_) => "memory",
+        }
+    }
+}
+
+/// Queue name for (plan, producing stage, partition) — created/deleted by
+/// the scheduler (§III-A: "queue management is performed by the
+/// scheduler").
+pub fn queue_name(plan_id: &str, stage: u32, partition: u32) -> String {
+    format!("{plan_id}-s{stage}-p{partition}")
+}
+
+/// S3 prefix for the S3 shuffle backend.
+pub fn s3_prefix(plan_id: &str, stage: u32, partition: u32) -> String {
+    format!("{plan_id}/s{stage}/p{partition}/")
+}
+
+/// Target message body size: leave headroom under the 256 KB batch cap
+/// for wire overhead; ten ~24 KB messages fill one batch call.
+const MSG_TARGET_BYTES: usize = 24 * 1024;
+
+/// Map-side shuffle writer for one task.
+pub struct ShuffleWriter<'a> {
+    env: &'a SimEnv,
+    transport: Transport,
+    plan_id: String,
+    stage: u32,
+    producer: u64,
+    partitions: u32,
+    /// Per-partition encode buffer (records encoded back-to-back).
+    bufs: Vec<Vec<u8>>,
+    /// Per-partition pending messages awaiting a batch send.
+    pending: Vec<Vec<Message>>,
+    /// Per-partition next sequence number.
+    seqs: Vec<u64>,
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+}
+
+impl<'a> ShuffleWriter<'a> {
+    pub fn new(
+        env: &'a SimEnv,
+        transport: Transport,
+        plan_id: &str,
+        stage: u32,
+        producer: u64,
+        partitions: u32,
+        resume_seqs: Option<Vec<u64>>,
+    ) -> ShuffleWriter<'a> {
+        let seqs = resume_seqs.unwrap_or_else(|| vec![0; partitions as usize]);
+        assert_eq!(seqs.len(), partitions as usize);
+        ShuffleWriter {
+            env,
+            transport,
+            plan_id: plan_id.to_string(),
+            stage,
+            producer,
+            partitions,
+            bufs: (0..partitions).map(|_| Vec::new()).collect(),
+            pending: (0..partitions).map(|_| Vec::new()).collect(),
+            seqs,
+            msgs_sent: 0,
+            bytes_sent: 0,
+        }
+    }
+
+    /// Current sequence counters (serialized into chain resume state).
+    pub fn seqs(&self) -> Vec<u64> {
+        self.seqs.clone()
+    }
+
+    /// Approximate buffered bytes (executor memory accounting).
+    pub fn buffered_bytes(&self) -> usize {
+        self.bufs.iter().map(Vec::len).sum::<usize>()
+            + self
+                .pending
+                .iter()
+                .flat_map(|p| p.iter().map(Message::wire_bytes))
+                .sum::<usize>()
+    }
+
+    /// Append a record destined for `partition`. Seals a message when the
+    /// buffer reaches the deterministic size threshold.
+    pub fn write(&mut self, partition: u32, rec: &ShuffleRec, tl: &mut Timeline) -> Result<()> {
+        debug_assert!(partition < self.partitions);
+        let buf = &mut self.bufs[partition as usize];
+        rec.encode_into(buf);
+        if buf.len() >= MSG_TARGET_BYTES {
+            self.seal(partition);
+            // Send when a full batch (10 messages) is pending.
+            if self.pending[partition as usize].len() >= self.env.config().sim.sqs_batch_max_msgs
+            {
+                self.flush_partition(partition, tl)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn seal(&mut self, partition: u32) {
+        let buf = std::mem::take(&mut self.bufs[partition as usize]);
+        if buf.is_empty() {
+            return;
+        }
+        let seq = self.seqs[partition as usize];
+        self.seqs[partition as usize] += 1;
+        self.pending[partition as usize].push(Message::new(buf, self.producer, seq));
+    }
+
+    fn flush_partition(&mut self, partition: u32, tl: &mut Timeline) -> Result<()> {
+        let msgs = std::mem::take(&mut self.pending[partition as usize]);
+        if msgs.is_empty() {
+            return Ok(());
+        }
+        let bytes: usize = msgs.iter().map(Message::wire_bytes).sum();
+        self.msgs_sent += msgs.len() as u64;
+        self.bytes_sent += bytes as u64;
+        match &self.transport {
+            Transport::Sqs => {
+                let q = queue_name(&self.plan_id, self.stage, partition);
+                let max = self.env.config().sim.sqs_batch_max_msgs;
+                for chunk in msgs.chunks(max) {
+                    let dt = self
+                        .env
+                        .sqs()
+                        .send_batch(&q, chunk.to_vec())
+                        .map_err(|e| anyhow!("shuffle send: {e}"))?;
+                    tl.charge(Component::SqsSend, dt);
+                }
+            }
+            Transport::S3 => {
+                // One object per message-equivalent flush; key carries the
+                // dedup identity so retries overwrite idempotently.
+                for m in msgs {
+                    let key = format!(
+                        "{}{:016x}-{:08}",
+                        s3_prefix(&self.plan_id, self.stage, partition),
+                        m.producer,
+                        m.seq
+                    );
+                    let dt = self
+                        .env
+                        .s3()
+                        .put_object(SHUFFLE_BUCKET, &key, m.body)
+                        .map_err(|e| anyhow!("shuffle put: {e}"))?;
+                    tl.charge(Component::S3Write, dt);
+                }
+            }
+            Transport::Memory(mem) => {
+                let mbps = self.env.config().sim.cluster_shuffle_mbps;
+                tl.charge(Component::Other, bytes as f64 / (mbps * 1e6));
+                for m in msgs {
+                    mem.push(self.stage, partition, m);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal and send everything buffered (end of task or chain point).
+    pub fn flush_all(&mut self, tl: &mut Timeline) -> Result<()> {
+        for p in 0..self.partitions {
+            self.seal(p);
+            self.flush_partition(p, tl)?;
+        }
+        Ok(())
+    }
+}
+
+/// Reduce-side reader outcome.
+pub struct ShuffleRead {
+    pub records: Vec<ShuffleRec>,
+    /// Messages received (pre-dedup).
+    pub messages: u64,
+    /// Messages dropped as duplicates.
+    pub duplicates_dropped: u64,
+}
+
+/// Reduce-side reader: drains one partition, deduplicating by
+/// `(producer, seq)` when enabled. On success callers `ack`; a failed
+/// task's handles are nacked back to the queue by [`ReadGuard::abandon`].
+pub struct ShuffleReader<'a> {
+    env: &'a SimEnv,
+    transport: Transport,
+    plan_id: String,
+    stage: u32,
+    partition: u32,
+    dedup: bool,
+    /// SQS receipt handles held until ack.
+    receipts: Vec<u64>,
+    /// Dedup set, persisted across chain links via resume state.
+    pub seen: HashSet<(u64, u64)>,
+}
+
+impl<'a> ShuffleReader<'a> {
+    pub fn new(
+        env: &'a SimEnv,
+        transport: Transport,
+        plan_id: &str,
+        stage: u32,
+        partition: u32,
+        dedup: bool,
+    ) -> ShuffleReader<'a> {
+        ShuffleReader {
+            env,
+            transport,
+            plan_id: plan_id.to_string(),
+            stage,
+            partition,
+            dedup,
+            receipts: Vec::new(),
+            seen: HashSet::new(),
+        }
+    }
+
+    fn queue(&self) -> String {
+        queue_name(&self.plan_id, self.stage, self.partition)
+    }
+
+    /// Drain everything currently available. Returns records + stats.
+    pub fn drain(&mut self, tl: &mut Timeline) -> Result<ShuffleRead> {
+        let mut out = ShuffleRead { records: Vec::new(), messages: 0, duplicates_dropped: 0 };
+        match self.transport.clone() {
+            Transport::Sqs => loop {
+                let (batch, dt) = self
+                    .env
+                    .sqs()
+                    .receive_batch(&self.queue(), self.env.config().sim.sqs_batch_max_msgs)
+                    .map_err(|e| anyhow!("shuffle receive: {e}"))?;
+                tl.charge(Component::SqsReceive, dt);
+                if batch.is_empty() {
+                    break;
+                }
+                for (msg, receipt) in batch {
+                    self.receipts.push(receipt);
+                    self.take(msg, &mut out)?;
+                }
+            },
+            Transport::S3 => {
+                let prefix = s3_prefix(&self.plan_id, self.stage, self.partition);
+                let listed = self
+                    .env
+                    .s3()
+                    .list(SHUFFLE_BUCKET, &prefix)
+                    .map_err(|e| anyhow!("shuffle list: {e}"))?;
+                // LIST round trip.
+                tl.charge(Component::S3Read, self.env.config().sim.s3_first_byte_s);
+                for (key, _) in listed {
+                    let (obj, dt) = self
+                        .env
+                        .s3()
+                        .get_object(SHUFFLE_BUCKET, &key, self.env.flint_read_profile())
+                        .map_err(|e| anyhow!("shuffle get: {e}"))?;
+                    tl.charge(Component::S3Read, dt);
+                    // Reconstruct dedup identity from the key.
+                    let stem = key.rsplit('/').next().unwrap_or("");
+                    let (p, s) = stem.split_once('-').unwrap_or(("0", "0"));
+                    let producer = u64::from_str_radix(p, 16).unwrap_or(0);
+                    let seq: u64 = s.parse().unwrap_or(0);
+                    self.take(Message::new(obj.bytes().to_vec(), producer, seq), &mut out)?;
+                }
+            }
+            Transport::Memory(mem) => {
+                let msgs = mem.drain(self.stage, self.partition);
+                let bytes: usize = msgs.iter().map(Message::wire_bytes).sum();
+                let mbps = self.env.config().sim.cluster_shuffle_mbps;
+                tl.charge(Component::Other, bytes as f64 / (mbps * 1e6));
+                for m in msgs {
+                    self.take(m, &mut out)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn take(&mut self, msg: Message, out: &mut ShuffleRead) -> Result<()> {
+        out.messages += 1;
+        if self.dedup && !self.seen.insert((msg.producer, msg.seq)) {
+            out.duplicates_dropped += 1;
+            self.env.metrics().incr("shuffle.duplicates_dropped");
+            return Ok(());
+        }
+        let recs = ShuffleRec::decode_all(&msg.body)
+            .ok_or_else(|| anyhow!("corrupt shuffle message (producer={})", msg.producer))?;
+        out.records.extend(recs);
+        Ok(())
+    }
+
+    /// Acknowledge everything received (task success): SQS deletes in
+    /// batches of 10 — billed requests, exactly like the real API.
+    pub fn ack(&mut self, tl: &mut Timeline) -> Result<()> {
+        if let Transport::Sqs = self.transport {
+            let q = self.queue();
+            for chunk in self.receipts.chunks(10) {
+                let dt = self
+                    .env
+                    .sqs()
+                    .delete_batch(&q, chunk)
+                    .map_err(|e| anyhow!("shuffle ack: {e}"))?;
+                tl.charge(Component::SqsReceive, dt);
+            }
+        }
+        self.receipts.clear();
+        Ok(())
+    }
+
+    /// Task failed: return in-flight messages to the queue (visibility
+    /// timeout semantics) so the retry sees them.
+    pub fn abandon(&mut self) {
+        if let Transport::Sqs = self.transport {
+            let q = self.queue();
+            let _ = self.env.sqs().nack(&q, &self.receipts);
+        }
+        self.receipts.clear();
+    }
+}
+
+/// Hash-partitioner for kernel records (bucket keys): mirrors Spark's
+/// `HashPartitioner` (non-negative modulo of the key hash).
+pub fn kernel_partition(key: i64, partitions: u32) -> u32 {
+    (crate::util::hash_i64(key) % partitions as u64) as u32
+}
+
+/// Partitioner for dynamic pairs.
+pub fn dyn_partition(key: &Value, partitions: u32) -> u32 {
+    (key.stable_hash() % partitions as u64) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FlintConfig;
+    use crate::util::propcheck::forall;
+
+    fn env_with(dup: f64) -> SimEnv {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.sim.sqs_duplicate_prob = dup;
+        let env = SimEnv::new(cfg);
+        env.s3().create_bucket(SHUFFLE_BUCKET);
+        env
+    }
+
+    fn krec(key: i64, count: f64) -> ShuffleRec {
+        ShuffleRec::Kernel { key, sum: count, count }
+    }
+
+    fn roundtrip(transport: Transport, env: &SimEnv, dedup: bool) -> (Vec<ShuffleRec>, u64) {
+        // Writer: 2 partitions, 100 records each.
+        if matches!(transport, Transport::Sqs) {
+            for p in 0..2 {
+                env.sqs().create_queue(&queue_name("t", 0, p));
+            }
+        }
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(env, transport.clone(), "t", 0, 7, 2, None);
+        for i in 0..200i64 {
+            w.write((i % 2) as u32, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+
+        let mut all = Vec::new();
+        let mut dups = 0;
+        for p in 0..2 {
+            let mut r = ShuffleReader::new(env, transport.clone(), "t", 0, p, dedup);
+            let read = r.drain(&mut tl).unwrap();
+            r.ack(&mut tl).unwrap();
+            dups += read.duplicates_dropped;
+            all.extend(read.records);
+        }
+        (all, dups)
+    }
+
+    #[test]
+    fn sqs_roundtrip_delivers_everything_once() {
+        let env = env_with(0.0);
+        let (recs, dups) = roundtrip(Transport::Sqs, &env, true);
+        assert_eq!(recs.len(), 200);
+        assert_eq!(dups, 0);
+        let keys: std::collections::BTreeSet<i64> = recs
+            .iter()
+            .map(|r| match r {
+                ShuffleRec::Kernel { key, .. } => *key,
+                _ => panic!(),
+            })
+            .collect();
+        assert_eq!(keys.len(), 200);
+    }
+
+    #[test]
+    fn s3_roundtrip_delivers_everything() {
+        let env = env_with(0.0);
+        let (recs, _) = roundtrip(Transport::S3, &env, true);
+        assert_eq!(recs.len(), 200);
+    }
+
+    #[test]
+    fn memory_roundtrip_delivers_everything() {
+        let env = env_with(0.0);
+        let (recs, _) = roundtrip(Transport::Memory(MemoryShuffle::new()), &env, false);
+        assert_eq!(recs.len(), 200);
+    }
+
+    #[test]
+    fn dedup_drops_injected_duplicates() {
+        let env = env_with(0.5);
+        let (recs, dups) = roundtrip(Transport::Sqs, &env, true);
+        assert_eq!(recs.len(), 200, "dedup restores exactly-once");
+        assert!(dups > 0, "duplicates were actually injected and dropped");
+    }
+
+    #[test]
+    fn without_dedup_duplicates_leak() {
+        let env = env_with(0.5);
+        let (recs, _) = roundtrip(Transport::Sqs, &env, false);
+        assert!(recs.len() > 200, "at-least-once shows through without §VI dedup");
+    }
+
+    #[test]
+    fn retry_resends_are_deduped() {
+        // Simulate a map-task retry: same producer writes everything twice.
+        let env = env_with(0.0);
+        env.sqs().create_queue(&queue_name("t", 0, 0));
+        let mut tl = Timeline::new();
+        for _attempt in 0..2 {
+            let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 0, 7, 1, None);
+            for i in 0..50i64 {
+                w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+            }
+            w.flush_all(&mut tl).unwrap();
+        }
+        let mut r = ShuffleReader::new(&env, Transport::Sqs, "t", 0, 0, true);
+        let read = r.drain(&mut tl).unwrap();
+        assert_eq!(read.records.len(), 50, "attempt 2's identical messages dropped");
+        assert!(read.duplicates_dropped > 0);
+    }
+
+    #[test]
+    fn abandon_returns_messages_for_retry() {
+        let env = env_with(0.0);
+        env.sqs().create_queue(&queue_name("t", 1, 0));
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 1, 3, 1, None);
+        for i in 0..10i64 {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        // First reader dies after draining.
+        let mut r1 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 0, true);
+        let read1 = r1.drain(&mut tl).unwrap();
+        assert_eq!(read1.records.len(), 10);
+        r1.abandon();
+        // Retry sees everything again.
+        let mut r2 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 0, true);
+        let read2 = r2.drain(&mut tl).unwrap();
+        r2.ack(&mut tl).unwrap();
+        assert_eq!(read2.records.len(), 10);
+    }
+
+    #[test]
+    fn writer_seqs_deterministic_and_resumable() {
+        let env = env_with(0.0);
+        env.sqs().create_queue(&queue_name("t", 2, 0));
+        let mut tl = Timeline::new();
+        let mut w1 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, None);
+        let mut w2 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, None);
+        for i in 0..5000i64 {
+            w1.write(0, &krec(i, 1.0), &mut tl).unwrap();
+            w2.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        assert_eq!(w1.seqs(), w2.seqs(), "same input -> same seq stream");
+        // Resume continues the stream.
+        let resumed = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, Some(w1.seqs()));
+        assert_eq!(resumed.seqs(), w1.seqs());
+    }
+
+    #[test]
+    fn prop_partitioners_cover_and_are_stable() {
+        forall("partitioner", 300, |g| {
+            let parts = g.u64(64) as u32 + 1;
+            let key = g.i64(i64::MIN / 2, i64::MAX / 2);
+            let p1 = kernel_partition(key, parts);
+            let p2 = kernel_partition(key, parts);
+            if p1 != p2 {
+                return Err("unstable".into());
+            }
+            if p1 >= parts {
+                return Err(format!("partition {p1} out of range {parts}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rec_roundtrip_mixed() {
+        let recs = vec![
+            krec(5, 2.0),
+            ShuffleRec::Dyn { pair: Value::pair(Value::str("k"), Value::I64(1)) },
+            krec(-3, 0.5),
+        ];
+        let mut buf = Vec::new();
+        for r in &recs {
+            r.encode_into(&mut buf);
+        }
+        assert_eq!(ShuffleRec::decode_all(&buf).unwrap(), recs);
+        assert!(ShuffleRec::decode_all(&[9, 9]).is_none());
+    }
+}

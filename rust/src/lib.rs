@@ -1,0 +1,43 @@
+//! # Flint — serverless data analytics, reproduced
+//!
+//! A reproduction of *"Serverless Data Analytics with Flint"* (Kim & Lin,
+//! 2018) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the Flint coordinator: an RDD → DAG → stage →
+//!   task pipeline whose tasks execute inside a simulated AWS Lambda
+//!   substrate, shuffling intermediate data through a simulated SQS, with
+//!   S3-style object storage for input/output. Baseline "Spark cluster"
+//!   engines (Scala-Spark-like and PySpark-like) run the same plans for
+//!   the paper's Table I comparison.
+//! * **L2** — JAX compute graphs for the paper's evaluation queries
+//!   (Q0–Q6 over NYC-taxi-schema data), AOT-lowered to HLO text at build
+//!   time (`make artifacts`).
+//! * **L1** — a fused Pallas filter+histogram kernel called by L2.
+//!
+//! Python never runs at query time: the Rust executors load the HLO
+//! artifacts through PJRT (`runtime`) and invoke them on columnar batches.
+
+pub mod bench;
+pub mod cli;
+pub mod compute;
+pub mod config;
+pub mod cost;
+pub mod data;
+pub mod exec;
+pub mod metrics;
+pub mod plan;
+pub mod runtime;
+pub mod services;
+pub mod simtime;
+pub mod util;
+
+/// Convenient re-exports for the common driver workflow.
+pub mod prelude {
+    pub use crate::compute::queries::QueryId;
+    pub use crate::config::FlintConfig;
+    pub use crate::data::Dataset;
+    pub use crate::exec::cluster::{ClusterEngine, ClusterMode};
+    pub use crate::exec::flint::FlintEngine;
+    pub use crate::exec::{Engine, QueryReport};
+    pub use crate::services::SimEnv;
+}

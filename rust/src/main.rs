@@ -1,0 +1,211 @@
+//! `flint` — the command-line launcher.
+//!
+//! ```text
+//! flint gen      --trips 1000000                      generate a dataset (stats only)
+//! flint run      --query Q1 [--engine flint|spark|pyspark] [--trips N]
+//! flint explain  --query Q1                           print the stage/queue topology
+//! flint table1   [--trips N] [--trials N] [--paper]   regenerate Table I
+//! flint micro    --bench s3|coldstart|shuffle         the in-text microbenchmarks
+//! flint config   [--config file.toml] [--set k=v]...  print the effective config
+//! ```
+//!
+//! Every command accepts `--config <toml>` and repeated `--set key=value`.
+
+use flint::bench::{run_table1, Table1Options};
+use flint::cli::Args;
+use flint::compute::queries::QueryId;
+use flint::config::FlintConfig;
+use flint::data::generate_taxi_dataset;
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::services::SimEnv;
+use flint::util::{human_bytes, human_duration};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<FlintConfig, String> {
+    let overrides = args.overrides()?;
+    let mut cfg = match args.get("config") {
+        Some(path) => FlintConfig::load(path, &overrides)?,
+        None => {
+            let mut cfg = FlintConfig::default();
+            for (k, v) in &overrides {
+                cfg.set(k, v)?;
+            }
+            cfg
+        }
+    };
+    if cfg.artifacts_dir.is_empty() {
+        cfg.artifacts_dir = "artifacts".to_string();
+    }
+    Ok(cfg)
+}
+
+fn real_main() -> Result<(), String> {
+    let args = Args::from_env()?;
+    let cfg = load_config(&args)?;
+    match args.command.as_deref() {
+        Some("gen") => cmd_gen(&args, cfg),
+        Some("run") => cmd_run(&args, cfg),
+        Some("explain") => cmd_explain(&args, cfg),
+        Some("table1") => cmd_table1(&args, cfg),
+        Some("micro") => cmd_micro(&args, cfg),
+        Some("config") => {
+            println!("{}", cfg.to_json().encode());
+            Ok(())
+        }
+        Some(other) => Err(format!(
+            "unknown command `{other}` (try: gen run explain table1 micro config)"
+        )),
+        None => {
+            println!("flint — serverless data analytics (Kim & Lin 2018, reproduced)");
+            println!("commands: gen | run | explain | table1 | micro | config");
+            Ok(())
+        }
+    }
+}
+
+fn parse_query(args: &Args) -> Result<QueryId, String> {
+    let name = args.get("query").unwrap_or("Q1");
+    QueryId::parse(name).ok_or_else(|| format!("unknown query `{name}` (Q0..Q6)"))
+}
+
+fn cmd_gen(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let trips = args.get_parsed("trips", cfg.data.trips)?;
+    let env = SimEnv::new(cfg);
+    let t0 = std::time::Instant::now();
+    let ds = generate_taxi_dataset(&env, "trips", trips);
+    println!(
+        "generated {} trips, {} objects, {} in {:.1}s (seed {})",
+        ds.trips,
+        ds.num_objects(),
+        human_bytes(ds.total_bytes),
+        t0.elapsed().as_secs_f64(),
+        ds.seed
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let query = parse_query(args)?;
+    let trips = args.get_parsed("trips", cfg.data.trips)?;
+    let engine_name = args.get("engine").unwrap_or("flint").to_string();
+    let env = SimEnv::new(cfg);
+    eprintln!("generating {trips} trips...");
+    let ds = generate_taxi_dataset(&env, "trips", trips);
+    let report = match engine_name.as_str() {
+        "flint" => {
+            let e = FlintEngine::new(env.clone());
+            if args.flag("prewarm") {
+                e.prewarm();
+            }
+            e.run_query(query, &ds)
+        }
+        "spark" => ClusterEngine::new(env.clone(), ClusterMode::Spark).run_query(query, &ds),
+        "pyspark" => ClusterEngine::new(env.clone(), ClusterMode::PySpark).run_query(query, &ds),
+        other => return Err(format!("unknown engine `{other}`")),
+    }
+    .map_err(|e| format!("{e:#}"))?;
+    println!("{}", report.summary());
+    println!("\n{}", report.result.render(query));
+    println!("virtual latency: {}", human_duration(report.latency_s));
+    println!("time breakdown (per-task sum): {}", report.timeline);
+    println!("cost: {}", report.cost);
+    Ok(())
+}
+
+fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let query = parse_query(args)?;
+    let trips = args.get_parsed("trips", 50_000u64)?;
+    let env = SimEnv::new(cfg.clone());
+    let ds = generate_taxi_dataset(&env, "trips", trips);
+    let plan = flint::plan::kernel_plan(query, &ds, &cfg);
+    println!("{}", plan.explain());
+    Ok(())
+}
+
+fn cmd_table1(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let queries = match args.get("queries") {
+        None => QueryId::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .map(|q| QueryId::parse(q).ok_or_else(|| format!("unknown query `{q}`")))
+            .collect::<Result<Vec<_>, _>>()?,
+    };
+    let opts = Table1Options {
+        trips: args.get_parsed("trips", cfg.data.trips)?,
+        trials_flint: args.get_parsed("trials", 5usize)?,
+        trials_cluster: args.get_parsed("cluster-trials", 3usize)?,
+        queries,
+        paper_scale: !args.flag("no-paper"),
+    };
+    eprintln!("table1: {} trips, {} flint trials", opts.trips, opts.trials_flint);
+    let (ds, rows) = run_table1(&cfg, &opts).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "dataset: {} trips, {} ({} objects)\n",
+        ds.trips,
+        human_bytes(ds.total_bytes),
+        ds.num_objects()
+    );
+    println!("{}", flint::bench::table1::render_measured(&rows));
+    if opts.paper_scale {
+        println!("{}", flint::bench::table1::render_paper_scale(&rows));
+    }
+    Ok(())
+}
+
+fn cmd_micro(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let which = args.get("bench").unwrap_or("s3");
+    match which {
+        "s3" => {
+            let (f, s) =
+                flint::bench::micro::s3_throughput(&cfg, 256).map_err(|e| format!("{e:#}"))?;
+            println!(
+                "single-stream S3 read: flint/boto {f:.1} MB/s, spark/hadoop {s:.1} MB/s ({:.2}x)",
+                f / s
+            );
+        }
+        "coldstart" => {
+            let (cold, warm, chained, unchained, links) =
+                flint::bench::micro::cold_warm_chain(&cfg, 100_000)
+                    .map_err(|e| format!("{e:#}"))?;
+            println!("Q0 cold-pool: {:.2}s | warm: {:.2}s", cold, warm);
+            println!(
+                "Q1 chained ({links} links): {:.2}s vs unchained {:.2}s ({:+.1}%)",
+                chained,
+                unchained,
+                (chained / unchained - 1.0) * 100.0
+            );
+        }
+        "shuffle" => {
+            let rows = flint::bench::micro::shuffle_ablation(&cfg, 200_000, QueryId::Q5)
+                .map_err(|e| format!("{e:#}"))?;
+            for (name, lat, cost, msgs) in rows {
+                println!("{name:6} shuffle: {lat:8.2}s  ${cost:.4}  {msgs} msgs");
+            }
+        }
+        "elasticity" => {
+            let rows = flint::bench::micro::elasticity_sweep(
+                &cfg,
+                400_000,
+                QueryId::Q1,
+                &[20, 40, 80, 160, 320],
+            )
+            .map_err(|e| format!("{e:#}"))?;
+            println!("Q1, 400k trips — the pay-as-you-go curve:");
+            for (slots, lat, cost) in rows {
+                println!("  concurrency {slots:4}: {lat:7.2}s  ${cost:.4}");
+            }
+        }
+        other => {
+            return Err(format!(
+                "unknown micro bench `{other}` (s3|coldstart|shuffle|elasticity)"
+            ))
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! Lightweight named counters for diagnostics — the paper's executors
+//! return "a variety of diagnostic information (e.g., number of messages,
+//! SQS calls, etc.)"; this is where those numbers land.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Thread-safe counter registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Add `delta` to the named counter.
+    pub fn add(&self, name: &str, delta: u64) {
+        let mut map = self.counters.lock().expect("metrics poisoned");
+        *map.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Increment by one.
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .expect("metrics poisoned")
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// All counters, sorted by name.
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        self.counters
+            .lock()
+            .expect("metrics poisoned")
+            .iter()
+            .map(|(k, v)| (k.clone(), *v))
+            .collect()
+    }
+
+    pub fn reset(&self) {
+        self.counters.lock().expect("metrics poisoned").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_work() {
+        let m = Metrics::new();
+        m.incr("sqs.send_batch");
+        m.add("sqs.messages", 10);
+        m.incr("sqs.send_batch");
+        assert_eq!(m.get("sqs.send_batch"), 2);
+        assert_eq!(m.get("sqs.messages"), 10);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn snapshot_sorted() {
+        let m = Metrics::new();
+        m.incr("z");
+        m.incr("a");
+        let snap = m.snapshot();
+        assert_eq!(snap[0].0, "a");
+        assert_eq!(snap[1].0, "z");
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.incr("x");
+        m.reset();
+        assert_eq!(m.get("x"), 0);
+        assert!(m.snapshot().is_empty());
+    }
+}

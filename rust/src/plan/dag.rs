@@ -1,0 +1,327 @@
+//! DAG scheduling: lineage (or a benchmark query) → [`PhysicalPlan`] —
+//! the stage/task structure both engines execute.
+
+use crate::compute::queries::{KernelSpec, QueryId};
+use crate::compute::csv::split_ranges;
+use crate::config::FlintConfig;
+use crate::data::Dataset;
+use crate::plan::rdd::{CombineFn, DynOp, Rdd};
+use crate::plan::task::InputSplit;
+
+/// What the final stage does with its output.
+#[derive(Clone)]
+pub enum Action {
+    /// Return a total row count to the driver (Q0, `rdd.count()`).
+    Count,
+    /// Materialize grouped/collected records at the driver (`collect`).
+    Collect,
+    /// Write text output to `bucket/prefix` (`saveAsTextFile`).
+    SaveAsText { bucket: String, prefix: String },
+}
+
+impl std::fmt::Debug for Action {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Action::Count => f.write_str("Count"),
+            Action::Collect => f.write_str("Collect"),
+            Action::SaveAsText { bucket, prefix } => write!(f, "SaveAsText({bucket}/{prefix})"),
+        }
+    }
+}
+
+/// Where a stage reads from.
+#[derive(Debug, Clone)]
+pub enum StageInput {
+    /// First stage: byte-range splits of S3 objects.
+    S3Splits(Vec<InputSplit>),
+    /// Later stages: one task per shuffle partition of the previous stage.
+    Shuffle { partitions: usize },
+}
+
+/// Where a stage writes to.
+#[derive(Clone)]
+pub enum StageOutput {
+    /// Hash-partitioned shuffle into `partitions` queues (or S3 objects,
+    /// per the configured shuffle backend).
+    Shuffle { partitions: usize, combine: Option<CombineFn> },
+    /// Final stage: feed the action.
+    Act(Action),
+}
+
+impl std::fmt::Debug for StageOutput {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageOutput::Shuffle { partitions, .. } => write!(f, "Shuffle({partitions})"),
+            StageOutput::Act(a) => write!(f, "Act({a:?})"),
+        }
+    }
+}
+
+/// The per-record work a stage performs.
+#[derive(Clone)]
+pub enum StageCompute {
+    /// Typed fast path: parse trips into columnar batches, run the fused
+    /// filter+histogram kernel (native or PJRT artifact).
+    KernelScan { spec: KernelSpec },
+    /// Typed reduce: merge `(bucket, (sum, count))` partials.
+    KernelReduce { spec: KernelSpec },
+    /// Generic path: apply a dynamic op chain to each input line.
+    DynScan { ops: Vec<DynOp> },
+    /// Generic reduce: combine pair values by key, then apply a post
+    /// chain.
+    DynReduce { combine: CombineFn, post_ops: Vec<DynOp> },
+}
+
+impl std::fmt::Debug for StageCompute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StageCompute::KernelScan { spec } => write!(f, "KernelScan({})", spec.query),
+            StageCompute::KernelReduce { spec } => write!(f, "KernelReduce({})", spec.query),
+            StageCompute::DynScan { ops } => write!(f, "DynScan({} ops)", ops.len()),
+            StageCompute::DynReduce { post_ops, .. } => {
+                write!(f, "DynReduce(+{} post ops)", post_ops.len())
+            }
+        }
+    }
+}
+
+/// One barrier-synchronized stage.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub id: u32,
+    pub compute: StageCompute,
+    pub input: StageInput,
+    pub output: StageOutput,
+}
+
+impl Stage {
+    /// Number of tasks this stage launches.
+    pub fn num_tasks(&self) -> usize {
+        match &self.input {
+            StageInput::S3Splits(splits) => splits.len(),
+            StageInput::Shuffle { partitions } => *partitions,
+        }
+    }
+}
+
+/// A complete physical plan.
+#[derive(Debug, Clone)]
+pub struct PhysicalPlan {
+    /// Unique id (scopes queue names, shuffle keys, the plan registry).
+    pub plan_id: String,
+    pub stages: Vec<Stage>,
+    pub action: Action,
+    /// Set when this is a benchmark-query plan (enables the PJRT path and
+    /// the weather side input for Q6).
+    pub query: Option<QueryId>,
+    /// Weather side-table S3 location, when any stage needs it.
+    pub weather: Option<(String, String)>,
+}
+
+impl PhysicalPlan {
+    /// Total tasks across stages.
+    pub fn total_tasks(&self) -> usize {
+        self.stages.iter().map(Stage::num_tasks).sum()
+    }
+
+    /// Render the stage/queue topology (the `flint explain` output and
+    /// the Figure 1 analogue).
+    pub fn explain(&self) -> String {
+        let mut out = format!("plan {} ({:?})\n", self.plan_id, self.action);
+        for s in &self.stages {
+            let input = match &s.input {
+                StageInput::S3Splits(sp) => format!("s3 x{}", sp.len()),
+                StageInput::Shuffle { partitions } => format!("sqs x{partitions}"),
+            };
+            out.push_str(&format!(
+                "  stage {}: [{input}] -> {:?} -> {:?} ({} tasks)\n",
+                s.id,
+                s.compute,
+                s.output,
+                s.num_tasks()
+            ));
+        }
+        out
+    }
+}
+
+/// Compute the input splits for a dataset.
+pub fn input_splits(dataset: &Dataset, split_bytes: u64) -> Vec<InputSplit> {
+    let mut splits = Vec::new();
+    for (key, size) in &dataset.objects {
+        for (start, end) in split_ranges(*size, split_bytes) {
+            splits.push(InputSplit {
+                bucket: dataset.bucket.clone(),
+                key: key.clone(),
+                start,
+                end,
+                object_size: *size,
+            });
+        }
+    }
+    splits
+}
+
+fn next_plan_id() -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(0);
+    format!("plan-{}", NEXT.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Physical plan for a benchmark query (typed kernel path). Q0 is
+/// map-only + Count; everything else is scan → shuffle → reduce →
+/// Collect, exactly the two-stage shape the paper's Figure 1 shows.
+pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig) -> PhysicalPlan {
+    let spec = query.spec();
+    let splits = input_splits(dataset, config.flint.input_split_bytes);
+    let weather = spec
+        .needs_weather()
+        .then(|| (dataset.bucket.clone(), dataset.weather_key.clone()));
+
+    let mut stages = Vec::new();
+    if spec.reduce_partitions == 0 {
+        stages.push(Stage {
+            id: 0,
+            compute: StageCompute::KernelScan { spec },
+            input: StageInput::S3Splits(splits),
+            output: StageOutput::Act(Action::Count),
+        });
+        return PhysicalPlan {
+            plan_id: next_plan_id(),
+            stages,
+            action: Action::Count,
+            query: Some(query),
+            weather,
+        };
+    }
+
+    stages.push(Stage {
+        id: 0,
+        compute: StageCompute::KernelScan { spec },
+        input: StageInput::S3Splits(splits),
+        output: StageOutput::Shuffle { partitions: spec.reduce_partitions, combine: None },
+    });
+    stages.push(Stage {
+        id: 1,
+        compute: StageCompute::KernelReduce { spec },
+        input: StageInput::Shuffle { partitions: spec.reduce_partitions },
+        output: StageOutput::Act(Action::Collect),
+    });
+    PhysicalPlan {
+        plan_id: next_plan_id(),
+        stages,
+        action: Action::Collect,
+        query: Some(query),
+        weather,
+    }
+}
+
+/// Physical plan for a generic RDD lineage + action.
+pub fn build_dyn_plan(
+    rdd: &Rdd,
+    action: Action,
+    dataset_lookup: impl Fn(&str, &str) -> Vec<InputSplit>,
+) -> PhysicalPlan {
+    let lin = rdd.linearize();
+    let splits = dataset_lookup(&lin.source.0, &lin.source.1);
+    let mut stages = Vec::new();
+    let n = lin.segments.len();
+    let mut pending_combine: Option<CombineFn> = None;
+    for (i, seg) in lin.segments.into_iter().enumerate() {
+        let input = if i == 0 {
+            StageInput::S3Splits(splits.clone())
+        } else {
+            let partitions = match &stages[i - 1] {
+                Stage { output: StageOutput::Shuffle { partitions, .. }, .. } => *partitions,
+                _ => unreachable!("non-first segment follows a shuffle"),
+            };
+            StageInput::Shuffle { partitions }
+        };
+        let output = match &seg.shuffle {
+            Some((partitions, combine)) => StageOutput::Shuffle {
+                partitions: *partitions,
+                combine: Some(combine.clone()),
+            },
+            None => StageOutput::Act(action.clone()),
+        };
+        let compute = if i == 0 {
+            StageCompute::DynScan { ops: seg.ops }
+        } else {
+            StageCompute::DynReduce {
+                combine: pending_combine.clone().expect("combine from previous segment"),
+                post_ops: seg.ops,
+            }
+        };
+        pending_combine = seg.shuffle.map(|(_, c)| c);
+        debug_assert!(i < n);
+        stages.push(Stage { id: i as u32, compute, input, output });
+    }
+    PhysicalPlan {
+        plan_id: next_plan_id(),
+        stages,
+        action,
+        query: None,
+        weather: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compute::value::Value;
+
+    fn fake_splits(n: usize) -> Vec<InputSplit> {
+        (0..n)
+            .map(|i| InputSplit {
+                bucket: "b".into(),
+                key: format!("k{i}"),
+                start: 0,
+                end: 100,
+                object_size: 100,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dyn_plan_two_stages() {
+        let rdd = Rdd::text_file("b", "p")
+            .map(|v| Value::pair(v, Value::I64(1)))
+            .reduce_by_key(4, |a, b| {
+                Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+            });
+        let plan = build_dyn_plan(&rdd, Action::Collect, |_, _| fake_splits(3));
+        assert_eq!(plan.stages.len(), 2);
+        assert_eq!(plan.stages[0].num_tasks(), 3);
+        assert_eq!(plan.stages[1].num_tasks(), 4);
+        assert!(matches!(plan.stages[1].compute, StageCompute::DynReduce { .. }));
+        assert!(plan.query.is_none());
+        assert_eq!(plan.total_tasks(), 7);
+    }
+
+    #[test]
+    fn dyn_map_only_plan() {
+        let rdd = Rdd::text_file("b", "p").filter(|_| true);
+        let plan = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(2));
+        assert_eq!(plan.stages.len(), 1);
+        assert!(matches!(plan.stages[0].output, StageOutput::Act(Action::Count)));
+    }
+
+    #[test]
+    fn explain_renders_topology() {
+        let rdd = Rdd::text_file("b", "p")
+            .map(|v| Value::pair(v, Value::I64(1)))
+            .reduce_by_key(4, |a, _| a);
+        let plan = build_dyn_plan(&rdd, Action::Collect, |_, _| fake_splits(3));
+        let text = plan.explain();
+        assert!(text.contains("stage 0"), "{text}");
+        assert!(text.contains("sqs x4"), "{text}");
+    }
+
+    #[test]
+    fn plan_ids_unique() {
+        let rdd = Rdd::text_file("b", "p");
+        let a = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
+        let b = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
+        assert_ne!(a.plan_id, b.plan_id);
+    }
+}

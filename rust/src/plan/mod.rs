@@ -1,0 +1,45 @@
+//! The plan layer: RDD lineage → physical plan → stages → tasks.
+//!
+//! Mirrors the Spark machinery Flint plugs into (§III of the paper): a
+//! driver program builds an RDD lineage; the DAG scheduler cuts it into
+//! stages at wide (shuffle) dependencies; each stage becomes a set of
+//! tasks — one per input split or shuffle partition; the engine's
+//! scheduler backend executes stages in order with a barrier between
+//! them. Flint "only needs to know about stages and tasks", and so does
+//! everything downstream of this module.
+
+pub mod dag;
+pub mod rdd;
+pub mod task;
+
+pub use dag::{Action, PhysicalPlan, Stage, StageCompute, StageInput, StageOutput};
+pub use rdd::{DynOp, Rdd};
+pub use task::{InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
+
+use crate::compute::queries::QueryId;
+use crate::config::FlintConfig;
+use crate::data::Dataset;
+
+/// Build the physical plan for one of the paper's benchmark queries
+/// (the typed kernel fast path).
+pub fn kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig) -> PhysicalPlan {
+    dag::build_kernel_plan(query, dataset, config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::services::SimEnv;
+
+    #[test]
+    fn q0_is_single_stage_and_q1_is_two() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = crate::data::generate_taxi_dataset(&env, "trips", 2_000);
+        let p0 = kernel_plan(QueryId::Q0, &ds, env.config());
+        assert_eq!(p0.stages.len(), 1);
+        let p1 = kernel_plan(QueryId::Q1, &ds, env.config());
+        assert_eq!(p1.stages.len(), 2);
+        assert!(matches!(p1.stages[0].output, StageOutput::Shuffle { partitions: 30, .. }));
+        assert!(matches!(p1.stages[1].input, StageInput::Shuffle { partitions: 30 }));
+    }
+}

@@ -1,0 +1,273 @@
+//! The generic RDD API — a PySpark-flavoured lineage builder over
+//! dynamic [`Value`]s, so Flint remains a *general* execution engine
+//! (the paper: "since Flint is a Spark execution engine, it supports
+//! arbitrary RDD transformations").
+//!
+//! The benchmarked queries use the typed kernel path (`dag.rs`); this
+//! path is exercised by `examples/quickstart.rs` and the generic-plan
+//! integration tests.
+//!
+//! **Serialization substitution** (DESIGN.md §2): real Flint pickles the
+//! Python task closure into the Lambda payload. Rust closures cannot be
+//! serialized, so a plan's closures live in a process-local registry and
+//! the payload carries a plan reference plus an estimated code size — the
+//! payload-size *accounting* (and the 6 MB limit machinery) is preserved.
+
+use crate::compute::value::Value;
+use std::sync::Arc;
+
+pub type MapFn = Arc<dyn Fn(Value) -> Value + Send + Sync>;
+pub type FilterFn = Arc<dyn Fn(&Value) -> bool + Send + Sync>;
+pub type FlatMapFn = Arc<dyn Fn(Value) -> Vec<Value> + Send + Sync>;
+pub type CombineFn = Arc<dyn Fn(Value, Value) -> Value + Send + Sync>;
+
+/// One narrow transformation in a stage's op chain.
+#[derive(Clone)]
+pub enum DynOp {
+    Map(MapFn),
+    Filter(FilterFn),
+    FlatMap(FlatMapFn),
+}
+
+impl DynOp {
+    /// Apply the chain to one record, producing zero or more records.
+    pub fn apply_chain(ops: &[DynOp], input: Value, out: &mut Vec<Value>) {
+        fn rec(ops: &[DynOp], v: Value, out: &mut Vec<Value>) {
+            match ops.first() {
+                None => out.push(v),
+                Some(DynOp::Map(f)) => rec(&ops[1..], f(v), out),
+                Some(DynOp::Filter(p)) => {
+                    if p(&v) {
+                        rec(&ops[1..], v, out);
+                    }
+                }
+                Some(DynOp::FlatMap(f)) => {
+                    for item in f(v) {
+                        rec(&ops[1..], item, out);
+                    }
+                }
+            }
+        }
+        rec(ops, input, out);
+    }
+
+    /// Estimated serialized size of this op's "code" — stands in for the
+    /// pickled closure bytes in payload accounting.
+    pub fn code_bytes(&self) -> u64 {
+        2048
+    }
+}
+
+impl std::fmt::Debug for DynOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DynOp::Map(_) => f.write_str("Map(<closure>)"),
+            DynOp::Filter(_) => f.write_str("Filter(<closure>)"),
+            DynOp::FlatMap(_) => f.write_str("FlatMap(<closure>)"),
+        }
+    }
+}
+
+/// RDD lineage node.
+pub enum RddNode {
+    /// Read text lines from every object under `bucket/prefix`; records
+    /// are `Value::Str` lines.
+    TextFile { bucket: String, prefix: String },
+    Narrow { parent: Rdd, op: DynOp },
+    /// Wide dependency: hash-partition pairs by key, combine values.
+    ReduceByKey { parent: Rdd, partitions: usize, combine: CombineFn },
+}
+
+/// A handle to a lineage node (cheap to clone; lineage is immutable).
+#[derive(Clone)]
+pub struct Rdd {
+    pub node: Arc<RddNode>,
+}
+
+impl std::fmt::Debug for Rdd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &*self.node {
+            RddNode::TextFile { bucket, prefix } => write!(f, "TextFile({bucket}/{prefix})"),
+            RddNode::Narrow { parent, op } => write!(f, "{parent:?} -> {op:?}"),
+            RddNode::ReduceByKey { parent, partitions, .. } => {
+                write!(f, "{parent:?} -> ReduceByKey({partitions})")
+            }
+        }
+    }
+}
+
+impl Rdd {
+    /// `sc.textFile("s3://bucket/prefix")`.
+    pub fn text_file(bucket: &str, prefix: &str) -> Rdd {
+        Rdd {
+            node: Arc::new(RddNode::TextFile {
+                bucket: bucket.to_string(),
+                prefix: prefix.to_string(),
+            }),
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(Value) -> Value + Send + Sync + 'static) -> Rdd {
+        Rdd {
+            node: Arc::new(RddNode::Narrow { parent: self.clone(), op: DynOp::Map(Arc::new(f)) }),
+        }
+    }
+
+    pub fn filter(&self, f: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Rdd {
+        Rdd {
+            node: Arc::new(RddNode::Narrow {
+                parent: self.clone(),
+                op: DynOp::Filter(Arc::new(f)),
+            }),
+        }
+    }
+
+    pub fn flat_map(&self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Rdd {
+        Rdd {
+            node: Arc::new(RddNode::Narrow {
+                parent: self.clone(),
+                op: DynOp::FlatMap(Arc::new(f)),
+            }),
+        }
+    }
+
+    /// `rdd.reduceByKey(combine, numPartitions)` — records must be pairs.
+    pub fn reduce_by_key(
+        &self,
+        partitions: usize,
+        combine: impl Fn(Value, Value) -> Value + Send + Sync + 'static,
+    ) -> Rdd {
+        assert!(partitions > 0, "reduceByKey needs at least one partition");
+        Rdd {
+            node: Arc::new(RddNode::ReduceByKey {
+                parent: self.clone(),
+                partitions,
+                combine: Arc::new(combine),
+            }),
+        }
+    }
+
+    /// Walk the lineage root-ward, returning (source, segments) where
+    /// each segment is the narrow op chain between wide deps, and a
+    /// segment's `shuffle` is the wide dep *terminating* it (feeding the
+    /// next segment).
+    pub fn linearize(&self) -> LinearizedLineage {
+        enum Event {
+            Op(DynOp),
+            Shuffle(usize, CombineFn),
+        }
+        // Collect action-side-first, then replay source-first.
+        let mut events: Vec<Event> = Vec::new();
+        let mut node = self.clone();
+        let source;
+        loop {
+            match &*node.node {
+                RddNode::TextFile { bucket, prefix } => {
+                    source = (bucket.clone(), prefix.clone());
+                    break;
+                }
+                RddNode::Narrow { parent, op } => {
+                    events.push(Event::Op(op.clone()));
+                    node = parent.clone();
+                }
+                RddNode::ReduceByKey { parent, partitions, combine } => {
+                    events.push(Event::Shuffle(*partitions, combine.clone()));
+                    node = parent.clone();
+                }
+            }
+        }
+        events.reverse();
+
+        let mut segments: Vec<LineageSegment> = Vec::new();
+        let mut current_ops: Vec<DynOp> = Vec::new();
+        for ev in events {
+            match ev {
+                Event::Op(op) => current_ops.push(op),
+                Event::Shuffle(partitions, combine) => {
+                    segments.push(LineageSegment {
+                        ops: std::mem::take(&mut current_ops),
+                        shuffle: Some((partitions, combine)),
+                    });
+                }
+            }
+        }
+        segments.push(LineageSegment { ops: current_ops, shuffle: None });
+        LinearizedLineage { source, segments }
+    }
+}
+
+/// One narrow chain, optionally ending in a shuffle.
+pub struct LineageSegment {
+    pub ops: Vec<DynOp>,
+    /// `Some((partitions, combine))` when the segment ends at a
+    /// reduceByKey; the *following* segment starts from its output.
+    pub shuffle: Option<(usize, CombineFn)>,
+}
+
+/// Lineage flattened into source + segments (source-first order).
+pub struct LinearizedLineage {
+    pub source: (String, String),
+    pub segments: Vec<LineageSegment>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v_i64(v: i64) -> Value {
+        Value::I64(v)
+    }
+
+    #[test]
+    fn chain_application_order() {
+        let ops = vec![
+            DynOp::Map(Arc::new(|v: Value| Value::I64(v.as_i64().unwrap() + 1))),
+            DynOp::Filter(Arc::new(|v: &Value| v.as_i64().unwrap() % 2 == 0)),
+            DynOp::FlatMap(Arc::new(|v: Value| {
+                let x = v.as_i64().unwrap();
+                vec![Value::I64(x), Value::I64(x * 10)]
+            })),
+        ];
+        let mut out = Vec::new();
+        DynOp::apply_chain(&ops, v_i64(1), &mut out); // 1+1=2, even, -> [2, 20]
+        DynOp::apply_chain(&ops, v_i64(2), &mut out); // 3 is odd -> dropped
+        assert_eq!(out, vec![v_i64(2), v_i64(20)]);
+    }
+
+    #[test]
+    fn linearize_splits_at_shuffles() {
+        let rdd = Rdd::text_file("b", "p")
+            .map(|v| v)
+            .filter(|_| true)
+            .reduce_by_key(8, |a, _| a)
+            .map(|v| v);
+        let lin = rdd.linearize();
+        assert_eq!(lin.source, ("b".to_string(), "p".to_string()));
+        assert_eq!(lin.segments.len(), 2);
+        assert_eq!(lin.segments[0].ops.len(), 2, "map+filter before shuffle");
+        assert_eq!(lin.segments[0].shuffle.as_ref().unwrap().0, 8);
+        assert_eq!(lin.segments[1].ops.len(), 1, "map after shuffle");
+        assert!(lin.segments[1].shuffle.is_none());
+    }
+
+    #[test]
+    fn two_shuffles_three_segments() {
+        let rdd = Rdd::text_file("b", "p")
+            .map(|v| v)
+            .reduce_by_key(4, |a, _| a)
+            .reduce_by_key(2, |a, _| a);
+        let lin = rdd.linearize();
+        assert_eq!(lin.segments.len(), 3);
+        assert_eq!(lin.segments[0].shuffle.as_ref().unwrap().0, 4);
+        assert_eq!(lin.segments[1].shuffle.as_ref().unwrap().0, 2);
+        assert!(lin.segments[1].ops.is_empty());
+    }
+
+    #[test]
+    fn map_only_lineage_is_one_segment() {
+        let rdd = Rdd::text_file("b", "p").map(|v| v);
+        let lin = rdd.linearize();
+        assert_eq!(lin.segments.len(), 1);
+        assert!(lin.segments[0].shuffle.is_none());
+    }
+}

@@ -1,0 +1,253 @@
+//! Task descriptors — what the Flint scheduler serializes into each
+//! Lambda invocation's request payload (§III: "the serialized code to
+//! execute, metadata about the relationship of this task to the entire
+//! physical plan, and metadata about where the executor reads its input
+//! and writes its output").
+
+use crate::util::json::Json;
+
+/// A byte-range split of one S3 object.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InputSplit {
+    pub bucket: String,
+    pub key: String,
+    pub start: u64,
+    pub end: u64,
+    pub object_size: u64,
+}
+
+impl InputSplit {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("bucket", self.bucket.as_str())
+            .set("key", self.key.as_str())
+            .set("start", self.start)
+            .set("end", self.end)
+            .set("object_size", self.object_size)
+    }
+
+    pub fn from_json(j: &Json) -> Result<InputSplit, String> {
+        Ok(InputSplit {
+            bucket: j.req_str("bucket").map_err(|e| e.to_string())?.to_string(),
+            key: j.req_str("key").map_err(|e| e.to_string())?.to_string(),
+            start: j.req_u64("start").map_err(|e| e.to_string())?,
+            end: j.req_u64("end").map_err(|e| e.to_string())?,
+            object_size: j.req_u64("object_size").map_err(|e| e.to_string())?,
+        })
+    }
+}
+
+/// Where a task reads.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskInput {
+    Split(InputSplit),
+    /// Drain shuffle partition `partition` (queue or S3 prefix chosen by
+    /// the engine's shuffle backend). `map_tasks` tells the reader how
+    /// many producers to expect (S3-backend file enumeration and dedup
+    /// sizing).
+    ShufflePartition { partition: u32, map_tasks: u32 },
+}
+
+/// Where a task writes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TaskOutput {
+    Shuffle { partitions: u32 },
+    /// Results return to the driver in the Lambda response.
+    Driver,
+    /// Results written to S3 (`saveAsTextFile`).
+    S3 { bucket: String, prefix: String },
+}
+
+/// Chaining state (§III-B): how far into the input the previous
+/// invocation got, plus the serialized partial aggregate when the task is
+/// a reducer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeState {
+    /// Bytes of the split already consumed (map tasks); the continuation
+    /// range-GETs only the remainder.
+    pub input_offset: u64,
+    /// Input fully consumed; only the output flush remains (a chain
+    /// point taken when the final shuffle flush wouldn't fit under the
+    /// duration cap).
+    pub input_done: bool,
+    /// Rows already emitted (diagnostics / determinism checks).
+    pub rows_done: u64,
+    /// Serialized partial aggregate (reduce tasks); spilled to S3 by the
+    /// scheduler when it exceeds the payload budget.
+    pub partial: Vec<u8>,
+    /// Next shuffle sequence number per output partition, so a chained
+    /// continuation keeps the `(producer, seq)` stream contiguous.
+    pub next_seqs: Vec<u64>,
+    /// How many times this task has chained so far.
+    pub links: u32,
+}
+
+/// The full task descriptor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskDescriptor {
+    pub plan_id: String,
+    pub stage_id: u32,
+    pub task_index: u32,
+    pub attempt: u32,
+    pub input: TaskInput,
+    pub output: TaskOutput,
+    pub resume: Option<ResumeState>,
+    /// Estimated bytes of serialized task code (stands in for the pickled
+    /// closure; kernel tasks reference a named artifact instead).
+    pub code_bytes: u64,
+}
+
+impl TaskDescriptor {
+    /// Stable producer id for shuffle dedup (§VI): *attempt-independent*,
+    /// so a retried task re-sends byte-identical `(producer, seq)` pairs
+    /// and the reduce side can drop both SQS duplicates and retry
+    /// duplicates.
+    pub fn producer_id(&self) -> u64 {
+        ((self.stage_id as u64) << 32) | self.task_index as u64
+    }
+
+    /// Serialize to the Lambda request payload (JSON). The paper's 6 MB
+    /// payload limit applies to these bytes plus the resume state.
+    pub fn to_payload(&self) -> Vec<u8> {
+        let input = match &self.input {
+            TaskInput::Split(s) => Json::obj().set("split", s.to_json()),
+            TaskInput::ShufflePartition { partition, map_tasks } => Json::obj()
+                .set("partition", *partition as u64)
+                .set("map_tasks", *map_tasks as u64),
+        };
+        let output = match &self.output {
+            TaskOutput::Shuffle { partitions } => {
+                Json::obj().set("kind", "shuffle").set("partitions", *partitions as u64)
+            }
+            TaskOutput::Driver => Json::obj().set("kind", "driver"),
+            TaskOutput::S3 { bucket, prefix } => Json::obj()
+                .set("kind", "s3")
+                .set("bucket", bucket.as_str())
+                .set("prefix", prefix.as_str()),
+        };
+        let mut j = Json::obj()
+            .set("plan_id", self.plan_id.as_str())
+            .set("stage_id", self.stage_id as u64)
+            .set("task_index", self.task_index as u64)
+            .set("attempt", self.attempt as u64)
+            .set("input", input)
+            .set("output", output)
+            .set("code_bytes", self.code_bytes);
+        if let Some(r) = &self.resume {
+            // Partial state rides along base64-free: JSON-escaped latin1
+            // would bloat; model it as a length + checksum (the bytes
+            // themselves live in the driver/S3 per the payload-split
+            // machinery, which is what real Flint does for large states).
+            j = j.set(
+                "resume",
+                Json::obj()
+                    .set("input_offset", r.input_offset)
+                    .set("rows_done", r.rows_done)
+                    .set("partial_bytes", r.partial.len() as u64)
+                    .set("links", r.links as u64),
+            );
+        }
+        let mut payload = j.encode().into_bytes();
+        // The partial aggregate itself counts against the payload limit.
+        if let Some(r) = &self.resume {
+            payload.extend_from_slice(&r.partial);
+        }
+        // The "serialized code" counts too.
+        payload.extend(std::iter::repeat_n(b'#', self.code_bytes as usize));
+        payload
+    }
+
+    /// Payload size without materializing (scheduler-side limit checks).
+    pub fn payload_len(&self) -> u64 {
+        self.to_payload().len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_task() -> TaskDescriptor {
+        TaskDescriptor {
+            plan_id: "plan-1".into(),
+            stage_id: 0,
+            task_index: 3,
+            attempt: 0,
+            input: TaskInput::Split(InputSplit {
+                bucket: "b".into(),
+                key: "k".into(),
+                start: 0,
+                end: 100,
+                object_size: 200,
+            }),
+            output: TaskOutput::Shuffle { partitions: 30 },
+            resume: None,
+            code_bytes: 512,
+        }
+    }
+
+    #[test]
+    fn producer_id_ignores_attempt() {
+        let mut t = sample_task();
+        let id0 = t.producer_id();
+        t.attempt = 2;
+        assert_eq!(t.producer_id(), id0, "dedup requires attempt-stable producer ids");
+        t.stage_id = 1;
+        assert_ne!(t.producer_id(), id0);
+        t.stage_id = 0;
+        t.task_index = 4;
+        assert_ne!(t.producer_id(), id0);
+    }
+
+    #[test]
+    fn payload_includes_code_and_partial() {
+        let mut t = sample_task();
+        t.code_bytes = 1000;
+        let base = t.payload_len();
+        t.code_bytes = 2000; // same digit width in the JSON header
+        assert_eq!(t.payload_len(), base + 1000);
+        t.resume = Some(ResumeState {
+            input_offset: 10,
+            input_done: false,
+            rows_done: 5,
+            partial: vec![0u8; 2000],
+            next_seqs: vec![0; 4],
+            links: 1,
+        });
+        assert!(t.payload_len() > base + 512 + 2000);
+    }
+
+    #[test]
+    fn payload_parses_as_json_prefix() {
+        let t = sample_task();
+        let payload = t.to_payload();
+        // JSON document ends at the matching brace before code padding.
+        let json_end = payload.iter().rposition(|&b| b == b'}').unwrap() + 1;
+        let j = Json::parse(std::str::from_utf8(&payload[..json_end]).unwrap()).unwrap();
+        assert_eq!(j.req_str("plan_id").unwrap(), "plan-1");
+        assert_eq!(j.req_u64("task_index").unwrap(), 3);
+        let split = InputSplit::from_json(j.get("input").unwrap().get("split").unwrap()).unwrap();
+        assert_eq!(split.end, 100);
+    }
+
+    #[test]
+    fn split_roundtrip() {
+        let s = InputSplit {
+            bucket: "in".into(),
+            key: "trips/part-00001.csv".into(),
+            start: 64,
+            end: 128,
+            object_size: 999,
+        };
+        assert_eq!(InputSplit::from_json(&s.to_json()).unwrap(), s);
+        assert_eq!(s.len(), 64);
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact bundle manifest — the contract between `python/compile/aot.py`
+//! (which writes it) and the Rust runtime (which validates against it).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One query artifact's metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryArtifact {
+    /// Histogram buckets in the artifact's output shape `[K, 2]`.
+    pub buckets: usize,
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    /// Static row count every artifact was lowered with.
+    pub batch_rows: usize,
+    /// jax version that produced the bundle (provenance).
+    pub jax_version: String,
+    /// Artifact stem → metadata.
+    pub queries: BTreeMap<String, QueryArtifact>,
+}
+
+impl ArtifactManifest {
+    pub fn read(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<ArtifactManifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let batch_rows = j.req_u64("batch_rows").map_err(|e| anyhow!("manifest: {e}"))? as usize;
+        let jax_version = j
+            .get("jax_version")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let queries_obj = j
+            .get("queries")
+            .ok_or_else(|| anyhow!("manifest: missing `queries`"))?;
+        let Json::Obj(map) = queries_obj else {
+            return Err(anyhow!("manifest: `queries` must be an object"));
+        };
+        let mut queries = BTreeMap::new();
+        for (stem, meta) in map {
+            let buckets =
+                meta.req_u64("buckets").map_err(|e| anyhow!("manifest {stem}: {e}"))? as usize;
+            queries.insert(stem.clone(), QueryArtifact { buckets });
+        }
+        Ok(ArtifactManifest { batch_rows, jax_version, queries })
+    }
+
+    /// All `<stem>.hlo.txt` files that must exist beside the manifest.
+    pub fn expected_files(&self) -> Vec<String> {
+        self.queries.keys().map(|s| format!("{s}.hlo.txt")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "batch_rows": 8192,
+        "jax_version": "0.8.2",
+        "queries": {
+            "q1_hist": {"buckets": 24},
+            "q4_hist": {"buckets": 90}
+        }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.batch_rows, 8192);
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.queries["q1_hist"].buckets, 24);
+        assert_eq!(m.queries["q4_hist"].buckets, 90);
+        assert_eq!(m.expected_files(), vec!["q1_hist.hlo.txt", "q4_hist.hlo.txt"]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        assert!(ArtifactManifest::parse("not json").is_err());
+        assert!(ArtifactManifest::parse(r#"{"batch_rows": 8, "queries": 3}"#).is_err());
+        assert!(
+            ArtifactManifest::parse(r#"{"batch_rows": 8, "queries": {"x": {}}}"#).is_err(),
+            "missing buckets"
+        );
+    }
+}

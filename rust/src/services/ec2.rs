@@ -1,0 +1,88 @@
+//! Cluster (EC2/Databricks) billing — the baseline's cost model.
+//!
+//! The paper: "Estimated costs for Spark and PySpark are computed as the
+//! query latency multiplied by the per-second cost of the cluster." The
+//! per-hour rate covers all 11 m4.2xlarge instances plus the platform fee
+//! (calibrated in DESIGN.md §5). Idle time *between* queries is exactly
+//! what the paper's pay-as-you-go argument is about; `idle_cost` exposes
+//! it for the cost-model discussion in EXPERIMENTS.md.
+
+use crate::config::FlintConfig;
+use crate::cost::{CostCategory, CostTracker};
+use std::sync::Arc;
+
+/// Billing handle for the always-on cluster.
+pub struct ClusterBilling {
+    per_hour_usd: f64,
+    startup_s: f64,
+    cost: Arc<CostTracker>,
+}
+
+impl ClusterBilling {
+    pub fn new(config: &FlintConfig, cost: Arc<CostTracker>) -> Self {
+        ClusterBilling {
+            per_hour_usd: config.pricing.cluster_per_hour,
+            startup_s: config.cluster.startup_s,
+            cost,
+        }
+    }
+
+    /// Charge for `duration_s` of cluster time (query execution — the
+    /// paper excludes startup, and so do we, "putting Spark performance in
+    /// the best possible light").
+    pub fn charge_query(&self, duration_s: f64) -> f64 {
+        let usd = duration_s * self.per_second();
+        self.cost.charge(CostCategory::ClusterTime, usd);
+        usd
+    }
+
+    /// USD per second of cluster uptime.
+    pub fn per_second(&self) -> f64 {
+        self.per_hour_usd / 3600.0
+    }
+
+    /// What `idle_s` seconds of idle cluster costs — zero for Flint by
+    /// construction, nonzero here; used in the cost-model report.
+    pub fn idle_cost(&self, idle_s: f64) -> f64 {
+        idle_s * self.per_second()
+    }
+
+    /// The cluster startup time the paper mentions (~5 min) but excludes.
+    pub fn startup_s(&self) -> f64 {
+        self.startup_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostTracker;
+
+    #[test]
+    fn per_second_rate_matches_table1_calibration() {
+        let cfg = FlintConfig::default();
+        let billing = ClusterBilling::new(&cfg, Arc::new(CostTracker::new()));
+        // Table I: Spark 188s ↔ $0.37.
+        let usd = 188.0 * billing.per_second();
+        assert!((usd - 0.37).abs() < 0.01, "got {usd}");
+    }
+
+    #[test]
+    fn charge_accumulates() {
+        let cfg = FlintConfig::default();
+        let cost = Arc::new(CostTracker::new());
+        let billing = ClusterBilling::new(&cfg, Arc::clone(&cost));
+        let usd = billing.charge_query(100.0);
+        assert!(usd > 0.0);
+        assert!((cost.get(CostCategory::ClusterTime) - usd).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_costs_nonzero() {
+        let cfg = FlintConfig::default();
+        let billing = ClusterBilling::new(&cfg, Arc::new(CostTracker::new()));
+        // One idle hour = full hourly rate; the crux of the paper's
+        // pay-as-you-go argument.
+        assert!((billing.idle_cost(3600.0) - cfg.pricing.cluster_per_hour).abs() < 1e-9);
+    }
+}

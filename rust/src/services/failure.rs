@@ -1,0 +1,111 @@
+//! Centralized failure injection.
+//!
+//! §VI of the paper: "Executor failures can be overcome by retries, but
+//! another issue is the at-least-once message semantics of SQS." Both
+//! failure modes are injected here so experiments are reproducible from a
+//! single seed, and tests can also *force* specific failures.
+
+use crate::util::rng::Pcg64;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+/// Deterministic, seedable failure source shared by the Lambda and SQS
+/// simulators.
+pub struct FailureInjector {
+    state: Mutex<State>,
+    lambda_failure_prob: f64,
+    sqs_duplicate_prob: f64,
+}
+
+struct State {
+    rng: Pcg64,
+    /// Task attempts forced to fail: (stage, task, attempt).
+    forced_task_failures: HashSet<(u32, u32, u32)>,
+}
+
+impl FailureInjector {
+    pub fn new(seed: u64, lambda_failure_prob: f64, sqs_duplicate_prob: f64) -> Self {
+        FailureInjector {
+            state: Mutex::new(State {
+                rng: Pcg64::new(seed, 911),
+                forced_task_failures: HashSet::new(),
+            }),
+            lambda_failure_prob,
+            sqs_duplicate_prob,
+        }
+    }
+
+    /// Should this invocation crash? (Random path.)
+    pub fn lambda_should_fail(&self) -> bool {
+        if self.lambda_failure_prob <= 0.0 {
+            return false;
+        }
+        self.state.lock().expect("failure lock").rng.chance(self.lambda_failure_prob)
+    }
+
+    /// Should this delivered SQS message be duplicated?
+    pub fn sqs_should_duplicate(&self) -> bool {
+        if self.sqs_duplicate_prob <= 0.0 {
+            return false;
+        }
+        self.state.lock().expect("failure lock").rng.chance(self.sqs_duplicate_prob)
+    }
+
+    /// Force the given `(stage, task, attempt)` to fail exactly once —
+    /// used by retry/chaining tests for surgical fault placement.
+    pub fn force_task_failure(&self, stage: u32, task: u32, attempt: u32) {
+        self.state
+            .lock()
+            .expect("failure lock")
+            .forced_task_failures
+            .insert((stage, task, attempt));
+    }
+
+    /// Consume a forced failure if one is registered for this attempt.
+    pub fn take_forced_failure(&self, stage: u32, task: u32, attempt: u32) -> bool {
+        self.state
+            .lock()
+            .expect("failure lock")
+            .forced_task_failures
+            .remove(&(stage, task, attempt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_probability_never_fails() {
+        let f = FailureInjector::new(1, 0.0, 0.0);
+        assert!((0..1000).all(|_| !f.lambda_should_fail()));
+        assert!((0..1000).all(|_| !f.sqs_should_duplicate()));
+    }
+
+    #[test]
+    fn probability_roughly_respected() {
+        let f = FailureInjector::new(7, 0.3, 0.1);
+        let fails = (0..10_000).filter(|_| f.lambda_should_fail()).count();
+        let dups = (0..10_000).filter(|_| f.sqs_should_duplicate()).count();
+        assert!((fails as f64 / 10_000.0 - 0.3).abs() < 0.03);
+        assert!((dups as f64 / 10_000.0 - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn forced_failures_fire_once() {
+        let f = FailureInjector::new(1, 0.0, 0.0);
+        f.force_task_failure(1, 5, 0);
+        assert!(!f.take_forced_failure(1, 5, 1), "different attempt");
+        assert!(f.take_forced_failure(1, 5, 0));
+        assert!(!f.take_forced_failure(1, 5, 0), "consumed");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = FailureInjector::new(99, 0.5, 0.0);
+        let b = FailureInjector::new(99, 0.5, 0.0);
+        let seq_a: Vec<bool> = (0..100).map(|_| a.lambda_should_fail()).collect();
+        let seq_b: Vec<bool> = (0..100).map(|_| b.lambda_should_fail()).collect();
+        assert_eq!(seq_a, seq_b);
+    }
+}

@@ -1,0 +1,286 @@
+//! Simulated AWS Lambda — the execution substrate (§III-B of the paper).
+//!
+//! Enforced limits (2018 values, all config-overridable):
+//! * 3008 MB memory per invocation,
+//! * 300 s execution duration (executors *chain* before hitting it),
+//! * 6 MB request payload (the scheduler spills larger task descriptors
+//!   to S3),
+//! * account-level concurrency (80 in the paper's evaluation).
+//!
+//! Warm/cold behaviour: containers enter a per-function warm pool after an
+//! invocation completes; an invocation that finds the pool empty pays the
+//! cold-start latency. The paper's "Python Lambdas ... start up faster"
+//! point is a config knob (`lambda_cold_start_s`).
+//!
+//! Billing: GB-seconds rounded up to 100 ms, plus a per-request charge.
+
+use crate::config::FlintConfig;
+use crate::cost::{CostCategory, CostTracker};
+use crate::metrics::Metrics;
+use crate::services::failure::FailureInjector;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum LambdaError {
+    #[error("request payload of {0} bytes exceeds the {1}-byte limit")]
+    PayloadTooLarge(u64, u64),
+    #[error("invocation exceeded the {0} s duration limit (ran {1} s)")]
+    DurationExceeded(u64, u64),
+    #[error("injected invocation failure (function={0})")]
+    InjectedFailure(String),
+}
+
+/// Returned by [`LambdaService::begin_invoke`]; carries the start latency
+/// the executor charges before any work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InvocationTicket {
+    pub cold: bool,
+    pub start_latency_s: f64,
+    /// Set when the failure injector decided this invocation crashes; the
+    /// executor aborts mid-flight and the scheduler retries.
+    pub will_fail: bool,
+}
+
+pub struct LambdaService {
+    /// function name → warm container count.
+    warm: Mutex<BTreeMap<String, usize>>,
+    cold_start_s: f64,
+    warm_start_s: f64,
+    memory_mb: u64,
+    time_limit_s: f64,
+    payload_limit: u64,
+    max_concurrency: usize,
+    price_gb_s: f64,
+    price_per_request: f64,
+    cost: Arc<CostTracker>,
+    metrics: Arc<Metrics>,
+    failure: Arc<FailureInjector>,
+}
+
+impl LambdaService {
+    pub fn new(
+        config: &FlintConfig,
+        cost: Arc<CostTracker>,
+        metrics: Arc<Metrics>,
+        failure: Arc<FailureInjector>,
+    ) -> Self {
+        LambdaService {
+            warm: Mutex::new(BTreeMap::new()),
+            cold_start_s: config.sim.lambda_cold_start_s,
+            warm_start_s: config.sim.lambda_warm_start_s,
+            memory_mb: config.sim.lambda_memory_mb,
+            time_limit_s: config.sim.lambda_time_limit_s,
+            payload_limit: config.sim.lambda_payload_limit_bytes,
+            max_concurrency: config.sim.max_concurrency,
+            price_gb_s: config.pricing.lambda_gb_s,
+            price_per_request: config.pricing.lambda_per_request,
+            cost,
+            metrics,
+            failure,
+        }
+    }
+
+    /// The execution-duration cap executors must respect (chain before it).
+    pub fn time_limit_s(&self) -> f64 {
+        self.time_limit_s
+    }
+
+    pub fn memory_bytes(&self) -> u64 {
+        self.memory_mb * 1024 * 1024
+    }
+
+    /// Start an invocation: validates the payload size, draws a container
+    /// from the warm pool (or pays a cold start), rolls failure injection.
+    pub fn begin_invoke(
+        &self,
+        function: &str,
+        payload_bytes: u64,
+    ) -> Result<InvocationTicket, LambdaError> {
+        if payload_bytes > self.payload_limit {
+            self.metrics.incr("lambda.payload_rejected");
+            return Err(LambdaError::PayloadTooLarge(payload_bytes, self.payload_limit));
+        }
+        let cold = {
+            let mut warm = self.warm.lock().expect("lambda lock");
+            let n = warm.entry(function.to_string()).or_insert(0);
+            if *n > 0 {
+                *n -= 1;
+                false
+            } else {
+                true
+            }
+        };
+        self.metrics.incr("lambda.invocations");
+        if cold {
+            self.metrics.incr("lambda.cold_starts");
+        }
+        let will_fail = self.failure.lambda_should_fail();
+        if will_fail {
+            self.metrics.incr("lambda.injected_failures");
+        }
+        Ok(InvocationTicket {
+            cold,
+            start_latency_s: if cold { self.cold_start_s } else { self.warm_start_s },
+            will_fail,
+        })
+    }
+
+    /// Finish an invocation of `duration_s` (virtual): bills it and
+    /// returns the container to the warm pool. Errors if the duration
+    /// exceeded the hard cap — callers must chain before that happens.
+    pub fn finish_invoke(&self, function: &str, duration_s: f64) -> Result<(), LambdaError> {
+        if duration_s > self.time_limit_s {
+            self.metrics.incr("lambda.duration_exceeded");
+            // AWS bills the full capped duration on timeout-kill.
+            self.bill(self.time_limit_s);
+            return Err(LambdaError::DurationExceeded(
+                self.time_limit_s as u64,
+                duration_s as u64,
+            ));
+        }
+        self.bill(duration_s);
+        let mut warm = self.warm.lock().expect("lambda lock");
+        let n = warm.entry(function.to_string()).or_insert(0);
+        // The provider caps how many idle containers it keeps around; the
+        // account concurrency limit is a reasonable stand-in.
+        if *n < self.max_concurrency {
+            *n += 1;
+        }
+        Ok(())
+    }
+
+    fn bill(&self, duration_s: f64) {
+        // Round up to 100 ms, charge GB-seconds + request fee.
+        let billed = (duration_s * 10.0).ceil() / 10.0;
+        let gb = self.memory_mb as f64 / 1024.0;
+        self.cost.charge(CostCategory::LambdaCompute, billed * gb * self.price_gb_s);
+        self.cost.charge(CostCategory::LambdaRequests, self.price_per_request);
+        self.metrics.add("lambda.billed_100ms", (billed * 10.0) as u64);
+    }
+
+    /// Current warm-pool size for a function.
+    pub fn warm_count(&self, function: &str) -> usize {
+        self.warm
+            .lock()
+            .expect("lambda lock")
+            .get(function)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Pre-warm `n` containers (benchmarks measure "after warm-up", like
+    /// the paper's five post-warm-up trials).
+    pub fn prewarm(&self, function: &str, n: usize) {
+        let mut warm = self.warm.lock().expect("lambda lock");
+        let entry = warm.entry(function.to_string()).or_insert(0);
+        *entry = (*entry + n).min(self.max_concurrency);
+    }
+
+    /// Drop all warm containers (to measure cold behaviour).
+    pub fn freeze(&self) {
+        self.warm.lock().expect("lambda lock").clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(failure_prob: f64) -> (LambdaService, Arc<CostTracker>, Arc<Metrics>) {
+        let cfg = FlintConfig::default();
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Arc::new(Metrics::new());
+        let failure = Arc::new(FailureInjector::new(5, failure_prob, 0.0));
+        let svc = LambdaService::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics), failure);
+        (svc, cost, metrics)
+    }
+
+    #[test]
+    fn first_invocation_cold_then_warm() {
+        let (svc, _, _) = service(0.0);
+        let t1 = svc.begin_invoke("exec", 100).unwrap();
+        assert!(t1.cold);
+        assert_eq!(t1.start_latency_s, 0.250);
+        svc.finish_invoke("exec", 1.0).unwrap();
+        let t2 = svc.begin_invoke("exec", 100).unwrap();
+        assert!(!t2.cold);
+        assert_eq!(t2.start_latency_s, 0.015);
+    }
+
+    #[test]
+    fn concurrent_invocations_each_cold() {
+        let (svc, _, _) = service(0.0);
+        // Two in flight with empty pool: both cold.
+        let a = svc.begin_invoke("exec", 0).unwrap();
+        let b = svc.begin_invoke("exec", 0).unwrap();
+        assert!(a.cold && b.cold);
+        svc.finish_invoke("exec", 1.0).unwrap();
+        svc.finish_invoke("exec", 1.0).unwrap();
+        assert_eq!(svc.warm_count("exec"), 2);
+    }
+
+    #[test]
+    fn payload_limit_enforced() {
+        let (svc, _, _) = service(0.0);
+        let over = 6 * 1024 * 1024 + 1;
+        assert!(matches!(
+            svc.begin_invoke("exec", over),
+            Err(LambdaError::PayloadTooLarge(_, _))
+        ));
+        assert!(svc.begin_invoke("exec", 6 * 1024 * 1024).is_ok());
+    }
+
+    #[test]
+    fn duration_limit_enforced_and_billed() {
+        let (svc, cost, _) = service(0.0);
+        svc.begin_invoke("exec", 0).unwrap();
+        let err = svc.finish_invoke("exec", 301.0).unwrap_err();
+        assert!(matches!(err, LambdaError::DurationExceeded(300, 301)));
+        assert!(cost.total() > 0.0, "timeout is still billed");
+        // The container did not return to the pool.
+        assert_eq!(svc.warm_count("exec"), 0);
+    }
+
+    #[test]
+    fn billing_rounds_up_to_100ms() {
+        let (svc, cost, _) = service(0.0);
+        svc.begin_invoke("exec", 0).unwrap();
+        svc.finish_invoke("exec", 0.01).unwrap();
+        // 0.01s -> billed as 0.1s at 3008MB.
+        let gb = 3008.0 / 1024.0;
+        let expected = 0.1 * gb * 0.00001667 + 0.0000002;
+        assert!((cost.total() - expected).abs() < 1e-12, "{}", cost.total());
+    }
+
+    #[test]
+    fn failure_injection_marks_ticket() {
+        let (svc, _, metrics) = service(1.0);
+        let t = svc.begin_invoke("exec", 0).unwrap();
+        assert!(t.will_fail);
+        assert_eq!(metrics.get("lambda.injected_failures"), 1);
+    }
+
+    #[test]
+    fn prewarm_and_freeze() {
+        let (svc, _, _) = service(0.0);
+        svc.prewarm("exec", 10);
+        assert_eq!(svc.warm_count("exec"), 10);
+        assert!(!svc.begin_invoke("exec", 0).unwrap().cold);
+        svc.freeze();
+        assert_eq!(svc.warm_count("exec"), 0);
+        assert!(svc.begin_invoke("exec", 0).unwrap().cold);
+    }
+
+    #[test]
+    fn warm_pool_capped_at_concurrency() {
+        let (svc, _, _) = service(0.0);
+        for _ in 0..100 {
+            svc.begin_invoke("exec", 0).unwrap();
+        }
+        for _ in 0..100 {
+            svc.finish_invoke("exec", 0.1).unwrap();
+        }
+        assert_eq!(svc.warm_count("exec"), 80, "capped at max_concurrency");
+    }
+}

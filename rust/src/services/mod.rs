@@ -1,0 +1,156 @@
+//! Simulated AWS substrates (DESIGN.md §2).
+//!
+//! The paper runs on S3 + SQS + Lambda + an EC2 Databricks cluster; none
+//! of those exist in this environment, so each is rebuilt as an
+//! in-process service with the *behavioural* properties that shaped
+//! Flint's design: S3's per-stream throughput, SQS's batch limits and
+//! at-least-once delivery, Lambda's cold starts and resource caps, and
+//! the cluster's per-hour idle-inclusive billing. Each service charges
+//! modeled durations (for the virtual clock) and USD (for Table I).
+
+pub mod ec2;
+pub mod failure;
+pub mod lambda;
+pub mod s3;
+pub mod sqs;
+
+pub use ec2::ClusterBilling;
+pub use failure::FailureInjector;
+pub use lambda::{InvocationTicket, LambdaError, LambdaService};
+pub use s3::{ObjectStore, ReadProfile, S3Error};
+pub use sqs::{Message, SqsError, SqsService};
+
+use crate::config::FlintConfig;
+use crate::cost::CostTracker;
+use crate::metrics::Metrics;
+use crate::util::IdGen;
+use std::sync::Arc;
+
+/// The shared simulation environment: one per experiment. Cheap to clone
+/// (all state behind one `Arc`).
+#[derive(Clone)]
+pub struct SimEnv {
+    inner: Arc<SimEnvInner>,
+}
+
+struct SimEnvInner {
+    config: FlintConfig,
+    cost: Arc<CostTracker>,
+    metrics: Arc<Metrics>,
+    failure: Arc<FailureInjector>,
+    s3: ObjectStore,
+    sqs: SqsService,
+    lambda: LambdaService,
+    ids: IdGen,
+}
+
+impl SimEnv {
+    pub fn new(config: FlintConfig) -> SimEnv {
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Arc::new(Metrics::new());
+        let failure = Arc::new(FailureInjector::new(
+            config.seed,
+            config.sim.lambda_failure_prob,
+            config.sim.sqs_duplicate_prob,
+        ));
+        let s3 = ObjectStore::new(&config, Arc::clone(&cost), Arc::clone(&metrics));
+        let sqs = SqsService::new(
+            &config,
+            Arc::clone(&cost),
+            Arc::clone(&metrics),
+            Arc::clone(&failure),
+        );
+        let lambda = LambdaService::new(
+            &config,
+            Arc::clone(&cost),
+            Arc::clone(&metrics),
+            Arc::clone(&failure),
+        );
+        SimEnv {
+            inner: Arc::new(SimEnvInner {
+                config,
+                cost,
+                metrics,
+                failure,
+                s3,
+                sqs,
+                lambda,
+                ids: IdGen::new(),
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &FlintConfig {
+        &self.inner.config
+    }
+
+    pub fn s3(&self) -> &ObjectStore {
+        &self.inner.s3
+    }
+
+    pub fn sqs(&self) -> &SqsService {
+        &self.inner.sqs
+    }
+
+    pub fn lambda(&self) -> &LambdaService {
+        &self.inner.lambda
+    }
+
+    pub fn cost(&self) -> &CostTracker {
+        &self.inner.cost
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.inner.metrics
+    }
+
+    pub fn failure(&self) -> &FailureInjector {
+        &self.inner.failure
+    }
+
+    pub fn ids(&self) -> &IdGen {
+        &self.inner.ids
+    }
+
+    /// Read profile for Flint executors (boto-like throughput).
+    pub fn flint_read_profile(&self) -> ReadProfile {
+        ReadProfile {
+            first_byte_s: self.inner.config.sim.s3_first_byte_s,
+            mbps: self.inner.config.sim.s3_flint_mbps,
+        }
+    }
+
+    /// Read profile for the Spark cluster (Hadoop-S3A-like throughput).
+    pub fn spark_read_profile(&self) -> ReadProfile {
+        ReadProfile {
+            first_byte_s: self.inner.config.sim.s3_first_byte_s,
+            mbps: self.inner.config.sim.s3_spark_mbps,
+        }
+    }
+
+    /// Reset per-trial accumulators (cost, metrics, warm pools are kept —
+    /// the paper benchmarks "after warm-up").
+    pub fn reset_trial(&self) {
+        self.inner.cost.reset();
+        self.inner.metrics.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn env_shares_state_across_clones() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let env2 = env.clone();
+        env.metrics().incr("x");
+        assert_eq!(env2.metrics().get("x"), 1);
+    }
+
+    #[test]
+    fn profiles_reflect_config() {
+        let env = SimEnv::new(FlintConfig::default());
+        assert!(env.flint_read_profile().mbps > env.spark_read_profile().mbps);
+    }
+}

@@ -1,0 +1,351 @@
+//! Simulated S3-style object store.
+//!
+//! Captures what mattered to the paper: byte-range GETs (Flint's input
+//! splits are "a range of bytes from an S3 object"), per-stream throughput
+//! (the boto-vs-Hadoop gap behind the paper's Q0 result), first-byte
+//! latency, request pricing, and bucket/key listing. Data lives in memory
+//! behind `Arc`s; reads hand out zero-copy views.
+
+use crate::config::FlintConfig;
+use crate::cost::{CostCategory, CostTracker};
+use crate::metrics::Metrics;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+/// Throughput/latency profile of a reader — Flint's Python/boto executors
+/// and Spark's Hadoop connector see different numbers (DESIGN.md §5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReadProfile {
+    pub first_byte_s: f64,
+    pub mbps: f64,
+}
+
+impl ReadProfile {
+    /// Modeled wall time to stream `bytes` through this profile.
+    pub fn read_time_s(&self, bytes: u64) -> f64 {
+        self.first_byte_s + bytes as f64 / (self.mbps * 1e6)
+    }
+}
+
+/// A zero-copy view over a stored object (or a byte range of it).
+#[derive(Debug, Clone)]
+pub struct S3Object {
+    data: Arc<Vec<u8>>,
+    start: usize,
+    end: usize,
+}
+
+impl S3Object {
+    pub fn bytes(&self) -> &[u8] {
+        &self.data[self.start..self.end]
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl std::ops::Deref for S3Object {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.bytes()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum S3Error {
+    #[error("no such bucket: {0}")]
+    NoSuchBucket(String),
+    #[error("no such key: {0}/{1}")]
+    NoSuchKey(String, String),
+    #[error("invalid range {1}..{2} for object of {0} bytes")]
+    InvalidRange(u64, u64, u64),
+}
+
+type Buckets = BTreeMap<String, BTreeMap<String, Arc<Vec<u8>>>>;
+
+/// The store itself. All operations return `(value, modeled_duration_s)`;
+/// callers charge the duration to their task timeline.
+pub struct ObjectStore {
+    buckets: RwLock<Buckets>,
+    put_mbps: f64,
+    first_byte_s: f64,
+    get_per_1000: f64,
+    put_per_1000: f64,
+    cost: Arc<CostTracker>,
+    metrics: Arc<Metrics>,
+}
+
+impl ObjectStore {
+    pub fn new(config: &FlintConfig, cost: Arc<CostTracker>, metrics: Arc<Metrics>) -> Self {
+        ObjectStore {
+            buckets: RwLock::new(BTreeMap::new()),
+            put_mbps: config.sim.s3_put_mbps,
+            first_byte_s: config.sim.s3_first_byte_s,
+            get_per_1000: config.pricing.s3_get_per_1000,
+            put_per_1000: config.pricing.s3_put_per_1000,
+            cost,
+            metrics,
+        }
+    }
+
+    /// Create a bucket (idempotent, like the real thing for an owner).
+    pub fn create_bucket(&self, bucket: &str) {
+        self.buckets
+            .write()
+            .expect("s3 lock")
+            .entry(bucket.to_string())
+            .or_default();
+    }
+
+    pub fn bucket_exists(&self, bucket: &str) -> bool {
+        self.buckets.read().expect("s3 lock").contains_key(bucket)
+    }
+
+    /// PUT an object. Returns the modeled upload duration.
+    pub fn put_object(
+        &self,
+        bucket: &str,
+        key: &str,
+        data: Vec<u8>,
+    ) -> Result<f64, S3Error> {
+        let len = data.len() as u64;
+        {
+            let mut buckets = self.buckets.write().expect("s3 lock");
+            let b = buckets
+                .get_mut(bucket)
+                .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+            b.insert(key.to_string(), Arc::new(data));
+        }
+        self.cost.charge(CostCategory::S3Requests, self.put_per_1000 / 1000.0);
+        self.metrics.incr("s3.put");
+        self.metrics.add("s3.bytes_written", len);
+        Ok(self.first_byte_s + len as f64 / (self.put_mbps * 1e6))
+    }
+
+    /// GET a whole object.
+    pub fn get_object(
+        &self,
+        bucket: &str,
+        key: &str,
+        profile: ReadProfile,
+    ) -> Result<(S3Object, f64), S3Error> {
+        let data = self.lookup(bucket, key)?;
+        let len = data.len();
+        self.charge_get(len as u64);
+        Ok((
+            S3Object { data, start: 0, end: len },
+            profile.read_time_s(len as u64),
+        ))
+    }
+
+    /// GET a byte range `[start, end)` — Flint input splits use this.
+    pub fn get_range(
+        &self,
+        bucket: &str,
+        key: &str,
+        start: u64,
+        end: u64,
+        profile: ReadProfile,
+    ) -> Result<(S3Object, f64), S3Error> {
+        let data = self.lookup(bucket, key)?;
+        let len = data.len() as u64;
+        if start > end || end > len {
+            return Err(S3Error::InvalidRange(len, start, end));
+        }
+        self.charge_get(end - start);
+        Ok((
+            S3Object { data, start: start as usize, end: end as usize },
+            profile.read_time_s(end - start),
+        ))
+    }
+
+    /// Object size without reading (HEAD).
+    pub fn head_object(&self, bucket: &str, key: &str) -> Result<u64, S3Error> {
+        let data = self.lookup(bucket, key)?;
+        self.metrics.incr("s3.head");
+        Ok(data.len() as u64)
+    }
+
+    /// List `(key, size)` under a prefix, lexicographically.
+    pub fn list(&self, bucket: &str, prefix: &str) -> Result<Vec<(String, u64)>, S3Error> {
+        let buckets = self.buckets.read().expect("s3 lock");
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+        self.metrics.incr("s3.list");
+        Ok(b.range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, v)| (k.clone(), v.len() as u64))
+            .collect())
+    }
+
+    pub fn delete_object(&self, bucket: &str, key: &str) -> Result<(), S3Error> {
+        let mut buckets = self.buckets.write().expect("s3 lock");
+        let b = buckets
+            .get_mut(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+        b.remove(key)
+            .map(|_| ())
+            .ok_or_else(|| S3Error::NoSuchKey(bucket.to_string(), key.to_string()))
+    }
+
+    /// Delete every object under a prefix; returns how many were removed.
+    pub fn delete_prefix(&self, bucket: &str, prefix: &str) -> Result<usize, S3Error> {
+        let mut buckets = self.buckets.write().expect("s3 lock");
+        let b = buckets
+            .get_mut(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+        let keys: Vec<String> = b
+            .range(prefix.to_string()..)
+            .take_while(|(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.clone())
+            .collect();
+        for k in &keys {
+            b.remove(k);
+        }
+        Ok(keys.len())
+    }
+
+    /// Total bytes stored in a bucket (diagnostics).
+    pub fn bucket_bytes(&self, bucket: &str) -> u64 {
+        self.buckets
+            .read()
+            .expect("s3 lock")
+            .get(bucket)
+            .map(|b| b.values().map(|v| v.len() as u64).sum())
+            .unwrap_or(0)
+    }
+
+    fn lookup(&self, bucket: &str, key: &str) -> Result<Arc<Vec<u8>>, S3Error> {
+        let buckets = self.buckets.read().expect("s3 lock");
+        let b = buckets
+            .get(bucket)
+            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+        b.get(key)
+            .cloned()
+            .ok_or_else(|| S3Error::NoSuchKey(bucket.to_string(), key.to_string()))
+    }
+
+    fn charge_get(&self, bytes: u64) {
+        self.cost.charge(CostCategory::S3Requests, self.get_per_1000 / 1000.0);
+        self.metrics.incr("s3.get");
+        self.metrics.add("s3.bytes_read", bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ObjectStore {
+        let cfg = FlintConfig::default();
+        ObjectStore::new(&cfg, Arc::new(CostTracker::new()), Arc::new(Metrics::new()))
+    }
+
+    fn profile() -> ReadProfile {
+        ReadProfile { first_byte_s: 0.02, mbps: 100.0 }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let s3 = store();
+        s3.create_bucket("in");
+        s3.put_object("in", "a.csv", b"hello,world".to_vec()).unwrap();
+        let (obj, dt) = s3.get_object("in", "a.csv", profile()).unwrap();
+        assert_eq!(obj.bytes(), b"hello,world");
+        assert!(dt > 0.02, "first byte latency included");
+    }
+
+    #[test]
+    fn range_reads() {
+        let s3 = store();
+        s3.create_bucket("in");
+        s3.put_object("in", "k", (0u8..100).collect()).unwrap();
+        let (obj, _) = s3.get_range("in", "k", 10, 20, profile()).unwrap();
+        assert_eq!(obj.bytes(), &(10u8..20).collect::<Vec<_>>()[..]);
+        assert_eq!(obj.len(), 10);
+        assert!(matches!(
+            s3.get_range("in", "k", 90, 120, profile()),
+            Err(S3Error::InvalidRange(100, 90, 120))
+        ));
+    }
+
+    #[test]
+    fn missing_bucket_and_key() {
+        let s3 = store();
+        assert!(matches!(
+            s3.get_object("nope", "k", profile()),
+            Err(S3Error::NoSuchBucket(_))
+        ));
+        s3.create_bucket("b");
+        assert!(matches!(
+            s3.get_object("b", "k", profile()),
+            Err(S3Error::NoSuchKey(_, _))
+        ));
+    }
+
+    #[test]
+    fn list_respects_prefix_and_order() {
+        let s3 = store();
+        s3.create_bucket("b");
+        s3.put_object("b", "data/part-0002", vec![0; 2]).unwrap();
+        s3.put_object("b", "data/part-0001", vec![0; 1]).unwrap();
+        s3.put_object("b", "other/x", vec![0; 9]).unwrap();
+        let listed = s3.list("b", "data/").unwrap();
+        assert_eq!(
+            listed,
+            vec![("data/part-0001".to_string(), 1), ("data/part-0002".to_string(), 2)]
+        );
+    }
+
+    #[test]
+    fn delete_prefix_counts() {
+        let s3 = store();
+        s3.create_bucket("b");
+        for i in 0..5 {
+            s3.put_object("b", &format!("tmp/{i}"), vec![1]).unwrap();
+        }
+        s3.put_object("b", "keep", vec![1]).unwrap();
+        assert_eq!(s3.delete_prefix("b", "tmp/").unwrap(), 5);
+        assert_eq!(s3.list("b", "").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn read_time_scales_with_profile() {
+        let fast = ReadProfile { first_byte_s: 0.0, mbps: 100.0 };
+        let slow = ReadProfile { first_byte_s: 0.0, mbps: 50.0 };
+        let bytes = 100 * 1024 * 1024;
+        assert!(slow.read_time_s(bytes) > fast.read_time_s(bytes) * 1.99);
+    }
+
+    #[test]
+    fn costs_and_metrics_accrue() {
+        let cfg = FlintConfig::default();
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Arc::new(Metrics::new());
+        let s3 = ObjectStore::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics));
+        s3.create_bucket("b");
+        s3.put_object("b", "k", vec![0; 1000]).unwrap();
+        s3.get_object("b", "k", profile()).unwrap();
+        assert_eq!(metrics.get("s3.put"), 1);
+        assert_eq!(metrics.get("s3.get"), 1);
+        assert_eq!(metrics.get("s3.bytes_read"), 1000);
+        assert!(cost.total() > 0.0);
+    }
+
+    #[test]
+    fn zero_copy_views_share_data() {
+        let s3 = store();
+        s3.create_bucket("b");
+        s3.put_object("b", "k", vec![7; 1 << 20]).unwrap();
+        let (a, _) = s3.get_object("b", "k", profile()).unwrap();
+        let (b, _) = s3.get_range("b", "k", 0, 1 << 20, profile()).unwrap();
+        // Same backing allocation.
+        assert!(std::ptr::eq(a.data.as_ptr(), b.data.as_ptr()));
+    }
+}

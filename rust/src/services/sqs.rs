@@ -1,0 +1,429 @@
+//! Simulated SQS — the shuffle substrate (§III-A of the paper).
+//!
+//! Behavioural fidelity targets:
+//! * **Batch limits**: at most 10 messages and 256 KB total per
+//!   `SendMessageBatch`/`ReceiveMessage` call, 256 KB per message.
+//! * **At-least-once delivery**: with configurable probability a message
+//!   is delivered twice (AWS documents duplicates as possible); the
+//!   paper's §VI dedup design (sequence ids per producer) is exercised
+//!   against this.
+//! * **Pricing**: every 64 KB chunk of a request is billed as one SQS
+//!   request ($0.40/M in 2018) — this is why Flint costs more than Spark
+//!   on shuffle-heavy queries.
+//! * **Modeled latency**: a request costs one RTT plus payload streaming
+//!   time; executors drain queues with repeated receive calls, so queues
+//!   with many small batches are slower — reproducing the paper's
+//!   "performance ... dependent on the number of intermediate groups".
+
+use crate::config::FlintConfig;
+use crate::cost::{CostCategory, CostTracker};
+use crate::metrics::Metrics;
+use crate::services::failure::FailureInjector;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// A shuffle message: an opaque body plus the producer/sequence metadata
+/// the dedup layer (§VI) relies on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Message {
+    pub body: Vec<u8>,
+    /// Producing task's unique id (map-side task attempt).
+    pub producer: u64,
+    /// Per-producer monotonically increasing sequence number.
+    pub seq: u64,
+}
+
+impl Message {
+    pub fn new(body: Vec<u8>, producer: u64, seq: u64) -> Message {
+        Message { body, producer, seq }
+    }
+
+    /// Wire size used for limit checks and billing (body + attributes).
+    pub fn wire_bytes(&self) -> usize {
+        self.body.len() + 32
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum SqsError {
+    #[error("no such queue: {0}")]
+    NoSuchQueue(String),
+    #[error("batch has {0} messages; the limit is {1}")]
+    TooManyMessages(usize, usize),
+    #[error("message of {0} bytes exceeds the per-message limit {1}")]
+    MessageTooLarge(usize, usize),
+    #[error("batch of {0} bytes exceeds the per-batch limit {1}")]
+    BatchTooLarge(usize, usize),
+}
+
+#[derive(Default)]
+struct Queue {
+    messages: VecDeque<Message>,
+    /// Delivered but not yet deleted (SQS visibility-timeout model):
+    /// receipt handle → message. On `nack` (or executor failure) these
+    /// return to the queue, exactly as an expired visibility timeout
+    /// would redeliver them.
+    in_flight: std::collections::BTreeMap<u64, Message>,
+    next_handle: u64,
+    /// Total enqueued ever (diagnostics).
+    enqueued: u64,
+}
+
+/// The queue service.
+pub struct SqsService {
+    queues: RwLock<BTreeMap<String, Arc<Mutex<Queue>>>>,
+    rtt_s: f64,
+    mbps: f64,
+    batch_max_msgs: usize,
+    batch_max_bytes: usize,
+    price_per_million: f64,
+    cost: Arc<CostTracker>,
+    metrics: Arc<Metrics>,
+    failure: Arc<FailureInjector>,
+}
+
+/// Billing granularity: every 64 KB of payload counts as one request.
+const CHUNK: usize = 64 * 1024;
+
+impl SqsService {
+    pub fn new(
+        config: &FlintConfig,
+        cost: Arc<CostTracker>,
+        metrics: Arc<Metrics>,
+        failure: Arc<FailureInjector>,
+    ) -> Self {
+        SqsService {
+            queues: RwLock::new(BTreeMap::new()),
+            rtt_s: config.sim.sqs_rtt_s,
+            mbps: config.sim.sqs_mbps,
+            batch_max_msgs: config.sim.sqs_batch_max_msgs,
+            batch_max_bytes: config.sim.sqs_batch_max_bytes,
+            price_per_million: config.pricing.sqs_per_million_requests,
+            cost,
+            metrics,
+            failure,
+        }
+    }
+
+    /// Create a queue (idempotent). The Flint scheduler creates one queue
+    /// per reduce partition before launching a shuffle stage.
+    pub fn create_queue(&self, name: &str) {
+        self.queues
+            .write()
+            .expect("sqs lock")
+            .entry(name.to_string())
+            .or_default();
+        self.metrics.incr("sqs.create_queue");
+    }
+
+    pub fn delete_queue(&self, name: &str) -> Result<(), SqsError> {
+        self.queues
+            .write()
+            .expect("sqs lock")
+            .remove(name)
+            .map(|_| self.metrics.incr("sqs.delete_queue"))
+            .ok_or_else(|| SqsError::NoSuchQueue(name.to_string()))
+    }
+
+    pub fn queue_exists(&self, name: &str) -> bool {
+        self.queues.read().expect("sqs lock").contains_key(name)
+    }
+
+    /// All queue names (diagnostics / leak checks).
+    pub fn queue_names(&self) -> Vec<String> {
+        self.queues.read().expect("sqs lock").keys().cloned().collect()
+    }
+
+    /// Send a batch. Enforces AWS batch limits; injects duplicates per the
+    /// at-least-once model. Returns the modeled request duration.
+    pub fn send_batch(&self, queue: &str, batch: Vec<Message>) -> Result<f64, SqsError> {
+        if batch.len() > self.batch_max_msgs {
+            return Err(SqsError::TooManyMessages(batch.len(), self.batch_max_msgs));
+        }
+        let total: usize = batch.iter().map(Message::wire_bytes).sum();
+        for m in &batch {
+            if m.wire_bytes() > self.batch_max_bytes {
+                return Err(SqsError::MessageTooLarge(m.wire_bytes(), self.batch_max_bytes));
+            }
+        }
+        if total > self.batch_max_bytes {
+            return Err(SqsError::BatchTooLarge(total, self.batch_max_bytes));
+        }
+        let handle = self.handle(queue)?;
+        {
+            let mut q = handle.lock().expect("queue lock");
+            for m in batch {
+                let dup = self.failure.sqs_should_duplicate();
+                if dup {
+                    q.messages.push_back(m.clone());
+                    q.enqueued += 1;
+                    self.metrics.incr("sqs.duplicates_injected");
+                }
+                q.messages.push_back(m);
+                q.enqueued += 1;
+            }
+        }
+        self.charge(total);
+        self.metrics.incr("sqs.send_batch");
+        Ok(self.request_time(total))
+    }
+
+    /// Receive up to `max` messages (capped at the batch limit), each
+    /// paired with a receipt handle. Received messages become *in
+    /// flight*: [`Self::delete_batch`] removes them permanently,
+    /// [`Self::nack`] (executor failure / visibility expiry) returns them
+    /// to the queue. An empty receive is still a billed request — Flint
+    /// reducers poll until the queue is dry, and the paper's cost model
+    /// pays for those polls.
+    pub fn receive_batch(
+        &self,
+        queue: &str,
+        max: usize,
+    ) -> Result<(Vec<(Message, u64)>, f64), SqsError> {
+        let handle = self.handle(queue)?;
+        let mut out = Vec::new();
+        let mut bytes = 0usize;
+        {
+            let mut q = handle.lock().expect("queue lock");
+            while out.len() < max.min(self.batch_max_msgs) {
+                match q.messages.front() {
+                    Some(m) if out.is_empty() || bytes + m.wire_bytes() <= self.batch_max_bytes =>
+                    {
+                        let m = q.messages.pop_front().expect("front checked");
+                        bytes += m.wire_bytes();
+                        let receipt = q.next_handle;
+                        q.next_handle += 1;
+                        q.in_flight.insert(receipt, m.clone());
+                        out.push((m, receipt));
+                    }
+                    _ => break,
+                }
+            }
+        }
+        self.charge(bytes);
+        self.metrics.incr("sqs.receive_batch");
+        self.metrics.add("sqs.messages_received", out.len() as u64);
+        Ok((out, self.request_time(bytes)))
+    }
+
+    /// Delete received messages (a billed request per batch call, like
+    /// AWS `DeleteMessageBatch`). Unknown handles are ignored — deleting
+    /// twice is safe, as on AWS.
+    pub fn delete_batch(&self, queue: &str, receipts: &[u64]) -> Result<f64, SqsError> {
+        let handle = self.handle(queue)?;
+        {
+            let mut q = handle.lock().expect("queue lock");
+            for r in receipts {
+                q.in_flight.remove(r);
+            }
+        }
+        self.charge(0);
+        self.metrics.incr("sqs.delete_batch");
+        Ok(self.request_time(0))
+    }
+
+    /// Return in-flight messages to the queue (visibility timeout expiry
+    /// — what happens when an executor dies mid-drain). Free: AWS bills
+    /// nothing for a timeout.
+    pub fn nack(&self, queue: &str, receipts: &[u64]) -> Result<usize, SqsError> {
+        let handle = self.handle(queue)?;
+        let mut q = handle.lock().expect("queue lock");
+        let mut returned = 0;
+        for r in receipts {
+            if let Some(m) = q.in_flight.remove(r) {
+                q.messages.push_back(m);
+                returned += 1;
+            }
+        }
+        self.metrics.add("sqs.nacked", returned as u64);
+        Ok(returned)
+    }
+
+    /// Messages currently delivered-but-undeleted (diagnostics).
+    pub fn in_flight(&self, queue: &str) -> Result<usize, SqsError> {
+        Ok(self.handle(queue)?.lock().expect("queue lock").in_flight.len())
+    }
+
+    /// Approximate number of messages waiting.
+    pub fn depth(&self, queue: &str) -> Result<usize, SqsError> {
+        Ok(self.handle(queue)?.lock().expect("queue lock").messages.len())
+    }
+
+    /// Total ever enqueued (includes injected duplicates).
+    pub fn enqueued_total(&self, queue: &str) -> Result<u64, SqsError> {
+        Ok(self.handle(queue)?.lock().expect("queue lock").enqueued)
+    }
+
+    fn handle(&self, queue: &str) -> Result<Arc<Mutex<Queue>>, SqsError> {
+        self.queues
+            .read()
+            .expect("sqs lock")
+            .get(queue)
+            .cloned()
+            .ok_or_else(|| SqsError::NoSuchQueue(queue.to_string()))
+    }
+
+    fn charge(&self, payload_bytes: usize) {
+        // ceil(payload / 64KB) chunks, min 1 request.
+        let requests = payload_bytes.div_ceil(CHUNK).max(1);
+        self.cost.charge(
+            CostCategory::SqsRequests,
+            requests as f64 * self.price_per_million / 1e6,
+        );
+        self.metrics.add("sqs.billed_requests", requests as u64);
+    }
+
+    fn request_time(&self, payload_bytes: usize) -> f64 {
+        self.rtt_s + payload_bytes as f64 / (self.mbps * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn service(dup_prob: f64) -> (SqsService, Arc<Metrics>, Arc<CostTracker>) {
+        let cfg = FlintConfig::default();
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Arc::new(Metrics::new());
+        let failure = Arc::new(FailureInjector::new(42, 0.0, dup_prob));
+        let sqs = SqsService::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics), failure);
+        (sqs, metrics, cost)
+    }
+
+    fn msg(body: &[u8], seq: u64) -> Message {
+        Message::new(body.to_vec(), 1, seq)
+    }
+
+    #[test]
+    fn send_receive_fifo() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        sqs.send_batch("q", vec![msg(b"a", 0), msg(b"b", 1)]).unwrap();
+        let (got, _) = sqs.receive_batch("q", 10).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0.body, b"a");
+        assert_eq!(got[1].0.body, b"b");
+        let (empty, _) = sqs.receive_batch("q", 10).unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn ack_nack_visibility_semantics() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        sqs.send_batch("q", vec![msg(b"a", 0), msg(b"b", 1), msg(b"c", 2)]).unwrap();
+        let (got, _) = sqs.receive_batch("q", 10).unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(sqs.depth("q").unwrap(), 0, "all in flight");
+        assert_eq!(sqs.in_flight("q").unwrap(), 3);
+        // Ack the first, nack the rest (executor died mid-drain).
+        sqs.delete_batch("q", &[got[0].1]).unwrap();
+        let returned = sqs.nack("q", &[got[1].1, got[2].1]).unwrap();
+        assert_eq!(returned, 2);
+        assert_eq!(sqs.in_flight("q").unwrap(), 0);
+        // Retry sees exactly the unacked messages.
+        let (retry, _) = sqs.receive_batch("q", 10).unwrap();
+        let bodies: Vec<&[u8]> = retry.iter().map(|(m, _)| m.body.as_slice()).collect();
+        assert_eq!(bodies, vec![b"b" as &[u8], b"c"]);
+        // Double delete is harmless.
+        sqs.delete_batch("q", &[got[0].1]).unwrap();
+    }
+
+    #[test]
+    fn batch_limits_enforced() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        // 11 messages
+        let batch: Vec<Message> = (0..11).map(|i| msg(b"x", i)).collect();
+        assert!(matches!(
+            sqs.send_batch("q", batch),
+            Err(SqsError::TooManyMessages(11, 10))
+        ));
+        // oversize single message
+        let big = vec![msg(&vec![0u8; 300 * 1024], 0)];
+        assert!(matches!(sqs.send_batch("q", big), Err(SqsError::MessageTooLarge(_, _))));
+        // oversize batch total
+        let batch: Vec<Message> = (0..4).map(|i| msg(&vec![0u8; 70 * 1024], i)).collect();
+        assert!(matches!(sqs.send_batch("q", batch), Err(SqsError::BatchTooLarge(_, _))));
+    }
+
+    #[test]
+    fn receive_respects_batch_byte_limit() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        for i in 0..3 {
+            sqs.send_batch("q", vec![msg(&vec![0u8; 120 * 1024], i)]).unwrap();
+        }
+        let (got, _) = sqs.receive_batch("q", 10).unwrap();
+        // 2 × ~120KB fits under 256KB; the third does not.
+        assert_eq!(got.len(), 2);
+        let (rest, _) = sqs.receive_batch("q", 10).unwrap();
+        assert_eq!(rest.len(), 1);
+    }
+
+    #[test]
+    fn redelivery_after_nack_preserves_dedup_metadata() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        sqs.send_batch("q", vec![Message::new(b"x".to_vec(), 77, 5)]).unwrap();
+        let (got, _) = sqs.receive_batch("q", 10).unwrap();
+        sqs.nack("q", &[got[0].1]).unwrap();
+        let (again, _) = sqs.receive_batch("q", 10).unwrap();
+        assert_eq!(again[0].0.producer, 77);
+        assert_eq!(again[0].0.seq, 5);
+    }
+
+    #[test]
+    fn duplicates_injected_at_configured_rate() {
+        let (sqs, metrics, _) = service(0.2);
+        sqs.create_queue("q");
+        for b in 0..100u64 {
+            let batch: Vec<Message> = (0..10).map(|i| msg(b"d", b * 10 + i)).collect();
+            sqs.send_batch("q", batch).unwrap();
+        }
+        let dups = metrics.get("sqs.duplicates_injected");
+        // 1000 messages at 20%: expect ~200.
+        assert!((120..280).contains(&(dups as usize)), "dups={dups}");
+        assert_eq!(sqs.depth("q").unwrap() as u64, 1000 + dups);
+    }
+
+    #[test]
+    fn billing_chunks_counted() {
+        let (sqs, metrics, cost) = service(0.0);
+        sqs.create_queue("q");
+        sqs.send_batch("q", vec![msg(&vec![0u8; 100 * 1024], 0)]).unwrap();
+        // 100KB+32B => 2 chunks.
+        assert_eq!(metrics.get("sqs.billed_requests"), 2);
+        let expected = 2.0 * 0.40 / 1e6;
+        assert!((cost.total() - expected).abs() < 1e-12);
+        // empty receive still bills one request
+        let before = metrics.get("sqs.billed_requests");
+        sqs.receive_batch("q", 10).unwrap();
+        sqs.receive_batch("q", 10).unwrap();
+        assert!(metrics.get("sqs.billed_requests") > before);
+    }
+
+    #[test]
+    fn missing_queue_errors() {
+        let (sqs, _, _) = service(0.0);
+        assert!(matches!(
+            sqs.send_batch("ghost", vec![]),
+            Err(SqsError::NoSuchQueue(_))
+        ));
+        assert!(matches!(sqs.receive_batch("ghost", 1), Err(SqsError::NoSuchQueue(_))));
+        assert!(matches!(sqs.delete_queue("ghost"), Err(SqsError::NoSuchQueue(_))));
+    }
+
+    #[test]
+    fn request_time_includes_rtt_and_bandwidth() {
+        let (sqs, _, _) = service(0.0);
+        sqs.create_queue("q");
+        let t_small = sqs.send_batch("q", vec![msg(b"x", 0)]).unwrap();
+        let t_big = sqs
+            .send_batch("q", vec![msg(&vec![0u8; 200 * 1024], 1)])
+            .unwrap();
+        assert!(t_big > t_small);
+        assert!(t_small >= 0.0015);
+    }
+}

@@ -1,0 +1,89 @@
+//! Hybrid virtual-time accounting.
+//!
+//! Nothing in this repo talks to real AWS, so query latency cannot be
+//! measured directly. Instead every simulated service charges a *modeled*
+//! duration, real compute charges a *measured* duration, and each task
+//! accumulates both into a [`Timeline`]. Stage latency is then the
+//! makespan of its task timelines scheduled onto `K` concurrency slots —
+//! exactly what barrier-synchronized stage execution on a K-way-throttled
+//! Lambda pool (or a K-core cluster) yields.
+//!
+//! See DESIGN.md §5 for the calibration constants and rationale.
+
+pub mod makespan;
+pub mod timeline;
+
+pub use makespan::{makespan, makespan_assignments};
+pub use timeline::{Component, Timeline};
+
+use std::time::Instant;
+
+/// A stopwatch for the *measured* part of the hybrid model: wraps real
+/// monotonic time around actual Rust/PJRT compute.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed wall-clock seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Current thread's CPU time in seconds. Task compute is measured with
+/// this rather than wall clock so that running many simulated executors
+/// on few host cores doesn't inflate per-task compute through scheduler
+/// contention (the simulated Lambdas would each have had a core).
+pub fn thread_cpu_time_s() -> f64 {
+    let mut ts = libc::timespec { tv_sec: 0, tv_nsec: 0 };
+    let rc = unsafe { libc::clock_gettime(libc::CLOCK_THREAD_CPUTIME_ID, &mut ts) };
+    debug_assert_eq!(rc, 0);
+    ts.tv_sec as f64 + ts.tv_nsec as f64 * 1e-9
+}
+
+/// Stopwatch over thread CPU time (see [`thread_cpu_time_s`]).
+pub struct CpuStopwatch {
+    start: f64,
+}
+
+impl CpuStopwatch {
+    pub fn start() -> CpuStopwatch {
+        CpuStopwatch { start: thread_cpu_time_s() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        (thread_cpu_time_s() - self.start).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(sw.elapsed_s() >= 0.004);
+    }
+
+    #[test]
+    fn cpu_stopwatch_counts_work_not_sleep() {
+        let sw = CpuStopwatch::start();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let after_sleep = sw.elapsed_s();
+        assert!(after_sleep < 0.015, "sleep must not count as CPU: {after_sleep}");
+        // Burn some CPU.
+        let mut x = 0u64;
+        for i in 0..20_000_000u64 {
+            x = x.wrapping_mul(31).wrapping_add(i);
+        }
+        std::hint::black_box(x);
+        assert!(sw.elapsed_s() > after_sleep, "CPU work must advance the clock");
+    }
+}

@@ -1,0 +1,182 @@
+//! Per-task virtual-time ledger.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Where a task spent its (virtual) time. The breakdown mirrors the
+/// paper's discussion: S3 streaming dominates, SQS round trips explain
+//  Flint's shuffle sensitivity, pipe overhead explains PySpark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Component {
+    /// Lambda container cold-start provisioning.
+    ColdStart,
+    /// Warm container dispatch latency.
+    WarmStart,
+    /// Request payload decode / task deserialization.
+    PayloadDecode,
+    /// Streaming reads from the object store.
+    S3Read,
+    /// Writes to the object store (results, spilled payloads).
+    S3Write,
+    /// Sending shuffle message batches.
+    SqsSend,
+    /// Receiving/draining shuffle message batches.
+    SqsReceive,
+    /// Real, measured compute (parse + kernels).
+    Compute,
+    /// Per-record JVM↔Python serialization (PySpark baseline only).
+    PipeOverhead,
+    /// Driver-side work between stages.
+    Scheduler,
+    /// Anything else (response encode, cleanup, ...).
+    Other,
+}
+
+impl Component {
+    pub const ALL: [Component; 11] = [
+        Component::ColdStart,
+        Component::WarmStart,
+        Component::PayloadDecode,
+        Component::S3Read,
+        Component::S3Write,
+        Component::SqsSend,
+        Component::SqsReceive,
+        Component::Compute,
+        Component::PipeOverhead,
+        Component::Scheduler,
+        Component::Other,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Component::ColdStart => "cold_start",
+            Component::WarmStart => "warm_start",
+            Component::PayloadDecode => "payload_decode",
+            Component::S3Read => "s3_read",
+            Component::S3Write => "s3_write",
+            Component::SqsSend => "sqs_send",
+            Component::SqsReceive => "sqs_receive",
+            Component::Compute => "compute",
+            Component::PipeOverhead => "pipe_overhead",
+            Component::Scheduler => "scheduler",
+            Component::Other => "other",
+        }
+    }
+}
+
+/// Accumulated virtual time, broken down by component. Cheap to merge;
+/// a task carries one, a stage aggregates many.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Timeline {
+    parts: BTreeMap<Component, f64>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Charge `secs` of virtual time to `component`.
+    pub fn charge(&mut self, component: Component, secs: f64) {
+        debug_assert!(secs >= 0.0, "negative time charge: {secs}");
+        if secs > 0.0 {
+            *self.parts.entry(component).or_insert(0.0) += secs;
+        }
+    }
+
+    /// Total virtual duration of this timeline.
+    pub fn total(&self) -> f64 {
+        self.parts.values().sum()
+    }
+
+    pub fn get(&self, component: Component) -> f64 {
+        self.parts.get(&component).copied().unwrap_or(0.0)
+    }
+
+    /// Merge another timeline into this one (component-wise sum).
+    pub fn merge(&mut self, other: &Timeline) {
+        for (c, v) in &other.parts {
+            *self.parts.entry(*c).or_insert(0.0) += v;
+        }
+    }
+
+    /// Non-zero components in a stable order.
+    pub fn breakdown(&self) -> Vec<(Component, f64)> {
+        self.parts.iter().map(|(c, v)| (*c, *v)).collect()
+    }
+
+    /// Fraction of total attributable to `component` (0 if empty).
+    pub fn share(&self, component: Component) -> f64 {
+        let total = self.total();
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.get(component) / total
+        }
+    }
+}
+
+impl fmt::Display for Timeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s [", self.total())?;
+        for (i, (c, v)) in self.breakdown().iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{}={:.3}", c.name(), v)?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn charge_and_total() {
+        let mut t = Timeline::new();
+        t.charge(Component::S3Read, 1.5);
+        t.charge(Component::Compute, 0.5);
+        t.charge(Component::S3Read, 0.5);
+        assert!((t.total() - 2.5).abs() < 1e-12);
+        assert!((t.get(Component::S3Read) - 2.0).abs() < 1e-12);
+        assert_eq!(t.get(Component::SqsSend), 0.0);
+    }
+
+    #[test]
+    fn merge_sums_components() {
+        let mut a = Timeline::new();
+        a.charge(Component::Compute, 1.0);
+        let mut b = Timeline::new();
+        b.charge(Component::Compute, 2.0);
+        b.charge(Component::ColdStart, 0.25);
+        a.merge(&b);
+        assert!((a.get(Component::Compute) - 3.0).abs() < 1e-12);
+        assert!((a.get(Component::ColdStart) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_charges_ignored() {
+        let mut t = Timeline::new();
+        t.charge(Component::Other, 0.0);
+        assert_eq!(t.breakdown().len(), 0);
+    }
+
+    #[test]
+    fn share_computation() {
+        let mut t = Timeline::new();
+        t.charge(Component::S3Read, 3.0);
+        t.charge(Component::Compute, 1.0);
+        assert!((t.share(Component::S3Read) - 0.75).abs() < 1e-12);
+        assert_eq!(Timeline::new().share(Component::Compute), 0.0);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let mut t = Timeline::new();
+        t.charge(Component::Compute, 1.0);
+        let s = format!("{t}");
+        assert!(s.contains("compute=1.000"), "{s}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Human-readable formatting for bytes and durations in reports.
+
+/// `1536 → "1.5 KiB"`, `215 * 2^30 → "215.0 GiB"`.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[unit])
+    }
+}
+
+/// Seconds to `"1h 02m"`, `"3m 05s"`, `"12.3s"`, `"45ms"`.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 0.001 {
+        format!("{:.0}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.0}ms", secs * 1e3)
+    } else if secs < 60.0 {
+        format!("{secs:.1}s")
+    } else if secs < 3600.0 {
+        let m = (secs / 60.0).floor();
+        format!("{m:.0}m {:02.0}s", secs - m * 60.0)
+    } else {
+        let h = (secs / 3600.0).floor();
+        let m = ((secs - h * 3600.0) / 60.0).floor();
+        format!("{h:.0}h {m:02.0}m")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(999), "999 B");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(215 * 1024 * 1024 * 1024), "215.0 GiB");
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(human_duration(0.0000005), "0us");
+        assert_eq!(human_duration(0.045), "45ms");
+        assert_eq!(human_duration(12.34), "12.3s");
+        assert_eq!(human_duration(185.0), "3m 05s");
+        assert_eq!(human_duration(3720.0), "1h 02m");
+    }
+}

@@ -1,0 +1,56 @@
+//! Monotonic id generation for requests, invocations, messages, and
+//! shuffle sequence numbers. Thread-safe; ids are unique per generator.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A thread-safe monotonically increasing id source.
+#[derive(Debug, Default)]
+pub struct IdGen {
+    next: AtomicU64,
+}
+
+impl IdGen {
+    pub fn new() -> IdGen {
+        IdGen { next: AtomicU64::new(0) }
+    }
+
+    /// Allocate the next id.
+    pub fn next(&self) -> u64 {
+        self.next.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Number of ids allocated so far.
+    pub fn issued(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn sequential_ids() {
+        let g = IdGen::new();
+        assert_eq!(g.next(), 0);
+        assert_eq!(g.next(), 1);
+        assert_eq!(g.issued(), 2);
+    }
+
+    #[test]
+    fn unique_across_threads() {
+        let g = Arc::new(IdGen::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let g = Arc::clone(&g);
+            handles.push(std::thread::spawn(move || {
+                (0..1000).map(|_| g.next()).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 8000, "no duplicate ids");
+    }
+}

@@ -1,0 +1,531 @@
+//! Minimal JSON value model, encoder, and recursive-descent parser.
+//!
+//! Used for the Lambda request/response payloads (the paper serializes
+//! task descriptors into the invocation payload), config files, and the
+//! bench harness's machine-readable reports. `serde` is not available in
+//! the offline vendor set, so this is self-contained.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON document node. Object keys are ordered (BTreeMap) so encoded
+/// payloads are byte-stable — payload-size accounting and dedup hashing
+/// rely on that.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(BTreeMap::new())
+    }
+
+    /// Builder-style insert; panics if `self` is not an object.
+    pub fn set(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(m) => {
+                m.insert(key.to_string(), value.into());
+            }
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|f| f as i64)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|f| if f >= 0.0 { Some(f as u64) } else { None })
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Required-field accessors used by payload decoding; errors carry the
+    /// key name so malformed payloads are diagnosable.
+    pub fn req_str(&self, key: &str) -> Result<&str, JsonError> {
+        self.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    pub fn req_u64(&self, key: &str) -> Result<u64, JsonError> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    pub fn req_i64(&self, key: &str) -> Result<i64, JsonError> {
+        self.get(key)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, JsonError> {
+        self.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    pub fn req_arr(&self, key: &str) -> Result<&[Json], JsonError> {
+        self.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| JsonError::Missing(key.to_string()))
+    }
+
+    /// Serialize to a compact string.
+    pub fn encode(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<Json, JsonError> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(JsonError::Trailing(p.pos));
+        }
+        Ok(v)
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(v: i64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(v: u32) -> Json {
+        Json::Num(v as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum JsonError {
+    #[error("unexpected end of input")]
+    Eof,
+    #[error("unexpected byte {1:?} at offset {0}")]
+    Unexpected(usize, char),
+    #[error("trailing characters at offset {0}")]
+    Trailing(usize),
+    #[error("invalid number at offset {0}")]
+    BadNumber(usize),
+    #[error("invalid string escape at offset {0}")]
+    BadEscape(usize),
+    #[error("missing or mistyped field `{0}`")]
+    Missing(String),
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8, JsonError> {
+        self.bytes.get(self.pos).copied().ok_or(JsonError::Eof)
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        let got = self.peek()?;
+        if got != b {
+            return Err(JsonError::Unexpected(self.pos, got as char));
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            b'-' | b'0'..=b'9' => self.number(),
+            c => Err(JsonError::Unexpected(self.pos, c as char)),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, value: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(value)
+        } else {
+            Err(JsonError::Unexpected(self.pos, self.bytes[self.pos] as char))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek()? == b'-' {
+            self.pos += 1;
+        }
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Json::Num)
+            .ok_or(JsonError::BadNumber(start))
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let b = self.peek()?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek()?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(JsonError::Eof);
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| JsonError::BadEscape(self.pos))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| JsonError::BadEscape(self.pos))?;
+                            self.pos += 4;
+                            // Surrogate pairs: accept and combine.
+                            let c = if (0xD800..0xDC00).contains(&code) {
+                                if self.bytes.get(self.pos) == Some(&b'\\')
+                                    && self.bytes.get(self.pos + 1) == Some(&b'u')
+                                {
+                                    let hex2 = std::str::from_utf8(
+                                        &self.bytes[self.pos + 2..self.pos + 6],
+                                    )
+                                    .map_err(|_| JsonError::BadEscape(self.pos))?;
+                                    let lo = u32::from_str_radix(hex2, 16)
+                                        .map_err(|_| JsonError::BadEscape(self.pos))?;
+                                    self.pos += 6;
+                                    0x10000 + ((code - 0xD800) << 10) + (lo - 0xDC00)
+                                } else {
+                                    return Err(JsonError::BadEscape(self.pos));
+                                }
+                            } else {
+                                code
+                            };
+                            out.push(char::from_u32(c).ok_or(JsonError::BadEscape(self.pos))?);
+                        }
+                        _ => return Err(JsonError::BadEscape(self.pos - 1)),
+                    }
+                }
+                _ => {
+                    // Re-decode UTF-8 from the raw byte stream.
+                    let start = self.pos - 1;
+                    let len = utf8_len(b);
+                    if start + len > self.bytes.len() {
+                        return Err(JsonError::Eof);
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..start + len])
+                        .map_err(|_| JsonError::BadEscape(start))?;
+                    out.push_str(s);
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                c => return Err(JsonError::Unexpected(self.pos, c as char)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            map.insert(key, value);
+            self.skip_ws();
+            match self.peek()? {
+                b',' => {
+                    self.pos += 1;
+                }
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                c => return Err(JsonError::Unexpected(self.pos, c as char)),
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.encode())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_object() {
+        let j = Json::obj()
+            .set("task", 3u64)
+            .set("stage", 1u64)
+            .set("name", "flint")
+            .set("ok", true)
+            .set("ratio", 0.5)
+            .set("items", Json::Arr(vec![Json::from(1u64), Json::from(2u64)]));
+        let text = j.encode();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(j, back);
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, {"b": "x\ny"}, null], "c": -2.5e3}"#).unwrap();
+        assert_eq!(j.get("c").unwrap().as_f64(), Some(-2500.0));
+        let arr = j.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].as_i64(), Some(1));
+        assert_eq!(arr[1].get("b").unwrap().as_str(), Some("x\ny"));
+        assert_eq!(arr[2], Json::Null);
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(matches!(Json::parse("{} x"), Err(JsonError::Trailing(_))));
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        assert!(Json::parse(r#"{"a": "#).is_err());
+        assert!(Json::parse(r#"["#).is_err());
+        assert!(Json::parse(r#""abc"#).is_err());
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let s = "tab\t quote\" backslash\\ newline\n unicode \u{1F600} ctrl\u{1}";
+        let j = Json::Str(s.to_string());
+        assert_eq!(Json::parse(&j.encode()).unwrap().as_str(), Some(s));
+    }
+
+    #[test]
+    fn surrogate_pair_parses() {
+        let j = Json::parse(r#""😀""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+    }
+
+    #[test]
+    fn integers_encode_without_fraction() {
+        assert_eq!(Json::from(42u64).encode(), "42");
+        assert_eq!(Json::from(-3i64).encode(), "-3");
+        assert_eq!(Json::from(1.5).encode(), "1.5");
+    }
+
+    #[test]
+    fn required_field_errors_name_the_key() {
+        let j = Json::obj().set("a", 1u64);
+        let err = j.req_str("missing").unwrap_err();
+        assert_eq!(err, JsonError::Missing("missing".into()));
+    }
+
+    #[test]
+    fn encoding_is_stable() {
+        // BTreeMap ordering => byte-stable output regardless of insert order.
+        let a = Json::obj().set("z", 1u64).set("a", 2u64);
+        let b = Json::obj().set("a", 2u64).set("z", 1u64);
+        assert_eq!(a.encode(), b.encode());
+    }
+}

@@ -1,0 +1,63 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline with a narrow vendored crate set
+//! (no `rand`, `serde`, `clap`, `proptest`, `criterion`), so this module
+//! carries minimal in-house replacements: a PCG RNG, a JSON codec, summary
+//! statistics, a scoped thread pool, and a property-testing harness.
+
+pub mod humansize;
+pub mod idgen;
+pub mod json;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use humansize::{human_bytes, human_duration};
+pub use idgen::IdGen;
+pub use rng::Pcg64;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+
+/// FNV-1a 64-bit hash, used wherever the paper's system needs a stable,
+/// portable hash (hash partitioning, dedup keys). Deliberately independent
+/// of `std::hash` so partition assignment is reproducible across runs and
+/// platforms.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable hash of an i64 key (the common shuffle key type).
+#[inline]
+pub fn hash_i64(k: i64) -> u64 {
+    fnv1a64(&k.to_le_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hash_i64_distinct() {
+        let a = hash_i64(0);
+        let b = hash_i64(1);
+        let c = hash_i64(-1);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_ne!(a, c);
+    }
+}

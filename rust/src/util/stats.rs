@@ -1,0 +1,127 @@
+//! Summary statistics for the bench harness: mean, standard deviation,
+//! 95% confidence intervals (Student t for the small trial counts the
+//! paper uses — 5 Flint trials, 3 cluster trials), and percentiles.
+
+/// Summary of a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Half-width of the 95% confidence interval of the mean.
+    pub ci95: f64,
+}
+
+/// Two-sided 95% Student-t critical values by degrees of freedom (1..=30);
+/// beyond 30 we use the normal 1.96.
+const T95: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, 2.201, 2.179, 2.160,
+    2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, 2.080, 2.074, 2.069, 2.064, 2.060, 2.056,
+    2.052, 2.048, 2.045, 2.042,
+];
+
+pub fn t95(df: usize) -> f64 {
+    if df == 0 {
+        f64::INFINITY
+    } else if df <= 30 {
+        T95[df - 1]
+    } else {
+        1.96
+    }
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n as f64 - 1.0)
+        } else {
+            0.0
+        };
+        let std = var.sqrt();
+        let ci95 = if n > 1 { t95(n - 1) * std / (n as f64).sqrt() } else { 0.0 };
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        Summary { n, mean, std, min, max, ci95 }
+    }
+
+    /// The paper's Table I style: `mean [lo - hi]`. Integer rendering at
+    /// paper magnitudes; two decimals for small (measured-mode) values.
+    pub fn fmt_ci(&self, unit_scale: f64) -> String {
+        let digits: usize = if self.mean * unit_scale < 10.0 { 2 } else { 0 };
+        format!(
+            "{:.digits$} [{:.digits$} - {:.digits$}]",
+            self.mean * unit_scale,
+            (self.mean - self.ci95) * unit_scale,
+            (self.mean + self.ci95) * unit_scale,
+        )
+    }
+}
+
+/// Percentile with linear interpolation (p in [0,100]). Sorts a copy.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    assert!(!samples.is_empty());
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // t(4) = 2.776
+        let expect = 2.776 * (2.5f64).sqrt() / (5f64).sqrt();
+        assert!((s.ci95 - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_has_zero_ci() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.ci95, 0.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.mean, 7.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&v, 0.0), 10.0);
+        assert_eq!(percentile(&v, 100.0), 40.0);
+        assert!((percentile(&v, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_table_monotone_towards_normal() {
+        assert!(t95(1) > t95(2));
+        assert!(t95(30) > t95(31));
+        assert_eq!(t95(1000), 1.96);
+    }
+
+    #[test]
+    fn fmt_ci_matches_paper_style() {
+        let s = Summary::of(&[100.0, 102.0, 101.0, 99.0, 103.0]);
+        let text = s.fmt_ci(1.0);
+        assert!(text.starts_with("101 ["), "{text}");
+    }
+}

@@ -1,0 +1,247 @@
+//! A small fixed-size thread pool for executing simulated Lambda
+//! invocations and cluster executor slots concurrently.
+//!
+//! tokio is unavailable offline; the coordinator's concurrency needs are
+//! simple fan-out/fan-in per stage, which `std::thread` + channels cover.
+//! The pool is shared and long-lived (building threads per stage would
+//! skew the hot-path profile).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (min 1).
+    pub fn new(size: usize) -> ThreadPool {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::Builder::new()
+                    .name(format!("flint-pool-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().expect("pool receiver poisoned");
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                // Panics in jobs must not kill the worker:
+                                // the submitting side observes them through
+                                // its result channel instead.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                queued.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.queued.load(Ordering::SeqCst)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Box::new(job))
+            .expect("pool channel closed");
+    }
+
+    /// Run a closure over each item concurrently and collect results in
+    /// input order. Panics in a worker propagate as Err strings.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<Result<R, String>>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx): (Sender<(usize, Result<R, String>)>, Receiver<_>) = channel();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let out = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|e| panic_message(e.as_ref()));
+                let _ = rtx.send((i, out));
+            });
+        }
+        drop(rtx);
+        let mut results: Vec<Option<Result<R, String>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("pool worker dropped result channel");
+            results[i] = Some(r);
+        }
+        results.into_iter().map(|r| r.expect("all results filled")).collect()
+    }
+}
+
+/// Run `f` over `items` on up to `workers` scoped threads, preserving
+/// input order. Unlike [`ThreadPool::map`], borrows are allowed (no
+/// `'static` bound) — the stage driver passes contexts by reference.
+/// Panics propagate as `Err(message)` per item.
+pub fn scoped_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<Result<R, String>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<R, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let out = catch_unwind(AssertUnwindSafe(|| f(i, &items[i])))
+                    .map_err(|e| panic_message(e.as_ref()));
+                *results[i].lock().expect("scoped_map slot") = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().expect("slot lock").expect("slot filled"))
+        .collect()
+}
+
+fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100u64).collect(), |x| x * 2);
+        let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_concurrently() {
+        let pool = ThreadPool::new(8);
+        let counter = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&counter);
+        let p2 = Arc::clone(&peak);
+        pool.map((0..32).collect::<Vec<u32>>(), move |_| {
+            let now = c2.fetch_add(1, Ordering::SeqCst) + 1;
+            p2.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            c2.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(peak.load(Ordering::SeqCst) > 1, "expected parallelism");
+    }
+
+    #[test]
+    fn panic_is_captured_not_fatal() {
+        let pool = ThreadPool::new(2);
+        let out = pool.map(vec![1u32, 2, 3], |x| {
+            if x == 2 {
+                panic!("boom {x}");
+            }
+            x
+        });
+        assert_eq!(out[0], Ok(1));
+        assert!(out[1].as_ref().unwrap_err().contains("boom"));
+        assert_eq!(out[2], Ok(3));
+        // Pool still usable after a panic.
+        let again = pool.map(vec![10u32], |x| x + 1);
+        assert_eq!(again[0], Ok(11));
+    }
+
+    #[test]
+    fn zero_size_clamps_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map(vec![5u8], |x| x);
+        assert_eq!(out[0], Ok(5));
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_borrows() {
+        let data: Vec<u64> = (0..50).collect();
+        let offset = 100u64; // borrowed by the closure, not moved
+        let out = scoped_map(&data, 8, |i, x| x * 2 + offset + i as u64 * 0);
+        let vals: Vec<u64> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(vals, (0..50).map(|x| x * 2 + 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_map_captures_panics() {
+        let data = vec![1u32, 2, 3];
+        let out = scoped_map(&data, 2, |_, x| {
+            if *x == 2 {
+                panic!("bad item");
+            }
+            *x
+        });
+        assert_eq!(out[0], Ok(1));
+        assert!(out[1].as_ref().unwrap_err().contains("bad item"));
+        assert_eq!(out[2], Ok(3));
+    }
+
+    #[test]
+    fn scoped_map_empty() {
+        let out: Vec<Result<u32, String>> = scoped_map(&[] as &[u32], 4, |_, x| *x);
+        assert!(out.is_empty());
+    }
+}

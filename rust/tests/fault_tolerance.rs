@@ -1,0 +1,210 @@
+//! Robustness (§VI of the paper): executor failures overcome by retries,
+//! SQS at-least-once duplicates overcome by sequence-id dedup, the 300 s
+//! duration cap overcome by executor chaining, and the 6 MB payload cap
+//! overcome by S3 spill.
+
+use flint::compute::oracle;
+use flint::compute::queries::{QueryId, QueryResult};
+use flint::config::FlintConfig;
+use flint::data::{generate_taxi_dataset, Dataset};
+use flint::exec::{Engine, FlintEngine};
+use flint::services::SimEnv;
+
+const TRIPS: u64 = 20_000;
+
+fn cfg() -> FlintConfig {
+    let mut c = FlintConfig::for_tests();
+    c.data.object_bytes = 512 * 1024;
+    c.flint.input_split_bytes = 256 * 1024;
+    c.flint.use_pjrt = false;
+    c
+}
+
+fn setup(c: FlintConfig) -> (SimEnv, Dataset) {
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", TRIPS);
+    (env, ds)
+}
+
+#[test]
+fn sqs_duplicates_do_not_corrupt_results() {
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.25; // aggressive at-least-once
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    for q in [QueryId::Q1, QueryId::Q4, QueryId::Q5] {
+        let expect = oracle::evaluate(&env, &ds, q);
+        let report = flint.run_query(q, &ds).unwrap();
+        assert!(
+            report.result.approx_eq(&expect),
+            "{q} under duplicates: {:?} vs {:?}",
+            report.result,
+            expect
+        );
+        assert!(report.duplicates_dropped > 0, "{q}: dedup must have fired");
+    }
+}
+
+#[test]
+fn without_dedup_duplicates_corrupt_counts() {
+    // Negative control: disabling §VI dedup under duplicate injection
+    // must overcount — proving the dedup test above is load-bearing.
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.5;
+    c.flint.dedup_enabled = false;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q4);
+    let report = flint.run_query(QueryId::Q4, &ds).unwrap();
+    let (QueryResult::Buckets(got), QueryResult::Buckets(want)) = (&report.result, &expect)
+    else {
+        panic!()
+    };
+    let got_total: f64 = got.iter().map(|(_, _, c)| c).sum();
+    let want_total: f64 = want.iter().map(|(_, _, c)| c).sum();
+    assert!(
+        got_total > want_total,
+        "duplicates must inflate counts without dedup ({got_total} vs {want_total})"
+    );
+}
+
+#[test]
+fn random_lambda_failures_are_retried_to_success() {
+    let mut c = cfg();
+    c.sim.lambda_failure_prob = 0.10;
+    c.flint.max_task_retries = 6;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    for q in [QueryId::Q0, QueryId::Q1] {
+        let expect = oracle::evaluate(&env, &ds, q);
+        let report = flint.run_query(q, &ds).unwrap();
+        assert!(report.result.approx_eq(&expect), "{q} under failures");
+    }
+    assert!(
+        env.metrics().get("scheduler.task_retries") > 0,
+        "failures must actually have occurred"
+    );
+}
+
+#[test]
+fn forced_map_crash_mid_task_is_exactly_once() {
+    // Crash a specific map task after it processed its first block; the
+    // retry re-sends deterministic (producer, seq) messages and dedup
+    // keeps the answer exact.
+    let (env, ds) = setup(cfg());
+    env.failure().force_task_failure(0, 1, 0); // stage 0, task 1, first attempt
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q4);
+    let report = flint.run_query(QueryId::Q4, &ds).unwrap();
+    assert_eq!(report.retries, 1);
+    assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+}
+
+#[test]
+fn forced_reducer_crash_redelivers_messages() {
+    let (env, ds) = setup(cfg());
+    env.failure().force_task_failure(1, 0, 0); // first reduce task, first attempt
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert_eq!(report.retries, 1);
+    assert!(report.result.approx_eq(&expect));
+    assert!(env.metrics().get("sqs.nacked") > 0, "visibility-timeout path exercised");
+}
+
+#[test]
+fn task_fails_after_max_retries() {
+    let mut c = cfg();
+    c.flint.max_task_retries = 2;
+    let (env, ds) = setup(c);
+    for attempt in 0..=2 {
+        env.failure().force_task_failure(0, 0, attempt);
+    }
+    let flint = FlintEngine::new(env.clone());
+    let err = flint.run_query(QueryId::Q0, &ds).unwrap_err();
+    assert!(format!("{err:#}").contains("failed after"), "{err:#}");
+}
+
+#[test]
+fn chaining_past_duration_cap_preserves_results() {
+    // A tiny duration cap forces map tasks to checkpoint + chain
+    // (§III-B); results must be identical and chains visible. Splits are
+    // sized so one link's S3 read + work exceeds the budget while the
+    // final shuffle flush still fits in a dedicated emit link.
+    let mut c = cfg();
+    c.data.object_bytes = 2 * 1024 * 1024;
+    c.flint.input_split_bytes = 2 * 1024 * 1024;
+    c.sim.s3_flint_mbps = 85.0; // chain thresholds tuned to this rate
+    c.sim.lambda_time_limit_s = 0.06;
+    // Budget (cap - margin = 43 ms) sits *below* one split's modeled S3
+    // read (~45.5 ms incl. payload decode), so every task must chain at
+    // least once no matter how fast the host's measured compute is; the
+    // cap leaves ~14 ms of headroom for one (debug-slow) compute block.
+    c.sim.lambda_chain_margin_s = 0.017;
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", 120_000);
+    let flint = FlintEngine::new(env.clone());
+    for q in [QueryId::Q0, QueryId::Q1] {
+        let expect = oracle::evaluate(&env, &ds, q);
+        let report = flint.run_query(q, &ds).unwrap();
+        assert!(report.result.approx_eq(&expect), "{q} chained: {:?}", report.result);
+        assert!(report.chains > 0, "{q}: chaining must have fired");
+        assert_eq!(report.retries, 0, "{q}: chaining is not failure");
+        assert!(
+            report.invocations > report.tasks,
+            "chained tasks re-invoke ({} invocations / {} tasks)",
+            report.invocations,
+            report.tasks
+        );
+    }
+}
+
+#[test]
+fn chaining_and_duplicates_compose() {
+    let mut c = cfg();
+    c.data.object_bytes = 2 * 1024 * 1024;
+    c.flint.input_split_bytes = 2 * 1024 * 1024;
+    c.sim.s3_flint_mbps = 85.0; // chain thresholds tuned to this rate
+    c.sim.lambda_time_limit_s = 0.06;
+    c.sim.lambda_chain_margin_s = 0.017; // see chaining test above
+    c.sim.sqs_duplicate_prob = 0.2;
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", 120_000);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q5);
+    let report = flint.run_query(QueryId::Q5, &ds).unwrap();
+    assert!(report.result.approx_eq(&expect));
+    assert!(report.chains > 0);
+}
+
+#[test]
+fn oversized_payload_spills_through_s3() {
+    let mut c = cfg();
+    // Force the spill path: absurdly small payload limit.
+    c.sim.lambda_payload_limit_bytes = 400;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert!(report.result.approx_eq(&expect));
+    assert!(
+        env.metrics().get("scheduler.payload_spills") > 0,
+        "payload-split workaround must fire"
+    );
+}
+
+#[test]
+fn duration_cap_without_chaining_margin_fails_then_config_fixes_it() {
+    // With chaining margin zero and a cap below a single link's work, the
+    // Lambda service kills the invocation (DurationExceeded) and retries
+    // can't help — the error must surface, mentioning the cap.
+    let mut c = cfg();
+    c.sim.lambda_time_limit_s = 0.01; // below one S3 first-byte latency
+    c.sim.lambda_chain_margin_s = 0.0;
+    c.flint.max_task_retries = 1;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    let err = flint.run_query(QueryId::Q0, &ds).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("duration") || text.contains("failed after"), "{text}");
+}

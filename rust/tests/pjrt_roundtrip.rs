@@ -1,0 +1,125 @@
+//! AOT round-trip: the Rust PJRT runtime loads the artifacts produced by
+//! `make artifacts` and must agree with the native Rust kernel on every
+//! query. Skips (with a notice) when artifacts haven't been built.
+
+use flint::compute::batch::ColumnBatch;
+use flint::compute::kernels::{prepare_keys, prepare_values, run_batch_native, HistAccum};
+use flint::compute::queries::QueryId;
+use flint::data::taxi::generate_csv_object;
+use flint::data::weather::WeatherTable;
+use flint::runtime::PjrtRuntime;
+
+fn artifacts_dir() -> String {
+    std::env::var("FLINT_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+fn runtime_or_skip() -> Option<PjrtRuntime> {
+    let dir = artifacts_dir();
+    if !PjrtRuntime::available(&dir) {
+        eprintln!("SKIP: no artifacts in `{dir}` — run `make artifacts` first");
+        return None;
+    }
+    Some(PjrtRuntime::open(&dir).expect("artifacts present but unloadable"))
+}
+
+/// Build one padded batch of real generated trips.
+fn real_batch(rows: usize, capacity: usize) -> ColumnBatch {
+    let csv = generate_csv_object(4242, 17, rows as u64);
+    let mut batch = ColumnBatch::with_capacity(capacity);
+    for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+        if batch.is_full() {
+            break;
+        }
+        assert!(batch.push_line(line));
+    }
+    batch.pad_to_capacity();
+    batch
+}
+
+#[test]
+fn pjrt_matches_native_on_all_queries() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let b = rt.batch_rows();
+    let batch = real_batch(b - 7, b); // deliberately not full: padding live
+    let weather = WeatherTable::generate(4242);
+
+    for q in QueryId::ALL {
+        let spec = q.spec();
+        let keys = prepare_keys(&spec, &batch, Some(&weather));
+        let values = prepare_values(&spec, &batch);
+
+        let mut native = HistAccum::new(spec.buckets);
+        run_batch_native(&spec, &batch, &keys, &values, &mut native);
+
+        let mut pjrt = HistAccum::new(spec.buckets);
+        rt.run_hist(&spec, &batch, &keys, &values, &mut pjrt)
+            .unwrap_or_else(|e| panic!("{q}: {e:#}"));
+
+        assert_eq!(native.rows_seen, pjrt.rows_seen, "{q} rows");
+        for k in 0..spec.buckets {
+            assert!(
+                (native.counts[k] - pjrt.counts[k]).abs() < 1e-3,
+                "{q} bucket {k}: native count {} vs pjrt {}",
+                native.counts[k],
+                pjrt.counts[k]
+            );
+            assert!(
+                (native.sums[k] - pjrt.sums[k]).abs() < 1e-2 * (1.0 + native.sums[k].abs()),
+                "{q} bucket {k}: native sum {} vs pjrt {}",
+                native.sums[k],
+                pjrt.sums[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_concurrent_execution_is_safe() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let rt = std::sync::Arc::new(rt);
+    rt.warmup().unwrap();
+    let b = rt.batch_rows();
+    let batch = real_batch(b, b);
+    let spec = QueryId::Q1.spec();
+    let keys = prepare_keys(&spec, &batch, None);
+    let values = prepare_values(&spec, &batch);
+
+    let mut expect = HistAccum::new(spec.buckets);
+    rt.run_hist(&spec, &batch, &keys, &values, &mut expect).unwrap();
+
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            let rt = std::sync::Arc::clone(&rt);
+            let batch = batch.clone();
+            let keys = keys.clone();
+            let values = values.clone();
+            std::thread::spawn(move || {
+                let spec = QueryId::Q1.spec();
+                let mut acc = HistAccum::new(spec.buckets);
+                for _ in 0..4 {
+                    rt.run_hist(&spec, &batch, &keys, &values, &mut acc).unwrap();
+                }
+                acc
+            })
+        })
+        .collect();
+    for h in handles {
+        let acc = h.join().expect("no panic under concurrency");
+        for k in 0..spec.buckets {
+            assert!((acc.counts[k] - 4.0 * expect.counts[k]).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_every_query() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for q in QueryId::ALL {
+        let stem = q.spec().artifact_stem();
+        assert!(
+            rt.manifest().queries.contains_key(&stem),
+            "artifact bundle missing {stem}"
+        );
+        assert_eq!(rt.manifest().queries[&stem].buckets, q.spec().buckets);
+    }
+}
