@@ -142,4 +142,24 @@ fn main() {
         "| makespan (3440 tasks, 80 slots) | {:.0} µs/call | {iters} iters |",
         dt / iters as f64 * 1e6
     );
+
+    // 5b. Large-k guard: above `HEAP_SLOT_THRESHOLD` the earliest-slot
+    // selection must run on the binary heap (O(n log k)), not the
+    // linear scan (O(n·k)). At k=20,000 an O(n·k) scan would cost
+    // ~300x the k=64 call on the same task list; assert we stay within
+    // a 25x envelope (plus absolute slack for timer noise).
+    let n = 200_000usize;
+    let durations: Vec<f64> = (0..n).map(|i| 0.5 + (i % 13) as f64 * 0.05).collect();
+    let (small, dt_small) = time(|| std::hint::black_box(makespan(&durations, 64)));
+    let (big, dt_big) = time(|| std::hint::black_box(makespan(&durations, 20_000)));
+    assert!(small > 0.0 && big > 0.0);
+    println!(
+        "| makespan heap path (200k tasks, 20k slots) | {:.1} ms/call | linear k=64: {:.1} ms |",
+        dt_big * 1e3,
+        dt_small * 1e3
+    );
+    assert!(
+        dt_big < dt_small * 25.0 + 0.05,
+        "large-k makespan regressed to O(n*k): k=20000 took {dt_big:.3}s vs k=64 {dt_small:.3}s"
+    );
 }

@@ -1,6 +1,8 @@
 //! `cargo bench --bench shuffle_ablation` — experiment A1 (DESIGN.md
 //! §6): the §VI future-work comparison between Flint's SQS shuffle and
-//! Qubole's S3 shuffle, swept over query group counts.
+//! Qubole's S3 shuffle, swept over query group counts — each backend
+//! under both the serial barrier clock and the pipelined DAG scheduler
+//! (both latencies come from the same execution, so the pair is exact).
 
 use flint::bench::micro::shuffle_ablation;
 use flint::compute::queries::QueryId;
@@ -18,7 +20,7 @@ fn main() {
         .unwrap_or(400_000);
 
     println!("## A1 — SQS vs S3 shuffle (the Qubole design alternative, §V/§VI)\n");
-    println!("| query (groups) | backend | latency (s) | cost (USD) | shuffle msgs |");
+    println!("| query (groups) | backend+schedule | latency (s) | cost (USD) | shuffle msgs |");
     println!("|---|---|---|---|---|");
     for q in [QueryId::Q1, QueryId::Q4, QueryId::Q5, QueryId::Q6] {
         let rows = shuffle_ablation(&cfg, trips, q).expect("bench");
@@ -31,5 +33,8 @@ fn main() {
         }
     }
     println!("\n(SQS wins on small intermediate groups — the paper's design bet;");
-    println!(" S3's per-object first-byte latency dominates its shuffle at this shape.)");
+    println!(" S3's per-object first-byte latency dominates its shuffle at this shape.");
+    println!(" Pipelined scheduling hides SQS reduce drain behind map flushes, so");
+    println!(" sqs+pipelined must undercut sqs+barrier; the S3 backend's one-shot");
+    println!(" list-then-get shuffle cannot overlap and has no pipelined row.)");
 }

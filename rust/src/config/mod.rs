@@ -9,6 +9,7 @@
 
 pub mod parse;
 
+use crate::simtime::ScheduleMode;
 use crate::util::json::Json;
 
 /// Service-model parameters. All durations in seconds, rates in MB/s.
@@ -142,6 +143,12 @@ pub struct FlintParams {
     pub max_task_retries: u32,
     /// Shuffle transport: "sqs" (the paper) or "s3" (the Qubole ablation).
     pub shuffle_backend: ShuffleBackend,
+    /// Stage-overlap policy for the virtual clock: "barrier" (serial
+    /// stages, the Σ-makespan model and the Table I baseline) or
+    /// "pipelined" (§III-A SQS semantics: reducers long-poll while
+    /// mappers flush). SQS-only — the S3 backend's list-then-get
+    /// shuffle cannot overlap, so the engine forces barrier there.
+    pub scheduler: ScheduleMode,
     /// Enable sequence-id dedup of SQS messages (§VI).
     pub dedup_enabled: bool,
     /// Rows per columnar batch handed to the PJRT kernels.
@@ -176,6 +183,7 @@ impl Default for FlintParams {
             shuffle_buffer_bytes: 48 * 1024 * 1024,
             max_task_retries: 3,
             shuffle_backend: ShuffleBackend::Sqs,
+            scheduler: ScheduleMode::Barrier,
             dedup_enabled: true,
             batch_rows: 8192,
             use_pjrt: true,
@@ -309,6 +317,7 @@ impl FlintConfig {
                             ShuffleBackend::S3 => "s3",
                         },
                     )
+                    .set("scheduler", self.flint.scheduler.name())
                     .set("dedup_enabled", self.flint.dedup_enabled)
                     .set("batch_rows", self.flint.batch_rows)
                     .set("use_pjrt", self.flint.use_pjrt),
@@ -339,6 +348,10 @@ mod tests {
         assert_eq!(c.sim.max_concurrency, 160);
         c.set("flint.shuffle_backend", "s3").unwrap();
         assert_eq!(c.flint.shuffle_backend, ShuffleBackend::S3);
+        assert_eq!(c.flint.scheduler, ScheduleMode::Barrier, "barrier is the default");
+        c.set("flint.scheduler", "pipelined").unwrap();
+        assert_eq!(c.flint.scheduler, ScheduleMode::Pipelined);
+        assert!(c.set("flint.scheduler", "bogus").is_err());
         assert!(c.set("sim.nonexistent", "1").is_err());
         assert!(c.set("sim.max_concurrency", "abc").is_err());
     }

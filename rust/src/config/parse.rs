@@ -120,6 +120,9 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         "flint.shuffle_backend" => {
             cfg.flint.shuffle_backend = value.parse::<ShuffleBackend>()?
         }
+        "flint.scheduler" => {
+            cfg.flint.scheduler = value.parse::<crate::simtime::ScheduleMode>()?
+        }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
         "flint.batch_rows" => parse_to!(cfg.flint.batch_rows, value, key),
         "flint.use_pjrt" => parse_to!(cfg.flint.use_pjrt, value, key),

@@ -65,6 +65,10 @@ impl ClusterEngine {
             slots: self.env.config().cluster.cores,
             lambda: false,
             host_parallelism: host_parallelism(),
+            // Spark's execution model: a hard barrier at every shuffle
+            // boundary (the cluster-local transport is not a long-poll
+            // queue), so the baseline keeps the Σ-makespan clock.
+            schedule: crate::simtime::ScheduleMode::Barrier,
         }
     }
 

@@ -108,6 +108,8 @@ pub struct TaskResponse {
     pub msgs_sent: u64,
     pub shuffle_msgs_received: u64,
     pub duplicates_dropped: u64,
+    /// Messages received per parent stage (per-edge shuffle accounting).
+    pub edge_received: Vec<(u32, u64)>,
 }
 
 impl TaskResponse {
@@ -120,6 +122,7 @@ impl TaskResponse {
             msgs_sent: 0,
             shuffle_msgs_received: 0,
             duplicates_dropped: 0,
+            edge_received: Vec::new(),
         }
     }
 }
@@ -448,36 +451,73 @@ fn stage_output_partitions(ctx: &ExecCtx, task: &TaskDescriptor) -> Option<u32> 
 // Kernel reduce
 // ---------------------------------------------------------------------
 
+/// Return every reader's in-flight messages to their queues (task
+/// failure: visibility-timeout semantics so the retry sees them).
+fn abandon_all(readers: &mut [ShuffleReader]) {
+    for r in readers.iter_mut() {
+        r.abandon();
+    }
+}
+
 fn kernel_reduce(
     ctx: &ExecCtx,
     task: &TaskDescriptor,
     spec: crate::compute::queries::KernelSpec,
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
-    let TaskInput::ShufflePartition { partition, .. } = task.input else { unreachable!() };
-    let producing_stage = task.stage_id - 1;
-    let mut reader = ShuffleReader::new(
-        ctx.env,
-        ctx.transport.clone(),
-        &ctx.plan.plan_id,
-        producing_stage,
-        partition,
-        ctx.env.config().flint.dedup_enabled,
-    );
+    let TaskInput::ShufflePartition { partition, parents, .. } = &task.input else {
+        unreachable!()
+    };
+    let dedup = ctx.env.config().flint.dedup_enabled;
     let mut agg: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    // Dedup state persists across chain links; producer ids embed the
+    // producing stage, so one merged set is sound across all parents.
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
     if let Some(r) = &task.resume {
-        decode_reduce_state(&r.partial, &mut agg, &mut reader.seen)?;
+        decode_reduce_state(&r.partial, &mut agg, &mut seen)?;
     }
 
-    let read = match reader.drain(&mut resp.timeline) {
-        Ok(r) => r,
-        Err(e) => {
-            reader.abandon();
-            return Err(e);
+    // One reader per parent edge: a multi-parent (union/cogroup) reduce
+    // drains its partition's queue of every producing stage. Drains run
+    // sequentially, so one shared dedup set is threaded through them by
+    // swap — no per-reader cloning.
+    let mut readers: Vec<ShuffleReader> = parents
+        .iter()
+        .map(|&p| {
+            ShuffleReader::new(
+                ctx.env,
+                ctx.transport.clone(),
+                &ctx.plan.plan_id,
+                p,
+                *partition,
+                dedup,
+            )
+        })
+        .collect();
+
+    let mut records = Vec::new();
+    let mut drain_err = None;
+    for i in 0..readers.len() {
+        std::mem::swap(&mut readers[i].seen, &mut seen);
+        let drained = readers[i].drain(&mut resp.timeline);
+        std::mem::swap(&mut readers[i].seen, &mut seen);
+        match drained {
+            Ok(read) => {
+                resp.shuffle_msgs_received += read.messages;
+                resp.duplicates_dropped += read.duplicates_dropped;
+                resp.edge_received.push((parents[i], read.messages));
+                records.extend(read.records);
+            }
+            Err(e) => {
+                drain_err = Some(e);
+                break;
+            }
         }
-    };
-    resp.shuffle_msgs_received = read.messages;
-    resp.duplicates_dropped = read.duplicates_dropped;
+    }
+    if let Some(e) = drain_err {
+        abandon_all(&mut readers);
+        return Err(e);
+    }
 
     // Injected crash point: after drain, before ack — the retry must see
     // the messages again (visibility timeout semantics).
@@ -486,7 +526,7 @@ fn kernel_reduce(
         .failure()
         .take_forced_failure(task.stage_id, task.task_index, task.attempt)
     {
-        reader.abandon();
+        abandon_all(&mut readers);
         return Err(anyhow!(
             "injected reducer crash (stage {} task {} attempt {})",
             task.stage_id,
@@ -496,7 +536,7 @@ fn kernel_reduce(
     }
 
     let sw = CpuStopwatch::start();
-    for rec in read.records {
+    for rec in records {
         match rec {
             ShuffleRec::Kernel { key, sum, count } => {
                 let e = agg.entry(key).or_insert((0.0, 0.0));
@@ -521,19 +561,23 @@ fn kernel_reduce(
     }
 
     if ctx.should_chain(&resp.timeline) {
-        reader.ack(&mut resp.timeline)?;
+        for r in readers.iter_mut() {
+            r.ack(&mut resp.timeline)?;
+        }
         let resume = ResumeState {
             input_offset: 0,
             input_done: false,
             rows_done: resp.rows,
-            partial: encode_reduce_state(&agg, &reader.seen),
+            partial: encode_reduce_state(&agg, &seen),
             next_seqs: Vec::new(),
             links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
         };
         return Ok(Some(resume));
     }
 
-    reader.ack(&mut resp.timeline)?;
+    for r in readers.iter_mut() {
+        r.ack(&mut resp.timeline)?;
+    }
     match &task.output {
         TaskOutput::Driver => {
             resp.emitted =
@@ -752,38 +796,56 @@ fn dyn_reduce(
     post_ops: &[crate::plan::DynOp],
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
-    let TaskInput::ShufflePartition { partition, .. } = task.input else { unreachable!() };
-    let producing_stage = task.stage_id - 1;
-    let mut reader = ShuffleReader::new(
-        ctx.env,
-        ctx.transport.clone(),
-        &ctx.plan.plan_id,
-        producing_stage,
-        partition,
-        ctx.env.config().flint.dedup_enabled,
-    );
-    let read = match reader.drain(&mut resp.timeline) {
-        Ok(r) => r,
-        Err(e) => {
-            reader.abandon();
-            return Err(e);
-        }
+    let TaskInput::ShufflePartition { partition, parents, .. } = &task.input else {
+        unreachable!()
     };
-    resp.shuffle_msgs_received = read.messages;
-    resp.duplicates_dropped = read.duplicates_dropped;
+    let dedup = ctx.env.config().flint.dedup_enabled;
+    let mut readers: Vec<ShuffleReader> = parents
+        .iter()
+        .map(|&p| {
+            ShuffleReader::new(
+                ctx.env,
+                ctx.transport.clone(),
+                &ctx.plan.plan_id,
+                p,
+                *partition,
+                dedup,
+            )
+        })
+        .collect();
+    let mut records = Vec::new();
+    let mut drain_err = None;
+    for i in 0..readers.len() {
+        match readers[i].drain(&mut resp.timeline) {
+            Ok(read) => {
+                resp.shuffle_msgs_received += read.messages;
+                resp.duplicates_dropped += read.duplicates_dropped;
+                resp.edge_received.push((parents[i], read.messages));
+                records.extend(read.records);
+            }
+            Err(e) => {
+                drain_err = Some(e);
+                break;
+            }
+        }
+    }
+    if let Some(e) = drain_err {
+        abandon_all(&mut readers);
+        return Err(e);
+    }
 
     if ctx
         .env
         .failure()
         .take_forced_failure(task.stage_id, task.task_index, task.attempt)
     {
-        reader.abandon();
+        abandon_all(&mut readers);
         return Err(anyhow!("injected reducer crash"));
     }
 
     let sw = CpuStopwatch::start();
     let mut agg: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
-    for rec in read.records {
+    for rec in records {
         let ShuffleRec::Dyn { pair } = rec else {
             return Err(anyhow!("kernel record in dyn reduce"));
         };
@@ -858,7 +920,9 @@ fn dyn_reduce(
     resp.timeline
         .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
 
-    reader.ack(&mut resp.timeline)?;
+    for r in readers.iter_mut() {
+        r.ack(&mut resp.timeline)?;
+    }
     match &task.output {
         TaskOutput::Shuffle { .. } => {
             let w = writer.as_mut().expect("writer");

@@ -76,12 +76,22 @@ impl FlintEngine {
 
     fn params(&self) -> RunParams {
         let cfg = self.env.config();
+        // The S3 backend's one-shot list-then-get shuffle (the Qubole
+        // alternative) cannot overlap reduce drain with map flushes, so
+        // pipelined scheduling is SQS-only: with the S3 backend the
+        // headline clock is always the barrier model, whatever
+        // `flint.scheduler` says.
+        let schedule = match cfg.flint.shuffle_backend {
+            crate::config::ShuffleBackend::Sqs => cfg.flint.scheduler,
+            crate::config::ShuffleBackend::S3 => crate::simtime::ScheduleMode::Barrier,
+        };
         RunParams {
             mode: IoMode::Flint,
             transport: self.transport(),
             slots: cfg.sim.max_concurrency,
             lambda: true,
             host_parallelism: host_parallelism(),
+            schedule,
         }
     }
 
@@ -141,9 +151,14 @@ pub(crate) fn report(
         query,
         result,
         latency_s: out.latency_s,
+        barrier_latency_s: out.barrier_latency_s,
+        pipelined_latency_s: out.pipelined_latency_s,
         cost_usd: cost.total(),
         cost,
         stage_latencies: out.stage_latencies,
+        barrier_windows: out.barrier_windows,
+        pipelined_windows: out.pipelined_windows,
+        edge_shuffle: out.edge_shuffle,
         timeline: out.timeline,
         tasks: out.tasks,
         invocations: out.invocations,

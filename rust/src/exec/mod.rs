@@ -8,13 +8,13 @@ pub mod flint;
 pub mod shuffle;
 
 pub use cluster::{ClusterEngine, ClusterMode};
-pub use driver::{ActionOut, RunOutput};
+pub use driver::{ActionOut, EdgeShuffle, RunOutput};
 pub use flint::FlintEngine;
 
 use crate::compute::queries::{QueryId, QueryResult};
 use crate::cost::CostSnapshot;
 use crate::data::Dataset;
-use crate::simtime::Timeline;
+use crate::simtime::{StageWindow, Timeline};
 use anyhow::Result;
 
 /// What every engine reports per query — the two Table I columns plus
@@ -24,12 +24,23 @@ pub struct QueryReport {
     pub engine: String,
     pub query: Option<QueryId>,
     pub result: QueryResult,
-    /// Virtual query latency in seconds (Table I column 1).
+    /// Virtual query latency in seconds (Table I column 1), under the
+    /// engine's configured schedule mode.
     pub latency_s: f64,
+    /// Latency under the serial stage-barrier clock (always computed).
+    pub barrier_latency_s: f64,
+    /// Latency under the pipelined DAG clock (always computed).
+    pub pipelined_latency_s: f64,
     /// USD for this query (Table I column 2).
     pub cost_usd: f64,
     pub cost: CostSnapshot,
     pub stage_latencies: Vec<f64>,
+    /// Per-stage start/end on the serial barrier clock.
+    pub barrier_windows: Vec<StageWindow>,
+    /// Per-stage start/end on the pipelined DAG clock.
+    pub pipelined_windows: Vec<StageWindow>,
+    /// Shuffle receive volume per DAG edge.
+    pub edge_shuffle: Vec<EdgeShuffle>,
     /// Where task time went, summed across tasks.
     pub timeline: Timeline,
     pub tasks: u64,

@@ -623,6 +623,102 @@ mod tests {
         });
     }
 
+    use crate::util::propcheck::Gen;
+
+    fn gen_value(g: &mut Gen, depth: usize) -> Value {
+        let pick = if depth == 0 { g.usize(5) } else { g.usize(7) };
+        match pick {
+            0 => Value::Null,
+            1 => Value::Bool(g.bool()),
+            2 => Value::I64(g.i64(i64::MIN / 2, i64::MAX / 2)),
+            3 => Value::F64(g.f64(-1e9, 1e9)),
+            4 => Value::str(g.string(12)),
+            5 => Value::pair(gen_value(g, depth - 1), gen_value(g, depth - 1)),
+            _ => Value::List(g.vec(3, |g| gen_value(g, depth - 1))),
+        }
+    }
+
+    fn gen_rec(g: &mut Gen) -> ShuffleRec {
+        if g.bool() {
+            ShuffleRec::Kernel {
+                key: g.i64(-1_000_000, 1_000_000),
+                sum: g.f64(-1e6, 1e6),
+                count: g.f64(0.0, 1e6),
+            }
+        } else {
+            ShuffleRec::Dyn { pair: Value::pair(gen_value(g, 2), gen_value(g, 2)) }
+        }
+    }
+
+    #[test]
+    fn prop_shufflerec_roundtrip() {
+        forall("shufflerec-roundtrip", 300, |g| {
+            let recs: Vec<ShuffleRec> = (0..g.usize(20) + 1).map(|_| gen_rec(g)).collect();
+            let mut buf = Vec::new();
+            for r in &recs {
+                r.encode_into(&mut buf);
+            }
+            match ShuffleRec::decode_all(&buf) {
+                Some(back) if back == recs => {}
+                other => {
+                    return Err(format!(
+                        "roundtrip failed for {} recs: got {other:?}",
+                        recs.len()
+                    ))
+                }
+            }
+            // `encoded_len` must agree with the actual encoding (the
+            // writer's buffered-bytes accounting depends on it).
+            let total: usize = recs.iter().map(ShuffleRec::encoded_len).sum();
+            if total != buf.len() {
+                return Err(format!("encoded_len sum {total} != buffer {}", buf.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_shufflerec_truncation_decodes_to_none() {
+        forall("shufflerec-truncation", 300, |g| {
+            let recs: Vec<ShuffleRec> = (0..g.usize(10) + 1).map(|_| gen_rec(g)).collect();
+            let mut buf = Vec::new();
+            for r in &recs {
+                r.encode_into(&mut buf);
+            }
+            // Cut strictly inside the final record: the stream must be
+            // rejected as a whole, not silently shortened.
+            let last_len = recs.last().expect("non-empty").encoded_len();
+            let cut = g.usize(last_len - 1) + 1;
+            let truncated = &buf[..buf.len() - cut];
+            if let Some(back) = ShuffleRec::decode_all(truncated) {
+                return Err(format!(
+                    "buffer truncated by {cut} bytes decoded to {} recs",
+                    back.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_shufflerec_garbage_is_graceful() {
+        forall("shufflerec-garbage", 200, |g| {
+            // An unknown tag byte must yield None.
+            let rec = gen_rec(g);
+            let mut buf = Vec::new();
+            rec.encode_into(&mut buf);
+            buf[0] = 2 + g.u64(254) as u8; // any tag outside {0, 1}
+            if ShuffleRec::decode_all(&buf).is_some() {
+                return Err(format!("tag {} decoded as a record", buf[0]));
+            }
+            // Arbitrary byte soup must never panic (None or an accidental
+            // parse are both acceptable; crashing the reducer is not).
+            let soup: Vec<u8> = g.vec(64, |g| g.u64(256) as u8);
+            let _ = ShuffleRec::decode_all(&soup);
+            Ok(())
+        });
+    }
+
     #[test]
     fn rec_roundtrip_mixed() {
         let recs = vec![

@@ -3,7 +3,7 @@
 //! ```text
 //! flint gen      --trips 1000000                      generate a dataset (stats only)
 //! flint run      --query Q1 [--engine flint|spark|pyspark] [--trips N]
-//! flint explain  --query Q1                           print the stage/queue topology
+//! flint explain  --query Q1 [--no-run]                print the stage DAG + its barrier/pipelined schedule windows
 //! flint table1   [--trips N] [--trials N] [--paper]   regenerate Table I
 //! flint micro    --bench s3|coldstart|shuffle         the in-text microbenchmarks
 //! flint config   [--config file.toml] [--set k=v]...  print the effective config
@@ -17,7 +17,9 @@ use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
 use flint::data::generate_taxi_dataset;
 use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::plan::PhysicalPlan;
 use flint::services::SimEnv;
+use flint::simtime::StageWindow;
 use flint::util::{human_bytes, human_duration};
 
 fn main() {
@@ -125,7 +127,81 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
     let ds = generate_taxi_dataset(&env, "trips", trips);
     let plan = flint::plan::kernel_plan(query, &ds, &cfg);
     println!("{}", plan.explain());
+    if args.flag("no-run") {
+        return Ok(());
+    }
+    // Execute the *printed* plan once: the driver computes both the
+    // barrier and pipelined clocks from the same measured task
+    // durations, showing how barrier stages serialize while pipelined
+    // stages overlap (§III-A).
+    let engine = FlintEngine::new(env.clone());
+    engine.prewarm();
+    let report = engine.run_plan(&plan).map_err(|e| format!("{e:#}"))?;
+    println!(
+        "{}",
+        render_schedule("barrier", &plan, &report.barrier_windows, report.barrier_latency_s)
+    );
+    if matches!(cfg.flint.shuffle_backend, flint::config::ShuffleBackend::S3) {
+        // The engine forces barrier for the S3 backend (list-then-get
+        // cannot overlap); don't render a schedule it will never use.
+        println!("(s3 shuffle backend: pipelined scheduling not applicable)\n");
+    } else {
+        println!(
+            "{}",
+            render_schedule(
+                "pipelined",
+                &plan,
+                &report.pipelined_windows,
+                report.pipelined_latency_s
+            )
+        );
+    }
+    for e in &report.edge_shuffle {
+        println!("edge s{}->s{}: {} shuffle msgs", e.from, e.to, e.msgs);
+    }
     Ok(())
+}
+
+/// Render per-stage start/end windows (and parent overlap) on the
+/// global virtual clock.
+fn render_schedule(
+    label: &str,
+    plan: &PhysicalPlan,
+    windows: &[StageWindow],
+    total_s: f64,
+) -> String {
+    let mut out = format!("schedule ({label}): total {total_s:.2}s\n");
+    for w in windows {
+        let stage = plan.stage(w.id);
+        let deps = if stage.parents.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " <- {}",
+                stage
+                    .parents
+                    .iter()
+                    .map(|p| format!("s{p}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )
+        };
+        let mut overlap = String::new();
+        for &p in &stage.parents {
+            let o = w.overlap_s(&windows[p as usize]);
+            if o > 0.0 {
+                overlap.push_str(&format!("  (overlaps s{p} by {o:.2}s)"));
+            }
+        }
+        out.push_str(&format!(
+            "  stage {}{deps}: {:8.2}s .. {:8.2}s  [{} tasks]{overlap}\n",
+            w.id,
+            w.start,
+            w.end,
+            w.tasks.len()
+        ));
+    }
+    out
 }
 
 fn cmd_table1(args: &Args, cfg: FlintConfig) -> Result<(), String> {

@@ -1,8 +1,18 @@
-//! DAG scheduling: lineage (or a benchmark query) → [`PhysicalPlan`] —
-//! the stage/task structure both engines execute.
+//! The physical plan: a **stage DAG** — lineage (or a benchmark query) →
+//! [`PhysicalPlan`] — the structure both engines execute.
+//!
+//! Stages carry explicit ids and *parent edges*: a stage consumes the
+//! shuffle output of every parent listed in [`Stage::parents`], so plans
+//! are no longer restricted to linear chains — multi-parent stages
+//! (unions, cogroups, and eventually joins) are first-class. Stages are
+//! stored in topological order (`parents[i] < id` for every edge), which
+//! [`PhysicalPlan::validate`] enforces; the driver executes them in that
+//! order while the virtual clock (`simtime::schedule`) decides how much
+//! of their execution *overlaps* under the pipelined SQS semantics of
+//! §III-A (reducers long-poll their queues while mappers still flush).
 
-use crate::compute::queries::{KernelSpec, QueryId};
 use crate::compute::csv::split_ranges;
+use crate::compute::queries::{KernelSpec, QueryId};
 use crate::config::FlintConfig;
 use crate::data::Dataset;
 use crate::plan::rdd::{CombineFn, DynOp, Rdd};
@@ -32,9 +42,10 @@ impl std::fmt::Debug for Action {
 /// Where a stage reads from.
 #[derive(Debug, Clone)]
 pub enum StageInput {
-    /// First stage: byte-range splits of S3 objects.
+    /// Source stage: byte-range splits of S3 objects.
     S3Splits(Vec<InputSplit>),
-    /// Later stages: one task per shuffle partition of the previous stage.
+    /// Downstream stage: one task per shuffle partition, draining that
+    /// partition's queue of **every** parent stage.
     Shuffle { partitions: usize },
 }
 
@@ -85,10 +96,14 @@ impl std::fmt::Debug for StageCompute {
     }
 }
 
-/// One barrier-synchronized stage.
+/// One stage of the DAG.
 #[derive(Debug, Clone)]
 pub struct Stage {
     pub id: u32,
+    /// Stage ids whose shuffle output this stage consumes. Empty for S3
+    /// scan stages. Every parent must shuffle into the same partition
+    /// count (this stage's task count).
+    pub parents: Vec<u32>,
     pub compute: StageCompute,
     pub input: StageInput,
     pub output: StageOutput,
@@ -109,6 +124,7 @@ impl Stage {
 pub struct PhysicalPlan {
     /// Unique id (scopes queue names, shuffle keys, the plan registry).
     pub plan_id: String,
+    /// Stages in topological order (`parents[i] < id`).
     pub stages: Vec<Stage>,
     pub action: Action,
     /// Set when this is a benchmark-query plan (enables the PJRT path and
@@ -124,8 +140,72 @@ impl PhysicalPlan {
         self.stages.iter().map(Stage::num_tasks).sum()
     }
 
+    /// The stage with id `id` (ids are dense and equal their index).
+    pub fn stage(&self, id: u32) -> &Stage {
+        &self.stages[id as usize]
+    }
+
+    /// Stage ids that consume `id`'s shuffle output.
+    pub fn children(&self, id: u32) -> Vec<u32> {
+        self.stages
+            .iter()
+            .filter(|s| s.parents.contains(&id))
+            .map(|s| s.id)
+            .collect()
+    }
+
+    /// Check the DAG invariants the driver and virtual clock rely on:
+    /// dense ids in topological order, edge consistency (a parent exists,
+    /// shuffles, and shuffles into the consumer's partition count), and
+    /// shuffle inputs backed by at least one parent.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.id as usize != i {
+                return Err(format!("stage {} stored at index {i}", s.id));
+            }
+            // Duplicate parent entries would double-decrement the
+            // driver's per-edge queue refcounts.
+            let mut dedup = s.parents.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            if dedup.len() != s.parents.len() {
+                return Err(format!("stage {} lists a duplicate parent", s.id));
+            }
+            for &p in &s.parents {
+                if p >= s.id {
+                    return Err(format!(
+                        "stage {} lists parent {p}: not topologically ordered",
+                        s.id
+                    ));
+                }
+                let parent = &self.stages[p as usize];
+                let StageOutput::Shuffle { partitions, .. } = &parent.output else {
+                    return Err(format!("stage {} parent {p} does not shuffle", s.id));
+                };
+                if let StageInput::Shuffle { partitions: want } = &s.input {
+                    if partitions != want {
+                        return Err(format!(
+                            "stage {} wants {want} partitions but parent {p} shuffles {partitions}",
+                            s.id
+                        ));
+                    }
+                }
+            }
+            match &s.input {
+                StageInput::Shuffle { .. } if s.parents.is_empty() => {
+                    return Err(format!("stage {} reads a shuffle but has no parents", s.id));
+                }
+                StageInput::S3Splits(_) if !s.parents.is_empty() => {
+                    return Err(format!("stage {} reads S3 but lists parents", s.id));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
     /// Render the stage/queue topology (the `flint explain` output and
-    /// the Figure 1 analogue).
+    /// the Figure 1 analogue). Parent edges are shown as `<- sN`.
     pub fn explain(&self) -> String {
         let mut out = format!("plan {} ({:?})\n", self.plan_id, self.action);
         for s in &self.stages {
@@ -133,8 +213,20 @@ impl PhysicalPlan {
                 StageInput::S3Splits(sp) => format!("s3 x{}", sp.len()),
                 StageInput::Shuffle { partitions } => format!("sqs x{partitions}"),
             };
+            let deps = if s.parents.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    "  <- {}",
+                    s.parents
+                        .iter()
+                        .map(|p| format!("s{p}"))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            };
             out.push_str(&format!(
-                "  stage {}: [{input}] -> {:?} -> {:?} ({} tasks)\n",
+                "  stage {}: [{input}] -> {:?} -> {:?} ({} tasks){deps}\n",
                 s.id,
                 s.compute,
                 s.output,
@@ -182,6 +274,7 @@ pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig
     if spec.reduce_partitions == 0 {
         stages.push(Stage {
             id: 0,
+            parents: Vec::new(),
             compute: StageCompute::KernelScan { spec },
             input: StageInput::S3Splits(splits),
             output: StageOutput::Act(Action::Count),
@@ -197,12 +290,14 @@ pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig
 
     stages.push(Stage {
         id: 0,
+        parents: Vec::new(),
         compute: StageCompute::KernelScan { spec },
         input: StageInput::S3Splits(splits),
         output: StageOutput::Shuffle { partitions: spec.reduce_partitions, combine: None },
     });
     stages.push(Stage {
         id: 1,
+        parents: vec![0],
         compute: StageCompute::KernelReduce { spec },
         input: StageInput::Shuffle { partitions: spec.reduce_partitions },
         output: StageOutput::Act(Action::Collect),
@@ -228,14 +323,14 @@ pub fn build_dyn_plan(
     let n = lin.segments.len();
     let mut pending_combine: Option<CombineFn> = None;
     for (i, seg) in lin.segments.into_iter().enumerate() {
-        let input = if i == 0 {
-            StageInput::S3Splits(splits.clone())
+        let (input, parents) = if i == 0 {
+            (StageInput::S3Splits(splits.clone()), Vec::new())
         } else {
             let partitions = match &stages[i - 1] {
                 Stage { output: StageOutput::Shuffle { partitions, .. }, .. } => *partitions,
                 _ => unreachable!("non-first segment follows a shuffle"),
             };
-            StageInput::Shuffle { partitions }
+            (StageInput::Shuffle { partitions }, vec![(i - 1) as u32])
         };
         let output = match &seg.shuffle {
             Some((partitions, combine)) => StageOutput::Shuffle {
@@ -254,7 +349,7 @@ pub fn build_dyn_plan(
         };
         pending_combine = seg.shuffle.map(|(_, c)| c);
         debug_assert!(i < n);
-        stages.push(Stage { id: i as u32, compute, input, output });
+        stages.push(Stage { id: i as u32, parents, compute, input, output });
     }
     PhysicalPlan {
         plan_id: next_plan_id(),
@@ -265,10 +360,65 @@ pub fn build_dyn_plan(
     }
 }
 
+/// One input branch of a multi-parent (union/cogroup) plan.
+pub struct UnionBranch {
+    /// Narrow op chain applied to this branch's lines; must emit pairs.
+    pub ops: Vec<DynOp>,
+    /// S3 splits this branch scans.
+    pub splits: Vec<InputSplit>,
+}
+
+/// Multi-parent physical plan: N independent scan stages (one per
+/// branch, possibly over different datasets) all hash-partition their
+/// pairs into the same `partitions` space; a single reduce stage lists
+/// **all** scan stages as parents and drains every branch's queue for
+/// its partition — the `union(...).reduceByKey(...)` / cogroup shape
+/// that joins and multi-dataset queries build on. This is the plan shape
+/// the serial pre-DAG driver could not express.
+pub fn build_union_plan(
+    branches: Vec<UnionBranch>,
+    partitions: usize,
+    combine: CombineFn,
+    post_ops: Vec<DynOp>,
+    action: Action,
+) -> PhysicalPlan {
+    assert!(!branches.is_empty(), "union plan needs at least one branch");
+    assert!(partitions > 0, "union plan needs at least one partition");
+    let n = branches.len();
+    let mut stages: Vec<Stage> = branches
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| Stage {
+            id: i as u32,
+            parents: Vec::new(),
+            compute: StageCompute::DynScan { ops: b.ops },
+            input: StageInput::S3Splits(b.splits),
+            output: StageOutput::Shuffle { partitions, combine: Some(combine.clone()) },
+        })
+        .collect();
+    stages.push(Stage {
+        id: n as u32,
+        parents: (0..n as u32).collect(),
+        compute: StageCompute::DynReduce { combine, post_ops },
+        input: StageInput::Shuffle { partitions },
+        output: StageOutput::Act(action.clone()),
+    });
+    let plan = PhysicalPlan {
+        plan_id: next_plan_id(),
+        stages,
+        action,
+        query: None,
+        weather: None,
+    };
+    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::compute::value::Value;
+    use std::sync::Arc;
 
     fn fake_splits(n: usize) -> Vec<InputSplit> {
         (0..n)
@@ -296,6 +446,9 @@ mod tests {
         assert!(matches!(plan.stages[1].compute, StageCompute::DynReduce { .. }));
         assert!(plan.query.is_none());
         assert_eq!(plan.total_tasks(), 7);
+        assert_eq!(plan.stages[0].parents, Vec::<u32>::new());
+        assert_eq!(plan.stages[1].parents, vec![0]);
+        plan.validate().unwrap();
     }
 
     #[test]
@@ -304,6 +457,7 @@ mod tests {
         let plan = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(2));
         assert_eq!(plan.stages.len(), 1);
         assert!(matches!(plan.stages[0].output, StageOutput::Act(Action::Count)));
+        plan.validate().unwrap();
     }
 
     #[test]
@@ -315,6 +469,7 @@ mod tests {
         let text = plan.explain();
         assert!(text.contains("stage 0"), "{text}");
         assert!(text.contains("sqs x4"), "{text}");
+        assert!(text.contains("<- s0"), "parent edges rendered: {text}");
     }
 
     #[test]
@@ -323,5 +478,51 @@ mod tests {
         let a = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
         let b = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
         assert_ne!(a.plan_id, b.plan_id);
+    }
+
+    fn add_combine() -> CombineFn {
+        Arc::new(|a: Value, b: Value| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+    }
+
+    #[test]
+    fn union_plan_has_multi_parent_reduce() {
+        let branches = vec![
+            UnionBranch { ops: Vec::new(), splits: fake_splits(3) },
+            UnionBranch { ops: Vec::new(), splits: fake_splits(2) },
+        ];
+        let plan = build_union_plan(branches, 4, add_combine(), Vec::new(), Action::Collect);
+        assert_eq!(plan.stages.len(), 3);
+        assert_eq!(plan.stages[2].parents, vec![0, 1], "reduce lists both scans");
+        assert_eq!(plan.stages[2].num_tasks(), 4);
+        assert_eq!(plan.children(0), vec![2]);
+        assert_eq!(plan.children(1), vec![2]);
+        plan.validate().unwrap();
+        let text = plan.explain();
+        assert!(text.contains("<- s0, s1"), "{text}");
+    }
+
+    #[test]
+    fn validate_rejects_broken_dags() {
+        let mut plan = build_union_plan(
+            vec![UnionBranch { ops: Vec::new(), splits: fake_splits(1) }],
+            2,
+            add_combine(),
+            Vec::new(),
+            Action::Collect,
+        );
+        // Forward edge: parent id >= own id.
+        plan.stages[1].parents = vec![1];
+        assert!(plan.validate().is_err());
+        // Duplicate parent edge (would double-decrement queue refcounts).
+        plan.stages[1].parents = vec![0, 0];
+        assert!(plan.validate().is_err());
+        // Partition mismatch.
+        plan.stages[1].parents = vec![0];
+        plan.stages[1].input = StageInput::Shuffle { partitions: 3 };
+        assert!(plan.validate().is_err());
+        // Shuffle input without parents.
+        plan.stages[1].input = StageInput::Shuffle { partitions: 2 };
+        plan.stages[1].parents = Vec::new();
+        assert!(plan.validate().is_err());
     }
 }

@@ -1,18 +1,26 @@
-//! The plan layer: RDD lineage → physical plan → stages → tasks.
+//! The plan layer: RDD lineage → physical plan → stage DAG → tasks.
 //!
 //! Mirrors the Spark machinery Flint plugs into (§III of the paper): a
 //! driver program builds an RDD lineage; the DAG scheduler cuts it into
 //! stages at wide (shuffle) dependencies; each stage becomes a set of
-//! tasks — one per input split or shuffle partition; the engine's
-//! scheduler backend executes stages in order with a barrier between
-//! them. Flint "only needs to know about stages and tasks", and so does
-//! everything downstream of this module.
+//! tasks — one per input split or shuffle partition. Unlike the original
+//! serial driver, stages form a true **DAG**: each stage carries
+//! explicit parent edges, multi-parent stages (unions/cogroups) are
+//! expressible, and the engine's scheduler decides per run whether to
+//! execute with hard barriers (the Qubole-style S3 backend) or
+//! *pipelined* — launching consumers while their producers still flush,
+//! the paper's SQS long-polling semantics. Flint "only needs to know
+//! about stages and tasks", and so does everything downstream of this
+//! module.
 
 pub mod dag;
 pub mod rdd;
 pub mod task;
 
-pub use dag::{Action, PhysicalPlan, Stage, StageCompute, StageInput, StageOutput};
+pub use dag::{
+    build_union_plan, Action, PhysicalPlan, Stage, StageCompute, StageInput, StageOutput,
+    UnionBranch,
+};
 pub use rdd::{DynOp, Rdd};
 pub use task::{InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
 
@@ -37,9 +45,12 @@ mod tests {
         let ds = crate::data::generate_taxi_dataset(&env, "trips", 2_000);
         let p0 = kernel_plan(QueryId::Q0, &ds, env.config());
         assert_eq!(p0.stages.len(), 1);
+        assert!(p0.stages[0].parents.is_empty());
         let p1 = kernel_plan(QueryId::Q1, &ds, env.config());
         assert_eq!(p1.stages.len(), 2);
         assert!(matches!(p1.stages[0].output, StageOutput::Shuffle { partitions: 30, .. }));
         assert!(matches!(p1.stages[1].input, StageInput::Shuffle { partitions: 30 }));
+        assert_eq!(p1.stages[1].parents, vec![0]);
+        p1.validate().unwrap();
     }
 }

@@ -49,11 +49,11 @@ impl InputSplit {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TaskInput {
     Split(InputSplit),
-    /// Drain shuffle partition `partition` (queue or S3 prefix chosen by
-    /// the engine's shuffle backend). `map_tasks` tells the reader how
-    /// many producers to expect (S3-backend file enumeration and dedup
-    /// sizing).
-    ShufflePartition { partition: u32, map_tasks: u32 },
+    /// Drain shuffle partition `partition` of **every** producing stage
+    /// listed in `parents` (queue or S3 prefix chosen by the engine's
+    /// shuffle backend). A single-parent chain has one entry; unions and
+    /// cogroups list all of their map stages.
+    ShufflePartition { partition: u32, parents: Vec<u32> },
 }
 
 /// Where a task writes.
@@ -119,9 +119,12 @@ impl TaskDescriptor {
     pub fn to_payload(&self) -> Vec<u8> {
         let input = match &self.input {
             TaskInput::Split(s) => Json::obj().set("split", s.to_json()),
-            TaskInput::ShufflePartition { partition, map_tasks } => Json::obj()
+            TaskInput::ShufflePartition { partition, parents } => Json::obj()
                 .set("partition", *partition as u64)
-                .set("map_tasks", *map_tasks as u64),
+                .set(
+                    "parents",
+                    Json::Arr(parents.iter().map(|p| Json::from(*p as u64)).collect()),
+                ),
         };
         let output = match &self.output {
             TaskOutput::Shuffle { partitions } => {
@@ -236,6 +239,21 @@ mod tests {
         assert_eq!(j.req_u64("task_index").unwrap(), 3);
         let split = InputSplit::from_json(j.get("input").unwrap().get("split").unwrap()).unwrap();
         assert_eq!(split.end, 100);
+    }
+
+    #[test]
+    fn shuffle_input_payload_carries_parents() {
+        let mut t = sample_task();
+        t.input = TaskInput::ShufflePartition { partition: 2, parents: vec![0, 1] };
+        t.output = TaskOutput::Driver;
+        let payload = t.to_payload();
+        let json_end = payload.iter().rposition(|&b| b == b'}').unwrap() + 1;
+        let j = Json::parse(std::str::from_utf8(&payload[..json_end]).unwrap()).unwrap();
+        let input = j.get("input").unwrap();
+        let parents = input.req_arr("parents").unwrap();
+        assert_eq!(parents.len(), 2);
+        assert_eq!(parents[1].as_u64(), Some(1));
+        assert_eq!(input.req_u64("partition").unwrap(), 2);
     }
 
     #[test]

@@ -7,169 +7,239 @@
 //! `/opt/xla-example/README.md`). Python runs only at `make artifacts`
 //! time; after that the Rust binary is self-contained.
 //!
-//! Thread-safety: the `xla` crate's wrappers hold raw pointers and are
-//! not `Send`/`Sync` by auto-derivation, but the PJRT C API is specified
-//! thread-safe for compilation and execution. `SharedExec` asserts that
-//! (and the concurrency tests in `rust/tests/` exercise it).
+//! The XLA-backed implementation lives behind the `pjrt` cargo feature:
+//! it needs the vendored `xla` crate plus the XLA shared libraries,
+//! which not every build environment ships. Without the feature this
+//! module exports a stub [`PjrtRuntime`] whose `available()` is always
+//! false, so engines silently fall back to the native Rust kernels (the
+//! exact path unit tests exercise anyway via `flint.use_pjrt = false`).
+//!
+//! Thread-safety (feature `pjrt`): the `xla` crate's wrappers hold raw
+//! pointers and are not `Send`/`Sync` by auto-derivation, but the PJRT
+//! C API is specified thread-safe for compilation and execution.
+//! `SharedExec` asserts that (and the concurrency tests in `rust/tests/`
+//! exercise it).
 
 pub mod artifacts;
 
 pub use artifacts::{ArtifactManifest, QueryArtifact};
 
-use crate::compute::batch::ColumnBatch;
-use crate::compute::kernels::HistAccum;
-use crate::compute::queries::KernelSpec;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, RwLock};
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::ArtifactManifest;
+    use crate::compute::batch::ColumnBatch;
+    use crate::compute::kernels::HistAccum;
+    use crate::compute::queries::KernelSpec;
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, RwLock};
 
-struct SharedClient(xla::PjRtClient);
-// SAFETY: PJRT clients/executables are documented thread-safe; all
-// mutation happens behind the C API's own synchronization.
-unsafe impl Send for SharedClient {}
-unsafe impl Sync for SharedClient {}
+    struct SharedClient(xla::PjRtClient);
+    // SAFETY: PJRT clients/executables are documented thread-safe; all
+    // mutation happens behind the C API's own synchronization.
+    unsafe impl Send for SharedClient {}
+    unsafe impl Sync for SharedClient {}
 
-struct SharedExec(xla::PjRtLoadedExecutable);
-// SAFETY: see SharedClient.
-unsafe impl Send for SharedExec {}
-unsafe impl Sync for SharedExec {}
+    struct SharedExec(xla::PjRtLoadedExecutable);
+    // SAFETY: see SharedClient.
+    unsafe impl Send for SharedExec {}
+    unsafe impl Sync for SharedExec {}
 
-/// Loads, caches, and executes the per-query histogram artifacts.
-pub struct PjrtRuntime {
-    client: SharedClient,
-    dir: PathBuf,
-    manifest: ArtifactManifest,
-    execs: RwLock<HashMap<String, Arc<SharedExec>>>,
+    /// Loads, caches, and executes the per-query histogram artifacts.
+    pub struct PjrtRuntime {
+        client: SharedClient,
+        dir: PathBuf,
+        manifest: ArtifactManifest,
+        execs: RwLock<HashMap<String, Arc<SharedExec>>>,
+    }
+
+    impl PjrtRuntime {
+        /// True when `dir` holds a usable artifact bundle (manifest present).
+        pub fn available(dir: &str) -> bool {
+            Path::new(dir).join("manifest.json").is_file()
+        }
+
+        /// Open the artifact bundle and start a CPU PJRT client.
+        pub fn open(dir: &str) -> Result<PjrtRuntime> {
+            let manifest = ArtifactManifest::read(Path::new(dir))
+                .with_context(|| format!("reading artifact manifest in {dir}"))?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(PjrtRuntime {
+                client: SharedClient(client),
+                dir: PathBuf::from(dir),
+                manifest,
+                execs: RwLock::new(HashMap::new()),
+            })
+        }
+
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
+
+        /// Static batch row count the artifacts were lowered with.
+        pub fn batch_rows(&self) -> usize {
+            self.manifest.batch_rows
+        }
+
+        fn executable(&self, stem: &str) -> Result<Arc<SharedExec>> {
+            if let Some(e) = self.execs.read().expect("exec cache").get(stem) {
+                return Ok(Arc::clone(e));
+            }
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .0
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {stem}: {e:?}"))?;
+            let exe = Arc::new(SharedExec(exe));
+            self.execs
+                .write()
+                .expect("exec cache")
+                .insert(stem.to_string(), Arc::clone(&exe));
+            Ok(exe)
+        }
+
+        /// Pre-compile every artifact in the manifest (done once at engine
+        /// startup so compilation never lands on the query path).
+        pub fn warmup(&self) -> Result<()> {
+            let stems: Vec<String> = self.manifest.queries.keys().cloned().collect();
+            for stem in stems {
+                self.executable(&stem)?;
+            }
+            Ok(())
+        }
+
+        /// Run the fused filter+histogram artifact for `spec` over a padded
+        /// batch with prepared keys/values, merging the result into `accum`.
+        ///
+        /// The artifact's signature (see `python/compile/model.py`) is
+        /// `(lon f32[B], lat f32[B], tip f32[B], key i32[B], val f32[B])
+        /// -> (hist f32[K,2],)` where `hist[k] = (Σ val, Σ 1)` over rows that
+        /// pass the query's baked-in geo/tip filter and have key == k.
+        pub fn run_hist(
+            &self,
+            spec: &KernelSpec,
+            batch: &ColumnBatch,
+            keys: &[i32],
+            values: &[f32],
+            accum: &mut HistAccum,
+        ) -> Result<()> {
+            let stem = spec.artifact_stem();
+            let art = self
+                .manifest
+                .queries
+                .get(&stem)
+                .ok_or_else(|| anyhow!("artifact {stem} missing from manifest"))?;
+            let b = self.manifest.batch_rows;
+            if batch.lon.len() != b || keys.len() != b || values.len() != b {
+                return Err(anyhow!(
+                    "batch not padded to artifact rows: got {}, artifact wants {b}",
+                    batch.lon.len()
+                ));
+            }
+            if art.buckets != spec.buckets {
+                return Err(anyhow!(
+                    "artifact {stem} has {} buckets, spec wants {}",
+                    art.buckets,
+                    spec.buckets
+                ));
+            }
+            let exe = self.executable(&stem)?;
+            let args = [
+                xla::Literal::vec1(&batch.lon),
+                xla::Literal::vec1(&batch.lat),
+                xla::Literal::vec1(&batch.tip),
+                xla::Literal::vec1(keys),
+                xla::Literal::vec1(values),
+            ];
+            let result = exe.0.execute(&args).map_err(|e| anyhow!("execute {stem}: {e:?}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result {stem}: {e:?}"))?;
+            let hist = lit
+                .to_tuple1()
+                .map_err(|e| anyhow!("untuple {stem}: {e:?}"))?
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("read result {stem}: {e:?}"))?;
+            if hist.len() != spec.buckets * 2 {
+                return Err(anyhow!(
+                    "artifact {stem} returned {} values, want {}",
+                    hist.len(),
+                    spec.buckets * 2
+                ));
+            }
+            // hist layout: [K, 2] row-major = (sum, count) per bucket.
+            for k in 0..spec.buckets {
+                accum.sums[k] += hist[k * 2] as f64;
+                accum.counts[k] += hist[k * 2 + 1] as f64;
+            }
+            accum.rows_seen += batch.len as u64;
+            Ok(())
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// True when `dir` holds a usable artifact bundle (manifest present).
-    pub fn available(dir: &str) -> bool {
-        Path::new(dir).join("manifest.json").is_file()
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::ArtifactManifest;
+    use crate::compute::batch::ColumnBatch;
+    use crate::compute::kernels::HistAccum;
+    use crate::compute::queries::KernelSpec;
+    use anyhow::{anyhow, Result};
+
+    /// Stub runtime for builds without the `pjrt` feature: never reports
+    /// artifacts as available, so every caller takes the native-kernel
+    /// fallback. The API mirrors the real runtime exactly.
+    pub struct PjrtRuntime {
+        manifest: ArtifactManifest,
     }
 
-    /// Open the artifact bundle and start a CPU PJRT client.
-    pub fn open(dir: &str) -> Result<PjrtRuntime> {
-        let manifest = ArtifactManifest::read(Path::new(dir))
-            .with_context(|| format!("reading artifact manifest in {dir}"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(PjrtRuntime {
-            client: SharedClient(client),
-            dir: PathBuf::from(dir),
-            manifest,
-            execs: RwLock::new(HashMap::new()),
-        })
-    }
+    impl PjrtRuntime {
+        /// Always false: without the `pjrt` feature no artifact can run.
+        pub fn available(_dir: &str) -> bool {
+            false
+        }
 
-    pub fn manifest(&self) -> &ArtifactManifest {
-        &self.manifest
-    }
+        pub fn open(dir: &str) -> Result<PjrtRuntime> {
+            Err(anyhow!(
+                "flint was built without the `pjrt` feature; cannot open artifacts in {dir}"
+            ))
+        }
 
-    /// Static batch row count the artifacts were lowered with.
-    pub fn batch_rows(&self) -> usize {
-        self.manifest.batch_rows
-    }
+        pub fn manifest(&self) -> &ArtifactManifest {
+            &self.manifest
+        }
 
-    fn executable(&self, stem: &str) -> Result<Arc<SharedExec>> {
-        if let Some(e) = self.execs.read().expect("exec cache").get(stem) {
-            return Ok(Arc::clone(e));
+        pub fn batch_rows(&self) -> usize {
+            self.manifest.batch_rows
         }
-        let path = self.dir.join(format!("{stem}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .0
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {stem}: {e:?}"))?;
-        let exe = Arc::new(SharedExec(exe));
-        self.execs
-            .write()
-            .expect("exec cache")
-            .insert(stem.to_string(), Arc::clone(&exe));
-        Ok(exe)
-    }
 
-    /// Pre-compile every artifact in the manifest (done once at engine
-    /// startup so compilation never lands on the query path).
-    pub fn warmup(&self) -> Result<()> {
-        let stems: Vec<String> = self.manifest.queries.keys().cloned().collect();
-        for stem in stems {
-            self.executable(&stem)?;
+        pub fn warmup(&self) -> Result<()> {
+            Ok(())
         }
-        Ok(())
-    }
 
-    /// Run the fused filter+histogram artifact for `spec` over a padded
-    /// batch with prepared keys/values, merging the result into `accum`.
-    ///
-    /// The artifact's signature (see `python/compile/model.py`) is
-    /// `(lon f32[B], lat f32[B], tip f32[B], key i32[B], val f32[B])
-    /// -> (hist f32[K,2],)` where `hist[k] = (Σ val, Σ 1)` over rows that
-    /// pass the query's baked-in geo/tip filter and have key == k.
-    pub fn run_hist(
-        &self,
-        spec: &KernelSpec,
-        batch: &ColumnBatch,
-        keys: &[i32],
-        values: &[f32],
-        accum: &mut HistAccum,
-    ) -> Result<()> {
-        let stem = spec.artifact_stem();
-        let art = self
-            .manifest
-            .queries
-            .get(&stem)
-            .ok_or_else(|| anyhow!("artifact {stem} missing from manifest"))?;
-        let b = self.manifest.batch_rows;
-        if batch.lon.len() != b || keys.len() != b || values.len() != b {
-            return Err(anyhow!(
-                "batch not padded to artifact rows: got {}, artifact wants {b}",
-                batch.lon.len()
-            ));
+        pub fn run_hist(
+            &self,
+            _spec: &KernelSpec,
+            _batch: &ColumnBatch,
+            _keys: &[i32],
+            _values: &[f32],
+            _accum: &mut HistAccum,
+        ) -> Result<()> {
+            Err(anyhow!("PJRT disabled at build time (enable the `pjrt` feature)"))
         }
-        if art.buckets != spec.buckets {
-            return Err(anyhow!(
-                "artifact {stem} has {} buckets, spec wants {}",
-                art.buckets,
-                spec.buckets
-            ));
-        }
-        let exe = self.executable(&stem)?;
-        let args = [
-            xla::Literal::vec1(&batch.lon),
-            xla::Literal::vec1(&batch.lat),
-            xla::Literal::vec1(&batch.tip),
-            xla::Literal::vec1(keys),
-            xla::Literal::vec1(values),
-        ];
-        let result = exe.0.execute(&args).map_err(|e| anyhow!("execute {stem}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result {stem}: {e:?}"))?;
-        let hist = lit
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple {stem}: {e:?}"))?
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("read result {stem}: {e:?}"))?;
-        if hist.len() != spec.buckets * 2 {
-            return Err(anyhow!(
-                "artifact {stem} returned {} values, want {}",
-                hist.len(),
-                spec.buckets * 2
-            ));
-        }
-        // hist layout: [K, 2] row-major = (sum, count) per bucket.
-        for k in 0..spec.buckets {
-            accum.sums[k] += hist[k * 2] as f64;
-            accum.counts[k] += hist[k * 2 + 1] as f64;
-        }
-        accum.rows_seen += batch.len as u64;
-        Ok(())
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -185,6 +255,10 @@ mod tests {
         let Err(err) = PjrtRuntime::open("/tmp/flint-no-artifacts-here") else {
             panic!("open must fail without a manifest")
         };
-        assert!(format!("{err:#}").contains("manifest"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("manifest") || msg.contains("pjrt"),
+            "unexpected error: {msg}"
+        );
     }
 }

@@ -7,6 +7,44 @@
 //! start in submission order as slots free up. For identical-duration
 //! tasks this reduces to `ceil(n/K) * d`, matching the wave behaviour the
 //! paper describes.
+//!
+//! Earliest-free-slot selection is a linear scan for small `K` (better
+//! constants, cache-friendly) and a binary heap above
+//! [`HEAP_SLOT_THRESHOLD`] slots, taking the overall cost from `O(n·k)`
+//! to `O(n log k)` — the elasticity sweeps run thousands of slots. Both
+//! paths break ties identically (lowest slot index), so they produce
+//! bit-identical schedules; `rust/benches/hotpath.rs` guards the
+//! large-`k` path.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Slot count at which earliest-free-slot selection switches from the
+/// linear scan to a binary heap.
+pub const HEAP_SLOT_THRESHOLD: usize = 64;
+
+/// A slot's next-free time, ordered (time, slot index) ascending so the
+/// heap pops exactly the slot the linear scan's `min_by` would pick
+/// (first minimum = lowest index).
+#[derive(PartialEq)]
+struct SlotFree {
+    at: f64,
+    slot: usize,
+}
+
+impl Eq for SlotFree {}
+
+impl Ord for SlotFree {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at.total_cmp(&other.at).then(self.slot.cmp(&other.slot))
+    }
+}
+
+impl PartialOrd for SlotFree {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
 
 /// Completion time of `durations` scheduled FIFO onto `slots` slots.
 pub fn makespan(durations: &[f64], slots: usize) -> f64 {
@@ -14,14 +52,20 @@ pub fn makespan(durations: &[f64], slots: usize) -> f64 {
     if durations.is_empty() {
         return 0.0;
     }
-    // Binary-heap of slot free times would be O(n log k); with k <= a few
-    // hundred a linear scan is faster in practice and trivially correct.
     let k = slots.min(durations.len());
+    if k <= HEAP_SLOT_THRESHOLD {
+        makespan_linear(durations, k)
+    } else {
+        makespan_heap(durations, k)
+    }
+}
+
+fn makespan_linear(durations: &[f64], k: usize) -> f64 {
     let mut free = vec![0.0f64; k];
     let mut end = 0.0f64;
     for &d in durations {
         debug_assert!(d >= 0.0, "negative task duration {d}");
-        // earliest-free slot
+        // earliest-free slot (first minimum = lowest index)
         let (idx, _) = free
             .iter()
             .enumerate()
@@ -35,6 +79,22 @@ pub fn makespan(durations: &[f64], slots: usize) -> f64 {
     end
 }
 
+fn makespan_heap(durations: &[f64], k: usize) -> f64 {
+    let mut heap: BinaryHeap<Reverse<SlotFree>> =
+        (0..k).map(|slot| Reverse(SlotFree { at: 0.0, slot })).collect();
+    let mut end = 0.0f64;
+    for &d in durations {
+        debug_assert!(d >= 0.0, "negative task duration {d}");
+        let Reverse(SlotFree { at, slot }) = heap.pop().expect("k > 0");
+        let done = at + d;
+        if done > end {
+            end = done;
+        }
+        heap.push(Reverse(SlotFree { at: done, slot }));
+    }
+    end
+}
+
 /// Like [`makespan`] but also returns `(start, end, slot)` per task, for
 /// `flint explain` and the timeline reports.
 pub fn makespan_assignments(durations: &[f64], slots: usize) -> (f64, Vec<(f64, f64, usize)>) {
@@ -43,6 +103,14 @@ pub fn makespan_assignments(durations: &[f64], slots: usize) -> (f64, Vec<(f64, 
         return (0.0, Vec::new());
     }
     let k = slots.min(durations.len());
+    if k <= HEAP_SLOT_THRESHOLD {
+        makespan_assignments_linear(durations, k)
+    } else {
+        makespan_assignments_heap(durations, k)
+    }
+}
+
+fn makespan_assignments_linear(durations: &[f64], k: usize) -> (f64, Vec<(f64, f64, usize)>) {
     let mut free = vec![0.0f64; k];
     let mut out = Vec::with_capacity(durations.len());
     let mut end = 0.0f64;
@@ -58,6 +126,23 @@ pub fn makespan_assignments(durations: &[f64], slots: usize) -> (f64, Vec<(f64, 
         if free[idx] > end {
             end = free[idx];
         }
+    }
+    (end, out)
+}
+
+fn makespan_assignments_heap(durations: &[f64], k: usize) -> (f64, Vec<(f64, f64, usize)>) {
+    let mut heap: BinaryHeap<Reverse<SlotFree>> =
+        (0..k).map(|slot| Reverse(SlotFree { at: 0.0, slot })).collect();
+    let mut out = Vec::with_capacity(durations.len());
+    let mut end = 0.0f64;
+    for &d in durations {
+        let Reverse(SlotFree { at, slot }) = heap.pop().expect("k > 0");
+        let done = at + d;
+        out.push((at, done, slot));
+        if done > end {
+            end = done;
+        }
+        heap.push(Reverse(SlotFree { at: done, slot }));
     }
     (end, out)
 }
@@ -90,6 +175,27 @@ mod tests {
     }
 
     #[test]
+    fn heap_path_matches_linear_exactly() {
+        // Deterministic pseudo-random durations, k on both sides of the
+        // threshold: the two implementations must agree bit-for-bit.
+        let durations: Vec<f64> = (0..5_000u64)
+            .map(|i| ((i.wrapping_mul(2654435761) % 1000) as f64) / 100.0 + 0.01)
+            .collect();
+        for k in [1, 2, 63, 64, 65, 128, 500, 4_999] {
+            let k = k.min(durations.len());
+            assert_eq!(
+                makespan_linear(&durations, k),
+                makespan_heap(&durations, k),
+                "makespan mismatch at k={k}"
+            );
+            let (el, al) = makespan_assignments_linear(&durations, k);
+            let (eh, ah) = makespan_assignments_heap(&durations, k);
+            assert_eq!(el, eh, "assignment end mismatch at k={k}");
+            assert_eq!(al, ah, "assignment spans mismatch at k={k}");
+        }
+    }
+
+    #[test]
     fn assignments_cover_all_tasks_and_respect_slots() {
         let d = [1.0, 4.0, 2.0, 2.0, 1.0];
         let (end, asg) = makespan_assignments(&d, 2);
@@ -118,8 +224,8 @@ mod tests {
         // Classic list-scheduling bounds:
         //   max(total/K, longest) <= makespan <= total/K + longest
         forall("makespan-bounds", 300, |g| {
-            let k = g.usize(16) + 1;
-            let d = g.vec(40, |g| g.f64(0.0, 10.0));
+            let k = g.usize(200) + 1; // crosses HEAP_SLOT_THRESHOLD
+            let d = g.vec(300, |g| g.f64(0.0, 10.0));
             if d.is_empty() {
                 return Ok(());
             }
@@ -154,6 +260,21 @@ mod tests {
             // hurt.
             if b > a + 1e-9 {
                 return Err(format!("k={k}: {a} -> k+1: {b}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_heap_equals_linear() {
+        forall("makespan-heap-equals-linear", 120, |g| {
+            let d = g.vec(120, |g| g.f64(0.0, 8.0));
+            if d.is_empty() {
+                return Ok(());
+            }
+            let k = (g.usize(120) + 1).min(d.len());
+            if makespan_linear(&d, k) != makespan_heap(&d, k) {
+                return Err(format!("heap/linear diverge at k={k}"));
             }
             Ok(())
         });

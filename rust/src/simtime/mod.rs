@@ -3,17 +3,22 @@
 //! Nothing in this repo talks to real AWS, so query latency cannot be
 //! measured directly. Instead every simulated service charges a *modeled*
 //! duration, real compute charges a *measured* duration, and each task
-//! accumulates both into a [`Timeline`]. Stage latency is then the
-//! makespan of its task timelines scheduled onto `K` concurrency slots —
-//! exactly what barrier-synchronized stage execution on a K-way-throttled
-//! Lambda pool (or a K-core cluster) yields.
+//! accumulates both into a [`Timeline`]. Plan latency comes from the
+//! event-driven DAG clock in [`schedule`]: every task of every stage is
+//! placed onto the `K` shared concurrency slots, either with hard
+//! barriers between stages (the original Σ-makespan model, kept for the
+//! S3 shuffle backend and Table I) or *pipelined*, overlapping reduce
+//! long-polling with map flushes per §III-A. [`makespan`] remains the
+//! single-stage primitive the barrier path is built from.
 //!
 //! See DESIGN.md §5 for the calibration constants and rationale.
 
 pub mod makespan;
+pub mod schedule;
 pub mod timeline;
 
 pub use makespan::{makespan, makespan_assignments};
+pub use schedule::{schedule_dag, ScheduleMode, ScheduleOut, StageSpec, StageWindow};
 pub use timeline::{Component, Timeline};
 
 use std::time::Instant;
