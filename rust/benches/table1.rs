@@ -26,7 +26,9 @@ fn main() {
         trips: env_u64("FLINT_BENCH_TRIPS", 1_000_000),
         trials_flint: env_u64("FLINT_BENCH_TRIALS", 5) as usize,
         trials_cluster: 3,
-        queries: flint::compute::queries::QueryId::ALL.to_vec(),
+        // Table I plus the Q6J shuffle-join extension (measured
+        // cells only; no published row to extrapolate against).
+        queries: flint::compute::queries::QueryId::ALL_WITH_JOINS.to_vec(),
         paper_scale: true,
     };
 

@@ -187,6 +187,21 @@ mod tests {
     }
 
     #[test]
+    fn a1_shuffle_ablation_covers_the_join_query() {
+        // Q6J's exchange-operator join runs through the same ablation
+        // harness: sqs (both schedules) + s3 (barrier only).
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        let rows = shuffle_ablation(&cfg, 15_000, QueryId::Q6J).unwrap();
+        assert_eq!(rows.len(), 3, "{rows:?}");
+        assert!(rows.iter().all(|(_, l, c, m)| *l > 0.0 && *c > 0.0 && *m > 0));
+        // Pipelined never schedules worse than barrier (serial-fallback
+        // guard), even on the join's multi-root DAG.
+        assert!(rows[1].1 <= rows[0].1 + 1e-9, "{rows:?}");
+    }
+
+    #[test]
     fn a1_shuffle_backends_both_work_and_differ() {
         let mut cfg = FlintConfig::for_tests();
         cfg.data.object_bytes = 512 * 1024;

@@ -98,7 +98,9 @@ pub fn run_table1(config: &FlintConfig, opts: &Table1Options) -> Result<(Dataset
         }
 
         let flint_report = flint_report.expect("at least one flint trial");
-        let paper_estimate = opts.paper_scale.then(|| {
+        // Extension queries (Q6J) have no published Table I row to
+        // extrapolate against; they get measured cells only.
+        let paper_estimate = (opts.paper_scale && q.published_index().is_some()).then(|| {
             vec![
                 crate::bench::paper::estimate(q, &flint_report, config, &dataset, PaperEngine::Flint),
                 crate::bench::paper::estimate(q, &flint_report, config, &dataset, PaperEngine::PySpark),
@@ -118,6 +120,8 @@ pub fn render_measured(rows: &[Table1Row]) -> String {
         .iter()
         .map(|r| (r.query.name().trim_start_matches('Q').to_string(), r.cells.clone()))
         .collect();
+    // (Q6J renders as row "6J": measured latency/cost for the shuffle
+    // join next to broadcast Q6's row 6.)
     crate::cost::report::render_table1(
         "Table I (measured mode: simulated stack, generated data)",
         &["Flint", "PySpark", "Spark"],
@@ -145,7 +149,9 @@ pub fn render_paper_scale(rows: &[Table1Row]) -> String {
     );
     for row in rows {
         let Some(est) = &row.paper_estimate else { continue };
-        let qi = row.query.name()[1..].parse::<usize>().unwrap();
+        // Extension queries carry no estimate (guarded in run_table1),
+        // but be defensive: only rows with a published index render.
+        let Some(qi) = row.query.published_index() else { continue };
         let p = PUBLISHED[qi];
         out.push_str(&format!(
             "| {} | {:.0} / {:.0} | {:.0} / {:.0} | {:.0} / {:.0} | {:.2} / {:.2} | {:.2} / {:.2} | {:.2} / {:.2} |\n",
@@ -187,5 +193,29 @@ mod tests {
         assert!(text.contains("| 0 |"), "{text}");
         let paper = render_paper_scale(&rows);
         assert!(paper.contains("| 1 |"), "{paper}");
+    }
+
+    #[test]
+    fn q6j_gets_measured_cells_but_no_paper_row() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        let opts = Table1Options {
+            trips: 8_000,
+            trials_flint: 1,
+            trials_cluster: 1,
+            queries: vec![QueryId::Q6J],
+            paper_scale: true,
+        };
+        let (_, rows) = run_table1(&cfg, &opts).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].cells.iter().all(|c| c.latency.mean > 0.0));
+        assert!(
+            rows[0].paper_estimate.is_none(),
+            "Q6J has no published Table I row to extrapolate against"
+        );
+        let text = render_measured(&rows);
+        assert!(text.contains("| 6J |"), "{text}");
+        assert!(!render_paper_scale(&rows).contains("| 6J |"));
     }
 }

@@ -92,6 +92,11 @@ pub fn prepare_keys(spec: &KernelSpec, batch: &ColumnBatch, weather: Option<&Wea
                 .map(|&d| if d >= 0 { w.bucket(d) } else { -1 })
                 .collect()
         }
+        KeySource::Day => batch
+            .day
+            .iter()
+            .map(|&d| if d >= 0 && (d as usize) < spec.buckets { d } else { -1 })
+            .collect(),
     }
 }
 
@@ -229,6 +234,19 @@ mod tests {
         let day = batch.day[0];
         let expect_bucket = weather.bucket(day) as usize;
         assert_eq!(acc.counts[expect_bucket], 1.0);
+    }
+
+    #[test]
+    fn q6j_keys_by_day_without_weather() {
+        let spec = QueryId::Q6J.spec();
+        let mut batch = ColumnBatch::with_capacity(16);
+        push(&mut batch, -73.98, 40.75, 9, true, 2.0);
+        // No weather table needed: the join key is the raw day index.
+        let keys = prepare_keys(&spec, &batch, None);
+        assert_eq!(keys[0], batch.day[0]);
+        let mut acc = HistAccum::new(spec.buckets);
+        process_batch_native(&spec, &batch, None, &mut acc);
+        assert_eq!(acc.counts[batch.day[0] as usize], 1.0);
     }
 
     #[test]

@@ -13,6 +13,9 @@ use std::collections::BTreeMap;
 
 /// Evaluate `query` directly. Slow and simple by design.
 pub fn evaluate(env: &SimEnv, dataset: &Dataset, query: QueryId) -> QueryResult {
+    if query.is_join() {
+        return evaluate_join(env, dataset, query);
+    }
     let spec = query.spec();
     let weather = if spec.needs_weather() {
         let (obj, _) = env
@@ -68,6 +71,72 @@ pub fn evaluate(env: &SimEnv, dataset: &Dataset, query: QueryId) -> QueryResult 
     }
 }
 
+/// Q6J ground truth computed as an actual equi-join — day-keyed trip
+/// counts ⋈ the weather table's day→bucket rows — rather than Q6's
+/// broadcast lookup. The two must agree (the weather table covers every
+/// day a generated trip can fall on); `q6j_oracle_matches_q6` pins that.
+fn evaluate_join(env: &SimEnv, dataset: &Dataset, query: QueryId) -> QueryResult {
+    let spec = query.spec();
+    // Dimension side: day index → precipitation bucket, from the same
+    // CSV rendering the executors read (parse-rounded, like the engine).
+    let (obj, _) = env
+        .s3()
+        .get_object(&dataset.bucket, &dataset.weather_key, env.flint_read_profile())
+        .expect("weather table present");
+    let weather = WeatherTable::from_csv(&obj).expect("weather parses");
+    let dim: BTreeMap<i64, i64> = weather
+        .precip
+        .iter()
+        .enumerate()
+        .map(|(d, &p)| (d as i64, crate::data::weather::precip_bucket(p) as i64))
+        .collect();
+
+    // Fact side: per-day (value_sum, row_count) partials.
+    let mut facts: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    for (key, _) in &dataset.objects {
+        let (obj, _) = env
+            .s3()
+            .get_object(&dataset.bucket, key, env.flint_read_profile())
+            .expect("object present");
+        for line in obj.split(|&b| b == b'\n') {
+            if line.is_empty() {
+                continue;
+            }
+            let Some(rec) = TripRecord::parse_csv(line) else { continue };
+            if !passes(&spec, &rec) {
+                continue;
+            }
+            let d = chrono::day_index(rec.dropoff_ts) as i64;
+            if !(0..spec.buckets as i64).contains(&d) {
+                continue;
+            }
+            let v = match spec.value {
+                ValueSource::One => 1.0,
+                ValueSource::CreditFlag => {
+                    if rec.payment_type == crate::data::schema::PAYMENT_CREDIT {
+                        1.0
+                    } else {
+                        0.0
+                    }
+                }
+            };
+            let e = facts.entry(d).or_insert((0.0, 0.0));
+            e.0 += v;
+            e.1 += 1.0;
+        }
+    }
+
+    // Inner join + re-key by the dimension value.
+    let mut groups: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    for (d, (s, c)) in facts {
+        let Some(&bucket) = dim.get(&d) else { continue };
+        let e = groups.entry(bucket).or_insert((0.0, 0.0));
+        e.0 += s;
+        e.1 += c;
+    }
+    QueryResult::Buckets(groups.into_iter().map(|(k, (s, c))| (k, s, c)).collect())
+}
+
 fn passes(spec: &KernelSpec, rec: &TripRecord) -> bool {
     spec.bbox.contains(rec.dropoff_lon, rec.dropoff_lat) && rec.tip_amount >= spec.tip_min
 }
@@ -83,6 +152,8 @@ fn bucket_key(spec: &KernelSpec, rec: &TripRecord, weather: Option<&WeatherTable
         KeySource::PrecipBucket => {
             weather.expect("weather").bucket(chrono::day_index(rec.dropoff_ts)) as i64
         }
+        // Join queries are evaluated by `evaluate_join`, never here.
+        KeySource::Day => chrono::day_index(rec.dropoff_ts) as i64,
     };
     if (0..spec.buckets as i64).contains(&k) {
         Some(k)
@@ -136,6 +207,17 @@ mod tests {
         for (_, credit, count) in rows {
             assert!(credit >= 0.0 && credit <= count);
         }
+    }
+
+    #[test]
+    fn q6j_oracle_matches_q6() {
+        // The shuffle-join formulation and the broadcast lookup are the
+        // same query: every generated trip's day is covered by the
+        // weather table, so the inner join drops nothing.
+        let (env, ds) = tiny();
+        let join = evaluate(&env, &ds, QueryId::Q6J);
+        let broadcast = evaluate(&env, &ds, QueryId::Q6);
+        assert!(join.approx_eq(&broadcast), "{join:?} vs {broadcast:?}");
     }
 
     #[test]

@@ -28,9 +28,15 @@ pub enum QueryId {
     Q5,
     /// Trips by precipitation bucket.
     Q6,
+    /// Q6 as a true shuffle join: trips and the weather table are both
+    /// hash-partitioned on the day key and joined reduce-side (vs Q6's
+    /// broadcast map-side lookup). Not in the paper's Table I; it pins
+    /// the engine's exchange-operator join path against the same oracle.
+    Q6J,
 }
 
 impl QueryId {
+    /// The paper's seven Table I queries.
     pub const ALL: [QueryId; 7] = [
         QueryId::Q0,
         QueryId::Q1,
@@ -39,6 +45,19 @@ impl QueryId {
         QueryId::Q4,
         QueryId::Q5,
         QueryId::Q6,
+    ];
+
+    /// Table I plus the repo's extension queries (Q6J: the shuffle-join
+    /// variant of Q6, which has no published row).
+    pub const ALL_WITH_JOINS: [QueryId; 8] = [
+        QueryId::Q0,
+        QueryId::Q1,
+        QueryId::Q2,
+        QueryId::Q3,
+        QueryId::Q4,
+        QueryId::Q5,
+        QueryId::Q6,
+        QueryId::Q6J,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -50,7 +69,30 @@ impl QueryId {
             QueryId::Q4 => "Q4",
             QueryId::Q5 => "Q5",
             QueryId::Q6 => "Q6",
+            QueryId::Q6J => "Q6J",
         }
+    }
+
+    /// Row index into the paper's published Table I (None for extension
+    /// queries with no published numbers).
+    pub fn published_index(&self) -> Option<usize> {
+        match self {
+            QueryId::Q0 => Some(0),
+            QueryId::Q1 => Some(1),
+            QueryId::Q2 => Some(2),
+            QueryId::Q3 => Some(3),
+            QueryId::Q4 => Some(4),
+            QueryId::Q5 => Some(5),
+            QueryId::Q6 => Some(6),
+            QueryId::Q6J => None,
+        }
+    }
+
+    /// Whether the physical plan is the two-sided shuffle join (fact and
+    /// dimension scans feeding a `KernelJoin` stage) rather than a
+    /// scan → reduce chain.
+    pub fn is_join(&self) -> bool {
+        matches!(self, QueryId::Q6J)
     }
 
     pub fn description(&self) -> &'static str {
@@ -62,6 +104,7 @@ impl QueryId {
             QueryId::Q4 => "credit vs cash share by month",
             QueryId::Q5 => "yellow vs green trips by month",
             QueryId::Q6 => "trips by precipitation bucket",
+            QueryId::Q6J => "trips by precipitation bucket (shuffle join on day key)",
         }
     }
 
@@ -74,6 +117,7 @@ impl QueryId {
             "Q4" | "4" => Some(QueryId::Q4),
             "Q5" | "5" => Some(QueryId::Q5),
             "Q6" | "6" => Some(QueryId::Q6),
+            "Q6J" | "6J" => Some(QueryId::Q6J),
             _ => None,
         }
     }
@@ -144,6 +188,19 @@ impl QueryId {
                 buckets: PRECIP_BUCKETS,
                 reduce_partitions: PRECIP_BUCKETS,
             },
+            // Q6 over the shuffle: the fact scan histograms per *day*
+            // (one bucket per covered day), both sides hash-partition on
+            // the day key into `reduce_partitions` join partitions, and
+            // the join stage re-keys by precipitation bucket.
+            QueryId::Q6J => KernelSpec {
+                query: *self,
+                bbox: GeoBox::EVERYWHERE,
+                tip_min: f32::NEG_INFINITY,
+                key: KeySource::Day,
+                value: ValueSource::One,
+                buckets: crate::data::weather::NUM_DAYS,
+                reduce_partitions: 30,
+            },
         }
     }
 
@@ -179,6 +236,9 @@ pub enum KeySource {
     MonthTaxiType,
     /// Precipitation bucket of the dropoff day (weather-table lookup).
     PrecipBucket,
+    /// Days since 2009-01-01, 0..NUM_DAYS — the Q6J join key (no side
+    /// table needed map-side; the weather lookup moves to the join).
+    Day,
 }
 
 /// What gets summed per bucket (a count is always kept alongside).
@@ -288,7 +348,27 @@ mod tests {
     fn parse_names() {
         assert_eq!(QueryId::parse("q3"), Some(QueryId::Q3));
         assert_eq!(QueryId::parse("5"), Some(QueryId::Q5));
+        assert_eq!(QueryId::parse("q6j"), Some(QueryId::Q6J));
+        assert_eq!(QueryId::parse("6J"), Some(QueryId::Q6J));
         assert_eq!(QueryId::parse("Q9"), None);
+    }
+
+    #[test]
+    fn q6j_is_the_day_keyed_join() {
+        let s = QueryId::Q6J.spec();
+        assert!(QueryId::Q6J.is_join());
+        assert!(!QueryId::Q6.is_join());
+        assert_eq!(s.key, KeySource::Day);
+        assert_eq!(s.buckets, crate::data::weather::NUM_DAYS);
+        assert!(s.reduce_partitions > 0);
+        assert!(
+            !s.needs_weather(),
+            "the join ships the weather table through the shuffle, not as a broadcast"
+        );
+        assert_eq!(QueryId::Q6J.published_index(), None);
+        for q in QueryId::ALL {
+            assert!(q.published_index().is_some(), "{q} has a Table I row");
+        }
     }
 
     #[test]
@@ -320,9 +400,10 @@ mod tests {
 
     #[test]
     fn artifact_stems_unique() {
-        let mut stems: Vec<String> = QueryId::ALL.iter().map(|q| q.spec().artifact_stem()).collect();
+        let mut stems: Vec<String> =
+            QueryId::ALL_WITH_JOINS.iter().map(|q| q.spec().artifact_stem()).collect();
         stems.sort();
         stems.dedup();
-        assert_eq!(stems.len(), 7);
+        assert_eq!(stems.len(), QueryId::ALL_WITH_JOINS.len());
     }
 }

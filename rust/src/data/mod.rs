@@ -26,6 +26,9 @@ pub struct Dataset {
     pub trips: u64,
     /// Key of the weather side table (same bucket).
     pub weather_key: String,
+    /// Size of the weather side table object (the join plans scan it as
+    /// a first-class input branch, which needs byte-range splits).
+    pub weather_bytes: u64,
     /// Seed it was generated from (for reproducibility records).
     pub seed: u64,
 }
@@ -61,8 +64,10 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
 
     // Weather side table first (small).
     let weather = weather::WeatherTable::generate(seed);
+    let weather_csv = weather.to_csv();
+    let weather_bytes = weather_csv.len() as u64;
     env.s3()
-        .put_object(INPUT_BUCKET, WEATHER_KEY, weather.to_csv())
+        .put_object(INPUT_BUCKET, WEATHER_KEY, weather_csv)
         .expect("bucket exists");
 
     // Objects in parallel; each object is an independent RNG stream.
@@ -98,6 +103,7 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
         total_bytes,
         trips,
         weather_key: WEATHER_KEY.to_string(),
+        weather_bytes,
         seed,
     }
 }
@@ -110,6 +116,10 @@ pub fn load_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Option<Dataset> {
         return None;
     }
     let total_bytes = listed.iter().map(|(_, s)| s).sum();
+    // A manifest without its weather side table is incomplete — Q6 fails
+    // loudly and Q6J's dimension scan would silently join to nothing —
+    // so a missing object means there is no dataset to load.
+    let weather_bytes = env.s3().head_object(INPUT_BUCKET, WEATHER_KEY).ok()?;
     Some(Dataset {
         bucket: INPUT_BUCKET.to_string(),
         prefix: prefix.to_string(),
@@ -117,6 +127,7 @@ pub fn load_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Option<Dataset> {
         total_bytes,
         trips,
         weather_key: WEATHER_KEY.to_string(),
+        weather_bytes,
         seed: env.config().seed,
     })
 }

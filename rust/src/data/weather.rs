@@ -14,6 +14,11 @@ pub fn num_days() -> usize {
     (days_from_civil(2016, 6, 30) - days_from_civil(2009, 1, 1) + 1) as usize
 }
 
+/// [`num_days`] as a compile-time constant — `KernelSpec` is `Copy` and
+/// built from literals (Q6J's day-keyed histogram needs one bucket per
+/// day). Pinned against the computed value in tests.
+pub const NUM_DAYS: usize = 2738;
+
 /// The daily precipitation table, indexed by day-index (days since
 /// 2009-01-01).
 #[derive(Debug, Clone)]
@@ -121,6 +126,7 @@ mod tests {
     fn covers_paper_date_range() {
         // 2009-2015 full years (2557 days incl leaps) + Jan-Jun 2016 (182).
         assert_eq!(num_days(), 2738);
+        assert_eq!(num_days(), NUM_DAYS, "const must track the computed range");
         let w = WeatherTable::generate(7);
         assert_eq!(w.precip.len(), 2738);
     }

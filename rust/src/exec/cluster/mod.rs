@@ -92,8 +92,14 @@ impl ClusterEngine {
     /// Generic RDD execution on the cluster.
     pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
         let cfg = self.env.config();
-        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |_, _| {
-            crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |bucket, prefix| {
+            crate::exec::flint::rdd_splits(
+                &self.env,
+                dataset,
+                bucket,
+                prefix,
+                cfg.flint.input_split_bytes,
+            )
         });
         self.run(&plan)
     }

@@ -322,6 +322,9 @@ fn build_descriptors(plan: &PhysicalPlan, stage: &Stage) -> Vec<TaskDescriptor> 
         crate::plan::StageCompute::DynReduce { post_ops, .. } => {
             post_ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 2048
         }
+        crate::plan::StageCompute::DynCoGroup { post_ops } => {
+            post_ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 2048
+        }
         // Kernel tasks reference a named AOT artifact, not shipped code.
         _ => 256,
     };
@@ -526,8 +529,19 @@ fn merge_emits(emits: Vec<Emitted>) -> Result<ActionOut> {
         return Ok(ActionOut::Saved(n));
     }
     if saw_rows {
-        rows.sort_by_key(|(k, _, _)| *k);
-        return Ok(ActionOut::KernelRows(rows));
+        // Merge duplicate bucket keys across tasks: a hash-partitioned
+        // reduce emits each key from exactly one task, but a join stage
+        // answering the driver directly may emit the same output key
+        // from several partitions.
+        let mut merged: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+        for (k, s, c) in rows {
+            let e = merged.entry(k).or_insert((0.0, 0.0));
+            e.0 += s;
+            e.1 += c;
+        }
+        return Ok(ActionOut::KernelRows(
+            merged.into_iter().map(|(k, (s, c))| (k, s, c)).collect(),
+        ));
     }
     values.sort_by(|a, b| a.total_cmp(b));
     Ok(ActionOut::Values(values))

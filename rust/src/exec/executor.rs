@@ -157,6 +157,12 @@ pub fn run_task(ctx: &ExecCtx, task: &TaskDescriptor, base_timeline: Timeline) -
         (StageCompute::DynReduce { combine, post_ops }, TaskInput::ShufflePartition { .. }) => {
             dyn_reduce(ctx, task, combine.clone(), post_ops, &mut resp)
         }
+        (StageCompute::KernelJoin { spec }, TaskInput::ShufflePartition { .. }) => {
+            kernel_join(ctx, task, *spec, &mut resp)
+        }
+        (StageCompute::DynCoGroup { post_ops }, TaskInput::ShufflePartition { .. }) => {
+            dyn_cogroup(ctx, task, post_ops, &mut resp)
+        }
         (c, i) => Err(anyhow!("task/stage mismatch: {c:?} with {i:?}")),
     };
     match result {
@@ -425,13 +431,19 @@ fn run_kernel_batch(
     accum: &mut HistAccum,
 ) -> Result<()> {
     match ctx.runtime {
-        Some(rt) => {
+        // Published queries always go to PJRT when a runtime is loaded —
+        // `run_hist` fails loudly on a missing/stale artifact, so a
+        // misconfigured manifest can never silently report native-kernel
+        // timings as PJRT numbers. Extension queries (Q6J's day-keyed
+        // scan, no published row) were never AOT-lowered: they take the
+        // native kernel unless an artifact actually exists for them.
+        Some(rt) if spec.query.published_index().is_some() || rt.supports(spec) => {
             batch.pad_to_capacity();
             let keys = prepare_keys(spec, batch, weather);
             let values = prepare_values(spec, batch);
             rt.run_hist(spec, batch, &keys, &values, accum)
         }
-        None => {
+        _ => {
             let keys = prepare_keys(spec, batch, weather);
             let values = prepare_values(spec, batch);
             run_batch_native(spec, batch, &keys, &values, accum);
@@ -459,6 +471,88 @@ fn abandon_all(readers: &mut [ShuffleReader]) {
     }
 }
 
+/// Fail a reduce-side task *after* its drain succeeded: every error
+/// path between drain and ack must nack the in-flight messages back
+/// first, or the retry finds an empty partition and silently emits a
+/// wrong (partial/empty) result instead of failing loudly.
+fn abandon_and_fail<T>(readers: &mut [ShuffleReader], e: anyhow::Error) -> Result<T> {
+    abandon_all(readers);
+    Err(e)
+}
+
+/// One parent edge's drained records, tagged with the producing stage.
+/// Records from reader *i* belong to parent edge `parents[i]` — this is
+/// what turns a multi-parent reduce from a stream *union* into a
+/// semantics-aware cogroup/join: the compute sees each side separately.
+struct TaggedRecords {
+    /// The producing stage id (the DAG edge this stream arrived over).
+    parent: u32,
+    records: Vec<ShuffleRec>,
+}
+
+/// One reader per parent edge: a multi-parent reduce drains its
+/// partition's queue of every producing stage.
+fn open_parent_readers<'a>(
+    ctx: &'a ExecCtx,
+    parents: &[u32],
+    partition: u32,
+    dedup: bool,
+) -> Vec<ShuffleReader<'a>> {
+    parents
+        .iter()
+        .map(|&p| {
+            ShuffleReader::new(
+                ctx.env,
+                ctx.transport.clone(),
+                &ctx.plan.plan_id,
+                p,
+                partition,
+                dedup,
+            )
+        })
+        .collect()
+}
+
+/// Drain every parent edge in order, returning the records per edge.
+/// One `seen` set is threaded through all readers by swap — sound
+/// across parents because producer ids embed the producing stage
+/// (pinned by `producer_ids_collision_free_across_stages`), so
+/// `(producer, seq)` spaces from different edges never alias. On a
+/// drain error every reader's in-flight messages are nacked back.
+fn drain_tagged(
+    readers: &mut [ShuffleReader],
+    parents: &[u32],
+    seen: &mut HashSet<(u64, u64)>,
+    resp: &mut TaskResponse,
+) -> Result<Vec<TaggedRecords>> {
+    let mut out = Vec::with_capacity(readers.len());
+    let mut drain_err = None;
+    for i in 0..readers.len() {
+        std::mem::swap(&mut readers[i].seen, seen);
+        let drained = readers[i].drain(&mut resp.timeline);
+        std::mem::swap(&mut readers[i].seen, seen);
+        match drained {
+            Ok(read) => {
+                resp.shuffle_msgs_received += read.messages;
+                resp.duplicates_dropped += read.duplicates_dropped;
+                resp.edge_received.push((parents[i], read.messages));
+                out.push(TaggedRecords { parent: parents[i], records: read.records });
+            }
+            Err(e) => {
+                drain_err = Some(e);
+                break;
+            }
+        }
+    }
+    match drain_err {
+        Some(e) => {
+            abandon_all(readers);
+            Err(e)
+        }
+        None => Ok(out),
+    }
+}
+
 fn kernel_reduce(
     ctx: &ExecCtx,
     task: &TaskDescriptor,
@@ -470,54 +564,19 @@ fn kernel_reduce(
     };
     let dedup = ctx.env.config().flint.dedup_enabled;
     let mut agg: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
-    // Dedup state persists across chain links; producer ids embed the
-    // producing stage, so one merged set is sound across all parents.
+    // Dedup state persists across chain links; one merged set is sound
+    // across all parent edges because producer ids embed the producing
+    // stage (see `drain_tagged`).
     let mut seen: HashSet<(u64, u64)> = HashSet::new();
     if let Some(r) = &task.resume {
         decode_reduce_state(&r.partial, &mut agg, &mut seen)?;
     }
 
-    // One reader per parent edge: a multi-parent (union/cogroup) reduce
-    // drains its partition's queue of every producing stage. Drains run
-    // sequentially, so one shared dedup set is threaded through them by
-    // swap — no per-reader cloning.
-    let mut readers: Vec<ShuffleReader> = parents
-        .iter()
-        .map(|&p| {
-            ShuffleReader::new(
-                ctx.env,
-                ctx.transport.clone(),
-                &ctx.plan.plan_id,
-                p,
-                *partition,
-                dedup,
-            )
-        })
-        .collect();
-
-    let mut records = Vec::new();
-    let mut drain_err = None;
-    for i in 0..readers.len() {
-        std::mem::swap(&mut readers[i].seen, &mut seen);
-        let drained = readers[i].drain(&mut resp.timeline);
-        std::mem::swap(&mut readers[i].seen, &mut seen);
-        match drained {
-            Ok(read) => {
-                resp.shuffle_msgs_received += read.messages;
-                resp.duplicates_dropped += read.duplicates_dropped;
-                resp.edge_received.push((parents[i], read.messages));
-                records.extend(read.records);
-            }
-            Err(e) => {
-                drain_err = Some(e);
-                break;
-            }
-        }
-    }
-    if let Some(e) = drain_err {
-        abandon_all(&mut readers);
-        return Err(e);
-    }
+    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    // KernelReduce has *union* semantics: the per-edge tags are folded
+    // back into one stream (a cogroup/join stage keeps them apart).
+    let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
+    let records: Vec<ShuffleRec> = tagged.into_iter().flat_map(|t| t.records).collect();
 
     // Injected crash point: after drain, before ack — the retry must see
     // the messages again (visibility timeout semantics).
@@ -544,7 +603,9 @@ fn kernel_reduce(
                 e.1 += count;
                 resp.rows += 1;
             }
-            ShuffleRec::Dyn { .. } => return Err(anyhow!("dyn record in kernel reduce")),
+            ShuffleRec::Dyn { .. } => {
+                return abandon_and_fail(&mut readers, anyhow!("dyn record in kernel reduce"))
+            }
         }
     }
     resp.timeline
@@ -553,11 +614,14 @@ fn kernel_reduce(
     // Memory guard — the paper's answer is more partitions, not spill.
     let agg_bytes = agg.len() as u64 * 32;
     if agg_bytes > ctx.memory_limit_bytes {
-        return Err(anyhow!(
-            "aggregation state ({agg_bytes} B) exceeds executor memory — \
-             increase the number of partitions (spec has {})",
-            spec.reduce_partitions
-        ));
+        return abandon_and_fail(
+            &mut readers,
+            anyhow!(
+                "aggregation state ({agg_bytes} B) exceeds executor memory — \
+                 increase the number of partitions (spec has {})",
+                spec.reduce_partitions
+            ),
+        );
     }
 
     if ctx.should_chain(&resp.timeline) {
@@ -600,6 +664,261 @@ fn kernel_reduce(
         out => return Err(anyhow!("kernel reduce cannot emit to {out:?}")),
     }
     Ok(None)
+}
+
+// ---------------------------------------------------------------------
+// Kernel join (typed two-sided equi-join, Q6J)
+// ---------------------------------------------------------------------
+
+/// Typed shuffle join: parent edge 0 (the *fact* side) ships per-key
+/// Kernel partials, parent edge 1 (the *dimension* side) ships
+/// `(join_key, value)` Dyn pairs — heterogeneous record types on one
+/// reduce, disambiguated purely by the per-parent stream tags. The
+/// output re-keys fact partials by their dimension value (Q6J: day →
+/// precip bucket) and shuffles them to the final reduce.
+fn kernel_join(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    spec: crate::compute::queries::KernelSpec,
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::ShufflePartition { partition, parents } = &task.input else {
+        unreachable!()
+    };
+    if parents.len() != 2 {
+        return Err(anyhow!(
+            "kernel join needs exactly 2 parent edges (fact, dimension), got {}",
+            parents.len()
+        ));
+    }
+    let dedup = ctx.env.config().flint.dedup_enabled;
+    // Per-edge partial state, tagged through chain resume: facts keep
+    // per-join-key (sum, count), the dimension keeps join_key → value.
+    let mut facts: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    let mut dim: BTreeMap<i64, i64> = BTreeMap::new();
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
+    if let Some(r) = &task.resume {
+        decode_join_state(&r.partial, &mut facts, &mut dim, &mut seen)?;
+    }
+
+    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
+
+    // Injected crash point: after drain, before ack — the retry must see
+    // every message again (visibility timeout semantics).
+    if ctx
+        .env
+        .failure()
+        .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+    {
+        abandon_all(&mut readers);
+        return Err(anyhow!(
+            "injected join crash (stage {} task {} attempt {})",
+            task.stage_id,
+            task.task_index,
+            task.attempt
+        ));
+    }
+
+    let sw = CpuStopwatch::start();
+    let fact_edge = parents[0];
+    for TaggedRecords { parent, records } in tagged {
+        if parent == fact_edge {
+            for rec in records {
+                let ShuffleRec::Kernel { key, sum, count } = rec else {
+                    return abandon_and_fail(
+                        &mut readers,
+                        anyhow!("dyn record on the fact edge (stage {parent})"),
+                    );
+                };
+                let e = facts.entry(key).or_insert((0.0, 0.0));
+                e.0 += sum;
+                e.1 += count;
+                resp.rows += 1;
+            }
+        } else {
+            for rec in records {
+                let ShuffleRec::Dyn { pair } = rec else {
+                    return abandon_and_fail(
+                        &mut readers,
+                        anyhow!("kernel record on the dimension edge (stage {parent})"),
+                    );
+                };
+                let Some(k) = pair.key().as_i64() else {
+                    return abandon_and_fail(
+                        &mut readers,
+                        anyhow!("non-i64 join key on the dimension edge"),
+                    );
+                };
+                let Some(v) = pair.val().as_i64() else {
+                    return abandon_and_fail(&mut readers, anyhow!("non-i64 dimension value"));
+                };
+                dim.insert(k, v);
+                resp.rows += 1;
+            }
+        }
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+
+    // Memory guard — the paper's answer is more partitions, not spill.
+    let state_bytes = (facts.len() as u64) * 32 + (dim.len() as u64) * 16;
+    if state_bytes > ctx.memory_limit_bytes {
+        return abandon_and_fail(
+            &mut readers,
+            anyhow!(
+                "join state ({state_bytes} B) exceeds executor memory — \
+                 increase the number of partitions (spec has {})",
+                spec.reduce_partitions
+            ),
+        );
+    }
+
+    if ctx.should_chain(&resp.timeline) {
+        for r in readers.iter_mut() {
+            r.ack(&mut resp.timeline)?;
+        }
+        let resume = ResumeState {
+            input_offset: 0,
+            input_done: false,
+            rows_done: resp.rows,
+            partial: encode_join_state(&facts, &dim, &seen),
+            next_seqs: Vec::new(),
+            links: task.resume.as_ref().map(|r| r.links + 1).unwrap_or(1),
+        };
+        return Ok(Some(resume));
+    }
+
+    // Inner hash join: each fact partial picks up its dimension row and
+    // is re-keyed by the dimension value; keys with no dimension row are
+    // dropped (inner semantics).
+    let mut joined: BTreeMap<i64, (f64, f64)> = BTreeMap::new();
+    for (k, (s, c)) in &facts {
+        let Some(&out_key) = dim.get(k) else { continue };
+        let e = joined.entry(out_key).or_insert((0.0, 0.0));
+        e.0 += s;
+        e.1 += c;
+    }
+
+    // Route the output BEFORE acking the drained inputs: a failed write
+    // must leave the messages in flight (nacked below) so the retry
+    // re-reads them — its byte-identical re-sends are deduped
+    // downstream. Acking first would hand the retry empty queues and a
+    // silently empty join result.
+    match &task.output {
+        TaskOutput::Shuffle { partitions } => {
+            let mut w = ShuffleWriter::new(
+                ctx.env,
+                ctx.transport.clone(),
+                &ctx.plan.plan_id,
+                task.stage_id,
+                task.producer_id(),
+                *partitions,
+                None,
+            );
+            if let Err(e) = write_join_output(&mut w, joined, *partitions, &mut resp.timeline) {
+                return abandon_and_fail(&mut readers, e);
+            }
+            resp.msgs_sent = w.msgs_sent;
+        }
+        TaskOutput::Driver => {
+            resp.emitted =
+                Emitted::KernelRows(joined.into_iter().map(|(k, (s, c))| (k, s, c)).collect());
+        }
+        out => {
+            return abandon_and_fail(
+                &mut readers,
+                anyhow!("kernel join cannot emit to {out:?}"),
+            )
+        }
+    }
+    for r in readers.iter_mut() {
+        r.ack(&mut resp.timeline)?;
+    }
+    Ok(None)
+}
+
+/// Write the join stage's re-keyed partials to its output shuffle
+/// (fallible: called before the input ack so the caller can nack).
+fn write_join_output(
+    w: &mut ShuffleWriter,
+    joined: BTreeMap<i64, (f64, f64)>,
+    partitions: u32,
+    tl: &mut Timeline,
+) -> Result<()> {
+    for (key, (sum, count)) in joined {
+        let p = kernel_partition(key, partitions);
+        w.write(p, &ShuffleRec::Kernel { key, sum, count }, tl)?;
+    }
+    w.flush_all(tl)
+}
+
+/// Chain-state codec for the join: the per-edge tag survives the chain
+/// (facts and dimension are stored as separate sections, plus the
+/// shared dedup set).
+fn encode_join_state(
+    facts: &BTreeMap<i64, (f64, f64)>,
+    dim: &BTreeMap<i64, i64>,
+    seen: &HashSet<(u64, u64)>,
+) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(facts.len() as u64).to_le_bytes());
+    for (k, (s, c)) in facts {
+        out.extend_from_slice(&k.to_le_bytes());
+        out.extend_from_slice(&s.to_le_bytes());
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out.extend_from_slice(&(dim.len() as u64).to_le_bytes());
+    for (k, v) in dim {
+        out.extend_from_slice(&k.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let mut seen_sorted: Vec<(u64, u64)> = seen.iter().copied().collect();
+    seen_sorted.sort_unstable();
+    out.extend_from_slice(&(seen_sorted.len() as u64).to_le_bytes());
+    for (p, s) in seen_sorted {
+        out.extend_from_slice(&p.to_le_bytes());
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out
+}
+
+fn decode_join_state(
+    bytes: &[u8],
+    facts: &mut BTreeMap<i64, (f64, f64)>,
+    dim: &mut BTreeMap<i64, i64>,
+    seen: &mut HashSet<(u64, u64)>,
+) -> Result<()> {
+    let err = || anyhow!("corrupt join partial");
+    let mut pos = 0usize;
+    let take8 = |pos: &mut usize| -> Result<[u8; 8]> {
+        let out: [u8; 8] = bytes.get(*pos..*pos + 8).ok_or_else(err)?.try_into().unwrap();
+        *pos += 8;
+        Ok(out)
+    };
+    let n = u64::from_le_bytes(take8(&mut pos)?) as usize;
+    for _ in 0..n {
+        let k = i64::from_le_bytes(take8(&mut pos)?);
+        let s = f64::from_le_bytes(take8(&mut pos)?);
+        let c = f64::from_le_bytes(take8(&mut pos)?);
+        facts.insert(k, (s, c));
+    }
+    let m = u64::from_le_bytes(take8(&mut pos)?) as usize;
+    for _ in 0..m {
+        let k = i64::from_le_bytes(take8(&mut pos)?);
+        let v = i64::from_le_bytes(take8(&mut pos)?);
+        dim.insert(k, v);
+    }
+    let d = u64::from_le_bytes(take8(&mut pos)?) as usize;
+    for _ in 0..d {
+        let p = u64::from_le_bytes(take8(&mut pos)?);
+        let s = u64::from_le_bytes(take8(&mut pos)?);
+        seen.insert((p, s));
+    }
+    if pos != bytes.len() {
+        return Err(err());
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -796,43 +1115,15 @@ fn dyn_reduce(
     post_ops: &[crate::plan::DynOp],
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
-    let TaskInput::ShufflePartition { partition, parents, .. } = &task.input else {
+    let TaskInput::ShufflePartition { partition, parents } = &task.input else {
         unreachable!()
     };
     let dedup = ctx.env.config().flint.dedup_enabled;
-    let mut readers: Vec<ShuffleReader> = parents
-        .iter()
-        .map(|&p| {
-            ShuffleReader::new(
-                ctx.env,
-                ctx.transport.clone(),
-                &ctx.plan.plan_id,
-                p,
-                *partition,
-                dedup,
-            )
-        })
-        .collect();
-    let mut records = Vec::new();
-    let mut drain_err = None;
-    for i in 0..readers.len() {
-        match readers[i].drain(&mut resp.timeline) {
-            Ok(read) => {
-                resp.shuffle_msgs_received += read.messages;
-                resp.duplicates_dropped += read.duplicates_dropped;
-                resp.edge_received.push((parents[i], read.messages));
-                records.extend(read.records);
-            }
-            Err(e) => {
-                drain_err = Some(e);
-                break;
-            }
-        }
-    }
-    if let Some(e) = drain_err {
-        abandon_all(&mut readers);
-        return Err(e);
-    }
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
+    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    // DynReduce has *union* semantics over its parent edges; the tags
+    // are folded back into one stream (DynCoGroup keeps them apart).
+    let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
 
     if ctx
         .env
@@ -845,9 +1136,9 @@ fn dyn_reduce(
 
     let sw = CpuStopwatch::start();
     let mut agg: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
-    for rec in records {
+    for rec in tagged.into_iter().flat_map(|t| t.records) {
         let ShuffleRec::Dyn { pair } = rec else {
-            return Err(anyhow!("kernel record in dyn reduce"));
+            return abandon_and_fail(&mut readers, anyhow!("kernel record in dyn reduce"));
         };
         resp.rows += 1;
         let key_bytes = pair.key().encode();
@@ -861,8 +1152,106 @@ fn dyn_reduce(
             }
         }
     }
+    let mut pairs = Vec::with_capacity(agg.len());
+    for (key_bytes, val) in agg {
+        let Some((key, _)) = Value::decode(&key_bytes) else {
+            return abandon_and_fail(&mut readers, anyhow!("corrupt agg key"));
+        };
+        pairs.push((key, val));
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
 
-    // Post-shuffle narrow ops, then route.
+    route_post_ops(ctx, task, pairs, post_ops, &mut readers, resp)
+}
+
+/// Generic cogroup over the *tagged* parent streams: each key's values
+/// are grouped per origin edge and emitted as
+/// `(key, [side0_values, side1_values, ...])` through the post chain —
+/// the reduce-side shape `Rdd::cogroup`/`Rdd::join` lower to. Each
+/// side's list is sorted into the deterministic total order because
+/// queue arrival order across producers is a host-thread race.
+fn dyn_cogroup(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    post_ops: &[crate::plan::DynOp],
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::ShufflePartition { partition, parents } = &task.input else {
+        unreachable!()
+    };
+    let dedup = ctx.env.config().flint.dedup_enabled;
+    let mut seen: HashSet<(u64, u64)> = HashSet::new();
+    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
+
+    if ctx
+        .env
+        .failure()
+        .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+    {
+        abandon_all(&mut readers);
+        return Err(anyhow!(
+            "injected cogroup crash (stage {} task {} attempt {})",
+            task.stage_id,
+            task.task_index,
+            task.attempt
+        ));
+    }
+
+    let sw = CpuStopwatch::start();
+    let n_sides = parents.len();
+    // key bytes → one value list per parent edge (index = edge position).
+    let mut groups: BTreeMap<Vec<u8>, Vec<Vec<Value>>> = BTreeMap::new();
+    for (side, TaggedRecords { parent, records }) in tagged.into_iter().enumerate() {
+        for rec in records {
+            let ShuffleRec::Dyn { pair } = rec else {
+                return abandon_and_fail(
+                    &mut readers,
+                    anyhow!("kernel record in cogroup (edge from stage {parent})"),
+                );
+            };
+            resp.rows += 1;
+            let kb = pair.key().encode();
+            let sides = groups.entry(kb).or_insert_with(|| vec![Vec::new(); n_sides]);
+            sides[side].push(pair.val().clone());
+        }
+    }
+    let mut pairs = Vec::with_capacity(groups.len());
+    for (kb, mut sides) in groups {
+        let Some((key, _)) = Value::decode(&kb) else {
+            return abandon_and_fail(&mut readers, anyhow!("corrupt cogroup key"));
+        };
+        for side in &mut sides {
+            side.sort_by(|a, b| a.total_cmp(b));
+        }
+        pairs.push((key, Value::List(sides.into_iter().map(Value::List).collect())));
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+
+    route_post_ops(ctx, task, pairs, post_ops, &mut readers, resp)
+}
+
+/// Pre-ack routing state produced by [`route_pairs`].
+struct RoutedOutputs<'a> {
+    writer: Option<ShuffleWriter<'a>>,
+    next_side: BTreeMap<Vec<u8>, Value>,
+    collected: Vec<Value>,
+    count: u64,
+}
+
+/// Run the post-op chain over grouped pairs and buffer/route the
+/// outputs. Fallible (shuffle writes) and called *before* the readers
+/// ack, so the caller can nack on error.
+fn route_pairs<'a>(
+    ctx: &ExecCtx<'a>,
+    task: &TaskDescriptor,
+    pairs: Vec<(Value, Value)>,
+    post_ops: &[crate::plan::DynOp],
+    resp: &mut TaskResponse,
+) -> Result<RoutedOutputs<'a>> {
+    let sw = CpuStopwatch::start();
     let out_parts = stage_output_partitions(ctx, task);
     let next_combine = match &ctx.plan.stages[task.stage_id as usize].output {
         StageOutput::Shuffle { combine, .. } => combine.clone(),
@@ -883,8 +1272,7 @@ fn dyn_reduce(
     let mut count = 0u64;
     let mut buf = Vec::new();
     let mut next_side: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
-    for (key_bytes, val) in agg {
-        let (key, _) = Value::decode(&key_bytes).ok_or_else(|| anyhow!("corrupt agg key"))?;
+    for (key, val) in pairs {
         buf.clear();
         crate::plan::DynOp::apply_chain(post_ops, Value::pair(key, val), &mut buf);
         for v in buf.drain(..) {
@@ -919,6 +1307,28 @@ fn dyn_reduce(
     }
     resp.timeline
         .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+    Ok(RoutedOutputs { writer, next_side, collected, count })
+}
+
+/// Apply a reduce-side post-op chain to grouped `(key, value)` records
+/// and route the results (next shuffle stage, driver response, or S3) —
+/// the shared tail of DynReduce and DynCoGroup. Acks the drained
+/// readers between the routing loop and the final output flush,
+/// mirroring the pre-refactor reduce ordering; a pre-ack routing error
+/// nacks everything back for the retry.
+fn route_post_ops(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    pairs: Vec<(Value, Value)>,
+    post_ops: &[crate::plan::DynOp],
+    readers: &mut [ShuffleReader],
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let routed = match route_pairs(ctx, task, pairs, post_ops, resp) {
+        Ok(r) => r,
+        Err(e) => return abandon_and_fail(readers, e),
+    };
+    let RoutedOutputs { mut writer, mut next_side, collected, count } = routed;
 
     for r in readers.iter_mut() {
         r.ack(&mut resp.timeline)?;
@@ -1127,6 +1537,28 @@ mod tests {
         assert_eq!(agg2, agg);
         assert_eq!(seen2, seen);
         assert!(decode_reduce_state(&enc[..enc.len() - 1], &mut agg2, &mut seen2).is_err());
+    }
+
+    #[test]
+    fn join_state_roundtrip_keeps_edges_apart() {
+        // The chain-resume partial for a join is tag-separated: fact
+        // partials and dimension rows must come back on their own sides.
+        let mut facts = BTreeMap::new();
+        facts.insert(100i64, (3.0, 3.0));
+        facts.insert(-2i64, (1.5, 2.0));
+        let mut dim = BTreeMap::new();
+        dim.insert(100i64, 4i64);
+        let mut seen = HashSet::new();
+        seen.insert((1u64 << 32, 0u64));
+        seen.insert((0u64, 0u64));
+        let enc = encode_join_state(&facts, &dim, &seen);
+        let (mut f2, mut d2, mut s2) = (BTreeMap::new(), BTreeMap::new(), HashSet::new());
+        decode_join_state(&enc, &mut f2, &mut d2, &mut s2).unwrap();
+        assert_eq!(f2, facts);
+        assert_eq!(d2, dim);
+        assert_eq!(s2, seen);
+        // Truncation is rejected, not silently shortened.
+        assert!(decode_join_state(&enc[..enc.len() - 1], &mut f2, &mut d2, &mut s2).is_err());
     }
 
     #[test]

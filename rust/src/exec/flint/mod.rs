@@ -114,11 +114,49 @@ impl FlintEngine {
     /// Execute a generic RDD action (the PySpark-like API).
     pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
         let cfg = self.env.config();
-        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |_, _| {
-            crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |bucket, prefix| {
+            rdd_splits(&self.env, dataset, bucket, prefix, cfg.flint.input_split_bytes)
         });
         self.run_plan(&plan)
     }
+}
+
+/// Resolve a lineage branch's input splits by listing `bucket/prefix` in
+/// the simulated S3 — multi-source lineages (`Rdd::cogroup`/`join`
+/// across prefixes) each read their own objects. When the listing is
+/// empty, the provided dataset's manifest is used ONLY if the branch
+/// names that dataset's own source (callers that constructed the
+/// manifest out-of-band keep working); any *other* empty source scans
+/// nothing rather than silently substituting the wrong data.
+pub(crate) fn rdd_splits(
+    env: &SimEnv,
+    dataset: &Dataset,
+    bucket: &str,
+    prefix: &str,
+    split_bytes: u64,
+) -> Vec<crate::plan::InputSplit> {
+    let listed = env.s3().list(bucket, prefix).unwrap_or_default();
+    if listed.is_empty() {
+        let same_source = bucket == dataset.bucket
+            && prefix.trim_end_matches('/') == dataset.prefix.trim_end_matches('/');
+        if same_source {
+            return crate::plan::dag::input_splits(dataset, split_bytes);
+        }
+        return Vec::new();
+    }
+    let mut splits = Vec::new();
+    for (key, size) in listed {
+        for (start, end) in crate::compute::csv::split_ranges(size, split_bytes) {
+            splits.push(crate::plan::InputSplit {
+                bucket: bucket.to_string(),
+                key: key.clone(),
+                start,
+                end,
+                object_size: size,
+            });
+        }
+    }
+    splits
 }
 
 impl Engine for FlintEngine {
@@ -177,8 +215,8 @@ pub fn run_rdd_collect(
     dataset: &Dataset,
 ) -> Result<Vec<crate::compute::value::Value>> {
     let cfg = engine.env.config();
-    let plan = crate::plan::dag::build_dyn_plan(rdd, Action::Collect, |_, _| {
-        crate::plan::dag::input_splits(dataset, cfg.flint.input_split_bytes)
+    let plan = crate::plan::dag::build_dyn_plan(rdd, Action::Collect, |bucket, prefix| {
+        rdd_splits(&engine.env, dataset, bucket, prefix, cfg.flint.input_split_bytes)
     });
     engine.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
     let out = run_plan(

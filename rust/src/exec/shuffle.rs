@@ -94,6 +94,11 @@ impl ShuffleRec {
 #[derive(Default)]
 pub struct MemoryShuffle {
     parts: Mutex<BTreeMap<(u32, u32), Vec<Message>>>,
+    /// Delivered-but-unacked messages, the SQS visibility-timeout
+    /// analogue: a reader that dies after draining nacks them back so
+    /// its retry sees the data again (without this, a forced reducer
+    /// crash on the memory backend silently lost the partition).
+    in_flight: Mutex<BTreeMap<(u32, u32), Vec<Message>>>,
 }
 
 impl MemoryShuffle {
@@ -111,11 +116,46 @@ impl MemoryShuffle {
     }
 
     fn drain(&self, stage: u32, part: u32) -> Vec<Message> {
-        self.parts
+        let msgs = self
+            .parts
             .lock()
             .expect("mem shuffle")
             .remove(&(stage, part))
-            .unwrap_or_default()
+            .unwrap_or_default();
+        if !msgs.is_empty() {
+            self.in_flight
+                .lock()
+                .expect("mem shuffle in-flight")
+                .entry((stage, part))
+                .or_default()
+                .extend(msgs.iter().cloned());
+        }
+        msgs
+    }
+
+    /// Task success: drop the delivered messages for good.
+    fn ack(&self, stage: u32, part: u32) {
+        self.in_flight
+            .lock()
+            .expect("mem shuffle in-flight")
+            .remove(&(stage, part));
+    }
+
+    /// Task failure: return the delivered messages to the partition.
+    fn nack(&self, stage: u32, part: u32) {
+        let returned = self
+            .in_flight
+            .lock()
+            .expect("mem shuffle in-flight")
+            .remove(&(stage, part));
+        if let Some(msgs) = returned {
+            self.parts
+                .lock()
+                .expect("mem shuffle")
+                .entry((stage, part))
+                .or_default()
+                .extend(msgs);
+        }
     }
 }
 
@@ -250,13 +290,37 @@ impl<'a> ShuffleWriter<'a> {
         self.bytes_sent += bytes as u64;
         match &self.transport {
             Transport::Sqs => {
+                // Chunk by message count AND wire bytes: a message seals
+                // only after crossing MSG_TARGET_BYTES, so one big record
+                // (a large Dyn value) makes an oversized message and ten
+                // of them blow the 256 KB per-batch cap if count were the
+                // only limit.
                 let q = queue_name(&self.plan_id, self.stage, partition);
-                let max = self.env.config().sim.sqs_batch_max_msgs;
-                for chunk in msgs.chunks(max) {
+                let max_msgs = self.env.config().sim.sqs_batch_max_msgs;
+                let max_bytes = self.env.config().sim.sqs_batch_max_bytes;
+                let mut batch: Vec<Message> = Vec::new();
+                let mut batch_bytes = 0usize;
+                for m in msgs {
+                    let w = m.wire_bytes();
+                    if !batch.is_empty()
+                        && (batch.len() >= max_msgs || batch_bytes + w > max_bytes)
+                    {
+                        let dt = self
+                            .env
+                            .sqs()
+                            .send_batch(&q, std::mem::take(&mut batch))
+                            .map_err(|e| anyhow!("shuffle send: {e}"))?;
+                        tl.charge(Component::SqsSend, dt);
+                        batch_bytes = 0;
+                    }
+                    batch_bytes += w;
+                    batch.push(m);
+                }
+                if !batch.is_empty() {
                     let dt = self
                         .env
                         .sqs()
-                        .send_batch(&q, chunk.to_vec())
+                        .send_batch(&q, batch)
                         .map_err(|e| anyhow!("shuffle send: {e}"))?;
                     tl.charge(Component::SqsSend, dt);
                 }
@@ -385,11 +449,21 @@ impl<'a> ShuffleReader<'a> {
                         .get_object(SHUFFLE_BUCKET, &key, self.env.flint_read_profile())
                         .map_err(|e| anyhow!("shuffle get: {e}"))?;
                     tl.charge(Component::S3Read, dt);
-                    // Reconstruct dedup identity from the key.
+                    // Reconstruct dedup identity from the key. A key that
+                    // does not parse is a hard error: defaulting (the old
+                    // behaviour) made every malformed/foreign key alias
+                    // to (0, 0), so dedup silently dropped all but the
+                    // first such object's records.
                     let stem = key.rsplit('/').next().unwrap_or("");
-                    let (p, s) = stem.split_once('-').unwrap_or(("0", "0"));
-                    let producer = u64::from_str_radix(p, 16).unwrap_or(0);
-                    let seq: u64 = s.parse().unwrap_or(0);
+                    let (p, s) = stem.split_once('-').ok_or_else(|| {
+                        anyhow!("shuffle object key {key:?} lacks a producer-seq stem")
+                    })?;
+                    let producer = u64::from_str_radix(p, 16).map_err(|e| {
+                        anyhow!("shuffle object key {key:?} has a bad producer id: {e}")
+                    })?;
+                    let seq: u64 = s.parse().map_err(|e| {
+                        anyhow!("shuffle object key {key:?} has a bad sequence number: {e}")
+                    })?;
                     self.take(Message::new(obj.bytes().to_vec(), producer, seq), &mut out)?;
                 }
             }
@@ -420,42 +494,65 @@ impl<'a> ShuffleReader<'a> {
     }
 
     /// Acknowledge everything received (task success): SQS deletes in
-    /// batches of 10 — billed requests, exactly like the real API.
+    /// batches of 10 — billed requests, exactly like the real API. The
+    /// memory backend drops its in-flight copies; S3 objects are owned by
+    /// the scheduler's prefix lifecycle and need no per-task ack.
     pub fn ack(&mut self, tl: &mut Timeline) -> Result<()> {
-        if let Transport::Sqs = self.transport {
-            let q = self.queue();
-            for chunk in self.receipts.chunks(10) {
-                let dt = self
-                    .env
-                    .sqs()
-                    .delete_batch(&q, chunk)
-                    .map_err(|e| anyhow!("shuffle ack: {e}"))?;
-                tl.charge(Component::SqsReceive, dt);
+        match &self.transport {
+            Transport::Sqs => {
+                let q = self.queue();
+                for chunk in self.receipts.chunks(10) {
+                    let dt = self
+                        .env
+                        .sqs()
+                        .delete_batch(&q, chunk)
+                        .map_err(|e| anyhow!("shuffle ack: {e}"))?;
+                    tl.charge(Component::SqsReceive, dt);
+                }
             }
+            Transport::Memory(mem) => mem.ack(self.stage, self.partition),
+            Transport::S3 => {}
         }
         self.receipts.clear();
         Ok(())
     }
 
     /// Task failed: return in-flight messages to the queue (visibility
-    /// timeout semantics) so the retry sees them.
+    /// timeout semantics) so the retry sees them. The memory backend
+    /// mirrors this; the S3 backend's objects persist until the scheduler
+    /// tears the prefix down, so a retry re-lists them anyway.
     pub fn abandon(&mut self) {
-        if let Transport::Sqs = self.transport {
-            let q = self.queue();
-            let _ = self.env.sqs().nack(&q, &self.receipts);
+        match &self.transport {
+            Transport::Sqs => {
+                let q = self.queue();
+                let _ = self.env.sqs().nack(&q, &self.receipts);
+            }
+            Transport::Memory(mem) => mem.nack(self.stage, self.partition),
+            Transport::S3 => {}
         }
         self.receipts.clear();
     }
 }
 
 /// Hash-partitioner for kernel records (bucket keys): mirrors Spark's
-/// `HashPartitioner` (non-negative modulo of the key hash).
+/// `HashPartitioner` (non-negative modulo of the key hash). Unchanged
+/// from the seed so the published queries' partition routing — and with
+/// it the Table I makespans — stays byte-stable.
 pub fn kernel_partition(key: i64, partitions: u32) -> u32 {
     (crate::util::hash_i64(key) % partitions as u64) as u32
 }
 
-/// Partitioner for dynamic pairs.
+/// Partitioner for dynamic pairs. `I64` keys route through
+/// [`kernel_partition`]: a dyn stream and a typed kernel stream
+/// partitioned on the same i64 join key MUST land in the same reduce
+/// partition, or the join stage never sees the two sides together
+/// (`build_join_plan` / `build_kernel_join_plan` rely on this; pinned
+/// by `prop_kernel_and_dyn_partitioners_agree_on_i64`). Other key types
+/// hash their stable encoding, as before.
 pub fn dyn_partition(key: &Value, partitions: u32) -> u32 {
+    if let Some(k) = key.as_i64() {
+        return kernel_partition(k, partitions);
+    }
     (key.stable_hash() % partitions as u64) as u32
 }
 
@@ -621,6 +718,104 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_kernel_and_dyn_partitioners_agree_on_i64() {
+        // The join plans hash-partition a typed kernel stream and a dyn
+        // stream on the same i64 key; they must agree for every key.
+        forall("kernel-dyn-partition-agree", 300, |g| {
+            let parts = g.u64(64) as u32 + 1;
+            let key = g.i64(i64::MIN / 2, i64::MAX / 2);
+            let kp = kernel_partition(key, parts);
+            let dp = dyn_partition(&Value::I64(key), parts);
+            if kp != dp {
+                return Err(format!("key {key}: kernel {kp} vs dyn {dp} ({parts} parts)"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sqs_flush_chunks_by_bytes_and_count() {
+        // Regression: messages seal only after crossing MSG_TARGET_BYTES,
+        // so one large Dyn value makes one ~40 KB message; ten of them
+        // used to go out as a single 400 KB send and fail the whole
+        // query with BatchTooLarge. The writer must chunk by bytes too.
+        let env = env_with(0.0);
+        env.sqs().create_queue(&queue_name("big", 0, 0));
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "big", 0, 1, 1, None);
+        let n = 12;
+        for i in 0..n {
+            let pair = Value::pair(Value::I64(i), Value::str("x".repeat(40 * 1024)));
+            w.write(0, &ShuffleRec::Dyn { pair }, &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        assert_eq!(w.msgs_sent, n as u64, "every large record became its own message");
+        // 256 KB cap fits six ~40 KB messages per send.
+        assert!(
+            env.metrics().get("sqs.send_batch") >= 2,
+            "byte cap must split the flush into multiple sends"
+        );
+        let mut r = ShuffleReader::new(&env, Transport::Sqs, "big", 0, 0, true);
+        let read = r.drain(&mut tl).unwrap();
+        r.ack(&mut tl).unwrap();
+        assert_eq!(read.records.len(), n as usize, "nothing lost to batch limits");
+    }
+
+    #[test]
+    fn s3_reader_rejects_malformed_dedup_keys() {
+        // Regression: the S3 reader used to fall back to (producer=0,
+        // seq=0) when a key failed to parse, so two malformed/foreign
+        // keys aliased and dedup silently dropped the second object.
+        let env = env_with(0.0);
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, Transport::S3, "bad", 0, 7, 1, None);
+        for i in 0..10i64 {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        // Two foreign objects under the shuffle prefix, both unparseable:
+        // no '-' stem at all, and a non-decimal sequence part.
+        let prefix = s3_prefix("bad", 0, 0);
+        env.s3()
+            .put_object(SHUFFLE_BUCKET, &format!("{prefix}junkobject"), b"junk".to_vec())
+            .unwrap();
+        env.s3()
+            .put_object(SHUFFLE_BUCKET, &format!("{prefix}feed-beef"), b"junk".to_vec())
+            .unwrap();
+        let mut r = ShuffleReader::new(&env, Transport::S3, "bad", 0, 0, true);
+        let err = r.drain(&mut tl).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("shuffle object key"), "{text}");
+    }
+
+    #[test]
+    fn memory_abandon_redelivers_for_retry() {
+        // The memory backend now has visibility-timeout semantics: a
+        // reader that dies after draining returns its messages, so the
+        // retry sees the partition again (reducer crash/retry on the
+        // cluster baseline).
+        let env = env_with(0.0);
+        let mem = MemoryShuffle::new();
+        let transport = || Transport::Memory(Arc::clone(&mem));
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, transport(), "m", 2, 5, 1, None);
+        for i in 0..10i64 {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        let mut r1 = ShuffleReader::new(&env, transport(), "m", 2, 0, false);
+        assert_eq!(r1.drain(&mut tl).unwrap().records.len(), 10);
+        r1.abandon();
+        let mut r2 = ShuffleReader::new(&env, transport(), "m", 2, 0, false);
+        let read2 = r2.drain(&mut tl).unwrap();
+        r2.ack(&mut tl).unwrap();
+        assert_eq!(read2.records.len(), 10, "abandoned messages redelivered");
+        // Acked for good: a third reader sees nothing.
+        let mut r3 = ShuffleReader::new(&env, Transport::Memory(mem), "m", 2, 0, false);
+        assert_eq!(r3.drain(&mut tl).unwrap().records.len(), 0);
     }
 
     use crate::util::propcheck::Gen;

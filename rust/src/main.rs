@@ -10,6 +10,22 @@
 //! ```
 //!
 //! Every command accepts `--config <toml>` and repeated `--set key=value`.
+//! Queries are Q0..Q6 plus Q6J, the shuffle-join variant of Q6.
+//! `flint explain --query Q6J` renders the join diamond — two scan
+//! stages (trips, weather) fanning into a `KernelJoin` stage and a
+//! final per-bucket reduce:
+//!
+//! ```text
+//!   stage 0: [s3 xN]   -> KernelScan(Q6J)   -> Shuffle(30) (N tasks)
+//!   stage 1: [s3 x1]   -> DynScan(1 ops)    -> Shuffle(30) (1 tasks)
+//!   stage 2: [sqs x30] -> KernelJoin(Q6J)   -> Shuffle(6)  (30 tasks)  <- s0, s1
+//!   stage 3: [sqs x6]  -> KernelReduce(Q6J) -> Act(Collect) (6 tasks)  <- s2
+//! ```
+//!
+//! followed by the barrier/pipelined schedule windows (under the
+//! pipelined clock the two scans overlap each other and the join
+//! long-polls both of them) and the per-edge shuffle volumes
+//! (`edge s0->s2`, `edge s1->s2`, `edge s2->s3`).
 
 use flint::bench::{run_table1, Table1Options};
 use flint::cli::Args;
@@ -73,7 +89,7 @@ fn real_main() -> Result<(), String> {
 
 fn parse_query(args: &Args) -> Result<QueryId, String> {
     let name = args.get("query").unwrap_or("Q1");
-    QueryId::parse(name).ok_or_else(|| format!("unknown query `{name}` (Q0..Q6)"))
+    QueryId::parse(name).ok_or_else(|| format!("unknown query `{name}` (Q0..Q6, Q6J)"))
 }
 
 fn cmd_gen(args: &Args, cfg: FlintConfig) -> Result<(), String> {

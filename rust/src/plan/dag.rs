@@ -3,8 +3,22 @@
 //!
 //! Stages carry explicit ids and *parent edges*: a stage consumes the
 //! shuffle output of every parent listed in [`Stage::parents`], so plans
-//! are no longer restricted to linear chains — multi-parent stages
-//! (unions, cogroups, and eventually joins) are first-class. Stages are
+//! are no longer restricted to linear chains — multi-parent stages are
+//! first-class, and the reduce side consumes each parent's stream
+//! *tagged with its origin edge*: [`build_union_plan`] merges them
+//! (union semantics), while [`build_join_plan`] / Q6J's
+//! [`build_kernel_join_plan`] keep the sides apart for true
+//! cogroup/join semantics. `flint explain` renders the join shape as a
+//! diamond, e.g. for Q6J:
+//!
+//! ```text
+//!   stage 0: [s3 xN] -> KernelScan(Q6J) -> Shuffle(30) (N tasks)
+//!   stage 1: [s3 x1] -> DynScan(1 ops) -> Shuffle(30) (1 tasks)
+//!   stage 2: [sqs x30] -> KernelJoin(Q6J) -> Shuffle(6) (30 tasks)  <- s0, s1
+//!   stage 3: [sqs x6] -> KernelReduce(Q6J) -> Act(Collect) (6 tasks)  <- s2
+//! ```
+//!
+//! Stages are
 //! stored in topological order (`parents[i] < id` for every edge), which
 //! [`PhysicalPlan::validate`] enforces; the driver executes them in that
 //! order while the virtual clock (`simtime::schedule`) decides how much
@@ -13,10 +27,13 @@
 
 use crate::compute::csv::split_ranges;
 use crate::compute::queries::{KernelSpec, QueryId};
+use crate::compute::value::Value;
 use crate::config::FlintConfig;
+use crate::data::weather::{precip_bucket, PRECIP_BUCKETS};
 use crate::data::Dataset;
 use crate::plan::rdd::{CombineFn, DynOp, Rdd};
 use crate::plan::task::InputSplit;
+use std::sync::Arc;
 
 /// What the final stage does with its output.
 #[derive(Clone)]
@@ -81,6 +98,15 @@ pub enum StageCompute {
     /// Generic reduce: combine pair values by key, then apply a post
     /// chain.
     DynReduce { combine: CombineFn, post_ops: Vec<DynOp> },
+    /// Typed two-sided equi-join (Q6J). Streams are consumed *per parent
+    /// edge* (the tagged shuffle): edge `parents[0]` ships per-join-key
+    /// fact partials as Kernel records, edge `parents[1]` ships
+    /// `(join_key, value)` dimension pairs as Dyn records; the output
+    /// re-keys the fact partials by their dimension value.
+    KernelJoin { spec: KernelSpec },
+    /// Generic cogroup: group each parent edge's pair-values by key,
+    /// then feed `(key, [values_per_edge, ...])` through a post chain.
+    DynCoGroup { post_ops: Vec<DynOp> },
 }
 
 impl std::fmt::Debug for StageCompute {
@@ -91,6 +117,10 @@ impl std::fmt::Debug for StageCompute {
             StageCompute::DynScan { ops } => write!(f, "DynScan({} ops)", ops.len()),
             StageCompute::DynReduce { post_ops, .. } => {
                 write!(f, "DynReduce(+{} post ops)", post_ops.len())
+            }
+            StageCompute::KernelJoin { spec } => write!(f, "KernelJoin({})", spec.query),
+            StageCompute::DynCoGroup { post_ops } => {
+                write!(f, "DynCoGroup(+{} post ops)", post_ops.len())
             }
         }
     }
@@ -264,6 +294,9 @@ fn next_plan_id() -> String {
 /// map-only + Count; everything else is scan → shuffle → reduce →
 /// Collect, exactly the two-stage shape the paper's Figure 1 shows.
 pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig) -> PhysicalPlan {
+    if query.is_join() {
+        return build_kernel_join_plan(query, dataset, config);
+    }
     let spec = query.spec();
     let splits = input_splits(dataset, config.flint.input_split_bytes);
     let weather = spec
@@ -311,12 +344,29 @@ pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig
     }
 }
 
-/// Physical plan for a generic RDD lineage + action.
+/// Physical plan for a generic RDD lineage + action. Linear lineages
+/// lower to a scan → reduce chain; a `cogroup`/`join` lineage (two
+/// narrow branches fanning into one cogroup, narrow ops after) lowers
+/// through [`build_join_plan`].
 pub fn build_dyn_plan(
     rdd: &Rdd,
     action: Action,
     dataset_lookup: impl Fn(&str, &str) -> Vec<InputSplit>,
 ) -> PhysicalPlan {
+    if let Some((left, right, partitions, post_ops)) = rdd.cogroup_shape() {
+        let branch = |r: &Rdd| -> UnionBranch {
+            let lin = r.linearize();
+            assert_eq!(
+                lin.segments.len(),
+                1,
+                "cogroup branches must be narrow (map/filter/flatMap) chains"
+            );
+            let splits = dataset_lookup(&lin.source.0, &lin.source.1);
+            let seg = lin.segments.into_iter().next().expect("one segment");
+            UnionBranch { ops: seg.ops, splits }
+        };
+        return build_join_plan(branch(&left), branch(&right), partitions, post_ops, action);
+    }
     let lin = rdd.linearize();
     let splits = dataset_lookup(&lin.source.0, &lin.source.1);
     let mut stages = Vec::new();
@@ -358,6 +408,99 @@ pub fn build_dyn_plan(
         query: None,
         weather: None,
     }
+}
+
+/// The dimension branch's op chain for the kernel join plans: parse the
+/// weather CSV (`day_index,precip`) into `(I64 day, I64 precip_bucket)`
+/// pairs, dropping malformed lines.
+fn weather_dim_ops() -> Vec<DynOp> {
+    vec![DynOp::FlatMap(Arc::new(|v: Value| {
+        let Some(line) = v.as_str() else { return Vec::new() };
+        let Some((day, precip)) = line.split_once(',') else { return Vec::new() };
+        let (Ok(day), Ok(p)) = (day.trim().parse::<i64>(), precip.trim().parse::<f32>()) else {
+            return Vec::new();
+        };
+        vec![Value::pair(Value::I64(day), Value::I64(precip_bucket(p) as i64))]
+    }))]
+}
+
+/// Physical plan for a shuffle-join benchmark query (Q6J) — the exchange
+/// operator the broadcast-lookup Q6 avoids:
+///
+/// ```text
+///   stage 0  KernelScan  trips   -> shuffle(join partitions, day key)
+///   stage 1  DynScan     weather -> shuffle(join partitions, day key)
+///   stage 2  KernelJoin  <- s0, s1  -> shuffle(precip buckets)
+///   stage 3  KernelReduce <- s2     -> Collect
+/// ```
+///
+/// Both scan stages hash-partition on the *day* key (the partitioners
+/// are aligned across the typed/dyn record types — see
+/// `exec::shuffle::kernel_partition`), so each join task sees every
+/// record for its slice of days from both sides, tagged per parent edge.
+/// The join re-keys by precipitation bucket and a final reduce merges
+/// per-bucket partials, exactly matching Q6's broadcast answer.
+pub fn build_kernel_join_plan(
+    query: QueryId,
+    dataset: &Dataset,
+    config: &FlintConfig,
+) -> PhysicalPlan {
+    let spec = query.spec();
+    assert!(spec.reduce_partitions > 0, "a join query must shuffle");
+    let join_parts = spec.reduce_partitions;
+    let splits = input_splits(dataset, config.flint.input_split_bytes);
+    let dim_splits: Vec<InputSplit> =
+        split_ranges(dataset.weather_bytes, config.flint.input_split_bytes)
+            .into_iter()
+            .map(|(start, end)| InputSplit {
+                bucket: dataset.bucket.clone(),
+                key: dataset.weather_key.clone(),
+                start,
+                end,
+                object_size: dataset.weather_bytes,
+            })
+            .collect();
+
+    let stages = vec![
+        Stage {
+            id: 0,
+            parents: Vec::new(),
+            compute: StageCompute::KernelScan { spec },
+            input: StageInput::S3Splits(splits),
+            output: StageOutput::Shuffle { partitions: join_parts, combine: None },
+        },
+        Stage {
+            id: 1,
+            parents: Vec::new(),
+            compute: StageCompute::DynScan { ops: weather_dim_ops() },
+            input: StageInput::S3Splits(dim_splits),
+            output: StageOutput::Shuffle { partitions: join_parts, combine: None },
+        },
+        Stage {
+            id: 2,
+            parents: vec![0, 1],
+            compute: StageCompute::KernelJoin { spec },
+            input: StageInput::Shuffle { partitions: join_parts },
+            output: StageOutput::Shuffle { partitions: PRECIP_BUCKETS, combine: None },
+        },
+        Stage {
+            id: 3,
+            parents: vec![2],
+            compute: StageCompute::KernelReduce { spec },
+            input: StageInput::Shuffle { partitions: PRECIP_BUCKETS },
+            output: StageOutput::Act(Action::Collect),
+        },
+    ];
+    let plan = PhysicalPlan {
+        plan_id: next_plan_id(),
+        stages,
+        action: Action::Collect,
+        query: Some(query),
+        // No broadcast side table: the weather data rides the shuffle.
+        weather: None,
+    };
+    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+    plan
 }
 
 /// One input branch of a multi-parent (union/cogroup) plan.
@@ -403,6 +546,55 @@ pub fn build_union_plan(
         input: StageInput::Shuffle { partitions },
         output: StageOutput::Act(action.clone()),
     });
+    let plan = PhysicalPlan {
+        plan_id: next_plan_id(),
+        stages,
+        action,
+        query: None,
+        weather: None,
+    };
+    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+    plan
+}
+
+/// Two-sided cogroup plan: both branches hash-partition their pairs on
+/// the key into the same `partitions` space; the reduce stage lists both
+/// scans as parents and — unlike [`build_union_plan`]'s merged stream —
+/// consumes them *per parent edge*, grouping each key's values by origin
+/// side before running `post_ops` over `(key, [left_vals, right_vals])`.
+/// This is the exchange-operator join shape (`Rdd::join`/`cogroup`
+/// lower to it).
+pub fn build_join_plan(
+    left: UnionBranch,
+    right: UnionBranch,
+    partitions: usize,
+    post_ops: Vec<DynOp>,
+    action: Action,
+) -> PhysicalPlan {
+    assert!(partitions > 0, "join plan needs at least one partition");
+    let stages = vec![
+        Stage {
+            id: 0,
+            parents: Vec::new(),
+            compute: StageCompute::DynScan { ops: left.ops },
+            input: StageInput::S3Splits(left.splits),
+            output: StageOutput::Shuffle { partitions, combine: None },
+        },
+        Stage {
+            id: 1,
+            parents: Vec::new(),
+            compute: StageCompute::DynScan { ops: right.ops },
+            input: StageInput::S3Splits(right.splits),
+            output: StageOutput::Shuffle { partitions, combine: None },
+        },
+        Stage {
+            id: 2,
+            parents: vec![0, 1],
+            compute: StageCompute::DynCoGroup { post_ops },
+            input: StageInput::Shuffle { partitions },
+            output: StageOutput::Act(action.clone()),
+        },
+    ];
     let plan = PhysicalPlan {
         plan_id: next_plan_id(),
         stages,
@@ -499,6 +691,54 @@ mod tests {
         plan.validate().unwrap();
         let text = plan.explain();
         assert!(text.contains("<- s0, s1"), "{text}");
+    }
+
+    #[test]
+    fn join_plan_is_a_two_scan_diamond() {
+        let plan = build_join_plan(
+            UnionBranch { ops: Vec::new(), splits: fake_splits(3) },
+            UnionBranch { ops: Vec::new(), splits: fake_splits(1) },
+            4,
+            Vec::new(),
+            Action::Collect,
+        );
+        assert_eq!(plan.stages.len(), 3);
+        assert!(matches!(plan.stages[2].compute, StageCompute::DynCoGroup { .. }));
+        assert_eq!(plan.stages[2].parents, vec![0, 1]);
+        plan.validate().unwrap();
+        let text = plan.explain();
+        assert!(text.contains("DynCoGroup"), "{text}");
+        assert!(text.contains("<- s0, s1"), "{text}");
+    }
+
+    #[test]
+    fn dyn_plan_lowers_cogroup_lineage_through_join_plan() {
+        let left = Rdd::text_file("b", "l/").map(|v| v);
+        let right = Rdd::text_file("b", "r/");
+        let rdd = left.join(&right, 4);
+        let plan = build_dyn_plan(&rdd, Action::Collect, |_, prefix| {
+            fake_splits(if prefix == "l/" { 3 } else { 2 })
+        });
+        assert_eq!(plan.stages.len(), 3);
+        assert_eq!(plan.stages[0].num_tasks(), 3, "left branch splits resolved by prefix");
+        assert_eq!(plan.stages[1].num_tasks(), 2, "right branch splits resolved by prefix");
+        let StageCompute::DynCoGroup { post_ops } = &plan.stages[2].compute else {
+            panic!("join lowers to a cogroup stage: {:?}", plan.stages[2].compute)
+        };
+        assert_eq!(post_ops.len(), 1, "the join's cross-product flatMap");
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn weather_dim_ops_parse_and_drop_garbage() {
+        let ops = weather_dim_ops();
+        let mut out = Vec::new();
+        DynOp::apply_chain(&ops, Value::str("12,0.300"), &mut out);
+        DynOp::apply_chain(&ops, Value::str("not,a number"), &mut out);
+        DynOp::apply_chain(&ops, Value::str("garbage"), &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].key().as_i64(), Some(12));
+        assert_eq!(out[0].val().as_i64(), Some(precip_bucket(0.3) as i64));
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod rdd;
 pub mod task;
 
 pub use dag::{
-    build_union_plan, Action, PhysicalPlan, Stage, StageCompute, StageInput, StageOutput,
-    UnionBranch,
+    build_join_plan, build_kernel_join_plan, build_union_plan, Action, PhysicalPlan, Stage,
+    StageCompute, StageInput, StageOutput, UnionBranch,
 };
 pub use rdd::{DynOp, Rdd};
 pub use task::{InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
@@ -52,5 +52,25 @@ mod tests {
         assert!(matches!(p1.stages[1].input, StageInput::Shuffle { partitions: 30 }));
         assert_eq!(p1.stages[1].parents, vec![0]);
         p1.validate().unwrap();
+    }
+
+    #[test]
+    fn q6j_is_a_four_stage_join_diamond() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = crate::data::generate_taxi_dataset(&env, "trips", 2_000);
+        let plan = kernel_plan(QueryId::Q6J, &ds, env.config());
+        assert_eq!(plan.stages.len(), 4);
+        assert!(matches!(plan.stages[0].compute, StageCompute::KernelScan { .. }));
+        assert!(matches!(plan.stages[1].compute, StageCompute::DynScan { .. }));
+        assert!(matches!(plan.stages[2].compute, StageCompute::KernelJoin { .. }));
+        assert!(matches!(plan.stages[3].compute, StageCompute::KernelReduce { .. }));
+        assert_eq!(plan.stages[2].parents, vec![0, 1], "join consumes both scans");
+        assert_eq!(plan.stages[3].parents, vec![2]);
+        assert!(plan.weather.is_none(), "no broadcast side table: the join ships it");
+        assert!(plan.stages[1].num_tasks() >= 1, "weather branch has real splits");
+        plan.validate().unwrap();
+        let text = plan.explain();
+        assert!(text.contains("KernelJoin(Q6J)"), "{text}");
+        assert!(text.contains("<- s0, s1"), "{text}");
     }
 }

@@ -76,6 +76,11 @@ pub enum RddNode {
     Narrow { parent: Rdd, op: DynOp },
     /// Wide dependency: hash-partition pairs by key, combine values.
     ReduceByKey { parent: Rdd, partitions: usize, combine: CombineFn },
+    /// Two-sided wide dependency: hash-partition both sides' pairs on
+    /// the key; the reduce side groups each key's values *per origin
+    /// edge* (the per-parent-tagged shuffle), yielding
+    /// `(key, [left_values, right_values])`.
+    CoGroup { left: Rdd, right: Rdd, partitions: usize },
 }
 
 /// A handle to a lineage node (cheap to clone; lineage is immutable).
@@ -91,6 +96,9 @@ impl std::fmt::Debug for Rdd {
             RddNode::Narrow { parent, op } => write!(f, "{parent:?} -> {op:?}"),
             RddNode::ReduceByKey { parent, partitions, .. } => {
                 write!(f, "{parent:?} -> ReduceByKey({partitions})")
+            }
+            RddNode::CoGroup { left, right, partitions } => {
+                write!(f, "CoGroup({left:?}, {right:?}, {partitions})")
             }
         }
     }
@@ -147,6 +155,75 @@ impl Rdd {
         }
     }
 
+    /// `a.cogroup(b, numPartitions)` — both sides must emit pairs. Each
+    /// result record is `(key, [left_values, right_values])` where each
+    /// side's values arrive as a deterministically-sorted `Value::List`
+    /// (queue arrival order across producers is racy, so the executor
+    /// sorts within each side).
+    pub fn cogroup(&self, other: &Rdd, partitions: usize) -> Rdd {
+        assert!(partitions > 0, "cogroup needs at least one partition");
+        Rdd {
+            node: Arc::new(RddNode::CoGroup {
+                left: self.clone(),
+                right: other.clone(),
+                partitions,
+            }),
+        }
+    }
+
+    /// `a.join(b, numPartitions)` — inner equi-join on the pair key:
+    /// cogroup plus the per-key cross product, yielding
+    /// `(key, (left_value, right_value))` records.
+    pub fn join(&self, other: &Rdd, partitions: usize) -> Rdd {
+        self.cogroup(other, partitions).flat_map(|v| {
+            let key = v.key().clone();
+            let Value::List(sides) = v.val() else { return Vec::new() };
+            let (Some(Value::List(l)), Some(Value::List(r))) = (sides.first(), sides.get(1))
+            else {
+                return Vec::new();
+            };
+            let mut out = Vec::with_capacity(l.len() * r.len());
+            for lv in l {
+                for rv in r {
+                    out.push(Value::pair(key.clone(), Value::pair(lv.clone(), rv.clone())));
+                }
+            }
+            out
+        })
+    }
+
+    /// When the lineage is `left.cogroup(right, p)` followed only by
+    /// narrow ops, return `(left, right, partitions, post_ops)` — the
+    /// shape `plan::build_join_plan` lowers. Returns `None` for plain
+    /// linear lineages (no cogroup anywhere); panics on shapes the
+    /// planner does not support yet (a shuffle downstream of a cogroup).
+    pub fn cogroup_shape(&self) -> Option<(Rdd, Rdd, usize, Vec<DynOp>)> {
+        let mut post: Vec<DynOp> = Vec::new();
+        let mut node = self.clone();
+        loop {
+            let next = match &*node.node {
+                RddNode::TextFile { .. } => return None,
+                RddNode::Narrow { parent, op } => {
+                    post.push(op.clone());
+                    parent.clone()
+                }
+                RddNode::ReduceByKey { parent, .. } => {
+                    assert!(
+                        parent.cogroup_shape().is_none(),
+                        "a reduceByKey downstream of cogroup is not supported yet: \
+                         aggregate inside the cogroup's post ops or collect and fold"
+                    );
+                    return None;
+                }
+                RddNode::CoGroup { left, right, partitions } => {
+                    post.reverse();
+                    return Some((left.clone(), right.clone(), *partitions, post));
+                }
+            };
+            node = next;
+        }
+    }
+
     /// Walk the lineage root-ward, returning (source, segments) where
     /// each segment is the narrow op chain between wide deps, and a
     /// segment's `shuffle` is the wide dep *terminating* it (feeding the
@@ -173,6 +250,12 @@ impl Rdd {
                 RddNode::ReduceByKey { parent, partitions, combine } => {
                     events.push(Event::Shuffle(*partitions, combine.clone()));
                     node = parent.clone();
+                }
+                RddNode::CoGroup { .. } => {
+                    panic!(
+                        "cogroup lineages are planned via Rdd::cogroup_shape / \
+                         plan::build_join_plan, not linearize"
+                    )
                 }
             }
         }
@@ -261,6 +344,59 @@ mod tests {
         assert_eq!(lin.segments[0].shuffle.as_ref().unwrap().0, 4);
         assert_eq!(lin.segments[1].shuffle.as_ref().unwrap().0, 2);
         assert!(lin.segments[1].ops.is_empty());
+    }
+
+    #[test]
+    fn cogroup_shape_extracts_branches_and_post_ops() {
+        let left = Rdd::text_file("b", "l/").map(|v| v);
+        let right = Rdd::text_file("b", "r/");
+        let rdd = left.cogroup(&right, 4).map(|v| v).filter(|_| true);
+        let (l, r, parts, post) = rdd.cogroup_shape().expect("cogroup shape");
+        assert_eq!(parts, 4);
+        assert_eq!(post.len(), 2, "narrow ops after the cogroup, source-first");
+        assert!(matches!(post[0], DynOp::Map(_)));
+        assert!(matches!(post[1], DynOp::Filter(_)));
+        assert!(matches!(&*l.node, RddNode::Narrow { .. }));
+        assert!(matches!(&*r.node, RddNode::TextFile { .. }));
+        // Plain lineages have no cogroup shape.
+        assert!(Rdd::text_file("b", "p").map(|v| v).cogroup_shape().is_none());
+    }
+
+    #[test]
+    fn join_post_op_expands_cross_product() {
+        // join = cogroup + flatMap; feed the flatMap a synthetic cogroup
+        // record and check the inner-join expansion.
+        let joined = Rdd::text_file("b", "l/").join(&Rdd::text_file("b", "r/"), 2);
+        let (_, _, _, post) = joined.cogroup_shape().expect("join is a cogroup shape");
+        assert_eq!(post.len(), 1);
+        let record = Value::pair(
+            Value::I64(7),
+            Value::List(vec![
+                Value::List(vec![Value::I64(1), Value::I64(2)]),
+                Value::List(vec![Value::str("a")]),
+            ]),
+        );
+        let mut out = Vec::new();
+        DynOp::apply_chain(&post, record, &mut out);
+        assert_eq!(out.len(), 2, "2 left x 1 right");
+        assert_eq!(out[0], Value::pair(Value::I64(7), Value::pair(Value::I64(1), Value::str("a"))));
+        // An empty side joins to nothing (inner join).
+        let empty = Value::pair(
+            Value::I64(8),
+            Value::List(vec![Value::List(vec![Value::I64(1)]), Value::List(Vec::new())]),
+        );
+        let mut none = Vec::new();
+        DynOp::apply_chain(&post, empty, &mut none);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "not supported yet")]
+    fn reduce_by_key_after_cogroup_panics() {
+        let rdd = Rdd::text_file("b", "l/")
+            .cogroup(&Rdd::text_file("b", "r/"), 2)
+            .reduce_by_key(2, |a, _| a);
+        let _ = rdd.cogroup_shape();
     }
 
     #[test]

@@ -211,6 +211,29 @@ mod tests {
     }
 
     #[test]
+    fn producer_ids_collision_free_across_stages() {
+        // The multi-parent reduce paths thread ONE dedup set through all
+        // parent edges on the claim that producer ids embed the producing
+        // stage. Pin it: stage id occupies the high 32 bits and task
+        // index the low 32, so no (stage, task) pair aliases another —
+        // cross-parent (producer, seq) spaces are disjoint.
+        let mut ids = std::collections::HashSet::new();
+        for stage in 0..8u32 {
+            for task in 0..64u32 {
+                let mut t = sample_task();
+                t.stage_id = stage;
+                t.task_index = task;
+                assert!(
+                    ids.insert(t.producer_id()),
+                    "producer id collision at stage {stage} task {task}"
+                );
+                assert_eq!(t.producer_id() >> 32, stage as u64);
+                assert_eq!(t.producer_id() & 0xffff_ffff, task as u64);
+            }
+        }
+    }
+
+    #[test]
     fn payload_includes_code_and_partial() {
         let mut t = sample_task();
         t.code_bytes = 1000;

@@ -82,6 +82,17 @@ mod pjrt_impl {
             self.manifest.batch_rows
         }
 
+        /// Whether the manifest carries a matching artifact for `spec`.
+        /// Extension queries (e.g. Q6J's day-keyed scan) may not be
+        /// AOT-lowered; callers fall back to the native kernel.
+        pub fn supports(&self, spec: &KernelSpec) -> bool {
+            self.manifest
+                .queries
+                .get(&spec.artifact_stem())
+                .map(|a| a.buckets == spec.buckets)
+                .unwrap_or(false)
+        }
+
         fn executable(&self, stem: &str) -> Result<Arc<SharedExec>> {
             if let Some(e) = self.execs.read().expect("exec cache").get(stem) {
                 return Ok(Arc::clone(e));
@@ -219,6 +230,11 @@ mod stub {
 
         pub fn batch_rows(&self) -> usize {
             self.manifest.batch_rows
+        }
+
+        /// Always false: the stub cannot execute any artifact.
+        pub fn supports(&self, _spec: &KernelSpec) -> bool {
+            false
         }
 
         pub fn warmup(&self) -> Result<()> {

@@ -1,0 +1,303 @@
+//! True joins/cogroup over the per-parent-tagged shuffle. Q6J (trips ⋈
+//! weather on the day key) must produce exactly the broadcast-Q6
+//! oracle's answer on every shuffle backend (sqs/s3/memory), under both
+//! schedulers, with SQS duplicate injection enabled, and across forced
+//! reducer crashes/retries — §VI exactly-once, now across *tagged*
+//! parent streams. The generic `Rdd::cogroup`/`Rdd::join` API lowers to
+//! the same plan shape and is held to the same oracle.
+
+use flint::compute::oracle;
+use flint::compute::queries::{QueryId, QueryResult};
+use flint::compute::value::Value;
+use flint::config::{FlintConfig, ShuffleBackend};
+use flint::data::chrono::day_index;
+use flint::data::schema::TripRecord;
+use flint::data::weather::precip_bucket;
+use flint::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
+use flint::exec::driver::{run_plan, RunParams};
+use flint::exec::executor::IoMode;
+use flint::exec::flint::run_rdd_collect;
+use flint::exec::shuffle::{MemoryShuffle, Transport};
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::plan::{build_union_plan, dag, Action, DynOp, Rdd, UnionBranch};
+use flint::services::SimEnv;
+use flint::simtime::ScheduleMode;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+const TRIPS: u64 = 25_000;
+
+fn cfg() -> FlintConfig {
+    let mut c = FlintConfig::for_tests();
+    c.data.object_bytes = 512 * 1024;
+    c.flint.input_split_bytes = 256 * 1024;
+    c.flint.use_pjrt = false;
+    c
+}
+
+fn setup(c: FlintConfig) -> (SimEnv, Dataset) {
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", TRIPS);
+    (env, ds)
+}
+
+#[test]
+fn q6j_matches_oracle_on_sqs_and_s3_under_both_schedulers_with_duplicates() {
+    for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
+        for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+            let mut c = cfg();
+            c.flint.shuffle_backend = backend;
+            c.flint.scheduler = sched;
+            c.sim.sqs_duplicate_prob = 0.2; // at-least-once, aggressively
+            let (env, ds) = setup(c);
+            let flint = FlintEngine::new(env.clone());
+            flint.prewarm();
+            let expect = oracle::evaluate(&env, &ds, QueryId::Q6J);
+            let report = flint.run_query(QueryId::Q6J, &ds).unwrap();
+            assert!(
+                report.result.approx_eq(&expect),
+                "{backend:?}/{sched:?}: {:?} vs {expect:?}",
+                report.result
+            );
+            // The join answer IS the broadcast answer.
+            let q6 = oracle::evaluate(&env, &ds, QueryId::Q6);
+            assert!(report.result.approx_eq(&q6), "join must equal broadcast Q6");
+            assert_eq!(report.stage_latencies.len(), 4, "scan+scan -> join -> reduce");
+            if backend == ShuffleBackend::Sqs {
+                assert!(report.duplicates_dropped > 0, "dedup must have fired");
+                // The DAG fanned in and chained: three shuffle edges.
+                let edges: Vec<(u32, u32)> =
+                    report.edge_shuffle.iter().map(|e| (e.from, e.to)).collect();
+                assert_eq!(edges, vec![(0, 2), (1, 2), (2, 3)], "{:?}", report.edge_shuffle);
+                assert!(report.edge_shuffle.iter().all(|e| e.msgs > 0));
+                // Pipelined never schedules worse than barrier, even on
+                // the join's multi-root diamond (serial-fallback guard).
+                assert!(
+                    report.pipelined_latency_s <= report.barrier_latency_s + 1e-9,
+                    "pipelined {:.4}s vs barrier {:.4}s",
+                    report.pipelined_latency_s,
+                    report.barrier_latency_s
+                );
+                assert_eq!(env.sqs().queue_names().len(), 0, "queues refcount-deleted");
+            }
+        }
+    }
+}
+
+#[test]
+fn q6j_matches_oracle_on_the_memory_backend() {
+    // Cluster engines run the same join plan over the in-process shuffle.
+    let (env, ds) = setup(cfg());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q6J);
+    for mode in [ClusterMode::Spark, ClusterMode::PySpark] {
+        let engine = ClusterEngine::new(env.clone(), mode);
+        let report = engine.run_query(QueryId::Q6J, &ds).unwrap();
+        assert!(
+            report.result.approx_eq(&expect),
+            "{mode:?}: {:?} vs {expect:?}",
+            report.result
+        );
+    }
+    // And directly under the pipelined clock (the cluster engine pins
+    // barrier; the scheduler itself must handle memory + overlap).
+    let plan = flint::plan::kernel_plan(QueryId::Q6J, &ds, env.config());
+    let params = RunParams {
+        mode: IoMode::Spark,
+        transport: Transport::Memory(MemoryShuffle::new()),
+        slots: 16,
+        lambda: false,
+        host_parallelism: 4,
+        schedule: ScheduleMode::Pipelined,
+    };
+    let out = run_plan(&env, None, &plan, &params).unwrap();
+    let result = out.out.to_query_result().unwrap();
+    assert!(result.approx_eq(&expect), "memory+pipelined: {result:?}");
+    assert!(out.pipelined_latency_s <= out.barrier_latency_s + 1e-9);
+}
+
+#[test]
+fn q6j_survives_forced_join_and_reduce_crashes_on_sqs() {
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.15;
+    let (env, ds) = setup(c);
+    // Crash one join task and one final-reduce task on their first
+    // attempts: both must nack their in-flight messages and the retries
+    // must rebuild identical per-edge state.
+    env.failure().force_task_failure(2, 0, 0);
+    env.failure().force_task_failure(3, 0, 0);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q6J);
+    let report = flint.run_query(QueryId::Q6J, &ds).unwrap();
+    assert_eq!(report.retries, 2, "both forced crashes fired");
+    assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+    assert!(env.metrics().get("sqs.nacked") > 0, "visibility-timeout path exercised");
+}
+
+#[test]
+fn q6j_survives_forced_crashes_on_s3_and_memory_backends() {
+    // S3: objects persist until the scheduler tears the prefix down, so
+    // a crashed join task's retry simply re-lists them.
+    let mut c = cfg();
+    c.flint.shuffle_backend = ShuffleBackend::S3;
+    let (env, ds) = setup(c);
+    env.failure().force_task_failure(2, 1, 0);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q6J);
+    let report = flint.run_query(QueryId::Q6J, &ds).unwrap();
+    assert_eq!(report.retries, 1);
+    assert!(report.result.approx_eq(&expect));
+
+    // Memory: the backend's new visibility semantics redeliver the
+    // drained partition to the retry (it used to be silently lost).
+    let (env2, ds2) = setup(cfg());
+    env2.failure().force_task_failure(2, 1, 0);
+    let plan = flint::plan::kernel_plan(QueryId::Q6J, &ds2, env2.config());
+    let params = RunParams {
+        mode: IoMode::Spark,
+        transport: Transport::Memory(MemoryShuffle::new()),
+        slots: 16,
+        lambda: false,
+        host_parallelism: 4,
+        schedule: ScheduleMode::Barrier,
+    };
+    let out = run_plan(&env2, None, &plan, &params).unwrap();
+    assert_eq!(out.retries, 1);
+    let expect2 = oracle::evaluate(&env2, &ds2, QueryId::Q6J);
+    let result = out.out.to_query_result().unwrap();
+    assert!(result.approx_eq(&expect2), "memory crash/retry: {result:?} vs {expect2:?}");
+}
+
+/// Trips as `(day, 1)` pairs for the generic join.
+fn trips_day_rdd() -> Rdd {
+    Rdd::text_file(INPUT_BUCKET, "trips/").flat_map(|v| {
+        let Some(line) = v.as_str() else { return Vec::new() };
+        match TripRecord::parse_csv(line.as_bytes()) {
+            Some(r) => vec![Value::pair(
+                Value::I64(day_index(r.dropoff_ts) as i64),
+                Value::I64(1),
+            )],
+            None => Vec::new(),
+        }
+    })
+}
+
+/// The weather CSV as `(day, precip_bucket)` pairs.
+fn weather_bucket_rdd() -> Rdd {
+    Rdd::text_file(INPUT_BUCKET, "weather/").flat_map(|v| {
+        let Some(line) = v.as_str() else { return Vec::new() };
+        let Some((d, p)) = line.split_once(',') else { return Vec::new() };
+        let (Ok(d), Ok(p)) = (d.trim().parse::<i64>(), p.trim().parse::<f32>()) else {
+            return Vec::new();
+        };
+        vec![Value::pair(Value::I64(d), Value::I64(precip_bucket(p) as i64))]
+    })
+}
+
+#[test]
+fn generic_rdd_join_matches_q6j_oracle_under_duplicates_and_crash() {
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.2;
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", 6_000);
+    // Crash the cogroup stage's first task once.
+    env.failure().force_task_failure(2, 0, 0);
+    let flint = FlintEngine::new(env.clone());
+    // trips ⋈ weather on day: each joined record is
+    // (day, (1, bucket)); bucket counts must equal the Q6J oracle's.
+    let joined = trips_day_rdd().join(&weather_bucket_rdd(), 8);
+    let values = run_rdd_collect(&flint, &joined, &ds).unwrap();
+    let mut counts: BTreeMap<i64, i64> = BTreeMap::new();
+    for v in &values {
+        let bucket = v.val().val().as_i64().expect("joined (left, right) pair");
+        *counts.entry(bucket).or_insert(0) += 1;
+    }
+    let QueryResult::Buckets(rows) = oracle::evaluate(&env, &ds, QueryId::Q6J) else {
+        panic!("bucketed oracle")
+    };
+    let expect: BTreeMap<i64, i64> = rows.iter().map(|(k, _, c)| (*k, *c as i64)).collect();
+    assert_eq!(counts, expect, "generic join counts match the kernel join oracle");
+    assert_eq!(env.sqs().queue_names().len(), 0, "join queues refcount-deleted");
+}
+
+#[test]
+fn cogroup_keeps_sides_apart() {
+    // The regression the union-only reduce could not catch: with two
+    // heterogeneous parents, each key's values must stay grouped by
+    // origin edge instead of merging into one stream.
+    let env = SimEnv::new(cfg());
+    let _left = generate_taxi_dataset(&env, "lefts", 2_000);
+    let right = generate_taxi_dataset(&env, "rights", 1_000);
+    let left_rdd = Rdd::text_file(INPUT_BUCKET, "lefts/").map(|v| {
+        let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+        Value::pair(Value::I64(len % 5), Value::str("L"))
+    });
+    let right_rdd = Rdd::text_file(INPUT_BUCKET, "rights/").map(|v| {
+        let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+        Value::pair(Value::I64(len % 5), Value::I64(1))
+    });
+    let flint = FlintEngine::new(env.clone());
+    let grouped = run_rdd_collect(&flint, &left_rdd.cogroup(&right_rdd, 4), &right).unwrap();
+    let (mut left_total, mut right_total) = (0usize, 0usize);
+    for v in &grouped {
+        let Value::List(sides) = v.val() else { panic!("cogroup value: {v:?}") };
+        assert_eq!(sides.len(), 2, "one list per parent edge");
+        let (Value::List(l), Value::List(r)) = (&sides[0], &sides[1]) else {
+            panic!("per-side lists: {sides:?}")
+        };
+        assert!(l.iter().all(|x| x.as_str() == Some("L")), "left side pure: {l:?}");
+        assert!(r.iter().all(|x| x.as_i64() == Some(1)), "right side pure: {r:?}");
+        left_total += l.len();
+        right_total += r.len();
+    }
+    assert_eq!(left_total, 2_000, "every left row grouped exactly once");
+    assert_eq!(right_total, 1_000, "every right row grouped exactly once");
+}
+
+fn length_key_ops() -> Vec<DynOp> {
+    vec![DynOp::Map(Arc::new(|v: Value| {
+        let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+        Value::pair(Value::I64(len % 7), Value::I64(1))
+    }))]
+}
+
+#[test]
+fn union_cross_parent_dedup_does_not_alias_under_duplicates() {
+    // Satellite: one dedup set is threaded through every parent edge on
+    // the claim that (producer, seq) spaces never collide across stages.
+    // Under aggressive duplicate injection a cross-stage alias would
+    // either drop a legitimate first delivery or leak a duplicate; the
+    // union total stays exact iff the spaces are disjoint.
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.3;
+    let env = SimEnv::new(c.clone());
+    let ds_a = generate_taxi_dataset(&env, "tripsa", 9_000);
+    let ds_b = generate_taxi_dataset(&env, "tripsb", 7_000);
+    let combine: flint::plan::rdd::CombineFn =
+        Arc::new(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
+    let split_bytes = c.flint.input_split_bytes;
+    let plan = build_union_plan(
+        vec![
+            UnionBranch { ops: length_key_ops(), splits: dag::input_splits(&ds_a, split_bytes) },
+            UnionBranch { ops: length_key_ops(), splits: dag::input_splits(&ds_b, split_bytes) },
+        ],
+        4,
+        combine,
+        Vec::new(),
+        Action::Collect,
+    );
+    let params = RunParams {
+        mode: IoMode::Flint,
+        transport: Transport::Sqs,
+        slots: env.config().sim.max_concurrency,
+        lambda: true,
+        host_parallelism: 4,
+        schedule: ScheduleMode::Pipelined,
+    };
+    let out = run_plan(&env, None, &plan, &params).unwrap();
+    assert!(out.duplicates_dropped > 0, "duplicates were injected and dropped");
+    let flint::exec::ActionOut::Values(values) = &out.out else {
+        panic!("collect produced {:?}", out.out)
+    };
+    let total: i64 = values.iter().map(|v| v.val().as_i64().unwrap()).sum();
+    assert_eq!(total, 9_000 + 7_000, "exactly-once across tagged parent streams");
+}
