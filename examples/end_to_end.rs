@@ -16,8 +16,8 @@ use flint::bench::paper::{estimate, PaperEngine};
 use flint::compute::oracle;
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
-use flint::data::generate_taxi_dataset;
-use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintContext, FlintEngine};
 use flint::services::SimEnv;
 use flint::util::human_bytes;
 
@@ -102,6 +102,16 @@ fn main() {
             f.0, f.1, p.0, p.1, s.0, s.1, PAPER[i].0, PAPER[i].1, PAPER[i].2
         );
     }
+
+    // The session-style generic API runs the same substrate: a trivial
+    // lineage's count must agree with Q0's typed kernel count.
+    let sc = FlintContext::new(env.clone());
+    let generic_count = sc
+        .text_file(INPUT_BUCKET, "trips/")
+        .count()
+        .expect("session count");
+    assert_eq!(generic_count, trips, "FlintContext count == generated trips");
+    println!("\nsession-API cross-check: sc.text_file(...).count() == {generic_count}  [verified]");
 
     println!("\nheadline checks:");
     let q0 = &measured[0];

@@ -17,9 +17,7 @@ use flint::compute::value::Value;
 use flint::config::FlintConfig;
 use flint::data::schema::TripRecord;
 use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
-use flint::exec::flint::run_rdd_collect;
-use flint::exec::FlintEngine;
-use flint::plan::Rdd;
+use flint::exec::FlintContext;
 use flint::services::SimEnv;
 
 const K: usize = 4;
@@ -32,9 +30,9 @@ fn main() {
     cfg.flint.input_split_bytes = 4 * 1024 * 1024;
     let env = SimEnv::new(cfg);
     println!("generating 200k trips...");
-    let dataset = generate_taxi_dataset(&env, "trips", 200_000);
-    let engine = FlintEngine::new(env.clone());
-    engine.prewarm();
+    generate_taxi_dataset(&env, "trips", 200_000);
+    let sc = FlintContext::new(env.clone());
+    sc.prewarm();
 
     // Initial centroids: spread across Manhattan-ish coordinates.
     let mut centroids: Vec<(f64, f64)> = vec![
@@ -47,7 +45,8 @@ fn main() {
 
     for iter in 0..ITERATIONS {
         let cents = centroids.clone();
-        let assign = Rdd::text_file(INPUT_BUCKET, "trips/")
+        let assign = sc
+            .text_file(INPUT_BUCKET, "trips/")
             .map(move |line| {
                 let Some(text) = line.as_str() else { return Value::Null };
                 let Some(r) = TripRecord::parse_csv(text.as_bytes()) else {
@@ -81,7 +80,7 @@ fn main() {
             });
 
         let before = env.cost().snapshot();
-        let sums = run_rdd_collect(&engine, &assign, &dataset).expect("iteration");
+        let sums = assign.collect().expect("iteration");
         let cost = env.cost().snapshot().since(&before).total();
 
         let mut shift = 0.0f64;

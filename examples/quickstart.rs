@@ -1,5 +1,6 @@
 //! Quickstart: the paper's Q1 driver program, written against Flint's
-//! generic PySpark-like RDD API, running on the serverless engine.
+//! session-style generic API — a `FlintContext` plays the part of
+//! PySpark's `SparkContext`, running on the serverless engine.
 //!
 //! This is the Rust analogue of the paper's §IV snippet:
 //!
@@ -17,9 +18,7 @@ use flint::compute::value::Value;
 use flint::config::FlintConfig;
 use flint::data::schema::{TripRecord, GOLDMAN};
 use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
-use flint::exec::flint::run_rdd_collect;
-use flint::exec::FlintEngine;
-use flint::plan::Rdd;
+use flint::exec::FlintContext;
 use flint::services::SimEnv;
 
 fn main() {
@@ -30,10 +29,17 @@ fn main() {
     cfg.flint.input_split_bytes = 4 * 1024 * 1024;
     let env = SimEnv::new(cfg);
     println!("generating 200k synthetic taxi trips into simulated S3...");
-    let dataset = generate_taxi_dataset(&env, "trips", 200_000);
+    generate_taxi_dataset(&env, "trips", 200_000);
 
-    // The driver program — arbitrary user closures, exactly like PySpark.
-    let src = Rdd::text_file(INPUT_BUCKET, "trips/");
+    // The session: `sc` is the SparkContext analogue. Sources come from
+    // the context, so the Rdds it hands out are bound to it — actions
+    // need no engine parameter.
+    let sc = FlintContext::new(env.clone());
+    sc.prewarm();
+
+    // The driver program — arbitrary user closures, exactly like
+    // PySpark. Everything below is *lazy*: it only grows a lineage.
+    let src = sc.text_file(INPUT_BUCKET, "trips/");
     let hourly = src
         .map(|line| {
             // x.split(',') — parse the CSV record.
@@ -59,12 +65,15 @@ fn main() {
         })
         .reduce_by_key(30, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
 
-    // Execute serverlessly: tasks in simulated Lambdas, shuffle via SQS.
-    let engine = FlintEngine::new(env.clone());
-    engine.prewarm();
-    let result = run_rdd_collect(&engine, &hourly, &dataset).expect("query");
+    // `explain()` shows what the general lineage→DAG compiler
+    // (`plan::lower`) made of the lineage: stages cut at the shuffle.
+    println!("\ncompiled stage DAG:\n{}", hourly.explain());
 
-    println!("\nGoldman Sachs drop-offs by hour:");
+    // The action triggers lower + the DAG driver: tasks in simulated
+    // Lambdas, shuffle via SQS — pure pay-as-you-go.
+    let result = hourly.collect().expect("query");
+
+    println!("Goldman Sachs drop-offs by hour:");
     let mut rows: Vec<(i64, i64)> = result
         .iter()
         .map(|v| (v.key().as_i64().unwrap(), v.val().as_i64().unwrap()))

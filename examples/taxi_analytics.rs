@@ -6,9 +6,11 @@
 //! Run: `cargo run --release --example taxi_analytics`
 
 use flint::compute::queries::{QueryId, QueryResult};
+use flint::compute::value::Value;
 use flint::config::FlintConfig;
-use flint::data::generate_taxi_dataset;
-use flint::exec::{Engine, FlintEngine};
+use flint::data::schema::TripRecord;
+use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
+use flint::exec::{Engine, FlintContext, FlintEngine};
 use flint::services::SimEnv;
 
 fn main() {
@@ -74,5 +76,32 @@ fn main() {
         }
         println!();
     }
-    println!("cumulative simulated cost: ${:.4}", env.cost().total());
+
+    // Ad-hoc exploration beyond the published queries goes through the
+    // session API: any lineage, same serverless substrate. Here, the
+    // passenger-count distribution (no kernel exists for it).
+    let sc = FlintContext::new(env.clone());
+    let by_passengers = sc
+        .text_file(INPUT_BUCKET, "trips/")
+        .flat_map(|line| {
+            let Some(text) = line.as_str() else { return Vec::new() };
+            match TripRecord::parse_csv(text.as_bytes()) {
+                Some(r) => vec![Value::pair(
+                    Value::I64(r.passenger_count as i64),
+                    Value::I64(1),
+                )],
+                None => Vec::new(),
+            }
+        })
+        .reduce_by_key(8, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
+    println!("=== ad-hoc (session API) — trips by passenger count");
+    for pair in by_passengers.collect().expect("ad-hoc query") {
+        println!(
+            "    {} passenger(s): {}",
+            pair.key().as_i64().unwrap(),
+            pair.val().as_i64().unwrap()
+        );
+    }
+
+    println!("\ncumulative simulated cost: ${:.4}", env.cost().total());
 }

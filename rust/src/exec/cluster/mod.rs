@@ -14,12 +14,12 @@
 
 use crate::compute::queries::QueryId;
 use crate::data::Dataset;
-use crate::exec::driver::{run_plan, RunParams};
+use crate::exec::driver::{run_plan, RunOutput, RunParams};
 use crate::exec::executor::IoMode;
 use crate::exec::flint::{host_parallelism, report};
 use crate::exec::shuffle::{MemoryShuffle, Transport};
 use crate::exec::{Engine, QueryReport};
-use crate::plan::{kernel_plan, Action, Rdd};
+use crate::plan::{kernel_plan, PhysicalPlan};
 use crate::services::SimEnv;
 use anyhow::{Context, Result};
 
@@ -72,9 +72,11 @@ impl ClusterEngine {
         }
     }
 
-    fn run(&self, plan: &crate::plan::PhysicalPlan) -> Result<QueryReport> {
+    /// Execute an arbitrary physical plan, returning the raw driver
+    /// output and charging cluster time — the session layer runs the
+    /// same generic lineages here for cross-checking against Flint.
+    pub fn run_plan_raw(&self, plan: &PhysicalPlan) -> Result<RunOutput> {
         self.env.s3().create_bucket(crate::data::OUTPUT_BUCKET);
-        let before = self.env.cost().snapshot();
         // The cluster executes the same physical plan; Spark's kernels are
         // the native Rust path (no PJRT — that's Flint's build pipeline).
         let out = run_plan(&self.env, None, plan, &self.params())
@@ -85,23 +87,15 @@ impl ClusterEngine {
         self.env
             .cost()
             .charge(crate::cost::CostCategory::ClusterTime, usd);
-        let cost = self.env.cost().snapshot().since(&before);
-        Ok(report(self.mode.name(), plan.query, out, cost))
+        Ok(out)
     }
 
-    /// Generic RDD execution on the cluster.
-    pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
-        let cfg = self.env.config();
-        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |bucket, prefix| {
-            crate::exec::flint::rdd_splits(
-                &self.env,
-                dataset,
-                bucket,
-                prefix,
-                cfg.flint.input_split_bytes,
-            )
-        });
-        self.run(&plan)
+    /// Execute an arbitrary physical plan and summarize it as a report.
+    pub fn run_plan(&self, plan: &PhysicalPlan) -> Result<QueryReport> {
+        let before = self.env.cost().snapshot();
+        let out = self.run_plan_raw(plan)?;
+        let cost = self.env.cost().snapshot().since(&before);
+        Ok(report(self.mode.name(), plan.query, out, cost))
     }
 }
 
@@ -115,6 +109,6 @@ impl Engine for ClusterEngine {
 
     fn run_query(&self, query: QueryId, dataset: &Dataset) -> Result<QueryReport> {
         let plan = kernel_plan(query, dataset, self.env.config());
-        self.run(&plan)
+        self.run_plan(&plan)
     }
 }

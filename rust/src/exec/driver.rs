@@ -2,8 +2,10 @@
 //! (`SchedulerBackend` in the paper's terms), rebuilt around the stage
 //! **DAG**: it walks the plan in dependency (topological) order,
 //! launches each stage's tasks onto real worker threads, manages shuffle
-//! queue lifecycle with per-edge refcounts (a producer's queues survive
-//! exactly until the last consumer stage has drained them), handles
+//! queue lifecycle per DAG edge (a producer materializes one queue set
+//! per consuming stage — so fan-out stages feed each consumer its own
+//! copy — and an edge's queues are deleted the moment its consumer
+//! completes), handles
 //! retries and executor chaining, and hands every task's measured
 //! virtual duration to the event-driven global clock
 //! (`simtime::schedule`) which decides how much of the execution
@@ -24,7 +26,6 @@
 //! is computed from the measured per-task durations. Both latencies are
 //! reported on every run, so ablations never need a second execution.
 
-use crate::compute::queries::QueryResult;
 use crate::compute::value::Value;
 use crate::exec::executor::{run_task, Emitted, ExecCtx, IoMode, TaskOutcome};
 use crate::exec::shuffle::{queue_name, Transport};
@@ -32,6 +33,8 @@ use crate::plan::{
     PhysicalPlan, ResumeState, Stage, StageInput, StageOutput, TaskDescriptor, TaskInput,
     TaskOutput,
 };
+
+pub use crate::plan::ActionOut;
 use crate::runtime::PjrtRuntime;
 use crate::services::SimEnv;
 use crate::simtime::{
@@ -56,30 +59,6 @@ pub struct RunParams {
     /// serial Σ-makespan model, `Pipelined` overlaps reduce long-polling
     /// with map flushes (§III-A).
     pub schedule: ScheduleMode,
-}
-
-/// Merged result of a plan's final stage.
-#[derive(Debug, Clone)]
-pub enum ActionOut {
-    Count(u64),
-    KernelRows(Vec<(i64, f64, f64)>),
-    Values(Vec<Value>),
-    Saved(u64),
-}
-
-impl ActionOut {
-    /// Convert to the benchmark-comparable form (kernel queries only).
-    pub fn to_query_result(&self) -> Option<QueryResult> {
-        match self {
-            ActionOut::Count(n) => Some(QueryResult::Count(*n)),
-            ActionOut::KernelRows(rows) => {
-                let mut rows = rows.clone();
-                rows.sort_by_key(|(k, _, _)| *k);
-                Some(QueryResult::Buckets(rows))
-            }
-            _ => None,
-        }
-    }
 }
 
 /// Shuffle volume over one DAG edge (producer stage → consumer stage).
@@ -163,15 +142,6 @@ pub fn run_plan(
         },
     };
 
-    // Per-edge queue refcounts: a producer's queues are torn down when
-    // its last consumer stage completes (§III-A: "queue management is
-    // performed by the scheduler").
-    let mut consumers_left: Vec<usize> = plan
-        .stages
-        .iter()
-        .map(|s| plan.children(s.id).len())
-        .collect();
-
     let mut specs: Vec<StageSpec> = Vec::with_capacity(plan.stages.len());
     let mut stage_latencies = Vec::new();
     let mut merged_tl = Timeline::new();
@@ -201,12 +171,19 @@ pub fn run_plan(
     // threads must respect dependencies even when the virtual clock
     // overlaps the stages.
     for stage in &plan.stages {
-        // Create this stage's output queues before launching it.
+        // Create this stage's output queues before launching it: one
+        // queue set per consuming edge (§III-A: "queue management is
+        // performed by the scheduler"). A shuffle stage nothing consumes
+        // (degenerate plans) has no edges and so no queues — its writer
+        // drops the stream.
         if let (StageOutput::Shuffle { partitions, .. }, Transport::Sqs) =
             (&stage.output, &params.transport)
         {
-            for p in 0..*partitions {
-                env.sqs().create_queue(&queue_name(&plan.plan_id, stage.id, p as u32));
+            for to in plan.children(stage.id) {
+                for p in 0..*partitions {
+                    env.sqs()
+                        .create_queue(&queue_name(&plan.plan_id, stage.id, to, p as u32));
+                }
             }
         }
 
@@ -250,21 +227,13 @@ pub fn run_plan(
             overhead_s: overhead,
         });
 
-        // Refcounted per-edge teardown: each parent loses one consumer;
-        // at zero its queues are deleted.
+        // Per-edge teardown: queues belong to exactly one (parent →
+        // this stage) edge, so they die the moment this stage — their
+        // only consumer — completes. A fan-out parent's other edges are
+        // untouched (their consumers haven't run yet).
         if let Transport::Sqs = &params.transport {
             for &p in &stage.parents {
-                consumers_left[p as usize] -= 1;
-                if consumers_left[p as usize] == 0 {
-                    delete_stage_queues(env, plan, p);
-                }
-            }
-            // A shuffle stage nothing consumes (degenerate plans) tears
-            // down right away rather than leaking queues.
-            if matches!(stage.output, StageOutput::Shuffle { .. })
-                && consumers_left[stage.id as usize] == 0
-            {
-                delete_stage_queues(env, plan, stage.id);
+                delete_edge_queues(env, plan, p, stage.id);
             }
         }
     }
@@ -295,12 +264,12 @@ pub fn run_plan(
     Ok(totals)
 }
 
-fn delete_stage_queues(env: &SimEnv, plan: &PhysicalPlan, stage_id: u32) {
-    if let StageOutput::Shuffle { partitions, .. } = &plan.stage(stage_id).output {
+fn delete_edge_queues(env: &SimEnv, plan: &PhysicalPlan, from: u32, to: u32) {
+    if let StageOutput::Shuffle { partitions, .. } = &plan.stage(from).output {
         for p in 0..*partitions {
             let _ = env
                 .sqs()
-                .delete_queue(&queue_name(&plan.plan_id, stage_id, p as u32));
+                .delete_queue(&queue_name(&plan.plan_id, from, to, p as u32));
         }
     }
 }

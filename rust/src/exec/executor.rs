@@ -214,6 +214,7 @@ fn kernel_scan(
             ctx.transport.clone(),
             &ctx.plan.plan_id,
             task.stage_id,
+            ctx.plan.children(task.stage_id),
             task.producer_id(),
             *parts,
             task.resume.as_ref().map(|r| r.next_seqs.clone()),
@@ -353,7 +354,8 @@ fn kernel_scan(
     // remaining duration budget, chain once more and flush from a fresh
     // invocation (the flush itself has no intermediate chain points).
     if writer.is_some() {
-        let flush_est = estimate_flush_s(ctx, &accum, stage_output_partitions(ctx, task).unwrap());
+        let flush_est =
+            estimate_flush_s(ctx, task, &accum, stage_output_partitions(ctx, task).unwrap());
         let mut projected = resp.timeline.clone();
         projected.charge(Component::SqsSend, flush_est);
         if ctx.should_chain(&projected) {
@@ -373,14 +375,21 @@ fn kernel_scan(
 }
 
 /// Rough cost of flushing a kernel histogram to the shuffle: one send
-/// per distinct destination partition (records are tiny).
-fn estimate_flush_s(ctx: &ExecCtx, accum: &HistAccum, partitions: u32) -> f64 {
+/// per distinct destination partition and consuming edge (records are
+/// tiny).
+fn estimate_flush_s(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    accum: &HistAccum,
+    partitions: u32,
+) -> f64 {
     let distinct: std::collections::HashSet<u32> = accum
         .to_rows()
         .iter()
         .map(|(k, _, _)| kernel_partition(*k, partitions))
         .collect();
-    distinct.len() as f64 * ctx.env.config().sim.sqs_rtt_s * 1.5
+    let edges = ctx.plan.children(task.stage_id).len().max(1);
+    (distinct.len() * edges) as f64 * ctx.env.config().sim.sqs_rtt_s * 1.5
 }
 
 fn kernel_emit(
@@ -491,9 +500,11 @@ struct TaggedRecords {
 }
 
 /// One reader per parent edge: a multi-parent reduce drains its
-/// partition's queue of every producing stage.
+/// partition's queue of every producing stage, over its own
+/// (parent → this stage) edge.
 fn open_parent_readers<'a>(
     ctx: &'a ExecCtx,
+    task: &TaskDescriptor,
     parents: &[u32],
     partition: u32,
     dedup: bool,
@@ -506,6 +517,7 @@ fn open_parent_readers<'a>(
                 ctx.transport.clone(),
                 &ctx.plan.plan_id,
                 p,
+                task.stage_id,
                 partition,
                 dedup,
             )
@@ -572,7 +584,7 @@ fn kernel_reduce(
         decode_reduce_state(&r.partial, &mut agg, &mut seen)?;
     }
 
-    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let mut readers = open_parent_readers(ctx, task, parents, *partition, dedup);
     // KernelReduce has *union* semantics: the per-edge tags are folded
     // back into one stream (a cogroup/join stage keeps them apart).
     let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
@@ -701,7 +713,7 @@ fn kernel_join(
         decode_join_state(&r.partial, &mut facts, &mut dim, &mut seen)?;
     }
 
-    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let mut readers = open_parent_readers(ctx, task, parents, *partition, dedup);
     let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
 
     // Injected crash point: after drain, before ack — the retry must see
@@ -812,6 +824,7 @@ fn kernel_join(
                 ctx.transport.clone(),
                 &ctx.plan.plan_id,
                 task.stage_id,
+                ctx.plan.children(task.stage_id),
                 task.producer_id(),
                 *partitions,
                 None,
@@ -957,6 +970,7 @@ fn dyn_scan(
             ctx.transport.clone(),
             &ctx.plan.plan_id,
             task.stage_id,
+            ctx.plan.children(task.stage_id),
             task.producer_id(),
             parts,
             task.resume.as_ref().map(|r| r.next_seqs.clone()),
@@ -1120,7 +1134,7 @@ fn dyn_reduce(
     };
     let dedup = ctx.env.config().flint.dedup_enabled;
     let mut seen: HashSet<(u64, u64)> = HashSet::new();
-    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let mut readers = open_parent_readers(ctx, task, parents, *partition, dedup);
     // DynReduce has *union* semantics over its parent edges; the tags
     // are folded back into one stream (DynCoGroup keeps them apart).
     let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
@@ -1182,7 +1196,7 @@ fn dyn_cogroup(
     };
     let dedup = ctx.env.config().flint.dedup_enabled;
     let mut seen: HashSet<(u64, u64)> = HashSet::new();
-    let mut readers = open_parent_readers(ctx, parents, *partition, dedup);
+    let mut readers = open_parent_readers(ctx, task, parents, *partition, dedup);
     let tagged = drain_tagged(&mut readers, parents, &mut seen, resp)?;
 
     if ctx
@@ -1263,6 +1277,7 @@ fn route_pairs<'a>(
             ctx.transport.clone(),
             &ctx.plan.plan_id,
             task.stage_id,
+            ctx.plan.children(task.stage_id),
             task.producer_id(),
             parts,
             None,

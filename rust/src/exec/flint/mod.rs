@@ -8,11 +8,11 @@
 
 use crate::compute::queries::{QueryId, QueryResult};
 use crate::data::Dataset;
-use crate::exec::driver::{run_plan, RunParams};
+use crate::exec::driver::{run_plan, RunOutput, RunParams};
 use crate::exec::executor::IoMode;
 use crate::exec::shuffle::Transport;
 use crate::exec::{Engine, QueryReport};
-use crate::plan::{kernel_plan, Action, PhysicalPlan, Rdd};
+use crate::plan::{kernel_plan, PhysicalPlan};
 use crate::runtime::PjrtRuntime;
 use crate::services::SimEnv;
 use anyhow::{Context, Result};
@@ -95,68 +95,23 @@ impl FlintEngine {
         }
     }
 
-    /// Execute an arbitrary physical plan.
-    pub fn run_plan(&self, plan: &PhysicalPlan) -> Result<QueryReport> {
+    /// Execute an arbitrary physical plan, returning the raw driver
+    /// output (the session layer's entry point — `ActionOut` carries
+    /// generic collect values the `QueryReport` form cannot).
+    pub fn run_plan_raw(&self, plan: &PhysicalPlan) -> Result<RunOutput> {
         self.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
         self.env.s3().create_bucket(crate::data::OUTPUT_BUCKET);
+        run_plan(&self.env, self.runtime.as_deref(), plan, &self.params())
+            .with_context(|| format!("flint plan {}", plan.plan_id))
+    }
+
+    /// Execute an arbitrary physical plan and summarize it as a report.
+    pub fn run_plan(&self, plan: &PhysicalPlan) -> Result<QueryReport> {
         let before = self.env.cost().snapshot();
-        let out = run_plan(
-            &self.env,
-            self.runtime.as_deref(),
-            plan,
-            &self.params(),
-        )
-        .with_context(|| format!("flint plan {}", plan.plan_id))?;
+        let out = self.run_plan_raw(plan)?;
         let cost = self.env.cost().snapshot().since(&before);
         Ok(report("flint", plan.query, out, cost))
     }
-
-    /// Execute a generic RDD action (the PySpark-like API).
-    pub fn run_rdd(&self, rdd: &Rdd, action: Action, dataset: &Dataset) -> Result<QueryReport> {
-        let cfg = self.env.config();
-        let plan = crate::plan::dag::build_dyn_plan(rdd, action, |bucket, prefix| {
-            rdd_splits(&self.env, dataset, bucket, prefix, cfg.flint.input_split_bytes)
-        });
-        self.run_plan(&plan)
-    }
-}
-
-/// Resolve a lineage branch's input splits by listing `bucket/prefix` in
-/// the simulated S3 — multi-source lineages (`Rdd::cogroup`/`join`
-/// across prefixes) each read their own objects. When the listing is
-/// empty, the provided dataset's manifest is used ONLY if the branch
-/// names that dataset's own source (callers that constructed the
-/// manifest out-of-band keep working); any *other* empty source scans
-/// nothing rather than silently substituting the wrong data.
-pub(crate) fn rdd_splits(
-    env: &SimEnv,
-    dataset: &Dataset,
-    bucket: &str,
-    prefix: &str,
-    split_bytes: u64,
-) -> Vec<crate::plan::InputSplit> {
-    let listed = env.s3().list(bucket, prefix).unwrap_or_default();
-    if listed.is_empty() {
-        let same_source = bucket == dataset.bucket
-            && prefix.trim_end_matches('/') == dataset.prefix.trim_end_matches('/');
-        if same_source {
-            return crate::plan::dag::input_splits(dataset, split_bytes);
-        }
-        return Vec::new();
-    }
-    let mut splits = Vec::new();
-    for (key, size) in listed {
-        for (start, end) in crate::compute::csv::split_ranges(size, split_bytes) {
-            splits.push(crate::plan::InputSplit {
-                bucket: bucket.to_string(),
-                key: key.clone(),
-                start,
-                end,
-                object_size: size,
-            });
-        }
-    }
-    splits
 }
 
 impl Engine for FlintEngine {
@@ -207,39 +162,4 @@ pub(crate) fn report(
     }
 }
 
-/// Raw plan output access for callers that need `ActionOut::Values`
-/// (generic collect) rather than the benchmark `QueryResult`.
-pub fn run_rdd_collect(
-    engine: &FlintEngine,
-    rdd: &Rdd,
-    dataset: &Dataset,
-) -> Result<Vec<crate::compute::value::Value>> {
-    let cfg = engine.env.config();
-    let plan = crate::plan::dag::build_dyn_plan(rdd, Action::Collect, |bucket, prefix| {
-        rdd_splits(&engine.env, dataset, bucket, prefix, cfg.flint.input_split_bytes)
-    });
-    engine.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
-    let out = run_plan(
-        &engine.env,
-        engine.runtime.as_deref(),
-        &plan,
-        &engine.params(),
-    )?;
-    match out.out {
-        crate::exec::driver::ActionOut::Values(v) => Ok(v),
-        crate::exec::driver::ActionOut::KernelRows(rows) => Ok(rows
-            .into_iter()
-            .map(|(k, s, c)| {
-                crate::compute::value::Value::pair(
-                    crate::compute::value::Value::I64(k),
-                    crate::compute::value::Value::pair(
-                        crate::compute::value::Value::F64(s),
-                        crate::compute::value::Value::F64(c),
-                    ),
-                )
-            })
-            .collect()),
-        other => anyhow::bail!("collect produced {other:?}"),
-    }
-}
 

@@ -5,11 +5,13 @@ pub mod cluster;
 pub mod driver;
 pub mod executor;
 pub mod flint;
+pub mod session;
 pub mod shuffle;
 
 pub use cluster::{ClusterEngine, ClusterMode};
 pub use driver::{ActionOut, EdgeShuffle, RunOutput};
 pub use flint::FlintEngine;
+pub use session::FlintContext;
 
 use crate::compute::queries::{QueryId, QueryResult};
 use crate::cost::CostSnapshot;

@@ -1,0 +1,199 @@
+//! [`FlintContext`] — the PySpark-parity session object, the public
+//! entry point of the generic API.
+//!
+//! ```text
+//! let sc = FlintContext::new(env);          # SparkContext analogue
+//! let trips = sc.text_file("bucket", "p/"); # Rdd bound to the session
+//! let hist = trips.map(...).reduce_by_key(30, add);
+//! println!("{}", hist.explain());           # compiled stage DAG
+//! let rows = hist.collect()?;               # lower + run, serverlessly
+//! ```
+//!
+//! A context wraps one engine: [`FlintContext::new`] the serverless
+//! Flint engine (simulated Lambda + SQS), [`FlintContext::cluster`] one
+//! of the always-on Spark/PySpark baselines — both run the *same*
+//! compiled plans, so any lineage can be cross-checked across engines
+//! by running it on several contexts ([`FlintContext::collect`] accepts
+//! unbound lineages for exactly that).
+//!
+//! `text_file` sources resolve their input splits by listing the
+//! simulated object store; datasets whose manifests were built
+//! out-of-band (no listable objects) can be registered with
+//! [`FlintContext::register_manifest`] as a fallback.
+
+use crate::compute::value::Value;
+use crate::data::Dataset;
+use crate::exec::cluster::{ClusterEngine, ClusterMode};
+use crate::exec::flint::FlintEngine;
+use crate::exec::QueryReport;
+use crate::plan::{dag, Action, ActionOut, InputSplit, PhysicalPlan, Rdd, SessionBinding};
+use crate::services::SimEnv;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+enum Backend {
+    Flint(FlintEngine),
+    Cluster(ClusterEngine),
+}
+
+impl Backend {
+    fn env(&self) -> &SimEnv {
+        match self {
+            Backend::Flint(e) => e.env(),
+            Backend::Cluster(e) => e.env(),
+        }
+    }
+
+    fn run_plan_raw(&self, plan: &PhysicalPlan) -> Result<ActionOut> {
+        match self {
+            Backend::Flint(e) => Ok(e.run_plan_raw(plan)?.out),
+            Backend::Cluster(e) => Ok(e.run_plan_raw(plan)?.out),
+        }
+    }
+
+    fn run_plan(&self, plan: &PhysicalPlan) -> Result<QueryReport> {
+        match self {
+            Backend::Flint(e) => e.run_plan(plan),
+            Backend::Cluster(e) => e.run_plan(plan),
+        }
+    }
+}
+
+struct SessionInner {
+    backend: Backend,
+    /// Out-of-band dataset manifests (sources whose objects are not
+    /// listable in the simulated store).
+    manifests: Mutex<Vec<Dataset>>,
+}
+
+impl SessionBinding for SessionInner {
+    /// Resolve a source by listing `bucket/prefix`; multi-source
+    /// lineages (`cogroup`/`join` across prefixes) each resolve their
+    /// own objects. An empty listing falls back to a registered
+    /// manifest for that exact source — any *other* empty source scans
+    /// nothing rather than silently substituting the wrong data.
+    fn input_splits(&self, bucket: &str, prefix: &str) -> Vec<InputSplit> {
+        let env = self.backend.env();
+        let split_bytes = env.config().flint.input_split_bytes;
+        let listed = env.s3().list(bucket, prefix).unwrap_or_default();
+        if listed.is_empty() {
+            let manifests = self.manifests.lock().expect("session manifests");
+            for ds in manifests.iter() {
+                if ds.bucket == bucket
+                    && ds.prefix.trim_end_matches('/') == prefix.trim_end_matches('/')
+                {
+                    return dag::input_splits(ds, split_bytes);
+                }
+            }
+            return Vec::new();
+        }
+        let mut splits = Vec::new();
+        for (key, size) in listed {
+            for (start, end) in crate::compute::csv::split_ranges(size, split_bytes) {
+                splits.push(InputSplit {
+                    bucket: bucket.to_string(),
+                    key: key.clone(),
+                    start,
+                    end,
+                    object_size: size,
+                });
+            }
+        }
+        splits
+    }
+
+    fn execute(&self, plan: &PhysicalPlan) -> Result<ActionOut> {
+        self.backend.run_plan_raw(plan)
+    }
+}
+
+/// The session object every generic driver program starts from.
+/// Cheap to clone (a handle onto one shared engine).
+#[derive(Clone)]
+pub struct FlintContext {
+    inner: Arc<SessionInner>,
+}
+
+impl FlintContext {
+    fn from_backend(backend: Backend) -> FlintContext {
+        FlintContext {
+            inner: Arc::new(SessionInner { backend, manifests: Mutex::new(Vec::new()) }),
+        }
+    }
+
+    /// A serverless session: tasks run in simulated Lambdas, shuffle
+    /// rides the configured backend (SQS or S3).
+    pub fn new(env: SimEnv) -> FlintContext {
+        Self::from_backend(Backend::Flint(FlintEngine::new(env)))
+    }
+
+    /// A serverless session over a pre-built engine (shared PJRT
+    /// runtime, pre-warmed pools).
+    pub fn with_engine(engine: FlintEngine) -> FlintContext {
+        Self::from_backend(Backend::Flint(engine))
+    }
+
+    /// An always-on cluster session (the Table I baselines). Runs the
+    /// same lineages over the in-memory shuffle, for cross-checking.
+    pub fn cluster(env: SimEnv, mode: ClusterMode) -> FlintContext {
+        Self::from_backend(Backend::Cluster(ClusterEngine::new(env, mode)))
+    }
+
+    pub fn env(&self) -> &SimEnv {
+        self.inner.backend.env()
+    }
+
+    /// Warm the Lambda container pool (no-op on cluster sessions).
+    pub fn prewarm(&self) {
+        if let Backend::Flint(e) = &self.inner.backend {
+            e.prewarm();
+        }
+    }
+
+    /// Register an out-of-band dataset manifest as a split-resolution
+    /// fallback for its source.
+    pub fn register_manifest(&self, dataset: &Dataset) {
+        self.inner
+            .manifests
+            .lock()
+            .expect("session manifests")
+            .push(dataset.clone());
+    }
+
+    /// `sc.textFile(...)`: a lazy source bound to this session —
+    /// transformations accumulate lineage, actions compile and run it
+    /// here.
+    pub fn text_file(&self, bucket: &str, prefix: &str) -> Rdd {
+        Rdd::text_file(bucket, prefix)
+            .with_session(Arc::clone(&self.inner) as Arc<dyn SessionBinding>)
+    }
+
+    /// Compile `rdd` with this session's split resolution (works on
+    /// lineages bound elsewhere or not at all — the cross-engine path).
+    pub fn lower(&self, rdd: &Rdd, action: Action) -> PhysicalPlan {
+        dag::lower(rdd, action, &|bucket, prefix| self.inner.input_splits(bucket, prefix))
+    }
+
+    /// Run any lineage on this session and return the full report
+    /// (latencies, cost, per-edge shuffle volumes).
+    pub fn run(&self, rdd: &Rdd, action: Action) -> Result<QueryReport> {
+        self.inner.backend.run_plan(&self.lower(rdd, action))
+    }
+
+    /// Collect any lineage on this session — including unbound ones, so
+    /// one lineage can be executed on several contexts and compared.
+    pub fn collect(&self, rdd: &Rdd) -> Result<Vec<Value>> {
+        self.inner
+            .backend
+            .run_plan_raw(&self.lower(rdd, Action::Collect))?
+            .into_values()
+    }
+
+    /// Count any lineage on this session (unbound lineages welcome).
+    pub fn count(&self, rdd: &Rdd) -> Result<u64> {
+        self.inner
+            .backend
+            .run_plan_raw(&self.lower(rdd, Action::Count))?
+            .into_count()
+    }
+}

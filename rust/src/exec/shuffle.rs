@@ -9,6 +9,14 @@
 //! * **Memory** — the cluster baseline's local shuffle (bytes/second
 //!   model of Spark's disk+network path).
 //!
+//! Shuffle streams are keyed **per DAG edge** (producer stage →
+//! consumer stage), not per producer: a stage whose output is shared by
+//! several consumers (`plan::lower`'s shared sub-lineages) writes each
+//! partition's messages once per consuming edge, so every consumer
+//! drains its own copy even on destructive-read backends, and the
+//! scheduler tears an edge's queues down the moment *its* consumer
+//! finishes — no cross-consumer refcounting.
+//!
 //! Determinism contract (what makes §VI dedup sound): a task's shuffle
 //! output — record order, message boundaries, sequence numbers — is a
 //! pure function of its input, never of timing. Buffers flush on byte
@@ -90,15 +98,16 @@ impl ShuffleRec {
     }
 }
 
-/// The in-process backend for the cluster baseline.
+/// The in-process backend for the cluster baseline. Partitions are
+/// keyed per DAG edge: (producer stage, consumer stage, partition).
 #[derive(Default)]
 pub struct MemoryShuffle {
-    parts: Mutex<BTreeMap<(u32, u32), Vec<Message>>>,
+    parts: Mutex<BTreeMap<(u32, u32, u32), Vec<Message>>>,
     /// Delivered-but-unacked messages, the SQS visibility-timeout
     /// analogue: a reader that dies after draining nacks them back so
     /// its retry sees the data again (without this, a forced reducer
     /// crash on the memory backend silently lost the partition).
-    in_flight: Mutex<BTreeMap<(u32, u32), Vec<Message>>>,
+    in_flight: Mutex<BTreeMap<(u32, u32, u32), Vec<Message>>>,
 }
 
 impl MemoryShuffle {
@@ -106,27 +115,27 @@ impl MemoryShuffle {
         Arc::new(MemoryShuffle::default())
     }
 
-    fn push(&self, stage: u32, part: u32, msg: Message) {
+    fn push(&self, from: u32, to: u32, part: u32, msg: Message) {
         self.parts
             .lock()
             .expect("mem shuffle")
-            .entry((stage, part))
+            .entry((from, to, part))
             .or_default()
             .push(msg);
     }
 
-    fn drain(&self, stage: u32, part: u32) -> Vec<Message> {
+    fn drain(&self, from: u32, to: u32, part: u32) -> Vec<Message> {
         let msgs = self
             .parts
             .lock()
             .expect("mem shuffle")
-            .remove(&(stage, part))
+            .remove(&(from, to, part))
             .unwrap_or_default();
         if !msgs.is_empty() {
             self.in_flight
                 .lock()
                 .expect("mem shuffle in-flight")
-                .entry((stage, part))
+                .entry((from, to, part))
                 .or_default()
                 .extend(msgs.iter().cloned());
         }
@@ -134,25 +143,25 @@ impl MemoryShuffle {
     }
 
     /// Task success: drop the delivered messages for good.
-    fn ack(&self, stage: u32, part: u32) {
+    fn ack(&self, from: u32, to: u32, part: u32) {
         self.in_flight
             .lock()
             .expect("mem shuffle in-flight")
-            .remove(&(stage, part));
+            .remove(&(from, to, part));
     }
 
     /// Task failure: return the delivered messages to the partition.
-    fn nack(&self, stage: u32, part: u32) {
+    fn nack(&self, from: u32, to: u32, part: u32) {
         let returned = self
             .in_flight
             .lock()
             .expect("mem shuffle in-flight")
-            .remove(&(stage, part));
+            .remove(&(from, to, part));
         if let Some(msgs) = returned {
             self.parts
                 .lock()
                 .expect("mem shuffle")
-                .entry((stage, part))
+                .entry((from, to, part))
                 .or_default()
                 .extend(msgs);
         }
@@ -177,28 +186,33 @@ impl Transport {
     }
 }
 
-/// Queue name for (plan, producing stage, partition) — created/deleted by
-/// the scheduler (§III-A: "queue management is performed by the
-/// scheduler").
-pub fn queue_name(plan_id: &str, stage: u32, partition: u32) -> String {
-    format!("{plan_id}-s{stage}-p{partition}")
+/// Queue name for one DAG edge's partition (plan, producing stage,
+/// consuming stage, partition) — created/deleted by the scheduler
+/// (§III-A: "queue management is performed by the scheduler").
+pub fn queue_name(plan_id: &str, from: u32, to: u32, partition: u32) -> String {
+    format!("{plan_id}-s{from}-s{to}-p{partition}")
 }
 
-/// S3 prefix for the S3 shuffle backend.
-pub fn s3_prefix(plan_id: &str, stage: u32, partition: u32) -> String {
-    format!("{plan_id}/s{stage}/p{partition}/")
+/// S3 prefix for the S3 shuffle backend (same per-edge keying).
+pub fn s3_prefix(plan_id: &str, from: u32, to: u32, partition: u32) -> String {
+    format!("{plan_id}/s{from}-s{to}/p{partition}/")
 }
 
 /// Target message body size: leave headroom under the 256 KB batch cap
 /// for wire overhead; ten ~24 KB messages fill one batch call.
 const MSG_TARGET_BYTES: usize = 24 * 1024;
 
-/// Map-side shuffle writer for one task.
+/// Map-side shuffle writer for one task. Writes each sealed message to
+/// every consuming edge (`consumers`): one send per (edge, partition),
+/// so fan-out stages duplicate their stream per consumer while the
+/// common single-consumer case stays one send.
 pub struct ShuffleWriter<'a> {
     env: &'a SimEnv,
     transport: Transport,
     plan_id: String,
     stage: u32,
+    /// Consuming stage ids — the DAG edges this stage's shuffle feeds.
+    consumers: Vec<u32>,
     producer: u64,
     partitions: u32,
     /// Per-partition encode buffer (records encoded back-to-back).
@@ -217,6 +231,7 @@ impl<'a> ShuffleWriter<'a> {
         transport: Transport,
         plan_id: &str,
         stage: u32,
+        consumers: Vec<u32>,
         producer: u64,
         partitions: u32,
         resume_seqs: Option<Vec<u64>>,
@@ -228,6 +243,7 @@ impl<'a> ShuffleWriter<'a> {
             transport,
             plan_id: plan_id.to_string(),
             stage,
+            consumers,
             producer,
             partitions,
             bufs: (0..partitions).map(|_| Vec::new()).collect(),
@@ -281,73 +297,86 @@ impl<'a> ShuffleWriter<'a> {
     }
 
     fn flush_partition(&mut self, partition: u32, tl: &mut Timeline) -> Result<()> {
-        let msgs = std::mem::take(&mut self.pending[partition as usize]);
+        let mut msgs = std::mem::take(&mut self.pending[partition as usize]);
         if msgs.is_empty() {
             return Ok(());
         }
         let bytes: usize = msgs.iter().map(Message::wire_bytes).sum();
-        self.msgs_sent += msgs.len() as u64;
-        self.bytes_sent += bytes as u64;
-        match &self.transport {
-            Transport::Sqs => {
-                // Chunk by message count AND wire bytes: a message seals
-                // only after crossing MSG_TARGET_BYTES, so one big record
-                // (a large Dyn value) makes an oversized message and ten
-                // of them blow the 256 KB per-batch cap if count were the
-                // only limit.
-                let q = queue_name(&self.plan_id, self.stage, partition);
-                let max_msgs = self.env.config().sim.sqs_batch_max_msgs;
-                let max_bytes = self.env.config().sim.sqs_batch_max_bytes;
-                let mut batch: Vec<Message> = Vec::new();
-                let mut batch_bytes = 0usize;
-                for m in msgs {
-                    let w = m.wire_bytes();
-                    if !batch.is_empty()
-                        && (batch.len() >= max_msgs || batch_bytes + w > max_bytes)
-                    {
+        // One physical copy per consuming edge: a fan-out stage really
+        // does pay the extra sends (and the consumers each drain their
+        // own). The last edge takes the buffer by move, so the dominant
+        // single-consumer case copies nothing. Zero consumers (a
+        // degenerate unconsumed shuffle) sends nothing.
+        for ci in 0..self.consumers.len() {
+            let to = self.consumers[ci];
+            let edge_msgs = if ci + 1 == self.consumers.len() {
+                std::mem::take(&mut msgs)
+            } else {
+                msgs.clone()
+            };
+            self.msgs_sent += edge_msgs.len() as u64;
+            self.bytes_sent += bytes as u64;
+            match &self.transport {
+                Transport::Sqs => {
+                    // Chunk by message count AND wire bytes: a message seals
+                    // only after crossing MSG_TARGET_BYTES, so one big record
+                    // (a large Dyn value) makes an oversized message and ten
+                    // of them blow the 256 KB per-batch cap if count were the
+                    // only limit.
+                    let q = queue_name(&self.plan_id, self.stage, to, partition);
+                    let max_msgs = self.env.config().sim.sqs_batch_max_msgs;
+                    let max_bytes = self.env.config().sim.sqs_batch_max_bytes;
+                    let mut batch: Vec<Message> = Vec::new();
+                    let mut batch_bytes = 0usize;
+                    for m in edge_msgs {
+                        let w = m.wire_bytes();
+                        if !batch.is_empty()
+                            && (batch.len() >= max_msgs || batch_bytes + w > max_bytes)
+                        {
+                            let dt = self
+                                .env
+                                .sqs()
+                                .send_batch(&q, std::mem::take(&mut batch))
+                                .map_err(|e| anyhow!("shuffle send: {e}"))?;
+                            tl.charge(Component::SqsSend, dt);
+                            batch_bytes = 0;
+                        }
+                        batch_bytes += w;
+                        batch.push(m);
+                    }
+                    if !batch.is_empty() {
                         let dt = self
                             .env
                             .sqs()
-                            .send_batch(&q, std::mem::take(&mut batch))
+                            .send_batch(&q, batch)
                             .map_err(|e| anyhow!("shuffle send: {e}"))?;
                         tl.charge(Component::SqsSend, dt);
-                        batch_bytes = 0;
                     }
-                    batch_bytes += w;
-                    batch.push(m);
                 }
-                if !batch.is_empty() {
-                    let dt = self
-                        .env
-                        .sqs()
-                        .send_batch(&q, batch)
-                        .map_err(|e| anyhow!("shuffle send: {e}"))?;
-                    tl.charge(Component::SqsSend, dt);
+                Transport::S3 => {
+                    // One object per message-equivalent flush; key carries the
+                    // dedup identity so retries overwrite idempotently.
+                    for m in edge_msgs {
+                        let key = format!(
+                            "{}{:016x}-{:08}",
+                            s3_prefix(&self.plan_id, self.stage, to, partition),
+                            m.producer,
+                            m.seq
+                        );
+                        let dt = self
+                            .env
+                            .s3()
+                            .put_object(SHUFFLE_BUCKET, &key, m.body)
+                            .map_err(|e| anyhow!("shuffle put: {e}"))?;
+                        tl.charge(Component::S3Write, dt);
+                    }
                 }
-            }
-            Transport::S3 => {
-                // One object per message-equivalent flush; key carries the
-                // dedup identity so retries overwrite idempotently.
-                for m in msgs {
-                    let key = format!(
-                        "{}{:016x}-{:08}",
-                        s3_prefix(&self.plan_id, self.stage, partition),
-                        m.producer,
-                        m.seq
-                    );
-                    let dt = self
-                        .env
-                        .s3()
-                        .put_object(SHUFFLE_BUCKET, &key, m.body)
-                        .map_err(|e| anyhow!("shuffle put: {e}"))?;
-                    tl.charge(Component::S3Write, dt);
-                }
-            }
-            Transport::Memory(mem) => {
-                let mbps = self.env.config().sim.cluster_shuffle_mbps;
-                tl.charge(Component::Other, bytes as f64 / (mbps * 1e6));
-                for m in msgs {
-                    mem.push(self.stage, partition, m);
+                Transport::Memory(mem) => {
+                    let mbps = self.env.config().sim.cluster_shuffle_mbps;
+                    tl.charge(Component::Other, bytes as f64 / (mbps * 1e6));
+                    for m in edge_msgs {
+                        mem.push(self.stage, to, partition, m);
+                    }
                 }
             }
         }
@@ -380,7 +409,10 @@ pub struct ShuffleReader<'a> {
     env: &'a SimEnv,
     transport: Transport,
     plan_id: String,
+    /// Producing stage (the edge's tail).
     stage: u32,
+    /// Consuming stage (the edge's head — the reader's own stage).
+    to_stage: u32,
     partition: u32,
     dedup: bool,
     /// SQS receipt handles held until ack.
@@ -395,6 +427,7 @@ impl<'a> ShuffleReader<'a> {
         transport: Transport,
         plan_id: &str,
         stage: u32,
+        to_stage: u32,
         partition: u32,
         dedup: bool,
     ) -> ShuffleReader<'a> {
@@ -403,6 +436,7 @@ impl<'a> ShuffleReader<'a> {
             transport,
             plan_id: plan_id.to_string(),
             stage,
+            to_stage,
             partition,
             dedup,
             receipts: Vec::new(),
@@ -411,7 +445,7 @@ impl<'a> ShuffleReader<'a> {
     }
 
     fn queue(&self) -> String {
-        queue_name(&self.plan_id, self.stage, self.partition)
+        queue_name(&self.plan_id, self.stage, self.to_stage, self.partition)
     }
 
     /// Drain everything currently available. Returns records + stats.
@@ -434,7 +468,7 @@ impl<'a> ShuffleReader<'a> {
                 }
             },
             Transport::S3 => {
-                let prefix = s3_prefix(&self.plan_id, self.stage, self.partition);
+                let prefix = s3_prefix(&self.plan_id, self.stage, self.to_stage, self.partition);
                 let listed = self
                     .env
                     .s3()
@@ -468,7 +502,7 @@ impl<'a> ShuffleReader<'a> {
                 }
             }
             Transport::Memory(mem) => {
-                let msgs = mem.drain(self.stage, self.partition);
+                let msgs = mem.drain(self.stage, self.to_stage, self.partition);
                 let bytes: usize = msgs.iter().map(Message::wire_bytes).sum();
                 let mbps = self.env.config().sim.cluster_shuffle_mbps;
                 tl.charge(Component::Other, bytes as f64 / (mbps * 1e6));
@@ -510,7 +544,7 @@ impl<'a> ShuffleReader<'a> {
                     tl.charge(Component::SqsReceive, dt);
                 }
             }
-            Transport::Memory(mem) => mem.ack(self.stage, self.partition),
+            Transport::Memory(mem) => mem.ack(self.stage, self.to_stage, self.partition),
             Transport::S3 => {}
         }
         self.receipts.clear();
@@ -527,7 +561,7 @@ impl<'a> ShuffleReader<'a> {
                 let q = self.queue();
                 let _ = self.env.sqs().nack(&q, &self.receipts);
             }
-            Transport::Memory(mem) => mem.nack(self.stage, self.partition),
+            Transport::Memory(mem) => mem.nack(self.stage, self.to_stage, self.partition),
             Transport::S3 => {}
         }
         self.receipts.clear();
@@ -546,8 +580,9 @@ pub fn kernel_partition(key: i64, partitions: u32) -> u32 {
 /// [`kernel_partition`]: a dyn stream and a typed kernel stream
 /// partitioned on the same i64 join key MUST land in the same reduce
 /// partition, or the join stage never sees the two sides together
-/// (`build_join_plan` / `build_kernel_join_plan` rely on this; pinned
-/// by `prop_kernel_and_dyn_partitioners_agree_on_i64`). Other key types
+/// (the cogroup plans `plan::lower` emits and `build_kernel_join_plan`
+/// rely on this; pinned by
+/// `prop_kernel_and_dyn_partitioners_agree_on_i64`). Other key types
 /// hash their stable encoding, as before.
 pub fn dyn_partition(key: &Value, partitions: u32) -> u32 {
     if let Some(k) = key.as_i64() {
@@ -575,14 +610,14 @@ mod tests {
     }
 
     fn roundtrip(transport: Transport, env: &SimEnv, dedup: bool) -> (Vec<ShuffleRec>, u64) {
-        // Writer: 2 partitions, 100 records each.
+        // Writer: 2 partitions, 100 records each, over the s0 -> s1 edge.
         if matches!(transport, Transport::Sqs) {
             for p in 0..2 {
-                env.sqs().create_queue(&queue_name("t", 0, p));
+                env.sqs().create_queue(&queue_name("t", 0, 1, p));
             }
         }
         let mut tl = Timeline::new();
-        let mut w = ShuffleWriter::new(env, transport.clone(), "t", 0, 7, 2, None);
+        let mut w = ShuffleWriter::new(env, transport.clone(), "t", 0, vec![1], 7, 2, None);
         for i in 0..200i64 {
             w.write((i % 2) as u32, &krec(i, 1.0), &mut tl).unwrap();
         }
@@ -591,7 +626,7 @@ mod tests {
         let mut all = Vec::new();
         let mut dups = 0;
         for p in 0..2 {
-            let mut r = ShuffleReader::new(env, transport.clone(), "t", 0, p, dedup);
+            let mut r = ShuffleReader::new(env, transport.clone(), "t", 0, 1, p, dedup);
             let read = r.drain(&mut tl).unwrap();
             r.ack(&mut tl).unwrap();
             dups += read.duplicates_dropped;
@@ -649,16 +684,16 @@ mod tests {
     fn retry_resends_are_deduped() {
         // Simulate a map-task retry: same producer writes everything twice.
         let env = env_with(0.0);
-        env.sqs().create_queue(&queue_name("t", 0, 0));
+        env.sqs().create_queue(&queue_name("t", 0, 1, 0));
         let mut tl = Timeline::new();
         for _attempt in 0..2 {
-            let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 0, 7, 1, None);
+            let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 0, vec![1], 7, 1, None);
             for i in 0..50i64 {
                 w.write(0, &krec(i, 1.0), &mut tl).unwrap();
             }
             w.flush_all(&mut tl).unwrap();
         }
-        let mut r = ShuffleReader::new(&env, Transport::Sqs, "t", 0, 0, true);
+        let mut r = ShuffleReader::new(&env, Transport::Sqs, "t", 0, 1, 0, true);
         let read = r.drain(&mut tl).unwrap();
         assert_eq!(read.records.len(), 50, "attempt 2's identical messages dropped");
         assert!(read.duplicates_dropped > 0);
@@ -667,20 +702,20 @@ mod tests {
     #[test]
     fn abandon_returns_messages_for_retry() {
         let env = env_with(0.0);
-        env.sqs().create_queue(&queue_name("t", 1, 0));
+        env.sqs().create_queue(&queue_name("t", 1, 2, 0));
         let mut tl = Timeline::new();
-        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 1, 3, 1, None);
+        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "t", 1, vec![2], 3, 1, None);
         for i in 0..10i64 {
             w.write(0, &krec(i, 1.0), &mut tl).unwrap();
         }
         w.flush_all(&mut tl).unwrap();
         // First reader dies after draining.
-        let mut r1 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 0, true);
+        let mut r1 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 2, 0, true);
         let read1 = r1.drain(&mut tl).unwrap();
         assert_eq!(read1.records.len(), 10);
         r1.abandon();
         // Retry sees everything again.
-        let mut r2 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 0, true);
+        let mut r2 = ShuffleReader::new(&env, Transport::Sqs, "t", 1, 2, 0, true);
         let read2 = r2.drain(&mut tl).unwrap();
         r2.ack(&mut tl).unwrap();
         assert_eq!(read2.records.len(), 10);
@@ -689,17 +724,18 @@ mod tests {
     #[test]
     fn writer_seqs_deterministic_and_resumable() {
         let env = env_with(0.0);
-        env.sqs().create_queue(&queue_name("t", 2, 0));
+        env.sqs().create_queue(&queue_name("t", 2, 3, 0));
         let mut tl = Timeline::new();
-        let mut w1 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, None);
-        let mut w2 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, None);
+        let mut w1 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, vec![3], 9, 1, None);
+        let mut w2 = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, vec![3], 9, 1, None);
         for i in 0..5000i64 {
             w1.write(0, &krec(i, 1.0), &mut tl).unwrap();
             w2.write(0, &krec(i, 1.0), &mut tl).unwrap();
         }
         assert_eq!(w1.seqs(), w2.seqs(), "same input -> same seq stream");
         // Resume continues the stream.
-        let resumed = ShuffleWriter::new(&env, Transport::Sqs, "t", 2, 9, 1, Some(w1.seqs()));
+        let resumed =
+            ShuffleWriter::new(&env, Transport::Sqs, "t", 2, vec![3], 9, 1, Some(w1.seqs()));
         assert_eq!(resumed.seqs(), w1.seqs());
     }
 
@@ -743,9 +779,9 @@ mod tests {
         // used to go out as a single 400 KB send and fail the whole
         // query with BatchTooLarge. The writer must chunk by bytes too.
         let env = env_with(0.0);
-        env.sqs().create_queue(&queue_name("big", 0, 0));
+        env.sqs().create_queue(&queue_name("big", 0, 1, 0));
         let mut tl = Timeline::new();
-        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "big", 0, 1, 1, None);
+        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "big", 0, vec![1], 1, 1, None);
         let n = 12;
         for i in 0..n {
             let pair = Value::pair(Value::I64(i), Value::str("x".repeat(40 * 1024)));
@@ -758,7 +794,7 @@ mod tests {
             env.metrics().get("sqs.send_batch") >= 2,
             "byte cap must split the flush into multiple sends"
         );
-        let mut r = ShuffleReader::new(&env, Transport::Sqs, "big", 0, 0, true);
+        let mut r = ShuffleReader::new(&env, Transport::Sqs, "big", 0, 1, 0, true);
         let read = r.drain(&mut tl).unwrap();
         r.ack(&mut tl).unwrap();
         assert_eq!(read.records.len(), n as usize, "nothing lost to batch limits");
@@ -771,21 +807,21 @@ mod tests {
         // keys aliased and dedup silently dropped the second object.
         let env = env_with(0.0);
         let mut tl = Timeline::new();
-        let mut w = ShuffleWriter::new(&env, Transport::S3, "bad", 0, 7, 1, None);
+        let mut w = ShuffleWriter::new(&env, Transport::S3, "bad", 0, vec![1], 7, 1, None);
         for i in 0..10i64 {
             w.write(0, &krec(i, 1.0), &mut tl).unwrap();
         }
         w.flush_all(&mut tl).unwrap();
         // Two foreign objects under the shuffle prefix, both unparseable:
         // no '-' stem at all, and a non-decimal sequence part.
-        let prefix = s3_prefix("bad", 0, 0);
+        let prefix = s3_prefix("bad", 0, 1, 0);
         env.s3()
             .put_object(SHUFFLE_BUCKET, &format!("{prefix}junkobject"), b"junk".to_vec())
             .unwrap();
         env.s3()
             .put_object(SHUFFLE_BUCKET, &format!("{prefix}feed-beef"), b"junk".to_vec())
             .unwrap();
-        let mut r = ShuffleReader::new(&env, Transport::S3, "bad", 0, 0, true);
+        let mut r = ShuffleReader::new(&env, Transport::S3, "bad", 0, 1, 0, true);
         let err = r.drain(&mut tl).unwrap_err();
         let text = format!("{err:#}");
         assert!(text.contains("shuffle object key"), "{text}");
@@ -801,21 +837,60 @@ mod tests {
         let mem = MemoryShuffle::new();
         let transport = || Transport::Memory(Arc::clone(&mem));
         let mut tl = Timeline::new();
-        let mut w = ShuffleWriter::new(&env, transport(), "m", 2, 5, 1, None);
+        let mut w = ShuffleWriter::new(&env, transport(), "m", 2, vec![3], 5, 1, None);
         for i in 0..10i64 {
             w.write(0, &krec(i, 1.0), &mut tl).unwrap();
         }
         w.flush_all(&mut tl).unwrap();
-        let mut r1 = ShuffleReader::new(&env, transport(), "m", 2, 0, false);
+        let mut r1 = ShuffleReader::new(&env, transport(), "m", 2, 3, 0, false);
         assert_eq!(r1.drain(&mut tl).unwrap().records.len(), 10);
         r1.abandon();
-        let mut r2 = ShuffleReader::new(&env, transport(), "m", 2, 0, false);
+        let mut r2 = ShuffleReader::new(&env, transport(), "m", 2, 3, 0, false);
         let read2 = r2.drain(&mut tl).unwrap();
         r2.ack(&mut tl).unwrap();
         assert_eq!(read2.records.len(), 10, "abandoned messages redelivered");
         // Acked for good: a third reader sees nothing.
-        let mut r3 = ShuffleReader::new(&env, Transport::Memory(mem), "m", 2, 0, false);
+        let mut r3 = ShuffleReader::new(&env, Transport::Memory(mem), "m", 2, 3, 0, false);
         assert_eq!(r3.drain(&mut tl).unwrap().records.len(), 0);
+    }
+
+    #[test]
+    fn fan_out_writer_delivers_a_full_copy_per_edge() {
+        // A shared stage (plan::lower's shared sub-lineages) lists two
+        // consumers: each edge must receive the complete stream with the
+        // same (producer, seq) identities, and draining one edge must
+        // not disturb the other.
+        for transport in [
+            Transport::Sqs,
+            Transport::S3,
+            Transport::Memory(MemoryShuffle::new()),
+        ] {
+            let env = env_with(0.0);
+            if matches!(transport, Transport::Sqs) {
+                env.sqs().create_queue(&queue_name("f", 0, 1, 0));
+                env.sqs().create_queue(&queue_name("f", 0, 2, 0));
+            }
+            let mut tl = Timeline::new();
+            let mut w =
+                ShuffleWriter::new(&env, transport.clone(), "f", 0, vec![1, 2], 7, 1, None);
+            for i in 0..30i64 {
+                w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+            }
+            w.flush_all(&mut tl).unwrap();
+            assert_eq!(w.msgs_sent % 2, 0, "every message sent once per edge");
+            for to in [1u32, 2u32] {
+                let mut r = ShuffleReader::new(&env, transport.clone(), "f", 0, to, 0, true);
+                let read = r.drain(&mut tl).unwrap();
+                r.ack(&mut tl).unwrap();
+                assert_eq!(
+                    read.records.len(),
+                    30,
+                    "edge s0->s{to} got the full stream ({})",
+                    transport.name()
+                );
+                assert_eq!(read.duplicates_dropped, 0, "edges do not alias");
+            }
+        }
     }
 
     use crate::util::propcheck::Gen;

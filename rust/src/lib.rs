@@ -38,6 +38,8 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::exec::cluster::{ClusterEngine, ClusterMode};
     pub use crate::exec::flint::FlintEngine;
+    pub use crate::exec::session::FlintContext;
     pub use crate::exec::{Engine, QueryReport};
+    pub use crate::plan::{Action, Rdd};
     pub use crate::services::SimEnv;
 }

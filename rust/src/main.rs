@@ -3,7 +3,7 @@
 //! ```text
 //! flint gen      --trips 1000000                      generate a dataset (stats only)
 //! flint run      --query Q1 [--engine flint|spark|pyspark] [--trips N]
-//! flint explain  --query Q1 [--no-run]                print the stage DAG + its barrier/pipelined schedule windows
+//! flint explain  --query Q1 [--no-run] [--generic]    print the stage DAG + its barrier/pipelined schedule windows
 //! flint table1   [--trips N] [--trials N] [--paper]   regenerate Table I
 //! flint micro    --bench s3|coldstart|shuffle         the in-text microbenchmarks
 //! flint config   [--config file.toml] [--set k=v]...  print the effective config
@@ -11,6 +11,10 @@
 //!
 //! Every command accepts `--config <toml>` and repeated `--set key=value`.
 //! Queries are Q0..Q6 plus Q6J, the shuffle-join variant of Q6.
+//! `flint explain --generic` builds Q1 as a *generic lineage* through
+//! the session API (`FlintContext::text_file` → map/filter/map →
+//! reduceByKey) and shows what the general lineage→DAG compiler
+//! (`plan::lower`) makes of it, instead of the typed kernel plan.
 //! `flint explain --query Q6J` renders the join diamond — two scan
 //! stages (trips, weather) fanning into a `KernelJoin` stage and a
 //! final per-bucket reduce:
@@ -141,7 +145,21 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
     let trips = args.get_parsed("trips", 50_000u64)?;
     let env = SimEnv::new(cfg.clone());
     let ds = generate_taxi_dataset(&env, "trips", trips);
-    let plan = flint::plan::kernel_plan(query, &ds, &cfg);
+    let plan = if args.flag("generic") {
+        // The session-API route: the same query as a generic lineage,
+        // compiled by the general lineage→DAG compiler. Only Q1 has a
+        // hand-written generic form.
+        if !matches!(query, QueryId::Q1) {
+            return Err(format!(
+                "explain --generic only supports Q1 (got {query}); drop --generic \
+                 for the typed kernel plan"
+            ));
+        }
+        let sc = flint::exec::FlintContext::new(env.clone());
+        sc.lower(&generic_q1_lineage(&sc), flint::plan::Action::Collect)
+    } else {
+        flint::plan::kernel_plan(query, &ds, &cfg)
+    };
     println!("{}", plan.explain());
     if args.flag("no-run") {
         return Ok(());
@@ -176,6 +194,27 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
         println!("edge s{}->s{}: {} shuffle msgs", e.from, e.to, e.msgs);
     }
     Ok(())
+}
+
+/// The paper's §IV Q1 driver program as a generic session-API lineage
+/// (`flint explain --generic` compiles and runs this instead of the
+/// typed kernel plan).
+fn generic_q1_lineage(sc: &flint::exec::FlintContext) -> flint::plan::Rdd {
+    use flint::compute::value::Value;
+    use flint::data::schema::{TripRecord, GOLDMAN};
+    sc.text_file(flint::data::INPUT_BUCKET, "trips/")
+        .flat_map(|line| {
+            let Some(text) = line.as_str() else { return Vec::new() };
+            let Some(r) = TripRecord::parse_csv(text.as_bytes()) else { return Vec::new() };
+            if !GOLDMAN.contains(r.dropoff_lon, r.dropoff_lat) {
+                return Vec::new();
+            }
+            vec![Value::pair(
+                Value::I64(flint::data::chrono::hour_of_day(r.dropoff_ts) as i64),
+                Value::I64(1),
+            )]
+        })
+        .reduce_by_key(30, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
 }
 
 /// Render per-stage start/end windows (and parent overlap) on the

@@ -1,12 +1,25 @@
 //! The physical plan: a **stage DAG** — lineage (or a benchmark query) →
 //! [`PhysicalPlan`] — the structure both engines execute.
 //!
+//! Generic lineages go through one recursive compiler, [`lower`]: it
+//! walks an arbitrary [`Rdd`] graph action-side-down, cuts a stage at
+//! every wide dependency (`reduce_by_key`, `cogroup`/`join`), and fuses
+//! the narrow ops between cuts into the consuming stage's chain. There
+//! are no special-cased shapes: reduceByKey downstream of a cogroup, a
+//! cogroup of two reduces, multi-way diamonds — every interleaving
+//! lowers through the same recursion. A sub-lineage consumed by two
+//! wide children (the same `Rdd` handle, by `Arc` pointer identity, at
+//! the same partition count) plans its stage **once** and fans its
+//! shuffle out on two edges — the driver materializes one queue set per
+//! DAG edge, so both consumers drain their own copy. (Map-side combine
+//! is per-consumer, so a shared stage ships raw records.)
+//!
 //! Stages carry explicit ids and *parent edges*: a stage consumes the
 //! shuffle output of every parent listed in [`Stage::parents`], so plans
-//! are no longer restricted to linear chains — multi-parent stages are
+//! are not restricted to linear chains — multi-parent stages are
 //! first-class, and the reduce side consumes each parent's stream
 //! *tagged with its origin edge*: [`build_union_plan`] merges them
-//! (union semantics), while [`build_join_plan`] / Q6J's
+//! (union semantics), while the cogroup stages [`lower`] emits and Q6J's
 //! [`build_kernel_join_plan`] keep the sides apart for true
 //! cogroup/join semantics. `flint explain` renders the join shape as a
 //! diamond, e.g. for Q6J:
@@ -26,13 +39,14 @@
 //! §III-A (reducers long-poll their queues while mappers still flush).
 
 use crate::compute::csv::split_ranges;
-use crate::compute::queries::{KernelSpec, QueryId};
+use crate::compute::queries::{KernelSpec, QueryId, QueryResult};
 use crate::compute::value::Value;
 use crate::config::FlintConfig;
 use crate::data::weather::{precip_bucket, PRECIP_BUCKETS};
 use crate::data::Dataset;
-use crate::plan::rdd::{CombineFn, DynOp, Rdd};
+use crate::plan::rdd::{CombineFn, DynOp, Rdd, RddNode};
 use crate::plan::task::InputSplit;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// What the final stage does with its output.
@@ -52,6 +66,58 @@ impl std::fmt::Debug for Action {
             Action::Count => f.write_str("Count"),
             Action::Collect => f.write_str("Collect"),
             Action::SaveAsText { bucket, prefix } => write!(f, "SaveAsText({bucket}/{prefix})"),
+        }
+    }
+}
+
+/// Merged result of a plan's final stage — what an [`Action`] yields
+/// back at the driver (lives next to `Action` so the session layer can
+/// speak it without reaching into the executor).
+#[derive(Debug, Clone)]
+pub enum ActionOut {
+    Count(u64),
+    KernelRows(Vec<(i64, f64, f64)>),
+    Values(Vec<Value>),
+    Saved(u64),
+}
+
+impl ActionOut {
+    /// Convert to the benchmark-comparable form (kernel queries only).
+    pub fn to_query_result(&self) -> Option<QueryResult> {
+        match self {
+            ActionOut::Count(n) => Some(QueryResult::Count(*n)),
+            ActionOut::KernelRows(rows) => {
+                let mut rows = rows.clone();
+                rows.sort_by_key(|(k, _, _)| *k);
+                Some(QueryResult::Buckets(rows))
+            }
+            _ => None,
+        }
+    }
+
+    /// A `collect`'s values, or an error naming what came back instead —
+    /// the single unwrap every collect-shaped caller shares.
+    pub fn into_values(self) -> anyhow::Result<Vec<Value>> {
+        match self {
+            ActionOut::Values(values) => Ok(values),
+            other => anyhow::bail!("collect produced {other:?}"),
+        }
+    }
+
+    /// A `count`'s total, or an error naming what came back instead.
+    pub fn into_count(self) -> anyhow::Result<u64> {
+        match self {
+            ActionOut::Count(n) => Ok(n),
+            other => anyhow::bail!("count produced {other:?}"),
+        }
+    }
+
+    /// A `saveAsTextFile`'s object count, or an error naming what came
+    /// back instead.
+    pub fn into_saved(self) -> anyhow::Result<u64> {
+        match self {
+            ActionOut::Saved(n) => Ok(n),
+            other => anyhow::bail!("saveAsTextFile produced {other:?}"),
         }
     }
 }
@@ -193,8 +259,8 @@ impl PhysicalPlan {
             if s.id as usize != i {
                 return Err(format!("stage {} stored at index {i}", s.id));
             }
-            // Duplicate parent entries would double-decrement the
-            // driver's per-edge queue refcounts.
+            // A duplicate parent entry would mean two readers draining
+            // (and the driver twice deleting) one edge's queues.
             let mut dedup = s.parents.clone();
             dedup.sort_unstable();
             dedup.dedup();
@@ -344,69 +410,188 @@ pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig
     }
 }
 
-/// Physical plan for a generic RDD lineage + action. Linear lineages
-/// lower to a scan → reduce chain; a `cogroup`/`join` lineage (two
-/// narrow branches fanning into one cogroup, narrow ops after) lowers
-/// through [`build_join_plan`].
-pub fn build_dyn_plan(
-    rdd: &Rdd,
-    action: Action,
-    dataset_lookup: impl Fn(&str, &str) -> Vec<InputSplit>,
-) -> PhysicalPlan {
-    if let Some((left, right, partitions, post_ops)) = rdd.cogroup_shape() {
-        let branch = |r: &Rdd| -> UnionBranch {
-            let lin = r.linearize();
-            assert_eq!(
-                lin.segments.len(),
-                1,
-                "cogroup branches must be narrow (map/filter/flatMap) chains"
-            );
-            let splits = dataset_lookup(&lin.source.0, &lin.source.1);
-            let seg = lin.segments.into_iter().next().expect("one segment");
-            UnionBranch { ops: seg.ops, splits }
-        };
-        return build_join_plan(branch(&left), branch(&right), partitions, post_ops, action);
-    }
-    let lin = rdd.linearize();
-    let splits = dataset_lookup(&lin.source.0, &lin.source.1);
-    let mut stages = Vec::new();
-    let n = lin.segments.len();
-    let mut pending_combine: Option<CombineFn> = None;
-    for (i, seg) in lin.segments.into_iter().enumerate() {
-        let (input, parents) = if i == 0 {
-            (StageInput::S3Splits(splits.clone()), Vec::new())
-        } else {
-            let partitions = match &stages[i - 1] {
-                Stage { output: StageOutput::Shuffle { partitions, .. }, .. } => *partitions,
-                _ => unreachable!("non-first segment follows a shuffle"),
-            };
-            (StageInput::Shuffle { partitions }, vec![(i - 1) as u32])
-        };
-        let output = match &seg.shuffle {
-            Some((partitions, combine)) => StageOutput::Shuffle {
-                partitions: *partitions,
-                combine: Some(combine.clone()),
-            },
-            None => StageOutput::Act(action.clone()),
-        };
-        let compute = if i == 0 {
-            StageCompute::DynScan { ops: seg.ops }
-        } else {
-            StageCompute::DynReduce {
-                combine: pending_combine.clone().expect("combine from previous segment"),
-                post_ops: seg.ops,
+/// What a narrow op chain bottoms out on: an S3 source or a wide
+/// (shuffle) dependency.
+enum ChainBase {
+    Source { bucket: String, prefix: String },
+    Wide(Rdd),
+}
+
+/// Walk root-ward from `rdd` through narrow nodes only, returning the
+/// base the chain hangs off plus the ops in application (source-first)
+/// order.
+fn narrow_chain(rdd: &Rdd) -> (ChainBase, Vec<DynOp>) {
+    let mut ops = Vec::new();
+    let mut node = rdd.clone();
+    loop {
+        let next = match &*node.node {
+            RddNode::TextFile { bucket, prefix } => {
+                ops.reverse();
+                return (ChainBase::Source { bucket: bucket.clone(), prefix: prefix.clone() }, ops);
+            }
+            RddNode::Narrow { parent, op } => {
+                ops.push(op.clone());
+                parent.clone()
+            }
+            RddNode::ReduceByKey { .. } | RddNode::CoGroup { .. } => {
+                ops.reverse();
+                return (ChainBase::Wide(node.clone()), ops);
             }
         };
-        pending_combine = seg.shuffle.map(|(_, c)| c);
-        debug_assert!(i < n);
-        stages.push(Stage { id: i as u32, parents, compute, input, output });
+        node = next;
     }
-    PhysicalPlan {
+}
+
+/// The general lineage→DAG compiler: recursively cut *any* [`Rdd`]
+/// graph at its wide dependencies and emit a topologically-ordered
+/// [`PhysicalPlan`]. Narrow ops fuse into the stage that consumes them;
+/// a `reduce_by_key` becomes a [`StageCompute::DynReduce`] stage and a
+/// `cogroup` (or any `join` variant) a two-parent
+/// [`StageCompute::DynCoGroup`] stage — each of which may itself feed a
+/// further shuffle, so reduceByKey downstream of a cogroup lowers to
+/// the 4-stage dyn diamond without any special case.
+///
+/// Sharing: a sub-lineage consumed by more than one wide child (the
+/// same `Arc` node at the same partition count) is planned **once**;
+/// the driver fans its shuffle output out on one queue set per
+/// consuming edge. The one exception is a self-cogroup
+/// (`a.cogroup(&a, p)`): a stage cannot appear twice in one parent
+/// list, so the right side plans a duplicate stage.
+pub fn lower(
+    rdd: &Rdd,
+    action: Action,
+    splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
+) -> PhysicalPlan {
+    let mut lw = Lowering { stages: Vec::new(), memo: HashMap::new(), splits };
+    let (base, ops) = narrow_chain(rdd);
+    match base {
+        ChainBase::Source { bucket, prefix } => {
+            lw.push(
+                Vec::new(),
+                StageCompute::DynScan { ops },
+                StageInput::S3Splits((lw.splits)(&bucket, &prefix)),
+                StageOutput::Act(action.clone()),
+            );
+        }
+        ChainBase::Wide(wide) => {
+            let (compute, parents, partitions) = lw.wide_inputs(&wide, ops);
+            lw.push(
+                parents,
+                compute,
+                StageInput::Shuffle { partitions },
+                StageOutput::Act(action.clone()),
+            );
+        }
+    }
+    let plan = PhysicalPlan {
         plan_id: next_plan_id(),
-        stages,
+        stages: lw.stages,
         action,
         query: None,
         weather: None,
+    };
+    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
+    plan
+}
+
+/// In-progress lowering state: stages are appended parents-first, so
+/// ids come out topologically ordered by construction.
+struct Lowering<'a> {
+    stages: Vec<Stage>,
+    /// Planned shuffle-producer stages by (lineage node identity,
+    /// partition count) — the sub-lineage sharing map.
+    memo: HashMap<(usize, usize), u32>,
+    splits: &'a dyn Fn(&str, &str) -> Vec<InputSplit>,
+}
+
+impl Lowering<'_> {
+    fn push(
+        &mut self,
+        parents: Vec<u32>,
+        compute: StageCompute,
+        input: StageInput,
+        output: StageOutput,
+    ) -> u32 {
+        let id = self.stages.len() as u32;
+        self.stages.push(Stage { id, parents, compute, input, output });
+        id
+    }
+
+    /// Plan (or reuse) the stage that computes `rdd`'s record stream and
+    /// hash-partitions it into a `partitions`-way shuffle. `combine` is
+    /// the consuming reduce's map-side combine, when there is one.
+    fn shuffle_producer(
+        &mut self,
+        rdd: &Rdd,
+        partitions: usize,
+        combine: Option<CombineFn>,
+        share: bool,
+    ) -> u32 {
+        let key = (Arc::as_ptr(&rdd.node) as *const () as usize, partitions);
+        if share {
+            if let Some(&id) = self.memo.get(&key) {
+                // Second consumer of this sub-lineage: the stage now fans
+                // out on multiple edges. Map-side combine is a
+                // per-consumer optimization, so a shared stream must ship
+                // raw records.
+                let out = &mut self.stages[id as usize].output;
+                if let StageOutput::Shuffle { combine, .. } = out {
+                    *combine = None;
+                }
+                return id;
+            }
+        }
+        let (base, ops) = narrow_chain(rdd);
+        let output = StageOutput::Shuffle { partitions, combine };
+        let id = match base {
+            ChainBase::Source { bucket, prefix } => self.push(
+                Vec::new(),
+                StageCompute::DynScan { ops },
+                StageInput::S3Splits((self.splits)(&bucket, &prefix)),
+                output,
+            ),
+            ChainBase::Wide(wide) => {
+                let (compute, parents, in_parts) = self.wide_inputs(&wide, ops);
+                self.push(parents, compute, StageInput::Shuffle { partitions: in_parts }, output)
+            }
+        };
+        if share {
+            self.memo.insert(key, id);
+        }
+        id
+    }
+
+    /// Compute + parent edges + input partition count for a stage whose
+    /// input is wide node `wide`'s shuffle, with `post_ops` fused after
+    /// the wide op.
+    fn wide_inputs(&mut self, wide: &Rdd, post_ops: Vec<DynOp>) -> (StageCompute, Vec<u32>, usize) {
+        match &*wide.node {
+            RddNode::ReduceByKey { parent, partitions, combine } => {
+                let p = self.shuffle_producer(parent, *partitions, Some(combine.clone()), true);
+                (
+                    StageCompute::DynReduce { combine: combine.clone(), post_ops },
+                    vec![p],
+                    *partitions,
+                )
+            }
+            RddNode::CoGroup { left, right, partitions } => {
+                let lp = self.shuffle_producer(left, *partitions, None, true);
+                // Self-cogroup: both sides are the same lineage node, but
+                // a stage cannot be listed twice in one parent list
+                // (duplicate edges break queue lifecycle), so the right
+                // side plans an unshared duplicate. Anything *below* it
+                // still shares through the memo.
+                let rp = if Arc::ptr_eq(&left.node, &right.node) {
+                    self.shuffle_producer(right, *partitions, None, false)
+                } else {
+                    self.shuffle_producer(right, *partitions, None, true)
+                };
+                (StageCompute::DynCoGroup { post_ops }, vec![lp, rp], *partitions)
+            }
+            RddNode::TextFile { .. } | RddNode::Narrow { .. } => {
+                unreachable!("narrow_chain stops only at wide nodes")
+            }
+        }
     }
 }
 
@@ -557,55 +742,6 @@ pub fn build_union_plan(
     plan
 }
 
-/// Two-sided cogroup plan: both branches hash-partition their pairs on
-/// the key into the same `partitions` space; the reduce stage lists both
-/// scans as parents and — unlike [`build_union_plan`]'s merged stream —
-/// consumes them *per parent edge*, grouping each key's values by origin
-/// side before running `post_ops` over `(key, [left_vals, right_vals])`.
-/// This is the exchange-operator join shape (`Rdd::join`/`cogroup`
-/// lower to it).
-pub fn build_join_plan(
-    left: UnionBranch,
-    right: UnionBranch,
-    partitions: usize,
-    post_ops: Vec<DynOp>,
-    action: Action,
-) -> PhysicalPlan {
-    assert!(partitions > 0, "join plan needs at least one partition");
-    let stages = vec![
-        Stage {
-            id: 0,
-            parents: Vec::new(),
-            compute: StageCompute::DynScan { ops: left.ops },
-            input: StageInput::S3Splits(left.splits),
-            output: StageOutput::Shuffle { partitions, combine: None },
-        },
-        Stage {
-            id: 1,
-            parents: Vec::new(),
-            compute: StageCompute::DynScan { ops: right.ops },
-            input: StageInput::S3Splits(right.splits),
-            output: StageOutput::Shuffle { partitions, combine: None },
-        },
-        Stage {
-            id: 2,
-            parents: vec![0, 1],
-            compute: StageCompute::DynCoGroup { post_ops },
-            input: StageInput::Shuffle { partitions },
-            output: StageOutput::Act(action.clone()),
-        },
-    ];
-    let plan = PhysicalPlan {
-        plan_id: next_plan_id(),
-        stages,
-        action,
-        query: None,
-        weather: None,
-    };
-    debug_assert!(plan.validate().is_ok(), "{:?}", plan.validate());
-    plan
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -631,7 +767,7 @@ mod tests {
             .reduce_by_key(4, |a, b| {
                 Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
             });
-        let plan = build_dyn_plan(&rdd, Action::Collect, |_, _| fake_splits(3));
+        let plan = lower(&rdd, Action::Collect, &|_, _| fake_splits(3));
         assert_eq!(plan.stages.len(), 2);
         assert_eq!(plan.stages[0].num_tasks(), 3);
         assert_eq!(plan.stages[1].num_tasks(), 4);
@@ -640,13 +776,17 @@ mod tests {
         assert_eq!(plan.total_tasks(), 7);
         assert_eq!(plan.stages[0].parents, Vec::<u32>::new());
         assert_eq!(plan.stages[1].parents, vec![0]);
+        assert!(
+            matches!(plan.stages[0].output, StageOutput::Shuffle { combine: Some(_), .. }),
+            "single-consumer reduce keeps the map-side combine"
+        );
         plan.validate().unwrap();
     }
 
     #[test]
     fn dyn_map_only_plan() {
         let rdd = Rdd::text_file("b", "p").filter(|_| true);
-        let plan = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(2));
+        let plan = lower(&rdd, Action::Count, &|_, _| fake_splits(2));
         assert_eq!(plan.stages.len(), 1);
         assert!(matches!(plan.stages[0].output, StageOutput::Act(Action::Count)));
         plan.validate().unwrap();
@@ -657,7 +797,7 @@ mod tests {
         let rdd = Rdd::text_file("b", "p")
             .map(|v| Value::pair(v, Value::I64(1)))
             .reduce_by_key(4, |a, _| a);
-        let plan = build_dyn_plan(&rdd, Action::Collect, |_, _| fake_splits(3));
+        let plan = lower(&rdd, Action::Collect, &|_, _| fake_splits(3));
         let text = plan.explain();
         assert!(text.contains("stage 0"), "{text}");
         assert!(text.contains("sqs x4"), "{text}");
@@ -667,9 +807,109 @@ mod tests {
     #[test]
     fn plan_ids_unique() {
         let rdd = Rdd::text_file("b", "p");
-        let a = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
-        let b = build_dyn_plan(&rdd, Action::Count, |_, _| fake_splits(1));
+        let a = lower(&rdd, Action::Count, &|_, _| fake_splits(1));
+        let b = lower(&rdd, Action::Count, &|_, _| fake_splits(1));
         assert_ne!(a.plan_id, b.plan_id);
+    }
+
+    #[test]
+    fn chained_reduces_lower_to_a_stage_per_shuffle() {
+        let rdd = Rdd::text_file("b", "p")
+            .map(|v| Value::pair(v, Value::I64(1)))
+            .reduce_by_key(4, |a, _| a)
+            .map(|v| v)
+            .reduce_by_key(2, |a, _| a)
+            .filter(|_| true);
+        let plan = lower(&rdd, Action::Collect, &|_, _| fake_splits(3));
+        assert_eq!(plan.stages.len(), 3);
+        for id in [1usize, 2] {
+            assert!(matches!(
+                &plan.stages[id].compute,
+                StageCompute::DynReduce { post_ops, .. } if post_ops.len() == 1
+            ));
+        }
+        assert_eq!(plan.stages[1].parents, vec![0]);
+        assert_eq!(plan.stages[2].parents, vec![1]);
+        assert!(matches!(plan.stages[1].output, StageOutput::Shuffle { partitions: 2, .. }));
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn reduce_by_key_downstream_of_cogroup_lowers_to_four_stages() {
+        // The shape the old per-shape planner panicked on
+        // ("not supported yet"): cogroup, then a further shuffle.
+        let left = Rdd::text_file("b", "l/").map(|v| v);
+        let right = Rdd::text_file("b", "r/");
+        let rdd = left
+            .cogroup(&right, 4)
+            .map(|v| v)
+            .reduce_by_key(2, |a, _| a);
+        let plan = lower(&rdd, Action::Collect, &|_, prefix| {
+            fake_splits(if prefix == "l/" { 3 } else { 2 })
+        });
+        assert_eq!(plan.stages.len(), 4, "{}", plan.explain());
+        assert!(matches!(plan.stages[0].compute, StageCompute::DynScan { .. }));
+        assert!(matches!(plan.stages[1].compute, StageCompute::DynScan { .. }));
+        let StageCompute::DynCoGroup { post_ops } = &plan.stages[2].compute else {
+            panic!("stage 2 is the cogroup: {:?}", plan.stages[2].compute)
+        };
+        assert_eq!(post_ops.len(), 1, "the map between cogroup and reduce fuses here");
+        assert_eq!(plan.stages[2].parents, vec![0, 1]);
+        assert!(
+            matches!(
+                plan.stages[2].output,
+                StageOutput::Shuffle { partitions: 2, combine: Some(_) }
+            ),
+            "cogroup shuffles into the downstream reduce with its map-side combine"
+        );
+        assert!(matches!(plan.stages[3].compute, StageCompute::DynReduce { .. }));
+        assert_eq!(plan.stages[3].parents, vec![2]);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn shared_sublineage_plans_once_and_fans_out() {
+        // base feeds two different reduces: one scan stage, two edges.
+        let base = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1)));
+        let a = base.reduce_by_key(4, |a, _| a);
+        let b = base.reduce_by_key(4, |_, b| b);
+        let rdd = a.join(&b, 3);
+        let plan = lower(&rdd, Action::Collect, &|_, _| fake_splits(5));
+        let text = plan.explain();
+        assert_eq!(plan.stages.len(), 4, "one shared scan, two reduces, one join:\n{text}");
+        assert!(matches!(plan.stages[0].compute, StageCompute::DynScan { .. }));
+        assert_eq!(plan.children(0), vec![1, 2], "the scan's shuffle fans out on two edges");
+        assert!(
+            matches!(plan.stages[0].output, StageOutput::Shuffle { combine: None, .. }),
+            "a shared stream ships raw records (map-side combine is per-consumer)"
+        );
+        assert_eq!(plan.stages[3].parents, vec![1, 2]);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn shared_sublineage_with_different_partition_counts_plans_twice() {
+        let base = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1)));
+        let a = base.reduce_by_key(4, |a, _| a);
+        let b = base.reduce_by_key(5, |a, _| a);
+        let plan = lower(&a.join(&b, 3), Action::Collect, &|_, _| fake_splits(2));
+        // Partition counts differ, so the scan cannot share one shuffle.
+        assert_eq!(plan.stages.len(), 5, "{}", plan.explain());
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn self_cogroup_duplicates_the_top_stage_but_shares_below() {
+        let base = Rdd::text_file("b", "p")
+            .map(|v| Value::pair(v, Value::I64(1)))
+            .reduce_by_key(4, |a, _| a);
+        let plan = lower(&base.cogroup(&base, 4), Action::Collect, &|_, _| fake_splits(2));
+        // scan (shared), reduce, duplicate reduce, cogroup.
+        assert_eq!(plan.stages.len(), 4, "{}", plan.explain());
+        assert_eq!(plan.children(0), vec![1, 2], "the scan below the self-cogroup IS shared");
+        let cg = &plan.stages[3];
+        assert_eq!(cg.parents, vec![1, 2], "no duplicate parent edge");
+        plan.validate().unwrap();
     }
 
     fn add_combine() -> CombineFn {
@@ -694,29 +934,11 @@ mod tests {
     }
 
     #[test]
-    fn join_plan_is_a_two_scan_diamond() {
-        let plan = build_join_plan(
-            UnionBranch { ops: Vec::new(), splits: fake_splits(3) },
-            UnionBranch { ops: Vec::new(), splits: fake_splits(1) },
-            4,
-            Vec::new(),
-            Action::Collect,
-        );
-        assert_eq!(plan.stages.len(), 3);
-        assert!(matches!(plan.stages[2].compute, StageCompute::DynCoGroup { .. }));
-        assert_eq!(plan.stages[2].parents, vec![0, 1]);
-        plan.validate().unwrap();
-        let text = plan.explain();
-        assert!(text.contains("DynCoGroup"), "{text}");
-        assert!(text.contains("<- s0, s1"), "{text}");
-    }
-
-    #[test]
-    fn dyn_plan_lowers_cogroup_lineage_through_join_plan() {
+    fn join_lineage_lowers_to_a_two_scan_diamond() {
         let left = Rdd::text_file("b", "l/").map(|v| v);
         let right = Rdd::text_file("b", "r/");
         let rdd = left.join(&right, 4);
-        let plan = build_dyn_plan(&rdd, Action::Collect, |_, prefix| {
+        let plan = lower(&rdd, Action::Collect, &|_, prefix| {
             fake_splits(if prefix == "l/" { 3 } else { 2 })
         });
         assert_eq!(plan.stages.len(), 3);
@@ -726,7 +948,11 @@ mod tests {
             panic!("join lowers to a cogroup stage: {:?}", plan.stages[2].compute)
         };
         assert_eq!(post_ops.len(), 1, "the join's cross-product flatMap");
+        assert_eq!(plan.stages[2].parents, vec![0, 1]);
         plan.validate().unwrap();
+        let text = plan.explain();
+        assert!(text.contains("DynCoGroup"), "{text}");
+        assert!(text.contains("<- s0, s1"), "{text}");
     }
 
     #[test]
@@ -753,7 +979,7 @@ mod tests {
         // Forward edge: parent id >= own id.
         plan.stages[1].parents = vec![1];
         assert!(plan.validate().is_err());
-        // Duplicate parent edge (would double-decrement queue refcounts).
+        // Duplicate parent edge (two readers on one edge's queues).
         plan.stages[1].parents = vec![0, 0];
         assert!(plan.validate().is_err());
         // Partition mismatch.

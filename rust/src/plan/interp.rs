@@ -1,0 +1,181 @@
+//! A single-threaded, in-process interpreter over [`Rdd`] lineages —
+//! the *reference semantics* of the generic API.
+//!
+//! Where [`crate::plan::lower`] compiles a lineage to a distributed
+//! stage DAG (shuffles, queues, retries, dedup), this module just walks
+//! the same node graph and computes the answer directly. The
+//! randomized-lineage property tests execute every generated lineage
+//! both ways and require the results to match exactly, on every shuffle
+//! backend and under both schedulers — so the interpreter is the oracle
+//! that pins what "correct" means for arbitrary operator trees.
+//!
+//! Determinism notes (matching the executor's contracts):
+//! * `reduce_by_key` folds values in arrival order; engine and
+//!   interpreter only agree when the combine is associative and
+//!   commutative — the same requirement Spark places on `reduceByKey`.
+//! * each `cogroup` side is sorted into the `Value::total_cmp` total
+//!   order, exactly as the executor sorts per-edge value lists (queue
+//!   arrival order across producers is racy).
+//! * `collect` output is compared order-insensitively; the driver sorts
+//!   merged values the same way ([`interpret`] returns them sorted).
+
+use crate::compute::value::Value;
+use crate::plan::rdd::{DynOp, Rdd, RddNode};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+/// Evaluate a lineage against in-memory sources: `lines(bucket, prefix)`
+/// returns the text lines a `text_file` of that source would read.
+/// Returns the record stream the lineage produces, sorted into the
+/// deterministic `total_cmp` order (the same order `collect` reports).
+pub fn interpret(rdd: &Rdd, lines: &dyn Fn(&str, &str) -> Vec<String>) -> Vec<Value> {
+    let mut memo: HashMap<usize, Vec<Value>> = HashMap::new();
+    let mut out = eval(rdd, lines, &mut memo);
+    out.sort_by(|a, b| a.total_cmp(b));
+    out
+}
+
+/// Number of records the lineage produces (the `count` action's oracle).
+pub fn interpret_count(rdd: &Rdd, lines: &dyn Fn(&str, &str) -> Vec<String>) -> u64 {
+    let mut memo: HashMap<usize, Vec<Value>> = HashMap::new();
+    eval(rdd, lines, &mut memo).len() as u64
+}
+
+/// Recursive evaluation, memoized on node identity so shared
+/// sub-lineages (diamonds) evaluate once — mirroring the compiler's
+/// stage sharing, and keeping deep DAGs linear-time.
+fn eval(
+    rdd: &Rdd,
+    lines: &dyn Fn(&str, &str) -> Vec<String>,
+    memo: &mut HashMap<usize, Vec<Value>>,
+) -> Vec<Value> {
+    let key = Arc::as_ptr(&rdd.node) as *const () as usize;
+    if let Some(cached) = memo.get(&key) {
+        return cached.clone();
+    }
+    let result = match &*rdd.node {
+        RddNode::TextFile { bucket, prefix } => {
+            lines(bucket, prefix).into_iter().map(Value::Str).collect()
+        }
+        RddNode::Narrow { parent, op } => {
+            let input = eval(parent, lines, memo);
+            let mut out = Vec::with_capacity(input.len());
+            let ops = std::slice::from_ref(op);
+            for v in input {
+                DynOp::apply_chain(ops, v, &mut out);
+            }
+            out
+        }
+        RddNode::ReduceByKey { parent, combine, .. } => {
+            let input = eval(parent, lines, memo);
+            let mut agg: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+            for pair in input {
+                let kb = pair.key().encode();
+                let val = pair.val().clone();
+                match agg.remove(&kb) {
+                    Some(prev) => {
+                        agg.insert(kb, combine(prev, val));
+                    }
+                    None => {
+                        agg.insert(kb, val);
+                    }
+                }
+            }
+            agg.into_iter()
+                .map(|(kb, v)| {
+                    let (k, _) = Value::decode(&kb).expect("round-trips its own encoding");
+                    Value::pair(k, v)
+                })
+                .collect()
+        }
+        RddNode::CoGroup { left, right, .. } => {
+            let l = eval(left, lines, memo);
+            let r = eval(right, lines, memo);
+            let mut groups: BTreeMap<Vec<u8>, [Vec<Value>; 2]> = BTreeMap::new();
+            for (side, input) in [(0usize, l), (1usize, r)] {
+                for pair in input {
+                    let kb = pair.key().encode();
+                    groups.entry(kb).or_default()[side].push(pair.val().clone());
+                }
+            }
+            groups
+                .into_iter()
+                .map(|(kb, mut sides)| {
+                    let (k, _) = Value::decode(&kb).expect("round-trips its own encoding");
+                    for side in &mut sides {
+                        side.sort_by(|a, b| a.total_cmp(b));
+                    }
+                    Value::pair(
+                        k,
+                        Value::List(sides.into_iter().map(Value::List).collect()),
+                    )
+                })
+                .collect()
+        }
+    };
+    memo.insert(key, result.clone());
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src() -> impl Fn(&str, &str) -> Vec<String> {
+        |_: &str, prefix: &str| match prefix {
+            "l/" => vec!["aa".into(), "bbb".into(), "cc".into()],
+            "r/" => vec!["x".into(), "yyy".into()],
+            _ => Vec::new(),
+        }
+    }
+
+    fn pairify(rdd: &Rdd) -> Rdd {
+        // (len, 1) pairs.
+        rdd.map(|v| {
+            let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+            Value::pair(Value::I64(len), Value::I64(1))
+        })
+    }
+
+    #[test]
+    fn narrow_and_reduce() {
+        let rdd = pairify(&Rdd::text_file("b", "l/")).reduce_by_key(4, |a, b| {
+            Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+        });
+        let out = interpret(&rdd, &src());
+        // lengths: 2, 3, 2 -> {2: 2, 3: 1}
+        assert_eq!(
+            out,
+            vec![
+                Value::pair(Value::I64(2), Value::I64(2)),
+                Value::pair(Value::I64(3), Value::I64(1)),
+            ]
+        );
+        assert_eq!(interpret_count(&rdd, &src()), 2);
+    }
+
+    #[test]
+    fn cogroup_groups_per_side_sorted() {
+        let l = pairify(&Rdd::text_file("b", "l/"));
+        let r = pairify(&Rdd::text_file("b", "r/"));
+        let out = interpret(&l.cogroup(&r, 2), &src());
+        // keys: 2 (left only x2), 3 (left 1, right 1), 1 (right only).
+        assert_eq!(out.len(), 3);
+        let key3 = out
+            .iter()
+            .find(|v| v.key().as_i64() == Some(3))
+            .expect("key 3 present");
+        let Value::List(sides) = key3.val() else { panic!("{key3:?}") };
+        assert_eq!(sides.len(), 2);
+    }
+
+    #[test]
+    fn shared_nodes_evaluate_once_but_correctly() {
+        let base = pairify(&Rdd::text_file("b", "l/"));
+        let a = base.reduce_by_key(2, |a, _| a);
+        let b = base.reduce_by_key(2, |_, b| b);
+        let joined = a.join(&b, 2);
+        let out = interpret(&joined, &src());
+        assert_eq!(out.len(), 2, "one joined record per distinct length key: {out:?}");
+    }
+}

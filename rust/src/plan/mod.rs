@@ -1,27 +1,36 @@
 //! The plan layer: RDD lineage → physical plan → stage DAG → tasks.
 //!
 //! Mirrors the Spark machinery Flint plugs into (§III of the paper): a
-//! driver program builds an RDD lineage; the DAG scheduler cuts it into
+//! driver program builds an RDD lineage against a session
+//! (`exec::FlintContext`); the general compiler [`lower`] cuts it into
 //! stages at wide (shuffle) dependencies; each stage becomes a set of
-//! tasks — one per input split or shuffle partition. Unlike the original
-//! serial driver, stages form a true **DAG**: each stage carries
-//! explicit parent edges, multi-parent stages (unions/cogroups) are
-//! expressible, and the engine's scheduler decides per run whether to
-//! execute with hard barriers (the Qubole-style S3 backend) or
-//! *pipelined* — launching consumers while their producers still flush,
-//! the paper's SQS long-polling semantics. Flint "only needs to know
-//! about stages and tasks", and so does everything downstream of this
-//! module.
+//! tasks — one per input split or shuffle partition. There is no
+//! per-shape lowering: `lower` recurses over *any* lineage graph —
+//! arbitrary interleavings of narrow ops, `reduce_by_key`, and
+//! `cogroup`/`join` (including reduceByKey downstream of a cogroup),
+//! multi-way diamonds, and shared sub-lineages, which plan one stage and
+//! fan their shuffle out on multiple DAG edges. Stages form a true
+//! **DAG**: each stage carries explicit parent edges, and the engine's
+//! scheduler decides per run whether to execute with hard barriers (the
+//! Qubole-style S3 backend) or *pipelined* — launching consumers while
+//! their producers still flush, the paper's SQS long-polling semantics.
+//! Flint "only needs to know about stages and tasks", and so does
+//! everything downstream of this module.
+//!
+//! [`interp`] is the reference semantics: a single-threaded interpreter
+//! over the same lineage graph, used as the oracle the distributed
+//! execution is tested against.
 
 pub mod dag;
+pub mod interp;
 pub mod rdd;
 pub mod task;
 
 pub use dag::{
-    build_join_plan, build_kernel_join_plan, build_union_plan, Action, PhysicalPlan, Stage,
+    build_kernel_join_plan, build_union_plan, lower, Action, ActionOut, PhysicalPlan, Stage,
     StageCompute, StageInput, StageOutput, UnionBranch,
 };
-pub use rdd::{DynOp, Rdd};
+pub use rdd::{DynOp, Rdd, SessionBinding};
 pub use task::{InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
 
 use crate::compute::queries::QueryId;

@@ -3,6 +3,24 @@
 //! (the paper: "since Flint is a Spark execution engine, it supports
 //! arbitrary RDD transformations").
 //!
+//! Lineages are built lazily: transformations (`map`, `filter`,
+//! `flat_map`, `reduce_by_key`, `cogroup`, the `join` family) only grow
+//! an immutable node graph. Actions (`collect`, `count`, `reduce`,
+//! `take`, `save_as_text_file`) hand the lineage to the general
+//! compiler [`crate::plan::lower`], which cuts it into a stage DAG at
+//! wide dependencies — *any* interleaving of narrow and wide ops is
+//! planned, including reduceByKey downstream of a cogroup and diamonds
+//! that share a sub-lineage — and the bound session executes the plan.
+//! [`Rdd::explain`] renders the compiled DAG without running it.
+//!
+//! An `Rdd` is *bound to a session*: [`crate::exec::FlintContext`]
+//! installs a [`SessionBinding`] when it creates sources, and every
+//! transformation threads the binding through, so `rdd.collect()` needs
+//! no engine parameter — exactly the PySpark driver experience. Lineages
+//! built with the free [`Rdd::text_file`] are unbound (useful for
+//! engine-agnostic cross-checks via `FlintContext::collect`); calling an
+//! action on them is an error, not a panic.
+//!
 //! The benchmarked queries use the typed kernel path (`dag.rs`); this
 //! path is exercised by `examples/quickstart.rs` and the generic-plan
 //! integration tests.
@@ -14,6 +32,9 @@
 //! payload-size *accounting* (and the 6 MB limit machinery) is preserved.
 
 use crate::compute::value::Value;
+use crate::plan::dag::{self, Action, ActionOut, PhysicalPlan};
+use crate::plan::task::InputSplit;
+use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 pub type MapFn = Arc<dyn Fn(Value) -> Value + Send + Sync>;
@@ -52,9 +73,17 @@ impl DynOp {
     }
 
     /// Estimated serialized size of this op's "code" — stands in for the
-    /// pickled closure bytes in payload accounting.
+    /// pickled closure bytes in payload accounting. Sized per op kind
+    /// (a pickled flatMap generator closes over more than a predicate
+    /// does); a stage's chain sums these, so a long chain grows the
+    /// payload linearly and eventually trips the 6 MB limit machinery's
+    /// S3 spill path exactly like a fat real closure would.
     pub fn code_bytes(&self) -> u64 {
-        2048
+        match self {
+            DynOp::Map(_) => 1_792,
+            DynOp::Filter(_) => 1_024,
+            DynOp::FlatMap(_) => 2_560,
+        }
     }
 }
 
@@ -83,10 +112,26 @@ pub enum RddNode {
     CoGroup { left: Rdd, right: Rdd, partitions: usize },
 }
 
+/// What a session installs on the `Rdd`s it creates: how to resolve a
+/// source's input splits and how to execute a compiled plan. Implemented
+/// by `exec::FlintContext` for both the serverless engine and the
+/// cluster baselines.
+pub trait SessionBinding: Send + Sync {
+    /// Input splits for a `text_file` source (typically an object-store
+    /// listing of `bucket/prefix`).
+    fn input_splits(&self, bucket: &str, prefix: &str) -> Vec<InputSplit>;
+    /// Execute a compiled physical plan, returning the action's merged
+    /// output.
+    fn execute(&self, plan: &PhysicalPlan) -> Result<ActionOut>;
+}
+
 /// A handle to a lineage node (cheap to clone; lineage is immutable).
+/// Carries the session binding installed by the `FlintContext` that
+/// created its source, so actions execute without an engine parameter.
 #[derive(Clone)]
 pub struct Rdd {
     pub node: Arc<RddNode>,
+    session: Option<Arc<dyn SessionBinding>>,
 }
 
 impl std::fmt::Debug for Rdd {
@@ -105,38 +150,40 @@ impl std::fmt::Debug for Rdd {
 }
 
 impl Rdd {
-    /// `sc.textFile("s3://bucket/prefix")`.
+    /// `sc.textFile("s3://bucket/prefix")`, unbound. Prefer
+    /// `FlintContext::text_file`, which binds the result to a session so
+    /// actions work; unbound lineages are for engine-agnostic
+    /// cross-checks (`FlintContext::collect` runs them on any context).
     pub fn text_file(bucket: &str, prefix: &str) -> Rdd {
         Rdd {
             node: Arc::new(RddNode::TextFile {
                 bucket: bucket.to_string(),
                 prefix: prefix.to_string(),
             }),
+            session: None,
         }
+    }
+
+    /// Install a session binding (used by `FlintContext::text_file`).
+    pub fn with_session(mut self, session: Arc<dyn SessionBinding>) -> Rdd {
+        self.session = Some(session);
+        self
+    }
+
+    fn derive(&self, node: RddNode) -> Rdd {
+        Rdd { node: Arc::new(node), session: self.session.clone() }
     }
 
     pub fn map(&self, f: impl Fn(Value) -> Value + Send + Sync + 'static) -> Rdd {
-        Rdd {
-            node: Arc::new(RddNode::Narrow { parent: self.clone(), op: DynOp::Map(Arc::new(f)) }),
-        }
+        self.derive(RddNode::Narrow { parent: self.clone(), op: DynOp::Map(Arc::new(f)) })
     }
 
     pub fn filter(&self, f: impl Fn(&Value) -> bool + Send + Sync + 'static) -> Rdd {
-        Rdd {
-            node: Arc::new(RddNode::Narrow {
-                parent: self.clone(),
-                op: DynOp::Filter(Arc::new(f)),
-            }),
-        }
+        self.derive(RddNode::Narrow { parent: self.clone(), op: DynOp::Filter(Arc::new(f)) })
     }
 
     pub fn flat_map(&self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Rdd {
-        Rdd {
-            node: Arc::new(RddNode::Narrow {
-                parent: self.clone(),
-                op: DynOp::FlatMap(Arc::new(f)),
-            }),
-        }
+        self.derive(RddNode::Narrow { parent: self.clone(), op: DynOp::FlatMap(Arc::new(f)) })
     }
 
     /// `rdd.reduceByKey(combine, numPartitions)` — records must be pairs.
@@ -146,13 +193,11 @@ impl Rdd {
         combine: impl Fn(Value, Value) -> Value + Send + Sync + 'static,
     ) -> Rdd {
         assert!(partitions > 0, "reduceByKey needs at least one partition");
-        Rdd {
-            node: Arc::new(RddNode::ReduceByKey {
-                parent: self.clone(),
-                partitions,
-                combine: Arc::new(combine),
-            }),
-        }
+        self.derive(RddNode::ReduceByKey {
+            parent: self.clone(),
+            partitions,
+            combine: Arc::new(combine),
+        })
     }
 
     /// `a.cogroup(b, numPartitions)` — both sides must emit pairs. Each
@@ -162,135 +207,156 @@ impl Rdd {
     /// sorts within each side).
     pub fn cogroup(&self, other: &Rdd, partitions: usize) -> Rdd {
         assert!(partitions > 0, "cogroup needs at least one partition");
+        if let (Some(a), Some(b)) = (&self.session, &other.session) {
+            // Two different sessions would silently resolve the right
+            // side's source in the wrong environment (an empty listing
+            // scans nothing) — refuse loudly instead.
+            assert!(
+                std::ptr::eq(Arc::as_ptr(a) as *const (), Arc::as_ptr(b) as *const ()),
+                "cogroup/join across two different FlintContext sessions: \
+                 build both sides from the same context"
+            );
+        }
+        let session = self.session.clone().or_else(|| other.session.clone());
         Rdd {
             node: Arc::new(RddNode::CoGroup {
                 left: self.clone(),
                 right: other.clone(),
                 partitions,
             }),
+            session,
         }
     }
 
-    /// `a.join(b, numPartitions)` — inner equi-join on the pair key:
-    /// cogroup plus the per-key cross product, yielding
-    /// `(key, (left_value, right_value))` records.
-    pub fn join(&self, other: &Rdd, partitions: usize) -> Rdd {
-        self.cogroup(other, partitions).flat_map(|v| {
+    /// Shared lowering for the join family: cogroup plus a per-key
+    /// expansion flatMap. `keep_left`/`keep_right` select which
+    /// unmatched sides survive, padded with `Value::Null` (PySpark's
+    /// `None`).
+    fn join_with(&self, other: &Rdd, partitions: usize, keep_left: bool, keep_right: bool) -> Rdd {
+        self.cogroup(other, partitions).flat_map(move |v| {
             let key = v.key().clone();
             let Value::List(sides) = v.val() else { return Vec::new() };
             let (Some(Value::List(l)), Some(Value::List(r))) = (sides.first(), sides.get(1))
             else {
                 return Vec::new();
             };
-            let mut out = Vec::with_capacity(l.len() * r.len());
-            for lv in l {
-                for rv in r {
-                    out.push(Value::pair(key.clone(), Value::pair(lv.clone(), rv.clone())));
+            let mut out = Vec::new();
+            match (l.is_empty(), r.is_empty()) {
+                (false, false) => {
+                    out.reserve(l.len() * r.len());
+                    for lv in l {
+                        for rv in r {
+                            out.push(Value::pair(
+                                key.clone(),
+                                Value::pair(lv.clone(), rv.clone()),
+                            ));
+                        }
+                    }
                 }
+                (false, true) if keep_left => {
+                    for lv in l {
+                        out.push(Value::pair(key.clone(), Value::pair(lv.clone(), Value::Null)));
+                    }
+                }
+                (true, false) if keep_right => {
+                    for rv in r {
+                        out.push(Value::pair(key.clone(), Value::pair(Value::Null, rv.clone())));
+                    }
+                }
+                _ => {}
             }
             out
         })
     }
 
-    /// When the lineage is `left.cogroup(right, p)` followed only by
-    /// narrow ops, return `(left, right, partitions, post_ops)` — the
-    /// shape `plan::build_join_plan` lowers. Returns `None` for plain
-    /// linear lineages (no cogroup anywhere); panics on shapes the
-    /// planner does not support yet (a shuffle downstream of a cogroup).
-    pub fn cogroup_shape(&self) -> Option<(Rdd, Rdd, usize, Vec<DynOp>)> {
-        let mut post: Vec<DynOp> = Vec::new();
-        let mut node = self.clone();
-        loop {
-            let next = match &*node.node {
-                RddNode::TextFile { .. } => return None,
-                RddNode::Narrow { parent, op } => {
-                    post.push(op.clone());
-                    parent.clone()
-                }
-                RddNode::ReduceByKey { parent, .. } => {
-                    assert!(
-                        parent.cogroup_shape().is_none(),
-                        "a reduceByKey downstream of cogroup is not supported yet: \
-                         aggregate inside the cogroup's post ops or collect and fold"
-                    );
-                    return None;
-                }
-                RddNode::CoGroup { left, right, partitions } => {
-                    post.reverse();
-                    return Some((left.clone(), right.clone(), *partitions, post));
-                }
-            };
-            node = next;
-        }
+    /// `a.join(b, numPartitions)` — inner equi-join on the pair key:
+    /// cogroup plus the per-key cross product, yielding
+    /// `(key, (left_value, right_value))` records.
+    pub fn join(&self, other: &Rdd, partitions: usize) -> Rdd {
+        self.join_with(other, partitions, false, false)
     }
 
-    /// Walk the lineage root-ward, returning (source, segments) where
-    /// each segment is the narrow op chain between wide deps, and a
-    /// segment's `shuffle` is the wide dep *terminating* it (feeding the
-    /// next segment).
-    pub fn linearize(&self) -> LinearizedLineage {
-        enum Event {
-            Op(DynOp),
-            Shuffle(usize, CombineFn),
-        }
-        // Collect action-side-first, then replay source-first.
-        let mut events: Vec<Event> = Vec::new();
-        let mut node = self.clone();
-        let source;
-        loop {
-            match &*node.node {
-                RddNode::TextFile { bucket, prefix } => {
-                    source = (bucket.clone(), prefix.clone());
-                    break;
-                }
-                RddNode::Narrow { parent, op } => {
-                    events.push(Event::Op(op.clone()));
-                    node = parent.clone();
-                }
-                RddNode::ReduceByKey { parent, partitions, combine } => {
-                    events.push(Event::Shuffle(*partitions, combine.clone()));
-                    node = parent.clone();
-                }
-                RddNode::CoGroup { .. } => {
-                    panic!(
-                        "cogroup lineages are planned via Rdd::cogroup_shape / \
-                         plan::build_join_plan, not linearize"
-                    )
-                }
-            }
-        }
-        events.reverse();
-
-        let mut segments: Vec<LineageSegment> = Vec::new();
-        let mut current_ops: Vec<DynOp> = Vec::new();
-        for ev in events {
-            match ev {
-                Event::Op(op) => current_ops.push(op),
-                Event::Shuffle(partitions, combine) => {
-                    segments.push(LineageSegment {
-                        ops: std::mem::take(&mut current_ops),
-                        shuffle: Some((partitions, combine)),
-                    });
-                }
-            }
-        }
-        segments.push(LineageSegment { ops: current_ops, shuffle: None });
-        LinearizedLineage { source, segments }
+    /// `a.leftOuterJoin(b)`: every left record survives; keys with no
+    /// right match yield `(key, (left_value, Null))`.
+    pub fn left_outer_join(&self, other: &Rdd, partitions: usize) -> Rdd {
+        self.join_with(other, partitions, true, false)
     }
-}
 
-/// One narrow chain, optionally ending in a shuffle.
-pub struct LineageSegment {
-    pub ops: Vec<DynOp>,
-    /// `Some((partitions, combine))` when the segment ends at a
-    /// reduceByKey; the *following* segment starts from its output.
-    pub shuffle: Option<(usize, CombineFn)>,
-}
+    /// `a.rightOuterJoin(b)`: every right record survives; keys with no
+    /// left match yield `(key, (Null, right_value))`.
+    pub fn right_outer_join(&self, other: &Rdd, partitions: usize) -> Rdd {
+        self.join_with(other, partitions, false, true)
+    }
 
-/// Lineage flattened into source + segments (source-first order).
-pub struct LinearizedLineage {
-    pub source: (String, String),
-    pub segments: Vec<LineageSegment>,
+    /// `a.fullOuterJoin(b)`: both unmatched sides survive, Null-padded.
+    pub fn full_outer_join(&self, other: &Rdd, partitions: usize) -> Rdd {
+        self.join_with(other, partitions, true, true)
+    }
+
+    // -- actions --------------------------------------------------------
+
+    fn session(&self) -> Result<&Arc<dyn SessionBinding>> {
+        self.session.as_ref().ok_or_else(|| {
+            anyhow!(
+                "this Rdd is not bound to a session; build it from \
+                 FlintContext::text_file (or run it with FlintContext::collect)"
+            )
+        })
+    }
+
+    /// Compile this lineage for `action` with the bound session's split
+    /// resolution (the lazy→physical step every action takes).
+    pub fn lower(&self, action: Action) -> Result<PhysicalPlan> {
+        let session = self.session()?;
+        Ok(dag::lower(self, action, &|bucket, prefix| {
+            session.input_splits(bucket, prefix)
+        }))
+    }
+
+    /// `rdd.collect()`: execute and return all records (in the
+    /// deterministic `Value::total_cmp` order).
+    pub fn collect(&self) -> Result<Vec<Value>> {
+        self.session()?.execute(&self.lower(Action::Collect)?)?.into_values()
+    }
+
+    /// `rdd.count()`: number of records the lineage produces.
+    pub fn count(&self) -> Result<u64> {
+        self.session()?.execute(&self.lower(Action::Count)?)?.into_count()
+    }
+
+    /// `rdd.reduce(f)`: fold all records with `f` at the driver (`None`
+    /// for an empty result). `f` should be associative and commutative —
+    /// records arrive in the deterministic collect order, not input
+    /// order.
+    pub fn reduce(&self, f: impl Fn(Value, Value) -> Value) -> Result<Option<Value>> {
+        Ok(self.collect()?.into_iter().reduce(f))
+    }
+
+    /// `rdd.take(n)`: the first `n` records of the deterministic collect
+    /// order. (A serverless engine has no partition-at-a-time incremental
+    /// fetch: the plan runs fully, then truncates at the driver.)
+    pub fn take(&self, n: usize) -> Result<Vec<Value>> {
+        let mut values = self.collect()?;
+        values.truncate(n);
+        Ok(values)
+    }
+
+    /// `rdd.saveAsTextFile(...)`: write one object per final-stage task
+    /// under `bucket/prefix`; returns the object count.
+    pub fn save_as_text_file(&self, bucket: &str, prefix: &str) -> Result<u64> {
+        let action = Action::SaveAsText { bucket: bucket.to_string(), prefix: prefix.to_string() };
+        self.session()?.execute(&self.lower(action)?)?.into_saved()
+    }
+
+    /// Render the stage DAG this lineage compiles to (without running
+    /// it). Unbound lineages still explain, with unresolved (zero-split)
+    /// sources.
+    pub fn explain(&self) -> String {
+        match self.lower(Action::Collect) {
+            Ok(plan) => plan.explain(),
+            Err(_) => dag::lower(self, Action::Collect, &|_, _| Vec::new()).explain(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -318,92 +384,112 @@ mod tests {
     }
 
     #[test]
-    fn linearize_splits_at_shuffles() {
-        let rdd = Rdd::text_file("b", "p")
-            .map(|v| v)
-            .filter(|_| true)
-            .reduce_by_key(8, |a, _| a)
-            .map(|v| v);
-        let lin = rdd.linearize();
-        assert_eq!(lin.source, ("b".to_string(), "p".to_string()));
-        assert_eq!(lin.segments.len(), 2);
-        assert_eq!(lin.segments[0].ops.len(), 2, "map+filter before shuffle");
-        assert_eq!(lin.segments[0].shuffle.as_ref().unwrap().0, 8);
-        assert_eq!(lin.segments[1].ops.len(), 1, "map after shuffle");
-        assert!(lin.segments[1].shuffle.is_none());
+    fn code_bytes_sized_per_op_kind() {
+        let map = DynOp::Map(Arc::new(|v| v));
+        let filter = DynOp::Filter(Arc::new(|_| true));
+        let flat = DynOp::FlatMap(Arc::new(|v| vec![v]));
+        // A flatMap closure pickles bigger than a map, which pickles
+        // bigger than a bare predicate — and none of them are the old
+        // flat 2048.
+        assert!(flat.code_bytes() > map.code_bytes());
+        assert!(map.code_bytes() > filter.code_bytes());
+        // Chains account linearly: the payload machinery sums these.
+        let chain = [map, filter, flat];
+        let total: u64 = chain.iter().map(DynOp::code_bytes).sum();
+        assert_eq!(total, 1_792 + 1_024 + 2_560);
     }
 
-    #[test]
-    fn two_shuffles_three_segments() {
-        let rdd = Rdd::text_file("b", "p")
-            .map(|v| v)
-            .reduce_by_key(4, |a, _| a)
-            .reduce_by_key(2, |a, _| a);
-        let lin = rdd.linearize();
-        assert_eq!(lin.segments.len(), 3);
-        assert_eq!(lin.segments[0].shuffle.as_ref().unwrap().0, 4);
-        assert_eq!(lin.segments[1].shuffle.as_ref().unwrap().0, 2);
-        assert!(lin.segments[1].ops.is_empty());
+    /// Extract the expansion flatMap a join variant plants after its
+    /// cogroup, and run it over a synthetic cogroup record.
+    fn expand(joined: &Rdd, record: Value) -> Vec<Value> {
+        let RddNode::Narrow { parent, op } = &*joined.node else {
+            panic!("join is cogroup + flatMap: {joined:?}")
+        };
+        assert!(matches!(&*parent.node, RddNode::CoGroup { .. }), "{parent:?}");
+        let mut out = Vec::new();
+        DynOp::apply_chain(std::slice::from_ref(op), record, &mut out);
+        out
     }
 
-    #[test]
-    fn cogroup_shape_extracts_branches_and_post_ops() {
-        let left = Rdd::text_file("b", "l/").map(|v| v);
-        let right = Rdd::text_file("b", "r/");
-        let rdd = left.cogroup(&right, 4).map(|v| v).filter(|_| true);
-        let (l, r, parts, post) = rdd.cogroup_shape().expect("cogroup shape");
-        assert_eq!(parts, 4);
-        assert_eq!(post.len(), 2, "narrow ops after the cogroup, source-first");
-        assert!(matches!(post[0], DynOp::Map(_)));
-        assert!(matches!(post[1], DynOp::Filter(_)));
-        assert!(matches!(&*l.node, RddNode::Narrow { .. }));
-        assert!(matches!(&*r.node, RddNode::TextFile { .. }));
-        // Plain lineages have no cogroup shape.
-        assert!(Rdd::text_file("b", "p").map(|v| v).cogroup_shape().is_none());
+    fn cogroup_record(key: i64, left: Vec<Value>, right: Vec<Value>) -> Value {
+        Value::pair(
+            Value::I64(key),
+            Value::List(vec![Value::List(left), Value::List(right)]),
+        )
     }
 
     #[test]
     fn join_post_op_expands_cross_product() {
-        // join = cogroup + flatMap; feed the flatMap a synthetic cogroup
-        // record and check the inner-join expansion.
         let joined = Rdd::text_file("b", "l/").join(&Rdd::text_file("b", "r/"), 2);
-        let (_, _, _, post) = joined.cogroup_shape().expect("join is a cogroup shape");
-        assert_eq!(post.len(), 1);
-        let record = Value::pair(
-            Value::I64(7),
-            Value::List(vec![
-                Value::List(vec![Value::I64(1), Value::I64(2)]),
-                Value::List(vec![Value::str("a")]),
-            ]),
-        );
-        let mut out = Vec::new();
-        DynOp::apply_chain(&post, record, &mut out);
+        let record = cogroup_record(7, vec![v_i64(1), v_i64(2)], vec![Value::str("a")]);
+        let out = expand(&joined, record);
         assert_eq!(out.len(), 2, "2 left x 1 right");
-        assert_eq!(out[0], Value::pair(Value::I64(7), Value::pair(Value::I64(1), Value::str("a"))));
+        assert_eq!(out[0], Value::pair(v_i64(7), Value::pair(v_i64(1), Value::str("a"))));
         // An empty side joins to nothing (inner join).
-        let empty = Value::pair(
-            Value::I64(8),
-            Value::List(vec![Value::List(vec![Value::I64(1)]), Value::List(Vec::new())]),
+        let empty = cogroup_record(8, vec![v_i64(1)], Vec::new());
+        assert!(expand(&joined, empty).is_empty());
+    }
+
+    #[test]
+    fn outer_join_variants_pad_with_null() {
+        let l = Rdd::text_file("b", "l/");
+        let r = Rdd::text_file("b", "r/");
+        let left_only = || cogroup_record(1, vec![v_i64(10)], Vec::new());
+        let right_only = || cogroup_record(2, Vec::new(), vec![v_i64(20)]);
+        let both = || cogroup_record(3, vec![v_i64(10)], vec![v_i64(20)]);
+
+        let left = l.left_outer_join(&r, 2);
+        assert_eq!(
+            expand(&left, left_only()),
+            vec![Value::pair(v_i64(1), Value::pair(v_i64(10), Value::Null))]
         );
-        let mut none = Vec::new();
-        DynOp::apply_chain(&post, empty, &mut none);
-        assert!(none.is_empty());
+        assert!(expand(&left, right_only()).is_empty(), "left outer drops unmatched right");
+        assert_eq!(expand(&left, both()).len(), 1);
+
+        let right = l.right_outer_join(&r, 2);
+        assert!(expand(&right, left_only()).is_empty(), "right outer drops unmatched left");
+        assert_eq!(
+            expand(&right, right_only()),
+            vec![Value::pair(v_i64(2), Value::pair(Value::Null, v_i64(20)))]
+        );
+
+        let full = l.full_outer_join(&r, 2);
+        assert_eq!(expand(&full, left_only()).len(), 1);
+        assert_eq!(expand(&full, right_only()).len(), 1);
+        assert_eq!(
+            expand(&full, both()),
+            vec![Value::pair(v_i64(3), Value::pair(v_i64(10), v_i64(20)))]
+        );
     }
 
     #[test]
-    #[should_panic(expected = "not supported yet")]
-    fn reduce_by_key_after_cogroup_panics() {
-        let rdd = Rdd::text_file("b", "l/")
-            .cogroup(&Rdd::text_file("b", "r/"), 2)
-            .reduce_by_key(2, |a, _| a);
-        let _ = rdd.cogroup_shape();
-    }
-
-    #[test]
-    fn map_only_lineage_is_one_segment() {
+    fn unbound_actions_error_instead_of_running() {
         let rdd = Rdd::text_file("b", "p").map(|v| v);
-        let lin = rdd.linearize();
-        assert_eq!(lin.segments.len(), 1);
-        assert!(lin.segments[0].shuffle.is_none());
+        let err = rdd.collect().unwrap_err().to_string();
+        assert!(err.contains("not bound to a session"), "{err}");
+        assert!(rdd.count().is_err());
+        // explain still works (unresolved sources, zero tasks).
+        let text = rdd.explain();
+        assert!(text.contains("DynScan"), "{text}");
+    }
+
+    #[test]
+    fn transformations_thread_the_session_binding() {
+        struct Nop;
+        impl SessionBinding for Nop {
+            fn input_splits(&self, _: &str, _: &str) -> Vec<InputSplit> {
+                Vec::new()
+            }
+            fn execute(&self, _: &PhysicalPlan) -> Result<ActionOut> {
+                Ok(ActionOut::Count(42))
+            }
+        }
+        let bound = Rdd::text_file("b", "p").with_session(Arc::new(Nop));
+        let derived = bound.map(|v| v).filter(|_| true).reduce_by_key(2, |a, _| a);
+        assert_eq!(derived.count().unwrap(), 42, "binding survives transformations");
+        // cogroup picks up the binding from either side.
+        let unbound = Rdd::text_file("b", "q");
+        assert!(unbound.cogroup(&bound, 2).count().is_ok());
+        assert!(bound.cogroup(&unbound, 2).count().is_ok());
     }
 }

@@ -1,29 +1,43 @@
-//! The generic RDD path: arbitrary map/filter/flatMap/reduceByKey
-//! lineages over dynamic values — "Flint is a Spark execution engine, it
-//! supports arbitrary RDD transformations" (§V). The Q1 driver program
-//! from the paper's §IV is reproduced verbatim in structure here.
+//! The generic RDD path through the session API: arbitrary
+//! map/filter/flatMap/reduceByKey/cogroup lineages over dynamic values —
+//! "Flint is a Spark execution engine, it supports arbitrary RDD
+//! transformations" (§V). The Q1 driver program from the paper's §IV is
+//! reproduced verbatim in structure here, written against
+//! `FlintContext` — sources come from the context, actions run on the
+//! `Rdd` itself. The shapes the old per-shape planner could not express
+//! (reduceByKey downstream of a cogroup, shared-sublineage diamonds,
+//! outer joins) are held to the single-threaded interpreter oracle on
+//! every shuffle backend.
 
 use flint::compute::value::Value;
-use flint::config::FlintConfig;
+use flint::config::{FlintConfig, ShuffleBackend};
 use flint::data::schema::{TripRecord, GOLDMAN};
 use flint::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET, OUTPUT_BUCKET};
-use flint::exec::{ClusterEngine, ClusterMode, FlintEngine};
-use flint::plan::{Action, Rdd};
+use flint::exec::driver::{run_plan, ActionOut, RunParams};
+use flint::exec::executor::IoMode;
+use flint::exec::shuffle::{MemoryShuffle, Transport};
+use flint::exec::{ClusterMode, FlintContext};
+use flint::plan::{interp, Action, Rdd};
 use flint::services::SimEnv;
+use flint::simtime::ScheduleMode;
 
 const TRIPS: u64 = 15_000;
 
-fn setup() -> (SimEnv, Dataset) {
+fn cfg() -> FlintConfig {
     let mut c = FlintConfig::for_tests();
     c.data.object_bytes = 512 * 1024;
     c.flint.input_split_bytes = 256 * 1024;
     c.flint.use_pjrt = false;
-    let env = SimEnv::new(c);
+    c
+}
+
+fn setup() -> (SimEnv, Dataset) {
+    let env = SimEnv::new(cfg());
     let ds = generate_taxi_dataset(&env, "trips", TRIPS);
     (env, ds)
 }
 
-/// The paper's Q1, written against the generic API:
+/// The paper's Q1, written against the generic session API:
 /// ```python
 /// src.map(lambda x: x.split(','))
 ///    .filter(lambda x: inside(x, goldman))
@@ -31,8 +45,8 @@ fn setup() -> (SimEnv, Dataset) {
 ///    .reduceByKey(add, 30)
 ///    .collect()
 /// ```
-fn q1_lineage() -> Rdd {
-    Rdd::text_file(INPUT_BUCKET, "trips/")
+fn q1_lineage(sc: &FlintContext) -> Rdd {
+    sc.text_file(INPUT_BUCKET, "trips/")
         .map(|line| {
             // "x.split(',')" — parse the record; keep it as a value.
             let text = line.as_str().expect("text input").to_string();
@@ -85,8 +99,8 @@ fn collected_to_rows(values: Vec<Value>) -> Vec<(i64, i64)> {
 #[test]
 fn generic_q1_matches_kernel_oracle_on_flint() {
     let (env, ds) = setup();
-    let flint = FlintEngine::new(env.clone());
-    let values = flint::exec::flint::run_rdd_collect(&flint, &q1_lineage(), &ds).unwrap();
+    let sc = FlintContext::new(env.clone());
+    let values = q1_lineage(&sc).collect().unwrap();
     assert_eq!(collected_to_rows(values), q1_expected(&env, &ds));
 }
 
@@ -94,38 +108,58 @@ fn generic_q1_matches_kernel_oracle_on_flint() {
 fn generic_q1_matches_on_cluster_engines() {
     let (env, ds) = setup();
     let expect = q1_expected(&env, &ds);
+    // The cluster contexts run the SAME lineage (built unbound, executed
+    // per context) — the cross-engine check the session API is for.
+    let sc = FlintContext::new(env.clone());
+    let lineage = q1_lineage(&sc);
     for mode in [ClusterMode::Spark, ClusterMode::PySpark] {
-        let engine = ClusterEngine::new(env.clone(), mode);
-        let report = engine.run_rdd(&q1_lineage(), Action::Collect, &ds).unwrap();
-        // Cluster engines return via the report's generic path; re-collect
-        // through Flint for typed values instead, so just check the run
-        // completed with matching task structure.
+        let cluster = FlintContext::cluster(env.clone(), mode);
+        let values = cluster.collect(&lineage).unwrap();
+        assert_eq!(collected_to_rows(values), expect, "{mode:?}");
+        let report = cluster.run(&lineage, Action::Collect).unwrap();
         assert!(report.latency_s > 0.0);
         assert_eq!(report.stage_latencies.len(), 2, "{mode:?}");
     }
 }
 
 #[test]
-fn generic_count_action() {
-    let (env, ds) = setup();
-    let flint = FlintEngine::new(env.clone());
-    let rdd = Rdd::text_file(INPUT_BUCKET, "trips/").filter(|v| {
+fn generic_count_take_and_reduce_actions() {
+    let (env, _ds) = setup();
+    let sc = FlintContext::new(env.clone());
+    let rdd = sc.text_file(INPUT_BUCKET, "trips/").filter(|v| {
         // keep lines ending in an even digit — arbitrary user predicate
         v.as_str().map(|s| s.as_bytes().last().map(|b| b % 2 == 0).unwrap_or(false))
             .unwrap_or(false)
     });
-    let report = flint.run_rdd(&rdd, Action::Count, &ds).unwrap();
-    let flint::compute::queries::QueryResult::Count(n) = report.result else { panic!() };
+    let n = rdd.count().unwrap();
     assert!(n > 0 && n < TRIPS, "filter kept a strict subset: {n}");
+
+    // take: a prefix of the deterministic collect order.
+    let lens = sc
+        .text_file(INPUT_BUCKET, "trips/")
+        .map(|v| Value::I64(v.as_str().map(|s| s.len() as i64).unwrap_or(0)));
+    let four = lens.take(4).unwrap();
+    assert_eq!(four.len(), 4);
+    let all = lens.collect().unwrap();
+    assert_eq!(&all[..4], &four[..], "take is a prefix of collect");
+
+    // reduce: fold at the driver.
+    let total = lens
+        .reduce(|a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+        .unwrap()
+        .expect("non-empty");
+    let expect: i64 = all.iter().map(|v| v.as_i64().unwrap()).sum();
+    assert_eq!(total.as_i64().unwrap(), expect);
 }
 
 #[test]
 fn generic_flatmap_word_count_style() {
-    let (env, ds) = setup();
-    let flint = FlintEngine::new(env.clone());
+    let (env, _ds) = setup();
+    let sc = FlintContext::new(env);
     // Token count over the CSV: flatMap(split commas) -> (token_len, 1)
     // -> reduceByKey. A classic shape the engine must support.
-    let rdd = Rdd::text_file(INPUT_BUCKET, "trips/")
+    let rdd = sc
+        .text_file(INPUT_BUCKET, "trips/")
         .flat_map(|v| {
             v.as_str()
                 .map(|s| {
@@ -136,7 +170,7 @@ fn generic_flatmap_word_count_style() {
                 .unwrap_or_default()
         })
         .reduce_by_key(8, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
-    let values = flint::exec::flint::run_rdd_collect(&flint, &rdd, &ds).unwrap();
+    let values = rdd.collect().unwrap();
     let total: i64 = values.iter().map(|v| v.val().as_i64().unwrap()).sum();
     assert_eq!(
         total as u64,
@@ -147,39 +181,288 @@ fn generic_flatmap_word_count_style() {
 
 #[test]
 fn generic_save_as_text_file() {
-    let (env, ds) = setup();
-    let flint = FlintEngine::new(env.clone());
-    let rdd = Rdd::text_file(INPUT_BUCKET, "trips/")
-        .map(|v| Value::pair(Value::I64(v.as_str().map(|s| s.len() as i64).unwrap_or(0) % 7, ), Value::I64(1)))
+    let (env, _ds) = setup();
+    let sc = FlintContext::new(env.clone());
+    let rdd = sc
+        .text_file(INPUT_BUCKET, "trips/")
+        .map(|v| {
+            Value::pair(
+                Value::I64(v.as_str().map(|s| s.len() as i64).unwrap_or(0) % 7),
+                Value::I64(1),
+            )
+        })
         .reduce_by_key(4, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()));
-    let report = flint
-        .run_rdd(
-            &rdd,
-            Action::SaveAsText { bucket: OUTPUT_BUCKET.into(), prefix: "lenmod7".into() },
-            &ds,
-        )
-        .unwrap();
-    assert!(report.latency_s > 0.0);
+    let objects = rdd.save_as_text_file(OUTPUT_BUCKET, "lenmod7").unwrap();
+    assert_eq!(objects, 4, "one output object per reduce partition");
     let listed = env.s3().list(OUTPUT_BUCKET, "lenmod7/").unwrap();
-    assert_eq!(listed.len(), 4, "one output object per reduce partition");
+    assert_eq!(listed.len(), 4);
     let total_bytes: u64 = listed.iter().map(|(_, s)| s).sum();
     assert!(total_bytes > 0);
 }
 
 #[test]
 fn generic_path_under_duplicates_and_failures() {
-    let (env, ds) = {
-        let mut c = FlintConfig::for_tests();
-        c.data.object_bytes = 512 * 1024;
-        c.flint.input_split_bytes = 256 * 1024;
-        c.flint.use_pjrt = false;
-        c.sim.sqs_duplicate_prob = 0.2;
-        let env = SimEnv::new(c);
-        let ds = generate_taxi_dataset(&env, "trips", TRIPS);
-        (env, ds)
-    };
+    let mut c = cfg();
+    c.sim.sqs_duplicate_prob = 0.2;
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", TRIPS);
     env.failure().force_task_failure(0, 0, 0);
-    let flint = FlintEngine::new(env.clone());
-    let values = flint::exec::flint::run_rdd_collect(&flint, &q1_lineage(), &ds).unwrap();
+    let sc = FlintContext::new(env.clone());
+    let values = q1_lineage(&sc).collect().unwrap();
     assert_eq!(collected_to_rows(values), q1_expected(&env, &ds));
+}
+
+// ---------------------------------------------------------------------
+// Shapes the old per-shape planner could not express, held to the
+// interpreter oracle on all three backends under both schedulers.
+// ---------------------------------------------------------------------
+
+/// Small deterministic text sources written straight into simulated S3.
+fn seed_sources(env: &SimEnv) -> impl Fn(&str, &str) -> Vec<String> {
+    env.s3().create_bucket(INPUT_BUCKET);
+    for (prefix, objects) in source_data() {
+        for (i, lines) in objects.iter().enumerate() {
+            let body = format!("{}\n", lines.join("\n"));
+            env.s3()
+                .put_object(INPUT_BUCKET, &format!("{prefix}part-{i}"), body.into_bytes())
+                .unwrap();
+        }
+    }
+    |_: &str, prefix: &str| {
+        source_data()
+            .into_iter()
+            .find(|(p, _)| *p == prefix)
+            .map(|(_, objects)| objects.concat())
+            .unwrap_or_default()
+    }
+}
+
+fn source_data() -> Vec<(&'static str, Vec<Vec<String>>)> {
+    let mk = |n: usize, salt: u64| -> Vec<String> {
+        (0..n)
+            .map(|i| "x".repeat(1 + ((i as u64 * 7 + salt) % 23) as usize))
+            .collect()
+    };
+    vec![
+        ("ga/", vec![mk(40, 1), mk(37, 5)]),
+        ("gb/", vec![mk(29, 3)]),
+    ]
+}
+
+fn pairify(rdd: &Rdd) -> Rdd {
+    rdd.map(|v| {
+        let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+        Value::pair(Value::I64(len % 6), Value::I64(len))
+    })
+}
+
+fn add() -> impl Fn(Value, Value) -> Value + Send + Sync + Clone {
+    |a: Value, b: Value| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+}
+
+/// reduceByKey *downstream* of a cogroup — the lineage that used to
+/// panic "not supported yet" at the old `cogroup_shape`.
+fn reduce_after_cogroup_lineage(a: Rdd, b: Rdd) -> Rdd {
+    pairify(&a)
+        .cogroup(&pairify(&b), 4)
+        .flat_map(|v| {
+            // score each (key, [left, right]) and re-key by score % 3,
+            // so the cogroup feeds a further shuffle.
+            let Value::List(sides) = v.val() else { return Vec::new() };
+            let sum = |side: &Value| -> i64 {
+                let Value::List(vals) = side else { return 0 };
+                vals.iter().filter_map(Value::as_i64).sum()
+            };
+            let score = sum(&sides[0]) * 31 + sum(&sides[1]);
+            vec![Value::pair(Value::I64(score % 3), Value::I64(score))]
+        })
+        .reduce_by_key(2, add())
+}
+
+/// A diamond over a shared sub-lineage: `base` feeds two different
+/// reduces whose results join — the compiler must plan `base` once.
+fn shared_diamond_lineage(src: Rdd) -> Rdd {
+    let base = pairify(&src);
+    let sums = base.reduce_by_key(4, add());
+    let maxes = base.reduce_by_key(4, |a, b| {
+        Value::I64(a.as_i64().unwrap().max(b.as_i64().unwrap()))
+    });
+    sums.join(&maxes, 3)
+}
+
+/// Run `lineage` on every backend/scheduler combination and compare the
+/// collected values against the interpreter oracle, exactly.
+fn assert_matches_oracle_everywhere(
+    lineage_of: impl Fn(&FlintContext) -> Rdd,
+    expect_of: impl Fn(&dyn Fn(&str, &str) -> Vec<String>) -> Vec<Value>,
+) {
+    // Flint engine: sqs and s3 backends, barrier and pipelined.
+    for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
+        for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+            let mut c = cfg();
+            c.flint.shuffle_backend = backend;
+            c.flint.scheduler = sched;
+            c.sim.sqs_duplicate_prob = 0.15;
+            let env = SimEnv::new(c);
+            let lines = seed_sources(&env);
+            let sc = FlintContext::new(env.clone());
+            let got = lineage_of(&sc).collect().unwrap();
+            assert_eq!(got, expect_of(&lines), "{backend:?}/{sched:?}");
+            if backend == ShuffleBackend::Sqs {
+                assert_eq!(env.sqs().queue_names().len(), 0, "edge queues torn down");
+            }
+        }
+    }
+    // Memory backend: the cluster context (barrier), plus the same plan
+    // under the pipelined clock straight through the driver.
+    let env = SimEnv::new(cfg());
+    let lines = seed_sources(&env);
+    let cluster = FlintContext::cluster(env.clone(), ClusterMode::Spark);
+    let lineage = lineage_of(&cluster);
+    let got = lineage.collect().unwrap();
+    let expect = expect_of(&lines);
+    assert_eq!(got, expect, "memory/barrier");
+    let plan = cluster.lower(&lineage, Action::Collect);
+    let params = RunParams {
+        mode: IoMode::Spark,
+        transport: Transport::Memory(MemoryShuffle::new()),
+        slots: 16,
+        lambda: false,
+        host_parallelism: 4,
+        schedule: ScheduleMode::Pipelined,
+    };
+    let out = run_plan(&env, None, &plan, &params).unwrap();
+    let ActionOut::Values(got) = out.out else { panic!("collect produced {:?}", out.out) };
+    assert_eq!(got, expect, "memory/pipelined");
+}
+
+#[test]
+fn reduce_by_key_after_cogroup_matches_oracle_on_all_backends() {
+    assert_matches_oracle_everywhere(
+        |sc| {
+            reduce_after_cogroup_lineage(
+                sc.text_file(INPUT_BUCKET, "ga/"),
+                sc.text_file(INPUT_BUCKET, "gb/"),
+            )
+        },
+        |lines| {
+            let rdd = reduce_after_cogroup_lineage(
+                Rdd::text_file(INPUT_BUCKET, "ga/"),
+                Rdd::text_file(INPUT_BUCKET, "gb/"),
+            );
+            interp::interpret(&rdd, lines)
+        },
+    );
+}
+
+#[test]
+fn shared_sublineage_diamond_matches_oracle_on_all_backends() {
+    assert_matches_oracle_everywhere(
+        |sc| shared_diamond_lineage(sc.text_file(INPUT_BUCKET, "ga/")),
+        |lines| {
+            let rdd = shared_diamond_lineage(Rdd::text_file(INPUT_BUCKET, "ga/"));
+            interp::interpret(&rdd, lines)
+        },
+    );
+}
+
+#[test]
+fn shared_diamond_scans_the_base_once_and_fans_out() {
+    let env = SimEnv::new(cfg());
+    seed_sources(&env);
+    let sc = FlintContext::new(env.clone());
+    let lineage = shared_diamond_lineage(sc.text_file(INPUT_BUCKET, "ga/"));
+    let plan = sc.lower(&lineage, Action::Collect);
+    assert_eq!(plan.stages.len(), 4, "scan, two reduces, join:\n{}", plan.explain());
+    assert_eq!(plan.children(0), vec![1, 2], "one scan stage, two shuffle edges");
+    let report = sc.run(&lineage, Action::Collect).unwrap();
+    let edges: Vec<(u32, u32)> = report.edge_shuffle.iter().map(|e| (e.from, e.to)).collect();
+    assert_eq!(edges, vec![(0, 1), (0, 2), (1, 3), (2, 3)], "{:?}", report.edge_shuffle);
+    assert!(report.edge_shuffle.iter().all(|e| e.msgs > 0), "every edge carried data");
+    assert_eq!(env.sqs().queue_names().len(), 0, "per-edge queues all torn down");
+}
+
+#[test]
+fn outer_joins_match_oracle_and_pad_with_null() {
+    let env = SimEnv::new(cfg());
+    let lines = seed_sources(&env);
+    let sc = FlintContext::new(env.clone());
+    // Shrink each side's key space differently (left: odd and key 5;
+    // right: even) so every variant has matched AND unmatched keys.
+    let left_of = |src: Rdd| {
+        pairify(&src).filter(|v| v.key().as_i64().map(|k| k != 0).unwrap_or(false))
+    };
+    let right_of = |src: Rdd| {
+        pairify(&src).filter(|v| v.key().as_i64().map(|k| k % 2 == 0).unwrap_or(false))
+    };
+    type JoinFn = fn(&Rdd, &Rdd, usize) -> Rdd;
+    let variants: [(&str, JoinFn); 3] = [
+        ("left", Rdd::left_outer_join),
+        ("right", Rdd::right_outer_join),
+        ("full", Rdd::full_outer_join),
+    ];
+    for (name, join) in variants {
+        let bound = join(
+            &left_of(sc.text_file(INPUT_BUCKET, "ga/")),
+            &right_of(sc.text_file(INPUT_BUCKET, "gb/")),
+            3,
+        );
+        let got = bound.collect().unwrap();
+        let unbound = join(
+            &left_of(Rdd::text_file(INPUT_BUCKET, "ga/")),
+            &right_of(Rdd::text_file(INPUT_BUCKET, "gb/")),
+            3,
+        );
+        assert_eq!(got, interp::interpret(&unbound, &lines), "{name} outer join");
+        let nulls = got
+            .iter()
+            .filter(|v| {
+                let pair = v.val();
+                matches!(pair.key(), Value::Null) || matches!(pair.val(), Value::Null)
+            })
+            .count();
+        assert!(nulls > 0, "{name} outer join padded at least one unmatched side");
+    }
+    // Inner join never pads.
+    let inner = left_of(sc.text_file(INPUT_BUCKET, "ga/")).join(
+        &right_of(sc.text_file(INPUT_BUCKET, "gb/")),
+        3,
+    );
+    let got = inner.collect().unwrap();
+    assert!(got.iter().all(|v| {
+        !matches!(v.val().key(), Value::Null) && !matches!(v.val().val(), Value::Null)
+    }));
+}
+
+#[test]
+fn long_op_chain_trips_the_payload_limit_spill_path() {
+    // Per-op-kind code accounting: each map adds ~1.8 KB of "pickled
+    // closure" to the task payload, so a long enough chain crosses the
+    // Lambda payload limit and the scheduler must stage the task state
+    // through S3 (the §III-B payload-split workaround). Tightened limit
+    // keeps the test fast; the machinery is the same at 6 MB.
+    let mut c = cfg();
+    c.sim.lambda_payload_limit_bytes = 96 * 1024;
+    let env = SimEnv::new(c);
+    let lines = seed_sources(&env);
+    let sc = FlintContext::new(env.clone());
+
+    let mut short = pairify(&sc.text_file(INPUT_BUCKET, "gb/"));
+    let mut long = pairify(&sc.text_file(INPUT_BUCKET, "gb/"));
+    let mut oracle = pairify(&Rdd::text_file(INPUT_BUCKET, "gb/"));
+    for _ in 0..64 {
+        long = long.map(|v| v);
+        oracle = oracle.map(|v| v);
+    }
+    short = short.map(|v| v);
+
+    assert!(short.collect().is_ok());
+    assert_eq!(env.metrics().get("scheduler.payload_spills"), 0, "short chain fits inline");
+
+    let got = long.collect().unwrap();
+    assert!(
+        env.metrics().get("scheduler.payload_spills") > 0,
+        "64 maps x ~1.8KB must exceed the 96KB limit and spill via S3"
+    );
+    assert_eq!(got, interp::interpret(&oracle, &lines), "spilled tasks still run correctly");
 }

@@ -16,9 +16,8 @@ use flint::data::weather::precip_bucket;
 use flint::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
 use flint::exec::driver::{run_plan, RunParams};
 use flint::exec::executor::IoMode;
-use flint::exec::flint::run_rdd_collect;
 use flint::exec::shuffle::{MemoryShuffle, Transport};
-use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintContext, FlintEngine};
 use flint::plan::{build_union_plan, dag, Action, DynOp, Rdd, UnionBranch};
 use flint::services::SimEnv;
 use flint::simtime::ScheduleMode;
@@ -168,8 +167,8 @@ fn q6j_survives_forced_crashes_on_s3_and_memory_backends() {
 }
 
 /// Trips as `(day, 1)` pairs for the generic join.
-fn trips_day_rdd() -> Rdd {
-    Rdd::text_file(INPUT_BUCKET, "trips/").flat_map(|v| {
+fn trips_day_rdd(sc: &FlintContext) -> Rdd {
+    sc.text_file(INPUT_BUCKET, "trips/").flat_map(|v| {
         let Some(line) = v.as_str() else { return Vec::new() };
         match TripRecord::parse_csv(line.as_bytes()) {
             Some(r) => vec![Value::pair(
@@ -182,8 +181,8 @@ fn trips_day_rdd() -> Rdd {
 }
 
 /// The weather CSV as `(day, precip_bucket)` pairs.
-fn weather_bucket_rdd() -> Rdd {
-    Rdd::text_file(INPUT_BUCKET, "weather/").flat_map(|v| {
+fn weather_bucket_rdd(sc: &FlintContext) -> Rdd {
+    sc.text_file(INPUT_BUCKET, "weather/").flat_map(|v| {
         let Some(line) = v.as_str() else { return Vec::new() };
         let Some((d, p)) = line.split_once(',') else { return Vec::new() };
         let (Ok(d), Ok(p)) = (d.trim().parse::<i64>(), p.trim().parse::<f32>()) else {
@@ -201,11 +200,11 @@ fn generic_rdd_join_matches_q6j_oracle_under_duplicates_and_crash() {
     let ds = generate_taxi_dataset(&env, "trips", 6_000);
     // Crash the cogroup stage's first task once.
     env.failure().force_task_failure(2, 0, 0);
-    let flint = FlintEngine::new(env.clone());
+    let sc = FlintContext::new(env.clone());
     // trips ⋈ weather on day: each joined record is
     // (day, (1, bucket)); bucket counts must equal the Q6J oracle's.
-    let joined = trips_day_rdd().join(&weather_bucket_rdd(), 8);
-    let values = run_rdd_collect(&flint, &joined, &ds).unwrap();
+    let joined = trips_day_rdd(&sc).join(&weather_bucket_rdd(&sc), 8);
+    let values = joined.collect().unwrap();
     let mut counts: BTreeMap<i64, i64> = BTreeMap::new();
     for v in &values {
         let bucket = v.val().val().as_i64().expect("joined (left, right) pair");
@@ -226,17 +225,17 @@ fn cogroup_keeps_sides_apart() {
     // origin edge instead of merging into one stream.
     let env = SimEnv::new(cfg());
     let _left = generate_taxi_dataset(&env, "lefts", 2_000);
-    let right = generate_taxi_dataset(&env, "rights", 1_000);
-    let left_rdd = Rdd::text_file(INPUT_BUCKET, "lefts/").map(|v| {
+    let _right = generate_taxi_dataset(&env, "rights", 1_000);
+    let sc = FlintContext::new(env.clone());
+    let left_rdd = sc.text_file(INPUT_BUCKET, "lefts/").map(|v| {
         let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
         Value::pair(Value::I64(len % 5), Value::str("L"))
     });
-    let right_rdd = Rdd::text_file(INPUT_BUCKET, "rights/").map(|v| {
+    let right_rdd = sc.text_file(INPUT_BUCKET, "rights/").map(|v| {
         let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
         Value::pair(Value::I64(len % 5), Value::I64(1))
     });
-    let flint = FlintEngine::new(env.clone());
-    let grouped = run_rdd_collect(&flint, &left_rdd.cogroup(&right_rdd, 4), &right).unwrap();
+    let grouped = left_rdd.cogroup(&right_rdd, 4).collect().unwrap();
     let (mut left_total, mut right_total) = (0usize, 0usize);
     for v in &grouped {
         let Value::List(sides) = v.val() else { panic!("cogroup value: {v:?}") };

@@ -1,0 +1,262 @@
+//! Randomized-lineage property test: generate arbitrary operator trees
+//! over the generic API — mixes of map/filter/flatMap/reduceByKey/
+//! cogroup, with shared sub-lineages and self-cogroups — execute them
+//! through `FlintContext` on every shuffle backend (sqs, s3, memory)
+//! under both schedulers, and require the collected values to equal the
+//! single-threaded interpreter oracle (`plan::interp`) exactly.
+//!
+//! This is the contract the `plan::lower` compiler is held to: there is
+//! no lineage shape the planner special-cases, so there must be no
+//! lineage shape the tests special-case either.
+
+use flint::compute::value::Value;
+use flint::config::{FlintConfig, ShuffleBackend};
+use flint::data::INPUT_BUCKET;
+use flint::exec::driver::{run_plan, ActionOut, RunParams};
+use flint::exec::executor::IoMode;
+use flint::exec::shuffle::{MemoryShuffle, Transport};
+use flint::exec::{ClusterMode, FlintContext};
+use flint::plan::{interp, Action, Rdd};
+use flint::services::SimEnv;
+use flint::simtime::ScheduleMode;
+use flint::util::propcheck::{forall, Gen};
+
+// -- deterministic sources --------------------------------------------
+
+fn source_data() -> Vec<(&'static str, Vec<String>)> {
+    let mk = |n: usize, salt: u64| -> Vec<String> {
+        (0..n)
+            .map(|i| "x".repeat(1 + ((i as u64 * 11 + salt) % 19) as usize))
+            .collect()
+    };
+    vec![("pa/", mk(48, 2)), ("pb/", mk(33, 7))]
+}
+
+fn seed_sources(env: &SimEnv) {
+    env.s3().create_bucket(INPUT_BUCKET);
+    for (prefix, lines) in source_data() {
+        // Two objects per source so scans have several splits/tasks.
+        let mid = lines.len() / 2;
+        for (i, chunk) in [&lines[..mid], &lines[mid..]].iter().enumerate() {
+            let body = format!("{}\n", chunk.join("\n"));
+            env.s3()
+                .put_object(INPUT_BUCKET, &format!("{prefix}part-{i}"), body.into_bytes())
+                .unwrap();
+        }
+    }
+}
+
+fn oracle_lines(_bucket: &str, prefix: &str) -> Vec<String> {
+    source_data()
+        .into_iter()
+        .find(|(p, _)| *p == prefix)
+        .map(|(_, lines)| lines)
+        .unwrap_or_default()
+}
+
+// -- lineage generator ------------------------------------------------
+
+/// Every generated lineage emits `(I64 key, I64 value)` pairs with keys
+/// in 0..7 and bounded values, so any node can legally feed any wide op.
+fn gen_lineage(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>) -> Rdd {
+    // Reuse an already-built subtree sometimes: the shared-sublineage /
+    // diamond path (same Arc node consumed twice).
+    if !pool.is_empty() && g.chance(0.25) {
+        return pool[g.usize(pool.len())].clone();
+    }
+    let rdd = if *wide_budget == 0 || g.chance(0.3) {
+        gen_base(g)
+    } else {
+        *wide_budget -= 1;
+        if g.bool() {
+            let parts = g.usize(4) + 1;
+            let child = gen_narrowed(g, wide_budget, pool);
+            gen_reduce(g, &child, parts)
+        } else {
+            let parts = g.usize(4) + 1;
+            let left = gen_narrowed(g, wide_budget, pool);
+            // Self-cogroup sometimes: both sides the same handle.
+            let right = if g.chance(0.2) {
+                left.clone()
+            } else {
+                gen_narrowed(g, wide_budget, pool)
+            };
+            cogroup_flatten(&left, &right, parts)
+        }
+    };
+    pool.push(rdd.clone());
+    rdd
+}
+
+/// A child lineage with 0..2 extra narrow ops on top.
+fn gen_narrowed(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>) -> Rdd {
+    let mut rdd = gen_lineage(g, wide_budget, pool);
+    for _ in 0..g.usize(3) {
+        rdd = gen_narrow(g, &rdd);
+    }
+    rdd
+}
+
+fn gen_base(g: &mut Gen) -> Rdd {
+    let prefix = if g.bool() { "pa/" } else { "pb/" };
+    let keymod = [5i64, 6, 7][g.usize(3)];
+    Rdd::text_file(INPUT_BUCKET, prefix).map(move |v| {
+        let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+        Value::pair(Value::I64(len % keymod), Value::I64(len))
+    })
+}
+
+fn gen_narrow(g: &mut Gen, rdd: &Rdd) -> Rdd {
+    match g.usize(4) {
+        0 => rdd.map(|v| {
+            let (k, val) = (v.key().as_i64().unwrap(), v.val().as_i64().unwrap());
+            Value::pair(Value::I64((k * 3 + 1).rem_euclid(7)), Value::I64(val))
+        }),
+        1 => rdd.map(|v| {
+            let (k, val) = (v.key().as_i64().unwrap(), v.val().as_i64().unwrap());
+            Value::pair(Value::I64(k), Value::I64((val * 5 + 1) % 1009))
+        }),
+        2 => rdd.filter(|v| v.val().as_i64().map(|x| x % 3 != 0).unwrap_or(false)),
+        _ => rdd.flat_map(|v| {
+            let (k, val) = (v.key().as_i64().unwrap(), v.val().as_i64().unwrap());
+            vec![
+                Value::pair(Value::I64(k), Value::I64(val)),
+                Value::pair(Value::I64((k + 1).rem_euclid(7)), Value::I64(val % 97)),
+            ]
+        }),
+    }
+}
+
+fn gen_reduce(g: &mut Gen, rdd: &Rdd, parts: usize) -> Rdd {
+    // Associative + commutative combiners only: the engine folds in
+    // arrival order, the oracle in its own order — anything else is a
+    // misuse of reduceByKey, in Spark too.
+    match g.usize(3) {
+        0 => rdd.reduce_by_key(parts, |a, b| {
+            Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+        }),
+        1 => rdd.reduce_by_key(parts, |a, b| {
+            Value::I64(a.as_i64().unwrap().min(b.as_i64().unwrap()))
+        }),
+        _ => rdd.reduce_by_key(parts, |a, b| {
+            Value::I64(a.as_i64().unwrap().max(b.as_i64().unwrap()))
+        }),
+    }
+}
+
+/// Cogroup and flatten straight back to `(key, score)` pairs so the
+/// result composes with further ops. The score only uses per-side sums
+/// and lengths — order-insensitive, since side order is only
+/// deterministic after sorting.
+fn cogroup_flatten(left: &Rdd, right: &Rdd, parts: usize) -> Rdd {
+    left.cogroup(right, parts).flat_map(|v| {
+        let key = v.key().clone();
+        let Value::List(sides) = v.val() else { return Vec::new() };
+        let stat = |side: &Value| -> (i64, i64) {
+            let Value::List(vals) = side else { return (0, 0) };
+            (vals.iter().filter_map(Value::as_i64).sum(), vals.len() as i64)
+        };
+        let (ls, ln) = stat(&sides[0]);
+        let (rs, rn) = stat(&sides[1]);
+        vec![Value::pair(key, Value::I64(ls * 31 + rs + ln * 7 + rn))]
+    })
+}
+
+// -- execution matrix -------------------------------------------------
+
+fn base_cfg() -> FlintConfig {
+    let mut c = FlintConfig::for_tests();
+    c.flint.input_split_bytes = 256;
+    c.flint.use_pjrt = false;
+    c.sim.sqs_duplicate_prob = 0.1;
+    c
+}
+
+/// One (backend, scheduler) execution of an unbound lineage.
+fn run_config(
+    rdd: &Rdd,
+    backend: ShuffleBackend,
+    sched: ScheduleMode,
+) -> Result<Vec<Value>, String> {
+    let mut c = base_cfg();
+    c.flint.shuffle_backend = backend;
+    c.flint.scheduler = sched;
+    let env = SimEnv::new(c);
+    seed_sources(&env);
+    let sc = FlintContext::new(env.clone());
+    let got = sc.collect(rdd).map_err(|e| format!("{backend:?}/{sched:?}: {e:#}"))?;
+    if backend == ShuffleBackend::Sqs && !env.sqs().queue_names().is_empty() {
+        return Err(format!("{backend:?}/{sched:?}: leaked edge queues"));
+    }
+    Ok(got)
+}
+
+/// Memory backend: cluster context for barrier, the raw driver for the
+/// pipelined clock (the cluster engine itself pins barrier).
+fn run_memory(rdd: &Rdd, sched: ScheduleMode) -> Result<Vec<Value>, String> {
+    let env = SimEnv::new(base_cfg());
+    seed_sources(&env);
+    let sc = FlintContext::cluster(env.clone(), ClusterMode::Spark);
+    match sched {
+        ScheduleMode::Barrier => sc.collect(rdd).map_err(|e| format!("memory/barrier: {e:#}")),
+        ScheduleMode::Pipelined => {
+            let plan = sc.lower(rdd, Action::Collect);
+            let params = RunParams {
+                mode: IoMode::Spark,
+                transport: Transport::Memory(MemoryShuffle::new()),
+                slots: 16,
+                lambda: false,
+                host_parallelism: 4,
+                schedule: ScheduleMode::Pipelined,
+            };
+            let out = run_plan(&env, None, &plan, &params)
+                .map_err(|e| format!("memory/pipelined: {e:#}"))?;
+            match out.out {
+                ActionOut::Values(v) => Ok(v),
+                other => Err(format!("memory/pipelined collect produced {other:?}")),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_lineages_match_interpreter_oracle_on_all_backends() {
+    forall("random-lineage-vs-oracle", 8, |g| {
+        let mut wide_budget = 3;
+        let mut pool = Vec::new();
+        let rdd = gen_narrowed(g, &mut wide_budget, &mut pool);
+        let expect = interp::interpret(&rdd, &oracle_lines);
+
+        for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
+            for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+                let got = run_config(&rdd, backend, sched)?;
+                if got != expect {
+                    return Err(format!(
+                        "{backend:?}/{sched:?} diverged from oracle for {rdd:?}:\n\
+                         got    {got:?}\nexpect {expect:?}"
+                    ));
+                }
+            }
+        }
+        for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+            let got = run_memory(&rdd, sched)?;
+            if got != expect {
+                return Err(format!(
+                    "memory/{sched:?} diverged from oracle for {rdd:?}:\n\
+                     got    {got:?}\nexpect {expect:?}"
+                ));
+            }
+        }
+
+        // The count action agrees with the oracle's record count (one
+        // backend suffices; counting shares the whole pipeline).
+        let env = SimEnv::new(base_cfg());
+        seed_sources(&env);
+        let sc = FlintContext::new(env);
+        let n = sc.count(&rdd).map_err(|e| format!("count: {e:#}"))?;
+        if n != interp::interpret_count(&rdd, &oracle_lines) {
+            return Err(format!("count action diverged: {n}"));
+        }
+        Ok(())
+    });
+}
