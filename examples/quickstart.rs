@@ -13,6 +13,14 @@
 //! ```
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! The engine schedules pipelined by default (§III-A: reducers long-poll
+//! while mappers flush; `--set flint.scheduler=barrier` reproduces the
+//! paper's serial Σ-makespan clock exactly). Under real serverless
+//! variance you would also turn on backup tasks for stragglers:
+//! `flint.speculation=on` (+ `flint.speculation.multiplier`,
+//! `flint.speculation.quantile`) — see README.md for the knobs and
+//! `cargo bench --bench straggler_ablation` for the effect.
 
 use flint::compute::value::Value;
 use flint::config::FlintConfig;

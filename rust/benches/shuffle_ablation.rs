@@ -4,9 +4,10 @@
 //! under both the serial barrier clock and the pipelined DAG scheduler
 //! (both latencies come from the same execution, so the pair is exact).
 
-use flint::bench::micro::shuffle_ablation;
+use flint::bench::micro::{join_crossover, shuffle_ablation};
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
+use flint::util::json::Json;
 
 fn main() {
     let mut cfg = FlintConfig::default();
@@ -32,6 +33,48 @@ fn main() {
             );
         }
     }
+    // A5 — broadcast-vs-shuffle join crossover on the Q6/Q6J pair:
+    // sweep the dimension-table size and record where the exchange
+    // operator starts beating the per-map-task broadcast read.
+    println!("\n## A5 — broadcast (Q6) vs shuffle join (Q6J): dimension-size sweep\n");
+    println!("| dim table (B) | broadcast Q6 (s) | shuffle Q6J (s) | Q6 $ | Q6J $ |");
+    println!("|---|---|---|---|---|");
+    let sweep: Vec<u64> = vec![
+        0,
+        1024 * 1024,
+        4 * 1024 * 1024,
+        16 * 1024 * 1024,
+        64 * 1024 * 1024,
+    ];
+    let (rows, crossover) = join_crossover(&cfg, trips.min(100_000), &sweep).expect("crossover");
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        println!(
+            "| {} | {:.2} | {:.2} | {:.4} | {:.4} |",
+            r.dim_bytes, r.broadcast_s, r.shuffle_s, r.broadcast_usd, r.shuffle_usd
+        );
+        json_rows.push(
+            Json::obj()
+                .set("dim_bytes", r.dim_bytes)
+                .set("broadcast_s", r.broadcast_s)
+                .set("shuffle_s", r.shuffle_s)
+                .set("broadcast_usd", r.broadcast_usd)
+                .set("shuffle_usd", r.shuffle_usd),
+        );
+    }
+    let mut json = Json::obj()
+        .set("bench", "join_crossover")
+        .set("rows", Json::Arr(json_rows));
+    json = match crossover {
+        Some(b) => json.set("crossover_dim_bytes", b),
+        None => json.set("crossover_dim_bytes", Json::Null),
+    };
+    println!("\n{}", json.encode());
+    match crossover {
+        Some(b) => println!("\n(crossover: the shuffle join starts winning at a ~{b} B dimension table)"),
+        None => println!("\n(no crossover in this sweep: broadcast won throughout)"),
+    }
+
     println!("\n(Q6J routes the weather join through the shuffle itself — two scan");
     println!(" stages fan into a KernelJoin stage — so its rows price the exchange");
     println!(" operator on each backend, not just the aggregation shuffle.");

@@ -1,0 +1,98 @@
+//! `cargo bench --bench straggler_ablation [-- --smoke]` — experiment
+//! A4: speculative execution under injected heavy-tailed stragglers.
+//!
+//! Each query runs ONCE with a forced 10x straggler in its scan stage
+//! and speculation enabled; the driver reports the speculative and the
+//! speculation-free pipelined clocks from that same execution, so the
+//! comparison is exact. Pipelined+speculation must strictly beat plain
+//! pipelined on every multi-stage query — `--smoke` mode (CI) runs a
+//! small dataset and exits non-zero on any regression, so speculation
+//! breakage fails PRs instead of waiting for a nightly bench run.
+
+use flint::bench::micro::straggler_ablation;
+use flint::compute::queries::QueryId;
+use flint::config::FlintConfig;
+use flint::util::json::Json;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut cfg = FlintConfig::default();
+    cfg.artifacts_dir = "artifacts".into();
+    if smoke {
+        // CI-sized: tiny objects/splits so the scan still has enough
+        // tasks for the tail signal's quorum, PJRT off (no artifacts in
+        // CI runners).
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 256 * 1024;
+        cfg.flint.use_pjrt = false;
+        cfg.sim.max_concurrency = 8;
+    } else {
+        cfg.data.object_bytes = 8 * 1024 * 1024;
+        cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+    }
+    let trips = std::env::var("FLINT_BENCH_TRIPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 20_000 } else { 400_000 });
+
+    let queries = [
+        QueryId::Q1,
+        QueryId::Q2,
+        QueryId::Q3,
+        QueryId::Q4,
+        QueryId::Q5,
+        QueryId::Q6,
+        QueryId::Q6J,
+    ];
+    println!("## A4 — speculative execution vs injected stragglers (10x on scan task 0)\n");
+    println!("| query | pipelined+spec (s) | plain pipelined (s) | barrier (s) | idle (s) | backups | wins | cost (USD) |");
+    println!("|---|---|---|---|---|---|---|---|");
+    let rows = straggler_ablation(&cfg, trips, &queries).expect("bench");
+    let mut failed = false;
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        println!(
+            "| {} | {:.2} | {:.2} | {:.2} | {:.2} | {} | {} | {:.4} |",
+            r.query,
+            r.spec_pipelined_s,
+            r.plain_pipelined_s,
+            r.barrier_s,
+            r.idle_s,
+            r.launches,
+            r.wins,
+            r.cost_usd
+        );
+        if r.spec_pipelined_s >= r.plain_pipelined_s {
+            eprintln!(
+                "REGRESSION: {} speculation {:.3}s did not beat plain pipelined {:.3}s",
+                r.query, r.spec_pipelined_s, r.plain_pipelined_s
+            );
+            failed = true;
+        }
+        json_rows.push(
+            Json::obj()
+                .set("query", r.query.name())
+                .set("spec_pipelined_s", r.spec_pipelined_s)
+                .set("plain_pipelined_s", r.plain_pipelined_s)
+                .set("barrier_s", r.barrier_s)
+                .set("idle_s", r.idle_s)
+                .set("speculative_launches", r.launches)
+                .set("speculative_wins", r.wins)
+                .set("cost_usd", r.cost_usd),
+        );
+    }
+    println!(
+        "\n{}",
+        Json::obj()
+            .set("bench", "straggler_ablation")
+            .set("trips", trips)
+            .set("rows", Json::Arr(json_rows))
+            .encode()
+    );
+    println!("\n(Every attempt bills its GB-seconds — the loser too, Lambda has no");
+    println!(" mid-flight cancellation — and pipelined long-polling bills idle time,");
+    println!(" so these rows price exactly what the latency win costs.)");
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -1,12 +1,17 @@
 //! Microbenchmarks backing the paper's in-text claims (experiment index
-//! M1, M2, A1 in DESIGN.md §6).
+//! M1, M2, A1 in DESIGN.md §6), plus the engine-extension ablations:
+//! the straggler/speculation ablation (A4) and the broadcast-vs-shuffle
+//! join crossover study (A5, the PR 3 join follow-up).
 
+use crate::compute::oracle;
 use crate::compute::queries::QueryId;
 use crate::config::{FlintConfig, ShuffleBackend};
-use crate::data::generate_taxi_dataset;
+use crate::data::weather::WeatherTable;
+use crate::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
 use crate::exec::{Engine, FlintEngine};
 use crate::services::SimEnv;
-use anyhow::Result;
+use crate::simtime::ScheduleMode;
+use anyhow::{anyhow, ensure, Result};
 
 /// M1 — single-stream S3 read throughput: boto-class (Flint) vs
 /// Hadoop-class (Spark), the paper's explanation for Q0. Returns modeled
@@ -118,6 +123,146 @@ pub fn shuffle_ablation(
     Ok(out)
 }
 
+/// One query's row of the straggler/speculation ablation (A4).
+#[derive(Debug, Clone)]
+pub struct StragglerRow {
+    pub query: QueryId,
+    /// Pipelined clock with the injected straggler, no speculation.
+    pub plain_pipelined_s: f64,
+    /// Pipelined clock with speculative backups (same execution).
+    pub spec_pipelined_s: f64,
+    /// Serial barrier clock (same execution, for scale).
+    pub barrier_s: f64,
+    /// Occupied-but-idle long-polling seconds (the overlap's cost side).
+    pub idle_s: f64,
+    pub launches: u64,
+    pub wins: u64,
+    pub cost_usd: f64,
+}
+
+/// A4 — straggler/speculation ablation: inject a decisive heavy-tailed
+/// straggler into each query's scan stage and run once with speculation
+/// enabled. Both the speculative and the speculation-free pipelined
+/// clocks come from that single execution (same measured attempt
+/// durations), so `spec < plain` is an exact comparison, not cross-run
+/// noise — pipelined+speculation must strictly beat plain pipelined on
+/// every multi-stage query. Results are oracle-checked: racing duplicate
+/// attempts must never change an answer.
+pub fn straggler_ablation(
+    cfg: &FlintConfig,
+    trips: u64,
+    queries: &[QueryId],
+) -> Result<Vec<StragglerRow>> {
+    let mut out = Vec::new();
+    for &q in queries {
+        let mut c = cfg.clone();
+        c.flint.shuffle_backend = ShuffleBackend::Sqs;
+        c.flint.scheduler = ScheduleMode::Pipelined;
+        c.flint.speculation.enabled = true;
+        let env = SimEnv::new(c);
+        let ds = generate_taxi_dataset(&env, "trips", trips);
+        let flint = FlintEngine::new(env.clone());
+        flint.prewarm();
+        // One decisive straggler on the scan stage's first task, primary
+        // attempt only — the backup lands on a clean container ("slow
+        // node, not slow work"). Deterministic, so runs are repeatable.
+        env.failure().force_straggler(0, 0, 0, 10.0);
+        let expect = oracle::evaluate(&env, &ds, q);
+        let r = flint.run_query(q, &ds)?;
+        ensure!(
+            r.result.approx_eq(&expect),
+            "{q}: speculative re-execution changed the answer"
+        );
+        out.push(StragglerRow {
+            query: q,
+            plain_pipelined_s: r.pipelined_nospec_latency_s,
+            spec_pipelined_s: r.pipelined_latency_s,
+            barrier_s: r.barrier_latency_s,
+            idle_s: r.pipelined_idle_s,
+            launches: r.speculative_launches,
+            wins: r.speculative_wins,
+            cost_usd: r.cost_usd,
+        });
+    }
+    Ok(out)
+}
+
+/// One dimension-table size of the join crossover study (A5).
+#[derive(Debug, Clone)]
+pub struct JoinCrossRow {
+    pub dim_bytes: u64,
+    /// Q6: every map task GETs the whole dimension table (broadcast).
+    pub broadcast_s: f64,
+    /// Q6J: the dimension rides the shuffle through the join stage.
+    pub shuffle_s: f64,
+    pub broadcast_usd: f64,
+    pub shuffle_usd: f64,
+}
+
+/// A5 — broadcast-vs-shuffle join crossover: sweep the dimension-table
+/// (weather) size on the Q6/Q6J pair. Small tables favour the broadcast
+/// (no join stage, no extra shuffle hop); as the table grows, the
+/// broadcast's per-map-task GET of the whole table dominates while the
+/// shuffle join scans it once — the classic exchange-operator crossover.
+/// Returns the swept rows plus the first size where the shuffle join
+/// wins (`None` when broadcast wins everywhere in the sweep).
+pub fn join_crossover(
+    cfg: &FlintConfig,
+    trips: u64,
+    dim_targets: &[u64],
+) -> Result<(Vec<JoinCrossRow>, Option<u64>)> {
+    let mut rows = Vec::new();
+    for &target in dim_targets {
+        let env = SimEnv::new(cfg.clone());
+        let mut ds = generate_taxi_dataset(&env, "trips", trips);
+        if target > ds.weather_bytes {
+            inflate_weather(&env, &mut ds, target)?;
+        }
+        let flint = FlintEngine::new(env.clone());
+        flint.prewarm();
+        let broadcast = flint.run_query(QueryId::Q6, &ds)?;
+        let shuffle = flint.run_query(QueryId::Q6J, &ds)?;
+        rows.push(JoinCrossRow {
+            dim_bytes: ds.weather_bytes,
+            broadcast_s: broadcast.latency_s,
+            shuffle_s: shuffle.latency_s,
+            broadcast_usd: broadcast.cost_usd,
+            shuffle_usd: shuffle.cost_usd,
+        });
+    }
+    let crossover = rows
+        .iter()
+        .find(|r| r.shuffle_s < r.broadcast_s)
+        .map(|r| r.dim_bytes);
+    Ok((rows, crossover))
+}
+
+/// Grow the weather side table to ~`target` bytes without changing its
+/// *parsed* content: each row's precipitation keeps its value but gains
+/// trailing fractional zeros, so Q6's broadcast lookup and Q6J's
+/// shuffled dimension rows still agree with the oracle byte-for-value.
+fn inflate_weather(env: &SimEnv, ds: &mut Dataset, target: u64) -> Result<()> {
+    let (obj, _) = env
+        .s3()
+        .get_object(INPUT_BUCKET, &ds.weather_key, env.flint_read_profile())
+        .map_err(|e| anyhow!("weather table: {e}"))?;
+    let table = WeatherTable::from_csv(obj.bytes()).ok_or_else(|| anyhow!("weather corrupt"))?;
+    let rows = table.precip.len().max(1);
+    let base_len = obj.bytes().len() as u64;
+    let pad = (target.saturating_sub(base_len) as usize).div_ceil(rows);
+    let zeros = "0".repeat(pad);
+    let mut out = String::with_capacity(target as usize + rows * 16);
+    for (i, p) in table.precip.iter().enumerate() {
+        out.push_str(&format!("{i},{p:.3}{zeros}\n"));
+    }
+    let body = out.into_bytes();
+    ds.weather_bytes = body.len() as u64;
+    env.s3()
+        .put_object(INPUT_BUCKET, &ds.weather_key, body)
+        .map_err(|e| anyhow!("weather put: {e}"))?;
+    Ok(())
+}
+
 /// A3-adjacent — elasticity sweep: the same query at increasing Lambda
 /// concurrency limits. The paper's pay-as-you-go argument in one curve:
 /// latency drops with concurrency while the *cost stays flat* (you pay
@@ -199,6 +344,65 @@ mod tests {
         // Pipelined never schedules worse than barrier (serial-fallback
         // guard), even on the join's multi-root DAG.
         assert!(rows[1].1 <= rows[0].1 + 1e-9, "{rows:?}");
+    }
+
+    #[test]
+    fn a4_straggler_ablation_speculation_strictly_wins() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 256 * 1024;
+        let rows =
+            straggler_ablation(&cfg, 20_000, &[QueryId::Q1, QueryId::Q5]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.launches >= 1, "{}: the forced straggler must trigger a backup", r.query);
+            assert!(r.wins >= 1, "{}: the clean backup must beat a 10x straggler", r.query);
+            assert!(
+                r.spec_pipelined_s < r.plain_pipelined_s,
+                "{}: speculation {:.3}s must strictly beat plain {:.3}s",
+                r.query,
+                r.spec_pipelined_s,
+                r.plain_pipelined_s
+            );
+            // (idle_s may legitimately be 0 here: when a queued backup
+            // behind long-polling reducers would lose to the serial
+            // plan, the scheduler's fallback guard picks serial, which
+            // has no long-polling. The dedicated idle-billing test in
+            // pipelined_scheduler.rs pins idle metering without
+            // speculation in the mix.)
+        }
+    }
+
+    #[test]
+    fn a5_join_crossover_finds_the_flip() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 256 * 1024;
+        // Small stage overheads: at test scale the join diamond's two
+        // extra stages would otherwise bury the broadcast's read cost.
+        cfg.sim.scheduler_overhead_per_stage_s = 0.02;
+        cfg.sim.scheduler_overhead_per_task_s = 0.0002;
+        let (rows, crossover) =
+            join_crossover(&cfg, 15_000, &[0, 32 * 1024 * 1024]).unwrap();
+        assert_eq!(rows.len(), 2);
+        // Tiny dimension table: broadcast wins (no exchange stage).
+        assert!(
+            rows[0].broadcast_s < rows[0].shuffle_s,
+            "broadcast {:.3}s must win at {} B",
+            rows[0].broadcast_s,
+            rows[0].dim_bytes
+        );
+        // Huge dimension table: every map task re-reading it drowns the
+        // broadcast; the shuffle join reads it once.
+        assert!(
+            rows[1].shuffle_s < rows[1].broadcast_s,
+            "shuffle {:.3}s must win at {} B (broadcast {:.3}s)",
+            rows[1].shuffle_s,
+            rows[1].dim_bytes,
+            rows[1].broadcast_s
+        );
+        assert_eq!(crossover, Some(rows[1].dim_bytes));
+        assert!(rows[1].dim_bytes >= 32 * 1024 * 1024);
     }
 
     #[test]

@@ -64,6 +64,17 @@ pub struct SimParams {
     pub scheduler_overhead_per_stage_s: f64,
     /// Per-task scheduler-side serialization/launch overhead.
     pub scheduler_overhead_per_task_s: f64,
+    /// Probability a task attempt lands on a straggling container
+    /// (heavy-tailed slowdown injection; 0 = off). Drawn deterministically
+    /// from `(seed, stage, task, attempt)`, so the same attempts straggle
+    /// across runs and an attempt's backup rolls independently.
+    pub straggler_prob: f64,
+    /// Minimum slowdown factor of a straggling attempt (the Pareto
+    /// distribution's scale: every straggler is at least this slow).
+    pub straggler_factor: f64,
+    /// Pareto tail exponent for straggler slowdowns (smaller = heavier
+    /// tail). Factors are capped at 25x.
+    pub straggler_alpha: f64,
 }
 
 impl Default for SimParams {
@@ -95,6 +106,9 @@ impl Default for SimParams {
             pyspark_pipe_per_record_s: 1.2e-6,
             scheduler_overhead_per_stage_s: 0.35,
             scheduler_overhead_per_task_s: 0.002,
+            straggler_prob: 0.0,
+            straggler_factor: 6.0,
+            straggler_alpha: 2.0,
         }
     }
 }
@@ -130,6 +144,32 @@ impl Default for Pricing {
     }
 }
 
+/// Speculative-execution (backup task) knobs, mirroring Spark's
+/// `spark.speculation.*` family. When enabled, the scheduler watches the
+/// event clock's tail signal: once `quantile` of a stage's tasks have
+/// finished, any task still running past `multiplier` × the median
+/// completed span gets a backup attempt; the first attempt to commit
+/// wins and the loser is cancelled (but still billed — Lambda has no
+/// mid-flight cancellation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeculationParams {
+    /// `flint.speculation = on|off`. Off (the default, like Spark)
+    /// reproduces non-speculative schedules byte-identically.
+    pub enabled: bool,
+    /// A task is speculatable once it has run `multiplier` × the median
+    /// span of its stage's completed tasks (`flint.speculation.multiplier`).
+    pub multiplier: f64,
+    /// Fraction of a stage's tasks that must complete before the median
+    /// is trusted (`flint.speculation.quantile`); 1.0 disables the signal.
+    pub quantile: f64,
+}
+
+impl Default for SpeculationParams {
+    fn default() -> Self {
+        SpeculationParams { enabled: false, multiplier: 1.5, quantile: 0.75 }
+    }
+}
+
 /// Flint engine knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlintParams {
@@ -143,12 +183,16 @@ pub struct FlintParams {
     pub max_task_retries: u32,
     /// Shuffle transport: "sqs" (the paper) or "s3" (the Qubole ablation).
     pub shuffle_backend: ShuffleBackend,
-    /// Stage-overlap policy for the virtual clock: "barrier" (serial
-    /// stages, the Σ-makespan model and the Table I baseline) or
-    /// "pipelined" (§III-A SQS semantics: reducers long-poll while
-    /// mappers flush). SQS-only — the S3 backend's list-then-get
-    /// shuffle cannot overlap, so the engine forces barrier there.
+    /// Stage-overlap policy for the virtual clock: "pipelined" (the
+    /// default since the Table I re-baseline: §III-A SQS semantics,
+    /// reducers long-poll while mappers flush) or "barrier" (serial
+    /// stages, the Σ-makespan model — the exact-paper-reproduction mode
+    /// whose numbers match the original Table I baseline). SQS-only —
+    /// the S3 backend's list-then-get shuffle cannot overlap, so the
+    /// engine forces barrier there.
     pub scheduler: ScheduleMode,
+    /// Speculative re-execution of stragglers (`flint.speculation.*`).
+    pub speculation: SpeculationParams,
     /// Enable sequence-id dedup of SQS messages (§VI).
     pub dedup_enabled: bool,
     /// Rows per columnar batch handed to the PJRT kernels.
@@ -183,7 +227,8 @@ impl Default for FlintParams {
             shuffle_buffer_bytes: 48 * 1024 * 1024,
             max_task_retries: 3,
             shuffle_backend: ShuffleBackend::Sqs,
-            scheduler: ScheduleMode::Barrier,
+            scheduler: ScheduleMode::Pipelined,
+            speculation: SpeculationParams::default(),
             dedup_enabled: true,
             batch_rows: 8192,
             use_pjrt: true,
@@ -318,6 +363,13 @@ impl FlintConfig {
                         },
                     )
                     .set("scheduler", self.flint.scheduler.name())
+                    .set(
+                        "speculation",
+                        Json::obj()
+                            .set("enabled", self.flint.speculation.enabled)
+                            .set("multiplier", self.flint.speculation.multiplier)
+                            .set("quantile", self.flint.speculation.quantile),
+                    )
                     .set("dedup_enabled", self.flint.dedup_enabled)
                     .set("batch_rows", self.flint.batch_rows)
                     .set("use_pjrt", self.flint.use_pjrt),
@@ -348,12 +400,44 @@ mod tests {
         assert_eq!(c.sim.max_concurrency, 160);
         c.set("flint.shuffle_backend", "s3").unwrap();
         assert_eq!(c.flint.shuffle_backend, ShuffleBackend::S3);
-        assert_eq!(c.flint.scheduler, ScheduleMode::Barrier, "barrier is the default");
-        c.set("flint.scheduler", "pipelined").unwrap();
-        assert_eq!(c.flint.scheduler, ScheduleMode::Pipelined);
+        assert_eq!(
+            c.flint.scheduler,
+            ScheduleMode::Pipelined,
+            "pipelined is the default since the Table I re-baseline"
+        );
+        c.set("flint.scheduler", "barrier").unwrap();
+        assert_eq!(c.flint.scheduler, ScheduleMode::Barrier);
         assert!(c.set("flint.scheduler", "bogus").is_err());
         assert!(c.set("sim.nonexistent", "1").is_err());
         assert!(c.set("sim.max_concurrency", "abc").is_err());
+    }
+
+    #[test]
+    fn speculation_knobs_parse() {
+        let mut c = FlintConfig::default();
+        assert!(!c.flint.speculation.enabled, "speculation is off by default, like Spark");
+        assert_eq!(c.flint.speculation.multiplier, 1.5);
+        assert_eq!(c.flint.speculation.quantile, 0.75);
+        c.set("flint.speculation", "on").unwrap();
+        assert!(c.flint.speculation.enabled);
+        c.set("flint.speculation", "off").unwrap();
+        assert!(!c.flint.speculation.enabled);
+        c.set("flint.speculation", "true").unwrap();
+        assert!(c.flint.speculation.enabled);
+        c.set("flint.speculation.multiplier", "2.0").unwrap();
+        c.set("flint.speculation.quantile", "0.5").unwrap();
+        assert_eq!(c.flint.speculation.multiplier, 2.0);
+        assert_eq!(c.flint.speculation.quantile, 0.5);
+        assert!(c.set("flint.speculation", "maybe").is_err());
+        // Straggler injection knobs live under sim (they model the
+        // environment, not the engine).
+        assert_eq!(c.sim.straggler_prob, 0.0, "injection off by default");
+        c.set("sim.straggler_prob", "0.1").unwrap();
+        c.set("sim.straggler_factor", "8.0").unwrap();
+        c.set("sim.straggler_alpha", "1.5").unwrap();
+        assert_eq!(c.sim.straggler_prob, 0.1);
+        assert_eq!(c.sim.straggler_factor, 8.0);
+        assert_eq!(c.sim.straggler_alpha, 1.5);
     }
 
     #[test]

@@ -101,6 +101,9 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         "sim.scheduler_overhead_per_task_s" => {
             parse_to!(cfg.sim.scheduler_overhead_per_task_s, value, key)
         }
+        "sim.straggler_prob" => parse_to!(cfg.sim.straggler_prob, value, key),
+        "sim.straggler_factor" => parse_to!(cfg.sim.straggler_factor, value, key),
+        "sim.straggler_alpha" => parse_to!(cfg.sim.straggler_alpha, value, key),
 
         "pricing.lambda_gb_s" => parse_to!(cfg.pricing.lambda_gb_s, value, key),
         "pricing.lambda_per_request" => parse_to!(cfg.pricing.lambda_per_request, value, key),
@@ -122,6 +125,23 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         }
         "flint.scheduler" => {
             cfg.flint.scheduler = value.parse::<crate::simtime::ScheduleMode>()?
+        }
+        "flint.speculation" => {
+            cfg.flint.speculation.enabled = match value {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                other => {
+                    return Err(format!(
+                        "bad value `{other}` for `flint.speculation` (want on|off)"
+                    ))
+                }
+            }
+        }
+        "flint.speculation.multiplier" => {
+            parse_to!(cfg.flint.speculation.multiplier, value, key)
+        }
+        "flint.speculation.quantile" => {
+            parse_to!(cfg.flint.speculation.quantile, value, key)
         }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
         "flint.batch_rows" => parse_to!(cfg.flint.batch_rows, value, key),

@@ -1,30 +1,62 @@
 //! The stage driver — the engine-agnostic core of the scheduler
-//! (`SchedulerBackend` in the paper's terms), rebuilt around the stage
-//! **DAG**: it walks the plan in dependency (topological) order,
-//! launches each stage's tasks onto real worker threads, manages shuffle
-//! queue lifecycle per DAG edge (a producer materializes one queue set
-//! per consuming stage — so fan-out stages feed each consumer its own
-//! copy — and an edge's queues are deleted the moment its consumer
-//! completes), handles
-//! retries and executor chaining, and hands every task's measured
-//! virtual duration to the event-driven global clock
+//! (`SchedulerBackend` in the paper's terms), built around the stage
+//! **DAG** and a first-class **task-attempt model**: it walks the plan
+//! in dependency (topological) order, launches each stage's tasks onto
+//! real worker threads, manages shuffle queue lifecycle per DAG edge (a
+//! producer materializes one queue set per consuming stage — so fan-out
+//! stages feed each consumer its own copy — and an edge's queues are
+//! deleted the moment its consumer completes), and hands every
+//! attempt's measured virtual duration to the event-driven global clock
 //! (`simtime::schedule`) which decides how much of the execution
 //! *overlaps*:
 //!
 //! * **barrier** mode reproduces the original serial model — a hard
 //!   barrier between stages, latency = Σ (stage makespan + driver
 //!   overhead). This is the honest model for the Qubole-style S3 shuffle
-//!   backend and keeps the Table I numbers byte-stable.
-//! * **pipelined** mode is the paper's SQS semantics (§III-A): reduce
-//!   tasks are launched while their map stages still flush, long-poll
-//!   their queues, and drain concurrently — so a consumer stage starts
-//!   as soon as every parent has *started producing* rather than after
-//!   it finished.
+//!   backend and the exact-paper-reproduction mode whose numbers match
+//!   the original Table I baseline.
+//! * **pipelined** mode (the default since the Table I re-baseline) is
+//!   the paper's SQS semantics (§III-A): reduce tasks are launched
+//!   while their map stages still flush, long-poll their queues, and
+//!   drain concurrently — so a consumer stage starts as soon as every
+//!   parent has *started producing* rather than after it finished. The
+//!   overlap is not free: a long-polling reducer occupies a live Lambda
+//!   while idle, and the driver bills those GB-seconds
+//!   (`RunOutput::pipelined_idle_s`).
+//!
+//! # The attempt model
+//!
+//! A task no longer "runs once, retries overwrite it". Each task owns a
+//! table of **attempts**:
+//!
+//! * attempt 0 is the primary; a *failed* attempt N relaunches as
+//!   attempt N+1 from the last chain checkpoint (`scheduler.task_retries`
+//!   counts exactly the relaunches — per attempt, never per chain
+//!   segment, and a task that exhausts its budget counts only the
+//!   retries actually launched);
+//! * with `flint.speculation = on`, the event clock's tail signal
+//!   ([`crate::simtime::schedule::tail_signal`]) picks stragglers —
+//!   tasks still running past `flint.speculation.multiplier` × the
+//!   median committed span once `flint.speculation.quantile` of their
+//!   stage committed — and the driver launches a **speculative backup
+//!   attempt** (the next attempt number) that really re-executes on the
+//!   host, racing the primary's output through the shuffle;
+//! * commits are **first-attempt-wins**: the virtual clock commits a
+//!   task at its earliest-finishing attempt and cancels the loser at
+//!   that instant (`scheduler.speculative_launches` /
+//!   `scheduler.speculative_wins`). On the host, the winner's emitted
+//!   result is the one merged; the loser's duplicate shuffle output is
+//!   byte-identical by the determinism contract and dedups away —
+//!   attempt-safe commits (`exec::executor` seals every attempt's
+//!   output *before* its input ack) mean a cancelled loser can never
+//!   leave a torn partition. Every attempt — including cancelled losers
+//!   — bills its GB-seconds: Lambda has no mid-flight cancellation.
 //!
 //! Host execution always proceeds parent-before-child (the simulated
 //! queues only hold data after producers flush); the *virtual* overlap
-//! is computed from the measured per-task durations. Both latencies are
-//! reported on every run, so ablations never need a second execution.
+//! is computed from the measured per-attempt durations. Both latencies
+//! (and the speculation-free pipelined clock) are reported on every
+//! run, so ablations never need a second execution.
 
 use crate::compute::value::Value;
 use crate::exec::executor::{run_task, Emitted, ExecCtx, IoMode, TaskOutcome};
@@ -37,6 +69,7 @@ use crate::plan::{
 pub use crate::plan::ActionOut;
 use crate::runtime::PjrtRuntime;
 use crate::services::SimEnv;
+use crate::simtime::schedule::{schedule_dag_spec, tail_signal, SpecPolicy};
 use crate::simtime::{
     makespan, schedule_dag, Component, ScheduleMode, StageSpec, StageWindow, Timeline,
 };
@@ -97,6 +130,19 @@ pub struct RunOutput {
     pub shuffle_msgs: u64,
     pub duplicates_dropped: u64,
     pub rows: u64,
+    /// Speculative backup attempts the driver actually launched.
+    pub speculative_launches: u64,
+    /// Backups that would commit before their primary (stage-local
+    /// first-commit-wins; the global clocks re-derive exact timing).
+    pub speculative_wins: u64,
+    /// Occupied-but-idle seconds on the pipelined clock (long-polling
+    /// reducers holding live Lambdas); billed as GB-seconds whenever the
+    /// pipelined schedule is the selected one.
+    pub pipelined_idle_s: f64,
+    /// The pipelined clock *without* speculative backups — equals
+    /// `pipelined_latency_s` when speculation is off, so one execution
+    /// yields the exact speculation ablation.
+    pub pipelined_nospec_latency_s: f64,
 }
 
 /// Per-task accumulated stats returned by the task worker.
@@ -142,6 +188,18 @@ pub fn run_plan(
         },
     };
 
+    // The tail-signal policy: `flint.speculation = off` takes the exact
+    // pre-attempt-model code paths (no tail signal, no backups, plain
+    // schedules) — byte-identical by construction.
+    let policy = if cfg.flint.speculation.enabled {
+        Some(SpecPolicy {
+            multiplier: cfg.flint.speculation.multiplier.max(1.0),
+            quantile: cfg.flint.speculation.quantile.clamp(0.0, 1.0),
+        })
+    } else {
+        None
+    };
+
     let mut specs: Vec<StageSpec> = Vec::with_capacity(plan.stages.len());
     let mut stage_latencies = Vec::new();
     let mut merged_tl = Timeline::new();
@@ -162,6 +220,10 @@ pub fn run_plan(
         shuffle_msgs: 0,
         duplicates_dropped: 0,
         rows: 0,
+        speculative_launches: 0,
+        speculative_wins: 0,
+        pipelined_idle_s: 0.0,
+        pipelined_nospec_latency_s: 0.0,
     };
     let mut final_emits: Vec<Emitted> = Vec::new();
     let mut edge_msgs: BTreeMap<(u32, u32), u64> = BTreeMap::new();
@@ -195,9 +257,101 @@ pub fn run_plan(
             |_, desc| run_task_with_recovery(&ctx, desc, params),
         );
 
-        let mut durations = Vec::with_capacity(n_tasks);
+        // Attempt table, primary column: one committed attempt per task.
+        let mut primaries: Vec<TaskStats> = Vec::with_capacity(n_tasks);
         for r in results {
             let stats = r.map_err(|panic| anyhow!("task worker panicked: {panic}"))??;
+            primaries.push(stats);
+        }
+
+        // Attempt table, speculative column: the stage-local tail signal
+        // (the same event clock the global schedule uses) picks the
+        // stragglers, and the driver re-executes them NOW — the stage's
+        // input (S3 splits / parent queues) and output queues still
+        // exist, so the backup races the primary's commit for real. The
+        // backup is the task's next attempt number; its byte-identical
+        // shuffle re-sends dedup downstream, and only the winning
+        // attempt's driver-facing result is merged.
+        let mut backups: Vec<Option<f64>> = vec![None; n_tasks];
+        if let Some(policy) = &policy {
+            let durations: Vec<f64> = primaries.iter().map(|s| s.duration_s).collect();
+            let mut decisions = tail_signal(&durations, params.slots, policy);
+            // Which tasks may actually speculate:
+            // * S3-materializing tasks fed by a shuffle partition never
+            //   do — a backup re-materializing would PUT over the
+            //   winner's part file (real engines scope attempt output
+            //   through a committer: temp key + rename; this sim has
+            //   none yet).
+            // * On destructive-read backends (SQS, memory), NO
+            //   shuffle-input task speculates: the primary's commit
+            //   acked the partition away, so a backup would drain an
+            //   empty queue in ~0s — an unmeasurable (and dishonestly
+            //   flattering) duration. The host runs stages serially, so
+            //   it cannot reproduce the real race against the
+            //   visibility timeout. The S3 shuffle is re-readable and
+            //   its reduce backups re-execute (and race dedup) for
+            //   real.
+            // Scan tasks (re-readable S3 splits) always may.
+            let shuffle_input_rereadable = matches!(params.transport, Transport::S3);
+            decisions.retain(|d| {
+                match (&descriptors[d.task].input, &descriptors[d.task].output) {
+                    (TaskInput::ShufflePartition { .. }, TaskOutput::S3 { .. }) => false,
+                    (TaskInput::ShufflePartition { .. }, _) => shuffle_input_rereadable,
+                    _ => true,
+                }
+            });
+            if !decisions.is_empty() {
+                let backup_descs: Vec<TaskDescriptor> = decisions
+                    .iter()
+                    .map(|d| {
+                        let mut b = descriptors[d.task].clone();
+                        b.attempt = primaries[d.task].retries as u32 + 1;
+                        b
+                    })
+                    .collect();
+                let backup_results = crate::util::threadpool::scoped_map(
+                    &backup_descs,
+                    params.host_parallelism,
+                    |_, desc| run_task_with_recovery(&ctx, desc, params),
+                );
+                for (d, r) in decisions.iter().zip(backup_results) {
+                    env.metrics().incr("scheduler.speculative_launches");
+                    totals.speculative_launches += 1;
+                    match r.map_err(|panic| anyhow!("backup worker panicked: {panic}"))? {
+                        Ok(bstats) => {
+                            if d.launch_at + bstats.duration_s
+                                < d.primary_start + primaries[d.task].duration_s
+                            {
+                                env.metrics().incr("scheduler.speculative_wins");
+                                totals.speculative_wins += 1;
+                            }
+                            backups[d.task] = Some(bstats.duration_s);
+                            // Resource accounting is real for both
+                            // attempts; results are merged winner-only
+                            // (and a backup's duplicate output is
+                            // byte-identical anyway).
+                            merged_tl.merge(&bstats.timeline);
+                            totals.invocations += bstats.invocations;
+                            totals.retries += bstats.retries;
+                            totals.chains += bstats.chains;
+                            totals.shuffle_msgs += bstats.msgs_sent + bstats.msgs_received;
+                            totals.duplicates_dropped += bstats.duplicates_dropped;
+                            for (from, msgs) in &bstats.edge_received {
+                                *edge_msgs.entry((*from, stage.id)).or_insert(0) += *msgs;
+                            }
+                        }
+                        Err(_) => {
+                            // A backup that crashes out never fails the
+                            // query — the primary already committed.
+                            env.metrics().incr("scheduler.speculative_failures");
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut durations = Vec::with_capacity(n_tasks);
+        for stats in primaries {
             durations.push(stats.duration_s);
             merged_tl.merge(&stats.timeline);
             totals.invocations += stats.invocations;
@@ -224,6 +378,7 @@ pub fn run_plan(
             id: stage.id,
             parents: stage.parents.clone(),
             task_durations: durations,
+            backups,
             overhead_s: overhead,
         });
 
@@ -238,9 +393,18 @@ pub fn run_plan(
         }
     }
 
-    // Both clocks from the same measured durations: ablation-for-free.
-    let barrier = schedule_dag(&specs, params.slots, ScheduleMode::Barrier);
-    let pipelined = schedule_dag(&specs, params.slots, ScheduleMode::Pipelined);
+    // Both clocks from the same measured attempt durations: ablation for
+    // free. With speculation on, the clocks place the backups too; the
+    // speculation-free pipelined clock is always computed alongside so
+    // one execution prices the exact latency speculation bought.
+    let barrier = schedule_dag_spec(&specs, params.slots, ScheduleMode::Barrier, policy.as_ref());
+    let pipelined =
+        schedule_dag_spec(&specs, params.slots, ScheduleMode::Pipelined, policy.as_ref());
+    totals.pipelined_nospec_latency_s = if policy.is_some() {
+        schedule_dag(&specs, params.slots, ScheduleMode::Pipelined).latency_s
+    } else {
+        pipelined.latency_s
+    };
 
     for ((from, to), msgs) in &edge_msgs {
         env.metrics().add(&format!("shuffle.edge.s{from}-s{to}.msgs"), *msgs);
@@ -251,6 +415,15 @@ pub fn run_plan(
         ScheduleMode::Barrier => barrier.latency_s,
         ScheduleMode::Pipelined => pipelined.latency_s,
     };
+    totals.pipelined_idle_s = pipelined.idle_s;
+    // The pipelined overlap's cost side: long-polling consumers hold
+    // live Lambdas while idle, and AWS bills wall-clock duration. Only
+    // the selected clock's idle is billed (barrier runs have none), and
+    // only on Lambda-backed engines — cluster executors bill by the
+    // hour, idle included, already.
+    if params.lambda && params.schedule == ScheduleMode::Pipelined {
+        env.lambda().bill_idle(pipelined.idle_s);
+    }
     totals.barrier_latency_s = barrier.latency_s;
     totals.pipelined_latency_s = pipelined.latency_s;
     totals.barrier_windows = barrier.stages;
@@ -361,10 +534,22 @@ fn run_task_with_recovery(
         edge_received: Vec::new(),
         emitted: Emitted::Nothing,
     };
-    let mut attempt: u32 = 0;
+    // Primaries arrive as attempt 0; a speculative backup arrives with
+    // its own (higher) attempt number and MUST keep it — the straggler
+    // draw below is keyed by attempt, which is exactly what lets a
+    // backup land on a clean container while its primary straggles.
+    let mut attempt: u32 = base.attempt;
     // Chain checkpoints survive retries: a failed link restarts from the
     // last checkpoint, not from scratch (§III-B + §VI determinism).
     let mut resume: Option<ResumeState> = None;
+    // One straggler draw per *attempt* (a slow container is slow for
+    // every chain link it hosts; the attempt's retry — and a speculative
+    // backup, which arrives here as a higher attempt number — draws
+    // fresh).
+    let mut straggle = ctx
+        .env
+        .failure()
+        .straggler_factor(base.stage_id, base.task_index, attempt);
 
     loop {
         let mut desc = base.clone();
@@ -413,7 +598,8 @@ fn run_task_with_recovery(
         };
 
         match outcome {
-            TaskOutcome::Done(resp) => {
+            TaskOutcome::Done(mut resp) => {
+                charge_straggle(ctx, &mut resp.timeline, straggle);
                 if params.lambda {
                     finish_lambda(ctx, &resp.timeline)?;
                 }
@@ -427,7 +613,8 @@ fn run_task_with_recovery(
                 stats.emitted = resp.emitted;
                 return Ok(stats);
             }
-            TaskOutcome::Chained { resume: r, resp } => {
+            TaskOutcome::Chained { resume: r, mut resp } => {
+                charge_straggle(ctx, &mut resp.timeline, straggle);
                 if params.lambda {
                     finish_lambda(ctx, &resp.timeline)?;
                 }
@@ -450,8 +637,6 @@ fn run_task_with_recovery(
                 }
                 stats.duration_s += timeline.total();
                 stats.timeline.merge(&timeline);
-                stats.retries += 1;
-                ctx.env.metrics().incr("scheduler.task_retries");
                 attempt += 1;
                 if attempt > max_retries {
                     return Err(anyhow!(
@@ -461,8 +646,39 @@ fn run_task_with_recovery(
                         attempt
                     ));
                 }
+                // Per-attempt accounting: `retries` counts relaunches
+                // actually made. A chain-resume retry is ONE new attempt
+                // no matter how many segments the attempt later chains
+                // through, and a failure the retry budget refuses is not
+                // a retry (the old code counted it, overstating retry
+                // rates in RunOutput by one per exhausted task).
+                stats.retries += 1;
+                ctx.env.metrics().incr("scheduler.task_retries");
+                straggle = ctx
+                    .env
+                    .failure()
+                    .straggler_factor(base.stage_id, base.task_index, attempt);
             }
         }
+    }
+}
+
+/// Inflate a straggling attempt's billed duration: a slow container
+/// stretches its *work* (not its cold start) by `factor`, charged as
+/// [`Component::Straggler`] so timelines show where the time went. The
+/// extra stays under the Lambda duration cap — a real straggler would
+/// chain before the kill, and modelling that crash/chain dance adds
+/// nothing to the speculation story.
+fn charge_straggle(ctx: &ExecCtx, tl: &mut Timeline, factor: Option<f64>) {
+    let Some(factor) = factor else { return };
+    let billed = crate::exec::executor::billed_duration(tl);
+    let mut extra = (factor - 1.0).max(0.0) * billed;
+    if let Some(limit) = ctx.time_limit_s {
+        extra = extra.min(((limit - billed) * 0.95).max(0.0));
+    }
+    if extra > 0.0 {
+        ctx.env.metrics().incr("sim.straggler_slowdowns");
+        tl.charge(Component::Straggler, extra);
     }
 }
 

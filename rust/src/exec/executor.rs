@@ -14,6 +14,17 @@
 //! 5. respect the memory cap (flush shuffle buffers; error with the
 //!    paper's "increase the number of partitions" advice if aggregation
 //!    state can't fit).
+//!
+//! **Attempt-safe commits:** every reduce-side path seals its complete
+//! output — the final shuffle flush, the S3 materialization, or the
+//! driver-facing emit — *before* acking its drained input, and nacks
+//! everything back on any error in between. A task attempt therefore
+//! commits atomically: either its full output exists and the input is
+//! consumed, or the input returns to the queues for the next attempt.
+//! This is what makes racing duplicate attempts (retries *and*
+//! speculative backups) safe: a cancelled or crashed loser can never
+//! leave a torn partition, and a winner's byte-identical duplicate
+//! `(producer, seq)` messages dedup downstream (§VI).
 
 use crate::compute::batch::ColumnBatch;
 use crate::compute::csv::{fetch_range, SplitLines};
@@ -651,9 +662,11 @@ fn kernel_reduce(
         return Ok(Some(resume));
     }
 
-    for r in readers.iter_mut() {
-        r.ack(&mut resp.timeline)?;
-    }
+    // Seal the attempt's complete output BEFORE acking the drained
+    // input (attempt-safe commit): an S3 write that fails must leave the
+    // messages in flight — nacked below — so the next attempt re-reads
+    // them instead of finding acked-empty queues and silently emitting a
+    // partial result.
     match &task.output {
         TaskOutput::Driver => {
             resp.emitted =
@@ -665,15 +678,19 @@ fn kernel_reduce(
                 text.push_str(&format!("{k}\t{s}\t{c}\n"));
             }
             let key = format!("{prefix}/part-{:05}", task.task_index);
-            let dt = ctx
-                .env
-                .s3()
-                .put_object(bucket, &key, text.into_bytes())
-                .map_err(|e| anyhow!("save: {e}"))?;
+            let dt = match ctx.env.s3().put_object(bucket, &key, text.into_bytes()) {
+                Ok(dt) => dt,
+                Err(e) => return abandon_and_fail(&mut readers, anyhow!("save: {e}")),
+            };
             resp.timeline.charge(Component::S3Write, dt);
             resp.emitted = Emitted::Saved(1);
         }
-        out => return Err(anyhow!("kernel reduce cannot emit to {out:?}")),
+        out => {
+            return abandon_and_fail(&mut readers, anyhow!("kernel reduce cannot emit to {out:?}"))
+        }
+    }
+    for r in readers.iter_mut() {
+        r.ack(&mut resp.timeline)?;
     }
     Ok(None)
 }
@@ -1327,10 +1344,12 @@ fn route_pairs<'a>(
 
 /// Apply a reduce-side post-op chain to grouped `(key, value)` records
 /// and route the results (next shuffle stage, driver response, or S3) —
-/// the shared tail of DynReduce and DynCoGroup. Acks the drained
-/// readers between the routing loop and the final output flush,
-/// mirroring the pre-refactor reduce ordering; a pre-ack routing error
-/// nacks everything back for the retry.
+/// the shared tail of DynReduce and DynCoGroup. The attempt's complete
+/// output (final shuffle flush included) is sealed *before* the drained
+/// readers ack, and any routing/flush error nacks everything back: a
+/// crashed or cancelled attempt can never leave acked-empty input
+/// behind a partial output (attempt-safe commit — what makes racing
+/// duplicate attempts and speculative backups safe on every backend).
 fn route_post_ops(
     ctx: &ExecCtx,
     task: &TaskDescriptor,
@@ -1345,14 +1364,14 @@ fn route_post_ops(
     };
     let RoutedOutputs { mut writer, mut next_side, collected, count } = routed;
 
-    for r in readers.iter_mut() {
-        r.ack(&mut resp.timeline)?;
-    }
     match &task.output {
         TaskOutput::Shuffle { .. } => {
             let w = writer.as_mut().expect("writer");
-            flush_side(&mut next_side, w, &mut resp.timeline)?;
-            w.flush_all(&mut resp.timeline)?;
+            let sealed = flush_side(&mut next_side, w, &mut resp.timeline)
+                .and_then(|()| w.flush_all(&mut resp.timeline));
+            if let Err(e) = sealed {
+                return abandon_and_fail(readers, e);
+            }
             resp.msgs_sent = w.msgs_sent;
         }
         TaskOutput::Driver => {
@@ -1362,9 +1381,15 @@ fn route_post_ops(
             };
         }
         TaskOutput::S3 { bucket, prefix } => {
-            resp.emitted =
-                save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)?;
+            match save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)
+            {
+                Ok(emitted) => resp.emitted = emitted,
+                Err(e) => return abandon_and_fail(readers, e),
+            }
         }
+    }
+    for r in readers.iter_mut() {
+        r.ack(&mut resp.timeline)?;
     }
     Ok(None)
 }

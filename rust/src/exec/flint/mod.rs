@@ -146,6 +146,8 @@ pub(crate) fn report(
         latency_s: out.latency_s,
         barrier_latency_s: out.barrier_latency_s,
         pipelined_latency_s: out.pipelined_latency_s,
+        pipelined_nospec_latency_s: out.pipelined_nospec_latency_s,
+        pipelined_idle_s: out.pipelined_idle_s,
         cost_usd: cost.total(),
         cost,
         stage_latencies: out.stage_latencies,
@@ -159,6 +161,8 @@ pub(crate) fn report(
         chains: out.chains,
         shuffle_msgs: out.shuffle_msgs,
         duplicates_dropped: out.duplicates_dropped,
+        speculative_launches: out.speculative_launches,
+        speculative_wins: out.speculative_wins,
     }
 }
 

@@ -33,6 +33,13 @@ pub struct QueryReport {
     pub barrier_latency_s: f64,
     /// Latency under the pipelined DAG clock (always computed).
     pub pipelined_latency_s: f64,
+    /// The pipelined clock with speculative backups ignored — equals
+    /// `pipelined_latency_s` when speculation is off, so one run prices
+    /// the exact latency speculation bought.
+    pub pipelined_nospec_latency_s: f64,
+    /// Occupied-but-idle long-polling seconds on the pipelined clock
+    /// (billed as GB-seconds when pipelined is the selected schedule).
+    pub pipelined_idle_s: f64,
     /// USD for this query (Table I column 2).
     pub cost_usd: f64,
     pub cost: CostSnapshot,
@@ -51,6 +58,9 @@ pub struct QueryReport {
     pub chains: u64,
     pub shuffle_msgs: u64,
     pub duplicates_dropped: u64,
+    /// Speculative backup attempts launched / won (attempt model).
+    pub speculative_launches: u64,
+    pub speculative_wins: u64,
 }
 
 impl QueryReport {

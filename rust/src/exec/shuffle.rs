@@ -20,10 +20,14 @@
 //! Determinism contract (what makes §VI dedup sound): a task's shuffle
 //! output — record order, message boundaries, sequence numbers — is a
 //! pure function of its input, never of timing. Buffers flush on byte
-//! thresholds; a retried attempt therefore re-sends byte-identical
-//! `(producer, seq)` messages and the reduce side drops duplicates of
-//! both kinds (SQS at-least-once redelivery *and* retry re-sends) with
-//! one mechanism.
+//! thresholds; a re-executed attempt therefore re-sends byte-identical
+//! `(producer, seq)` messages (`producer_id` stays keyed by
+//! (stage, task), never by attempt) and the reduce side drops duplicates
+//! of all three kinds — SQS at-least-once redelivery, retry re-sends,
+//! and **speculative backup attempts** racing their primary — with one
+//! mechanism. Executors seal an attempt's complete output through this
+//! layer *before* acking the input it was derived from, so a cancelled
+//! or crashed attempt never leaves a torn partition behind.
 
 use crate::compute::value::Value;
 use crate::data::SHUFFLE_BUCKET;

@@ -137,6 +137,15 @@ fn cmd_run(args: &Args, cfg: FlintConfig) -> Result<(), String> {
     println!("virtual latency: {}", human_duration(report.latency_s));
     println!("time breakdown (per-task sum): {}", report.timeline);
     println!("cost: {}", report.cost);
+    if report.speculative_launches > 0 {
+        println!(
+            "speculation: {} backup(s), {} won (pipelined {:.2}s vs {:.2}s without)",
+            report.speculative_launches,
+            report.speculative_wins,
+            report.pipelined_latency_s,
+            report.pipelined_nospec_latency_s
+        );
+    }
     Ok(())
 }
 
@@ -192,6 +201,24 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
     }
     for e in &report.edge_shuffle {
         println!("edge s{}->s{}: {} shuffle msgs", e.from, e.to, e.msgs);
+    }
+    // The latency-vs-cost trade the overlap (and speculation) buys:
+    // long-polling reducers bill GB-seconds while idle, and every
+    // speculative attempt bills even when it loses the race.
+    if report.pipelined_idle_s > 0.0 {
+        println!(
+            "pipelined long-poll idle: {:.2}s of occupied-but-idle Lambda time (billed as GB-seconds when pipelined is selected)",
+            report.pipelined_idle_s
+        );
+    }
+    if report.speculative_launches > 0 {
+        println!(
+            "speculation: {} backup attempt(s) launched, {} won — pipelined {:.2}s vs {:.2}s without backups",
+            report.speculative_launches,
+            report.speculative_wins,
+            report.pipelined_latency_s,
+            report.pipelined_nospec_latency_s
+        );
     }
     Ok(())
 }

@@ -4,23 +4,43 @@
 //! another issue is the at-least-once message semantics of SQS." Both
 //! failure modes are injected here so experiments are reproducible from a
 //! single seed, and tests can also *force* specific failures.
+//!
+//! The third injected hazard is the **straggler**: a task attempt that
+//! lands on a slow container and runs a heavy-tailed multiple of its
+//! normal duration (the motivation for speculative re-execution).
+//! Straggler draws are *stateless* — hashed from `(seed, stage, task,
+//! attempt)` — so the same attempts straggle no matter how host threads
+//! interleave or how often the run repeats, and a straggling attempt's
+//! backup (a different attempt number) rolls independently: the classic
+//! "slow node, not slow work" assumption behind backup tasks.
 
 use crate::util::rng::Pcg64;
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
+
+/// Straggler slowdowns are capped here: a Pareto tail occasionally draws
+/// absurd factors, and a 25x-slow Lambda would hit the duration cap
+/// (chaining) long before running 100x over.
+pub const MAX_STRAGGLER_FACTOR: f64 = 25.0;
 
 /// Deterministic, seedable failure source shared by the Lambda and SQS
 /// simulators.
 pub struct FailureInjector {
     state: Mutex<State>,
+    seed: u64,
     lambda_failure_prob: f64,
     sqs_duplicate_prob: f64,
+    straggler_prob: f64,
+    straggler_factor: f64,
+    straggler_alpha: f64,
 }
 
 struct State {
     rng: Pcg64,
     /// Task attempts forced to fail: (stage, task, attempt).
     forced_task_failures: HashSet<(u32, u32, u32)>,
+    /// Task attempts forced to straggle: (stage, task, attempt) → factor.
+    forced_stragglers: HashMap<(u32, u32, u32), f64>,
 }
 
 impl FailureInjector {
@@ -29,10 +49,24 @@ impl FailureInjector {
             state: Mutex::new(State {
                 rng: Pcg64::new(seed, 911),
                 forced_task_failures: HashSet::new(),
+                forced_stragglers: HashMap::new(),
             }),
+            seed,
             lambda_failure_prob,
             sqs_duplicate_prob,
+            straggler_prob: 0.0,
+            straggler_factor: 6.0,
+            straggler_alpha: 2.0,
         }
+    }
+
+    /// Enable random heavy-tailed straggler injection (builder-style;
+    /// `SimEnv` wires `sim.straggler_*` through here).
+    pub fn with_stragglers(mut self, prob: f64, factor: f64, alpha: f64) -> Self {
+        self.straggler_prob = prob;
+        self.straggler_factor = factor.max(1.0);
+        self.straggler_alpha = alpha.max(0.1);
+        self
     }
 
     /// Should this invocation crash? (Random path.)
@@ -69,6 +103,59 @@ impl FailureInjector {
             .forced_task_failures
             .remove(&(stage, task, attempt))
     }
+
+    /// Force `(stage, task, attempt)` to run `factor`× slower, exactly
+    /// once — surgical straggler placement for speculation tests.
+    pub fn force_straggler(&self, stage: u32, task: u32, attempt: u32, factor: f64) {
+        self.state
+            .lock()
+            .expect("failure lock")
+            .forced_stragglers
+            .insert((stage, task, attempt), factor.max(1.0));
+    }
+
+    /// Slowdown factor for this attempt, if it straggles. Forced entries
+    /// fire once; the random path is a pure hash of
+    /// `(seed, stage, task, attempt)` — thread-interleaving-independent
+    /// and repeatable, so speculation ablations compare identical runs.
+    pub fn straggler_factor(&self, stage: u32, task: u32, attempt: u32) -> Option<f64> {
+        if let Some(f) = self
+            .state
+            .lock()
+            .expect("failure lock")
+            .forced_stragglers
+            .remove(&(stage, task, attempt))
+        {
+            return Some(f);
+        }
+        if self.straggler_prob <= 0.0 {
+            return None;
+        }
+        let h = mix64(
+            self.seed ^ 0x5354_5241_4747_4c45, // "STRAGGLE"
+            ((stage as u64) << 40) | ((task as u64) << 8) | attempt as u64,
+        );
+        if unit_f64(h) >= self.straggler_prob {
+            return None;
+        }
+        // Pareto(alpha) tail scaled by the minimum factor, capped.
+        let u = unit_f64(mix64(h, 0x9e37_79b9_7f4a_7c15));
+        let pareto = (1.0 - u).max(1e-9).powf(-1.0 / self.straggler_alpha);
+        Some((self.straggler_factor * pareto).min(MAX_STRAGGLER_FACTOR))
+    }
+}
+
+/// SplitMix64-style stateless mixer.
+fn mix64(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Uniform in [0, 1) from the top 53 bits.
+fn unit_f64(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
 }
 
 #[cfg(test)]
@@ -107,5 +194,62 @@ mod tests {
         let seq_a: Vec<bool> = (0..100).map(|_| a.lambda_should_fail()).collect();
         let seq_b: Vec<bool> = (0..100).map(|_| b.lambda_should_fail()).collect();
         assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn forced_stragglers_fire_once() {
+        let f = FailureInjector::new(1, 0.0, 0.0);
+        f.force_straggler(0, 3, 0, 8.0);
+        assert_eq!(f.straggler_factor(0, 3, 1), None, "different attempt");
+        assert_eq!(f.straggler_factor(0, 3, 0), Some(8.0));
+        assert_eq!(f.straggler_factor(0, 3, 0), None, "consumed");
+    }
+
+    #[test]
+    fn random_stragglers_are_stateless_and_heavy_tailed() {
+        let f = FailureInjector::new(7, 0.0, 0.0).with_stragglers(0.2, 4.0, 2.0);
+        // Stateless: the same attempt draws the same factor regardless of
+        // query order or thread interleaving.
+        let a = f.straggler_factor(1, 5, 0);
+        for _ in 0..10 {
+            assert_eq!(f.straggler_factor(1, 5, 0), a);
+        }
+        // Rate roughly respected over many attempts; every straggler is
+        // at least the minimum factor and capped.
+        let mut hits = 0usize;
+        for stage in 0..4u32 {
+            for task in 0..500u32 {
+                if let Some(fac) = f.straggler_factor(stage, task, 0) {
+                    hits += 1;
+                    assert!((4.0..=MAX_STRAGGLER_FACTOR).contains(&fac), "{fac}");
+                }
+            }
+        }
+        let rate = hits as f64 / 2000.0;
+        assert!((rate - 0.2).abs() < 0.05, "straggler rate {rate}");
+        // Independent across attempts: a straggling attempt's backup is
+        // usually clean (different attempt id → fresh draw).
+        let f2 = FailureInjector::new(8, 0.0, 0.0).with_stragglers(0.2, 4.0, 2.0);
+        let mut both = 0;
+        let mut first = 0;
+        for task in 0..2000u32 {
+            let a0 = f2.straggler_factor(0, task, 0).is_some();
+            let a1 = f2.straggler_factor(0, task, 1).is_some();
+            first += a0 as usize;
+            both += (a0 && a1) as usize;
+        }
+        assert!(both < first / 2, "attempt draws must be independent ({both}/{first})");
+        // A different seed draws a different pattern.
+        let f3 = FailureInjector::new(9, 0.0, 0.0).with_stragglers(0.2, 4.0, 2.0);
+        let same = (0..2000u32)
+            .filter(|&t| f2.straggler_factor(1, t, 0).is_some() == f3.straggler_factor(1, t, 0).is_some())
+            .count();
+        assert!(same < 2000, "seeds must matter");
+    }
+
+    #[test]
+    fn zero_probability_never_straggles() {
+        let f = FailureInjector::new(1, 0.0, 0.0);
+        assert!((0..500u32).all(|t| f.straggler_factor(0, t, 0).is_none()));
     }
 }

@@ -159,6 +159,21 @@ impl LambdaService {
         self.metrics.add("lambda.billed_100ms", (billed * 10.0) as u64);
     }
 
+    /// Bill GB-seconds for occupied-but-idle time: pipelined reducers
+    /// long-poll their queues inside a live invocation, so the overlap
+    /// that buys latency is not free — AWS bills wall-clock duration,
+    /// idle or not (the ROADMAP's pipelined-aware cost item). Charged
+    /// once per run from the aggregate virtual idle, no request fee.
+    pub fn bill_idle(&self, idle_s: f64) {
+        if idle_s <= 0.0 {
+            return;
+        }
+        let billed = (idle_s * 10.0).ceil() / 10.0;
+        let gb = self.memory_mb as f64 / 1024.0;
+        self.cost.charge(CostCategory::LambdaCompute, billed * gb * self.price_gb_s);
+        self.metrics.add("lambda.idle_billed_100ms", (billed * 10.0) as u64);
+    }
+
     /// Current warm-pool size for a function.
     pub fn warm_count(&self, function: &str) -> usize {
         self.warm
@@ -240,6 +255,19 @@ mod tests {
         assert!(cost.total() > 0.0, "timeout is still billed");
         // The container did not return to the pool.
         assert_eq!(svc.warm_count("exec"), 0);
+    }
+
+    #[test]
+    fn idle_billing_charges_gb_seconds_without_request_fee() {
+        let (svc, cost, metrics) = service(0.0);
+        svc.bill_idle(2.01);
+        let gb = 3008.0 / 1024.0;
+        let expected = 2.1 * gb * 0.00001667; // rounded up, no request fee
+        assert!((cost.total() - expected).abs() < 1e-12, "{}", cost.total());
+        assert_eq!(metrics.get("lambda.idle_billed_100ms"), 21);
+        // Zero or negative idle is a no-op.
+        svc.bill_idle(0.0);
+        assert!((cost.total() - expected).abs() < 1e-12);
     }
 
     #[test]

@@ -48,11 +48,18 @@ impl SimEnv {
     pub fn new(config: FlintConfig) -> SimEnv {
         let cost = Arc::new(CostTracker::new());
         let metrics = Arc::new(Metrics::new());
-        let failure = Arc::new(FailureInjector::new(
-            config.seed,
-            config.sim.lambda_failure_prob,
-            config.sim.sqs_duplicate_prob,
-        ));
+        let failure = Arc::new(
+            FailureInjector::new(
+                config.seed,
+                config.sim.lambda_failure_prob,
+                config.sim.sqs_duplicate_prob,
+            )
+            .with_stragglers(
+                config.sim.straggler_prob,
+                config.sim.straggler_factor,
+                config.sim.straggler_alpha,
+            ),
+        );
         let s3 = ObjectStore::new(&config, Arc::clone(&cost), Arc::clone(&metrics));
         let sqs = SqsService::new(
             &config,

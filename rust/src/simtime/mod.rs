@@ -3,13 +3,20 @@
 //! Nothing in this repo talks to real AWS, so query latency cannot be
 //! measured directly. Instead every simulated service charges a *modeled*
 //! duration, real compute charges a *measured* duration, and each task
-//! accumulates both into a [`Timeline`]. Plan latency comes from the
-//! event-driven DAG clock in [`schedule`]: every task of every stage is
-//! placed onto the `K` shared concurrency slots, either with hard
-//! barriers between stages (the original Σ-makespan model, kept for the
-//! S3 shuffle backend and Table I) or *pipelined*, overlapping reduce
-//! long-polling with map flushes per §III-A. [`makespan`] remains the
-//! single-stage primitive the barrier path is built from.
+//! **attempt** accumulates both into a [`Timeline`]. Plan latency comes
+//! from the event-driven DAG clock in [`schedule`]: every attempt of
+//! every stage is placed onto the `K` shared concurrency slots, either
+//! with hard barriers between stages (the original Σ-makespan model,
+//! kept for the S3 shuffle backend and the exact-paper-reproduction
+//! mode) or *pipelined*, overlapping reduce long-polling with map
+//! flushes per §III-A. The same clock carries the speculation machinery:
+//! its **tail signal** ([`schedule::tail_signal`]) flags tasks running
+//! past `multiplier` × the median committed span of their stage peers,
+//! emits backup-launch events, and commits each task at its
+//! first-finishing attempt ([`schedule::schedule_dag_spec`]); it also
+//! meters the occupied-but-idle long-polling time the pipelined cost
+//! model bills. [`makespan`] remains the single-stage primitive the
+//! barrier path is built from.
 //!
 //! See DESIGN.md §5 for the calibration constants and rationale.
 
@@ -18,7 +25,10 @@ pub mod schedule;
 pub mod timeline;
 
 pub use makespan::{makespan, makespan_assignments};
-pub use schedule::{schedule_dag, ScheduleMode, ScheduleOut, StageSpec, StageWindow};
+pub use schedule::{
+    schedule_dag, schedule_dag_spec, tail_signal, BackupWindow, ScheduleMode, ScheduleOut,
+    SpecDecision, SpecPolicy, StageSpec, StageWindow,
+};
 pub use timeline::{Component, Timeline};
 
 use std::time::Instant;

@@ -1,14 +1,14 @@
 //! Cross-stage virtual-time scheduling: an event-driven global clock
-//! that places every task of a plan's stage DAG onto the shared
-//! Lambda-concurrency (or cluster-core) slots.
+//! that places every task **attempt** of a plan's stage DAG onto the
+//! shared Lambda-concurrency (or cluster-core) slots.
 //!
 //! Two modes, selected per run:
 //!
 //! * **Barrier** — the original serial driver's model, kept for the
-//!   Qubole-style S3 shuffle backend and as the Table I baseline: stages
-//!   execute strictly one after another; stage latency is its task
-//!   makespan plus driver overhead, and plan latency is the sum. This
-//!   reproduces the pre-DAG Σ-makespan numbers exactly.
+//!   Qubole-style S3 shuffle backend and as the exact-paper-reproduction
+//!   mode: stages execute strictly one after another; stage latency is
+//!   its task makespan plus driver overhead, and plan latency is the
+//!   sum. This reproduces the pre-DAG Σ-makespan numbers exactly.
 //! * **Pipelined** — the paper's SQS semantics (§III-A): a stage's tasks
 //!   become launchable as soon as *every parent has started producing*
 //!   (reduce tasks long-poll their queues concurrently with map
@@ -23,14 +23,43 @@
 //!   overlap would lose — pipelined mode never schedules worse than
 //!   barrier mode.
 //!
-//! The driver runs tasks on real threads in topological order (the
+//! # The attempt model and the live tail signal
+//!
+//! Tasks are no longer single-shot: with a [`SpecPolicy`], the event
+//! clock watches each stage's *tail*. Once `quantile` of a stage's
+//! tasks have committed, any task still running past `multiplier` × the
+//! median committed span raises the tail signal and the clock emits a
+//! **backup-launch event** for it (classic MapReduce/Spark backup-task
+//! speculation). A backup attempt queues for a slot *behind* all
+//! primary work, runs the task's re-measured backup duration, and the
+//! task commits when its **first** attempt finishes — first-commit-wins.
+//! The losing attempt is cancelled the instant the winner commits: its
+//! slot frees immediately, but the host still billed its full runtime
+//! (Lambda has no mid-flight cancellation; the §VI dedup machinery is
+//! what makes the loser's duplicate output harmless).
+//!
+//! Two uses of the same machinery:
+//! * [`tail_signal`] — decide-only, single stage: which tasks *would*
+//!   get backups, and when. The driver uses this right after a stage's
+//!   primary attempts finish (so backup attempts can actually re-execute
+//!   while the stage's shuffle queues still exist).
+//! * [`schedule_dag_spec`] — model mode: place primaries *and* measured
+//!   backup attempts on the global clock, deriving launch times, the
+//!   winner, loser cancellation, and occupied-but-idle (long-polling)
+//!   time per attempt for the pipelined cost model.
+//!
+//! The driver runs attempts on real threads in topological order (the
 //! simulated queues hold data only after producers flush); this module
-//! is where the *virtual* overlap between stages is computed from the
-//! per-task durations those runs measured.
+//! is where the *virtual* overlap between stages — and the race between
+//! attempts — is computed from the per-attempt durations those runs
+//! measured. With no policy, the schedule is byte-identical to the
+//! pre-speculation scheduler (`flint.speculation = off` pins this).
 
 use crate::simtime::makespan::makespan_assignments;
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
+
+const EPS: f64 = 1e-12;
 
 /// How stages are allowed to overlap in virtual time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -62,20 +91,62 @@ impl ScheduleMode {
     }
 }
 
+/// Speculative-execution policy for the clock's tail signal (see module
+/// docs). `multiplier` × the median committed span is the threshold;
+/// `quantile` is the fraction of a stage's tasks that must commit before
+/// the median is trusted (1.0 disables the signal entirely).
+#[derive(Debug, Clone, Copy)]
+pub struct SpecPolicy {
+    pub multiplier: f64,
+    pub quantile: f64,
+}
+
+/// One backup-launch decision from the decide-only tail signal.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpecDecision {
+    /// Task index within the stage (submission order).
+    pub task: usize,
+    /// When the task's primary attempt started on the stage-local clock.
+    pub primary_start: f64,
+    /// When the tail signal fired (the backup-launch event time).
+    pub launch_at: f64,
+}
+
 /// One stage's scheduling inputs: the DAG edge structure plus the
-/// measured virtual duration of each task.
+/// measured virtual duration of each attempt.
 #[derive(Debug, Clone)]
 pub struct StageSpec {
     pub id: u32,
     /// Parent stage ids (must be < `id`; stages arrive topo-ordered).
     pub parents: Vec<u32>,
-    /// Virtual duration of each task, in submission order.
+    /// Virtual duration of each task's primary attempt, in submission
+    /// order.
     pub task_durations: Vec<f64>,
+    /// Measured duration of each task's speculative backup attempt, when
+    /// one was launched (empty = no backups for this stage). Only
+    /// consulted under a [`SpecPolicy`].
+    pub backups: Vec<Option<f64>>,
     /// Driver-side overhead for this stage (task serialization, queue
     /// management). Charged serially after the stage in barrier mode —
     /// matching the original Σ model — and before its first task can
     /// launch in pipelined mode.
     pub overhead_s: f64,
+}
+
+impl StageSpec {
+    fn backup_of(&self, task: usize) -> Option<f64> {
+        self.backups.get(task).copied().flatten()
+    }
+}
+
+/// A launched backup attempt's span on the clock.
+#[derive(Debug, Clone, Copy)]
+pub struct BackupWindow {
+    pub task: usize,
+    pub start: f64,
+    /// Commit time if it won, cancellation time if it lost.
+    pub end: f64,
+    pub won: bool,
 }
 
 /// Where one stage landed on the virtual clock.
@@ -86,8 +157,11 @@ pub struct StageWindow {
     pub start: f64,
     /// When its last task finished (barrier: plus driver overhead).
     pub end: f64,
-    /// Per-task `(start, end)` spans, in submission order.
+    /// Per-task `(start, commit)` spans, in submission order. A task's
+    /// span closes at its *first* committing attempt.
     pub tasks: Vec<(f64, f64)>,
+    /// Speculative backup attempts launched for this stage's tasks.
+    pub backups: Vec<BackupWindow>,
 }
 
 impl StageWindow {
@@ -103,24 +177,55 @@ pub struct ScheduleOut {
     /// End-to-end virtual latency (time the last task/overhead ends).
     pub latency_s: f64,
     pub stages: Vec<StageWindow>,
+    /// Occupied-but-idle seconds summed over all attempts: the time a
+    /// long-polling consumer held its slot (and its Lambda) while
+    /// waiting for producer chunks. Zero in barrier mode. The pipelined
+    /// cost model bills these GB-seconds.
+    pub idle_s: f64,
+    /// Backup attempts the clock launched.
+    pub spec_launches: u64,
+    /// Backup attempts that committed before their primary.
+    pub spec_wins: u64,
+}
+
+/// Schedule a stage DAG onto `slots` shared concurrency slots, with no
+/// speculation — byte-identical to the pre-attempt-model scheduler.
+pub fn schedule_dag(stages: &[StageSpec], slots: usize, mode: ScheduleMode) -> ScheduleOut {
+    schedule_dag_spec(stages, slots, mode, None)
 }
 
 /// Schedule a stage DAG onto `slots` shared concurrency slots.
 ///
 /// `stages` must be topologically ordered with dense ids (`id == index`,
 /// `parents[i] < id`) — the invariant `PhysicalPlan::validate` checks.
-pub fn schedule_dag(stages: &[StageSpec], slots: usize, mode: ScheduleMode) -> ScheduleOut {
+/// With a [`SpecPolicy`], stages' measured `backups` are placed by the
+/// live tail signal (see module docs); with `None` the backups are
+/// ignored and the schedule is byte-identical to [`schedule_dag`].
+pub fn schedule_dag_spec(
+    stages: &[StageSpec],
+    slots: usize,
+    mode: ScheduleMode,
+    policy: Option<&SpecPolicy>,
+) -> ScheduleOut {
     assert!(slots > 0, "schedule_dag needs at least one slot");
     for (i, s) in stages.iter().enumerate() {
         assert_eq!(s.id as usize, i, "stage ids must be dense and ordered");
         for &p in &s.parents {
             assert!(p < s.id, "stage {} parent {p} breaks topo order", s.id);
         }
+        assert!(
+            s.backups.is_empty() || s.backups.len() == s.task_durations.len(),
+            "stage {}: backups must be empty or one slot per task",
+            s.id
+        );
     }
     match mode {
-        ScheduleMode::Barrier => schedule_barrier(stages, slots),
+        ScheduleMode::Barrier => match policy {
+            None => schedule_barrier(stages, slots),
+            Some(p) => schedule_barrier_spec(stages, slots, p),
+        },
         ScheduleMode::Pipelined => {
-            let sim = schedule_pipelined(stages, slots);
+            let sim = simulate(stages, slots, policy, false).out;
             // Non-preemptive overlap scheduling has classical anomalies:
             // with several root stages whose ready times differ, a
             // later-ready but lower-priority stage can seize slots and
@@ -129,7 +234,10 @@ pub fn schedule_dag(stages: &[StageSpec], slots: usize, mode: ScheduleMode) -> S
             // scheduler prices both plans and keeps the serial one
             // whenever overlap would lose, so pipelined mode is never
             // worse than barrier mode by construction.
-            let serial = schedule_barrier(stages, slots);
+            let serial = match policy {
+                None => schedule_barrier(stages, slots),
+                Some(p) => schedule_barrier_spec(stages, slots, p),
+            };
             if sim.latency_s <= serial.latency_s {
                 sim
             } else {
@@ -137,6 +245,25 @@ pub fn schedule_dag(stages: &[StageSpec], slots: usize, mode: ScheduleMode) -> S
             }
         }
     }
+}
+
+/// Decide-only tail signal over one stage's primary durations: which
+/// tasks would get a backup attempt, and when the backup-launch event
+/// fires on the stage-local event clock. The driver calls this right
+/// after a stage's primary attempts complete, then actually re-executes
+/// the decided tasks while the stage's shuffle queues still exist.
+pub fn tail_signal(durations: &[f64], slots: usize, policy: &SpecPolicy) -> Vec<SpecDecision> {
+    if durations.len() < 2 {
+        return Vec::new();
+    }
+    let stage = [StageSpec {
+        id: 0,
+        parents: Vec::new(),
+        task_durations: durations.to_vec(),
+        backups: Vec::new(),
+        overhead_s: 0.0,
+    }];
+    simulate(&stage, slots, Some(policy), true).decisions
 }
 
 /// Serial stage-by-stage execution: exactly the original driver's
@@ -153,22 +280,74 @@ fn schedule_barrier(stages: &[StageSpec], slots: usize) -> ScheduleOut {
             start,
             end,
             tasks: spans.iter().map(|(a, b, _)| (start + a, start + b)).collect(),
+            backups: Vec::new(),
         });
         clock = end;
     }
-    ScheduleOut { latency_s: clock, stages: windows }
+    ScheduleOut {
+        latency_s: clock,
+        stages: windows,
+        idle_s: 0.0,
+        spec_launches: 0,
+        spec_wins: 0,
+    }
+}
+
+/// Barrier mode with speculation: each stage independently runs the
+/// speculative event clock (all of its input is on hand when the stage
+/// starts, so it is a single-stage simulation), then stages are laid
+/// end-to-end exactly like the plain Σ model.
+fn schedule_barrier_spec(stages: &[StageSpec], slots: usize, policy: &SpecPolicy) -> ScheduleOut {
+    let mut clock = 0.0f64;
+    let mut windows = Vec::with_capacity(stages.len());
+    let mut idle_s = 0.0;
+    let mut spec_launches = 0;
+    let mut spec_wins = 0;
+    for s in stages {
+        let single = [StageSpec {
+            id: 0,
+            parents: Vec::new(),
+            task_durations: s.task_durations.clone(),
+            backups: s.backups.clone(),
+            overhead_s: 0.0,
+        }];
+        let run = simulate(&single, slots, Some(policy), false).out;
+        let start = clock;
+        let end = start + run.latency_s + s.overhead_s;
+        let w = &run.stages[0];
+        windows.push(StageWindow {
+            id: s.id,
+            start,
+            end,
+            tasks: w.tasks.iter().map(|(a, b)| (start + a, start + b)).collect(),
+            backups: w
+                .backups
+                .iter()
+                .map(|b| BackupWindow { start: start + b.start, end: start + b.end, ..*b })
+                .collect(),
+        });
+        idle_s += run.idle_s;
+        spec_launches += run.spec_launches;
+        spec_wins += run.spec_wins;
+        clock = end;
+    }
+    ScheduleOut { latency_s: clock, stages: windows, idle_s, spec_launches, spec_wins }
 }
 
 // ---------------------------------------------------------------------
-// Pipelined mode: event-driven simulation
+// Event-driven simulation (pipelined mode + all speculation)
 // ---------------------------------------------------------------------
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum EventKind {
     /// Stage becomes launchable (overhead paid, parents started).
     StageReady { stage: usize },
-    /// A task finished; frees its slot and releases chunks downstream.
+    /// A primary attempt finished; commits the task unless cancelled.
     TaskEnd { stage: usize, task: usize },
+    /// A backup attempt finished; commits the task unless cancelled.
+    BackupEnd { stage: usize, task: usize },
+    /// Re-evaluate the tail signal for one still-running task.
+    SpecCheck { stage: usize, task: usize },
 }
 
 #[derive(Debug, PartialEq)]
@@ -197,17 +376,39 @@ impl PartialOrd for Event {
     }
 }
 
+/// One attempt's lifecycle on the clock. A task holds one primary and at
+/// most one backup attempt; the first attempt to finish commits the task
+/// and the other is `Cancelled` at that instant (slot freed, span
+/// recorded — the host still billed its full runtime).
 #[derive(Debug, Clone, Copy)]
-enum TaskState {
+enum AttemptState {
     NotStarted,
     /// Long-polling/processing: `busy_until` is when already-released
     /// work finishes; `remaining` producer tasks still owe a chunk.
     Running { start: f64, busy_until: f64, remaining: usize, chunk_w: f64 },
     Done { start: f64, end: f64 },
+    Cancelled { start: f64, end: f64 },
+}
+
+impl AttemptState {
+    fn running_start(&self) -> Option<f64> {
+        match self {
+            AttemptState::Running { start, .. } => Some(*start),
+            _ => None,
+        }
+    }
+}
+
+struct SimRun {
+    out: ScheduleOut,
+    decisions: Vec<SpecDecision>,
 }
 
 struct Sim<'a> {
     stages: &'a [StageSpec],
+    policy: Option<&'a SpecPolicy>,
+    /// Decide-only mode: record tail-signal decisions, launch nothing.
+    decide_only: bool,
     /// Total producer tasks feeding each stage (sum over parents).
     producer_tasks: Vec<usize>,
     /// Producer tasks already finished, per consumer stage.
@@ -218,11 +419,26 @@ struct Sim<'a> {
     /// Parents that have started producing, per stage.
     parents_started: Vec<usize>,
     pending: Vec<VecDeque<usize>>,
-    tasks: Vec<Vec<TaskState>>,
+    primary: Vec<Vec<AttemptState>>,
+    backup: Vec<Vec<AttemptState>>,
+    /// Tail signal already fired for this task (decision recorded or
+    /// backup queued) — it fires at most once per task.
+    triggered: Vec<Vec<bool>>,
+    /// Backups waiting for a slot (behind all primary work).
+    spec_pending: VecDeque<(usize, usize)>,
+    /// Committed task spans per stage, kept sorted (the tail signal's
+    /// median input).
+    done_spans: Vec<Vec<f64>>,
+    /// Last SpecCheck time booked per task (exact-duplicate dedup).
+    check_booked: Vec<Vec<f64>>,
+    decisions: Vec<SpecDecision>,
     free_slots: usize,
     events: BinaryHeap<Event>,
     seq: u64,
     ends_left: usize,
+    latency: f64,
+    spec_launches: u64,
+    spec_wins: u64,
 }
 
 impl<'a> Sim<'a> {
@@ -253,50 +469,158 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Start task `t` of `stage` at `now` (a slot has been claimed).
+    /// Start the primary attempt of task `t` of `stage` at `now` (a slot
+    /// has been claimed).
     fn start_task(&mut self, stage: usize, t: usize, now: f64) {
         let d = self.stages[stage].task_durations[t];
         self.note_first_start(stage, now);
-        let m = self.producer_tasks[stage];
-        if m == 0 {
-            // Source task: all input available immediately.
-            self.tasks[stage][t] =
-                TaskState::Running { start: now, busy_until: now + d, remaining: 0, chunk_w: 0.0 };
-            self.push(now + d, EventKind::TaskEnd { stage, task: t });
-        } else {
-            let chunk_w = d / m as f64;
-            let released = self.released[stage];
-            let busy_until = now + released as f64 * chunk_w;
-            let remaining = m - released;
-            self.tasks[stage][t] =
-                TaskState::Running { start: now, busy_until, remaining, chunk_w };
-            if remaining == 0 {
-                self.push(busy_until, EventKind::TaskEnd { stage, task: t });
+        self.primary[stage][t] = self.start_attempt(stage, d, now);
+        if let AttemptState::Running { busy_until, remaining: 0, .. } = self.primary[stage][t] {
+            self.push(busy_until, EventKind::TaskEnd { stage, task: t });
+        }
+        // A task launched after its stage's quorum already committed
+        // (late waves) gets its tail check booked at start — commits
+        // alone would never re-examine it.
+        if self.eligible(stage, t) {
+            if let Some(th) = self.threshold(stage) {
+                self.book_check(stage, t, now + th);
             }
         }
     }
 
-    /// A producer task of `stage` finished at `now`: release one chunk
-    /// to every task of every child stage.
+    /// Start a backup attempt for task `t` of `stage` at `now`. The
+    /// backup sees every chunk released so far immediately (the data is
+    /// sitting in the queues) and long-polls for the rest.
+    fn start_backup(&mut self, stage: usize, t: usize, now: f64) {
+        let d = self.stages[stage].backup_of(t).expect("backup duration");
+        self.spec_launches += 1;
+        self.backup[stage][t] = self.start_attempt(stage, d, now);
+        if let AttemptState::Running { busy_until, remaining: 0, .. } = self.backup[stage][t] {
+            self.push(busy_until, EventKind::BackupEnd { stage, task: t });
+        }
+    }
+
+    fn start_attempt(&mut self, stage: usize, d: f64, now: f64) -> AttemptState {
+        let m = self.producer_tasks[stage];
+        if m == 0 {
+            // Source task: all input available immediately.
+            AttemptState::Running { start: now, busy_until: now + d, remaining: 0, chunk_w: 0.0 }
+        } else {
+            let chunk_w = d / m as f64;
+            let released = self.released[stage];
+            AttemptState::Running {
+                start: now,
+                busy_until: now + released as f64 * chunk_w,
+                remaining: m - released,
+                chunk_w,
+            }
+        }
+    }
+
+    /// A producer task of `stage` committed at `now`: release one chunk
+    /// to every attempt of every task of every child stage.
     #[allow(clippy::needless_range_loop)]
     fn release_chunks(&mut self, stage: usize, now: f64) {
         for ci in 0..self.children[stage].len() {
             let child = self.children[stage][ci];
             self.released[child] += 1;
-            for t in 0..self.tasks[child].len() {
-                if let TaskState::Running { start, busy_until, remaining, chunk_w } =
-                    self.tasks[child][t]
-                {
-                    debug_assert!(remaining > 0, "running consumer ran out of chunks early");
-                    let busy_until = busy_until.max(now) + chunk_w;
-                    let remaining = remaining - 1;
-                    self.tasks[child][t] =
-                        TaskState::Running { start, busy_until, remaining, chunk_w };
-                    if remaining == 0 {
-                        self.push(busy_until, EventKind::TaskEnd { stage: child, task: t });
-                    }
+            for t in 0..self.primary[child].len() {
+                if let Some(end) = advance_attempt(&mut self.primary[child][t], now) {
+                    self.push(end, EventKind::TaskEnd { stage: child, task: t });
+                }
+                if let Some(end) = advance_attempt(&mut self.backup[child][t], now) {
+                    self.push(end, EventKind::BackupEnd { stage: child, task: t });
                 }
             }
+        }
+    }
+
+    /// Shared commit bookkeeping once a task's first attempt finished.
+    fn commit_task(&mut self, stage: usize, task: usize, start: f64, now: f64) {
+        let _ = task;
+        self.ends_left -= 1;
+        self.latency = self.latency.max(now);
+        self.release_chunks(stage, now);
+        // Sorted insertion keeps the median O(1) per threshold check
+        // (spans are finite, so a plain `<=` partition is total).
+        let span = now - start;
+        let spans = &mut self.done_spans[stage];
+        let pos = spans.partition_point(|&x| x <= span);
+        spans.insert(pos, span);
+        self.check_tail(stage, now);
+    }
+
+    /// The tail-signal threshold for `stage`, if the quorum has been
+    /// reached: `multiplier` × median committed span.
+    fn threshold(&self, stage: usize) -> Option<f64> {
+        let policy = self.policy?;
+        let n = self.stages[stage].task_durations.len();
+        let done = self.done_spans[stage].len();
+        if n < 2 || done >= n {
+            return None;
+        }
+        let quorum = ((policy.quantile * n as f64).ceil() as usize).max(2);
+        if done < quorum {
+            return None;
+        }
+        // `done_spans` is maintained sorted by `commit_task`.
+        let spans = &self.done_spans[stage];
+        let median = if spans.len() % 2 == 1 {
+            spans[spans.len() / 2]
+        } else {
+            0.5 * (spans[spans.len() / 2 - 1] + spans[spans.len() / 2])
+        };
+        let th = policy.multiplier * median;
+        (th > 0.0).then_some(th)
+    }
+
+    fn eligible(&self, stage: usize, task: usize) -> bool {
+        !self.triggered[stage][task]
+            && (self.decide_only || self.stages[stage].backup_of(task).is_some())
+    }
+
+    /// Evaluate the tail signal for every running task of `stage`:
+    /// trigger overdue ones now, book a [`EventKind::SpecCheck`] at the
+    /// projected crossing time for the rest.
+    #[allow(clippy::needless_range_loop)]
+    fn check_tail(&mut self, stage: usize, now: f64) {
+        let Some(th) = self.threshold(stage) else { return };
+        for t in 0..self.primary[stage].len() {
+            if !self.eligible(stage, t) {
+                continue;
+            }
+            let Some(start) = self.primary[stage][t].running_start() else { continue };
+            if now - start >= th - EPS {
+                self.trigger(stage, t, start, now);
+            } else {
+                self.book_check(stage, t, start + th);
+            }
+        }
+    }
+
+    /// Book a tail check, suppressing exact duplicates: successive
+    /// commits under an unchanged median would otherwise book an
+    /// identical `start + threshold` check per commit. A duplicate
+    /// fires as a pure no-op (trigger is idempotent, a re-book lands on
+    /// the same time), so skipping it is behavior-identical while
+    /// keeping the event queue linear in the common case.
+    fn book_check(&mut self, stage: usize, task: usize, time: f64) {
+        if self.check_booked[stage][task] == time {
+            return;
+        }
+        self.check_booked[stage][task] = time;
+        self.push(time, EventKind::SpecCheck { stage, task });
+    }
+
+    /// The tail signal fired for (stage, task): record the decision or
+    /// queue the backup launch.
+    fn trigger(&mut self, stage: usize, task: usize, start: f64, now: f64) {
+        self.triggered[stage][task] = true;
+        if self.decide_only {
+            self.decisions
+                .push(SpecDecision { task, primary_start: start, launch_at: now });
+        } else {
+            self.spec_pending.push_back((stage, task));
         }
     }
 
@@ -304,6 +628,7 @@ impl<'a> Sim<'a> {
         let now = ev.time;
         match ev.kind {
             EventKind::StageReady { stage } => {
+                self.latency = self.latency.max(now);
                 self.ready[stage] = true;
                 if self.stages[stage].task_durations.is_empty() {
                     // Degenerate empty stage: "starts producing" (and
@@ -313,17 +638,57 @@ impl<'a> Sim<'a> {
                 }
             }
             EventKind::TaskEnd { stage, task } => {
-                if let TaskState::Running { start, busy_until, .. } = self.tasks[stage][task] {
-                    self.tasks[stage][task] = TaskState::Done { start, end: busy_until };
-                }
+                // Stale when the backup already committed this task.
+                let AttemptState::Running { start, .. } = self.primary[stage][task] else {
+                    return;
+                };
+                self.primary[stage][task] = AttemptState::Done { start, end: now };
                 self.free_slots += 1;
-                self.ends_left -= 1;
-                self.release_chunks(stage, now);
+                // First-commit-wins: a racing backup is cancelled at the
+                // commit instant (slot freed, span closed).
+                if let AttemptState::Running { start: bs, .. } = self.backup[stage][task] {
+                    self.backup[stage][task] = AttemptState::Cancelled { start: bs, end: now };
+                    self.free_slots += 1;
+                }
+                self.commit_task(stage, task, start, now);
+            }
+            EventKind::BackupEnd { stage, task } => {
+                // Stale when the primary already committed this task.
+                let AttemptState::Running { start: bs, .. } = self.backup[stage][task] else {
+                    return;
+                };
+                self.backup[stage][task] = AttemptState::Done { start: bs, end: now };
+                self.free_slots += 1;
+                self.spec_wins += 1;
+                // The primary is still running (otherwise this backup
+                // would have been cancelled at the primary's commit).
+                let AttemptState::Running { start, .. } = self.primary[stage][task] else {
+                    unreachable!("backup finished for a task with no running primary")
+                };
+                self.primary[stage][task] = AttemptState::Cancelled { start, end: now };
+                self.free_slots += 1;
+                self.commit_task(stage, task, start, now);
+            }
+            EventKind::SpecCheck { stage, task } => {
+                if !self.eligible(stage, task) {
+                    return;
+                }
+                let Some(start) = self.primary[stage][task].running_start() else { return };
+                // The median may have moved since this check was booked;
+                // re-evaluate against the current threshold.
+                let Some(th) = self.threshold(stage) else { return };
+                if now - start >= th - EPS {
+                    self.trigger(stage, task, start, now);
+                } else {
+                    self.book_check(stage, task, start + th);
+                }
             }
         }
     }
 
-    /// Claim slots for pending tasks, producers (lower stage ids) first.
+    /// Claim slots for pending work: primaries first (producers — lower
+    /// stage ids — before consumers), then queued backups. Backups never
+    /// displace primary work.
     fn dispatch(&mut self, now: f64) {
         while self.free_slots > 0 {
             let mut picked = None;
@@ -338,14 +703,62 @@ impl<'a> Sim<'a> {
             self.free_slots -= 1;
             self.start_task(s, t, now);
         }
+        while self.free_slots > 0 {
+            // A queued backup whose primary committed while it waited is
+            // moot — skip it without ever launching.
+            let Some((s, t)) = self.next_live_backup() else { break };
+            self.free_slots -= 1;
+            self.start_backup(s, t, now);
+        }
+    }
+
+    fn next_live_backup(&mut self) -> Option<(usize, usize)> {
+        while let Some((s, t)) = self.spec_pending.pop_front() {
+            if self.primary[s][t].running_start().is_some() {
+                return Some((s, t));
+            }
+        }
+        None
     }
 }
 
-/// Event-driven pipelined schedule (see module docs for the model).
-fn schedule_pipelined(stages: &[StageSpec], slots: usize) -> ScheduleOut {
+/// Advance a running attempt by one released chunk. Returns the finish
+/// time to book when this was the last chunk it owed.
+fn advance_attempt(state: &mut AttemptState, now: f64) -> Option<f64> {
+    if let AttemptState::Running { start, busy_until, remaining, chunk_w } = *state {
+        debug_assert!(remaining > 0, "running consumer ran out of chunks early");
+        let busy_until = busy_until.max(now) + chunk_w;
+        let remaining = remaining - 1;
+        *state = AttemptState::Running { start, busy_until, remaining, chunk_w };
+        if remaining == 0 {
+            return Some(busy_until);
+        }
+    }
+    None
+}
+
+/// Event-driven schedule (see module docs for the model). Pipelined
+/// stage overlap; with a policy, speculative backups ride the same
+/// clock. `decide_only` records tail-signal decisions without modelling
+/// backup execution (used by [`tail_signal`]).
+fn simulate(
+    stages: &[StageSpec],
+    slots: usize,
+    policy: Option<&SpecPolicy>,
+    decide_only: bool,
+) -> SimRun {
     let n = stages.len();
     if n == 0 {
-        return ScheduleOut { latency_s: 0.0, stages: Vec::new() };
+        return SimRun {
+            out: ScheduleOut {
+                latency_s: 0.0,
+                stages: Vec::new(),
+                idle_s: 0.0,
+                spec_launches: 0,
+                spec_wins: 0,
+            },
+            decisions: Vec::new(),
+        };
     }
     let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut producer_tasks = vec![0usize; n];
@@ -357,6 +770,8 @@ fn schedule_pipelined(stages: &[StageSpec], slots: usize) -> ScheduleOut {
     }
     let mut sim = Sim {
         stages,
+        policy,
+        decide_only,
         producer_tasks,
         released: vec![0; n],
         children,
@@ -367,14 +782,32 @@ fn schedule_pipelined(stages: &[StageSpec], slots: usize) -> ScheduleOut {
             .iter()
             .map(|s| (0..s.task_durations.len()).collect())
             .collect(),
-        tasks: stages
+        primary: stages
             .iter()
-            .map(|s| vec![TaskState::NotStarted; s.task_durations.len()])
+            .map(|s| vec![AttemptState::NotStarted; s.task_durations.len()])
             .collect(),
+        backup: stages
+            .iter()
+            .map(|s| vec![AttemptState::NotStarted; s.task_durations.len()])
+            .collect(),
+        triggered: stages
+            .iter()
+            .map(|s| vec![false; s.task_durations.len()])
+            .collect(),
+        spec_pending: VecDeque::new(),
+        done_spans: vec![Vec::new(); n],
+        check_booked: stages
+            .iter()
+            .map(|s| vec![f64::NEG_INFINITY; s.task_durations.len()])
+            .collect(),
+        decisions: Vec::new(),
         free_slots: slots,
         events: BinaryHeap::new(),
         seq: 0,
         ends_left: stages.iter().map(|s| s.task_durations.len()).sum(),
+        latency: 0.0,
+        spec_launches: 0,
+        spec_wins: 0,
     };
 
     // Root stages become ready once their driver overhead is paid.
@@ -384,10 +817,8 @@ fn schedule_pipelined(stages: &[StageSpec], slots: usize) -> ScheduleOut {
         }
     }
 
-    let mut latency = 0.0f64;
     while let Some(ev) = sim.events.pop() {
         let now = ev.time;
-        latency = latency.max(now);
         sim.handle(ev);
         // Drain every simultaneous event before dispatching, so a
         // same-instant readiness/completion can't lose a slot to a
@@ -398,25 +829,57 @@ fn schedule_pipelined(stages: &[StageSpec], slots: usize) -> ScheduleOut {
         }
         sim.dispatch(now);
     }
-    assert_eq!(sim.ends_left, 0, "pipelined schedule deadlocked");
+    assert_eq!(sim.ends_left, 0, "event schedule deadlocked");
 
+    let mut idle_s = 0.0;
     let windows = stages
         .iter()
         .map(|s| {
             let i = s.id as usize;
-            let tasks: Vec<(f64, f64)> = sim.tasks[i]
+            let tasks: Vec<(f64, f64)> = sim.primary[i]
                 .iter()
                 .map(|t| match t {
-                    TaskState::Done { start, end } => (*start, *end),
+                    AttemptState::Done { start, end } => (*start, *end),
+                    AttemptState::Cancelled { start, end } => (*start, *end),
                     other => unreachable!("unfinished task {other:?}"),
                 })
                 .collect();
+            for (t, (a, b)) in tasks.iter().enumerate() {
+                idle_s += (b - a - s.task_durations[t]).max(0.0);
+            }
+            let backups: Vec<BackupWindow> = sim.backup[i]
+                .iter()
+                .enumerate()
+                .filter_map(|(t, b)| match b {
+                    AttemptState::Done { start, end } => {
+                        Some(BackupWindow { task: t, start: *start, end: *end, won: true })
+                    }
+                    AttemptState::Cancelled { start, end } => {
+                        Some(BackupWindow { task: t, start: *start, end: *end, won: false })
+                    }
+                    _ => None,
+                })
+                .collect();
+            for b in &backups {
+                if let Some(d) = s.backup_of(b.task) {
+                    idle_s += (b.end - b.start - d).max(0.0);
+                }
+            }
             let start = sim.first_start[i].unwrap_or(0.0);
             let end = tasks.iter().fold(start, |acc, (_, e)| acc.max(*e));
-            StageWindow { id: s.id, start, end, tasks }
+            StageWindow { id: s.id, start, end, tasks, backups }
         })
         .collect();
-    ScheduleOut { latency_s: latency, stages: windows }
+    SimRun {
+        out: ScheduleOut {
+            latency_s: sim.latency,
+            stages: windows,
+            idle_s,
+            spec_launches: sim.spec_launches,
+            spec_wins: sim.spec_wins,
+        },
+        decisions: sim.decisions,
+    }
 }
 
 #[cfg(test)]
@@ -433,6 +896,7 @@ mod tests {
                 id: i as u32,
                 parents: if i == 0 { Vec::new() } else { vec![(i - 1) as u32] },
                 task_durations: d.clone(),
+                backups: Vec::new(),
                 overhead_s: overhead,
             })
             .collect()
@@ -449,6 +913,7 @@ mod tests {
         assert!((out.latency_s - expect).abs() < 1e-12, "{} vs {expect}", out.latency_s);
         // Windows are contiguous.
         assert!((out.stages[0].end - out.stages[1].start).abs() < 1e-12);
+        assert_eq!(out.idle_s, 0.0);
     }
 
     #[test]
@@ -471,6 +936,9 @@ mod tests {
         for (_, end) in &pipe.stages[1].tasks {
             assert!(*end >= maps_done - 1e-9, "reduce ended {end} before maps {maps_done}");
         }
+        // Long-polling reducers hold their slots while waiting: the
+        // pipelined clock reports occupied-but-idle time to bill.
+        assert!(pipe.idle_s > 0.0, "reducers long-polled, idle must be > 0");
     }
 
     #[test]
@@ -503,12 +971,25 @@ mod tests {
     fn multi_parent_stage_waits_for_all_parents() {
         // Two roots with very different lengths; sink needs both started.
         let stages = vec![
-            StageSpec { id: 0, parents: vec![], task_durations: vec![10.0], overhead_s: 0.0 },
-            StageSpec { id: 1, parents: vec![], task_durations: vec![1.0], overhead_s: 0.0 },
+            StageSpec {
+                id: 0,
+                parents: vec![],
+                task_durations: vec![10.0],
+                backups: Vec::new(),
+                overhead_s: 0.0,
+            },
+            StageSpec {
+                id: 1,
+                parents: vec![],
+                task_durations: vec![1.0],
+                backups: Vec::new(),
+                overhead_s: 0.0,
+            },
             StageSpec {
                 id: 2,
                 parents: vec![0, 1],
                 task_durations: vec![2.0, 2.0],
+                backups: Vec::new(),
                 overhead_s: 0.0,
             },
         ];
@@ -540,8 +1021,20 @@ mod tests {
     #[test]
     fn empty_stage_does_not_deadlock() {
         let stages = vec![
-            StageSpec { id: 0, parents: vec![], task_durations: vec![], overhead_s: 0.1 },
-            StageSpec { id: 1, parents: vec![0], task_durations: vec![1.0], overhead_s: 0.1 },
+            StageSpec {
+                id: 0,
+                parents: vec![],
+                task_durations: vec![],
+                backups: Vec::new(),
+                overhead_s: 0.1,
+            },
+            StageSpec {
+                id: 1,
+                parents: vec![0],
+                task_durations: vec![1.0],
+                backups: Vec::new(),
+                overhead_s: 0.1,
+            },
         ];
         let out = schedule_dag(&stages, 2, ScheduleMode::Pipelined);
         assert!(out.latency_s > 1.0, "{}", out.latency_s);
@@ -565,6 +1058,7 @@ mod tests {
                     id: r as u32,
                     parents: Vec::new(),
                     task_durations: if d.is_empty() { vec![1.0] } else { d },
+                    backups: Vec::new(),
                     overhead_s: g.f64(0.0, 0.5),
                 });
             }
@@ -573,6 +1067,7 @@ mod tests {
                 id: roots as u32,
                 parents: (0..roots as u32).collect(),
                 task_durations: (0..sink_tasks).map(|_| g.f64(0.1, 3.0)).collect(),
+                backups: Vec::new(),
                 overhead_s: g.f64(0.0, 0.5),
             });
             let b = schedule_dag(&stages, slots, ScheduleMode::Barrier);
@@ -617,5 +1112,199 @@ mod tests {
 
     fn stages_end(out: &ScheduleOut, id: usize) -> f64 {
         out.stages[id].end
+    }
+
+    // -- the attempt model ------------------------------------------------
+
+    const POLICY: SpecPolicy = SpecPolicy { multiplier: 1.5, quantile: 0.75 };
+
+    #[test]
+    fn tail_signal_flags_the_straggler() {
+        // 3 short tasks + 1 straggler on 4 slots: quorum (ceil(.75*4)=3)
+        // is reached at t=1 with median 1; the threshold crossing for the
+        // straggler (started at 0) is t=1.5.
+        let decisions = tail_signal(&[1.0, 1.0, 1.0, 8.0], 4, &POLICY);
+        assert_eq!(decisions.len(), 1, "{decisions:?}");
+        let d = decisions[0];
+        assert_eq!(d.task, 3);
+        assert!((d.primary_start - 0.0).abs() < 1e-9);
+        assert!((d.launch_at - 1.5).abs() < 1e-9, "launch at {}", d.launch_at);
+    }
+
+    #[test]
+    fn tail_signal_quiet_on_homogeneous_stages() {
+        assert!(tail_signal(&[1.0; 12], 4, &POLICY).is_empty());
+        // Waved execution of equal tasks must not speculate either: a
+        // second-wave task's elapsed time never exceeds the threshold.
+        assert!(tail_signal(&[2.0; 10], 3, &POLICY).is_empty());
+    }
+
+    #[test]
+    fn tail_signal_needs_quorum() {
+        // Quantile 1.0 disables the signal outright.
+        let p = SpecPolicy { multiplier: 1.5, quantile: 1.0 };
+        assert!(tail_signal(&[1.0, 1.0, 1.0, 50.0], 4, &p).is_empty());
+        // Fewer than two tasks: no peers, no medians, no signal.
+        assert!(tail_signal(&[50.0], 4, &POLICY).is_empty());
+    }
+
+    #[test]
+    fn backup_wins_cut_the_straggler_short() {
+        // One straggling map (8s vs 1s peers) with a measured 1s backup:
+        // the backup launches at ~1.5s and commits at ~2.5s, so the stage
+        // (and the reduce behind it) no longer waits 8s.
+        let mut stages = chain(&[vec![1.0, 1.0, 1.0, 8.0], vec![0.5, 0.5]], 0.0);
+        stages[0].backups = vec![None, None, None, Some(1.0)];
+        let plain = schedule_dag(&stages, 8, ScheduleMode::Pipelined);
+        let spec = schedule_dag_spec(&stages, 8, ScheduleMode::Pipelined, Some(&POLICY));
+        assert!(
+            spec.latency_s < plain.latency_s - 1e-9,
+            "spec {} must strictly beat plain {}",
+            spec.latency_s,
+            plain.latency_s
+        );
+        assert_eq!(spec.spec_launches, 1);
+        assert_eq!(spec.spec_wins, 1);
+        let bw = &spec.stages[0].backups;
+        assert_eq!(bw.len(), 1);
+        assert!(bw[0].won);
+        assert_eq!(bw[0].task, 3);
+        assert!((bw[0].start - 1.5).abs() < 1e-9, "backup launch at {}", bw[0].start);
+        assert!((bw[0].end - 2.5).abs() < 1e-9, "backup commit at {}", bw[0].end);
+        // The cancelled primary's span closes at the backup's commit.
+        let (ps, pe) = spec.stages[0].tasks[3];
+        assert!((ps - 0.0).abs() < 1e-9 && (pe - 2.5).abs() < 1e-9, "{ps}..{pe}");
+    }
+
+    #[test]
+    fn slow_backup_loses_and_is_cancelled() {
+        // The backup is no faster than the remaining straggler work: the
+        // primary commits first and the backup is cancelled at that
+        // instant — first-commit-wins, never last-attempt-overwrites.
+        let mut stages = chain(&[vec![1.0, 1.0, 1.0, 2.2]], 0.0);
+        stages[0].backups = vec![None, None, None, Some(50.0)];
+        let spec = schedule_dag_spec(&stages, 8, ScheduleMode::Pipelined, Some(&POLICY));
+        assert_eq!(spec.spec_launches, 1);
+        assert_eq!(spec.spec_wins, 0);
+        let bw = &spec.stages[0].backups[0];
+        assert!(!bw.won);
+        assert!((bw.end - 2.2).abs() < 1e-9, "cancelled at the primary's commit, {}", bw.end);
+        // Latency is the primary's own finish: speculation didn't help,
+        // and didn't hurt either.
+        assert!((spec.latency_s - 2.2).abs() < 1e-9, "{}", spec.latency_s);
+    }
+
+    #[test]
+    fn backups_respect_the_slot_limit() {
+        // 2 slots: the straggler lands in the last wave (started after
+        // the quorum committed — the start-time tail check covers it),
+        // and its backup must wait for a free slot behind primaries,
+        // never exceeding the concurrency limit.
+        let mut stages = chain(&[vec![1.0, 1.0, 1.0, 1.0, 9.0]], 0.0);
+        stages[0].backups = vec![None, None, None, None, Some(1.0)];
+        let spec = schedule_dag_spec(&stages, 2, ScheduleMode::Pipelined, Some(&POLICY));
+        let mut spans: Vec<(f64, f64)> = spec.stages[0].tasks.clone();
+        spans.extend(spec.stages[0].backups.iter().map(|b| (b.start, b.end)));
+        for &(s, _) in &spans {
+            let live = spans.iter().filter(|&&(a, b)| a <= s + 1e-12 && b > s + 1e-12).count();
+            assert!(live <= 2, "{live} attempts live at {s}");
+        }
+        assert_eq!(spec.spec_launches, 1);
+    }
+
+    #[test]
+    fn spec_none_is_byte_identical_to_plain_scheduler() {
+        // The refactor's contract: with no policy the attempt-model
+        // scheduler produces the exact same schedule as before, even
+        // when measured backups are present in the specs.
+        forall("spec-none-identity", 100, |g| {
+            let slots = g.usize(7) + 1;
+            let d0 = g.vec(8, |g| g.f64(0.1, 4.0));
+            let d1 = g.vec(4, |g| g.f64(0.1, 4.0));
+            if d0.is_empty() {
+                return Ok(());
+            }
+            let mut stages = chain(&[d0.clone(), d1], g.f64(0.0, 0.5));
+            stages[0].backups = d0.iter().map(|_| g.bool().then_some(1.0)).collect();
+            for mode in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+                let a = schedule_dag(&stages, slots, mode);
+                let b = schedule_dag_spec(&stages, slots, mode, None);
+                if a.latency_s != b.latency_s {
+                    return Err(format!("{mode:?}: {} != {}", a.latency_s, b.latency_s));
+                }
+                for (wa, wb) in a.stages.iter().zip(b.stages.iter()) {
+                    if wa.tasks != wb.tasks || wa.start != wb.start || wa.end != wb.end {
+                        return Err(format!("{mode:?}: windows diverge at stage {}", wa.id));
+                    }
+                    if !wb.backups.is_empty() {
+                        return Err("backups modelled without a policy".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_speculation_never_loses_on_straggler_chains() {
+        // With a backup measured at the stage's typical duration, the
+        // speculative schedule must never be slower than the plain one
+        // (backups queue behind all primary work, so they only use slots
+        // nothing else wants), and backups must actually win across the
+        // sample (a straggler that commits before its own signal fires
+        // legitimately gets no backup, so wins are aggregate, not
+        // per-case).
+        let wins = std::cell::Cell::new(0u64);
+        forall("spec-beats-straggler", 100, |g| {
+            let slots = g.usize(6) + 2;
+            let base = g.f64(0.5, 2.0);
+            let n = g.usize(6) + 4;
+            let mut d0 = vec![base; n];
+            let straggler = g.usize(n);
+            let factor = g.f64(4.0, 12.0);
+            d0[straggler] = base * factor;
+            let d1 = g.vec(3, |g| g.f64(0.1, 1.0));
+            let mut stages = chain(&[d0, d1], 0.0);
+            let mut backups = vec![None; n];
+            backups[straggler] = Some(base);
+            stages[0].backups = backups;
+            let plain = schedule_dag(&stages, slots, ScheduleMode::Pipelined);
+            let spec = schedule_dag_spec(&stages, slots, ScheduleMode::Pipelined, Some(&POLICY));
+            if spec.latency_s > plain.latency_s + 1e-9 {
+                return Err(format!(
+                    "spec {} > plain {} (slots {slots}, n {n}, factor {factor:.1})",
+                    spec.latency_s, plain.latency_s
+                ));
+            }
+            wins.set(wins.get() + spec.spec_wins);
+            Ok(())
+        });
+        assert!(wins.get() > 50, "backups should win across the sample, got {}", wins.get());
+    }
+
+    #[test]
+    fn barrier_spec_sums_speculative_stage_makespans() {
+        let mut stages = chain(&[vec![1.0, 1.0, 1.0, 8.0], vec![0.5, 0.5]], 0.25);
+        stages[0].backups = vec![None, None, None, Some(1.0)];
+        let plain = schedule_dag(&stages, 8, ScheduleMode::Barrier);
+        let spec = schedule_dag_spec(&stages, 8, ScheduleMode::Barrier, Some(&POLICY));
+        // Stage 0 commits at 2.5 (backup win) instead of 8.0.
+        let expect = (2.5 + 0.25) + (0.5 + 0.25);
+        assert!((spec.latency_s - expect).abs() < 1e-9, "{}", spec.latency_s);
+        assert!(spec.latency_s < plain.latency_s);
+        // Windows stay serial and contiguous.
+        assert!((spec.stages[0].end - spec.stages[1].start).abs() < 1e-12);
+        assert_eq!(spec.spec_wins, 1);
+    }
+
+    #[test]
+    fn pipelined_idle_matches_longpoll_gaps() {
+        // 1 map of 4s feeding 1 reduce of 1s: the reduce launches at 0
+        // (ready immediately), long-polls until the map's only chunk at
+        // t=4, and works 1s — span 5s, busy 1s, idle 4s.
+        let stages = chain(&[vec![4.0], vec![1.0]], 0.0);
+        let out = schedule_dag(&stages, 4, ScheduleMode::Pipelined);
+        assert!((out.stages[1].tasks[0].1 - 5.0).abs() < 1e-9);
+        assert!((out.idle_s - 4.0).abs() < 1e-9, "idle {}", out.idle_s);
     }
 }

@@ -24,6 +24,9 @@ pub enum Component {
     SqsReceive,
     /// Real, measured compute (parse + kernels).
     Compute,
+    /// Injected straggler slowdown: extra virtual time a slow container
+    /// spends over its normal billed duration (heavy-tail injection).
+    Straggler,
     /// Per-record JVM↔Python serialization (PySpark baseline only).
     PipeOverhead,
     /// Driver-side work between stages.
@@ -33,7 +36,7 @@ pub enum Component {
 }
 
 impl Component {
-    pub const ALL: [Component; 11] = [
+    pub const ALL: [Component; 12] = [
         Component::ColdStart,
         Component::WarmStart,
         Component::PayloadDecode,
@@ -42,6 +45,7 @@ impl Component {
         Component::SqsSend,
         Component::SqsReceive,
         Component::Compute,
+        Component::Straggler,
         Component::PipeOverhead,
         Component::Scheduler,
         Component::Other,
@@ -57,6 +61,7 @@ impl Component {
             Component::SqsSend => "sqs_send",
             Component::SqsReceive => "sqs_receive",
             Component::Compute => "compute",
+            Component::Straggler => "straggler",
             Component::PipeOverhead => "pipe_overhead",
             Component::Scheduler => "scheduler",
             Component::Other => "other",

@@ -1,13 +1,15 @@
 //! Robustness (§VI of the paper): executor failures overcome by retries,
 //! SQS at-least-once duplicates overcome by sequence-id dedup, the 300 s
-//! duration cap overcome by executor chaining, and the 6 MB payload cap
-//! overcome by S3 spill.
+//! duration cap overcome by executor chaining, the 6 MB payload cap
+//! overcome by S3 spill — and, with the attempt model, racing duplicate
+//! (speculative) attempts overcome by attempt-safe commits + dedup on
+//! every shuffle backend.
 
 use flint::compute::oracle;
 use flint::compute::queries::{QueryId, QueryResult};
-use flint::config::FlintConfig;
+use flint::config::{FlintConfig, ShuffleBackend};
 use flint::data::{generate_taxi_dataset, Dataset};
-use flint::exec::{Engine, FlintEngine};
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
 use flint::services::SimEnv;
 
 const TRIPS: u64 = 20_000;
@@ -110,6 +112,194 @@ fn forced_reducer_crash_redelivers_messages() {
     assert_eq!(report.retries, 1);
     assert!(report.result.approx_eq(&expect));
     assert!(env.metrics().get("sqs.nacked") > 0, "visibility-timeout path exercised");
+}
+
+#[test]
+fn speculative_map_attempts_race_exactly_once_on_sqs_and_s3() {
+    // A forced 8x straggler on a scan task triggers a speculative
+    // backup that really re-executes, racing byte-identical shuffle
+    // writes against the primary's. On the destructive-read SQS backend
+    // the duplicates dedup; on the S3 backend the backup overwrites the
+    // same keys idempotently. Either way the answer must be exact.
+    for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
+        let mut c = cfg();
+        c.flint.shuffle_backend = backend;
+        c.flint.speculation.enabled = true;
+        let (env, ds) = setup(c);
+        env.failure().force_straggler(0, 1, 0, 8.0);
+        let flint = FlintEngine::new(env.clone());
+        let expect = oracle::evaluate(&env, &ds, QueryId::Q4);
+        let report = flint.run_query(QueryId::Q4, &ds).unwrap();
+        assert!(
+            report.speculative_launches >= 1,
+            "{backend:?}: tail signal must fire"
+        );
+        assert!(
+            report.result.approx_eq(&expect),
+            "{backend:?}: racing attempts corrupted the result: {:?} vs {expect:?}",
+            report.result
+        );
+        assert_eq!(report.retries, 0, "{backend:?}: speculation is not failure");
+        if backend == ShuffleBackend::Sqs {
+            assert!(
+                report.duplicates_dropped > 0,
+                "the loser's duplicate messages must be dropped by dedup"
+            );
+            assert_eq!(env.sqs().queue_names().len(), 0, "leaked queues");
+        }
+    }
+}
+
+#[test]
+fn speculative_reducer_backup_races_for_real_on_s3_shuffle() {
+    // A straggling *reducer* gets a backup too — on the S3 shuffle
+    // backend, where the partition's objects persist until the prefix
+    // teardown, so the backup genuinely re-reads the full input,
+    // re-aggregates, and emits a duplicate result that first-commit-wins
+    // discards. The answer must stay exact.
+    let mut c = cfg();
+    c.flint.shuffle_backend = ShuffleBackend::S3;
+    c.flint.speculation.enabled = true;
+    // Half-quorum: a reduce straggler must still be running when the
+    // median stabilizes (30 short drain-bound tasks finish in quick
+    // waves; at the default 0.75 quantile an 8x straggler can
+    // occasionally commit first — cross-checked over 20k mirror trials).
+    c.flint.speculation.quantile = 0.5;
+    let (env, ds) = setup(c);
+    env.failure().force_straggler(1, 0, 0, 8.0); // first reduce task
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert!(report.speculative_launches >= 1, "reducer tail signal must fire");
+    assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+}
+
+#[test]
+fn reduce_tasks_sit_speculation_out_on_destructive_read_backends() {
+    // On SQS (and memory) the primary's commit acks the partition away,
+    // so a backup would drain an empty queue in ~0s — an unmeasurable
+    // duration the clocks must not model. The scheduler therefore never
+    // speculates shuffle-input tasks on destructive-read backends: a
+    // forced reduce straggler draws no backup, and the answer (and
+    // queue lifecycle) is unaffected.
+    let mut c = cfg();
+    c.flint.speculation.enabled = true;
+    c.flint.speculation.quantile = 0.5;
+    // High multiplier: natural map-task variance (measured compute under
+    // test-runner contention) must never draw a backup, so any launch
+    // could only come from the 8x reduce straggler — which is excluded.
+    c.flint.speculation.multiplier = 3.0;
+    let (env, ds) = setup(c);
+    env.failure().force_straggler(1, 0, 0, 8.0); // first reduce task
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert_eq!(
+        report.speculative_launches, 0,
+        "destructive-read reduce tasks must not draw backups"
+    );
+    assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+    assert_eq!(env.sqs().queue_names().len(), 0, "leaked queues");
+}
+
+#[test]
+fn speculation_and_crash_retries_compose_on_memory_backend() {
+    // The cluster (memory) backend runs the same attempt table: force a
+    // straggler AND a mid-task crash on the same stage, with speculation
+    // on — retries, backups, and the visibility-timeout machinery must
+    // compose to an exact answer.
+    let mut c = cfg();
+    c.flint.speculation.enabled = true;
+    let (env, ds) = setup(c);
+    env.failure().force_straggler(0, 1, 0, 8.0);
+    env.failure().force_task_failure(0, 2, 0);
+    let spark = ClusterEngine::new(env.clone(), ClusterMode::Spark);
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q4);
+    let report = spark.run_query(QueryId::Q4, &ds).unwrap();
+    assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+    assert_eq!(report.retries, 1, "the forced crash retried exactly once");
+    assert!(
+        env.metrics().get("scheduler.speculative_launches") >= 1,
+        "the straggler must have drawn a backup"
+    );
+}
+
+#[test]
+fn task_retries_counts_attempts_not_exhausted_failures() {
+    // Regression (attempt model): `scheduler.task_retries` counts the
+    // relaunches actually made. A task that exhausts a 2-retry budget
+    // fails 3 times but only ever relaunched twice — the old counter
+    // reported 3, overstating retry rates in RunOutput.
+    let mut c = cfg();
+    c.flint.max_task_retries = 2;
+    let (env, ds) = setup(c);
+    for attempt in 0..=2 {
+        env.failure().force_task_failure(0, 0, attempt);
+    }
+    let flint = FlintEngine::new(env.clone());
+    let err = flint.run_query(QueryId::Q0, &ds).unwrap_err();
+    assert!(format!("{err:#}").contains("failed after"), "{err:#}");
+    assert_eq!(
+        env.metrics().get("scheduler.task_retries"),
+        2,
+        "only launched retries count, not the budget-refused failure"
+    );
+}
+
+#[test]
+fn mid_chain_failure_counts_one_retry_not_one_per_segment() {
+    // Regression (attempt model): a chain-resume retry is ONE new
+    // attempt, however many segments the task chains through before and
+    // after the crash.
+    let mut c = cfg();
+    c.data.object_bytes = 2 * 1024 * 1024;
+    c.flint.input_split_bytes = 2 * 1024 * 1024;
+    c.sim.s3_flint_mbps = 85.0;
+    c.sim.lambda_time_limit_s = 0.06;
+    c.sim.lambda_chain_margin_s = 0.017; // see chaining test below
+    let env = SimEnv::new(c);
+    let ds = generate_taxi_dataset(&env, "trips", 120_000);
+    env.failure().force_task_failure(0, 1, 0);
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert!(report.result.approx_eq(&expect));
+    assert!(report.chains > 0, "chaining must have fired");
+    assert_eq!(report.retries, 1, "one crash = one retry, chain segments are not retries");
+    assert_eq!(env.metrics().get("scheduler.task_retries"), 1);
+}
+
+#[test]
+fn injected_stragglers_inflate_billed_time_deterministically() {
+    // Random heavy-tail injection: the same seed straggles the same
+    // attempts (hash-based draws), the slowdown lands in the Straggler
+    // timeline component, and results stay exact.
+    let mut c = cfg();
+    c.sim.straggler_prob = 0.3;
+    c.sim.straggler_factor = 5.0;
+    let (env, ds) = setup(c.clone());
+    let flint = FlintEngine::new(env.clone());
+    let expect = oracle::evaluate(&env, &ds, QueryId::Q1);
+    let r1 = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert!(r1.result.approx_eq(&expect));
+    assert!(
+        env.metrics().get("sim.straggler_slowdowns") > 0,
+        "stragglers must actually have been injected"
+    );
+    assert!(
+        r1.timeline.get(flint::simtime::Component::Straggler) > 0.0,
+        "slowdown must be metered in the timeline"
+    );
+    // Determinism across a fresh environment: same seed, same totals.
+    let (env2, ds2) = setup(c);
+    let flint2 = FlintEngine::new(env2.clone());
+    let r2 = flint2.run_query(QueryId::Q1, &ds2).unwrap();
+    assert_eq!(
+        env.metrics().get("sim.straggler_slowdowns"),
+        env2.metrics().get("sim.straggler_slowdowns"),
+        "straggler draws are stateless in (seed, stage, task, attempt)"
+    );
+    let _ = r2;
 }
 
 #[test]

@@ -5,6 +5,14 @@
 //! under both schedulers, and require the collected values to equal the
 //! single-threaded interpreter oracle (`plan::interp`) exactly.
 //!
+//! Every run executes with **speculation enabled and random heavy-tailed
+//! stragglers injected**, so racing duplicate attempts (speculative
+//! backups re-executing scans and reduces, re-sending byte-identical
+//! shuffle streams, draining acked-empty partitions) continuously hammer
+//! the attempt-safe commit machinery on every backend — on top of the
+//! SQS duplicate injection that was already on. The per-edge
+//! queue-lifecycle leak check still holds with backup attempts in play.
+//!
 //! This is the contract the `plan::lower` compiler is held to: there is
 //! no lineage shape the planner special-cases, so there must be no
 //! lineage shape the tests special-case either.
@@ -169,6 +177,15 @@ fn base_cfg() -> FlintConfig {
     c.flint.input_split_bytes = 256;
     c.flint.use_pjrt = false;
     c.sim.sqs_duplicate_prob = 0.1;
+    // Racing duplicate attempts everywhere: random stragglers draw
+    // speculative backups (aggressive policy so the tail signal fires
+    // often even on small stages), and the oracle equality below proves
+    // the races can never change an answer.
+    c.flint.speculation.enabled = true;
+    c.flint.speculation.multiplier = 1.2;
+    c.flint.speculation.quantile = 0.5;
+    c.sim.straggler_prob = 0.2;
+    c.sim.straggler_factor = 5.0;
     c
 }
 

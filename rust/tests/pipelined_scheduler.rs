@@ -75,12 +75,17 @@ fn pipelined_strictly_beats_barrier_on_multistage_sqs_queries() {
 
 #[test]
 fn barrier_mode_reproduces_sigma_makespan_model() {
-    let (env, ds) = setup(cfg());
+    // The SQS default flipped to pipelined with the Table I re-baseline;
+    // `flint.scheduler = barrier` stays the exact-paper-reproduction
+    // mode, and this test pins that the old Σ-makespan numbers still
+    // hold under it.
+    let mut c = cfg();
+    c.flint.scheduler = ScheduleMode::Barrier;
+    let (env, ds) = setup(c);
     let flint = FlintEngine::new(env.clone());
     for q in [QueryId::Q0, QueryId::Q1, QueryId::Q5] {
         let report = flint.run_query(q, &ds).unwrap();
-        // Default mode is barrier: the headline latency IS the barrier
-        // clock...
+        // Barrier selected: the headline latency IS the barrier clock...
         assert_eq!(report.latency_s, report.barrier_latency_s, "{q}");
         // ...and the barrier clock is exactly the seed's Σ(stage
         // makespan + overhead) model.
@@ -211,6 +216,100 @@ fn multi_parent_union_plan_executes_and_overlaps() {
 
     // Per-edge refcounted teardown: both producers' queues are gone.
     assert_eq!(env.sqs().queue_names().len(), 0, "queues must be refcount-deleted");
+}
+
+#[test]
+fn pipelined_is_the_sqs_default_now() {
+    // Satellite of the re-baseline: a default-config SQS run selects the
+    // pipelined clock as its headline latency.
+    let (env, ds) = setup(cfg());
+    let flint = FlintEngine::new(env.clone());
+    flint.prewarm();
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert_eq!(report.latency_s, report.pipelined_latency_s);
+    // Speculation is off by default: the attempt model must leave the
+    // schedule untouched (pipelined == pipelined-without-backups) and
+    // launch nothing.
+    assert_eq!(report.pipelined_latency_s, report.pipelined_nospec_latency_s);
+    assert_eq!(report.speculative_launches, 0);
+    assert_eq!(env.metrics().get("scheduler.speculative_launches"), 0);
+}
+
+#[test]
+fn speculation_strictly_beats_plain_pipelined_under_stragglers() {
+    // The acceptance criterion: with a heavy-tailed injected duration in
+    // the scan stage, pipelined+speculation strictly reduces makespan vs
+    // plain pipelined on EVERY multi-stage Table I query (plus the Q6J
+    // join diamond) — both clocks measured from the same execution, and
+    // results stay oracle-identical under the racing duplicate attempts.
+    let mut c = cfg();
+    c.flint.scheduler = ScheduleMode::Pipelined;
+    c.flint.speculation.enabled = true;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    flint.prewarm();
+    let mut queries: Vec<QueryId> = MULTI_STAGE.to_vec();
+    queries.push(QueryId::Q6J);
+    for q in queries {
+        // Re-arm a decisive straggler per run: scan task 1, primary
+        // attempt only — the backup draws a clean container.
+        env.failure().force_straggler(0, 1, 0, 10.0);
+        let report = flint.run_query(q, &ds).unwrap();
+        assert!(
+            report.speculative_launches >= 1,
+            "{q}: the tail signal must fire for a 10x straggler"
+        );
+        assert!(
+            report.speculative_wins >= 1,
+            "{q}: the clean backup must win the race"
+        );
+        assert!(
+            report.pipelined_latency_s < report.pipelined_nospec_latency_s,
+            "{q}: speculation {:.4}s must strictly beat plain pipelined {:.4}s",
+            report.pipelined_latency_s,
+            report.pipelined_nospec_latency_s
+        );
+        let expect = oracle::evaluate(&env, &ds, q);
+        assert!(
+            report.result.approx_eq(&expect),
+            "{q}: racing duplicate attempts changed the answer"
+        );
+    }
+    assert!(env.metrics().get("scheduler.speculative_launches") >= 7);
+    // Attempt-level queue lifecycle: backups drained/wrote real queues,
+    // and every per-edge queue still tore down exactly once.
+    assert_eq!(env.sqs().queue_names().len(), 0, "leaked shuffle queues");
+}
+
+#[test]
+fn pipelined_idle_time_is_billed_as_gb_seconds() {
+    // The ROADMAP's pipelined-aware cost item: long-polling reducers
+    // occupy live Lambdas, so the overlap's latency win costs idle
+    // GB-seconds. Same execution, both clocks: the pipelined run must
+    // report (and bill) positive idle time, and the barrier-mode run of
+    // the same query must not.
+    let mut c = cfg();
+    c.flint.scheduler = ScheduleMode::Pipelined;
+    c.sim.scheduler_overhead_per_stage_s = 0.01;
+    c.sim.scheduler_overhead_per_task_s = 0.0005;
+    let (env, ds) = setup(c);
+    let flint = FlintEngine::new(env.clone());
+    flint.prewarm();
+    let report = flint.run_query(QueryId::Q1, &ds).unwrap();
+    assert!(report.pipelined_idle_s > 0.0, "long-polling reducers must meter idle time");
+    assert!(env.metrics().get("lambda.idle_billed_100ms") > 0, "idle must be billed");
+
+    let mut c2 = cfg();
+    c2.flint.scheduler = ScheduleMode::Barrier;
+    let (env2, ds2) = setup(c2);
+    let flint2 = FlintEngine::new(env2.clone());
+    flint2.prewarm();
+    let _ = flint2.run_query(QueryId::Q1, &ds2).unwrap();
+    assert_eq!(
+        env2.metrics().get("lambda.idle_billed_100ms"),
+        0,
+        "barrier mode has no long-polling idle to bill"
+    );
 }
 
 #[test]
