@@ -8,7 +8,8 @@ use flint::compute::batch::ColumnBatch;
 use flint::compute::kernels::{prepare_keys, prepare_values, run_batch_native, HistAccum};
 use flint::compute::queries::QueryId;
 use flint::data::taxi::generate_csv_object;
-use flint::exec::shuffle::ShuffleRec;
+use flint::config::ShuffleCodec;
+use flint::exec::shuffle::{pack_kernel_run, ShuffleRec};
 use flint::runtime::PjrtRuntime;
 use flint::simtime::makespan;
 use std::time::Instant;
@@ -128,6 +129,50 @@ fn main() {
         recs.len() as f64 / enc_dt / 1e6,
         recs.len() as f64 / dec_dt / 1e6,
         buf.len()
+    );
+
+    // 4b. Wire codec byte ratio: one partition's sorted run of kernel
+    // partials packed under both codecs — the quantity the A6 ablation
+    // measures per shuffle edge.
+    let run: Vec<(i64, f64, f64)> = (0..100_000i64)
+        .map(|i| (i / 556, (i % 97) as f64, 1.0))
+        .collect(); // sorted keys, ~556 partials per key: a mapper's emit order
+    let mut sizes = [0usize; 2];
+    for (i, codec) in [ShuffleCodec::Rows, ShuffleCodec::Columnar].into_iter().enumerate() {
+        let (buf, dt) = time(|| {
+            let mut buf = Vec::new();
+            for rec in pack_kernel_run(&run, codec) {
+                rec.encode_into(&mut buf);
+            }
+            buf
+        });
+        let decoded = ShuffleRec::decode_all(&buf).expect("decode");
+        let logical: usize = decoded
+            .iter()
+            .map(|r| match r {
+                ShuffleRec::Chunk { keys, .. } => keys.len(),
+                _ => 1,
+            })
+            .sum();
+        assert_eq!(logical, run.len());
+        sizes[i] = buf.len();
+        println!(
+            "| pack+encode {codec:?} | {:.1} Mrec/s | {} bytes |",
+            run.len() as f64 / dt / 1e6,
+            buf.len()
+        );
+    }
+    assert!(
+        sizes[1] < sizes[0],
+        "columnar chunks must shrink the wire: {} vs {} bytes",
+        sizes[1],
+        sizes[0]
+    );
+    println!(
+        "| chunk codec byte ratio | columnar/rows = {:.3} | {} vs {} bytes |",
+        sizes[1] as f64 / sizes[0] as f64,
+        sizes[1],
+        sizes[0]
     );
 
     // 5. Makespan scheduler at paper scale.

@@ -1,24 +1,98 @@
-//! `cargo bench --bench shuffle_ablation` — experiment A1 (DESIGN.md
-//! §6): the §VI future-work comparison between Flint's SQS shuffle and
-//! Qubole's S3 shuffle, swept over query group counts — each backend
-//! under both the serial barrier clock and the pipelined DAG scheduler
-//! (both latencies come from the same execution, so the pair is exact).
+//! `cargo bench --bench shuffle_ablation [-- --smoke]` — experiment A1
+//! (DESIGN.md §6): the §VI future-work comparison between Flint's SQS
+//! shuffle and Qubole's S3 shuffle, swept over query group counts — each
+//! backend under both the serial barrier clock and the pipelined DAG
+//! scheduler (both latencies come from the same execution, so the pair
+//! is exact). Also sweeps the A6 wire-codec byte ratio (rows vs
+//! columnar chunks) and the A7 stats-based scan-pruning GET counts;
+//! `--smoke` mode (CI) runs a small dataset and exits non-zero if the
+//! columnar codec fails to shrink any shuffling Table I query or Q6J,
+//! or if pruning stops skipping GETs — so a codec or pruning regression
+//! fails PRs instead of waiting for a nightly bench run.
 
-use flint::bench::micro::{join_crossover, shuffle_ablation};
+use flint::bench::micro::{codec_byte_ratio, join_crossover, pruning_ablation, shuffle_ablation};
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
 use flint::util::json::Json;
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let mut cfg = FlintConfig::default();
     cfg.artifacts_dir = "artifacts".into();
-    cfg.data.object_bytes = 8 * 1024 * 1024;
-    cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+    if smoke {
+        // CI-sized: small objects/splits, PJRT off (no artifacts in CI
+        // runners).
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        cfg.flint.use_pjrt = false;
+        cfg.sim.max_concurrency = 8;
+    } else {
+        cfg.data.object_bytes = 8 * 1024 * 1024;
+        cfg.flint.input_split_bytes = 8 * 1024 * 1024;
+    }
 
     let trips = std::env::var("FLINT_BENCH_TRIPS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(400_000);
+        .unwrap_or(if smoke { 20_000 } else { 400_000 });
+    let mut failed = false;
+
+    // A6 — wire codec byte ratio: every Table I query plus Q6J, rows vs
+    // columnar chunks. Both runs are oracle-checked inside the harness.
+    println!("## A6 — shuffle wire codec: rows vs columnar chunks\n");
+    println!("| query | rows codec (B) | columnar (B) | ratio |");
+    println!("|---|---|---|---|");
+    let codec_rows =
+        codec_byte_ratio(&cfg, trips, &QueryId::ALL_WITH_JOINS).expect("codec bench");
+    let mut codec_json = Vec::new();
+    for (q, rows_b, col_b) in &codec_rows {
+        let ratio = if *rows_b > 0 { *col_b as f64 / *rows_b as f64 } else { 0.0 };
+        println!("| {q} | {rows_b} | {col_b} | {ratio:.2} |");
+        if *rows_b > 0 && col_b >= rows_b {
+            eprintln!("REGRESSION: {q} columnar shuffle {col_b} B did not beat rows {rows_b} B");
+            failed = true;
+        }
+        codec_json.push(
+            Json::obj()
+                .set("query", q.name())
+                .set("rows_bytes", *rows_b)
+                .set("columnar_bytes", *col_b),
+        );
+    }
+
+    // A7 — stats-based scan pruning: a day-windowed Q1, prune on vs off.
+    let (pruned_gets, unpruned_gets, skipped) =
+        pruning_ablation(&cfg, trips, 0, 200).expect("pruning bench");
+    println!("\n## A7 — stats-based scan pruning (Q1, day window [0, 200])\n");
+    println!(
+        "S3 GETs: {pruned_gets} pruned vs {unpruned_gets} unpruned ({skipped} splits skipped)"
+    );
+    if skipped == 0 || pruned_gets >= unpruned_gets {
+        eprintln!(
+            "REGRESSION: pruning skipped {skipped} splits, {pruned_gets} vs {unpruned_gets} GETs"
+        );
+        failed = true;
+    }
+    println!(
+        "\n{}",
+        Json::obj()
+            .set("bench", "codec_and_pruning")
+            .set("trips", trips)
+            .set("codec", Json::Arr(codec_json))
+            .set("pruned_gets", pruned_gets)
+            .set("unpruned_gets", unpruned_gets)
+            .set("splits_pruned", skipped)
+            .encode()
+    );
+    if smoke {
+        // CI smoke stops here: the codec/pruning gates above are the
+        // point; the latency sweeps below are nightly-bench material.
+        if failed {
+            std::process::exit(1);
+        }
+        return;
+    }
+    println!();
 
     println!("## A1 — SQS vs S3 shuffle (the Qubole design alternative, §V/§VI)\n");
     println!("| query (groups) | backend+schedule | latency (s) | cost (USD) | shuffle msgs |");
@@ -83,4 +157,7 @@ fn main() {
     println!(" Pipelined scheduling hides SQS reduce drain behind map flushes, so");
     println!(" sqs+pipelined must undercut sqs+barrier; the S3 backend's one-shot");
     println!(" list-then-get shuffle cannot overlap and has no pipelined row.)");
+    if failed {
+        std::process::exit(1);
+    }
 }

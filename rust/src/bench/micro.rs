@@ -5,10 +5,11 @@
 
 use crate::compute::oracle;
 use crate::compute::queries::QueryId;
-use crate::config::{FlintConfig, ShuffleBackend};
+use crate::config::{FlintConfig, ShuffleBackend, ShuffleCodec};
 use crate::data::weather::WeatherTable;
 use crate::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
 use crate::exec::{Engine, FlintEngine};
+use crate::plan::{kernel_plan, StageCompute};
 use crate::services::SimEnv;
 use crate::simtime::ScheduleMode;
 use anyhow::{anyhow, ensure, Result};
@@ -263,6 +264,82 @@ fn inflate_weather(env: &SimEnv, ds: &mut Dataset, target: u64) -> Result<()> {
     Ok(())
 }
 
+/// A6 — shuffle codec ablation: each query once per wire codec, in a
+/// fresh environment each time. Total encoded shuffle-record bytes come
+/// from the driver's per-edge accounting (`edge_shuffle[].bytes`), and
+/// both runs are oracle-checked, so the ratio is a pure wire-format
+/// comparison over identical logical record streams. Returns
+/// `(query, rows_bytes, columnar_bytes)` per query.
+pub fn codec_byte_ratio(
+    cfg: &FlintConfig,
+    trips: u64,
+    queries: &[QueryId],
+) -> Result<Vec<(QueryId, u64, u64)>> {
+    let mut out = Vec::new();
+    for &q in queries {
+        let mut bytes = [0u64; 2];
+        for (i, codec) in [ShuffleCodec::Rows, ShuffleCodec::Columnar].into_iter().enumerate() {
+            let mut c = cfg.clone();
+            c.flint.shuffle_codec = codec;
+            let env = SimEnv::new(c);
+            let ds = generate_taxi_dataset(&env, "trips", trips);
+            let flint = FlintEngine::new(env.clone());
+            flint.prewarm();
+            let expect = oracle::evaluate(&env, &ds, q);
+            let r = flint.run_query(q, &ds)?;
+            ensure!(r.result.approx_eq(&expect), "{q}/{codec:?}: codec changed the answer");
+            bytes[i] = r.edge_shuffle.iter().map(|e| e.bytes).sum();
+        }
+        out.push((q, bytes[0], bytes[1]));
+    }
+    Ok(out)
+}
+
+/// A7 — statistics-based scan pruning ablation: Q1 narrowed to a
+/// dropoff-day window through the typed spec predicate, run once with
+/// `flint.scan.prune` on and once off. The manifest's per-object
+/// min/max day stats let the pruned run skip fetching splits entirely
+/// outside the window, so it must issue fewer S3 GETs while producing
+/// the identical histogram (a pruned split is indistinguishable from
+/// one whose rows all failed the predicate). Returns
+/// `(pruned_gets, unpruned_gets, splits_pruned)`.
+pub fn pruning_ablation(
+    cfg: &FlintConfig,
+    trips: u64,
+    day_lo: i32,
+    day_hi: i32,
+) -> Result<(u64, u64, u64)> {
+    let mut gets = [0u64; 2];
+    let mut splits_pruned = 0u64;
+    let mut results = Vec::new();
+    for (i, prune) in [true, false].into_iter().enumerate() {
+        let mut c = cfg.clone();
+        c.flint.scan_prune = prune;
+        let env = SimEnv::new(c);
+        let ds = generate_taxi_dataset(&env, "trips", trips);
+        let mut plan = kernel_plan(QueryId::Q1, &ds, env.config());
+        for stage in &mut plan.stages {
+            match &mut stage.compute {
+                StageCompute::KernelScan { spec } | StageCompute::KernelReduce { spec } => {
+                    *spec = spec.with_day_range(day_lo, day_hi);
+                }
+                _ => {}
+            }
+        }
+        let flint = FlintEngine::new(env.clone());
+        flint.prewarm();
+        let before = env.metrics().get("s3.get");
+        let r = flint.run_plan(&plan)?;
+        gets[i] = env.metrics().get("s3.get") - before;
+        if prune {
+            splits_pruned = env.metrics().get("scan.splits_pruned");
+        }
+        results.push(r.result);
+    }
+    ensure!(results[0].approx_eq(&results[1]), "pruning changed the answer");
+    Ok((gets[0], gets[1], splits_pruned))
+}
+
 /// A3-adjacent — elasticity sweep: the same query at increasing Lambda
 /// concurrency limits. The paper's pay-as-you-go argument in one curve:
 /// latency drops with concurrency while the *cost stays flat* (you pay
@@ -403,6 +480,35 @@ mod tests {
         );
         assert_eq!(crossover, Some(rows[1].dim_bytes));
         assert!(rows[1].dim_bytes >= 32 * 1024 * 1024);
+    }
+
+    #[test]
+    fn a6_columnar_codec_shrinks_every_shuffle() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        let rows =
+            codec_byte_ratio(&cfg, 20_000, &[QueryId::Q1, QueryId::Q5, QueryId::Q6J]).unwrap();
+        assert_eq!(rows.len(), 3);
+        for (q, rows_b, col_b) in rows {
+            assert!(rows_b > 0, "{q}: expected shuffle traffic under the rows codec");
+            assert!(col_b < rows_b, "{q}: columnar {col_b} B must beat rows {rows_b} B");
+        }
+    }
+
+    #[test]
+    fn a7_pruning_skips_gets_and_preserves_results() {
+        let mut cfg = FlintConfig::for_tests();
+        // Many small objects: the day-window stats tile the timeline
+        // across them, so a narrow window leaves most splits prunable.
+        cfg.data.object_bytes = 256 * 1024;
+        cfg.flint.input_split_bytes = 256 * 1024;
+        let (pruned, unpruned, skipped) = pruning_ablation(&cfg, 30_000, 0, 200).unwrap();
+        assert!(skipped > 0, "a narrow day window must prune splits");
+        assert!(
+            pruned < unpruned,
+            "pruned run must issue fewer GETs: {pruned} vs {unpruned} ({skipped} skipped)"
+        );
     }
 
     #[test]

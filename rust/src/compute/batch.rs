@@ -9,6 +9,40 @@
 use crate::data::chrono::{day_index, hour_of_day, month_index, parse_datetime};
 use crate::data::schema::{parse_f32, parse_u8};
 
+/// Which CSV fields a scan must decode — the query's referenced-column
+/// set ([`crate::compute::queries::KernelSpec::projection`]). Skipped
+/// fields are still structurally validated (the 13-column comma count is
+/// always enforced) but their bytes are never parsed; the corresponding
+/// columns receive neutral placeholder values no projected query reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColProjection {
+    /// Field 0 → `taxi_type`.
+    pub taxi_type: bool,
+    /// Field 2 (dropoff datetime) → `hour`/`month`/`day`.
+    pub time: bool,
+    /// Fields 7/8 → `lon`/`lat`.
+    pub geo: bool,
+    /// Field 9 → `credit`.
+    pub payment: bool,
+    /// Field 11 → `tip`.
+    pub tip: bool,
+}
+
+impl ColProjection {
+    /// Decode every field (the pre-projection behavior).
+    pub const ALL: ColProjection =
+        ColProjection { taxi_type: true, time: true, geo: true, payment: true, tip: true };
+
+    /// Number of CSV fields this projection decodes (geo is two fields).
+    pub fn num_fields(&self) -> usize {
+        usize::from(self.taxi_type)
+            + usize::from(self.time)
+            + 2 * usize::from(self.geo)
+            + usize::from(self.payment)
+            + usize::from(self.tip)
+    }
+}
+
 /// Column-oriented batch of the fields the evaluation queries touch.
 #[derive(Debug, Clone)]
 pub struct ColumnBatch {
@@ -77,6 +111,18 @@ impl ColumnBatch {
     /// 2 dropoff datetime, 7/8 dropoff lon/lat, 9 payment, 11 tip) are
     /// decoded.
     pub fn push_line(&mut self, line: &[u8]) -> bool {
+        self.push_line_projected(line, ColProjection::ALL)
+    }
+
+    /// [`push_line`](Self::push_line) decoding only the fields `proj`
+    /// selects. The 13-column structure is always validated, but a
+    /// skipped field's bytes are never parsed (so a value that would
+    /// fail to parse in an unreferenced field no longer rejects the
+    /// row — acceptable because every referenced column is still exact).
+    /// Skipped columns receive neutral placeholders: coordinates 0.0
+    /// (inside `EVERYWHERE`), tip 0.0 (passes a `-inf` threshold),
+    /// month/day -1 (masked, like padding), hour 0, taxi 0, credit 0.0.
+    pub fn push_line_projected(&mut self, line: &[u8], proj: ColProjection) -> bool {
         debug_assert!(!self.is_full());
         let mut taxi: Option<u8> = None;
         let mut ts: Option<i64> = None;
@@ -89,12 +135,12 @@ impl ColumnBatch {
         for comma in memchr::memchr_iter(b',', line).chain(std::iter::once(line.len())) {
             let f = &line[field_start..comma];
             match field_idx {
-                0 => taxi = parse_u8(f),
-                2 => ts = parse_datetime(f),
-                7 => lon = parse_f32(f),
-                8 => lat = parse_f32(f),
-                9 => pay = parse_u8(f),
-                11 => tip = parse_f32(f),
+                0 if proj.taxi_type => taxi = parse_u8(f),
+                2 if proj.time => ts = parse_datetime(f),
+                7 if proj.geo => lon = parse_f32(f),
+                8 if proj.geo => lat = parse_f32(f),
+                9 if proj.payment => pay = parse_u8(f),
+                11 if proj.tip => tip = parse_f32(f),
                 _ => {}
             }
             field_idx += 1;
@@ -106,22 +152,37 @@ impl ColumnBatch {
         if field_idx != crate::data::schema::NUM_COLUMNS {
             return false;
         }
-        match (taxi, ts, lon, lat, pay, tip) {
-            (Some(taxi), Some(ts), Some(lon), Some(lat), Some(pay), Some(tip)) => {
-                self.lon.push(lon);
-                self.lat.push(lat);
+        // Every *referenced* field must have parsed; skipped fields are
+        // substituted below.
+        if (proj.taxi_type && taxi.is_none())
+            || (proj.time && ts.is_none())
+            || (proj.geo && (lon.is_none() || lat.is_none()))
+            || (proj.payment && pay.is_none())
+            || (proj.tip && tip.is_none())
+        {
+            return false;
+        }
+        self.lon.push(lon.unwrap_or(0.0));
+        self.lat.push(lat.unwrap_or(0.0));
+        match ts {
+            Some(ts) => {
                 self.hour.push(hour_of_day(ts) as i32);
                 self.month.push(month_index(ts));
                 self.day.push(day_index(ts));
-                self.credit
-                    .push(if pay == crate::data::schema::PAYMENT_CREDIT { 1.0 } else { 0.0 });
-                self.taxi_type.push(taxi as i32);
-                self.tip.push(tip);
-                self.len += 1;
-                true
             }
-            _ => false,
+            None => {
+                self.hour.push(0);
+                self.month.push(-1);
+                self.day.push(-1);
+            }
         }
+        self.credit.push(
+            if pay == Some(crate::data::schema::PAYMENT_CREDIT) { 1.0 } else { 0.0 },
+        );
+        self.taxi_type.push(taxi.unwrap_or(0) as i32);
+        self.tip.push(tip.unwrap_or(0.0));
+        self.len += 1;
+        true
     }
 
     /// Pad every column to `capacity` (PJRT artifacts have a static row
@@ -197,6 +258,35 @@ mod tests {
         // Bad float in the tip field.
         let bad = record(9, true, 1.0).replace("1.00,11.00", "x.00,11.00");
         let _ = b.push_line(bad.as_bytes());
+        assert_eq!(b.len, b.lon.len());
+        assert_eq!(b.len, b.tip.len());
+    }
+
+    #[test]
+    fn projected_push_skips_unreferenced_fields() {
+        // A Q1-shaped projection: geo + time, no taxi/payment/tip.
+        let proj =
+            ColProjection { taxi_type: false, time: true, geo: true, payment: false, tip: false };
+        assert_eq!(proj.num_fields(), 3);
+        assert_eq!(ColProjection::ALL.num_fields(), 6);
+
+        let mut b = ColumnBatch::with_capacity(8);
+        assert!(b.push_line_projected(record(9, true, 12.5).as_bytes(), proj));
+        assert_eq!(b.hour[0], 9);
+        assert!((b.lon[0] + 74.0144).abs() < 1e-3);
+        // Skipped columns hold neutral placeholders.
+        assert_eq!(b.credit[0], 0.0);
+        assert_eq!(b.taxi_type[0], 0);
+        assert_eq!(b.tip[0], 0.0);
+
+        // Garbage in a *skipped* field no longer rejects the row (the
+        // bytes are never parsed), but structure is still enforced.
+        let bad_tip = record(9, true, 1.0).replace("1.00,11.00", "x.00,11.00");
+        assert!(b.push_line_projected(bad_tip.as_bytes(), proj));
+        assert!(!b.push_line_projected(b"1,2,3", proj));
+        // Garbage in a *referenced* field still rejects.
+        let bad_time = record(9, true, 1.0).replacen("2014-03-10", "xxxx-03-10", 2);
+        assert!(!b.push_line_projected(bad_time.as_bytes(), proj));
         assert_eq!(b.len, b.lon.len());
         assert_eq!(b.len, b.tip.len());
     }

@@ -120,9 +120,35 @@ pub fn run_batch_native(
     accum: &mut HistAccum,
 ) {
     let n = batch.len; // only real rows; padding has no effect natively
-    accum.rows_seen += n as u64;
     let b = spec.bbox;
+    let in_ranges = |i: usize| {
+        if let Some((lo, hi)) = spec.day_range {
+            let d = batch.day[i];
+            if d < lo || d > hi {
+                return false;
+            }
+        }
+        if let Some((lo, hi)) = spec.month_range {
+            let m = batch.month[i];
+            if m < lo || m > hi {
+                return false;
+            }
+        }
+        true
+    };
+    // rows_seen counts rows *after* the day/month predicate so Count
+    // queries agree with stats-based split pruning: a split skipped via
+    // manifest stats must be indistinguishable from one whose rows were
+    // all filtered here.
+    if spec.day_range.is_none() && spec.month_range.is_none() {
+        accum.rows_seen += n as u64;
+    } else {
+        accum.rows_seen += (0..n).filter(|&i| in_ranges(i)).count() as u64;
+    }
     for i in 0..n {
+        if !in_ranges(i) {
+            continue;
+        }
         let lon = batch.lon[i];
         let lat = batch.lat[i];
         if lon < b.lon_min || lon > b.lon_max || lat < b.lat_min || lat > b.lat_max {
@@ -269,6 +295,35 @@ mod tests {
         run_batch_native(&spec, &batch, &keys, &values, &mut acc);
         assert_eq!(acc.counts[8], 1.0);
         assert_eq!(acc.counts.iter().sum::<f64>(), 1.0, "padding contributed nothing");
+    }
+
+    #[test]
+    fn day_range_masks_rows_and_rows_seen() {
+        // All pushed rows land on 2014-03-10; a window around that day
+        // keeps them, a disjoint window drops them (including rows_seen,
+        // so Count queries respect the predicate).
+        let mut batch = ColumnBatch::with_capacity(8);
+        push(&mut batch, -74.0144, 40.7147, 8, true, 2.0);
+        push(&mut batch, -74.0144, 40.7147, 9, true, 2.0);
+        let day = batch.day[0];
+
+        let keep = QueryId::Q1.spec().with_day_range(day - 1, day + 1);
+        let mut acc = HistAccum::new(keep.buckets);
+        process_batch_native(&keep, &batch, None, &mut acc);
+        assert_eq!(acc.rows_seen, 2);
+        assert_eq!(acc.counts.iter().sum::<f64>(), 2.0);
+
+        let drop = QueryId::Q1.spec().with_day_range(day + 10, day + 20);
+        let mut acc = HistAccum::new(drop.buckets);
+        process_batch_native(&drop, &batch, None, &mut acc);
+        assert_eq!(acc.rows_seen, 0);
+        assert_eq!(acc.counts.iter().sum::<f64>(), 0.0);
+
+        let month = batch.month[0];
+        let drop_m = QueryId::Q0.spec().with_month_range(month + 1, month + 2);
+        let mut acc = HistAccum::new(drop_m.buckets);
+        process_batch_native(&drop_m, &batch, None, &mut acc);
+        assert_eq!(acc.into_result(&drop_m), QueryResult::Count(0));
     }
 
     #[test]

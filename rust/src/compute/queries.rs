@@ -133,6 +133,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: 1,
                 reduce_partitions: 0, // map-only: counts merge at the driver
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q1 => KernelSpec {
                 query: *self,
@@ -142,6 +144,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: 24,
                 reduce_partitions: 30, // the paper's reduceByKey(add, 30)
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q2 => KernelSpec {
                 query: *self,
@@ -151,6 +155,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: 24,
                 reduce_partitions: 30,
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q3 => KernelSpec {
                 query: *self,
@@ -160,6 +166,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: 24,
                 reduce_partitions: 30,
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q4 => KernelSpec {
                 query: *self,
@@ -169,6 +177,8 @@ impl QueryId {
                 value: ValueSource::CreditFlag,
                 buckets: 90, // Jan 2009 .. Jun 2016
                 reduce_partitions: 30,
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q5 => KernelSpec {
                 query: *self,
@@ -178,6 +188,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: 180, // month × {yellow, green}
                 reduce_partitions: 30,
+                day_range: None,
+                month_range: None,
             },
             QueryId::Q6 => KernelSpec {
                 query: *self,
@@ -187,6 +199,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: PRECIP_BUCKETS,
                 reduce_partitions: PRECIP_BUCKETS,
+                day_range: None,
+                month_range: None,
             },
             // Q6 over the shuffle: the fact scan histograms per *day*
             // (one bucket per covered day), both sides hash-partition on
@@ -200,6 +214,8 @@ impl QueryId {
                 value: ValueSource::One,
                 buckets: crate::data::weather::NUM_DAYS,
                 reduce_partitions: 30,
+                day_range: None,
+                month_range: None,
             },
         }
     }
@@ -262,6 +278,12 @@ pub struct KernelSpec {
     pub buckets: usize,
     /// Reduce-side partition count (0 = map-only).
     pub reduce_partitions: usize,
+    /// Inclusive dropoff-day predicate (day indexes since 2009-01-01):
+    /// rows outside are filtered map-side, and the scan skips fetching
+    /// splits whose manifest statistics sit entirely outside the range.
+    pub day_range: Option<(i32, i32)>,
+    /// Inclusive dropoff-month predicate (months since 2009-01).
+    pub month_range: Option<(i32, i32)>,
 }
 
 impl KernelSpec {
@@ -273,6 +295,33 @@ impl KernelSpec {
     /// Whether the spec needs the weather side table.
     pub fn needs_weather(&self) -> bool {
         self.key == KeySource::PrecipBucket
+    }
+
+    /// Derived spec with a dropoff-day predicate `[lo, hi]` inclusive.
+    pub fn with_day_range(mut self, lo: i32, hi: i32) -> KernelSpec {
+        self.day_range = Some((lo, hi));
+        self
+    }
+
+    /// Derived spec with a dropoff-month predicate `[lo, hi]` inclusive.
+    pub fn with_month_range(mut self, lo: i32, hi: i32) -> KernelSpec {
+        self.month_range = Some((lo, hi));
+        self
+    }
+
+    /// The referenced-column set: which CSV fields the scan must decode
+    /// for this spec. Everything else is structurally validated (comma
+    /// count) but never parsed.
+    pub fn projection(&self) -> crate::compute::batch::ColProjection {
+        crate::compute::batch::ColProjection {
+            taxi_type: self.key == KeySource::MonthTaxiType,
+            time: self.key != KeySource::None
+                || self.day_range.is_some()
+                || self.month_range.is_some(),
+            geo: self.bbox != GeoBox::EVERYWHERE,
+            payment: self.value == ValueSource::CreditFlag,
+            tip: self.tip_min > f32::NEG_INFINITY,
+        }
     }
 }
 
@@ -385,6 +434,33 @@ mod tests {
         let s = QueryId::Q3.spec();
         assert_eq!(s.tip_min, 10.0);
         assert_eq!(s.bbox, crate::data::schema::GOLDMAN);
+    }
+
+    #[test]
+    fn projection_tracks_referenced_columns() {
+        use crate::compute::batch::ColProjection;
+        // Q0 is a pure line count: no field is referenced at all.
+        assert_eq!(
+            QueryId::Q0.spec().projection(),
+            ColProjection {
+                taxi_type: false,
+                time: false,
+                geo: false,
+                payment: false,
+                tip: false
+            }
+        );
+        // Q3 filters on geo + tip and keys on hour; payment/taxi unused.
+        let p3 = QueryId::Q3.spec().projection();
+        assert!(p3.geo && p3.time && p3.tip && !p3.payment && !p3.taxi_type);
+        // Q4 sums the credit flag; Q5 keys on taxi type.
+        assert!(QueryId::Q4.spec().projection().payment);
+        assert!(QueryId::Q5.spec().projection().taxi_type);
+        // A day predicate forces the timestamp even on a count query.
+        let ranged = QueryId::Q0.spec().with_day_range(10, 20);
+        assert_eq!(ranged.day_range, Some((10, 20)));
+        assert!(ranged.projection().time);
+        assert!(QueryId::Q0.spec().with_month_range(0, 5).projection().time);
     }
 
     #[test]

@@ -121,6 +121,19 @@ impl Value {
         out
     }
 
+    /// Exact length `encode_into` would produce, without allocating — the
+    /// shuffle writer's byte-aware chunking asks this per record.
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            Value::Null => 1,
+            Value::Bool(_) => 2,
+            Value::I64(_) | Value::F64(_) => 9,
+            Value::Str(s) => 5 + s.len(),
+            Value::Pair(k, v) => 1 + k.encoded_len() + v.encoded_len(),
+            Value::List(items) => 5 + items.iter().map(Value::encoded_len).sum::<usize>(),
+        }
+    }
+
     /// Decode one value from `bytes`, returning it and the bytes consumed.
     pub fn decode(bytes: &[u8]) -> Option<(Value, usize)> {
         let tag = *bytes.first()?;
@@ -249,6 +262,19 @@ mod tests {
             match Value::decode(&enc) {
                 Some((back, n)) if back == v && n == enc.len() => Ok(()),
                 other => Err(format!("{v:?} -> {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_encoded_len_matches_encoding() {
+        forall("value-encoded-len", 400, |g| {
+            let v = arbitrary_value(g, 2);
+            let enc = v.encode();
+            if v.encoded_len() == enc.len() {
+                Ok(())
+            } else {
+                Err(format!("{v:?}: encoded_len {} != {}", v.encoded_len(), enc.len()))
             }
         });
     }

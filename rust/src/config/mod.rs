@@ -183,6 +183,16 @@ pub struct FlintParams {
     pub max_task_retries: u32,
     /// Shuffle transport: "sqs" (the paper) or "s3" (the Qubole ablation).
     pub shuffle_backend: ShuffleBackend,
+    /// Shuffle wire codec: "columnar" (the default — sorted runs of
+    /// kernel partials ride as delta-encoded column chunks, dyn pairs as
+    /// front-coded groups) or "rows" (one record per wire entry, the
+    /// pre-columnar format). Results are byte-identical either way; only
+    /// the transported bytes differ.
+    pub shuffle_codec: ShuffleCodec,
+    /// Statistics-based scan pruning: skip fetching input splits whose
+    /// manifest min/max day-month statistics fall entirely outside the
+    /// query's predicate range (`flint.scan.prune`, default on).
+    pub scan_prune: bool,
     /// Stage-overlap policy for the virtual clock: "pipelined" (the
     /// default since the Table I re-baseline: §III-A SQS semantics,
     /// reducers long-poll while mappers flush) or "barrier" (serial
@@ -219,6 +229,24 @@ impl std::str::FromStr for ShuffleBackend {
     }
 }
 
+/// Wire format for shuffle records (`flint.shuffle.codec`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShuffleCodec {
+    Rows,
+    Columnar,
+}
+
+impl std::str::FromStr for ShuffleCodec {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rows" => Ok(ShuffleCodec::Rows),
+            "columnar" => Ok(ShuffleCodec::Columnar),
+            other => Err(format!("unknown shuffle codec `{other}` (want rows|columnar)")),
+        }
+    }
+}
+
 impl Default for FlintParams {
     fn default() -> Self {
         FlintParams {
@@ -227,6 +255,8 @@ impl Default for FlintParams {
             shuffle_buffer_bytes: 48 * 1024 * 1024,
             max_task_retries: 3,
             shuffle_backend: ShuffleBackend::Sqs,
+            shuffle_codec: ShuffleCodec::Columnar,
+            scan_prune: true,
             scheduler: ScheduleMode::Pipelined,
             speculation: SpeculationParams::default(),
             dedup_enabled: true,
@@ -362,6 +392,14 @@ impl FlintConfig {
                             ShuffleBackend::S3 => "s3",
                         },
                     )
+                    .set(
+                        "shuffle_codec",
+                        match self.flint.shuffle_codec {
+                            ShuffleCodec::Rows => "rows",
+                            ShuffleCodec::Columnar => "columnar",
+                        },
+                    )
+                    .set("scan_prune", self.flint.scan_prune)
                     .set("scheduler", self.flint.scheduler.name())
                     .set(
                         "speculation",
@@ -438,6 +476,36 @@ mod tests {
         assert_eq!(c.sim.straggler_prob, 0.1);
         assert_eq!(c.sim.straggler_factor, 8.0);
         assert_eq!(c.sim.straggler_alpha, 1.5);
+    }
+
+    #[test]
+    fn columnar_hot_path_knobs() {
+        let mut c = FlintConfig::default();
+        assert_eq!(c.flint.shuffle_codec, ShuffleCodec::Columnar, "columnar is the default");
+        assert!(c.flint.scan_prune, "pruning is on by default");
+        c.set("flint.shuffle.codec", "rows").unwrap();
+        assert_eq!(c.flint.shuffle_codec, ShuffleCodec::Rows);
+        c.set("flint.shuffle.codec", "columnar").unwrap();
+        assert_eq!(c.flint.shuffle_codec, ShuffleCodec::Columnar);
+        assert!(c.set("flint.shuffle.codec", "parquet").is_err());
+        c.set("flint.scan.prune", "false").unwrap();
+        assert!(!c.flint.scan_prune);
+        c.set("flint.scan.prune", "true").unwrap();
+        assert!(c.flint.scan_prune);
+        assert!(c.set("flint.scan.prune", "maybe").is_err());
+    }
+
+    #[test]
+    fn batch_rows_zero_rejected_at_parse_time() {
+        let mut c = FlintConfig::default();
+        c.set("flint.batch_rows", "512").unwrap();
+        assert_eq!(c.flint.batch_rows, 512);
+        let err = c.set("flint.batch_rows", "0").unwrap_err();
+        assert!(err.contains("flint.batch_rows"), "{err}");
+        assert!(err.contains("positive"), "{err}");
+        assert_eq!(c.flint.batch_rows, 512, "failed override must not apply");
+        assert!(c.set("flint.batch_rows", "-3").is_err());
+        assert!(c.set("flint.batch_rows", "many").is_err());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! That covers every config file this project ships; exotic TOML (arrays
 //! of tables, datetimes, multi-line strings) is intentionally rejected.
 
-use super::{FlintConfig, ShuffleBackend};
+use super::{FlintConfig, ShuffleBackend, ShuffleCodec};
 
 /// Apply the contents of a TOML document to `cfg`.
 pub fn apply_toml(cfg: &mut FlintConfig, text: &str) -> Result<(), String> {
@@ -123,6 +123,8 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         "flint.shuffle_backend" => {
             cfg.flint.shuffle_backend = value.parse::<ShuffleBackend>()?
         }
+        "flint.shuffle.codec" => cfg.flint.shuffle_codec = value.parse::<ShuffleCodec>()?,
+        "flint.scan.prune" => parse_to!(cfg.flint.scan_prune, value, key),
         "flint.scheduler" => {
             cfg.flint.scheduler = value.parse::<crate::simtime::ScheduleMode>()?
         }
@@ -144,7 +146,20 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
             parse_to!(cfg.flint.speculation.quantile, value, key)
         }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
-        "flint.batch_rows" => parse_to!(cfg.flint.batch_rows, value, key),
+        "flint.batch_rows" => {
+            // `ColumnBatch::with_capacity` requires a positive capacity;
+            // reject zero here so misconfiguration fails at parse time
+            // with the offending key, not mid-query via an assert.
+            let rows: usize = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{key}`"))?;
+            if rows == 0 {
+                return Err(format!(
+                    "bad value `{value}` for `{key}` (batch rows must be positive)"
+                ));
+            }
+            cfg.flint.batch_rows = rows;
+        }
         "flint.use_pjrt" => parse_to!(cfg.flint.use_pjrt, value, key),
 
         "cluster.workers" => parse_to!(cfg.cluster.workers, value, key),

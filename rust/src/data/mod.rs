@@ -8,12 +8,48 @@ pub mod weather;
 
 use crate::services::SimEnv;
 use crate::util::ThreadPool;
+use std::collections::BTreeMap;
 
 /// Default bucket layout.
 pub const INPUT_BUCKET: &str = "nyc-tlc";
 pub const OUTPUT_BUCKET: &str = "flint-results";
 pub const SHUFFLE_BUCKET: &str = "flint-shuffle";
 pub const WEATHER_KEY: &str = "weather/daily.csv";
+
+/// Per-object column statistics recorded in the dataset manifest.
+/// Integer-only (day/month indexes and a row count) so they stay `Eq`
+/// and serialize exactly. Conservative by construction: every row in
+/// the object falls inside the recorded ranges, so a scan may safely
+/// skip the object when a query's predicate range is disjoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjectStats {
+    /// Min/max dropoff day index (days since 2009-01-01), inclusive.
+    pub min_day: i32,
+    pub max_day: i32,
+    /// Min/max dropoff month index (months since 2009-01), inclusive.
+    pub min_month: i32,
+    pub max_month: i32,
+    /// Exact row count.
+    pub rows: u64,
+}
+
+impl ObjectStats {
+    /// Whether a day predicate `[lo, hi]` can possibly match rows here.
+    pub fn overlaps_days(&self, lo: i32, hi: i32) -> bool {
+        self.max_day >= lo && self.min_day <= hi
+    }
+
+    /// Whether a month predicate `[lo, hi]` can possibly match rows here.
+    pub fn overlaps_months(&self, lo: i32, hi: i32) -> bool {
+        self.max_month >= lo && self.min_month <= hi
+    }
+}
+
+/// Month index (months since 2009-01) of a day index.
+fn month_of_day(day: i64) -> i32 {
+    let (y, m, _) = chrono::civil_from_days(chrono::days_from_civil(2009, 1, 1) + day);
+    ((y - 2009) * 12 + (m as i64 - 1)) as i32
+}
 
 /// Manifest of a generated dataset living in the simulated S3.
 #[derive(Debug, Clone)]
@@ -31,6 +67,11 @@ pub struct Dataset {
     pub weather_bytes: u64,
     /// Seed it was generated from (for reproducibility records).
     pub seed: u64,
+    /// Per-object day/month statistics, keyed by object key. Empty when
+    /// the manifest was rebuilt from a bucket listing (stats live only
+    /// in the generated manifest, like a catalog — a listing can't
+    /// recover them without reading every object).
+    pub object_stats: BTreeMap<String, ObjectStats>,
 }
 
 impl Dataset {
@@ -70,10 +111,14 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
         .put_object(INPUT_BUCKET, WEATHER_KEY, weather_csv)
         .expect("bucket exists");
 
-    // Objects in parallel; each object is an independent RNG stream.
+    // Objects in parallel; each object is an independent RNG stream and
+    // covers its own contiguous day window (object i of N gets the i-th
+    // slice of the dataset's 2738-day timeline), so the manifest's
+    // min/max-day stats are tight enough for scan pruning to bite.
     let pool = ThreadPool::new(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4));
     let prefix_owned = prefix.to_string();
     let env2 = env.clone();
+    let total_days = weather::NUM_DAYS as i64;
     let specs: Vec<(usize, u64)> = (0..num_objects)
         .map(|i| {
             let start = i as u64 * rows_per_object;
@@ -83,17 +128,32 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
         .collect();
     let results = pool.map(specs, move |(i, count)| {
         let key = format!("{}/part-{:05}.csv", prefix_owned, i);
-        let data = taxi::generate_csv_object(seed, 1000 + i as u64, count);
+        let day_lo = i as i64 * total_days / num_objects as i64;
+        let day_hi =
+            ((i as i64 + 1) * total_days / num_objects as i64 - 1).max(day_lo);
+        let data =
+            taxi::generate_csv_object_windowed(seed, 1000 + i as u64, count, day_lo, day_hi);
         let size = data.len() as u64;
         env2.s3().put_object(INPUT_BUCKET, &key, data).expect("bucket exists");
-        (key, size)
+        let stats = ObjectStats {
+            min_day: day_lo as i32,
+            max_day: day_hi as i32,
+            min_month: month_of_day(day_lo),
+            max_month: month_of_day(day_hi),
+            rows: count,
+        };
+        (key, size, stats)
     });
 
-    let mut objects: Vec<(String, u64)> = results
+    let mut entries: Vec<(String, u64, ObjectStats)> = results
         .into_iter()
         .map(|r| r.expect("generation must not panic"))
         .collect();
-    objects.sort();
+    entries.sort_by(|a, b| a.0.cmp(&b.0));
+    let object_stats: BTreeMap<String, ObjectStats> =
+        entries.iter().map(|(k, _, st)| (k.clone(), *st)).collect();
+    let objects: Vec<(String, u64)> =
+        entries.into_iter().map(|(k, s, _)| (k, s)).collect();
     let total_bytes = objects.iter().map(|(_, s)| s).sum();
 
     Dataset {
@@ -105,6 +165,7 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
         weather_key: WEATHER_KEY.to_string(),
         weather_bytes,
         seed,
+        object_stats,
     }
 }
 
@@ -129,6 +190,7 @@ pub fn load_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Option<Dataset> {
         weather_key: WEATHER_KEY.to_string(),
         weather_bytes,
         seed: env.config().seed,
+        object_stats: BTreeMap::new(),
     })
 }
 
@@ -165,6 +227,45 @@ mod tests {
     }
 
     #[test]
+    fn manifest_stats_are_conservative_and_tile_the_timeline() {
+        use crate::data::chrono::{day_index, month_index};
+        use crate::data::schema::TripRecord;
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = generate_taxi_dataset(&env, "trips", 3_000);
+        assert_eq!(ds.object_stats.len(), ds.num_objects());
+        let mut rows = 0u64;
+        for (key, _) in &ds.objects {
+            let st = ds.object_stats[key];
+            assert!(st.min_day <= st.max_day);
+            assert!(st.min_month <= st.max_month);
+            rows += st.rows;
+            // Every row really falls inside the recorded ranges.
+            let (obj, _) = env
+                .s3()
+                .get_object(INPUT_BUCKET, key, env.flint_read_profile())
+                .unwrap();
+            for line in obj.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+                let r = TripRecord::parse_csv(line).unwrap();
+                let d = day_index(r.dropoff_ts);
+                let m = month_index(r.dropoff_ts);
+                assert!((st.min_day..=st.max_day).contains(&d), "day {d} outside stats");
+                assert!((st.min_month..=st.max_month).contains(&m), "month {m} outside stats");
+            }
+        }
+        assert_eq!(rows, 3_000, "stats row counts sum to the manifest trips");
+        // Object windows tile the full 2009-01-01..2016-06-30 timeline.
+        let first = ds.object_stats[&ds.objects[0].0];
+        let last = ds.object_stats[&ds.objects.last().unwrap().0];
+        assert_eq!(first.min_day, 0);
+        assert_eq!(last.max_day as usize, weather::NUM_DAYS - 1);
+        assert!(ds.num_objects() >= 2, "test config uses small objects");
+        // Disjoint windows make the predicate-overlap test selective.
+        assert!(first.overlaps_days(0, 10));
+        assert!(!last.overlaps_days(0, 10));
+        assert!(!first.overlaps_months(last.min_month.max(first.max_month + 1), 200));
+    }
+
+    #[test]
     fn deterministic_across_runs() {
         let env1 = SimEnv::new(FlintConfig::for_tests());
         let env2 = SimEnv::new(FlintConfig::for_tests());
@@ -188,6 +289,7 @@ mod tests {
         let ds = generate_taxi_dataset(&env, "trips", 1_000);
         let loaded = load_dataset(&env, "trips", 1_000).unwrap();
         assert_eq!(loaded.objects, ds.objects);
+        assert!(loaded.object_stats.is_empty(), "a listing cannot recover stats");
         assert!(load_dataset(&env, "nothing-here", 0).is_none());
     }
 }

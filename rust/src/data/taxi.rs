@@ -49,6 +49,9 @@ pub struct TripGenerator {
     hour_cum: [f64; 24],
     bank_hour_cum: [f64; 24],
     first_day: i64,
+    /// First day index (days since 2009-01-01) this generator may emit.
+    day_lo: i64,
+    /// Number of days in the emittable window starting at `day_lo`.
     num_days: i64,
 }
 
@@ -70,8 +73,26 @@ impl TripGenerator {
             hour_cum: cumulative(&HOUR_WEIGHTS),
             bank_hour_cum: cumulative(&BANK_HOUR_WEIGHTS),
             first_day: days_from_civil(2009, 1, 1),
+            day_lo: 0,
             num_days: days_from_civil(2016, 6, 30) - days_from_civil(2009, 1, 1) + 1,
         }
+    }
+
+    /// Like [`TripGenerator::new`], but restricted to day indexes
+    /// `[day_lo, day_hi]` (inclusive, days since 2009-01-01). The dataset
+    /// generator gives each object a distinct window so the manifest's
+    /// min/max-day statistics are selective enough to prune scans on.
+    /// `new(..)` is exactly `new_windowed(.., 0, num_days - 1)`.
+    pub fn new_windowed(seed: u64, stream: u64, day_lo: i64, day_hi: i64) -> TripGenerator {
+        let mut g = TripGenerator::new(seed, stream);
+        assert!(
+            0 <= day_lo && day_lo <= day_hi && day_hi < g.num_days,
+            "day window [{day_lo}, {day_hi}] outside dataset range [0, {})",
+            g.num_days
+        );
+        g.day_lo = day_lo;
+        g.num_days = day_hi - day_lo + 1;
+        g
     }
 
     /// Generate one trip.
@@ -79,7 +100,7 @@ impl TripGenerator {
         // Day: uniform over the range, thinned by weather demand so rainy
         // days genuinely have fewer trips (the Q6 signal).
         let day = loop {
-            let d = self.rng.range_i64(0, self.num_days);
+            let d = self.day_lo + self.rng.range_i64(0, self.num_days);
             if self.rng.f64() < self.weather.demand_multiplier(d as i32) {
                 break d;
             }
@@ -188,7 +209,22 @@ impl TripGenerator {
 
 /// Render `count` trips from `(seed, stream)` as CSV bytes.
 pub fn generate_csv_object(seed: u64, stream: u64, count: u64) -> Vec<u8> {
-    let mut g = TripGenerator::new(seed, stream);
+    render_csv(TripGenerator::new(seed, stream), count)
+}
+
+/// [`generate_csv_object`] restricted to dropoff days `[day_lo, day_hi]`
+/// inclusive (days since 2009-01-01).
+pub fn generate_csv_object_windowed(
+    seed: u64,
+    stream: u64,
+    count: u64,
+    day_lo: i64,
+    day_hi: i64,
+) -> Vec<u8> {
+    render_csv(TripGenerator::new_windowed(seed, stream, day_lo, day_hi), count)
+}
+
+fn render_csv(mut g: TripGenerator, count: u64) -> Vec<u8> {
     // ~131 bytes/row observed; reserve generously to avoid re-allocs.
     let mut out = Vec::with_capacity((count as usize) * 140);
     for _ in 0..count {
@@ -226,6 +262,25 @@ mod tests {
             n += 1;
         }
         assert_eq!(n, 2_000);
+    }
+
+    #[test]
+    fn windowed_generation_stays_in_window() {
+        use crate::data::chrono::day_index;
+        let csv = generate_csv_object_windowed(42, 0, 2_000, 100, 199);
+        let mut n = 0;
+        for line in csv.split(|&b| b == b'\n').filter(|l| !l.is_empty()) {
+            let r = TripRecord::parse_csv(line).expect("generated row must parse");
+            let d = day_index(r.dropoff_ts);
+            assert!((100..=199).contains(&d), "day {d} outside window");
+            n += 1;
+        }
+        assert_eq!(n, 2_000);
+        // The full-range constructor is the degenerate window.
+        let full = TripGenerator::new(42, 0);
+        let windowed =
+            generate_csv_object_windowed(42, 0, 500, 0, full.num_days - 1);
+        assert_eq!(windowed, generate_csv_object(42, 0, 500));
     }
 
     #[test]

@@ -101,6 +101,9 @@ pub struct EdgeShuffle {
     pub to: u32,
     /// Messages the consumer stage received over this edge (pre-dedup).
     pub msgs: u64,
+    /// Encoded shuffle record bytes the producer stage sent over this
+    /// edge — the quantity the rows-vs-columnar codec ablation compares.
+    pub bytes: u64,
 }
 
 /// Everything a plan run produces.
@@ -158,6 +161,8 @@ struct TaskStats {
     rows: u64,
     /// Messages received per parent stage (DAG edge accounting).
     edge_received: Vec<(u32, u64)>,
+    /// Encoded bytes sent per consuming stage (codec accounting).
+    edge_sent: Vec<(u32, u64)>,
     emitted: Emitted,
 }
 
@@ -227,6 +232,7 @@ pub fn run_plan(
     };
     let mut final_emits: Vec<Emitted> = Vec::new();
     let mut edge_msgs: BTreeMap<(u32, u32), u64> = BTreeMap::new();
+    let mut edge_bytes: BTreeMap<(u32, u32), u64> = BTreeMap::new();
 
     // Host execution in topological (id) order: the simulated shuffle
     // substrates hold a producer's data only after it flushed, so real
@@ -339,6 +345,9 @@ pub fn run_plan(
                             for (from, msgs) in &bstats.edge_received {
                                 *edge_msgs.entry((*from, stage.id)).or_insert(0) += *msgs;
                             }
+                            for (to, b) in &bstats.edge_sent {
+                                *edge_bytes.entry((stage.id, *to)).or_insert(0) += *b;
+                            }
                         }
                         Err(_) => {
                             // A backup that crashes out never fails the
@@ -362,6 +371,9 @@ pub fn run_plan(
             totals.rows += stats.rows;
             for (from, msgs) in &stats.edge_received {
                 *edge_msgs.entry((*from, stage.id)).or_insert(0) += *msgs;
+            }
+            for (to, b) in &stats.edge_sent {
+                *edge_bytes.entry((stage.id, *to)).or_insert(0) += *b;
             }
             if matches!(stage.output, StageOutput::Act(_)) {
                 final_emits.push(stats.emitted);
@@ -409,6 +421,9 @@ pub fn run_plan(
     for ((from, to), msgs) in &edge_msgs {
         env.metrics().add(&format!("shuffle.edge.s{from}-s{to}.msgs"), *msgs);
     }
+    for ((from, to), bytes) in &edge_bytes {
+        env.metrics().add(&format!("shuffle.edge.s{from}-s{to}.bytes"), *bytes);
+    }
 
     totals.out = merge_emits(final_emits)?;
     totals.latency_s = match params.schedule {
@@ -429,9 +444,19 @@ pub fn run_plan(
     totals.barrier_windows = barrier.stages;
     totals.pipelined_windows = pipelined.stages;
     totals.stage_latencies = stage_latencies;
-    totals.edge_shuffle = edge_msgs
+    // One row per edge, msgs from the receiver side and bytes from the
+    // sender side (the maps cover the same edges on a clean run; a union
+    // keeps partial accounting honest if one side is missing).
+    let mut edges: BTreeMap<(u32, u32), (u64, u64)> = BTreeMap::new();
+    for ((from, to), msgs) in edge_msgs {
+        edges.entry((from, to)).or_insert((0, 0)).0 = msgs;
+    }
+    for ((from, to), bytes) in edge_bytes {
+        edges.entry((from, to)).or_insert((0, 0)).1 = bytes;
+    }
+    totals.edge_shuffle = edges
         .into_iter()
-        .map(|((from, to), msgs)| EdgeShuffle { from, to, msgs })
+        .map(|((from, to), (msgs, bytes))| EdgeShuffle { from, to, msgs, bytes })
         .collect();
     totals.timeline = merged_tl;
     Ok(totals)
@@ -532,6 +557,7 @@ fn run_task_with_recovery(
         duplicates_dropped: 0,
         rows: 0,
         edge_received: Vec::new(),
+        edge_sent: Vec::new(),
         emitted: Emitted::Nothing,
     };
     // Primaries arrive as attempt 0; a speculative backup arrives with
@@ -609,6 +635,7 @@ fn run_task_with_recovery(
                 stats.msgs_received += resp.shuffle_msgs_received;
                 stats.duplicates_dropped += resp.duplicates_dropped;
                 merge_edges(&mut stats.edge_received, &resp.edge_received);
+                merge_edges(&mut stats.edge_sent, &resp.edge_sent_bytes);
                 stats.rows = resp.rows;
                 stats.emitted = resp.emitted;
                 return Ok(stats);
@@ -624,6 +651,7 @@ fn run_task_with_recovery(
                 stats.msgs_sent += resp.msgs_sent;
                 stats.msgs_received += resp.shuffle_msgs_received;
                 merge_edges(&mut stats.edge_received, &resp.edge_received);
+                merge_edges(&mut stats.edge_sent, &resp.edge_sent_bytes);
                 stats.chains += 1;
                 resume = Some(r);
                 // Same attempt continues in a fresh (warm) invocation.

@@ -31,9 +31,11 @@ use crate::compute::csv::{fetch_range, SplitLines};
 use crate::compute::kernels::{prepare_keys, prepare_values, run_batch_native, HistAccum};
 use crate::compute::queries::KeySource;
 use crate::compute::value::Value;
+use crate::config::ShuffleCodec;
 use crate::data::weather::WeatherTable;
 use crate::exec::shuffle::{
-    dyn_partition, kernel_partition, ShuffleReader, ShuffleRec, ShuffleWriter, Transport,
+    dyn_chunk_values, dyn_partition, kernel_partition, pack_dyn_run, pack_kernel_run,
+    ShuffleReader, ShuffleRec, ShuffleWriter, Transport,
 };
 use crate::plan::{
     Action, PhysicalPlan, ResumeState, StageCompute, StageOutput, TaskDescriptor, TaskInput,
@@ -121,6 +123,9 @@ pub struct TaskResponse {
     pub duplicates_dropped: u64,
     /// Messages received per parent stage (per-edge shuffle accounting).
     pub edge_received: Vec<(u32, u64)>,
+    /// Encoded record bytes sent per consuming stage (per-edge codec
+    /// accounting — what the rows-vs-columnar ablation measures).
+    pub edge_sent_bytes: Vec<(u32, u64)>,
 }
 
 impl TaskResponse {
@@ -134,6 +139,7 @@ impl TaskResponse {
             shuffle_msgs_received: 0,
             duplicates_dropped: 0,
             edge_received: Vec::new(),
+            edge_sent_bytes: Vec::new(),
         }
     }
 }
@@ -233,6 +239,11 @@ fn kernel_scan(
         None => None,
     };
     let count_only = spec.key == KeySource::None && spec.reduce_partitions == 0;
+    let has_ranges = spec.day_range.is_some() || spec.month_range.is_some();
+    // Count can skip parsing entirely — unless a day/month predicate is
+    // set, in which case every line must be parsed so the count honors
+    // the predicate (and stays consistent with stats-based pruning).
+    let fast_count = count_only && !has_ranges;
     if let Some(r) = &task.resume {
         resp.rows = r.rows_done;
         if !r.partial.is_empty() {
@@ -256,6 +267,24 @@ fn kernel_scan(
     let consumed = task.resume.as_ref().map(|r| r.input_offset).unwrap_or(0);
     if consumed > split.len() {
         return kernel_emit(ctx, task, &spec, &accum, writer.as_mut(), count_only, resp);
+    }
+    // Statistics-based scan pruning: when the manifest's per-object
+    // day/month ranges are disjoint from the spec's predicate, no row of
+    // this split can survive the filter — skip the S3 GET entirely and
+    // emit the empty histogram. Because `rows_seen` counts *post*-
+    // predicate rows whenever a range is set, a pruned split is
+    // byte-identical to one whose rows were all filtered out, so results
+    // match the prune-off run exactly.
+    if ctx.env.config().flint.scan_prune {
+        if let Some(st) = &split.stats {
+            let day_hit = spec.day_range.map_or(true, |(lo, hi)| st.overlaps_days(lo, hi));
+            let month_hit =
+                spec.month_range.map_or(true, |(lo, hi)| st.overlaps_months(lo, hi));
+            if !day_hit || !month_hit {
+                ctx.env.metrics().incr("scan.splits_pruned");
+                return kernel_emit(ctx, task, &spec, &accum, writer.as_mut(), count_only, resp);
+            }
+        }
     }
     let weather = load_weather(ctx, &mut resp.timeline)?;
     let read_start = split.start + consumed;
@@ -283,6 +312,12 @@ fn kernel_scan(
     let mut lines = SplitLines::new(window.bytes(), own_len, is_first);
 
     let mut batch = ColumnBatch::with_capacity(batch_capacity(ctx));
+    // Only the columns the spec references are parsed out of each line;
+    // the per-task field count is metered for the projection ablation.
+    let proj = spec.projection();
+    if !fast_count {
+        ctx.env.metrics().add("scan.cols_parsed", proj.num_fields() as u64);
+    }
     let pipe_rate = ctx.env.config().sim.pyspark_pipe_per_record_s;
     let mut lines_since_check = 0u64;
 
@@ -290,7 +325,7 @@ fn kernel_scan(
         let sw = CpuStopwatch::start();
         let mut batch_lines = 0u64;
         // Fill one batch (or count a block of lines for Q0).
-        if count_only {
+        if fast_count {
             for _ in 0..65_536 {
                 match lines.next() {
                     Some(_) => {
@@ -305,7 +340,7 @@ fn kernel_scan(
                 match lines.next() {
                     Some(line) => {
                         batch_lines += 1;
-                        if batch.push_line(line) {
+                        if batch.push_line_projected(line, proj) {
                             resp.rows += 1;
                         } else {
                             resp.malformed += 1;
@@ -412,21 +447,38 @@ fn kernel_emit(
     count_only: bool,
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
-    let _ = spec;
-    let _ = ctx;
     match (&task.output, writer) {
         (TaskOutput::Shuffle { partitions }, Some(w)) => {
+            // Group the sorted histogram rows into per-partition runs and
+            // pack each run with the configured codec (columnar chunks or
+            // the legacy record-per-key stream).
+            let codec = ctx.env.config().flint.shuffle_codec;
+            let mut runs: BTreeMap<u32, Vec<(i64, f64, f64)>> = BTreeMap::new();
             for (key, sum, count) in accum.to_rows() {
-                let p = kernel_partition(key, *partitions);
-                w.write(p, &ShuffleRec::Kernel { key, sum, count }, &mut resp.timeline)?;
+                runs.entry(kernel_partition(key, *partitions))
+                    .or_default()
+                    .push((key, sum, count));
+            }
+            for (p, run) in runs {
+                for rec in pack_kernel_run(&run, codec) {
+                    w.write(p, &rec, &mut resp.timeline)?;
+                }
             }
             w.flush_all(&mut resp.timeline)?;
             resp.msgs_sent = w.msgs_sent;
+            resp.edge_sent_bytes = w.edge_bytes();
             resp.emitted = Emitted::Nothing;
         }
         (TaskOutput::Driver, _) => {
             resp.emitted = if count_only {
-                Emitted::Count(resp.rows)
+                // With a day/month predicate the raw line count is wrong —
+                // the kernel's post-predicate `rows_seen` is the answer
+                // (and agrees with stats-based pruning).
+                if spec.day_range.is_some() || spec.month_range.is_some() {
+                    Emitted::Count(accum.rows_seen)
+                } else {
+                    Emitted::Count(resp.rows)
+                }
             } else {
                 Emitted::KernelRows(accum.to_rows())
             };
@@ -450,6 +502,10 @@ fn run_kernel_batch(
     weather: Option<&WeatherTable>,
     accum: &mut HistAccum,
 ) -> Result<()> {
+    // AOT artifacts bake in only the geo/tip filter; a spec carrying a
+    // day/month predicate must run natively or the predicate would be
+    // silently dropped.
+    let ranged = spec.day_range.is_some() || spec.month_range.is_some();
     match ctx.runtime {
         // Published queries always go to PJRT when a runtime is loaded —
         // `run_hist` fails loudly on a missing/stale artifact, so a
@@ -457,7 +513,7 @@ fn run_kernel_batch(
         // timings as PJRT numbers. Extension queries (Q6J's day-keyed
         // scan, no published row) were never AOT-lowered: they take the
         // native kernel unless an artifact actually exists for them.
-        Some(rt) if spec.query.published_index().is_some() || rt.supports(spec) => {
+        Some(rt) if !ranged && (spec.query.published_index().is_some() || rt.supports(spec)) => {
             batch.pad_to_capacity();
             let keys = prepare_keys(spec, batch, weather);
             let values = prepare_values(spec, batch);
@@ -618,17 +674,57 @@ fn kernel_reduce(
     }
 
     let sw = CpuStopwatch::start();
+    // Vectorized merge: histogram keys are dense bucket indexes in
+    // [0, spec.buckets), so the hot path is plain array indexing over
+    // contiguous sum/count columns (chunked input merges column-slices
+    // directly). Out-of-range keys — join re-keys, hand-built plans —
+    // fall back to the map. The dense state folds back into `agg`
+    // afterwards, so chain resume, the memory guard, and emission reuse
+    // the exact BTreeMap code (and its sorted order) unchanged.
+    let dense_n = spec.buckets;
+    let mut dense_sums = vec![0.0f64; dense_n];
+    let mut dense_counts = vec![0.0f64; dense_n];
+    let mut dense_hit = vec![false; dense_n];
     for rec in records {
         match rec {
             ShuffleRec::Kernel { key, sum, count } => {
-                let e = agg.entry(key).or_insert((0.0, 0.0));
-                e.0 += sum;
-                e.1 += count;
+                if key >= 0 && (key as usize) < dense_n {
+                    let i = key as usize;
+                    dense_sums[i] += sum;
+                    dense_counts[i] += count;
+                    dense_hit[i] = true;
+                } else {
+                    let e = agg.entry(key).or_insert((0.0, 0.0));
+                    e.0 += sum;
+                    e.1 += count;
+                }
                 resp.rows += 1;
             }
-            ShuffleRec::Dyn { .. } => {
+            ShuffleRec::Chunk { keys, sums, counts } => {
+                resp.rows += keys.len() as u64;
+                for ((&key, &sum), &count) in keys.iter().zip(&sums).zip(&counts) {
+                    if key >= 0 && (key as usize) < dense_n {
+                        let i = key as usize;
+                        dense_sums[i] += sum;
+                        dense_counts[i] += count;
+                        dense_hit[i] = true;
+                    } else {
+                        let e = agg.entry(key).or_insert((0.0, 0.0));
+                        e.0 += sum;
+                        e.1 += count;
+                    }
+                }
+            }
+            ShuffleRec::Dyn { .. } | ShuffleRec::DynChunk { .. } => {
                 return abandon_and_fail(&mut readers, anyhow!("dyn record in kernel reduce"))
             }
+        }
+    }
+    for i in 0..dense_n {
+        if dense_hit[i] {
+            let e = agg.entry(i as i64).or_insert((0.0, 0.0));
+            e.0 += dense_sums[i];
+            e.1 += dense_counts[i];
         }
     }
     resp.timeline
@@ -754,36 +850,62 @@ fn kernel_join(
     for TaggedRecords { parent, records } in tagged {
         if parent == fact_edge {
             for rec in records {
-                let ShuffleRec::Kernel { key, sum, count } = rec else {
-                    return abandon_and_fail(
-                        &mut readers,
-                        anyhow!("dyn record on the fact edge (stage {parent})"),
-                    );
-                };
-                let e = facts.entry(key).or_insert((0.0, 0.0));
-                e.0 += sum;
-                e.1 += count;
-                resp.rows += 1;
+                match rec {
+                    ShuffleRec::Kernel { key, sum, count } => {
+                        let e = facts.entry(key).or_insert((0.0, 0.0));
+                        e.0 += sum;
+                        e.1 += count;
+                        resp.rows += 1;
+                    }
+                    ShuffleRec::Chunk { keys, sums, counts } => {
+                        resp.rows += keys.len() as u64;
+                        for ((&key, &sum), &count) in keys.iter().zip(&sums).zip(&counts) {
+                            let e = facts.entry(key).or_insert((0.0, 0.0));
+                            e.0 += sum;
+                            e.1 += count;
+                        }
+                    }
+                    _ => {
+                        return abandon_and_fail(
+                            &mut readers,
+                            anyhow!("dyn record on the fact edge (stage {parent})"),
+                        )
+                    }
+                }
             }
         } else {
             for rec in records {
-                let ShuffleRec::Dyn { pair } = rec else {
-                    return abandon_and_fail(
-                        &mut readers,
-                        anyhow!("kernel record on the dimension edge (stage {parent})"),
-                    );
+                let pairs = match rec {
+                    ShuffleRec::Dyn { pair } => vec![pair],
+                    ShuffleRec::DynChunk { encs } => match dyn_chunk_values(&encs) {
+                        Some(pairs) => pairs,
+                        None => {
+                            return abandon_and_fail(
+                                &mut readers,
+                                anyhow!("corrupt dyn chunk on the dimension edge"),
+                            )
+                        }
+                    },
+                    _ => {
+                        return abandon_and_fail(
+                            &mut readers,
+                            anyhow!("kernel record on the dimension edge (stage {parent})"),
+                        )
+                    }
                 };
-                let Some(k) = pair.key().as_i64() else {
-                    return abandon_and_fail(
-                        &mut readers,
-                        anyhow!("non-i64 join key on the dimension edge"),
-                    );
-                };
-                let Some(v) = pair.val().as_i64() else {
-                    return abandon_and_fail(&mut readers, anyhow!("non-i64 dimension value"));
-                };
-                dim.insert(k, v);
-                resp.rows += 1;
+                for pair in pairs {
+                    let Some(k) = pair.key().as_i64() else {
+                        return abandon_and_fail(
+                            &mut readers,
+                            anyhow!("non-i64 join key on the dimension edge"),
+                        );
+                    };
+                    let Some(v) = pair.val().as_i64() else {
+                        return abandon_and_fail(&mut readers, anyhow!("non-i64 dimension value"));
+                    };
+                    dim.insert(k, v);
+                    resp.rows += 1;
+                }
             }
         }
     }
@@ -846,10 +968,13 @@ fn kernel_join(
                 *partitions,
                 None,
             );
-            if let Err(e) = write_join_output(&mut w, joined, *partitions, &mut resp.timeline) {
+            let codec = ctx.env.config().flint.shuffle_codec;
+            if let Err(e) = write_join_output(&mut w, joined, *partitions, codec, &mut resp.timeline)
+            {
                 return abandon_and_fail(&mut readers, e);
             }
             resp.msgs_sent = w.msgs_sent;
+            resp.edge_sent_bytes = w.edge_bytes();
         }
         TaskOutput::Driver => {
             resp.emitted =
@@ -874,11 +999,19 @@ fn write_join_output(
     w: &mut ShuffleWriter,
     joined: BTreeMap<i64, (f64, f64)>,
     partitions: u32,
+    codec: ShuffleCodec,
     tl: &mut Timeline,
 ) -> Result<()> {
+    let mut runs: BTreeMap<u32, Vec<(i64, f64, f64)>> = BTreeMap::new();
     for (key, (sum, count)) in joined {
-        let p = kernel_partition(key, partitions);
-        w.write(p, &ShuffleRec::Kernel { key, sum, count }, tl)?;
+        runs.entry(kernel_partition(key, partitions))
+            .or_default()
+            .push((key, sum, count));
+    }
+    for (p, run) in runs {
+        for rec in pack_kernel_run(&run, codec) {
+            w.write(p, &rec, tl)?;
+        }
     }
     w.flush_all(tl)
 }
@@ -962,15 +1095,32 @@ fn dyn_scan(
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
     let TaskInput::Split(split) = &task.input else { unreachable!() };
-    let (fs, fe) = fetch_range(split.start, split.end, split.object_size);
-    let (window, dt) = ctx
-        .env
-        .s3()
-        .get_range(&split.bucket, &split.key, fs, fe, ctx.read_profile())
-        .map_err(|e| anyhow!("input split: {e}"))?;
-    resp.timeline.charge(Component::S3Read, dt);
-
-    let mut lines = SplitLines::new(window.bytes(), split.len(), split.start == 0);
+    // Statistics-based pruning on the generic path: leading
+    // `filter_day_range` ops expose a typed day predicate to the planner;
+    // when it is disjoint from the split's manifest stats no line can
+    // survive the chain's head, so the S3 GET is skipped outright. (A
+    // resumed link never prunes — its first link already read data.)
+    let pruned = ctx.env.config().flint.scan_prune
+        && task.resume.is_none()
+        && match (crate::plan::DynOp::leading_day_range(ops), &split.stats) {
+            (Some((lo, hi)), Some(st)) => !st.overlaps_days(lo, hi),
+            _ => false,
+        };
+    let window;
+    let mut lines = if pruned {
+        ctx.env.metrics().incr("scan.splits_pruned");
+        SplitLines::new(&[], 0, true)
+    } else {
+        let (fs, fe) = fetch_range(split.start, split.end, split.object_size);
+        let (w, dt) = ctx
+            .env
+            .s3()
+            .get_range(&split.bucket, &split.key, fs, fe, ctx.read_profile())
+            .map_err(|e| anyhow!("input split: {e}"))?;
+        resp.timeline.charge(Component::S3Read, dt);
+        window = w;
+        SplitLines::new(window.bytes(), split.len(), split.start == 0)
+    };
     if let Some(r) = &task.resume {
         lines.seek(r.input_offset as usize);
         resp.rows = r.rows_done;
@@ -1075,7 +1225,7 @@ fn dyn_scan(
         // paper's executors do exactly this).
         let side_bytes: usize = side.iter().map(|(k, v)| k.len() + v.mem_bytes()).sum();
         if let (Some(w), true) = (writer.as_mut(), side_bytes > flush_bytes) {
-            flush_side(&mut side, w, &mut resp.timeline)?;
+            flush_side(&mut side, w, ctx.env.config().flint.shuffle_codec, &mut resp.timeline)?;
         }
         let mem_used = window.len() as u64
             + side_bytes as u64
@@ -1103,9 +1253,10 @@ fn dyn_scan(
     match &task.output {
         TaskOutput::Shuffle { .. } => {
             let w = writer.as_mut().expect("writer for shuffle output");
-            flush_side(&mut side, w, &mut resp.timeline)?;
+            flush_side(&mut side, w, ctx.env.config().flint.shuffle_codec, &mut resp.timeline)?;
             w.flush_all(&mut resp.timeline)?;
             resp.msgs_sent = w.msgs_sent;
+            resp.edge_sent_bytes = w.edge_bytes();
         }
         TaskOutput::Driver => {
             resp.emitted = match &ctx.plan.action {
@@ -1124,13 +1275,25 @@ fn dyn_scan(
 fn flush_side(
     side: &mut BTreeMap<Vec<u8>, Value>,
     writer: &mut ShuffleWriter,
+    codec: ShuffleCodec,
     tl: &mut Timeline,
 ) -> Result<()> {
+    // The side map iterates in encoded-key order, so each partition's
+    // run stays sorted — exactly what the columnar front-coding wants.
     let partitions = writer_partitions(writer);
+    let mut runs: Vec<Vec<Value>> = vec![Vec::new(); partitions as usize];
     for (key_bytes, val) in std::mem::take(side) {
         let (key, _) = Value::decode(&key_bytes).ok_or_else(|| anyhow!("corrupt side key"))?;
         let p = dyn_partition(&key, partitions);
-        writer.write(p, &ShuffleRec::Dyn { pair: Value::pair(key, val) }, tl)?;
+        runs[p as usize].push(Value::pair(key, val));
+    }
+    for (p, run) in runs.iter().enumerate() {
+        if run.is_empty() {
+            continue;
+        }
+        for rec in pack_dyn_run(run, codec) {
+            writer.write(p as u32, &rec, tl)?;
+        }
     }
     Ok(())
 }
@@ -1168,18 +1331,27 @@ fn dyn_reduce(
     let sw = CpuStopwatch::start();
     let mut agg: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
     for rec in tagged.into_iter().flat_map(|t| t.records) {
-        let ShuffleRec::Dyn { pair } = rec else {
-            return abandon_and_fail(&mut readers, anyhow!("kernel record in dyn reduce"));
+        let pairs = match rec {
+            ShuffleRec::Dyn { pair } => vec![pair],
+            ShuffleRec::DynChunk { encs } => match dyn_chunk_values(&encs) {
+                Some(pairs) => pairs,
+                None => {
+                    return abandon_and_fail(&mut readers, anyhow!("corrupt dyn chunk in reduce"))
+                }
+            },
+            _ => return abandon_and_fail(&mut readers, anyhow!("kernel record in dyn reduce")),
         };
-        resp.rows += 1;
-        let key_bytes = pair.key().encode();
-        let val = pair.val().clone();
-        match agg.remove(&key_bytes) {
-            Some(prev) => {
-                agg.insert(key_bytes, combine(prev, val));
-            }
-            None => {
-                agg.insert(key_bytes, val);
+        for pair in pairs {
+            resp.rows += 1;
+            let key_bytes = pair.key().encode();
+            let val = pair.val().clone();
+            match agg.remove(&key_bytes) {
+                Some(prev) => {
+                    agg.insert(key_bytes, combine(prev, val));
+                }
+                None => {
+                    agg.insert(key_bytes, val);
+                }
             }
         }
     }
@@ -1236,16 +1408,30 @@ fn dyn_cogroup(
     let mut groups: BTreeMap<Vec<u8>, Vec<Vec<Value>>> = BTreeMap::new();
     for (side, TaggedRecords { parent, records }) in tagged.into_iter().enumerate() {
         for rec in records {
-            let ShuffleRec::Dyn { pair } = rec else {
-                return abandon_and_fail(
-                    &mut readers,
-                    anyhow!("kernel record in cogroup (edge from stage {parent})"),
-                );
+            let pairs = match rec {
+                ShuffleRec::Dyn { pair } => vec![pair],
+                ShuffleRec::DynChunk { encs } => match dyn_chunk_values(&encs) {
+                    Some(pairs) => pairs,
+                    None => {
+                        return abandon_and_fail(
+                            &mut readers,
+                            anyhow!("corrupt dyn chunk in cogroup (edge from stage {parent})"),
+                        )
+                    }
+                },
+                _ => {
+                    return abandon_and_fail(
+                        &mut readers,
+                        anyhow!("kernel record in cogroup (edge from stage {parent})"),
+                    )
+                }
             };
-            resp.rows += 1;
-            let kb = pair.key().encode();
-            let sides = groups.entry(kb).or_insert_with(|| vec![Vec::new(); n_sides]);
-            sides[side].push(pair.val().clone());
+            for pair in pairs {
+                resp.rows += 1;
+                let kb = pair.key().encode();
+                let sides = groups.entry(kb).or_insert_with(|| vec![Vec::new(); n_sides]);
+                sides[side].push(pair.val().clone());
+            }
         }
     }
     let mut pairs = Vec::with_capacity(groups.len());
@@ -1367,12 +1553,14 @@ fn route_post_ops(
     match &task.output {
         TaskOutput::Shuffle { .. } => {
             let w = writer.as_mut().expect("writer");
-            let sealed = flush_side(&mut next_side, w, &mut resp.timeline)
+            let codec = ctx.env.config().flint.shuffle_codec;
+            let sealed = flush_side(&mut next_side, w, codec, &mut resp.timeline)
                 .and_then(|()| w.flush_all(&mut resp.timeline));
             if let Err(e) = sealed {
                 return abandon_and_fail(readers, e);
             }
             resp.msgs_sent = w.msgs_sent;
+            resp.edge_sent_bytes = w.edge_bytes();
         }
         TaskOutput::Driver => {
             resp.emitted = match &ctx.plan.action {

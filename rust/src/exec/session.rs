@@ -96,6 +96,8 @@ impl SessionBinding for SessionInner {
                     start,
                     end,
                     object_size: size,
+                    // A raw bucket listing carries no manifest stats.
+                    stats: None,
                 });
             }
         }

@@ -30,6 +30,7 @@
 //! or crashed attempt never leaves a torn partition behind.
 
 use crate::compute::value::Value;
+use crate::config::ShuffleCodec;
 use crate::data::SHUFFLE_BUCKET;
 use crate::services::{Message, SimEnv};
 use crate::simtime::{Component, Timeline};
@@ -38,11 +39,111 @@ use std::collections::{BTreeMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 /// A shuffle record: the typed kernel path ships `(bucket, sum, count)`;
-/// the generic path ships encoded [`Value`] pairs.
+/// the generic path ships encoded [`Value`] pairs. The two `*Chunk`
+/// variants are the columnar wire format (`flint.shuffle.codec =
+/// columnar`): a sorted run of kernel partials rides as delta-encoded
+/// key + column arrays, a run of dyn pairs as front-coded encodings.
+/// Readers decode all four tags regardless of the writer's codec, so
+/// mixed streams (e.g. across a rolling config change) stay readable.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ShuffleRec {
     Kernel { key: i64, sum: f64, count: f64 },
     Dyn { pair: Value },
+    /// Columnar run of kernel partials (parallel columns, same length).
+    Chunk { keys: Vec<i64>, sums: Vec<f64>, counts: Vec<f64> },
+    /// Columnar run of dyn pairs: each element is one pair's full
+    /// [`Value`] encoding (stored raw so front-coding and byte
+    /// accounting need no re-encode; validated back to values on decode).
+    DynChunk { encs: Vec<Vec<u8>> },
+}
+
+/// `Chunk` flag bits: which compressed layout each value column uses.
+const CHUNK_COUNTS_VARINT: u8 = 1;
+const CHUNK_SUMS_EQ_COUNTS: u8 = 2;
+const CHUNK_SUMS_VARINT: u8 = 4;
+const CHUNK_FLAGS_MASK: u8 = CHUNK_COUNTS_VARINT | CHUNK_SUMS_EQ_COUNTS | CHUNK_SUMS_VARINT;
+
+/// LEB128 varint encode.
+fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn varint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn get_varint(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes.get(*pos)?;
+        *pos += 1;
+        if shift == 63 && (b & 0x7f) > 1 {
+            return None; // overflows u64
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return None;
+        }
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// A f64 that is exactly a small non-negative integer (varint-safe:
+/// `(x as u64) as f64 == x`). Rejects -0.0, NaN, infinities, and
+/// anything above 2^53 so the roundtrip is bit-exact.
+fn small_uint(x: f64) -> Option<u64> {
+    if x.is_sign_positive() && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0 {
+        Some(x as u64)
+    } else {
+        None
+    }
+}
+
+/// Pick the cheapest lossless layout for a chunk's value columns.
+fn chunk_flags(sums: &[f64], counts: &[f64]) -> u8 {
+    let mut flags = 0u8;
+    if counts.iter().all(|&c| small_uint(c).is_some()) {
+        flags |= CHUNK_COUNTS_VARINT;
+    }
+    if sums.len() == counts.len()
+        && sums.iter().zip(counts).all(|(s, c)| s.to_bits() == c.to_bits())
+    {
+        // The common `count(*)`-style queries (value source One) ship
+        // sum == count per key; the sums column vanishes entirely.
+        flags |= CHUNK_SUMS_EQ_COUNTS;
+    } else if sums.iter().all(|&s| small_uint(s).is_some()) {
+        flags |= CHUNK_SUMS_VARINT;
+    }
+    flags
+}
+
+fn common_prefix(a: &[u8], b: &[u8]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
 }
 
 impl ShuffleRec {
@@ -57,6 +158,61 @@ impl ShuffleRec {
             ShuffleRec::Dyn { pair } => {
                 out.push(1);
                 pair.encode_into(out);
+            }
+            ShuffleRec::Chunk { keys, sums, counts } => {
+                assert_eq!(keys.len(), sums.len());
+                assert_eq!(keys.len(), counts.len());
+                out.push(2);
+                let flags = chunk_flags(sums, counts);
+                out.push(flags);
+                put_varint(out, keys.len() as u64);
+                // Keys: zigzag of the first, zigzag deltas after — sorted
+                // runs (the writer's case) cost ~1 byte per key, but the
+                // codec stays total over any key sequence via wrapping.
+                let mut prev = 0i64;
+                for (i, &k) in keys.iter().enumerate() {
+                    let d = if i == 0 { k } else { k.wrapping_sub(prev) };
+                    put_varint(out, zigzag(d));
+                    prev = k;
+                }
+                if flags & CHUNK_COUNTS_VARINT != 0 {
+                    for &c in counts {
+                        put_varint(out, c as u64);
+                    }
+                } else {
+                    for &c in counts {
+                        out.extend_from_slice(&c.to_le_bytes());
+                    }
+                }
+                if flags & CHUNK_SUMS_EQ_COUNTS == 0 {
+                    if flags & CHUNK_SUMS_VARINT != 0 {
+                        for &s in sums {
+                            put_varint(out, s as u64);
+                        }
+                    } else {
+                        for &s in sums {
+                            out.extend_from_slice(&s.to_le_bytes());
+                        }
+                    }
+                }
+            }
+            ShuffleRec::DynChunk { encs } => {
+                out.push(3);
+                put_varint(out, encs.len() as u64);
+                for (i, enc) in encs.iter().enumerate() {
+                    if i == 0 {
+                        put_varint(out, enc.len() as u64);
+                        out.extend_from_slice(enc);
+                    } else {
+                        // Front-coding: shared prefix with the previous
+                        // encoding (sorted map-side combine output shares
+                        // pair-tag + key prefixes), then the suffix.
+                        let p = common_prefix(&encs[i - 1], enc);
+                        put_varint(out, p as u64);
+                        put_varint(out, (enc.len() - p) as u64);
+                        out.extend_from_slice(&enc[p..]);
+                    }
+                }
             }
         }
     }
@@ -76,6 +232,96 @@ impl ShuffleRec {
                 let (pair, n) = Value::decode(&bytes[1..])?;
                 Some((ShuffleRec::Dyn { pair }, 1 + n))
             }
+            2 => {
+                let flags = *bytes.get(1)?;
+                if flags & !CHUNK_FLAGS_MASK != 0 {
+                    return None;
+                }
+                let mut pos = 2;
+                let n = get_varint(bytes, &mut pos)? as usize;
+                // Every key needs at least one byte; bounding n against
+                // the remaining bytes keeps garbage from over-allocating.
+                if n == 0 || n > bytes.len().saturating_sub(pos) {
+                    return None;
+                }
+                let mut keys = Vec::with_capacity(n);
+                let mut prev = 0i64;
+                for i in 0..n {
+                    let d = unzigzag(get_varint(bytes, &mut pos)?);
+                    let k = if i == 0 { d } else { prev.wrapping_add(d) };
+                    keys.push(k);
+                    prev = k;
+                }
+                let mut counts = Vec::with_capacity(n);
+                if flags & CHUNK_COUNTS_VARINT != 0 {
+                    for _ in 0..n {
+                        counts.push(get_varint(bytes, &mut pos)? as f64);
+                    }
+                } else {
+                    for _ in 0..n {
+                        let raw: [u8; 8] =
+                            bytes.get(pos..pos.checked_add(8)?)?.try_into().ok()?;
+                        counts.push(f64::from_le_bytes(raw));
+                        pos += 8;
+                    }
+                }
+                let sums = if flags & CHUNK_SUMS_EQ_COUNTS != 0 {
+                    counts.clone()
+                } else if flags & CHUNK_SUMS_VARINT != 0 {
+                    let mut sums = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        sums.push(get_varint(bytes, &mut pos)? as f64);
+                    }
+                    sums
+                } else {
+                    let mut sums = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let raw: [u8; 8] =
+                            bytes.get(pos..pos.checked_add(8)?)?.try_into().ok()?;
+                        sums.push(f64::from_le_bytes(raw));
+                        pos += 8;
+                    }
+                    sums
+                };
+                Some((ShuffleRec::Chunk { keys, sums, counts }, pos))
+            }
+            3 => {
+                let mut pos = 1;
+                let n = get_varint(bytes, &mut pos)? as usize;
+                if n == 0 || n > bytes.len().saturating_sub(pos) {
+                    return None;
+                }
+                let mut encs: Vec<Vec<u8>> = Vec::with_capacity(n.min(1024));
+                for i in 0..n {
+                    let enc = if i == 0 {
+                        let len = get_varint(bytes, &mut pos)? as usize;
+                        let e = bytes.get(pos..pos.checked_add(len)?)?.to_vec();
+                        pos += len;
+                        e
+                    } else {
+                        let p = get_varint(bytes, &mut pos)? as usize;
+                        let slen = get_varint(bytes, &mut pos)? as usize;
+                        let prev = encs.last().expect("i > 0");
+                        if p > prev.len() {
+                            return None;
+                        }
+                        let suffix = bytes.get(pos..pos.checked_add(slen)?)?;
+                        let mut e = Vec::with_capacity(p + slen);
+                        e.extend_from_slice(&prev[..p]);
+                        e.extend_from_slice(suffix);
+                        pos += slen;
+                        e
+                    };
+                    // Each stored encoding must be exactly one value —
+                    // consumers decode these unconditionally.
+                    match Value::decode(&enc) {
+                        Some((_, used)) if used == enc.len() => {}
+                        _ => return None,
+                    }
+                    encs.push(enc);
+                }
+                Some((ShuffleRec::DynChunk { encs }, pos))
+            }
             _ => None,
         }
     }
@@ -90,16 +336,124 @@ impl ShuffleRec {
         Some(out)
     }
 
+    /// Exact wire length, computed without encoding (the byte-aware
+    /// chunking in [`ShuffleWriter::write`] asks this per record).
     pub fn encoded_len(&self) -> usize {
         match self {
             ShuffleRec::Kernel { .. } => 25,
-            ShuffleRec::Dyn { pair } => {
-                let mut buf = Vec::new();
-                pair.encode_into(&mut buf);
-                1 + buf.len()
+            ShuffleRec::Dyn { pair } => 1 + pair.encoded_len(),
+            ShuffleRec::Chunk { keys, sums, counts } => {
+                let flags = chunk_flags(sums, counts);
+                let mut len = 2 + varint_len(keys.len() as u64);
+                let mut prev = 0i64;
+                for (i, &k) in keys.iter().enumerate() {
+                    let d = if i == 0 { k } else { k.wrapping_sub(prev) };
+                    len += varint_len(zigzag(d));
+                    prev = k;
+                }
+                len += if flags & CHUNK_COUNTS_VARINT != 0 {
+                    counts.iter().map(|&c| varint_len(c as u64)).sum::<usize>()
+                } else {
+                    8 * counts.len()
+                };
+                if flags & CHUNK_SUMS_EQ_COUNTS == 0 {
+                    len += if flags & CHUNK_SUMS_VARINT != 0 {
+                        sums.iter().map(|&s| varint_len(s as u64)).sum::<usize>()
+                    } else {
+                        8 * sums.len()
+                    };
+                }
+                len
+            }
+            ShuffleRec::DynChunk { encs } => {
+                let mut len = 1 + varint_len(encs.len() as u64);
+                for (i, enc) in encs.iter().enumerate() {
+                    if i == 0 {
+                        len += varint_len(enc.len() as u64) + enc.len();
+                    } else {
+                        let p = common_prefix(&encs[i - 1], enc);
+                        len += varint_len(p as u64)
+                            + varint_len((enc.len() - p) as u64)
+                            + (enc.len() - p);
+                    }
+                }
+                len
             }
         }
     }
+}
+
+/// Cap on entries per packed chunk: keeps a single chunk comfortably
+/// inside one sealed message so byte-aware chunking still operates at
+/// message granularity.
+pub const CHUNK_MAX_RECS: usize = 1024;
+/// Byte budget per packed dyn chunk (pair encodings vary wildly).
+pub const CHUNK_TARGET_BYTES: usize = 12 * 1024;
+
+/// Pack one partition's run of kernel partials for the wire, in emit
+/// order. `Rows` produces the legacy record-per-key stream; `Columnar`
+/// packs the same partials, in the same order, into [`ShuffleRec::Chunk`]
+/// column runs — reducers see an identical merge stream either way.
+pub fn pack_kernel_run(rows: &[(i64, f64, f64)], codec: ShuffleCodec) -> Vec<ShuffleRec> {
+    match codec {
+        ShuffleCodec::Rows => rows
+            .iter()
+            .map(|&(key, sum, count)| ShuffleRec::Kernel { key, sum, count })
+            .collect(),
+        ShuffleCodec::Columnar => rows
+            .chunks(CHUNK_MAX_RECS)
+            .map(|run| ShuffleRec::Chunk {
+                keys: run.iter().map(|r| r.0).collect(),
+                sums: run.iter().map(|r| r.1).collect(),
+                counts: run.iter().map(|r| r.2).collect(),
+            })
+            .collect(),
+    }
+}
+
+/// Pack one partition's run of dyn pairs (already in emit order).
+/// `Columnar` groups consecutive pair encodings into front-coded
+/// [`ShuffleRec::DynChunk`]s, capped by count and bytes.
+pub fn pack_dyn_run(pairs: &[Value], codec: ShuffleCodec) -> Vec<ShuffleRec> {
+    match codec {
+        ShuffleCodec::Rows => {
+            pairs.iter().map(|pair| ShuffleRec::Dyn { pair: pair.clone() }).collect()
+        }
+        ShuffleCodec::Columnar => {
+            let mut out = Vec::new();
+            let mut encs: Vec<Vec<u8>> = Vec::new();
+            let mut bytes = 0usize;
+            for pair in pairs {
+                let enc = pair.encode();
+                if !encs.is_empty()
+                    && (encs.len() >= CHUNK_MAX_RECS || bytes + enc.len() > CHUNK_TARGET_BYTES)
+                {
+                    out.push(ShuffleRec::DynChunk { encs: std::mem::take(&mut encs) });
+                    bytes = 0;
+                }
+                bytes += enc.len();
+                encs.push(enc);
+            }
+            if !encs.is_empty() {
+                out.push(ShuffleRec::DynChunk { encs });
+            }
+            out
+        }
+    }
+}
+
+/// Decode a [`ShuffleRec::DynChunk`]'s stored pair encodings back to
+/// values. Wire-decoded chunks always succeed (each encoding was
+/// validated in `decode`); the `Option` guards hand-built chunks.
+pub fn dyn_chunk_values(encs: &[Vec<u8>]) -> Option<Vec<Value>> {
+    let mut out = Vec::with_capacity(encs.len());
+    for enc in encs {
+        match Value::decode(enc) {
+            Some((v, used)) if used == enc.len() => out.push(v),
+            _ => return None,
+        }
+    }
+    Some(out)
 }
 
 /// The in-process backend for the cluster baseline. Partitions are
@@ -227,6 +581,8 @@ pub struct ShuffleWriter<'a> {
     seqs: Vec<u64>,
     pub msgs_sent: u64,
     pub bytes_sent: u64,
+    /// Bytes sent per consuming edge, aligned with `consumers`.
+    edge_bytes: Vec<u64>,
 }
 
 impl<'a> ShuffleWriter<'a> {
@@ -242,6 +598,7 @@ impl<'a> ShuffleWriter<'a> {
     ) -> ShuffleWriter<'a> {
         let seqs = resume_seqs.unwrap_or_else(|| vec![0; partitions as usize]);
         assert_eq!(seqs.len(), partitions as usize);
+        let edge_bytes = vec![0; consumers.len()];
         ShuffleWriter {
             env,
             transport,
@@ -255,7 +612,13 @@ impl<'a> ShuffleWriter<'a> {
             seqs,
             msgs_sent: 0,
             bytes_sent: 0,
+            edge_bytes,
         }
+    }
+
+    /// Bytes sent so far per consuming edge: `(consumer stage, bytes)`.
+    pub fn edge_bytes(&self) -> Vec<(u32, u64)> {
+        self.consumers.iter().copied().zip(self.edge_bytes.iter().copied()).collect()
     }
 
     /// Current sequence counters (serialized into chain resume state).
@@ -320,6 +683,7 @@ impl<'a> ShuffleWriter<'a> {
             };
             self.msgs_sent += edge_msgs.len() as u64;
             self.bytes_sent += bytes as u64;
+            self.edge_bytes[ci] += bytes as u64;
             match &self.transport {
                 Transport::Sqs => {
                     // Chunk by message count AND wire bytes: a message seals
@@ -912,15 +1276,55 @@ mod tests {
         }
     }
 
-    fn gen_rec(g: &mut Gen) -> ShuffleRec {
+    fn gen_chunk(g: &mut Gen) -> ShuffleRec {
+        let n = g.usize(40) + 1;
+        // Mostly sorted runs (the writer's case), sometimes arbitrary
+        // keys — the codec must be total either way.
+        let mut keys = Vec::with_capacity(n);
         if g.bool() {
-            ShuffleRec::Kernel {
+            let mut k = g.i64(-1_000_000, 1_000_000);
+            for _ in 0..n {
+                keys.push(k);
+                k = k.wrapping_add(g.i64(0, 1000));
+            }
+        } else {
+            for _ in 0..n {
+                keys.push(g.i64(i64::MIN / 2, i64::MAX / 2));
+            }
+        }
+        // Exercise every column layout: integral counts, sums == counts,
+        // integral sums, and raw f64 columns.
+        let counts: Vec<f64> = if g.bool() {
+            (0..n).map(|_| g.u64(100_000) as f64).collect()
+        } else {
+            (0..n).map(|_| g.f64(0.0, 1e6)).collect()
+        };
+        let sums: Vec<f64> = match g.usize(3) {
+            0 => counts.clone(),
+            1 => (0..n).map(|_| g.u64(100_000) as f64).collect(),
+            _ => (0..n).map(|_| g.f64(-1e6, 1e6)).collect(),
+        };
+        ShuffleRec::Chunk { keys, sums, counts }
+    }
+
+    fn gen_dyn_chunk(g: &mut Gen) -> ShuffleRec {
+        let n = g.usize(10) + 1;
+        let encs = (0..n)
+            .map(|_| Value::pair(gen_value(g, 1), gen_value(g, 1)).encode())
+            .collect();
+        ShuffleRec::DynChunk { encs }
+    }
+
+    fn gen_rec(g: &mut Gen) -> ShuffleRec {
+        match g.usize(4) {
+            0 => ShuffleRec::Kernel {
                 key: g.i64(-1_000_000, 1_000_000),
                 sum: g.f64(-1e6, 1e6),
                 count: g.f64(0.0, 1e6),
-            }
-        } else {
-            ShuffleRec::Dyn { pair: Value::pair(gen_value(g, 2), gen_value(g, 2)) }
+            },
+            1 => ShuffleRec::Dyn { pair: Value::pair(gen_value(g, 2), gen_value(g, 2)) },
+            2 => gen_chunk(g),
+            _ => gen_dyn_chunk(g),
         }
     }
 
@@ -981,7 +1385,7 @@ mod tests {
             let rec = gen_rec(g);
             let mut buf = Vec::new();
             rec.encode_into(&mut buf);
-            buf[0] = 2 + g.u64(254) as u8; // any tag outside {0, 1}
+            buf[0] = 4 + g.u64(252) as u8; // any tag outside {0, 1, 2, 3}
             if ShuffleRec::decode_all(&buf).is_some() {
                 return Err(format!("tag {} decoded as a record", buf[0]));
             }
@@ -1006,5 +1410,168 @@ mod tests {
         }
         assert_eq!(ShuffleRec::decode_all(&buf).unwrap(), recs);
         assert!(ShuffleRec::decode_all(&[9, 9]).is_none());
+    }
+
+    /// Every record a packed stream carries, in order, regardless of
+    /// wire variant — what a reducer merges.
+    fn unpacked(recs: &[ShuffleRec]) -> Vec<ShuffleRec> {
+        let mut out = Vec::new();
+        for r in recs {
+            match r {
+                ShuffleRec::Chunk { keys, sums, counts } => {
+                    for i in 0..keys.len() {
+                        out.push(ShuffleRec::Kernel {
+                            key: keys[i],
+                            sum: sums[i],
+                            count: counts[i],
+                        });
+                    }
+                }
+                ShuffleRec::DynChunk { encs } => {
+                    for pair in dyn_chunk_values(encs).expect("valid chunk") {
+                        out.push(ShuffleRec::Dyn { pair });
+                    }
+                }
+                other => out.push(other.clone()),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn prop_pack_kernel_run_preserves_partials_and_shrinks_bytes() {
+        forall("pack-kernel-run", 200, |g| {
+            // A sorted run with integral counts — what `HistAccum::to_rows`
+            // actually produces.
+            let n = g.usize(200) + 1;
+            let mut key = g.i64(-1000, 1000);
+            let mut rows = Vec::with_capacity(n);
+            for _ in 0..n {
+                let count = (g.u64(50) + 1) as f64;
+                let sum = if g.bool() { count } else { g.f64(0.0, 1e4) };
+                rows.push((key, sum, count));
+                key += g.i64(1, 40);
+            }
+            let rows_codec = pack_kernel_run(&rows, ShuffleCodec::Rows);
+            let col_codec = pack_kernel_run(&rows, ShuffleCodec::Columnar);
+            if unpacked(&rows_codec) != unpacked(&col_codec) {
+                return Err("codecs disagree on carried partials".into());
+            }
+            let rows_bytes: usize = rows_codec.iter().map(ShuffleRec::encoded_len).sum();
+            let col_bytes: usize = col_codec.iter().map(ShuffleRec::encoded_len).sum();
+            if col_bytes >= rows_bytes {
+                return Err(format!(
+                    "columnar {col_bytes} B must beat rows {rows_bytes} B on a sorted run of {n}"
+                ));
+            }
+            // And the packed chunks roundtrip through the wire.
+            let mut buf = Vec::new();
+            for r in &col_codec {
+                r.encode_into(&mut buf);
+            }
+            match ShuffleRec::decode_all(&buf) {
+                Some(back) if back == col_codec => Ok(()),
+                other => Err(format!("chunk wire roundtrip failed: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn prop_pack_dyn_run_preserves_pairs() {
+        forall("pack-dyn-run", 200, |g| {
+            let n = g.usize(60) + 1;
+            // Sorted-by-encoding pairs, like flush_side emits.
+            let mut pairs: Vec<Value> =
+                (0..n).map(|_| Value::pair(gen_value(g, 1), gen_value(g, 1))).collect();
+            pairs.sort_by(|a, b| a.encode().cmp(&b.encode()));
+            let rows_codec = pack_dyn_run(&pairs, ShuffleCodec::Rows);
+            let col_codec = pack_dyn_run(&pairs, ShuffleCodec::Columnar);
+            if unpacked(&rows_codec) != unpacked(&col_codec) {
+                return Err("codecs disagree on carried pairs".into());
+            }
+            let mut buf = Vec::new();
+            for r in &col_codec {
+                r.encode_into(&mut buf);
+            }
+            match ShuffleRec::decode_all(&buf) {
+                Some(back) if back == col_codec => Ok(()),
+                other => Err(format!("dyn chunk wire roundtrip failed: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn chunk_sum_eq_count_column_is_elided() {
+        // Q1-style partials (value source One): sums == counts, so the
+        // sums column vanishes and small keys/counts ride as varints.
+        let rows: Vec<(i64, f64, f64)> = (0..24).map(|k| (k, 10.0, 10.0)).collect();
+        let packed = pack_kernel_run(&rows, ShuffleCodec::Columnar);
+        let [chunk] = &packed[..] else {
+            panic!("one chunk expected");
+        };
+        // tag + flags + n + 24 single-byte key deltas + 24 single-byte counts.
+        assert_eq!(chunk.encoded_len(), 3 + 24 + 24);
+        assert_eq!(chunk.encoded_len(), {
+            let mut buf = Vec::new();
+            chunk.encode_into(&mut buf);
+            buf.len()
+        });
+        let rows_bytes: usize =
+            pack_kernel_run(&rows, ShuffleCodec::Rows).iter().map(ShuffleRec::encoded_len).sum();
+        assert_eq!(rows_bytes, 24 * 25);
+    }
+
+    #[test]
+    fn reader_decodes_mixed_rows_and_columnar_stream() {
+        // Interop: one queue carrying both wire formats (e.g. a config
+        // change between attempts) must drain cleanly.
+        let env = env_with(0.0);
+        env.sqs().create_queue(&queue_name("mix", 0, 1, 0));
+        let mut tl = Timeline::new();
+        let rows: Vec<(i64, f64, f64)> = (0..100).map(|k| (k, k as f64, 1.0)).collect();
+        let pairs: Vec<Value> =
+            (0..20).map(|i| Value::pair(Value::I64(i), Value::F64(i as f64))).collect();
+
+        let mut w = ShuffleWriter::new(&env, Transport::Sqs, "mix", 0, vec![1], 7, 1, None);
+        for rec in pack_kernel_run(&rows, ShuffleCodec::Rows) {
+            w.write(0, &rec, &mut tl).unwrap();
+        }
+        for rec in pack_kernel_run(&rows, ShuffleCodec::Columnar) {
+            w.write(0, &rec, &mut tl).unwrap();
+        }
+        for rec in pack_dyn_run(&pairs, ShuffleCodec::Rows) {
+            w.write(0, &rec, &mut tl).unwrap();
+        }
+        for rec in pack_dyn_run(&pairs, ShuffleCodec::Columnar) {
+            w.write(0, &rec, &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+
+        let mut r = ShuffleReader::new(&env, Transport::Sqs, "mix", 0, 1, 0, true);
+        let read = r.drain(&mut tl).unwrap();
+        r.ack(&mut tl).unwrap();
+        let flat = unpacked(&read.records);
+        assert_eq!(flat.len(), 2 * 100 + 2 * 20);
+        // Both codecs carried identical logical streams.
+        assert_eq!(flat[..100], flat[100..200]);
+        assert_eq!(flat[200..220], flat[220..240]);
+    }
+
+    #[test]
+    fn writer_tracks_bytes_per_edge() {
+        let env = env_with(0.0);
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, Transport::S3, "eb", 0, vec![1, 2], 7, 1, None);
+        for i in 0..500i64 {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        let per_edge = w.edge_bytes();
+        assert_eq!(per_edge.len(), 2);
+        assert_eq!(per_edge[0].0, 1);
+        assert_eq!(per_edge[1].0, 2);
+        assert!(per_edge[0].1 > 0);
+        assert_eq!(per_edge[0].1, per_edge[1].1, "each edge gets a full copy");
+        assert_eq!(per_edge[0].1 + per_edge[1].1, w.bytes_sent);
     }
 }

@@ -200,7 +200,10 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
         );
     }
     for e in &report.edge_shuffle {
-        println!("edge s{}->s{}: {} shuffle msgs", e.from, e.to, e.msgs);
+        println!(
+            "edge s{}->s{}: {} shuffle msgs, {} record bytes",
+            e.from, e.to, e.msgs, e.bytes
+        );
     }
     // The latency-vs-cost trade the overlap (and speculation) buys:
     // long-polling reducers bill GB-seconds while idle, and every

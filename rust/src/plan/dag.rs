@@ -337,6 +337,9 @@ impl PhysicalPlan {
 pub fn input_splits(dataset: &Dataset, split_bytes: u64) -> Vec<InputSplit> {
     let mut splits = Vec::new();
     for (key, size) in &dataset.objects {
+        // Every split of an object inherits the object's manifest stats
+        // (conservative for any byte subrange of the object).
+        let stats = dataset.object_stats.get(key).copied();
         for (start, end) in split_ranges(*size, split_bytes) {
             splits.push(InputSplit {
                 bucket: dataset.bucket.clone(),
@@ -344,6 +347,7 @@ pub fn input_splits(dataset: &Dataset, split_bytes: u64) -> Vec<InputSplit> {
                 start,
                 end,
                 object_size: *size,
+                stats,
             });
         }
     }
@@ -643,6 +647,7 @@ pub fn build_kernel_join_plan(
                 start,
                 end,
                 object_size: dataset.weather_bytes,
+                stats: None, // the weather table has no trip-day manifest stats
             })
             .collect();
 
@@ -756,6 +761,7 @@ mod tests {
                 start: 0,
                 end: 100,
                 object_size: 100,
+                stats: None,
             })
             .collect()
     }

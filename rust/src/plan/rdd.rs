@@ -48,6 +48,19 @@ pub enum DynOp {
     Map(MapFn),
     Filter(FilterFn),
     FlatMap(FlatMapFn),
+    /// Typed dropoff-day predicate over raw CSV trip lines (inclusive
+    /// day indexes since 2009-01-01). Unlike an opaque `Filter` closure,
+    /// the planner and executor can *see* this predicate, so a scan
+    /// whose chain leads with it prunes whole splits via manifest stats
+    /// before fetching them. Non-line or unparsable records are dropped.
+    DayRange { min_day: i32, max_day: i32 },
+}
+
+/// Dropoff-day index of a raw CSV trip line (field 2), if parsable.
+fn line_day_index(line: &str) -> Option<i32> {
+    let field = line.split(',').nth(2)?;
+    crate::data::chrono::parse_datetime(field.as_bytes())
+        .map(crate::data::chrono::day_index)
 }
 
 impl DynOp {
@@ -67,9 +80,36 @@ impl DynOp {
                         rec(&ops[1..], item, out);
                     }
                 }
+                Some(DynOp::DayRange { min_day, max_day }) => {
+                    let keep = v
+                        .as_str()
+                        .and_then(line_day_index)
+                        .is_some_and(|d| (*min_day..=*max_day).contains(&d));
+                    if keep {
+                        rec(&ops[1..], v, out);
+                    }
+                }
             }
         }
         rec(ops, input, out);
+    }
+
+    /// The day predicate a scan may prune with: the intersection of the
+    /// *leading* `DayRange` ops in the chain. Only leading ops are sound
+    /// — behind a `Map`/`FlatMap` the records are no longer the raw CSV
+    /// lines the manifest statistics describe, and behind an opaque
+    /// `Filter` the op was planted against filtered records (still
+    /// line-shaped, but keep the rule simple and obviously safe).
+    pub fn leading_day_range(ops: &[DynOp]) -> Option<(i32, i32)> {
+        let mut range: Option<(i32, i32)> = None;
+        for op in ops {
+            let DynOp::DayRange { min_day, max_day } = op else { break };
+            range = Some(match range {
+                None => (*min_day, *max_day),
+                Some((lo, hi)) => (lo.max(*min_day), hi.min(*max_day)),
+            });
+        }
+        range
     }
 
     /// Estimated serialized size of this op's "code" — stands in for the
@@ -83,6 +123,9 @@ impl DynOp {
             DynOp::Map(_) => 1_792,
             DynOp::Filter(_) => 1_024,
             DynOp::FlatMap(_) => 2_560,
+            // A structured predicate: two ints plus op kind, no closure
+            // environment to pickle.
+            DynOp::DayRange { .. } => 192,
         }
     }
 }
@@ -93,6 +136,9 @@ impl std::fmt::Debug for DynOp {
             DynOp::Map(_) => f.write_str("Map(<closure>)"),
             DynOp::Filter(_) => f.write_str("Filter(<closure>)"),
             DynOp::FlatMap(_) => f.write_str("FlatMap(<closure>)"),
+            DynOp::DayRange { min_day, max_day } => {
+                write!(f, "DayRange({min_day}..={max_day})")
+            }
         }
     }
 }
@@ -184,6 +230,18 @@ impl Rdd {
 
     pub fn flat_map(&self, f: impl Fn(Value) -> Vec<Value> + Send + Sync + 'static) -> Rdd {
         self.derive(RddNode::Narrow { parent: self.clone(), op: DynOp::FlatMap(Arc::new(f)) })
+    }
+
+    /// Typed dropoff-day filter over raw CSV trip lines (inclusive day
+    /// indexes since 2009-01-01). Plant it directly on a `text_file`
+    /// source: because the predicate is visible to the engine, scans can
+    /// skip fetching splits whose manifest stats are disjoint from the
+    /// range — an opaque `filter` closure can never be pruned on.
+    pub fn filter_day_range(&self, min_day: i32, max_day: i32) -> Rdd {
+        self.derive(RddNode::Narrow {
+            parent: self.clone(),
+            op: DynOp::DayRange { min_day, max_day },
+        })
     }
 
     /// `rdd.reduceByKey(combine, numPartitions)` — records must be pairs.
@@ -381,6 +439,34 @@ mod tests {
         DynOp::apply_chain(&ops, v_i64(1), &mut out); // 1+1=2, even, -> [2, 20]
         DynOp::apply_chain(&ops, v_i64(2), &mut out); // 3 is odd -> dropped
         assert_eq!(out, vec![v_i64(2), v_i64(20)]);
+    }
+
+    #[test]
+    fn day_range_op_filters_lines_and_is_visible_to_the_planner() {
+        use crate::data::chrono::{day_index, epoch_from_datetime, format_datetime};
+        let ts = epoch_from_datetime(2014, 3, 10, 9, 30, 0);
+        let day = day_index(ts);
+        let line = format!("0,{},{},1,2.0", format_datetime(ts - 600), format_datetime(ts));
+        let ops = vec![DynOp::DayRange { min_day: day - 1, max_day: day + 1 }];
+        let mut out = Vec::new();
+        DynOp::apply_chain(&ops, Value::str(line.clone()), &mut out);
+        assert_eq!(out.len(), 1, "in-range line survives");
+        let miss = vec![DynOp::DayRange { min_day: day + 5, max_day: day + 9 }];
+        DynOp::apply_chain(&miss, Value::str(line), &mut out);
+        DynOp::apply_chain(&miss, Value::str("garbage"), &mut out);
+        DynOp::apply_chain(&miss, Value::I64(3), &mut out);
+        assert_eq!(out.len(), 1, "out-of-range, unparsable, non-line all dropped");
+
+        // Leading ranges intersect; anything else stops the walk.
+        let chain = vec![
+            DynOp::DayRange { min_day: 0, max_day: 100 },
+            DynOp::DayRange { min_day: 50, max_day: 200 },
+            DynOp::Filter(Arc::new(|_| true)),
+            DynOp::DayRange { min_day: 0, max_day: 10 },
+        ];
+        assert_eq!(DynOp::leading_day_range(&chain), Some((50, 100)));
+        assert_eq!(DynOp::leading_day_range(&chain[2..]), None);
+        assert_eq!(DynOp::leading_day_range(&[]), None);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! physical plan, and metadata about where the executor reads its input
 //! and writes its output").
 
+use crate::data::ObjectStats;
 use crate::util::json::Json;
 
 /// A byte-range split of one S3 object.
@@ -14,6 +15,11 @@ pub struct InputSplit {
     pub start: u64,
     pub end: u64,
     pub object_size: u64,
+    /// Day/month statistics of the *object* this split belongs to (every
+    /// split inherits its object's ranges, which stay conservative for
+    /// any byte subrange). `None` when the manifest carried no stats —
+    /// the scan then simply cannot prune.
+    pub stats: Option<ObjectStats>,
 }
 
 impl InputSplit {
@@ -26,21 +32,44 @@ impl InputSplit {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("bucket", self.bucket.as_str())
             .set("key", self.key.as_str())
             .set("start", self.start)
             .set("end", self.end)
-            .set("object_size", self.object_size)
+            .set("object_size", self.object_size);
+        if let Some(st) = &self.stats {
+            j = j.set(
+                "stats",
+                Json::obj()
+                    .set("min_day", st.min_day as i64)
+                    .set("max_day", st.max_day as i64)
+                    .set("min_month", st.min_month as i64)
+                    .set("max_month", st.max_month as i64)
+                    .set("rows", st.rows),
+            );
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> Result<InputSplit, String> {
+        let stats = match j.get("stats") {
+            None => None,
+            Some(s) => Some(ObjectStats {
+                min_day: s.req_i64("min_day").map_err(|e| e.to_string())? as i32,
+                max_day: s.req_i64("max_day").map_err(|e| e.to_string())? as i32,
+                min_month: s.req_i64("min_month").map_err(|e| e.to_string())? as i32,
+                max_month: s.req_i64("max_month").map_err(|e| e.to_string())? as i32,
+                rows: s.req_u64("rows").map_err(|e| e.to_string())?,
+            }),
+        };
         Ok(InputSplit {
             bucket: j.req_str("bucket").map_err(|e| e.to_string())?.to_string(),
             key: j.req_str("key").map_err(|e| e.to_string())?.to_string(),
             start: j.req_u64("start").map_err(|e| e.to_string())?,
             end: j.req_u64("end").map_err(|e| e.to_string())?,
             object_size: j.req_u64("object_size").map_err(|e| e.to_string())?,
+            stats,
         })
     }
 }
@@ -190,6 +219,7 @@ mod tests {
                 start: 0,
                 end: 100,
                 object_size: 200,
+                stats: None,
             }),
             output: TaskOutput::Shuffle { partitions: 30 },
             resume: None,
@@ -287,8 +317,22 @@ mod tests {
             start: 64,
             end: 128,
             object_size: 999,
+            stats: None,
         };
         assert_eq!(InputSplit::from_json(&s.to_json()).unwrap(), s);
         assert_eq!(s.len(), 64);
+        // Stats survive the payload roundtrip too (pruning happens on
+        // the executor side, from the deserialized descriptor).
+        let with_stats = InputSplit {
+            stats: Some(crate::data::ObjectStats {
+                min_day: 120,
+                max_day: 240,
+                min_month: 3,
+                max_month: 8,
+                rows: 4321,
+            }),
+            ..s
+        };
+        assert_eq!(InputSplit::from_json(&with_stats.to_json()).unwrap(), with_stats);
     }
 }
