@@ -1,7 +1,8 @@
 //! Microbenchmarks backing the paper's in-text claims (experiment index
 //! M1, M2, A1 in DESIGN.md §6), plus the engine-extension ablations:
-//! the straggler/speculation ablation (A4) and the broadcast-vs-shuffle
-//! join crossover study (A5, the PR 3 join follow-up).
+//! the straggler/speculation ablation (A4), the broadcast-vs-shuffle
+//! join crossover study (A5, the PR 3 join follow-up), and the
+//! multi-tenant concurrency ablation (A8, the service layer).
 
 use crate::compute::oracle;
 use crate::compute::queries::QueryId;
@@ -11,7 +12,7 @@ use crate::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
 use crate::exec::{Engine, FlintEngine};
 use crate::plan::{kernel_plan, StageCompute};
 use crate::services::SimEnv;
-use crate::simtime::ScheduleMode;
+use crate::simtime::{ScheduleMode, ServicePolicy};
 use anyhow::{anyhow, ensure, Result};
 
 /// M1 — single-stream S3 read throughput: boto-class (Flint) vs
@@ -365,6 +366,92 @@ pub fn elasticity_sweep(
     Ok(out)
 }
 
+/// One (concurrency × policy) cell of the multi-tenancy ablation (A8).
+#[derive(Debug, Clone)]
+pub struct ConcurrencyRow {
+    pub policy: ServicePolicy,
+    pub queries: usize,
+    /// When the last query finished on the shared service clock.
+    pub makespan_s: f64,
+    /// Completed queries per shared-clock second.
+    pub throughput_qps: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub idle_s: f64,
+    pub cost_usd: f64,
+}
+
+/// The service's hour-histogram workload: a two-stage shuffle lineage
+/// (scan → 4-way reduce) kept narrower than the slot pool, so the
+/// arbitration policy — not raw capacity — decides each query's tail.
+fn service_workload(sc: &crate::exec::FlintContext) -> crate::plan::Rdd {
+    use crate::compute::value::Value;
+    sc.text_file(INPUT_BUCKET, "trips/")
+        .map(|line| {
+            let text = line.as_str().expect("text input");
+            let hour = crate::data::schema::TripRecord::parse_csv(text.as_bytes())
+                .map(|r| crate::data::chrono::hour_of_day(r.dropoff_ts) as i64)
+                .unwrap_or(0);
+            Value::pair(Value::I64(hour), Value::I64(1))
+        })
+        .reduce_by_key(4, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+}
+
+/// A8 — multi-tenant concurrency ablation: `n` tenants each submit one
+/// copy of the same two-stage query as a burst at t=0, and the sweep
+/// crosses burst size with the service's arbitration policy. FIFO's
+/// head-of-line blocking shows up as a long latency tail (late arrivals
+/// wait for the whole queue); fair sharing packs the same work into the
+/// same makespan (work conservation — throughput must not regress) while
+/// every tenant progresses, collapsing p99 toward p50. Each cell also
+/// re-checks ledger conservation: Σ per-tenant ledgers == pool spend.
+pub fn concurrency_ablation(
+    cfg: &FlintConfig,
+    trips: u64,
+    concurrency: &[usize],
+    policies: &[ServicePolicy],
+) -> Result<Vec<ConcurrencyRow>> {
+    let mut out = Vec::new();
+    for &n in concurrency {
+        for &policy in policies {
+            let mut c = cfg.clone();
+            c.flint.service.policy = policy;
+            let env = SimEnv::new(c);
+            generate_taxi_dataset(&env, "trips", trips);
+            let service = crate::exec::FlintService::new(env.clone());
+            service.prewarm();
+            let sc = service.session("bench");
+            let rdd = service_workload(&sc);
+            for i in 0..n {
+                service
+                    .submit(&format!("tenant{i}"), &rdd, crate::plan::Action::Collect)
+                    .map_err(|e| anyhow!("admission failed: {e}"))?;
+            }
+            let report = service.run()?;
+            ensure!(report.makespan_s > 0.0, "empty service schedule");
+            let ledger_sum: f64 = report.ledgers.values().map(|l| l.total_usd()).sum();
+            ensure!(
+                (ledger_sum - report.run_cost.total()).abs() < 1e-9,
+                "ledger conservation broke: {ledger_sum} vs {}",
+                report.run_cost.total()
+            );
+            let lat: Vec<f64> =
+                report.queries.iter().map(|q| q.window.latency_s).collect();
+            out.push(ConcurrencyRow {
+                policy,
+                queries: n,
+                makespan_s: report.makespan_s,
+                throughput_qps: n as f64 / report.makespan_s,
+                p50_s: crate::util::stats::percentile(&lat, 50.0),
+                p99_s: crate::util::stats::percentile(&lat, 99.0),
+                idle_s: report.idle_s,
+                cost_usd: report.run_cost.total(),
+            });
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -508,6 +595,38 @@ mod tests {
         assert!(
             pruned < unpruned,
             "pruned run must issue fewer GETs: {pruned} vs {unpruned} ({skipped} skipped)"
+        );
+    }
+
+    #[test]
+    fn a6_fair_beats_fifo_tail_without_throughput_loss() {
+        let mut cfg = FlintConfig::for_tests();
+        // 4 scan + 4 reduce tasks per query on 8 slots, fully modeled
+        // durations: arbitration alone decides the tail.
+        cfg.data.object_bytes = 128 * 1024;
+        cfg.flint.input_split_bytes = 128 * 1024;
+        cfg.sim.compute_scale = 0.0;
+        let rows = concurrency_ablation(
+            &cfg,
+            5_000,
+            &[4],
+            &[ServicePolicy::Fifo, ServicePolicy::Fair],
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        let (fifo, fair) = (&rows[0], &rows[1]);
+        assert_eq!(fifo.policy, ServicePolicy::Fifo);
+        assert!(
+            fair.p99_s < fifo.p99_s,
+            "fair p99 {:.3} vs fifo p99 {:.3}",
+            fair.p99_s,
+            fifo.p99_s
+        );
+        assert!(
+            fair.throughput_qps >= fifo.throughput_qps - 1e-9,
+            "fair {:.4} q/s vs fifo {:.4} q/s",
+            fair.throughput_qps,
+            fifo.throughput_qps
         );
     }
 

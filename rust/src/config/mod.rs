@@ -9,8 +9,9 @@
 
 pub mod parse;
 
-use crate::simtime::ScheduleMode;
+use crate::simtime::{ScheduleMode, ServicePolicy};
 use crate::util::json::Json;
+use std::collections::BTreeMap;
 
 /// Service-model parameters. All durations in seconds, rates in MB/s.
 #[derive(Debug, Clone, PartialEq)]
@@ -75,6 +76,13 @@ pub struct SimParams {
     /// Pareto tail exponent for straggler slowdowns (smaller = heavier
     /// tail). Factors are capped at 25x.
     pub straggler_alpha: f64,
+    /// Container-affinity straggler mode: when > 0, attempts land on one
+    /// of this many simulated containers (hashed from `(seed, stage,
+    /// task, attempt)`) and a *container*, not an attempt, is the unit
+    /// that straggles — every attempt placed on a slow container is slow.
+    /// This is what makes straggler *prediction* from per-container
+    /// history possible. 0 (default) keeps the per-attempt i.i.d. model.
+    pub straggler_containers: usize,
 }
 
 impl Default for SimParams {
@@ -109,6 +117,7 @@ impl Default for SimParams {
             straggler_prob: 0.0,
             straggler_factor: 6.0,
             straggler_alpha: 2.0,
+            straggler_containers: 0,
         }
     }
 }
@@ -170,6 +179,36 @@ impl Default for SpeculationParams {
     }
 }
 
+/// Multi-tenant service knobs (`flint.service.*`), read by
+/// `exec::service::FlintService`. A plain `FlintContext` never consults
+/// these, so single-query runs are byte-identical whatever they hold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServiceParams {
+    /// Slot arbitration between concurrent queries
+    /// (`flint.service.policy = fifo|fair|weighted`).
+    pub policy: ServicePolicy,
+    /// Admission control: queries may wait in a bounded queue while the
+    /// pool is saturated; a submission past this depth is rejected with a
+    /// typed error (`flint.service.max_queued`, must be ≥ 1).
+    pub max_queued: usize,
+    /// Per-tenant fair-share weights (`flint.service.weight.<tenant>`,
+    /// each must be positive and finite). Tenants absent here weigh 1.0.
+    pub weights: BTreeMap<String, f64>,
+}
+
+impl Default for ServiceParams {
+    fn default() -> Self {
+        ServiceParams { policy: ServicePolicy::Fair, max_queued: 64, weights: BTreeMap::new() }
+    }
+}
+
+impl ServiceParams {
+    /// Effective weight of a tenant (1.0 unless configured).
+    pub fn weight_of(&self, tenant: &str) -> f64 {
+        self.weights.get(tenant).copied().unwrap_or(1.0)
+    }
+}
+
 /// Flint engine knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlintParams {
@@ -203,6 +242,8 @@ pub struct FlintParams {
     pub scheduler: ScheduleMode,
     /// Speculative re-execution of stragglers (`flint.speculation.*`).
     pub speculation: SpeculationParams,
+    /// Multi-tenant service layer (`flint.service.*`).
+    pub service: ServiceParams,
     /// Enable sequence-id dedup of SQS messages (§VI).
     pub dedup_enabled: bool,
     /// Rows per columnar batch handed to the PJRT kernels.
@@ -259,6 +300,7 @@ impl Default for FlintParams {
             scan_prune: true,
             scheduler: ScheduleMode::Pipelined,
             speculation: SpeculationParams::default(),
+            service: ServiceParams::default(),
             dedup_enabled: true,
             batch_rows: 8192,
             use_pjrt: true,
@@ -377,7 +419,8 @@ impl FlintConfig {
                     .set("sqs_rtt_s", self.sim.sqs_rtt_s)
                     .set("sqs_duplicate_prob", self.sim.sqs_duplicate_prob)
                     .set("lambda_failure_prob", self.sim.lambda_failure_prob)
-                    .set("compute_scale", self.sim.compute_scale),
+                    .set("compute_scale", self.sim.compute_scale)
+                    .set("straggler_containers", self.sim.straggler_containers),
             )
             .set(
                 "flint",
@@ -407,6 +450,19 @@ impl FlintConfig {
                             .set("enabled", self.flint.speculation.enabled)
                             .set("multiplier", self.flint.speculation.multiplier)
                             .set("quantile", self.flint.speculation.quantile),
+                    )
+                    .set(
+                        "service",
+                        Json::obj()
+                            .set("policy", self.flint.service.policy.name())
+                            .set("max_queued", self.flint.service.max_queued)
+                            .set("weights", {
+                                let mut w = Json::obj();
+                                for (tenant, weight) in &self.flint.service.weights {
+                                    w = w.set(tenant.as_str(), *weight);
+                                }
+                                w
+                            }),
                     )
                     .set("dedup_enabled", self.flint.dedup_enabled)
                     .set("batch_rows", self.flint.batch_rows)
@@ -513,5 +569,64 @@ mod tests {
         let j = FlintConfig::default().to_json();
         assert!(j.get("sim").is_some());
         assert!(j.get("flint").is_some());
+    }
+
+    #[test]
+    fn service_knobs_parse_and_validate() {
+        let mut c = FlintConfig::default();
+        assert_eq!(c.flint.service.policy, ServicePolicy::Fair, "fair is the default");
+        assert_eq!(c.flint.service.max_queued, 64);
+        assert!(c.flint.service.weights.is_empty());
+        assert_eq!(c.flint.service.weight_of("anyone"), 1.0);
+
+        c.set("flint.service.policy", "fifo").unwrap();
+        assert_eq!(c.flint.service.policy, ServicePolicy::Fifo);
+        c.set("flint.service.policy", "weighted").unwrap();
+        assert_eq!(c.flint.service.policy, ServicePolicy::Weighted);
+        c.set("flint.service.policy", "fair").unwrap();
+        assert_eq!(c.flint.service.policy, ServicePolicy::Fair);
+        assert!(c.set("flint.service.policy", "lottery").is_err());
+
+        c.set("flint.service.max_queued", "7").unwrap();
+        assert_eq!(c.flint.service.max_queued, 7);
+        let err = c.set("flint.service.max_queued", "0").unwrap_err();
+        assert!(err.contains("flint.service.max_queued"), "{err}");
+        assert!(err.contains("positive"), "{err}");
+        assert_eq!(c.flint.service.max_queued, 7, "failed override must not apply");
+        assert!(c.set("flint.service.max_queued", "-2").is_err());
+        assert!(c.set("flint.service.max_queued", "lots").is_err());
+
+        c.set("flint.service.weight.alice", "3.0").unwrap();
+        c.set("flint.service.weight.bob", "0.5").unwrap();
+        assert_eq!(c.flint.service.weight_of("alice"), 3.0);
+        assert_eq!(c.flint.service.weight_of("bob"), 0.5);
+        assert_eq!(c.flint.service.weight_of("carol"), 1.0);
+        for bad in ["0", "-1.5", "nan", "inf", "heavy"] {
+            let err = c.set("flint.service.weight.alice", bad).unwrap_err();
+            assert!(err.contains("flint.service.weight.alice"), "{err}");
+        }
+        assert_eq!(c.flint.service.weight_of("alice"), 3.0, "failed overrides must not apply");
+        assert!(c.set("flint.service.weight.", "1.0").is_err(), "tenant name required");
+    }
+
+    #[test]
+    fn service_knobs_round_trip_through_json() {
+        let mut c = FlintConfig::default();
+        c.set("flint.service.policy", "weighted").unwrap();
+        c.set("flint.service.max_queued", "12").unwrap();
+        c.set("flint.service.weight.alice", "3.0").unwrap();
+        c.set("flint.service.weight.bob", "0.25").unwrap();
+        c.set("sim.straggler_containers", "16").unwrap();
+        let j = c.to_json();
+        let svc = j.get("flint").unwrap().get("service").unwrap();
+        assert_eq!(svc.get("policy").and_then(|v| v.as_str()), Some("weighted"));
+        assert_eq!(svc.get("max_queued").and_then(|v| v.as_u64()), Some(12));
+        let w = svc.get("weights").unwrap();
+        assert_eq!(w.get("alice").and_then(|v| v.as_f64()), Some(3.0));
+        assert_eq!(w.get("bob").and_then(|v| v.as_f64()), Some(0.25));
+        assert_eq!(
+            j.get("sim").unwrap().get("straggler_containers").and_then(|v| v.as_u64()),
+            Some(16)
+        );
     }
 }

@@ -104,6 +104,7 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         "sim.straggler_prob" => parse_to!(cfg.sim.straggler_prob, value, key),
         "sim.straggler_factor" => parse_to!(cfg.sim.straggler_factor, value, key),
         "sim.straggler_alpha" => parse_to!(cfg.sim.straggler_alpha, value, key),
+        "sim.straggler_containers" => parse_to!(cfg.sim.straggler_containers, value, key),
 
         "pricing.lambda_gb_s" => parse_to!(cfg.pricing.lambda_gb_s, value, key),
         "pricing.lambda_per_request" => parse_to!(cfg.pricing.lambda_per_request, value, key),
@@ -144,6 +145,39 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         }
         "flint.speculation.quantile" => {
             parse_to!(cfg.flint.speculation.quantile, value, key)
+        }
+        "flint.service.policy" => {
+            cfg.flint.service.policy = value.parse::<crate::simtime::ServicePolicy>()?
+        }
+        "flint.service.max_queued" => {
+            // 0 would make every concurrent submission a rejection;
+            // callers wanting no service should leave the knobs unset.
+            let n: usize = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{key}`"))?;
+            if n == 0 {
+                return Err(format!(
+                    "bad value `{value}` for `{key}` (max queued must be positive)"
+                ));
+            }
+            cfg.flint.service.max_queued = n;
+        }
+        k if k.starts_with("flint.service.weight.") => {
+            let tenant = &k["flint.service.weight.".len()..];
+            if tenant.is_empty() {
+                return Err(format!("unknown config key `{k}` (missing tenant name)"));
+            }
+            let w: f64 = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{k}`"))?;
+            // Fair-share divides held slots by this; zero, negative, and
+            // non-finite weights would all break the arbitration math.
+            if !(w.is_finite() && w > 0.0) {
+                return Err(format!(
+                    "bad value `{value}` for `{k}` (weight must be positive and finite)"
+                ));
+            }
+            cfg.flint.service.weights.insert(tenant.to_string(), w);
         }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
         "flint.batch_rows" => {

@@ -103,6 +103,14 @@ impl CostSnapshot {
         self.usd.get(&category).copied().unwrap_or(0.0)
     }
 
+    /// Component-wise `self += other` — how per-query diffs accumulate
+    /// into a tenant's [`report::CostLedger`].
+    pub fn add(&mut self, other: &CostSnapshot) {
+        for (cat, v) in &other.usd {
+            *self.usd.entry(*cat).or_insert(0.0) += v;
+        }
+    }
+
     /// Component-wise `self - earlier` (clamped at 0).
     pub fn since(&self, earlier: &CostSnapshot) -> CostSnapshot {
         let mut usd = BTreeMap::new();

@@ -1,8 +1,51 @@
 //! Cost/latency report formatting shared by examples and benches —
-//! renders rows in the paper's Table I style.
+//! renders rows in the paper's Table I style — plus the per-tenant
+//! [`CostLedger`] the multi-tenant service bills into.
 
 use crate::cost::CostSnapshot;
 use crate::util::stats::Summary;
+use std::collections::BTreeMap;
+
+/// One tenant's bill for a service lifetime: every dollar a tenant's
+/// queries spend — Lambda GB-seconds, per-request charges, SQS/S3
+/// requests, long-poll idle — accumulated as exact [`CostSnapshot`]
+/// diffs around each query, so the sum over all ledgers equals the
+/// pool's total billed spend to the last floating-point bit.
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// Queries this tenant completed.
+    pub queries: u64,
+    /// Σ GB-seconds across the tenant's attempts (productive compute).
+    pub gb_seconds: f64,
+    /// Occupied-but-idle seconds billed to long-polling consumers on
+    /// the shared clock.
+    pub idle_s: f64,
+    /// Speculative backup attempts launched for this tenant's queries.
+    pub speculative_launches: u64,
+    /// Exact USD breakdown (category-wise sum of per-query diffs).
+    pub cost: CostSnapshot,
+}
+
+impl CostLedger {
+    pub fn total_usd(&self) -> f64 {
+        self.cost.total()
+    }
+}
+
+/// Render per-tenant ledgers as a small markdown table, tenants in
+/// lexicographic order (deterministic output for diffs and CI logs).
+pub fn render_ledgers(ledgers: &BTreeMap<String, CostLedger>) -> String {
+    let mut out = String::new();
+    out.push_str("| tenant | queries | GB-s | idle (s) | backups | cost (USD) |\n");
+    out.push_str("|---|---|---|---|---|---|\n");
+    for (tenant, l) in ledgers {
+        out.push_str(&format!(
+            "| {tenant} | {} | {:.2} | {:.2} | {} | {:.6} |\n",
+            l.queries, l.gb_seconds, l.idle_s, l.speculative_launches, l.total_usd()
+        ));
+    }
+    out
+}
 
 /// One engine's result for one query.
 #[derive(Debug, Clone)]

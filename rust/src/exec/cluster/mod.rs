@@ -69,6 +69,8 @@ impl ClusterEngine {
             // boundary (the cluster-local transport is not a long-poll
             // queue), so the baseline keeps the Σ-makespan clock.
             schedule: crate::simtime::ScheduleMode::Barrier,
+            bill_idle: true,
+            predictor: None,
         }
     }
 

@@ -92,6 +92,16 @@ pub struct RunParams {
     /// serial Σ-makespan model, `Pipelined` overlaps reduce long-polling
     /// with map flushes (§III-A).
     pub schedule: ScheduleMode,
+    /// Bill pipelined long-poll idle GB-seconds inside this run. Single
+    /// query engines leave this on; the multi-tenant service turns it
+    /// off and bills each query's idle from the *shared-clock* schedule
+    /// instead, so the spend lands in the right tenant's ledger.
+    pub bill_idle: bool,
+    /// Per-container execution history feeding the speculation tail
+    /// signal: when present, a threshold-crossing task whose container
+    /// has a non-slow track record is treated as slow *work* (not a slow
+    /// node) and its backup is suppressed.
+    pub predictor: Option<std::sync::Arc<crate::exec::service::StragglerPredictor>>,
 }
 
 /// Shuffle volume over one DAG edge (producer stage → consumer stage).
@@ -146,6 +156,11 @@ pub struct RunOutput {
     /// `pipelined_latency_s` when speculation is off, so one execution
     /// yields the exact speculation ablation.
     pub pipelined_nospec_latency_s: f64,
+    /// The measured per-stage schedule inputs (durations, backups,
+    /// overheads, DAG edges). The multi-tenant service replays these
+    /// through the shared-clock scheduler to place many queries on one
+    /// slot pool without re-executing anything.
+    pub stage_specs: Vec<StageSpec>,
 }
 
 /// Per-task accumulated stats returned by the task worker.
@@ -229,6 +244,7 @@ pub fn run_plan(
         speculative_wins: 0,
         pipelined_idle_s: 0.0,
         pipelined_nospec_latency_s: 0.0,
+        stage_specs: Vec::new(),
     };
     let mut final_emits: Vec<Emitted> = Vec::new();
     let mut edge_msgs: BTreeMap<(u32, u32), u64> = BTreeMap::new();
@@ -306,6 +322,25 @@ pub fn run_plan(
                     _ => true,
                 }
             });
+            // Straggler prediction (the PR-4 follow-up): a task past the
+            // tail threshold on a container whose history says "not
+            // slow" is slow *work* — a backup would redo the same work
+            // at the same speed and lose. Suppress it. Containers with
+            // no history (and i.i.d. straggler mode, which has no
+            // containers at all) keep the tail signal's call.
+            if let Some(pred) = &params.predictor {
+                decisions.retain(|d| {
+                    let keep = env
+                        .failure()
+                        .container_of(stage.id, d.task as u32, primaries[d.task].retries as u32)
+                        .map(|c| pred.worth_backup(c))
+                        .unwrap_or(true);
+                    if !keep {
+                        env.metrics().incr("scheduler.speculative_suppressed");
+                    }
+                    keep
+                });
+            }
             if !decisions.is_empty() {
                 let backup_descs: Vec<TaskDescriptor> = decisions
                     .iter()
@@ -355,6 +390,26 @@ pub fn run_plan(
                             env.metrics().incr("scheduler.speculative_failures");
                         }
                     }
+                }
+            }
+        }
+
+        // Per-container execution history (straggler *prediction*):
+        // each committed primary reports its container and its
+        // duration-over-stage-median ratio. Observed AFTER this stage's
+        // backup decisions — suppression must judge a container on its
+        // *prior* record, not on the very observation that tripped the
+        // tail signal. Over a service lifetime the history spans
+        // queries, because container placement does too.
+        if let Some(pred) = &params.predictor {
+            let mut sorted: Vec<f64> = primaries.iter().map(|s| s.duration_s).collect();
+            sorted.sort_by(f64::total_cmp);
+            let med = sorted[sorted.len() / 2].max(1e-9);
+            for (t, s) in primaries.iter().enumerate() {
+                if let Some(c) =
+                    env.failure().container_of(stage.id, t as u32, s.retries as u32)
+                {
+                    pred.observe(c, s.duration_s / med);
                 }
             }
         }
@@ -435,8 +490,9 @@ pub fn run_plan(
     // live Lambdas while idle, and AWS bills wall-clock duration. Only
     // the selected clock's idle is billed (barrier runs have none), and
     // only on Lambda-backed engines — cluster executors bill by the
-    // hour, idle included, already.
-    if params.lambda && params.schedule == ScheduleMode::Pipelined {
+    // hour, idle included, already. The multi-tenant service clears
+    // `bill_idle` and charges each query's idle from the shared clock.
+    if params.lambda && params.bill_idle && params.schedule == ScheduleMode::Pipelined {
         env.lambda().bill_idle(pipelined.idle_s);
     }
     totals.barrier_latency_s = barrier.latency_s;
@@ -459,6 +515,7 @@ pub fn run_plan(
         .map(|((from, to), (msgs, bytes))| EdgeShuffle { from, to, msgs, bytes })
         .collect();
     totals.timeline = merged_tl;
+    totals.stage_specs = specs;
     Ok(totals)
 }
 

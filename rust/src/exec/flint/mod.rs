@@ -21,6 +21,11 @@ use std::sync::Arc;
 pub struct FlintEngine {
     env: SimEnv,
     runtime: Option<Arc<PjrtRuntime>>,
+    /// Cleared by the multi-tenant service, which bills each query's
+    /// long-poll idle from the shared clock so spend lands per tenant.
+    bill_idle: bool,
+    /// Service-lifetime per-container history for straggler prediction.
+    predictor: Option<Arc<crate::exec::service::StragglerPredictor>>,
 }
 
 impl FlintEngine {
@@ -43,13 +48,25 @@ impl FlintEngine {
         } else {
             None
         };
-        FlintEngine { env, runtime }
+        FlintEngine { env, runtime, bill_idle: true, predictor: None }
     }
 
     /// Inject a pre-opened runtime (sharing one PJRT client across
     /// engines in benches).
     pub fn with_runtime(env: SimEnv, runtime: Option<Arc<PjrtRuntime>>) -> FlintEngine {
-        FlintEngine { env, runtime }
+        FlintEngine { env, runtime, bill_idle: true, predictor: None }
+    }
+
+    /// Service-mode tuning (see [`crate::exec::service`]): idle billing
+    /// moves to the shared clock, and a long-lived predictor threads its
+    /// per-container history through every run.
+    pub(crate) fn set_service_tuning(
+        &mut self,
+        bill_idle: bool,
+        predictor: Option<Arc<crate::exec::service::StragglerPredictor>>,
+    ) {
+        self.bill_idle = bill_idle;
+        self.predictor = predictor;
     }
 
     pub fn env(&self) -> &SimEnv {
@@ -58,6 +75,13 @@ impl FlintEngine {
 
     pub fn uses_pjrt(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// Hand the opened PJRT runtime (if any) to a caller that builds
+    /// more engines over the same artifacts — the service opens it once
+    /// and shares it across every query's engine.
+    pub(crate) fn runtime_handle(&self) -> Option<Arc<PjrtRuntime>> {
+        self.runtime.clone()
     }
 
     /// Warm the Lambda container pool (the paper benchmarks post-warm-up).
@@ -92,6 +116,8 @@ impl FlintEngine {
             lambda: true,
             host_parallelism: host_parallelism(),
             schedule,
+            bill_idle: self.bill_idle,
+            predictor: self.predictor.clone(),
         }
     }
 
@@ -139,6 +165,11 @@ pub(crate) fn report(
         .out
         .to_query_result()
         .unwrap_or(QueryResult::Count(0));
+    // Ordering contract: edge rows are sorted by (from, to) so reports,
+    // diffs, and the CLI printout are deterministic whatever map the
+    // driver accumulated them in.
+    let mut edge_shuffle = out.edge_shuffle;
+    edge_shuffle.sort_by_key(|e| (e.from, e.to));
     QueryReport {
         engine: engine.to_string(),
         query,
@@ -153,7 +184,7 @@ pub(crate) fn report(
         stage_latencies: out.stage_latencies,
         barrier_windows: out.barrier_windows,
         pipelined_windows: out.pipelined_windows,
-        edge_shuffle: out.edge_shuffle,
+        edge_shuffle,
         timeline: out.timeline,
         tasks: out.tasks,
         invocations: out.invocations,

@@ -5,12 +5,16 @@ pub mod cluster;
 pub mod driver;
 pub mod executor;
 pub mod flint;
+pub mod service;
 pub mod session;
 pub mod shuffle;
 
 pub use cluster::{ClusterEngine, ClusterMode};
 pub use driver::{ActionOut, EdgeShuffle, RunOutput};
 pub use flint::FlintEngine;
+pub use service::{
+    FlintService, ServiceError, ServiceQueryReport, ServiceReport, StragglerPredictor,
+};
 pub use session::FlintContext;
 
 use crate::compute::queries::{QueryId, QueryResult};

@@ -1,0 +1,419 @@
+//! [`FlintService`] — the multi-tenant query service layer.
+//!
+//! One Flint deployment, many tenants: the service admits sessions'
+//! queries into a bounded queue (`flint.service.max_queued`; anything
+//! past it is a typed [`ServiceError::QueueFull`] rejection, not a
+//! panic), executes each admitted query through its own
+//! metrics-namespaced view of the shared [`SimEnv`] (`q{n}.*`), and
+//! places all of them on ONE shared slot pool with one event clock
+//! ([`crate::simtime::schedule_service`]) under the configured
+//! arbitration policy:
+//!
+//! * `fifo` — strict arrival order, one query at a time (each runs its
+//!   exact solo schedule);
+//! * `fair` — max-min fair slot sharing: every free slot goes to the
+//!   admitted query holding the fewest;
+//! * `weighted` — fair sharing over `flint.service.weight.<tenant>`, so
+//!   a weight-2 tenant holds twice a weight-1 tenant's share under
+//!   saturation.
+//!
+//! # Cost attribution
+//!
+//! Every dollar is attributed to exactly one tenant. Each query's spend
+//! is an exact [`CostSnapshot`] diff around its execution (host
+//! execution is serial, so the diffs partition the pool's spend), and
+//! each query's *shared-clock* long-poll idle is billed afterwards from
+//! its [`QueryWindow`] — single-query engines bill idle inside the
+//! driver, but the service clears [`RunParams::bill_idle`] so idle
+//! spend lands in the right [`CostLedger`]. By construction the ledgers
+//! sum to the pool's total billed spend to the last bit (pinned by
+//! `tests/multi_tenant.rs`).
+//!
+//! # Straggler prediction
+//!
+//! The service outlives any one query, so it can learn what a single
+//! run cannot: which *containers* are slow. A [`StragglerPredictor`]
+//! keeps a per-container EWMA of duration/median ratios (fed by the
+//! driver after each stage commits; container identity comes from
+//! `sim.straggler_containers` affinity mode) and the tail signal's
+//! backup decisions are suppressed for tasks whose container has a
+//! demonstrably non-slow history — that straggler is slow *work*, and
+//! a backup would redo it at the same speed and lose. Unknown
+//! containers keep the tail signal's call.
+//!
+//! [`CostSnapshot`]: crate::cost::CostSnapshot
+//! [`QueryWindow`]: crate::simtime::QueryWindow
+//! [`RunParams::bill_idle`]: crate::exec::driver::RunParams
+
+use crate::config::ShuffleBackend;
+use crate::cost::report::CostLedger;
+use crate::cost::{CostCategory, CostSnapshot};
+use crate::exec::flint::FlintEngine;
+use crate::exec::session::FlintContext;
+use crate::plan::{Action, ActionOut, Rdd};
+use crate::services::SimEnv;
+use crate::simtime::schedule::SpecPolicy;
+use crate::simtime::{
+    schedule_service, QueryWindow, ScheduleMode, ServicePolicy, ServiceQuerySpec,
+};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Typed admission failures — the driver-side contract callers program
+/// against (retry-with-backoff on `QueueFull`, not string matching).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The bounded admission queue is full (`flint.service.max_queued`).
+    QueueFull { queued: usize, limit: usize },
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueFull { queued, limit } => write!(
+                f,
+                "admission queue full: {queued} queries queued (flint.service.max_queued = {limit})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+/// Per-container execution history for straggler *prediction* (the
+/// speculation follow-up): an EWMA of each container's
+/// duration-over-stage-median ratio, accumulated across every query the
+/// service runs. `worth_backup` answers the only question the tail
+/// signal needs: is this task slow because its *node* is slow?
+#[derive(Debug, Default)]
+pub struct StragglerPredictor {
+    /// container id → (EWMA of duration/median, observations).
+    history: Mutex<BTreeMap<u32, (f64, u64)>>,
+}
+
+/// EWMA weight of a new observation (history-heavy: one slow-work
+/// outlier must not reclassify a consistently fast container).
+const PREDICTOR_ALPHA: f64 = 0.3;
+/// EWMA at or above this brands the container a slow node.
+const PREDICTOR_SLOW_RATIO: f64 = 1.5;
+
+impl StragglerPredictor {
+    pub fn new() -> StragglerPredictor {
+        StragglerPredictor::default()
+    }
+
+    /// Record one committed primary attempt: `ratio` is its duration
+    /// over its stage's median.
+    pub fn observe(&self, container: u32, ratio: f64) {
+        if !ratio.is_finite() || ratio < 0.0 {
+            return;
+        }
+        let mut h = self.history.lock().expect("predictor history");
+        match h.get_mut(&container) {
+            Some((ewma, n)) => {
+                *ewma = (1.0 - PREDICTOR_ALPHA) * *ewma + PREDICTOR_ALPHA * ratio;
+                *n += 1;
+            }
+            None => {
+                h.insert(container, (ratio, 1));
+            }
+        }
+    }
+
+    /// Should a tail-signal decision against this container stand? True
+    /// for slow-node history AND for unknown containers (no history —
+    /// the tail signal's call is all there is). False only when the
+    /// container has demonstrated it is not slow: then the straggle is
+    /// slow work, and a backup would lose.
+    pub fn worth_backup(&self, container: u32) -> bool {
+        let h = self.history.lock().expect("predictor history");
+        match h.get(&container) {
+            Some((ewma, _)) => *ewma >= PREDICTOR_SLOW_RATIO,
+            None => true,
+        }
+    }
+
+    /// Containers with recorded history.
+    pub fn containers_seen(&self) -> usize {
+        self.history.lock().expect("predictor history").len()
+    }
+}
+
+/// One admitted, not-yet-run query.
+struct Pending {
+    /// Service-lifetime query index (the `q{n}` metrics namespace).
+    qid: usize,
+    tenant: String,
+    rdd: Rdd,
+    action: Action,
+    arrival_s: f64,
+}
+
+struct SvcState {
+    pending: Vec<Pending>,
+    next_qid: usize,
+    ledgers: BTreeMap<String, CostLedger>,
+}
+
+/// One query's outcome on the shared clock.
+#[derive(Debug)]
+pub struct ServiceQueryReport {
+    /// Service-lifetime query index (`q{n}` in the metrics registry).
+    pub qid: usize,
+    pub tenant: String,
+    pub out: ActionOut,
+    /// Where the query landed on the shared service clock (latency
+    /// includes queue wait).
+    pub window: QueryWindow,
+    /// This query's exact spend: execution diff + its share of the
+    /// shared-clock idle billing.
+    pub cost: CostSnapshot,
+    pub speculative_launches: u64,
+}
+
+/// The scheduled, fully-billed result of one [`FlintService::run`].
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub policy: ServicePolicy,
+    pub slots: usize,
+    /// When the last query finished on the shared clock.
+    pub makespan_s: f64,
+    /// Total occupied-but-idle seconds across all queries.
+    pub idle_s: f64,
+    /// Per-query outcomes, in submission order.
+    pub queries: Vec<ServiceQueryReport>,
+    /// Per-tenant ledgers as of this run (cumulative over the service
+    /// lifetime).
+    pub ledgers: BTreeMap<String, CostLedger>,
+    /// The pool's total spend during this run — equals the sum of the
+    /// run's per-query costs exactly.
+    pub run_cost: CostSnapshot,
+}
+
+impl ServiceReport {
+    /// Markdown ledger table (deterministic tenant order).
+    pub fn render_ledgers(&self) -> String {
+        crate::cost::report::render_ledgers(&self.ledgers)
+    }
+}
+
+/// The driver-side multi-tenant service: one shared environment, one
+/// slot pool, many tenants' sessions. See the module docs for the
+/// admission/arbitration/billing contract.
+pub struct FlintService {
+    env: SimEnv,
+    runtime: Option<Arc<crate::runtime::PjrtRuntime>>,
+    predictor: Arc<StragglerPredictor>,
+    state: Mutex<SvcState>,
+}
+
+impl FlintService {
+    /// Stand up a service over `env`. PJRT artifacts (when enabled and
+    /// present) are opened once and shared by every query.
+    pub fn new(env: SimEnv) -> FlintService {
+        let runtime = FlintEngine::new(env.clone()).runtime_handle();
+        FlintService {
+            env,
+            runtime,
+            predictor: Arc::new(StragglerPredictor::new()),
+            state: Mutex::new(SvcState {
+                pending: Vec::new(),
+                next_qid: 0,
+                ledgers: BTreeMap::new(),
+            }),
+        }
+    }
+
+    pub fn env(&self) -> &SimEnv {
+        &self.env
+    }
+
+    pub fn predictor(&self) -> &Arc<StragglerPredictor> {
+        &self.predictor
+    }
+
+    /// Warm the shared Lambda pool (the paper benchmarks post-warm-up).
+    pub fn prewarm(&self) {
+        self.env
+            .lambda()
+            .prewarm("flint-exec", self.env.config().sim.max_concurrency);
+    }
+
+    /// A session bound to `tenant` for authoring lineages against this
+    /// service's object store. (Running a lineage *through the shared
+    /// pool* goes via [`FlintService::submit`]; a session used directly
+    /// behaves like a standalone single-query engine.)
+    pub fn session(&self, tenant: &str) -> FlintContext {
+        let mut engine = FlintEngine::with_runtime(self.env.clone(), self.runtime.clone());
+        engine.set_service_tuning(true, Some(Arc::clone(&self.predictor)));
+        FlintContext::with_engine_for_tenant(engine, tenant)
+    }
+
+    /// Submit a query arriving at service time 0 (a concurrent burst).
+    pub fn submit(&self, tenant: &str, rdd: &Rdd, action: Action) -> Result<usize, ServiceError> {
+        self.submit_at(tenant, rdd, action, 0.0)
+    }
+
+    /// Submit a query arriving at `arrival_s` on the service clock.
+    /// Returns its service-lifetime query id, or `QueueFull` when the
+    /// bounded admission queue is at `flint.service.max_queued`.
+    pub fn submit_at(
+        &self,
+        tenant: &str,
+        rdd: &Rdd,
+        action: Action,
+        arrival_s: f64,
+    ) -> Result<usize, ServiceError> {
+        let limit = self.env.config().flint.service.max_queued;
+        let mut st = self.state.lock().expect("service state");
+        if st.pending.len() >= limit {
+            return Err(ServiceError::QueueFull { queued: st.pending.len(), limit });
+        }
+        let qid = st.next_qid;
+        st.next_qid += 1;
+        st.pending.push(Pending {
+            qid,
+            tenant: tenant.to_string(),
+            rdd: rdd.clone(),
+            action,
+            arrival_s: arrival_s.max(0.0),
+        });
+        Ok(qid)
+    }
+
+    /// Queries currently admitted and waiting for [`FlintService::run`].
+    pub fn queued(&self) -> usize {
+        self.state.lock().expect("service state").pending.len()
+    }
+
+    /// Cumulative per-tenant ledgers over the service lifetime.
+    pub fn ledgers(&self) -> BTreeMap<String, CostLedger> {
+        self.state.lock().expect("service state").ledgers.clone()
+    }
+
+    /// Drain the admission queue: execute every admitted query against
+    /// the shared substrates (serially on the host — the *virtual*
+    /// overlap is the scheduler's job), place all of them on the shared
+    /// slot pool under the configured policy, bill each query's
+    /// shared-clock idle to its tenant, and roll everything up into the
+    /// per-tenant ledgers.
+    pub fn run(&self) -> Result<ServiceReport> {
+        let batch = {
+            let mut st = self.state.lock().expect("service state");
+            std::mem::take(&mut st.pending)
+        };
+        let cfg = self.env.config().clone();
+        let svc = &cfg.flint.service;
+        let slots = cfg.sim.max_concurrency;
+        // Same mode resolution as the single-query engine: the S3
+        // shuffle backend cannot overlap, so it pins the barrier clock.
+        let mode = match cfg.flint.shuffle_backend {
+            ShuffleBackend::Sqs => cfg.flint.scheduler,
+            ShuffleBackend::S3 => ScheduleMode::Barrier,
+        };
+        let spec_policy = cfg.flint.speculation.enabled.then(|| SpecPolicy {
+            multiplier: cfg.flint.speculation.multiplier.max(1.0),
+            quantile: cfg.flint.speculation.quantile.clamp(0.0, 1.0),
+        });
+
+        let run_start = self.env.cost().snapshot();
+        let mut qspecs: Vec<ServiceQuerySpec> = Vec::with_capacity(batch.len());
+        let mut partial: Vec<ServiceQueryReport> = Vec::with_capacity(batch.len());
+        for p in batch {
+            // Each query sees the shared services through its own
+            // metrics namespace: scheduler counters land under
+            // `q{n}.scheduler.*` while the substrates' own meters stay
+            // global (shared infrastructure).
+            let qenv = self.env.scoped(&format!("q{}", p.qid));
+            let mut engine = FlintEngine::with_runtime(qenv.clone(), self.runtime.clone());
+            engine.set_service_tuning(false, Some(Arc::clone(&self.predictor)));
+            let ctx = FlintContext::with_engine_for_tenant(engine, &p.tenant);
+            let plan = ctx.lower(&p.rdd, p.action.clone());
+            let before = self.env.cost().snapshot();
+            let out = ctx
+                .flint_engine()
+                .expect("service sessions are Flint-backed")
+                .run_plan_raw(&plan)?;
+            let cost = self.env.cost().snapshot().since(&before);
+            // Per-tenant metric rollup: everything this query metered
+            // (its whole `q{n}.*` namespace) accumulates under
+            // `tenant.{tenant}.*` too.
+            let tm = self.env.metrics().scoped(&format!("tenant.{}", p.tenant));
+            for (k, v) in qenv.metrics().snapshot() {
+                tm.add(&k, v);
+            }
+            qspecs.push(ServiceQuerySpec {
+                stages: out.stage_specs.clone(),
+                arrival_s: p.arrival_s,
+                weight: svc.weight_of(&p.tenant),
+            });
+            partial.push(ServiceQueryReport {
+                qid: p.qid,
+                tenant: p.tenant,
+                out: out.out,
+                // Placeholder until the shared clock runs below.
+                window: QueryWindow {
+                    query: 0,
+                    arrival_s: p.arrival_s,
+                    start_s: 0.0,
+                    end_s: 0.0,
+                    latency_s: 0.0,
+                    idle_s: 0.0,
+                    spec_launches: out.speculative_launches,
+                    spec_wins: out.speculative_wins,
+                },
+                cost,
+                speculative_launches: out.speculative_launches,
+            });
+        }
+
+        // One shared clock over every query's measured stage specs.
+        let sched = schedule_service(&qspecs, slots, mode, svc.policy, spec_policy.as_ref());
+        for w in &sched.queries {
+            let q = &mut partial[w.query];
+            let (sl, sw) = (q.window.spec_launches, q.window.spec_wins);
+            q.window = *w;
+            // The host-side launch counts are the ground truth (the
+            // clock re-derives timing, not the attempt table).
+            q.window.spec_launches = sl;
+            q.window.spec_wins = sw;
+            // Shared-clock idle billing, attributed per query: the
+            // driver skipped it (`bill_idle = false`), so the long-poll
+            // GB-seconds each query actually held on the *service* clock
+            // are charged here, into this tenant's diff window.
+            if mode == ScheduleMode::Pipelined && w.idle_s > 0.0 {
+                let before = self.env.cost().snapshot();
+                self.env.lambda().bill_idle(w.idle_s);
+                q.cost.add(&self.env.cost().snapshot().since(&before));
+            }
+        }
+        let run_cost = self.env.cost().snapshot().since(&run_start);
+
+        // Ledger rollup: every run_cost dollar is in exactly one
+        // query's diff window, so Σ ledgers == pool spend exactly.
+        let mut st = self.state.lock().expect("service state");
+        for q in &partial {
+            let ledger = st.ledgers.entry(q.tenant.clone()).or_default();
+            ledger.queries += 1;
+            ledger.gb_seconds +=
+                q.cost.get(CostCategory::LambdaCompute) / cfg.pricing.lambda_gb_s;
+            ledger.idle_s += q.window.idle_s;
+            ledger.speculative_launches += q.speculative_launches;
+            ledger.cost.add(&q.cost);
+        }
+        let ledgers = st.ledgers.clone();
+        drop(st);
+
+        Ok(ServiceReport {
+            policy: svc.policy,
+            slots,
+            makespan_s: sched.makespan_s,
+            idle_s: sched.idle_s,
+            queries: partial,
+            ledgers,
+            run_cost,
+        })
+    }
+}

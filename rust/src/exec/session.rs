@@ -61,6 +61,12 @@ impl Backend {
 
 struct SessionInner {
     backend: Backend,
+    /// The tenant this session bills to: every metric and dollar a query
+    /// spends through this context rolls up into that tenant's
+    /// [`crate::cost::report::CostLedger`] when the session runs under a
+    /// [`crate::exec::service::FlintService`]. Standalone sessions all
+    /// bill the `"default"` tenant.
+    tenant: String,
     /// Out-of-band dataset manifests (sources whose objects are not
     /// listable in the simulated store).
     manifests: Mutex<Vec<Dataset>>,
@@ -118,8 +124,16 @@ pub struct FlintContext {
 
 impl FlintContext {
     fn from_backend(backend: Backend) -> FlintContext {
+        Self::from_backend_for_tenant(backend, "default")
+    }
+
+    fn from_backend_for_tenant(backend: Backend, tenant: &str) -> FlintContext {
         FlintContext {
-            inner: Arc::new(SessionInner { backend, manifests: Mutex::new(Vec::new()) }),
+            inner: Arc::new(SessionInner {
+                backend,
+                tenant: tenant.to_string(),
+                manifests: Mutex::new(Vec::new()),
+            }),
         }
     }
 
@@ -133,6 +147,27 @@ impl FlintContext {
     /// runtime, pre-warmed pools).
     pub fn with_engine(engine: FlintEngine) -> FlintContext {
         Self::from_backend(Backend::Flint(engine))
+    }
+
+    /// A serverless session billed to `tenant` — how
+    /// [`crate::exec::service::FlintService`] binds each admitted
+    /// session to its cost ledger.
+    pub fn with_engine_for_tenant(engine: FlintEngine, tenant: &str) -> FlintContext {
+        Self::from_backend_for_tenant(Backend::Flint(engine), tenant)
+    }
+
+    /// The tenant this session's spend is attributed to.
+    pub fn tenant(&self) -> &str {
+        &self.inner.tenant
+    }
+
+    /// The underlying Flint engine, when this is a serverless session —
+    /// the service's path to raw `RunOutput` (stage specs, idle).
+    pub(crate) fn flint_engine(&self) -> Option<&FlintEngine> {
+        match &self.inner.backend {
+            Backend::Flint(e) => Some(e),
+            Backend::Cluster(_) => None,
+        }
     }
 
     /// An always-on cluster session (the Table I baselines). Runs the

@@ -199,7 +199,11 @@ fn cmd_explain(args: &Args, cfg: FlintConfig) -> Result<(), String> {
             )
         );
     }
-    for e in &report.edge_shuffle {
+    // Deterministic printout: edges in (from, to) order whatever order
+    // the report carries them in.
+    let mut edges = report.edge_shuffle.clone();
+    edges.sort_by_key(|e| (e.from, e.to));
+    for e in &edges {
         println!(
             "edge s{}->s{}: {} shuffle msgs, {} record bytes",
             e.from, e.to, e.msgs, e.bytes

@@ -1,14 +1,25 @@
 //! Lightweight named counters for diagnostics — the paper's executors
 //! return "a variety of diagnostic information (e.g., number of messages,
 //! SQS calls, etc.)"; this is where those numbers land.
+//!
+//! A `Metrics` value is a cheap handle onto a shared registry. A handle
+//! may be *scoped* ([`Metrics::scoped`]): every key it reads or writes is
+//! silently prefixed (`q0.` + `scheduler.chains` → `q0.scheduler.chains`),
+//! so concurrent queries in the multi-tenant service each get their own
+//! namespace in one registry instead of silently merging counters. Code
+//! holding a scoped handle is scope-oblivious — `get`/`snapshot`/`reset`
+//! see only (and exactly) the handle's own subtree, with the prefix
+//! stripped, so existing callers behave identically under any scope.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
-/// Thread-safe counter registry.
-#[derive(Debug, Default)]
+/// Thread-safe counter registry handle (possibly scoped to a prefix).
+#[derive(Debug, Default, Clone)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
+    counters: Arc<Mutex<BTreeMap<String, u64>>>,
+    /// Either empty (root) or `"some.prefix."` — always dot-terminated.
+    prefix: String,
 }
 
 impl Metrics {
@@ -16,10 +27,24 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// A handle onto the same registry with `prefix.` prepended to every
+    /// key it touches. Scopes nest: `m.scoped("q0").scoped("retry")`
+    /// writes under `q0.retry.`.
+    pub fn scoped(&self, prefix: &str) -> Metrics {
+        Metrics {
+            counters: Arc::clone(&self.counters),
+            prefix: format!("{}{}.", self.prefix, prefix),
+        }
+    }
+
+    fn key(&self, name: &str) -> String {
+        format!("{}{}", self.prefix, name)
+    }
+
     /// Add `delta` to the named counter.
     pub fn add(&self, name: &str, delta: u64) {
         let mut map = self.counters.lock().expect("metrics poisoned");
-        *map.entry(name.to_string()).or_insert(0) += delta;
+        *map.entry(self.key(name)).or_insert(0) += delta;
     }
 
     /// Increment by one.
@@ -31,23 +56,30 @@ impl Metrics {
         self.counters
             .lock()
             .expect("metrics poisoned")
-            .get(name)
+            .get(&self.key(name))
             .copied()
             .unwrap_or(0)
     }
 
-    /// All counters, sorted by name.
+    /// This handle's counters, sorted by name, prefix stripped. The root
+    /// handle sees everything (scoped keys appear fully qualified).
     pub fn snapshot(&self) -> Vec<(String, u64)> {
         self.counters
             .lock()
             .expect("metrics poisoned")
             .iter()
-            .map(|(k, v)| (k.clone(), *v))
+            .filter_map(|(k, v)| k.strip_prefix(&self.prefix).map(|s| (s.to_string(), *v)))
             .collect()
     }
 
+    /// Clear this handle's subtree (the whole registry for the root).
     pub fn reset(&self) {
-        self.counters.lock().expect("metrics poisoned").clear();
+        let mut map = self.counters.lock().expect("metrics poisoned");
+        if self.prefix.is_empty() {
+            map.clear();
+        } else {
+            map.retain(|k, _| !k.starts_with(&self.prefix));
+        }
     }
 }
 
@@ -83,5 +115,57 @@ mod tests {
         m.reset();
         assert_eq!(m.get("x"), 0);
         assert!(m.snapshot().is_empty());
+    }
+
+    #[test]
+    fn scoped_handles_share_the_registry_under_a_prefix() {
+        let root = Metrics::new();
+        let q0 = root.scoped("q0");
+        let q1 = root.scoped("q1");
+        q0.incr("scheduler.chains");
+        q0.incr("scheduler.chains");
+        q1.incr("scheduler.chains");
+        root.incr("scheduler.chains");
+        // Each scope sees only its own subtree, scope-obliviously.
+        assert_eq!(q0.get("scheduler.chains"), 2);
+        assert_eq!(q1.get("scheduler.chains"), 1);
+        assert_eq!(root.get("scheduler.chains"), 1);
+        // The root sees the fully-qualified union.
+        assert_eq!(root.get("q0.scheduler.chains"), 2);
+        assert_eq!(root.get("q1.scheduler.chains"), 1);
+        let names: Vec<String> = root.snapshot().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            names,
+            vec!["q0.scheduler.chains", "q1.scheduler.chains", "scheduler.chains"]
+        );
+    }
+
+    #[test]
+    fn scoped_snapshot_strips_prefix_and_scopes_nest() {
+        let root = Metrics::new();
+        let q = root.scoped("q3");
+        q.add("shuffle.msgs", 7);
+        q.scoped("retry").incr("attempts");
+        assert_eq!(
+            q.snapshot(),
+            vec![("retry.attempts".to_string(), 1), ("shuffle.msgs".to_string(), 7)]
+        );
+        assert_eq!(root.get("q3.retry.attempts"), 1);
+    }
+
+    #[test]
+    fn scoped_reset_leaves_other_scopes_alone() {
+        let root = Metrics::new();
+        root.incr("global");
+        let q0 = root.scoped("q0");
+        let q1 = root.scoped("q1");
+        q0.incr("x");
+        q1.incr("x");
+        q0.reset();
+        assert_eq!(q0.get("x"), 0);
+        assert_eq!(q1.get("x"), 1);
+        assert_eq!(root.get("global"), 1);
+        root.reset();
+        assert!(root.snapshot().is_empty());
     }
 }

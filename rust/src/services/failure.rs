@@ -33,6 +33,9 @@ pub struct FailureInjector {
     straggler_prob: f64,
     straggler_factor: f64,
     straggler_alpha: f64,
+    /// When > 0, straggling is a property of the *container* an attempt
+    /// lands on, not of the attempt itself (see [`Self::container_of`]).
+    straggler_containers: usize,
 }
 
 struct State {
@@ -57,6 +60,7 @@ impl FailureInjector {
             straggler_prob: 0.0,
             straggler_factor: 6.0,
             straggler_alpha: 2.0,
+            straggler_containers: 0,
         }
     }
 
@@ -66,6 +70,14 @@ impl FailureInjector {
         self.straggler_prob = prob;
         self.straggler_factor = factor.max(1.0);
         self.straggler_alpha = alpha.max(0.1);
+        self
+    }
+
+    /// Switch straggling from per-attempt i.i.d. draws to
+    /// container-affinity mode with `n` simulated containers
+    /// (`sim.straggler_containers`; 0 keeps the i.i.d. model).
+    pub fn with_straggler_containers(mut self, n: usize) -> Self {
+        self.straggler_containers = n;
         self
     }
 
@@ -131,6 +143,9 @@ impl FailureInjector {
         if self.straggler_prob <= 0.0 {
             return None;
         }
+        if self.straggler_containers > 0 {
+            return self.container_factor(self.container_of(stage, task, attempt)?);
+        }
         let h = mix64(
             self.seed ^ 0x5354_5241_4747_4c45, // "STRAGGLE"
             ((stage as u64) << 40) | ((task as u64) << 8) | attempt as u64,
@@ -139,6 +154,39 @@ impl FailureInjector {
             return None;
         }
         // Pareto(alpha) tail scaled by the minimum factor, capped.
+        let u = unit_f64(mix64(h, 0x9e37_79b9_7f4a_7c15));
+        let pareto = (1.0 - u).max(1e-9).powf(-1.0 / self.straggler_alpha);
+        Some((self.straggler_factor * pareto).min(MAX_STRAGGLER_FACTOR))
+    }
+
+    /// The simulated container this attempt lands on, in
+    /// container-affinity mode (`None` in the i.i.d. model). Placement is
+    /// a stateless hash of `(seed, stage, task, attempt)`, so a backup
+    /// (different attempt id) usually lands elsewhere — the premise of
+    /// backup tasks — and the driver can attribute spans to containers
+    /// for straggler *prediction*.
+    pub fn container_of(&self, stage: u32, task: u32, attempt: u32) -> Option<u32> {
+        if self.straggler_containers == 0 {
+            return None;
+        }
+        let h = mix64(
+            self.seed ^ 0x504c_4143_454d_4e54, // "PLACEMNT"
+            ((stage as u64) << 40) | ((task as u64) << 8) | attempt as u64,
+        );
+        Some((h % self.straggler_containers as u64) as u32)
+    }
+
+    /// Slowdown factor of a container, stable for the whole run: slow
+    /// containers are drawn once with `straggler_prob`, and every attempt
+    /// placed on one inherits its factor ("slow node, not slow work").
+    pub fn container_factor(&self, container: u32) -> Option<f64> {
+        if self.straggler_prob <= 0.0 || self.straggler_containers == 0 {
+            return None;
+        }
+        let h = mix64(self.seed ^ 0x434f_4e54_4149_4e45, container as u64); // "CONTAINE"
+        if unit_f64(h) >= self.straggler_prob {
+            return None;
+        }
         let u = unit_f64(mix64(h, 0x9e37_79b9_7f4a_7c15));
         let pareto = (1.0 - u).max(1e-9).powf(-1.0 / self.straggler_alpha);
         Some((self.straggler_factor * pareto).min(MAX_STRAGGLER_FACTOR))
@@ -251,5 +299,47 @@ mod tests {
     fn zero_probability_never_straggles() {
         let f = FailureInjector::new(1, 0.0, 0.0);
         assert!((0..500u32).all(|t| f.straggler_factor(0, t, 0).is_none()));
+    }
+
+    #[test]
+    fn container_mode_makes_straggling_a_container_property() {
+        let f = FailureInjector::new(11, 0.0, 0.0)
+            .with_stragglers(0.25, 4.0, 2.0)
+            .with_straggler_containers(8);
+        // Every attempt lands on some container; placement is stable.
+        for task in 0..200u32 {
+            let c = f.container_of(0, task, 0).unwrap();
+            assert!(c < 8);
+            assert_eq!(f.container_of(0, task, 0), Some(c));
+            // The attempt straggles iff its container does, with the
+            // container's factor.
+            assert_eq!(f.straggler_factor(0, task, 0), f.container_factor(c));
+        }
+        // Attempts spread across containers, and a backup (attempt 1)
+        // usually lands on a different container than attempt 0.
+        let containers: std::collections::HashSet<u32> =
+            (0..200u32).filter_map(|t| f.container_of(0, t, 0)).collect();
+        assert!(containers.len() > 4, "placement must spread: {containers:?}");
+        let moved = (0..200u32)
+            .filter(|&t| f.container_of(0, t, 0) != f.container_of(0, t, 1))
+            .count();
+        assert!(moved > 100, "backups must usually move containers ({moved}/200)");
+        // Container factors are stable and some (not all) containers are
+        // slow at prob 0.25 over enough containers.
+        let f2 = FailureInjector::new(12, 0.0, 0.0)
+            .with_stragglers(0.25, 4.0, 2.0)
+            .with_straggler_containers(64);
+        let slow = (0..64u32).filter(|&c| f2.container_factor(c).is_some()).count();
+        assert!(slow > 4 && slow < 40, "slow-container rate off: {slow}/64");
+        for c in 0..64u32 {
+            assert_eq!(f2.container_factor(c), f2.container_factor(c));
+        }
+    }
+
+    #[test]
+    fn iid_mode_has_no_containers() {
+        let f = FailureInjector::new(1, 0.0, 0.0).with_stragglers(0.5, 4.0, 2.0);
+        assert_eq!(f.container_of(0, 0, 0), None);
+        assert_eq!(f.container_factor(3), None);
     }
 }

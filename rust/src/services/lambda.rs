@@ -21,15 +21,30 @@ use crate::services::failure::FailureInjector;
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum LambdaError {
-    #[error("request payload of {0} bytes exceeds the {1}-byte limit")]
     PayloadTooLarge(u64, u64),
-    #[error("invocation exceeded the {0} s duration limit (ran {1} s)")]
     DurationExceeded(u64, u64),
-    #[error("injected invocation failure (function={0})")]
     InjectedFailure(String),
 }
+
+impl std::fmt::Display for LambdaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LambdaError::PayloadTooLarge(got, limit) => {
+                write!(f, "request payload of {got} bytes exceeds the {limit}-byte limit")
+            }
+            LambdaError::DurationExceeded(limit, ran) => {
+                write!(f, "invocation exceeded the {limit} s duration limit (ran {ran} s)")
+            }
+            LambdaError::InjectedFailure(function) => {
+                write!(f, "injected invocation failure (function={function})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LambdaError {}
 
 /// Returned by [`LambdaService::begin_invoke`]; carries the start latency
 /// the executor charges before any work.
@@ -54,7 +69,7 @@ pub struct LambdaService {
     price_gb_s: f64,
     price_per_request: f64,
     cost: Arc<CostTracker>,
-    metrics: Arc<Metrics>,
+    metrics: Metrics,
     failure: Arc<FailureInjector>,
 }
 
@@ -62,7 +77,7 @@ impl LambdaService {
     pub fn new(
         config: &FlintConfig,
         cost: Arc<CostTracker>,
-        metrics: Arc<Metrics>,
+        metrics: Metrics,
         failure: Arc<FailureInjector>,
     ) -> Self {
         LambdaService {
@@ -202,12 +217,12 @@ impl LambdaService {
 mod tests {
     use super::*;
 
-    fn service(failure_prob: f64) -> (LambdaService, Arc<CostTracker>, Arc<Metrics>) {
+    fn service(failure_prob: f64) -> (LambdaService, Arc<CostTracker>, Metrics) {
         let cfg = FlintConfig::default();
         let cost = Arc::new(CostTracker::new());
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Metrics::new();
         let failure = Arc::new(FailureInjector::new(5, failure_prob, 0.0));
-        let svc = LambdaService::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics), failure);
+        let svc = LambdaService::new(&cfg, Arc::clone(&cost), metrics.clone(), failure);
         (svc, cost, metrics)
     }
 

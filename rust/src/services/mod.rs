@@ -36,18 +36,18 @@ pub struct SimEnv {
 struct SimEnvInner {
     config: FlintConfig,
     cost: Arc<CostTracker>,
-    metrics: Arc<Metrics>,
+    metrics: Metrics,
     failure: Arc<FailureInjector>,
-    s3: ObjectStore,
-    sqs: SqsService,
-    lambda: LambdaService,
-    ids: IdGen,
+    s3: Arc<ObjectStore>,
+    sqs: Arc<SqsService>,
+    lambda: Arc<LambdaService>,
+    ids: Arc<IdGen>,
 }
 
 impl SimEnv {
     pub fn new(config: FlintConfig) -> SimEnv {
         let cost = Arc::new(CostTracker::new());
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Metrics::new();
         let failure = Arc::new(
             FailureInjector::new(
                 config.seed,
@@ -58,21 +58,22 @@ impl SimEnv {
                 config.sim.straggler_prob,
                 config.sim.straggler_factor,
                 config.sim.straggler_alpha,
-            ),
+            )
+            .with_straggler_containers(config.sim.straggler_containers),
         );
-        let s3 = ObjectStore::new(&config, Arc::clone(&cost), Arc::clone(&metrics));
-        let sqs = SqsService::new(
+        let s3 = Arc::new(ObjectStore::new(&config, Arc::clone(&cost), metrics.clone()));
+        let sqs = Arc::new(SqsService::new(
             &config,
             Arc::clone(&cost),
-            Arc::clone(&metrics),
+            metrics.clone(),
             Arc::clone(&failure),
-        );
-        let lambda = LambdaService::new(
+        ));
+        let lambda = Arc::new(LambdaService::new(
             &config,
             Arc::clone(&cost),
-            Arc::clone(&metrics),
+            metrics.clone(),
             Arc::clone(&failure),
-        );
+        ));
         SimEnv {
             inner: Arc::new(SimEnvInner {
                 config,
@@ -82,7 +83,29 @@ impl SimEnv {
                 s3,
                 sqs,
                 lambda,
-                ids: IdGen::new(),
+                ids: Arc::new(IdGen::new()),
+            }),
+        }
+    }
+
+    /// A view of the same environment whose driver-level metrics land
+    /// under `prefix.`: S3/SQS/Lambda state, warm pools, the cost
+    /// tracker, the failure injector, and id generation are all shared
+    /// with `self` — only the metrics handle differs, so concurrent
+    /// queries each write their own `q{n}.*` namespace. Service-internal
+    /// counters (`sqs.*`, `lambda.*`, `s3.*`) stay global: they meter
+    /// shared infrastructure, not one query.
+    pub fn scoped(&self, prefix: &str) -> SimEnv {
+        SimEnv {
+            inner: Arc::new(SimEnvInner {
+                config: self.inner.config.clone(),
+                cost: Arc::clone(&self.inner.cost),
+                metrics: self.inner.metrics.scoped(prefix),
+                failure: Arc::clone(&self.inner.failure),
+                s3: Arc::clone(&self.inner.s3),
+                sqs: Arc::clone(&self.inner.sqs),
+                lambda: Arc::clone(&self.inner.lambda),
+                ids: Arc::clone(&self.inner.ids),
             }),
         }
     }
@@ -153,6 +176,26 @@ mod tests {
         let env2 = env.clone();
         env.metrics().incr("x");
         assert_eq!(env2.metrics().get("x"), 1);
+    }
+
+    #[test]
+    fn scoped_env_shares_services_but_namespaces_metrics() {
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let q0 = env.scoped("q0");
+        let q1 = env.scoped("q1");
+        q0.metrics().incr("scheduler.chains");
+        q1.metrics().add("scheduler.chains", 2);
+        env.metrics().incr("scheduler.chains");
+        assert_eq!(env.metrics().get("q0.scheduler.chains"), 1);
+        assert_eq!(env.metrics().get("q1.scheduler.chains"), 2);
+        assert_eq!(env.metrics().get("scheduler.chains"), 1);
+        assert_eq!(q0.metrics().get("scheduler.chains"), 1, "scope-oblivious reads");
+        // Cost, warm pools, and object state are the same underlying
+        // services: money spent through a scoped view lands in the shared
+        // tracker.
+        assert!(std::ptr::eq(env.cost(), q0.cost()));
+        assert!(std::ptr::eq(env.lambda(), q0.lambda()));
+        assert!(std::ptr::eq(env.s3(), q1.s3()));
     }
 
     #[test]

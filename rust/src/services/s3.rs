@@ -56,15 +56,26 @@ impl std::ops::Deref for S3Object {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum S3Error {
-    #[error("no such bucket: {0}")]
     NoSuchBucket(String),
-    #[error("no such key: {0}/{1}")]
     NoSuchKey(String, String),
-    #[error("invalid range {1}..{2} for object of {0} bytes")]
     InvalidRange(u64, u64, u64),
 }
+
+impl std::fmt::Display for S3Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            S3Error::NoSuchBucket(bucket) => write!(f, "no such bucket: {bucket}"),
+            S3Error::NoSuchKey(bucket, key) => write!(f, "no such key: {bucket}/{key}"),
+            S3Error::InvalidRange(len, start, end) => {
+                write!(f, "invalid range {start}..{end} for object of {len} bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for S3Error {}
 
 type Buckets = BTreeMap<String, BTreeMap<String, Arc<Vec<u8>>>>;
 
@@ -77,11 +88,11 @@ pub struct ObjectStore {
     get_per_1000: f64,
     put_per_1000: f64,
     cost: Arc<CostTracker>,
-    metrics: Arc<Metrics>,
+    metrics: Metrics,
 }
 
 impl ObjectStore {
-    pub fn new(config: &FlintConfig, cost: Arc<CostTracker>, metrics: Arc<Metrics>) -> Self {
+    pub fn new(config: &FlintConfig, cost: Arc<CostTracker>, metrics: Metrics) -> Self {
         ObjectStore {
             buckets: RwLock::new(BTreeMap::new()),
             put_mbps: config.sim.s3_put_mbps,
@@ -244,7 +255,7 @@ mod tests {
 
     fn store() -> ObjectStore {
         let cfg = FlintConfig::default();
-        ObjectStore::new(&cfg, Arc::new(CostTracker::new()), Arc::new(Metrics::new()))
+        ObjectStore::new(&cfg, Arc::new(CostTracker::new()), Metrics::new())
     }
 
     fn profile() -> ReadProfile {
@@ -327,8 +338,8 @@ mod tests {
     fn costs_and_metrics_accrue() {
         let cfg = FlintConfig::default();
         let cost = Arc::new(CostTracker::new());
-        let metrics = Arc::new(Metrics::new());
-        let s3 = ObjectStore::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics));
+        let metrics = Metrics::new();
+        let s3 = ObjectStore::new(&cfg, Arc::clone(&cost), metrics.clone());
         s3.create_bucket("b");
         s3.put_object("b", "k", vec![0; 1000]).unwrap();
         s3.get_object("b", "k", profile()).unwrap();

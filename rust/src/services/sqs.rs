@@ -44,17 +44,32 @@ impl Message {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SqsError {
-    #[error("no such queue: {0}")]
     NoSuchQueue(String),
-    #[error("batch has {0} messages; the limit is {1}")]
     TooManyMessages(usize, usize),
-    #[error("message of {0} bytes exceeds the per-message limit {1}")]
     MessageTooLarge(usize, usize),
-    #[error("batch of {0} bytes exceeds the per-batch limit {1}")]
     BatchTooLarge(usize, usize),
 }
+
+impl std::fmt::Display for SqsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SqsError::NoSuchQueue(queue) => write!(f, "no such queue: {queue}"),
+            SqsError::TooManyMessages(got, limit) => {
+                write!(f, "batch has {got} messages; the limit is {limit}")
+            }
+            SqsError::MessageTooLarge(got, limit) => {
+                write!(f, "message of {got} bytes exceeds the per-message limit {limit}")
+            }
+            SqsError::BatchTooLarge(got, limit) => {
+                write!(f, "batch of {got} bytes exceeds the per-batch limit {limit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SqsError {}
 
 #[derive(Default)]
 struct Queue {
@@ -78,7 +93,7 @@ pub struct SqsService {
     batch_max_bytes: usize,
     price_per_million: f64,
     cost: Arc<CostTracker>,
-    metrics: Arc<Metrics>,
+    metrics: Metrics,
     failure: Arc<FailureInjector>,
 }
 
@@ -89,7 +104,7 @@ impl SqsService {
     pub fn new(
         config: &FlintConfig,
         cost: Arc<CostTracker>,
-        metrics: Arc<Metrics>,
+        metrics: Metrics,
         failure: Arc<FailureInjector>,
     ) -> Self {
         SqsService {
@@ -282,12 +297,12 @@ impl SqsService {
 mod tests {
     use super::*;
 
-    fn service(dup_prob: f64) -> (SqsService, Arc<Metrics>, Arc<CostTracker>) {
+    fn service(dup_prob: f64) -> (SqsService, Metrics, Arc<CostTracker>) {
         let cfg = FlintConfig::default();
         let cost = Arc::new(CostTracker::new());
-        let metrics = Arc::new(Metrics::new());
+        let metrics = Metrics::new();
         let failure = Arc::new(FailureInjector::new(42, 0.0, dup_prob));
-        let sqs = SqsService::new(&cfg, Arc::clone(&cost), Arc::clone(&metrics), failure);
+        let sqs = SqsService::new(&cfg, Arc::clone(&cost), metrics.clone(), failure);
         (sqs, metrics, cost)
     }
 

@@ -26,8 +26,9 @@ pub mod timeline;
 
 pub use makespan::{makespan, makespan_assignments};
 pub use schedule::{
-    schedule_dag, schedule_dag_spec, tail_signal, BackupWindow, ScheduleMode, ScheduleOut,
-    SpecDecision, SpecPolicy, StageSpec, StageWindow,
+    schedule_dag, schedule_dag_spec, schedule_service, tail_signal, BackupWindow, QueryWindow,
+    ScheduleMode, ScheduleOut, ServicePolicy, ServiceQuerySpec, ServiceScheduleOut, SpecDecision,
+    SpecPolicy, StageSpec, StageWindow,
 };
 pub use timeline::{Component, Timeline};
 

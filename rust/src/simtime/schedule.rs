@@ -266,6 +266,184 @@ pub fn tail_signal(durations: &[f64], slots: usize, policy: &SpecPolicy) -> Vec<
     simulate(&stage, slots, Some(policy), true).decisions
 }
 
+// ---------------------------------------------------------------------
+// Multi-query service scheduling (shared slot pool)
+// ---------------------------------------------------------------------
+
+/// How the service arbitrates the shared slot pool between admitted
+/// queries (`flint.service.policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServicePolicy {
+    /// Strict arrival order, one query at a time: each query gets the
+    /// whole pool and runs exactly its solo schedule (including the
+    /// pipelined serial-fallback guard); the next starts when it ends.
+    Fifo,
+    /// Max-min fair slot sharing: every free slot goes to the admitted
+    /// query currently holding the fewest slots.
+    Fair,
+    /// Weighted fair sharing: slots go to the query minimizing
+    /// held/weight, so a weight-2 tenant holds twice a weight-1
+    /// tenant's share under saturation.
+    Weighted,
+}
+
+impl std::str::FromStr for ServicePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "fifo" => Ok(ServicePolicy::Fifo),
+            "fair" => Ok(ServicePolicy::Fair),
+            "weighted" => Ok(ServicePolicy::Weighted),
+            other => Err(format!("unknown service policy `{other}` (want fifo|fair|weighted)")),
+        }
+    }
+}
+
+impl ServicePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServicePolicy::Fifo => "fifo",
+            ServicePolicy::Fair => "fair",
+            ServicePolicy::Weighted => "weighted",
+        }
+    }
+}
+
+/// One admitted query's scheduling inputs.
+#[derive(Debug, Clone)]
+pub struct ServiceQuerySpec {
+    /// The query's stage DAG (same invariants as [`schedule_dag_spec`]:
+    /// topo order, dense query-local ids).
+    pub stages: Vec<StageSpec>,
+    /// When the query was admitted on the service clock.
+    pub arrival_s: f64,
+    /// Fair-share weight (> 0; only consulted under
+    /// [`ServicePolicy::Weighted`]).
+    pub weight: f64,
+}
+
+/// Where one query landed on the shared service clock.
+#[derive(Debug, Clone, Copy)]
+pub struct QueryWindow {
+    /// Index into the submitted query list.
+    pub query: usize,
+    pub arrival_s: f64,
+    /// First task launch (`arrival_s` + overhead when the pool had room;
+    /// later when the query waited for slots).
+    pub start_s: f64,
+    /// When the query's last task committed.
+    pub end_s: f64,
+    /// End-to-end latency including queue wait: `end_s - arrival_s`.
+    pub latency_s: f64,
+    /// Occupied-but-idle (long-polling) seconds of this query's attempts.
+    pub idle_s: f64,
+    pub spec_launches: u64,
+    pub spec_wins: u64,
+}
+
+/// The scheduled multi-query workload.
+#[derive(Debug, Clone)]
+pub struct ServiceScheduleOut {
+    /// When the last admitted query finished (aggregate makespan).
+    pub makespan_s: f64,
+    /// Total occupied-but-idle seconds across all queries.
+    pub idle_s: f64,
+    /// Per-query windows, indexed by submission order.
+    pub queries: Vec<QueryWindow>,
+}
+
+/// Schedule many queries' stage DAGs onto one shared pool of `slots`.
+///
+/// Under [`ServicePolicy::Fifo`] queries run strictly one at a time in
+/// arrival order — each one's schedule is exactly its solo
+/// [`schedule_dag_spec`] run, offset on the clock. Under
+/// `Fair`/`Weighted` all admitted queries share one event clock: every
+/// free slot is granted to the query minimizing held-slots/weight
+/// (ties: earlier arrival, then submission order), with producers
+/// keeping their dispatch priority *within* each query and backups
+/// queueing behind all primary work, exactly like the single-query
+/// clock. Barrier mode serializes each query's own stages
+/// (commit-ordered, the solo Σ model) while still interleaving queries.
+pub fn schedule_service(
+    queries: &[ServiceQuerySpec],
+    slots: usize,
+    mode: ScheduleMode,
+    policy: ServicePolicy,
+    spec: Option<&SpecPolicy>,
+) -> ServiceScheduleOut {
+    assert!(slots > 0, "schedule_service needs at least one slot");
+    for q in queries {
+        assert!(q.weight > 0.0 && q.weight.is_finite(), "query weight must be positive");
+        assert!(q.arrival_s >= 0.0, "query arrival must be non-negative");
+        for (i, s) in q.stages.iter().enumerate() {
+            assert_eq!(s.id as usize, i, "stage ids must be dense and ordered");
+            for &p in &s.parents {
+                assert!(p < s.id, "stage {} parent {p} breaks topo order", s.id);
+            }
+            assert!(
+                s.backups.is_empty() || s.backups.len() == s.task_durations.len(),
+                "stage {}: backups must be empty or one slot per task",
+                s.id
+            );
+        }
+    }
+    match policy {
+        ServicePolicy::Fifo => schedule_service_fifo(queries, slots, mode, spec),
+        ServicePolicy::Fair | ServicePolicy::Weighted => simulate_service(
+            queries,
+            slots,
+            mode == ScheduleMode::Barrier,
+            policy == ServicePolicy::Weighted,
+            spec,
+        ),
+    }
+}
+
+/// FIFO: strictly serial back-to-back solo runs in arrival order.
+fn schedule_service_fifo(
+    queries: &[ServiceQuerySpec],
+    slots: usize,
+    mode: ScheduleMode,
+    spec: Option<&SpecPolicy>,
+) -> ServiceScheduleOut {
+    let mut order: Vec<usize> = (0..queries.len()).collect();
+    order.sort_by(|&a, &b| {
+        queries[a]
+            .arrival_s
+            .total_cmp(&queries[b].arrival_s)
+            .then(a.cmp(&b))
+    });
+    let mut windows: Vec<Option<QueryWindow>> = vec![None; queries.len()];
+    let mut clock = 0.0f64;
+    let mut idle_s = 0.0;
+    for qi in order {
+        let q = &queries[qi];
+        let start = clock.max(q.arrival_s);
+        let solo = schedule_dag_spec(&q.stages, slots, mode, spec);
+        let end = start + solo.latency_s;
+        idle_s += solo.idle_s;
+        windows[qi] = Some(QueryWindow {
+            query: qi,
+            arrival_s: q.arrival_s,
+            start_s: start,
+            end_s: end,
+            latency_s: end - q.arrival_s,
+            idle_s: solo.idle_s,
+            spec_launches: solo.spec_launches,
+            spec_wins: solo.spec_wins,
+        });
+        clock = end;
+    }
+    ServiceScheduleOut {
+        makespan_s: clock,
+        idle_s,
+        queries: windows
+            .into_iter()
+            .map(|w| w.expect("one window per query"))
+            .collect(),
+    }
+}
+
 /// Serial stage-by-stage execution: exactly the original driver's
 /// Σ(makespan + overhead) model, expressed on the global clock.
 fn schedule_barrier(stages: &[StageSpec], slots: usize) -> ScheduleOut {
@@ -404,6 +582,34 @@ struct SimRun {
     decisions: Vec<SpecDecision>,
 }
 
+/// Multi-query context threaded through the event clock by
+/// [`schedule_service`]: which job each flattened stage belongs to,
+/// per-job weights/arrivals, and the slot-share ledger the fair
+/// dispatcher consults. `None` on every single-query entry point — the
+/// solo schedule stays byte-identical to the pre-service scheduler by
+/// construction (all service branches are guarded on this option).
+struct SvcCtx {
+    /// Flattened stage index → job (query) index.
+    job: Vec<usize>,
+    /// Fair-share weight per job (all 1.0 under [`ServicePolicy::Fair`]).
+    weight: Vec<f64>,
+    /// Admission time per job.
+    arrival: Vec<f64>,
+    /// Serialize each job's stages (barrier mode): a stage becomes ready
+    /// only after every earlier stage of its job fully committed.
+    barrier: bool,
+    /// Slots currently held per job (primaries + backups).
+    held: Vec<usize>,
+    /// Uncommitted tasks per stage (drives barrier advancement).
+    tasks_left: Vec<usize>,
+    /// Flattened stage ids per job, in id order (the barrier pipeline).
+    stage_seq: Vec<Vec<usize>>,
+    /// Per-job latest event time (query end on the shared clock).
+    job_end: Vec<f64>,
+    /// Per-job first task launch.
+    job_start: Vec<Option<f64>>,
+}
+
 struct Sim<'a> {
     stages: &'a [StageSpec],
     policy: Option<&'a SpecPolicy>,
@@ -439,12 +645,56 @@ struct Sim<'a> {
     latency: f64,
     spec_launches: u64,
     spec_wins: u64,
+    /// Multi-query service context; `None` for all solo schedules.
+    svc: Option<SvcCtx>,
 }
 
 impl<'a> Sim<'a> {
     fn push(&mut self, time: f64, kind: EventKind) {
         self.seq += 1;
         self.events.push(Event { time, seq: self.seq, kind });
+    }
+
+    fn barrier_svc(&self) -> bool {
+        self.svc.as_ref().map(|s| s.barrier).unwrap_or(false)
+    }
+
+    /// Claim a slot for an attempt of `stage` (service: charge the job's
+    /// share ledger).
+    fn claim(&mut self, stage: usize) {
+        self.free_slots -= 1;
+        if let Some(svc) = &mut self.svc {
+            svc.held[svc.job[stage]] += 1;
+        }
+    }
+
+    /// Free a slot held by an attempt of `stage`.
+    fn unclaim(&mut self, stage: usize) {
+        self.free_slots += 1;
+        if let Some(svc) = &mut self.svc {
+            svc.held[svc.job[stage]] -= 1;
+        }
+    }
+
+    /// Record a clock event on `stage`'s job (per-query end time).
+    fn note_job_event(&mut self, stage: usize, now: f64) {
+        if let Some(svc) = &mut self.svc {
+            let j = svc.job[stage];
+            svc.job_end[j] = svc.job_end[j].max(now);
+        }
+    }
+
+    /// Barrier-mode service pipeline: `stage` fully committed — ready
+    /// its job's next stage (its own driver overhead charged serially,
+    /// exactly like the solo Σ model).
+    fn advance_barrier_job(&mut self, stage: usize, now: f64) {
+        let svc = self.svc.as_ref().expect("barrier advance without service ctx");
+        let j = svc.job[stage];
+        let seq = &svc.stage_seq[j];
+        let pos = seq.iter().position(|&s| s == stage).expect("stage in its own job");
+        if let Some(&next) = seq.get(pos + 1) {
+            self.push(now + self.stages[next].overhead_s, EventKind::StageReady { stage: next });
+        }
     }
 
     /// Mark `stage` as having started producing at `now`, waking any
@@ -457,6 +707,11 @@ impl<'a> Sim<'a> {
             return;
         }
         self.first_start[stage] = Some(now);
+        if self.barrier_svc() {
+            // Barrier-mode service: readiness advances on full stage
+            // commits (see `advance_barrier_job`), never on first starts.
+            return;
+        }
         for ci in 0..self.children[stage].len() {
             let child = self.children[stage][ci];
             self.parents_started[child] += 1;
@@ -473,6 +728,10 @@ impl<'a> Sim<'a> {
     /// has been claimed).
     fn start_task(&mut self, stage: usize, t: usize, now: f64) {
         let d = self.stages[stage].task_durations[t];
+        if let Some(svc) = &mut self.svc {
+            let j = svc.job[stage];
+            svc.job_start[j].get_or_insert(now);
+        }
         self.note_first_start(stage, now);
         self.primary[stage][t] = self.start_attempt(stage, d, now);
         if let AttemptState::Running { busy_until, remaining: 0, .. } = self.primary[stage][t] {
@@ -540,6 +799,15 @@ impl<'a> Sim<'a> {
         let _ = task;
         self.ends_left -= 1;
         self.latency = self.latency.max(now);
+        self.note_job_event(stage, now);
+        let mut advance = false;
+        if let Some(svc) = &mut self.svc {
+            svc.tasks_left[stage] -= 1;
+            advance = svc.barrier && svc.tasks_left[stage] == 0;
+        }
+        if advance {
+            self.advance_barrier_job(stage, now);
+        }
         self.release_chunks(stage, now);
         // Sorted insertion keeps the median O(1) per threshold check
         // (spans are finite, so a plain `<=` partition is total).
@@ -629,12 +897,18 @@ impl<'a> Sim<'a> {
         match ev.kind {
             EventKind::StageReady { stage } => {
                 self.latency = self.latency.max(now);
+                self.note_job_event(stage, now);
                 self.ready[stage] = true;
                 if self.stages[stage].task_durations.is_empty() {
                     // Degenerate empty stage: "starts producing" (and
                     // finishes) the moment it is ready. It contributes no
                     // producer tasks, so children wait on nothing from it.
                     self.note_first_start(stage, now);
+                    if self.barrier_svc() {
+                        // No tasks will commit, so the barrier pipeline
+                        // falls straight through to the next stage.
+                        self.advance_barrier_job(stage, now);
+                    }
                 }
             }
             EventKind::TaskEnd { stage, task } => {
@@ -643,12 +917,12 @@ impl<'a> Sim<'a> {
                     return;
                 };
                 self.primary[stage][task] = AttemptState::Done { start, end: now };
-                self.free_slots += 1;
+                self.unclaim(stage);
                 // First-commit-wins: a racing backup is cancelled at the
                 // commit instant (slot freed, span closed).
                 if let AttemptState::Running { start: bs, .. } = self.backup[stage][task] {
                     self.backup[stage][task] = AttemptState::Cancelled { start: bs, end: now };
-                    self.free_slots += 1;
+                    self.unclaim(stage);
                 }
                 self.commit_task(stage, task, start, now);
             }
@@ -658,7 +932,7 @@ impl<'a> Sim<'a> {
                     return;
                 };
                 self.backup[stage][task] = AttemptState::Done { start: bs, end: now };
-                self.free_slots += 1;
+                self.unclaim(stage);
                 self.spec_wins += 1;
                 // The primary is still running (otherwise this backup
                 // would have been cancelled at the primary's commit).
@@ -666,7 +940,7 @@ impl<'a> Sim<'a> {
                     unreachable!("backup finished for a task with no running primary")
                 };
                 self.primary[stage][task] = AttemptState::Cancelled { start, end: now };
-                self.free_slots += 1;
+                self.unclaim(stage);
                 self.commit_task(stage, task, start, now);
             }
             EventKind::SpecCheck { stage, task } => {
@@ -688,28 +962,65 @@ impl<'a> Sim<'a> {
 
     /// Claim slots for pending work: primaries first (producers — lower
     /// stage ids — before consumers), then queued backups. Backups never
-    /// displace primary work.
+    /// displace primary work. Under a service context the next slot goes
+    /// to the *fairest* job first; within a job producers keep priority.
     fn dispatch(&mut self, now: f64) {
         while self.free_slots > 0 {
-            let mut picked = None;
-            for s in 0..self.stages.len() {
-                if self.ready[s] && !self.pending[s].is_empty() {
-                    picked = Some(s);
-                    break;
-                }
-            }
+            let picked = match &self.svc {
+                None => self.pick_solo(),
+                Some(_) => self.pick_fair(),
+            };
             let Some(s) = picked else { break };
             let t = self.pending[s].pop_front().expect("non-empty pending");
-            self.free_slots -= 1;
+            self.claim(s);
             self.start_task(s, t, now);
         }
         while self.free_slots > 0 {
             // A queued backup whose primary committed while it waited is
             // moot — skip it without ever launching.
             let Some((s, t)) = self.next_live_backup() else { break };
-            self.free_slots -= 1;
+            self.claim(s);
             self.start_backup(s, t, now);
         }
+    }
+
+    /// Solo dispatch order: the lowest ready stage id with pending work.
+    fn pick_solo(&self) -> Option<usize> {
+        (0..self.stages.len()).find(|&s| self.ready[s] && !self.pending[s].is_empty())
+    }
+
+    /// Weighted-fair dispatch: among jobs with dispatchable work, the
+    /// one with the smallest held/weight ratio wins the slot (ties:
+    /// earlier arrival, then submission order — jobs are flattened in
+    /// submission order, so the first candidate stage seen for a job is
+    /// also its lowest stage id, preserving producer priority within
+    /// the job).
+    fn pick_fair(&self) -> Option<usize> {
+        let svc = self.svc.as_ref().expect("fair pick without service ctx");
+        let mut best: Option<(usize, usize)> = None; // (job, stage)
+        for s in 0..self.stages.len() {
+            if !self.ready[s] || self.pending[s].is_empty() {
+                continue;
+            }
+            let j = svc.job[s];
+            let Some((bj, _)) = best else {
+                best = Some((j, s));
+                continue;
+            };
+            if j == bj {
+                continue; // the job's lowest dispatchable stage is kept
+            }
+            let share = svc.held[j] as f64 / svc.weight[j];
+            let best_share = svc.held[bj] as f64 / svc.weight[bj];
+            // Strictly fairer, or equal share but earlier arrival (the
+            // submission-order tie favours the incumbent `bj < j`).
+            if share < best_share - EPS
+                || (share < best_share + EPS && svc.arrival[j] < svc.arrival[bj] - EPS)
+            {
+                best = Some((j, s));
+            }
+        }
+        best.map(|(_, s)| s)
     }
 
     fn next_live_backup(&mut self) -> Option<(usize, usize)> {
@@ -747,8 +1058,7 @@ fn simulate(
     policy: Option<&SpecPolicy>,
     decide_only: bool,
 ) -> SimRun {
-    let n = stages.len();
-    if n == 0 {
+    if stages.is_empty() {
         return SimRun {
             out: ScheduleOut {
                 latency_s: 0.0,
@@ -760,6 +1070,39 @@ fn simulate(
             decisions: Vec::new(),
         };
     }
+    let mut sim = new_sim(stages, slots, policy, decide_only, None);
+
+    // Root stages become ready once their driver overhead is paid.
+    for s in stages {
+        if s.parents.is_empty() {
+            sim.push(s.overhead_s, EventKind::StageReady { stage: s.id as usize });
+        }
+    }
+
+    run_events(&mut sim);
+    let (windows, stage_idle) = collect_windows(&sim);
+    SimRun {
+        out: ScheduleOut {
+            latency_s: sim.latency,
+            stages: windows,
+            idle_s: stage_idle.iter().sum(),
+            spec_launches: sim.spec_launches,
+            spec_wins: sim.spec_wins,
+        },
+        decisions: sim.decisions,
+    }
+}
+
+/// Build the event clock's state for a stage list (solo or flattened
+/// multi-query).
+fn new_sim<'a>(
+    stages: &'a [StageSpec],
+    slots: usize,
+    policy: Option<&'a SpecPolicy>,
+    decide_only: bool,
+    svc: Option<SvcCtx>,
+) -> Sim<'a> {
+    let n = stages.len();
     let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
     let mut producer_tasks = vec![0usize; n];
     for s in stages {
@@ -768,7 +1111,7 @@ fn simulate(
             producer_tasks[s.id as usize] += stages[p as usize].task_durations.len();
         }
     }
-    let mut sim = Sim {
+    Sim {
         stages,
         policy,
         decide_only,
@@ -808,15 +1151,12 @@ fn simulate(
         latency: 0.0,
         spec_launches: 0,
         spec_wins: 0,
-    };
-
-    // Root stages become ready once their driver overhead is paid.
-    for s in stages {
-        if s.parents.is_empty() {
-            sim.push(s.overhead_s, EventKind::StageReady { stage: s.id as usize });
-        }
+        svc,
     }
+}
 
+/// Drain the event heap to completion (the clock's main loop).
+fn run_events(sim: &mut Sim) {
     while let Some(ev) = sim.events.pop() {
         let now = ev.time;
         sim.handle(ev);
@@ -830,9 +1170,14 @@ fn simulate(
         sim.dispatch(now);
     }
     assert_eq!(sim.ends_left, 0, "event schedule deadlocked");
+}
 
-    let mut idle_s = 0.0;
-    let windows = stages
+/// Extract per-stage windows and per-stage occupied-but-idle seconds
+/// from a finished clock.
+fn collect_windows(sim: &Sim) -> (Vec<StageWindow>, Vec<f64>) {
+    let mut stage_idle = vec![0.0f64; sim.stages.len()];
+    let windows = sim
+        .stages
         .iter()
         .map(|s| {
             let i = s.id as usize;
@@ -845,7 +1190,7 @@ fn simulate(
                 })
                 .collect();
             for (t, (a, b)) in tasks.iter().enumerate() {
-                idle_s += (b - a - s.task_durations[t]).max(0.0);
+                stage_idle[i] += (b - a - s.task_durations[t]).max(0.0);
             }
             let backups: Vec<BackupWindow> = sim.backup[i]
                 .iter()
@@ -862,7 +1207,7 @@ fn simulate(
                 .collect();
             for b in &backups {
                 if let Some(d) = s.backup_of(b.task) {
-                    idle_s += (b.end - b.start - d).max(0.0);
+                    stage_idle[i] += (b.end - b.start - d).max(0.0);
                 }
             }
             let start = sim.first_start[i].unwrap_or(0.0);
@@ -870,15 +1215,106 @@ fn simulate(
             StageWindow { id: s.id, start, end, tasks, backups }
         })
         .collect();
-    SimRun {
-        out: ScheduleOut {
-            latency_s: sim.latency,
-            stages: windows,
-            idle_s,
-            spec_launches: sim.spec_launches,
-            spec_wins: sim.spec_wins,
-        },
-        decisions: sim.decisions,
+    (windows, stage_idle)
+}
+
+/// Multi-query event schedule (fair / weighted): every query's stage
+/// DAG flattened onto one clock, the fair dispatcher arbitrating slots
+/// (see [`schedule_service`]).
+fn simulate_service(
+    queries: &[ServiceQuerySpec],
+    slots: usize,
+    barrier: bool,
+    weighted: bool,
+    policy: Option<&SpecPolicy>,
+) -> ServiceScheduleOut {
+    let nq = queries.len();
+    // Flatten every query's stages into one dense global id space.
+    let mut flat: Vec<StageSpec> = Vec::new();
+    let mut job_of: Vec<usize> = Vec::new();
+    let mut stage_seq: Vec<Vec<usize>> = vec![Vec::new(); nq];
+    for (j, q) in queries.iter().enumerate() {
+        let off = flat.len() as u32;
+        for s in &q.stages {
+            stage_seq[j].push(flat.len());
+            job_of.push(j);
+            flat.push(StageSpec {
+                id: off + s.id,
+                parents: s.parents.iter().map(|&p| off + p).collect(),
+                task_durations: s.task_durations.clone(),
+                backups: s.backups.clone(),
+                overhead_s: s.overhead_s,
+            });
+        }
+    }
+    // Seed readiness before the context is moved into the clock:
+    // pipelined roots are each query's parentless stages; barrier admits
+    // only each query's first stage — the rest ready as predecessors
+    // commit.
+    let mut seeds: Vec<(f64, usize)> = Vec::new();
+    if barrier {
+        for (j, q) in queries.iter().enumerate() {
+            if let Some(&first) = stage_seq[j].first() {
+                seeds.push((q.arrival_s + flat[first].overhead_s, first));
+            }
+        }
+    } else {
+        for (gi, s) in flat.iter().enumerate() {
+            if s.parents.is_empty() {
+                seeds.push((queries[job_of[gi]].arrival_s + s.overhead_s, gi));
+            }
+        }
+    }
+    let svc = SvcCtx {
+        job: job_of,
+        weight: queries
+            .iter()
+            .map(|q| if weighted { q.weight } else { 1.0 })
+            .collect(),
+        arrival: queries.iter().map(|q| q.arrival_s).collect(),
+        barrier,
+        held: vec![0; nq],
+        tasks_left: flat.iter().map(|s| s.task_durations.len()).collect(),
+        stage_seq,
+        job_end: queries.iter().map(|q| q.arrival_s).collect(),
+        job_start: vec![None; nq],
+    };
+    let mut sim = new_sim(&flat, slots, policy, false, Some(svc));
+    for (t, s) in seeds {
+        sim.push(t, EventKind::StageReady { stage: s });
+    }
+    run_events(&mut sim);
+
+    let (windows, stage_idle) = collect_windows(&sim);
+    let svc = sim.svc.as_ref().expect("service ctx survives the run");
+    let mut q_idle = vec![0.0f64; nq];
+    let mut q_launches = vec![0u64; nq];
+    let mut q_wins = vec![0u64; nq];
+    for (gi, w) in windows.iter().enumerate() {
+        let j = svc.job[gi];
+        q_idle[j] += stage_idle[gi];
+        q_launches[j] += w.backups.len() as u64;
+        q_wins[j] += w.backups.iter().filter(|b| b.won).count() as u64;
+    }
+    let out: Vec<QueryWindow> = (0..nq)
+        .map(|j| {
+            let end = svc.job_end[j];
+            QueryWindow {
+                query: j,
+                arrival_s: queries[j].arrival_s,
+                start_s: svc.job_start[j].unwrap_or(queries[j].arrival_s),
+                end_s: end,
+                latency_s: end - queries[j].arrival_s,
+                idle_s: q_idle[j],
+                spec_launches: q_launches[j],
+                spec_wins: q_wins[j],
+            }
+        })
+        .collect();
+    ServiceScheduleOut {
+        makespan_s: out.iter().fold(0.0f64, |a, w| a.max(w.end_s)),
+        idle_s: q_idle.iter().sum(),
+        queries: out,
     }
 }
 
@@ -1306,5 +1742,300 @@ mod tests {
         let out = schedule_dag(&stages, 4, ScheduleMode::Pipelined);
         assert!((out.stages[1].tasks[0].1 - 5.0).abs() < 1e-9);
         assert!((out.idle_s - 4.0).abs() < 1e-9, "idle {}", out.idle_s);
+    }
+
+    // -- the multi-query service clock -------------------------------------
+
+    fn query(stage_tasks: &[Vec<f64>], arrival: f64, weight: f64) -> ServiceQuerySpec {
+        ServiceQuerySpec { stages: chain(stage_tasks, 0.0), arrival_s: arrival, weight }
+    }
+
+    #[test]
+    fn service_fifo_is_serial_back_to_back() {
+        let q1 = query(&[vec![2.0, 2.0], vec![1.0]], 0.0, 1.0);
+        let q2 = query(&[vec![3.0]], 0.0, 1.0);
+        let solo1 = schedule_dag(&q1.stages, 4, ScheduleMode::Pipelined);
+        let solo2 = schedule_dag(&q2.stages, 4, ScheduleMode::Pipelined);
+        let out = schedule_service(
+            &[q1, q2],
+            4,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fifo,
+            None,
+        );
+        assert!((out.queries[0].latency_s - solo1.latency_s).abs() < 1e-12);
+        // The second query waits for the first: latency includes the wait.
+        assert!((out.queries[1].start_s - solo1.latency_s).abs() < 1e-12);
+        assert!((out.queries[1].latency_s - (solo1.latency_s + solo2.latency_s)).abs() < 1e-12);
+        assert!((out.makespan_s - (solo1.latency_s + solo2.latency_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn service_fifo_honours_arrivals() {
+        // Late arrival with an idle gap: query 2 starts at its arrival,
+        // not at query 1's end.
+        let q1 = query(&[vec![1.0]], 0.0, 1.0);
+        let q2 = query(&[vec![1.0]], 5.0, 1.0);
+        let out = schedule_service(
+            &[q1, q2],
+            4,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fifo,
+            None,
+        );
+        assert!((out.queries[1].start_s - 5.0).abs() < 1e-12);
+        assert!((out.queries[1].latency_s - 1.0).abs() < 1e-12);
+        assert!((out.makespan_s - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn service_fair_solo_matches_single_query_clock() {
+        // One admitted query: the fair clock degenerates to the solo
+        // event clock, both modes.
+        let stages = &[vec![3.0, 1.0, 2.0, 2.0], vec![1.0, 1.0]];
+        for mode in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+            let solo = schedule_dag(&chain(stages, 0.3), 2, mode);
+            let q = ServiceQuerySpec { stages: chain(stages, 0.3), arrival_s: 0.0, weight: 1.0 };
+            let out = schedule_service(&[q], 2, mode, ServicePolicy::Fair, None);
+            assert!(
+                (out.queries[0].latency_s - solo.latency_s).abs() < 1e-9,
+                "{mode:?}: {} vs {}",
+                out.queries[0].latency_s,
+                solo.latency_s
+            );
+            assert!((out.idle_s - solo.idle_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn service_fair_overlaps_nonconflicting_queries() {
+        // Two 2-task queries on 4 slots: no contention, both finish at
+        // their solo latency — fair sharing costs nothing when the pool
+        // has room.
+        let stages = &[vec![2.0, 2.0]];
+        let solo = schedule_dag(&chain(stages, 0.0), 4, ScheduleMode::Pipelined);
+        let qs = vec![query(stages, 0.0, 1.0), query(stages, 0.0, 1.0)];
+        let out =
+            schedule_service(&qs, 4, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+        for w in &out.queries {
+            assert!(
+                (w.latency_s - solo.latency_s).abs() < 1e-9,
+                "query {} latency {} vs solo {}",
+                w.query,
+                w.latency_s,
+                solo.latency_s
+            );
+        }
+        assert!((out.makespan_s - solo.latency_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn service_fair_beats_fifo_tail_under_saturation() {
+        // 4 equal queries, each only half as wide as the pool: FIFO runs
+        // them one at a time and wastes the other half of the slots
+        // (head-of-line blocking), so its last query waits through three
+        // full solo runs; fair co-schedules, so both the *worst* latency
+        // and the makespan strictly improve. (When every query saturates
+        // the pool on its own, both policies are work-conserving and the
+        // tails tie — the contrast needs per-query width < slots.)
+        let stages = &[vec![1.0; 4]];
+        let qs: Vec<ServiceQuerySpec> =
+            (0..4).map(|_| query(stages, 0.0, 1.0)).collect();
+        let fifo =
+            schedule_service(&qs, 8, ScheduleMode::Pipelined, ServicePolicy::Fifo, None);
+        let fair =
+            schedule_service(&qs, 8, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+        let worst = |o: &ServiceScheduleOut| {
+            o.queries.iter().fold(0.0f64, |a, w| a.max(w.latency_s))
+        };
+        assert!(
+            worst(&fair) < worst(&fifo) - 1e-9,
+            "fair p-max {} must beat fifo {}",
+            worst(&fair),
+            worst(&fifo)
+        );
+        assert!(fair.makespan_s <= fifo.makespan_s + 1e-9, "no throughput regression");
+    }
+
+    #[test]
+    fn service_fair_share_within_one_task_under_saturation() {
+        // 2 queries × 12 equal unit tasks on 6 slots: at every dispatch
+        // instant each query holds 3 ± 1 slots.
+        let stages = &[vec![1.0; 12]];
+        let qs = vec![query(stages, 0.0, 1.0), query(stages, 0.0, 1.0)];
+        let out =
+            schedule_service(&qs, 6, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+        // Equal demand + fair sharing: both queries must finish together
+        // (within one task) and split the pool, so each takes ~4s
+        // (24 task-seconds / 6 slots), not 2s-then-4s.
+        let l0 = out.queries[0].latency_s;
+        let l1 = out.queries[1].latency_s;
+        assert!((l0 - l1).abs() <= 1.0 + 1e-9, "fair split diverged: {l0} vs {l1}");
+        assert!((out.makespan_s - 4.0).abs() < 1e-9, "makespan {}", out.makespan_s);
+        assert!(l0 > 3.0 && l1 > 3.0, "neither query may hog the pool: {l0}, {l1}");
+    }
+
+    #[test]
+    fn service_weighted_prefers_heavy_tenant() {
+        // Weight 3 vs 1 on a saturated pool: the heavy tenant holds ~3/4
+        // of the slots and finishes first.
+        let stages = &[vec![1.0; 16]];
+        let qs = vec![query(stages, 0.0, 3.0), query(stages, 0.0, 1.0)];
+        let out = schedule_service(
+            &qs,
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Weighted,
+            None,
+        );
+        assert!(
+            out.queries[0].latency_s < out.queries[1].latency_s - 1e-9,
+            "weighted: heavy {} must beat light {}",
+            out.queries[0].latency_s,
+            out.queries[1].latency_s
+        );
+        // Under fair the same workload ties (within a task).
+        let qs_fair = vec![query(stages, 0.0, 1.0), query(stages, 0.0, 1.0)];
+        let fair = schedule_service(
+            &qs_fair,
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fair,
+            None,
+        );
+        assert!((fair.queries[0].latency_s - fair.queries[1].latency_s).abs() <= 1.0 + 1e-9);
+    }
+
+    #[test]
+    fn service_respects_slot_cap_across_queries() {
+        // Aggregate concurrency across all queries must never exceed the
+        // pool. Reconstruct spans via a fair run on a tight pool.
+        let stages = &[vec![1.5; 5], vec![0.5; 2]];
+        let qs: Vec<ServiceQuerySpec> =
+            (0..3).map(|_| query(stages, 0.0, 1.0)).collect();
+        let slots = 4;
+        let out =
+            schedule_service(&qs, slots, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+        // Work-conservation lower bound: total busy work / slots.
+        let total: f64 = qs
+            .iter()
+            .flat_map(|q| q.stages.iter())
+            .flat_map(|s| s.task_durations.iter())
+            .sum();
+        assert!(
+            out.makespan_s >= total / slots as f64 - 1e-9,
+            "makespan {} under the work bound {}",
+            out.makespan_s,
+            total / slots as f64
+        );
+    }
+
+    #[test]
+    fn service_barrier_solo_matches_sigma_model() {
+        // Barrier-mode service with one query reproduces Σ(makespan +
+        // overhead) exactly, overheads included.
+        let stages = &[vec![3.0, 1.0, 2.0, 2.0], vec![1.0, 1.0]];
+        let solo = schedule_dag(&chain(stages, 0.5), 2, ScheduleMode::Barrier);
+        let q = ServiceQuerySpec { stages: chain(stages, 0.5), arrival_s: 0.0, weight: 1.0 };
+        let out = schedule_service(&[q], 2, ScheduleMode::Barrier, ServicePolicy::Fair, None);
+        assert!(
+            (out.queries[0].latency_s - solo.latency_s).abs() < 1e-9,
+            "{} vs {}",
+            out.queries[0].latency_s,
+            solo.latency_s
+        );
+    }
+
+    #[test]
+    fn service_speculation_rides_the_shared_clock() {
+        // A straggling query under fair sharing still gets its backup
+        // launched and won on the shared clock.
+        let mut stages = chain(&[vec![1.0, 1.0, 1.0, 8.0]], 0.0);
+        stages[0].backups = vec![None, None, None, Some(1.0)];
+        let qs = vec![
+            ServiceQuerySpec { stages, arrival_s: 0.0, weight: 1.0 },
+            query(&[vec![1.0; 4]], 0.0, 1.0),
+        ];
+        let out = schedule_service(
+            &qs,
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fair,
+            Some(&POLICY),
+        );
+        assert_eq!(out.queries[0].spec_launches, 1);
+        assert_eq!(out.queries[0].spec_wins, 1);
+        assert_eq!(out.queries[1].spec_launches, 0);
+        assert!(
+            out.queries[0].latency_s < 8.0 - 1e-9,
+            "backup win must cut the straggler: {}",
+            out.queries[0].latency_s
+        );
+    }
+
+    #[test]
+    fn prop_service_fair_conserves_work_and_bounds_latency() {
+        // Random query mixes: (a) the fair makespan never beats the
+        // work-conservation bound, (b) every query's latency is at least
+        // its own critical work / pool, (c) aggregate idle is finite and
+        // non-negative.
+        forall("service-fair-sane", 80, |g| {
+            let slots = g.usize(6) + 2;
+            let nq = g.usize(3) + 1;
+            let mut qs = Vec::new();
+            for _ in 0..nq {
+                let d0 = {
+                    let v = g.vec(6, |g| g.f64(0.2, 3.0));
+                    if v.is_empty() {
+                        vec![1.0]
+                    } else {
+                        v
+                    }
+                };
+                let d1 = g.vec(3, |g| g.f64(0.1, 1.0));
+                qs.push(ServiceQuerySpec {
+                    stages: chain(&[d0, d1], g.f64(0.0, 0.3)),
+                    arrival_s: g.f64(0.0, 2.0),
+                    weight: 1.0,
+                });
+            }
+            let out = schedule_service(
+                &qs,
+                slots,
+                ScheduleMode::Pipelined,
+                ServicePolicy::Fair,
+                None,
+            );
+            let total: f64 = qs
+                .iter()
+                .flat_map(|q| q.stages.iter())
+                .flat_map(|s| s.task_durations.iter())
+                .sum();
+            let earliest = qs.iter().fold(f64::INFINITY, |a, q| a.min(q.arrival_s));
+            if out.makespan_s < earliest + total / slots as f64 - 1e-9 {
+                return Err(format!(
+                    "makespan {} beat the work bound {}",
+                    out.makespan_s,
+                    earliest + total / slots as f64
+                ));
+            }
+            for (q, w) in qs.iter().zip(&out.queries) {
+                let own: f64 = q
+                    .stages
+                    .iter()
+                    .flat_map(|s| s.task_durations.iter())
+                    .sum();
+                if w.latency_s < own / slots as f64 - 1e-9 {
+                    return Err(format!(
+                        "query {} latency {} under its own work bound",
+                        w.query, w.latency_s
+                    ));
+                }
+                if w.end_s < w.arrival_s - 1e-12 || w.idle_s < -1e-12 {
+                    return Err(format!("query {} has a negative span/idle", w.query));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -232,21 +232,32 @@ impl From<Vec<Json>> for Json {
     }
 }
 
-#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum JsonError {
-    #[error("unexpected end of input")]
     Eof,
-    #[error("unexpected byte {1:?} at offset {0}")]
     Unexpected(usize, char),
-    #[error("trailing characters at offset {0}")]
     Trailing(usize),
-    #[error("invalid number at offset {0}")]
     BadNumber(usize),
-    #[error("invalid string escape at offset {0}")]
     BadEscape(usize),
-    #[error("missing or mistyped field `{0}`")]
     Missing(String),
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JsonError::Eof => write!(f, "unexpected end of input"),
+            JsonError::Unexpected(pos, byte) => {
+                write!(f, "unexpected byte {byte:?} at offset {pos}")
+            }
+            JsonError::Trailing(pos) => write!(f, "trailing characters at offset {pos}"),
+            JsonError::BadNumber(pos) => write!(f, "invalid number at offset {pos}"),
+            JsonError::BadEscape(pos) => write!(f, "invalid string escape at offset {pos}"),
+            JsonError::Missing(field) => write!(f, "missing or mistyped field `{field}`"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

@@ -330,6 +330,8 @@ fn assert_matches_oracle_everywhere(
         lambda: false,
         host_parallelism: 4,
         schedule: ScheduleMode::Pipelined,
+        bill_idle: true,
+        predictor: None,
     };
     let out = run_plan(&env, None, &plan, &params).unwrap();
     let ActionOut::Values(got) = out.out else { panic!("collect produced {:?}", out.out) };

@@ -107,6 +107,8 @@ fn q6j_matches_oracle_on_the_memory_backend() {
         lambda: false,
         host_parallelism: 4,
         schedule: ScheduleMode::Pipelined,
+        bill_idle: true,
+        predictor: None,
     };
     let out = run_plan(&env, None, &plan, &params).unwrap();
     let result = out.out.to_query_result().unwrap();
@@ -158,6 +160,8 @@ fn q6j_survives_forced_crashes_on_s3_and_memory_backends() {
         lambda: false,
         host_parallelism: 4,
         schedule: ScheduleMode::Barrier,
+        bill_idle: true,
+        predictor: None,
     };
     let out = run_plan(&env2, None, &plan, &params).unwrap();
     assert_eq!(out.retries, 1);
@@ -291,6 +295,8 @@ fn union_cross_parent_dedup_does_not_alias_under_duplicates() {
         lambda: true,
         host_parallelism: 4,
         schedule: ScheduleMode::Pipelined,
+        bill_idle: true,
+        predictor: None,
     };
     let out = run_plan(&env, None, &plan, &params).unwrap();
     assert!(out.duplicates_dropped > 0, "duplicates were injected and dropped");

@@ -225,6 +225,8 @@ fn run_memory(rdd: &Rdd, sched: ScheduleMode) -> Result<Vec<Value>, String> {
                 lambda: false,
                 host_parallelism: 4,
                 schedule: ScheduleMode::Pipelined,
+                bill_idle: true,
+                predictor: None,
             };
             let out = run_plan(&env, None, &plan, &params)
                 .map_err(|e| format!("memory/pipelined: {e:#}"))?;

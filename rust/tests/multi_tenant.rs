@@ -1,0 +1,314 @@
+//! The multi-tenant service layer, end to end:
+//!
+//! 1. **Conservation** — per-tenant [`CostLedger`]s are exact: N
+//!    non-contending tenants' ledgers each equal an independent
+//!    single-tenant run bit-for-bit, and they sum to the pool's total
+//!    billed spend.
+//! 2. **Identity** — a single-query service run reproduces the solo
+//!    engine's schedule and bill exactly (the tentpole's "byte-identical
+//!    when unused" contract, from the service side).
+//! 3. **Admission** — the bounded queue rejects with a *typed* error.
+//! 4. **Fairness** — under saturation, `fair` splits the pool within
+//!    one task of N/num_tenants (observed through latencies) and beats
+//!    FIFO's tail; `weighted` prioritizes heavy tenants.
+//! 5. **Prediction** — per-container history suppresses backups for
+//!    threshold-crossing tasks on demonstrably fast containers.
+//!
+//! [`CostLedger`]: flint::cost::report::CostLedger
+
+use flint::config::FlintConfig;
+use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
+use flint::exec::service::ServiceError;
+use flint::exec::{FlintContext, FlintService};
+use flint::plan::{Action, Rdd};
+use flint::services::SimEnv;
+use flint::simtime::{
+    schedule_service, ScheduleMode, ServicePolicy, ServiceQuerySpec, StageSpec,
+};
+
+const EPS: f64 = 1e-9;
+
+/// Fully modeled config: `compute_scale = 0` removes host-measured
+/// jitter, so identical queries produce identical durations, schedules,
+/// and bills — the exactness the conservation tests pin.
+fn modeled_cfg() -> FlintConfig {
+    let mut c = FlintConfig::for_tests();
+    c.sim.compute_scale = 0.0;
+    c
+}
+
+/// A two-stage shuffle lineage (scan → reduce) so runs exercise queue
+/// management, pipelined idle, and per-edge accounting.
+fn hour_histogram(sc: &FlintContext) -> Rdd {
+    sc.text_file(INPUT_BUCKET, "trips/")
+        .map(|line| {
+            let text = line.as_str().expect("text input");
+            let hour = flint::data::schema::TripRecord::parse_csv(text.as_bytes())
+                .map(|r| flint::data::chrono::hour_of_day(r.dropoff_ts) as i64)
+                .unwrap_or(0);
+            flint::compute::value::Value::pair(
+                flint::compute::value::Value::I64(hour),
+                flint::compute::value::Value::I64(1),
+            )
+        })
+        .reduce_by_key(8, |a, b| {
+            flint::compute::value::Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+        })
+}
+
+/// One standalone single-tenant run of the same lineage: the ledger
+/// ground truth. Returns (cost_usd, gb_seconds, idle_s, latency_s).
+fn solo_run(cfg: &FlintConfig) -> (f64, f64, f64, f64) {
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let sc = FlintContext::new(env.clone());
+    sc.prewarm();
+    let report = sc.run(&hour_histogram(&sc), Action::Collect).unwrap();
+    let gb_s = report.cost.get(flint::cost::CostCategory::LambdaCompute)
+        / cfg.pricing.lambda_gb_s;
+    (report.cost_usd, gb_s, report.pipelined_idle_s, report.latency_s)
+}
+
+#[test]
+fn ledgers_conserve_across_non_contending_tenants() {
+    let cfg = modeled_cfg();
+    let (solo_usd, solo_gb_s, solo_idle, _) = solo_run(&cfg);
+    assert!(solo_usd > 0.0, "solo run must bill something");
+
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env.clone());
+    service.prewarm();
+    let sc = service.session("anyone");
+    let rdd = hour_histogram(&sc);
+    // Arrivals far apart: no two queries ever contend for a slot, so
+    // each runs its exact solo schedule on the shared clock.
+    for (i, tenant) in ["acme", "globex", "initech"].iter().enumerate() {
+        service
+            .submit_at(tenant, &rdd, Action::Collect, i as f64 * 10_000.0)
+            .unwrap();
+    }
+    let report = service.run().unwrap();
+
+    // Σ ledgers == the pool's billed spend, to the last bit.
+    let ledger_sum: f64 = report.ledgers.values().map(|l| l.total_usd()).sum();
+    assert!(
+        (ledger_sum - report.run_cost.total()).abs() < 1e-15,
+        "ledgers {ledger_sum} != pool {}",
+        report.run_cost.total()
+    );
+    // And each tenant's ledger equals its independent single-tenant run.
+    assert_eq!(report.ledgers.len(), 3);
+    for (tenant, ledger) in &report.ledgers {
+        assert_eq!(ledger.queries, 1, "{tenant}");
+        assert!(
+            (ledger.total_usd() - solo_usd).abs() < EPS,
+            "{tenant}: ledger ${} != solo ${solo_usd}",
+            ledger.total_usd()
+        );
+        assert!(
+            (ledger.gb_seconds - solo_gb_s).abs() < EPS,
+            "{tenant}: {} GB-s != solo {solo_gb_s}",
+            ledger.gb_seconds
+        );
+        assert!(
+            (ledger.idle_s - solo_idle).abs() < EPS,
+            "{tenant}: idle {} != solo {solo_idle}",
+            ledger.idle_s
+        );
+    }
+    // The rendered table is deterministic and carries every tenant.
+    let table = report.render_ledgers();
+    for tenant in ["acme", "globex", "initech"] {
+        assert!(table.contains(tenant), "{table}");
+    }
+}
+
+#[test]
+fn single_query_service_run_matches_solo_engine_exactly() {
+    let cfg = modeled_cfg();
+    let (solo_usd, _, _, solo_latency) = solo_run(&cfg);
+
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env.clone());
+    service.prewarm();
+    let sc = service.session("acme");
+    service.submit("acme", &hour_histogram(&sc), Action::Collect).unwrap();
+    let report = service.run().unwrap();
+
+    let q = &report.queries[0];
+    assert!(
+        (q.window.latency_s - solo_latency).abs() < EPS,
+        "service latency {} != solo {solo_latency}",
+        q.window.latency_s
+    );
+    assert!(
+        (q.cost.total() - solo_usd).abs() < EPS,
+        "service cost {} != solo {solo_usd}",
+        q.cost.total()
+    );
+    // Per-query metric namespace exists, service-internal meters stay
+    // global, and the tenant rollup mirrors the query's namespace.
+    let m = env.metrics();
+    assert!(m.get("q0.lambda.invocations") == 0, "service meters must stay global");
+    assert!(m.get("lambda.invocations") > 0);
+    let edge = "shuffle.edge.s0-s1.msgs";
+    assert!(m.get(&format!("q0.{edge}")) > 0, "query-scoped driver metrics");
+    assert_eq!(
+        m.get(&format!("tenant.acme.{edge}")),
+        m.get(&format!("q0.{edge}")),
+        "tenant rollup mirrors the query scope"
+    );
+}
+
+#[test]
+fn admission_queue_rejects_with_typed_error() {
+    let mut cfg = modeled_cfg();
+    cfg.flint.service.max_queued = 2;
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env);
+    let sc = service.session("acme");
+    let rdd = hour_histogram(&sc);
+    service.submit("acme", &rdd, Action::Count).unwrap();
+    service.submit("globex", &rdd, Action::Count).unwrap();
+    let err = service.submit("initech", &rdd, Action::Count).unwrap_err();
+    assert_eq!(err, ServiceError::QueueFull { queued: 2, limit: 2 });
+    assert!(err.to_string().contains("max_queued"), "{err}");
+    // Draining the queue re-opens admission.
+    service.run().unwrap();
+    assert_eq!(service.queued(), 0);
+    service.submit("initech", &rdd, Action::Count).unwrap();
+}
+
+/// `n` copies of an equal one-stage query: `tasks` × 1 s each.
+fn equal_queries(n: usize, tasks: usize, weight: f64) -> Vec<ServiceQuerySpec> {
+    (0..n)
+        .map(|_| ServiceQuerySpec {
+            stages: vec![StageSpec {
+                id: 0,
+                parents: vec![],
+                task_durations: vec![1.0; tasks],
+                backups: vec![],
+                overhead_s: 0.0,
+            }],
+            arrival_s: 0.0,
+            weight,
+        })
+        .collect()
+}
+
+#[test]
+fn fair_splits_the_pool_within_one_task_and_beats_fifo_tail() {
+    // 4 queries × 4 tasks on 8 slots: each query alone uses half the
+    // pool, so FIFO head-of-line blocking wastes slots while fair
+    // packs them.
+    let queries = equal_queries(4, 4, 1.0);
+    let fifo =
+        schedule_service(&queries, 8, ScheduleMode::Pipelined, ServicePolicy::Fifo, None);
+    let fair =
+        schedule_service(&queries, 8, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+    let fifo_worst =
+        fifo.queries.iter().map(|w| w.latency_s).fold(0.0_f64, f64::max);
+    let fair_worst =
+        fair.queries.iter().map(|w| w.latency_s).fold(0.0_f64, f64::max);
+    assert!(
+        fair_worst + EPS < fifo_worst,
+        "fair tail {fair_worst} must beat fifo tail {fifo_worst}"
+    );
+    // Work conservation: total work 16 task-seconds over 8 slots.
+    assert!((fair.makespan_s - 2.0).abs() < EPS, "{}", fair.makespan_s);
+
+    // Saturation fairness bound: 2 queries that could each fill the
+    // pool get N/num_tenants slots each, so equal work finishes within
+    // one task duration of each other — no tenant starves.
+    let sat = equal_queries(2, 8, 1.0);
+    let out = schedule_service(&sat, 8, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+    let l0 = out.queries[0].latency_s;
+    let l1 = out.queries[1].latency_s;
+    assert!((l0 - l1).abs() <= 1.0 + EPS, "fair split: {l0} vs {l1}");
+    assert!((out.makespan_s - 2.0).abs() < EPS, "work-conserving: {}", out.makespan_s);
+    assert!(l0.max(l1) <= 2.0 + EPS, "neither tenant exceeds its share for long");
+}
+
+#[test]
+fn weighted_policy_prioritizes_heavy_tenants() {
+    // Same demand, weights 3 vs 1: the heavy tenant holds ~3/4 of the
+    // pool under contention and must finish strictly first. (Enough
+    // work per query that the steady-state share dominates the finish
+    // times — tiny queries all end on the same round.)
+    let mut queries = equal_queries(2, 24, 1.0);
+    queries[0].weight = 3.0;
+    let out =
+        schedule_service(&queries, 8, ScheduleMode::Pipelined, ServicePolicy::Weighted, None);
+    let heavy = out.queries[0].latency_s;
+    let light = out.queries[1].latency_s;
+    assert!(
+        heavy + EPS < light,
+        "weight-3 tenant ({heavy}s) must beat weight-1 ({light}s)"
+    );
+}
+
+#[test]
+fn predictor_suppresses_backups_on_demonstrably_fast_containers() {
+    let mut cfg = modeled_cfg();
+    cfg.sim.straggler_containers = 64; // container-affinity mode
+    cfg.flint.speculation.enabled = true;
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env.clone());
+    service.prewarm();
+    let sc = service.session("acme");
+    let rdd = hour_histogram(&sc);
+
+    // Query 0: clean run — builds per-container history (every
+    // container observed near ratio 1.0).
+    service.submit("acme", &rdd, Action::Collect).unwrap();
+    let first = service.run().unwrap();
+    assert_eq!(first.queries[0].speculative_launches, 0);
+    assert!(service.predictor().containers_seen() > 0);
+
+    // Query 1: the same scan task is forced 10× slower. The tail signal
+    // fires, but its container's history says "not slow" — slow work,
+    // not a slow node — so the backup is suppressed.
+    env.failure().force_straggler(0, 0, 0, 10.0);
+    service.submit("acme", &rdd, Action::Collect).unwrap();
+    let second = service.run().unwrap();
+    assert_eq!(
+        second.queries[0].speculative_launches, 0,
+        "backup must be suppressed by container history"
+    );
+    assert!(
+        env.metrics().get("q1.scheduler.speculative_suppressed") >= 1,
+        "suppression is metered: {:?}",
+        env.metrics().snapshot()
+    );
+}
+
+#[test]
+fn service_knobs_unset_leave_single_query_runs_identical() {
+    // The regression pin for "byte-identical when unused": two fresh
+    // environments with the service knobs at their defaults produce
+    // identical reports, and nothing leaks service namespaces into the
+    // metrics registry.
+    let cfg = modeled_cfg();
+    assert_eq!(cfg.flint.service, flint::config::ServiceParams::default());
+    let run = || {
+        let env = SimEnv::new(cfg.clone());
+        generate_taxi_dataset(&env, "trips", cfg.data.trips);
+        let sc = FlintContext::new(env.clone());
+        sc.prewarm();
+        let report = sc.run(&hour_histogram(&sc), Action::Collect).unwrap();
+        let metrics = env.metrics().snapshot();
+        (format!("{report:?}"), metrics)
+    };
+    let (a, am) = run();
+    let (b, bm) = run();
+    assert_eq!(a, b, "single-query reports must be deterministic");
+    assert_eq!(am, bm, "metrics must be deterministic");
+    assert!(
+        am.iter().all(|(k, _)| !k.starts_with("q0.") && !k.starts_with("tenant.")),
+        "no service namespaces on the single-query path: {am:?}"
+    );
+}

@@ -184,6 +184,8 @@ fn multi_parent_union_plan_executes_and_overlaps() {
         lambda: true,
         host_parallelism: 4,
         schedule: ScheduleMode::Pipelined,
+        bill_idle: true,
+        predictor: None,
     };
     let out = run_plan(&env, None, &plan, &params).unwrap();
 
