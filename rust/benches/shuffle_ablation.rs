@@ -4,13 +4,22 @@
 //! backend under both the serial barrier clock and the pipelined DAG
 //! scheduler (both latencies come from the same execution, so the pair
 //! is exact). Also sweeps the A6 wire-codec byte ratio (rows vs
-//! columnar chunks) and the A7 stats-based scan-pruning GET counts;
-//! `--smoke` mode (CI) runs a small dataset and exits non-zero if the
-//! columnar codec fails to shrink any shuffling Table I query or Q6J,
-//! or if pruning stops skipping GETs — so a codec or pruning regression
-//! fails PRs instead of waiting for a nightly bench run.
+//! columnar chunks) and the A7 stats-based scan-pruning GET counts,
+//! plus the A9 SQL-optimizer ablation (every Table I query compiled
+//! from SQL with `flint.sql.optimizer` on vs off, and the cost-based
+//! join planner checked against the measured A5 crossover); `--smoke`
+//! mode (CI) runs a small dataset and exits non-zero if the columnar
+//! codec fails to shrink any shuffling Table I query or Q6J, if
+//! pruning stops skipping GETs, if optimizer-on ever loses to
+//! optimizer-off on any SQL query, or if the planner's broadcast-vs-
+//! shuffle pick disagrees with the measured winner — so a codec,
+//! pruning, or optimizer regression fails PRs instead of waiting for a
+//! nightly bench run.
 
-use flint::bench::micro::{codec_byte_ratio, join_crossover, pruning_ablation, shuffle_ablation};
+use flint::bench::micro::{
+    codec_byte_ratio, join_crossover, pruning_ablation, shuffle_ablation, sql_cbo_agreement,
+    sql_optimizer_ablation,
+};
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
 use flint::util::json::Json;
@@ -73,6 +82,65 @@ fn main() {
         );
         failed = true;
     }
+    // A9 — SQL optimizer ablation: every Table I query from its SQL
+    // text, `flint.sql.optimizer` on vs off (oracle-checked inside the
+    // harness; identical answers enforced there too).
+    println!("\n## A9 — SQL optimizer ablation (Table I queries from SQL)\n");
+    println!("| query | join pick | opt on (s) | opt off (s) | on $ | off $ |");
+    println!("|---|---|---|---|---|---|");
+    let sql_rows = sql_optimizer_ablation(&cfg, trips).expect("sql ablation");
+    let mut sql_json = Vec::new();
+    for r in &sql_rows {
+        println!(
+            "| {} | {} | {:.2} | {:.2} | {:.4} | {:.4} |",
+            r.query,
+            r.join_strategy.unwrap_or("-"),
+            r.on_latency_s,
+            r.off_latency_s,
+            r.on_usd,
+            r.off_usd
+        );
+        if r.on_latency_s > r.off_latency_s * 1.02 + 1e-6 {
+            eprintln!(
+                "REGRESSION: {} optimizer-on {:.3}s lost to optimizer-off {:.3}s",
+                r.query, r.on_latency_s, r.off_latency_s
+            );
+            failed = true;
+        }
+        sql_json.push(
+            Json::obj()
+                .set("query", r.query.name())
+                .set("join", r.join_strategy.unwrap_or("-"))
+                .set("on_latency_s", r.on_latency_s)
+                .set("off_latency_s", r.off_latency_s)
+                .set("on_usd", r.on_usd)
+                .set("off_usd", r.off_usd),
+        );
+    }
+
+    // A9 agreement check: the cost model's broadcast-vs-shuffle pick vs
+    // the measured A5 winner, one dimension size on each side of the
+    // crossover.
+    let agree_trips = trips.min(50_000);
+    let agreement =
+        sql_cbo_agreement(&cfg, agree_trips, &[0, 64 * 1024 * 1024]).expect("cbo agreement");
+    println!("\ncost-model agreement with the measured A5 winner:");
+    for (dim_bytes, measured, planned) in &agreement {
+        println!(
+            "  dim {dim_bytes:>10} B: measured {} / planned {}",
+            measured.name(),
+            planned.name()
+        );
+        if measured != planned {
+            eprintln!(
+                "REGRESSION: at {dim_bytes} B dim the planner picked {} but {} won",
+                planned.name(),
+                measured.name()
+            );
+            failed = true;
+        }
+    }
+
     println!(
         "\n{}",
         Json::obj()
@@ -82,11 +150,13 @@ fn main() {
             .set("pruned_gets", pruned_gets)
             .set("unpruned_gets", unpruned_gets)
             .set("splits_pruned", skipped)
+            .set("sql_optimizer", Json::Arr(sql_json))
             .encode()
     );
     if smoke {
-        // CI smoke stops here: the codec/pruning gates above are the
-        // point; the latency sweeps below are nightly-bench material.
+        // CI smoke stops here: the codec/pruning/optimizer gates above
+        // are the point; the latency sweeps below are nightly-bench
+        // material.
         if failed {
             std::process::exit(1);
         }

@@ -6,13 +6,15 @@
 
 use crate::compute::oracle;
 use crate::compute::queries::QueryId;
+use crate::compute::value::Value;
 use crate::config::{FlintConfig, ShuffleBackend, ShuffleCodec};
 use crate::data::weather::WeatherTable;
 use crate::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET};
-use crate::exec::{Engine, FlintEngine};
-use crate::plan::{kernel_plan, StageCompute};
+use crate::exec::{Engine, FlintContext, FlintEngine};
+use crate::plan::{interp, kernel_plan, Action, StageCompute};
 use crate::services::SimEnv;
 use crate::simtime::{ScheduleMode, ServicePolicy};
+use crate::sql::{self, JoinStrategy};
 use anyhow::{anyhow, ensure, Result};
 
 /// M1 — single-stream S3 read throughput: boto-class (Flint) vs
@@ -452,6 +454,133 @@ pub fn concurrency_ablation(
     Ok(out)
 }
 
+/// One Table I query under the SQL frontend, optimizer on vs off.
+#[derive(Debug, Clone)]
+pub struct SqlAblationRow {
+    pub query: QueryId,
+    pub on_latency_s: f64,
+    pub off_latency_s: f64,
+    pub on_usd: f64,
+    pub off_usd: f64,
+    /// The optimizer's join pick, when the query joins.
+    pub join_strategy: Option<&'static str>,
+}
+
+/// Lineage-interpreter line source over the simulated object store —
+/// the oracle side of the SQL ablation reads the exact bytes the
+/// engine scans.
+fn s3_lines(env: &SimEnv) -> impl Fn(&str, &str) -> Vec<String> + '_ {
+    move |bucket, prefix| {
+        let mut listed = env.s3().list(bucket, prefix).unwrap_or_default();
+        listed.sort();
+        let mut out = Vec::new();
+        for (key, _) in listed {
+            if let Ok((obj, _)) = env.s3().get_object(bucket, &key, env.flint_read_profile()) {
+                out.extend(String::from_utf8_lossy(obj.bytes()).lines().map(String::from));
+            }
+        }
+        out
+    }
+}
+
+/// A9 — SQL optimizer ablation: every Table I query (plus Q6J, forced
+/// through the shuffle with `broadcast_threshold_bytes = 0`) compiled
+/// from its SQL text twice, `flint.sql.optimizer` on vs off, in fresh
+/// environments. Both runs are oracle-checked against the lineage
+/// interpreter over the same objects, and both settings must produce
+/// identical shaped rows — the rewriter and the cost-based planner may
+/// only change *how* a query runs, never its answer. Returns one row
+/// per query with the two latencies/costs and the join pick.
+pub fn sql_optimizer_ablation(cfg: &FlintConfig, trips: u64) -> Result<Vec<SqlAblationRow>> {
+    let mut out = Vec::new();
+    for q in QueryId::ALL_WITH_JOINS {
+        let text = sql::table1_sql(q);
+        let mut lat = [0.0f64; 2];
+        let mut usd = [0.0f64; 2];
+        let mut rows_by_setting: Vec<Vec<Vec<Value>>> = Vec::new();
+        let mut join_strategy = None;
+        for (i, optimizer) in [true, false].into_iter().enumerate() {
+            let mut c = cfg.clone();
+            c.flint.sql.optimizer = optimizer;
+            if q == QueryId::Q6J {
+                c.flint.sql.broadcast_threshold_bytes = 0;
+            }
+            let env = SimEnv::new(c);
+            let ds = generate_taxi_dataset(&env, "trips", trips);
+            let sc = FlintContext::new(env.clone());
+            sc.prewarm();
+            sc.register_manifest(&ds);
+            let job = sc.sql_job(text).map_err(|e| anyhow!("{q} compile: {e}"))?;
+            if optimizer {
+                join_strategy = job.choice.join.as_ref().map(|j| j.strategy.name());
+            }
+            // One execution yields both the measurement and the rows.
+            let plan = sc.lower(&job.rdd, Action::Collect);
+            let engine = sc.flint_engine().expect("serverless session");
+            let before = env.cost().snapshot();
+            let run = engine.run_plan_raw(&plan)?;
+            let cost = env.cost().snapshot().since(&before);
+            lat[i] = run.latency_s;
+            usd[i] = cost.total();
+            let got = job.shape(run.out.into_values()?);
+            // Oracle: interpret the same lineage over the same lines
+            // (outside the measured window).
+            let lines = s3_lines(&env);
+            let expect = job.shape(interp::interpret(&job.rdd, &lines));
+            ensure!(
+                got == expect,
+                "{q} optimizer={optimizer}: engine rows diverge from the interpreter oracle"
+            );
+            rows_by_setting.push(got);
+        }
+        ensure!(
+            rows_by_setting[0] == rows_by_setting[1],
+            "{q}: the optimizer changed the answer"
+        );
+        out.push(SqlAblationRow {
+            query: q,
+            on_latency_s: lat[0],
+            off_latency_s: lat[1],
+            on_usd: usd[0],
+            off_usd: usd[1],
+            join_strategy,
+        });
+    }
+    Ok(out)
+}
+
+/// A9 companion — does the planner's cost model agree with
+/// measurement? Reuses the A5 sweep: at each dimension-table target the
+/// Q6/Q6J pair is actually run (measured winner), then
+/// `choose_join_strategy` is asked what it would pick for those byte
+/// sizes. Returns `(dim_bytes, measured, planned)` rows; calibration
+/// holds when the two columns agree on both sides of the crossover.
+pub fn sql_cbo_agreement(
+    cfg: &FlintConfig,
+    trips: u64,
+    dim_targets: &[u64],
+) -> Result<Vec<(u64, JoinStrategy, JoinStrategy)>> {
+    let (rows, _) = join_crossover(cfg, trips, dim_targets)?;
+    // Probe-side bytes from one generated layout (the dataset generator
+    // is seeded, so every sweep env sees the same trips objects).
+    let env = SimEnv::new(cfg.clone());
+    let ds = generate_taxi_dataset(&env, "trips", trips);
+    let probe_bytes: u64 = ds.objects.iter().map(|(_, b)| *b).sum();
+    Ok(rows
+        .into_iter()
+        .map(|r| {
+            let measured = if r.shuffle_s < r.broadcast_s {
+                JoinStrategy::Shuffle
+            } else {
+                JoinStrategy::Broadcast
+            };
+            let (planned, _, _) =
+                crate::sql::physical::choose_join_strategy(cfg, probe_bytes, r.dim_bytes);
+            (r.dim_bytes, measured, planned)
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -581,6 +710,63 @@ mod tests {
             assert!(rows_b > 0, "{q}: expected shuffle traffic under the rows codec");
             assert!(col_b < rows_b, "{q}: columnar {col_b} B must beat rows {rows_b} B");
         }
+    }
+
+    #[test]
+    fn a9_sql_optimizer_never_loses() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 512 * 1024;
+        let rows = sql_optimizer_ablation(&cfg, 10_000).unwrap();
+        assert_eq!(rows.len(), QueryId::ALL_WITH_JOINS.len());
+        for r in &rows {
+            // Harness-level oracle checks already ran; here pin the
+            // ablation's claim: the optimizer never makes a query
+            // slower (small tolerance for schedule jitter).
+            assert!(
+                r.on_latency_s <= r.off_latency_s * 1.02 + 1e-6,
+                "{}: optimizer-on {:.3}s lost to off {:.3}s",
+                r.query,
+                r.on_latency_s,
+                r.off_latency_s
+            );
+        }
+        // The joins got a strategy; the scans did not.
+        let q6 = rows.iter().find(|r| r.query == QueryId::Q6).unwrap();
+        assert_eq!(q6.join_strategy, Some("broadcast"), "tiny weather table must broadcast");
+        let q6j = rows.iter().find(|r| r.query == QueryId::Q6J).unwrap();
+        assert_eq!(q6j.join_strategy, Some("shuffle"), "threshold 0 must force the shuffle");
+        assert!(rows.iter().filter(|r| r.join_strategy.is_none()).count() >= 6);
+        // Q6 under the broadcast plan must strictly beat the forced
+        // shuffle plan (same SQL text, same data): the CBO's pick pays.
+        assert!(
+            q6.on_latency_s < q6j.on_latency_s,
+            "broadcast Q6 {:.3}s vs forced-shuffle Q6J {:.3}s",
+            q6.on_latency_s,
+            q6j.on_latency_s
+        );
+    }
+
+    #[test]
+    fn a9_cost_model_agrees_with_measured_crossover() {
+        let mut cfg = FlintConfig::for_tests();
+        cfg.data.object_bytes = 512 * 1024;
+        cfg.flint.input_split_bytes = 256 * 1024;
+        // Same shape as the A5 test: small stage overheads so the
+        // broadcast's read cost isn't buried at test scale.
+        cfg.sim.scheduler_overhead_per_stage_s = 0.02;
+        cfg.sim.scheduler_overhead_per_task_s = 0.0002;
+        let rows = sql_cbo_agreement(&cfg, 15_000, &[0, 32 * 1024 * 1024]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for (dim_bytes, measured, planned) in &rows {
+            assert_eq!(
+                measured, planned,
+                "at {dim_bytes} B dim the planner picked {planned:?} but {measured:?} won"
+            );
+        }
+        // And the two sides of the crossover really differ.
+        assert_eq!(rows[0].1, JoinStrategy::Broadcast);
+        assert_eq!(rows[1].1, JoinStrategy::Shuffle);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Minimal command-line parsing (clap is not in the offline vendor set).
 //!
-//! Grammar: `flint <command> [--key value | --key=value | --flag] ...`.
-//! Repeated `--set k=v` accumulate into config overrides.
+//! Grammar: `flint <command> [positional ...] [--key value | --key=value
+//! | --flag] ...`. Repeated `--set k=v` accumulate into config
+//! overrides. Positional operands (e.g. the query text of `flint sql
+//! "SELECT …"`) are collected in order; commands that take none reject
+//! them at dispatch.
 
 use std::collections::BTreeMap;
 
@@ -9,6 +12,8 @@ use std::collections::BTreeMap;
 #[derive(Debug, Default)]
 pub struct Args {
     pub command: Option<String>,
+    /// Bare operands after the command, in order.
+    pub positional: Vec<String>,
     pub options: BTreeMap<String, Vec<String>>,
 }
 
@@ -24,7 +29,8 @@ impl Args {
         }
         while let Some(tok) = raw.next() {
             let Some(key) = tok.strip_prefix("--") else {
-                return Err(format!("unexpected positional argument `{tok}`"));
+                args.positional.push(tok);
+                continue;
             };
             if let Some((k, v)) = key.split_once('=') {
                 args.options.entry(k.to_string()).or_default().push(v.to_string());
@@ -113,8 +119,20 @@ mod tests {
     }
 
     #[test]
-    fn rejects_stray_positionals() {
-        assert!(Args::parse(["run".into(), "oops".into()].into_iter()).is_err());
+    fn collects_positionals() {
+        // One shell-quoted operand arrives as one element (the `flint
+        // sql "<query>"` path); commands that take no operands check
+        // `positional` at dispatch and reject.
+        let a = Args::parse(
+            ["sql".into(), "SELECT COUNT(*) FROM trips".into(), "--trips".into(), "9".into()]
+                .into_iter(),
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("sql"));
+        assert_eq!(a.positional, vec!["SELECT COUNT(*) FROM trips"]);
+        assert_eq!(a.get("trips"), Some("9"));
+        let b = Args::parse(["run".into(), "oops".into()].into_iter()).unwrap();
+        assert_eq!(b.positional, vec!["oops"]);
     }
 
     #[test]

@@ -209,6 +209,27 @@ impl ServiceParams {
     }
 }
 
+/// SQL frontend knobs (`flint.sql.*`), read by `sql::compile`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SqlParams {
+    /// `flint.sql.optimizer = on|off`. Off lowers the analyzed plan
+    /// verbatim: no predicate/projection pushdown, no constant folding,
+    /// shuffle joins and default partition counts everywhere — the
+    /// ablation baseline for bench A9.
+    pub optimizer: bool,
+    /// Broadcast-join eligibility cap: a build side estimated larger
+    /// than this many bytes always shuffles
+    /// (`flint.sql.broadcast_threshold_bytes`; 0 forces every join
+    /// through the shuffle).
+    pub broadcast_threshold_bytes: u64,
+}
+
+impl Default for SqlParams {
+    fn default() -> Self {
+        SqlParams { optimizer: true, broadcast_threshold_bytes: 64 * 1024 * 1024 }
+    }
+}
+
 /// Flint engine knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlintParams {
@@ -244,6 +265,8 @@ pub struct FlintParams {
     pub speculation: SpeculationParams,
     /// Multi-tenant service layer (`flint.service.*`).
     pub service: ServiceParams,
+    /// SQL frontend (`flint.sql.*`).
+    pub sql: SqlParams,
     /// Enable sequence-id dedup of SQS messages (§VI).
     pub dedup_enabled: bool,
     /// Rows per columnar batch handed to the PJRT kernels.
@@ -301,6 +324,7 @@ impl Default for FlintParams {
             scheduler: ScheduleMode::Pipelined,
             speculation: SpeculationParams::default(),
             service: ServiceParams::default(),
+            sql: SqlParams::default(),
             dedup_enabled: true,
             batch_rows: 8192,
             use_pjrt: true,
@@ -464,6 +488,15 @@ impl FlintConfig {
                                 w
                             }),
                     )
+                    .set(
+                        "sql",
+                        Json::obj()
+                            .set("optimizer", self.flint.sql.optimizer)
+                            .set(
+                                "broadcast_threshold_bytes",
+                                self.flint.sql.broadcast_threshold_bytes,
+                            ),
+                    )
                     .set("dedup_enabled", self.flint.dedup_enabled)
                     .set("batch_rows", self.flint.batch_rows)
                     .set("use_pjrt", self.flint.use_pjrt),
@@ -562,6 +595,51 @@ mod tests {
         assert_eq!(c.flint.batch_rows, 512, "failed override must not apply");
         assert!(c.set("flint.batch_rows", "-3").is_err());
         assert!(c.set("flint.batch_rows", "many").is_err());
+    }
+
+    #[test]
+    fn sql_knobs_parse_and_round_trip() {
+        let mut c = FlintConfig::default();
+        assert!(c.flint.sql.optimizer, "optimizer is on by default");
+        assert_eq!(c.flint.sql.broadcast_threshold_bytes, 64 * 1024 * 1024);
+
+        c.set("flint.sql.optimizer", "off").unwrap();
+        assert!(!c.flint.sql.optimizer);
+        c.set("flint.sql.optimizer", "on").unwrap();
+        assert!(c.flint.sql.optimizer);
+        c.set("flint.sql.optimizer", "false").unwrap();
+        assert!(!c.flint.sql.optimizer);
+        c.set("flint.sql.optimizer", "true").unwrap();
+        assert!(c.flint.sql.optimizer);
+        assert!(c.set("flint.sql.optimizer", "maybe").is_err());
+
+        c.set("flint.sql.broadcast_threshold_bytes", "0").unwrap();
+        assert_eq!(c.flint.sql.broadcast_threshold_bytes, 0, "0 is legal: forces shuffle joins");
+        c.set("flint.sql.broadcast_threshold_bytes", "1048576").unwrap();
+        assert_eq!(c.flint.sql.broadcast_threshold_bytes, 1 << 20);
+        assert!(c.set("flint.sql.broadcast_threshold_bytes", "-1").is_err());
+        assert!(c.set("flint.sql.broadcast_threshold_bytes", "huge").is_err());
+        assert_eq!(
+            c.flint.sql.broadcast_threshold_bytes,
+            1 << 20,
+            "failed override must not apply"
+        );
+
+        // TOML layer reaches the same fields.
+        let mut t = FlintConfig::default();
+        parse::apply_toml(
+            &mut t,
+            "[flint.sql]\noptimizer = \"off\"\nbroadcast_threshold_bytes = 4096\n",
+        )
+        .unwrap();
+        assert!(!t.flint.sql.optimizer);
+        assert_eq!(t.flint.sql.broadcast_threshold_bytes, 4096);
+
+        // And the JSON dump round-trips what was set.
+        let j = t.to_json();
+        let sql = j.get("flint").unwrap().get("sql").unwrap();
+        assert_eq!(sql.get("optimizer").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(sql.get("broadcast_threshold_bytes").and_then(|v| v.as_u64()), Some(4096));
     }
 
     #[test]

@@ -179,6 +179,22 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
             }
             cfg.flint.service.weights.insert(tenant.to_string(), w);
         }
+        "flint.sql.optimizer" => {
+            cfg.flint.sql.optimizer = match value {
+                "on" | "true" => true,
+                "off" | "false" => false,
+                other => {
+                    return Err(format!(
+                        "bad value `{other}` for `flint.sql.optimizer` (want on|off)"
+                    ))
+                }
+            }
+        }
+        "flint.sql.broadcast_threshold_bytes" => {
+            // u64, so any non-negative integer; 0 is meaningful (force
+            // shuffle joins — the Q6J plan shape).
+            parse_to!(cfg.flint.sql.broadcast_threshold_bytes, value, key)
+        }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
         "flint.batch_rows" => {
             // `ColumnBatch::with_capacity` requires a positive capacity;

@@ -283,6 +283,20 @@ impl FlintService {
         Ok(qid)
     }
 
+    /// Compile a SQL statement against a session bound to `tenant` and
+    /// submit the lowered lineage to the shared pool (arriving at
+    /// service time 0, collecting its rows). Both failure modes — SQL
+    /// frontend errors and `QueueFull` rejection — surface as typed
+    /// errors inside the `anyhow` envelope. The returned query id's
+    /// rows come back unshaped (partition order, no ORDER BY/LIMIT);
+    /// use [`FlintContext::sql`] on a [`FlintService::session`] for
+    /// fully shaped standalone results.
+    pub fn submit_sql(&self, tenant: &str, text: &str) -> Result<usize> {
+        let sc = self.session(tenant);
+        let job = crate::sql::compile(&sc, text)?;
+        Ok(self.submit(tenant, &job.rdd, Action::Collect)?)
+    }
+
     /// Queries currently admitted and waiting for [`FlintService::run`].
     pub fn queued(&self) -> usize {
         self.state.lock().expect("service state").pending.len()

@@ -16,10 +16,15 @@
 //! by running it on several contexts ([`FlintContext::collect`] accepts
 //! unbound lineages for exactly that).
 //!
-//! `text_file` sources resolve their input splits by listing the
-//! simulated object store; datasets whose manifests were built
-//! out-of-band (no listable objects) can be registered with
-//! [`FlintContext::register_manifest`] as a fallback.
+//! `text_file` sources resolve their input splits from a registered
+//! dataset manifest when one covers the source (manifests carry the
+//! per-object statistics that power `flint.scan.prune`), falling back
+//! to listing the simulated object store. See
+//! [`FlintContext::register_manifest`].
+//!
+//! The session is also the SQL entry point: [`FlintContext::sql`] runs
+//! `SELECT …`/`EXPLAIN SELECT …` text through the `sql` frontend,
+//! which lowers onto the same `Rdd` lineage API.
 
 use crate::compute::value::Value;
 use crate::data::Dataset;
@@ -28,6 +33,7 @@ use crate::exec::flint::FlintEngine;
 use crate::exec::QueryReport;
 use crate::plan::{dag, Action, ActionOut, InputSplit, PhysicalPlan, Rdd, SessionBinding};
 use crate::services::SimEnv;
+use crate::sql::{SqlError, SqlJob, SqlResult};
 use anyhow::Result;
 use std::sync::{Arc, Mutex};
 
@@ -73,16 +79,19 @@ struct SessionInner {
 }
 
 impl SessionBinding for SessionInner {
-    /// Resolve a source by listing `bucket/prefix`; multi-source
-    /// lineages (`cogroup`/`join` across prefixes) each resolve their
-    /// own objects. An empty listing falls back to a registered
-    /// manifest for that exact source — any *other* empty source scans
-    /// nothing rather than silently substituting the wrong data.
+    /// Resolve a source's input splits; multi-source lineages
+    /// (`cogroup`/`join` across prefixes) each resolve their own
+    /// objects. A registered manifest for that exact source wins over a
+    /// raw bucket listing: a manifest carries per-object day/month
+    /// statistics (the `flint.scan.prune` signal), a listing only names
+    /// and sizes — preferring the listing would silently disable split
+    /// pruning for every manifest-backed source. Sources with neither a
+    /// manifest nor listed objects scan nothing rather than
+    /// substituting the wrong data.
     fn input_splits(&self, bucket: &str, prefix: &str) -> Vec<InputSplit> {
         let env = self.backend.env();
         let split_bytes = env.config().flint.input_split_bytes;
-        let listed = env.s3().list(bucket, prefix).unwrap_or_default();
-        if listed.is_empty() {
+        {
             let manifests = self.manifests.lock().expect("session manifests");
             for ds in manifests.iter() {
                 if ds.bucket == bucket
@@ -91,8 +100,8 @@ impl SessionBinding for SessionInner {
                     return dag::input_splits(ds, split_bytes);
                 }
             }
-            return Vec::new();
         }
+        let listed = env.s3().list(bucket, prefix).unwrap_or_default();
         let mut splits = Vec::new();
         for (key, size) in listed {
             for (start, end) in crate::compute::csv::split_ranges(size, split_bytes) {
@@ -232,5 +241,40 @@ impl FlintContext {
             .backend
             .run_plan_raw(&self.lower(rdd, Action::Count))?
             .into_count()
+    }
+
+    /// Resolve a source's input splits with this session's policy
+    /// (manifest-first). The SQL planner's table-size estimates read
+    /// this.
+    pub fn input_splits(&self, bucket: &str, prefix: &str) -> Vec<InputSplit> {
+        SessionBinding::input_splits(self.inner.as_ref(), bucket, prefix)
+    }
+
+    /// Compile a SQL statement against this session without running it.
+    pub fn sql_job(&self, text: &str) -> std::result::Result<SqlJob, SqlError> {
+        crate::sql::compile(self, text)
+    }
+
+    /// The full EXPLAIN rendering for a SQL statement (logical →
+    /// optimized → physical → compiled stage DAG).
+    pub fn sql_explain(&self, text: &str) -> std::result::Result<String, SqlError> {
+        Ok(self.sql_job(text)?.explain_text())
+    }
+
+    /// Run a SQL statement on this session. `EXPLAIN SELECT …` returns
+    /// the plan rendering as rows instead of executing.
+    pub fn sql(&self, text: &str) -> Result<SqlResult> {
+        let job = self.sql_job(text)?;
+        if job.is_explain {
+            return Ok(SqlResult {
+                columns: vec!["plan".to_string()],
+                rows: job
+                    .explain_text()
+                    .lines()
+                    .map(|l| vec![Value::Str(l.to_string())])
+                    .collect(),
+            });
+        }
+        job.collect()
     }
 }

@@ -29,6 +29,7 @@ pub mod plan;
 pub mod runtime;
 pub mod services;
 pub mod simtime;
+pub mod sql;
 pub mod util;
 
 /// Convenient re-exports for the common driver workflow.
@@ -42,4 +43,5 @@ pub mod prelude {
     pub use crate::exec::{Engine, QueryReport};
     pub use crate::plan::{Action, Rdd};
     pub use crate::services::SimEnv;
+    pub use crate::sql::{SqlError, SqlResult};
 }

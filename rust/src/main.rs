@@ -6,6 +6,7 @@
 //! flint explain  --query Q1 [--no-run] [--generic]    print the stage DAG + its barrier/pipelined schedule windows
 //! flint table1   [--trips N] [--trials N] [--paper]   regenerate Table I
 //! flint micro    --bench s3|coldstart|shuffle         the in-text microbenchmarks
+//! flint sql      "<query>" [--trips N]                run SQL (or EXPLAIN SELECT …)
 //! flint config   [--config file.toml] [--set k=v]...  print the effective config
 //! ```
 //!
@@ -70,22 +71,29 @@ fn load_config(args: &Args) -> Result<FlintConfig, String> {
 fn real_main() -> Result<(), String> {
     let args = Args::from_env()?;
     let cfg = load_config(&args)?;
+    // Only `sql` takes positional operands (the query text).
+    if args.command.as_deref() != Some("sql") {
+        if let Some(stray) = args.positional.first() {
+            return Err(format!("unexpected positional argument `{stray}`"));
+        }
+    }
     match args.command.as_deref() {
         Some("gen") => cmd_gen(&args, cfg),
         Some("run") => cmd_run(&args, cfg),
         Some("explain") => cmd_explain(&args, cfg),
         Some("table1") => cmd_table1(&args, cfg),
         Some("micro") => cmd_micro(&args, cfg),
+        Some("sql") => cmd_sql(&args, cfg),
         Some("config") => {
             println!("{}", cfg.to_json().encode());
             Ok(())
         }
         Some(other) => Err(format!(
-            "unknown command `{other}` (try: gen run explain table1 micro config)"
+            "unknown command `{other}` (try: gen run explain table1 micro sql config)"
         )),
         None => {
             println!("flint — serverless data analytics (Kim & Lin 2018, reproduced)");
-            println!("commands: gen | run | explain | table1 | micro | config");
+            println!("commands: gen | run | explain | table1 | micro | sql | config");
             Ok(())
         }
     }
@@ -319,6 +327,37 @@ fn cmd_table1(args: &Args, cfg: FlintConfig) -> Result<(), String> {
     println!("{}", flint::bench::table1::render_measured(&rows));
     if opts.paper_scale {
         println!("{}", flint::bench::table1::render_paper_scale(&rows));
+    }
+    Ok(())
+}
+
+/// `flint sql "<query>"` — generate the dataset, register its manifest
+/// (so the planner sees table sizes and scan pruning sees per-object
+/// stats), then run the query on a serverless session. `EXPLAIN
+/// SELECT …` prints the plan pipeline instead of executing.
+fn cmd_sql(args: &Args, cfg: FlintConfig) -> Result<(), String> {
+    let text = match args.positional.as_slice() {
+        [one] => one.clone(),
+        [] => return Err("sql: expected a query, e.g. flint sql \"SELECT COUNT(*) FROM trips\"".into()),
+        many => many.join(" "), // unquoted queries arrive as many operands
+    };
+    let trips = args.get_parsed("trips", cfg.data.trips)?;
+    let env = SimEnv::new(cfg);
+    eprintln!("generating {trips} trips...");
+    let ds = generate_taxi_dataset(&env, "trips", trips);
+    let sc = flint::exec::FlintContext::new(env);
+    sc.register_manifest(&ds);
+    let result = sc.sql(&text).map_err(|e| format!("{e:#}"))?;
+    if result.columns == ["plan"] {
+        // EXPLAIN: the rows are the plan rendering, print them bare.
+        for row in &result.rows {
+            if let Some(flint::compute::value::Value::Str(line)) = row.first() {
+                println!("{line}");
+            }
+        }
+    } else {
+        print!("{}", result.render());
+        println!("({} rows)", result.rows.len());
     }
     Ok(())
 }

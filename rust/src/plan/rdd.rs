@@ -94,16 +94,22 @@ impl DynOp {
         rec(ops, input, out);
     }
 
-    /// The day predicate a scan may prune with: the intersection of the
-    /// *leading* `DayRange` ops in the chain. Only leading ops are sound
-    /// — behind a `Map`/`FlatMap` the records are no longer the raw CSV
-    /// lines the manifest statistics describe, and behind an opaque
-    /// `Filter` the op was planted against filtered records (still
-    /// line-shaped, but keep the rule simple and obviously safe).
+    /// The day predicate a scan may prune with: the intersection of every
+    /// `DayRange` op reachable from the head of the chain through other
+    /// line-preserving ops. A `DayRange` commutes past a preceding opaque
+    /// `Filter`: a filter only *drops* records, so the survivors are
+    /// still the raw CSV lines the manifest statistics describe, and a
+    /// split disjoint from the range produces nothing either way. The
+    /// walk stops at `Map`/`FlatMap` — behind those the records are no
+    /// longer raw lines, so a later range says nothing about the split.
     pub fn leading_day_range(ops: &[DynOp]) -> Option<(i32, i32)> {
         let mut range: Option<(i32, i32)> = None;
         for op in ops {
-            let DynOp::DayRange { min_day, max_day } = op else { break };
+            let (min_day, max_day) = match op {
+                DynOp::DayRange { min_day, max_day } => (min_day, max_day),
+                DynOp::Filter(_) => continue,
+                DynOp::Map(_) | DynOp::FlatMap(_) => break,
+            };
             range = Some(match range {
                 None => (*min_day, *max_day),
                 Some((lo, hi)) => (lo.max(*min_day), hi.min(*max_day)),
@@ -457,16 +463,35 @@ mod tests {
         DynOp::apply_chain(&miss, Value::I64(3), &mut out);
         assert_eq!(out.len(), 1, "out-of-range, unparsable, non-line all dropped");
 
-        // Leading ranges intersect; anything else stops the walk.
+        // Ranges intersect; an opaque Filter is transparent to the walk
+        // (it only drops records, survivors are still raw lines), so the
+        // range behind it still participates — here the conjunction is
+        // unsatisfiable (50..=10), which prunes *every* split, exactly
+        // what an always-empty scan deserves.
         let chain = vec![
             DynOp::DayRange { min_day: 0, max_day: 100 },
             DynOp::DayRange { min_day: 50, max_day: 200 },
             DynOp::Filter(Arc::new(|_| true)),
             DynOp::DayRange { min_day: 0, max_day: 10 },
         ];
-        assert_eq!(DynOp::leading_day_range(&chain), Some((50, 100)));
-        assert_eq!(DynOp::leading_day_range(&chain[2..]), None);
+        assert_eq!(DynOp::leading_day_range(&chain), Some((50, 10)));
+        assert_eq!(DynOp::leading_day_range(&chain[..3]), Some((50, 100)));
+        assert_eq!(DynOp::leading_day_range(&chain[2..]), Some((0, 10)), "commutes past Filter");
         assert_eq!(DynOp::leading_day_range(&[]), None);
+
+        // Map/FlatMap still stop the walk: records behind them are no
+        // longer raw CSV lines, so a later DayRange must not prune.
+        let mapped = vec![
+            DynOp::Map(Arc::new(|v| v)),
+            DynOp::DayRange { min_day: 0, max_day: 10 },
+        ];
+        assert_eq!(DynOp::leading_day_range(&mapped), None);
+        let flat = vec![
+            DynOp::Filter(Arc::new(|_| true)),
+            DynOp::FlatMap(Arc::new(|v| vec![v])),
+            DynOp::DayRange { min_day: 0, max_day: 10 },
+        ];
+        assert_eq!(DynOp::leading_day_range(&flat), None);
     }
 
     #[test]

@@ -1,0 +1,1232 @@
+//! Name resolution and the typed logical plan.
+//!
+//! The catalog is the two schemas the engine ships — the NYC taxi trip
+//! table (`data::schema::TripRecord`, plus the derived `day`/`month`/
+//! `hour`/`credit` columns every Table I query aggregates on) and the
+//! daily weather table (`data::weather`, plus the derived precipitation
+//! `bucket`). Analysis turns the raw AST into [`Scalar`] expressions
+//! over [`Column`]s, splits the WHERE clause into conjuncts, and
+//! classifies the query as a plain projection or a grouped aggregation
+//! with typed [`Aggregate`] slots — everything the rewriter and the
+//! cost-based physical planner downstream operate on.
+
+use crate::sql::lex::SqlError;
+use crate::sql::parse::{AggFunc, BinOp, Expr, SelectItem, SelectQuery, TableRef};
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+
+/// A registered table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Table {
+    Trips,
+    Weather,
+}
+
+impl Table {
+    pub fn name(self) -> &'static str {
+        match self {
+            Table::Trips => "trips",
+            Table::Weather => "weather",
+        }
+    }
+
+    pub fn bucket(self) -> &'static str {
+        crate::data::INPUT_BUCKET
+    }
+
+    /// Object-store prefix the table's CSV objects live under.
+    pub fn prefix(self) -> &'static str {
+        match self {
+            Table::Trips => "trips/",
+            Table::Weather => "weather/",
+        }
+    }
+
+    pub fn resolve(name: &str) -> Option<Table> {
+        if name.eq_ignore_ascii_case("trips") {
+            Some(Table::Trips)
+        } else if name.eq_ignore_ascii_case("weather") {
+            Some(Table::Weather)
+        } else {
+            None
+        }
+    }
+
+    /// Catalog columns in declaration order (`SELECT *` order).
+    pub fn columns(self) -> &'static [Column] {
+        use Column::*;
+        match self {
+            Table::Trips => &[
+                TaxiType,
+                Day,
+                Month,
+                Hour,
+                PassengerCount,
+                TripDistance,
+                PickupLon,
+                PickupLat,
+                DropoffLon,
+                DropoffLat,
+                PaymentType,
+                Credit,
+                FareAmount,
+                TipAmount,
+                TotalAmount,
+            ],
+            Table::Weather => &[WeatherDay, Precip, Bucket],
+        }
+    }
+
+    pub fn lookup(self, name: &str) -> Option<Column> {
+        self.columns().iter().copied().find(|c| c.name().eq_ignore_ascii_case(name))
+    }
+}
+
+/// A resolved column. Trip columns cover the 13 physical CSV fields
+/// plus the derived time (`day`/`month`/`hour`, from the dropoff
+/// datetime — the paper aggregates on dropoff) and payment (`credit`)
+/// columns; weather columns cover the two physical fields plus the
+/// derived precipitation `bucket`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Column {
+    // trips
+    TaxiType,
+    Day,
+    Month,
+    Hour,
+    PassengerCount,
+    TripDistance,
+    PickupLon,
+    PickupLat,
+    DropoffLon,
+    DropoffLat,
+    PaymentType,
+    Credit,
+    FareAmount,
+    TipAmount,
+    TotalAmount,
+    // weather
+    WeatherDay,
+    Precip,
+    Bucket,
+}
+
+impl Column {
+    pub fn table(self) -> Table {
+        match self {
+            Column::WeatherDay | Column::Precip | Column::Bucket => Table::Weather,
+            _ => Table::Trips,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Column::TaxiType => "taxi_type",
+            Column::Day => "day",
+            Column::Month => "month",
+            Column::Hour => "hour",
+            Column::PassengerCount => "passenger_count",
+            Column::TripDistance => "trip_distance",
+            Column::PickupLon => "pickup_lon",
+            Column::PickupLat => "pickup_lat",
+            Column::DropoffLon => "dropoff_lon",
+            Column::DropoffLat => "dropoff_lat",
+            Column::PaymentType => "payment_type",
+            Column::Credit => "credit",
+            Column::FareAmount => "fare_amount",
+            Column::TipAmount => "tip_amount",
+            Column::TotalAmount => "total_amount",
+            Column::WeatherDay => "day",
+            Column::Precip => "precip",
+            Column::Bucket => "bucket",
+        }
+    }
+
+    /// Rendered name — weather columns are prefixed so `day` (trips)
+    /// and `weather.day` stay distinct in EXPLAIN output.
+    pub fn display(self) -> String {
+        match self.table() {
+            Table::Trips => self.name().to_string(),
+            Table::Weather => format!("weather.{}", self.name()),
+        }
+    }
+
+    /// Integer-valued columns (affects output rendering and key typing).
+    pub fn is_int(self) -> bool {
+        !matches!(
+            self,
+            Column::TripDistance
+                | Column::PickupLon
+                | Column::PickupLat
+                | Column::DropoffLon
+                | Column::DropoffLat
+                | Column::FareAmount
+                | Column::TipAmount
+                | Column::TotalAmount
+                | Column::Precip
+        )
+    }
+
+    /// Estimated number of distinct values, where the schema bounds it —
+    /// what the planner sizes aggregation partition counts from.
+    pub fn ndv(self) -> Option<u64> {
+        match self {
+            Column::TaxiType => Some(2),
+            Column::Hour => Some(24),
+            Column::Month => Some(90), // Jan 2009 .. Jun 2016
+            Column::Day | Column::WeatherDay => Some(crate::data::weather::NUM_DAYS as u64),
+            Column::PaymentType => Some(6),
+            Column::Credit => Some(2),
+            Column::Bucket => Some(crate::data::weather::PRECIP_BUCKETS as u64),
+            Column::PassengerCount => Some(8),
+            _ => None,
+        }
+    }
+}
+
+/// A typed, resolved expression over catalog columns. Numeric
+/// evaluation is over `f64` (booleans as 0/1), matching the dynamic
+/// `Value` runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Col(Column),
+    LitI(i64),
+    LitF(f64),
+    Neg(Box<Scalar>),
+    Not(Box<Scalar>),
+    Bin(BinOp, Box<Scalar>, Box<Scalar>),
+    Between(Box<Scalar>, Box<Scalar>, Box<Scalar>),
+}
+
+impl Scalar {
+    pub fn lit(v: f64) -> Scalar {
+        if v.fract() == 0.0 && v.abs() < 9e15 {
+            Scalar::LitI(v as i64)
+        } else {
+            Scalar::LitF(v)
+        }
+    }
+
+    /// Evaluate against a row accessor (booleans are 1.0 / 0.0).
+    pub fn eval(&self, col: &impl Fn(Column) -> f64) -> f64 {
+        match self {
+            Scalar::Col(c) => col(*c),
+            Scalar::LitI(v) => *v as f64,
+            Scalar::LitF(v) => *v,
+            Scalar::Neg(e) => -e.eval(col),
+            Scalar::Not(e) => f64::from(e.eval(col) == 0.0),
+            Scalar::Between(e, lo, hi) => {
+                let v = e.eval(col);
+                f64::from(v >= lo.eval(col) && v <= hi.eval(col))
+            }
+            Scalar::Bin(op, l, r) => {
+                let a = l.eval(col);
+                match op {
+                    BinOp::And => return f64::from(a != 0.0 && r.eval(col) != 0.0),
+                    BinOp::Or => return f64::from(a != 0.0 || r.eval(col) != 0.0),
+                    _ => {}
+                }
+                let b = r.eval(col);
+                match op {
+                    BinOp::Add => a + b,
+                    BinOp::Sub => a - b,
+                    BinOp::Mul => a * b,
+                    BinOp::Div => a / b,
+                    BinOp::Eq => f64::from(a == b),
+                    BinOp::NotEq => f64::from(a != b),
+                    BinOp::Lt => f64::from(a < b),
+                    BinOp::Le => f64::from(a <= b),
+                    BinOp::Gt => f64::from(a > b),
+                    BinOp::Ge => f64::from(a >= b),
+                    BinOp::And | BinOp::Or => unreachable!(),
+                }
+            }
+        }
+    }
+
+    /// Truth test for predicates.
+    pub fn test(&self, col: &impl Fn(Column) -> f64) -> bool {
+        self.eval(col) != 0.0
+    }
+
+    pub fn columns_into(&self, out: &mut BTreeSet<Column>) {
+        match self {
+            Scalar::Col(c) => {
+                out.insert(*c);
+            }
+            Scalar::LitI(_) | Scalar::LitF(_) => {}
+            Scalar::Neg(e) | Scalar::Not(e) => e.columns_into(out),
+            Scalar::Bin(_, l, r) => {
+                l.columns_into(out);
+                r.columns_into(out);
+            }
+            Scalar::Between(e, lo, hi) => {
+                e.columns_into(out);
+                lo.columns_into(out);
+                hi.columns_into(out);
+            }
+        }
+    }
+
+    pub fn columns(&self) -> BTreeSet<Column> {
+        let mut out = BTreeSet::new();
+        self.columns_into(&mut out);
+        out
+    }
+
+    /// Which tables this expression touches.
+    pub fn tables(&self) -> BTreeSet<&'static str> {
+        self.columns().iter().map(|c| c.table().name()).collect()
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.columns().is_empty()
+    }
+
+    /// Integer-valued under evaluation (drives output/key typing).
+    pub fn is_int(&self) -> bool {
+        match self {
+            Scalar::Col(c) => c.is_int(),
+            Scalar::LitI(_) => true,
+            Scalar::LitF(_) => false,
+            Scalar::Neg(e) => e.is_int(),
+            Scalar::Not(_) | Scalar::Between(..) => true,
+            Scalar::Bin(op, l, r) => match op {
+                BinOp::Add | BinOp::Sub | BinOp::Mul => l.is_int() && r.is_int(),
+                BinOp::Div => false,
+                _ => true,
+            },
+        }
+    }
+
+    /// Estimated distinct values this expression can take (for
+    /// partition-count picking). Unknown → `u64::MAX`.
+    pub fn ndv(&self) -> u64 {
+        match self {
+            Scalar::Col(c) => c.ndv().unwrap_or(u64::MAX),
+            Scalar::LitI(_) | Scalar::LitF(_) => 1,
+            Scalar::Neg(e) => e.ndv(),
+            Scalar::Not(_) | Scalar::Between(..) => 2,
+            Scalar::Bin(op, l, r) => {
+                if op.is_comparison() || matches!(op, BinOp::And | BinOp::Or) {
+                    2
+                } else {
+                    l.ndv().saturating_mul(r.ndv())
+                }
+            }
+        }
+    }
+
+    pub fn render(&self) -> String {
+        match self {
+            Scalar::Col(c) => c.display(),
+            Scalar::LitI(v) => format!("{v}"),
+            Scalar::LitF(v) => format!("{v}"),
+            Scalar::Neg(e) => format!("(-{})", e.render()),
+            Scalar::Not(e) => format!("(NOT {})", e.render()),
+            Scalar::Bin(op, l, r) => format!("({} {} {})", l.render(), op.text(), r.render()),
+            Scalar::Between(e, lo, hi) => {
+                format!("({} BETWEEN {} AND {})", e.render(), lo.render(), hi.render())
+            }
+        }
+    }
+}
+
+/// One aggregate slot: `COUNT(*)` carries no argument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Aggregate {
+    pub func: AggFunc,
+    pub arg: Option<Scalar>,
+}
+
+impl Aggregate {
+    pub fn render(&self) -> String {
+        match &self.arg {
+            None => format!("{}(*)", self.func.name()),
+            Some(a) => format!("{}({})", self.func.name(), a.render()),
+        }
+    }
+
+    pub fn is_int(&self) -> bool {
+        match self.func {
+            AggFunc::Count => true,
+            AggFunc::Avg => false,
+            AggFunc::Sum | AggFunc::Min | AggFunc::Max => {
+                self.arg.as_ref().is_some_and(Scalar::is_int)
+            }
+        }
+    }
+}
+
+/// An output expression over the aggregation's computed keys and
+/// aggregate slots — what SELECT items and HAVING become in a grouped
+/// query (`SUM(credit) / COUNT(*)` is `Bin(Div, Agg(0), Agg(1))`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OutExpr {
+    Key(usize),
+    Agg(usize),
+    LitI(i64),
+    LitF(f64),
+    Neg(Box<OutExpr>),
+    Not(Box<OutExpr>),
+    Bin(BinOp, Box<OutExpr>, Box<OutExpr>),
+}
+
+impl OutExpr {
+    pub fn eval(&self, keys: &[f64], aggs: &[f64]) -> f64 {
+        match self {
+            OutExpr::Key(i) => keys[*i],
+            OutExpr::Agg(i) => aggs[*i],
+            OutExpr::LitI(v) => *v as f64,
+            OutExpr::LitF(v) => *v,
+            OutExpr::Neg(e) => -e.eval(keys, aggs),
+            OutExpr::Not(e) => f64::from(e.eval(keys, aggs) == 0.0),
+            OutExpr::Bin(op, l, r) => {
+                let a = l.eval(keys, aggs);
+                let b = r.eval(keys, aggs);
+                match op {
+                    BinOp::Add => a + b,
+                    BinOp::Sub => a - b,
+                    BinOp::Mul => a * b,
+                    BinOp::Div => a / b,
+                    BinOp::Eq => f64::from(a == b),
+                    BinOp::NotEq => f64::from(a != b),
+                    BinOp::Lt => f64::from(a < b),
+                    BinOp::Le => f64::from(a <= b),
+                    BinOp::Gt => f64::from(a > b),
+                    BinOp::Ge => f64::from(a >= b),
+                    BinOp::And => f64::from(a != 0.0 && b != 0.0),
+                    BinOp::Or => f64::from(a != 0.0 || b != 0.0),
+                }
+            }
+        }
+    }
+
+    fn render(&self, keys: &[Scalar], aggs: &[Aggregate]) -> String {
+        match self {
+            OutExpr::Key(i) => keys[*i].render(),
+            OutExpr::Agg(i) => aggs[*i].render(),
+            OutExpr::LitI(v) => format!("{v}"),
+            OutExpr::LitF(v) => format!("{v}"),
+            OutExpr::Neg(e) => format!("(-{})", e.render(keys, aggs)),
+            OutExpr::Not(e) => format!("(NOT {})", e.render(keys, aggs)),
+            OutExpr::Bin(op, l, r) => {
+                format!("({} {} {})", l.render(keys, aggs), op.text(), r.render(keys, aggs))
+            }
+        }
+    }
+
+    fn is_int(&self, keys: &[Scalar], aggs: &[Aggregate]) -> bool {
+        match self {
+            OutExpr::Key(i) => keys[*i].is_int(),
+            OutExpr::Agg(i) => aggs[*i].is_int(),
+            OutExpr::LitI(_) => true,
+            OutExpr::LitF(_) => false,
+            OutExpr::Neg(e) => e.is_int(keys, aggs),
+            OutExpr::Not(_) => true,
+            OutExpr::Bin(op, l, r) => match op {
+                BinOp::Add | BinOp::Sub | BinOp::Mul => {
+                    l.is_int(keys, aggs) && r.is_int(keys, aggs)
+                }
+                BinOp::Div => false,
+                _ => true,
+            },
+        }
+    }
+}
+
+/// One predicate pushed into a scan, in WHERE-clause source order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PushedPred {
+    /// A typed inclusive day range extracted from a `day`/`month`
+    /// conjunct — lowers to [`crate::plan::DynOp::DayRange`], which the
+    /// engine's stats-based pruning can skip whole splits with.
+    DayRange { lo: i32, hi: i32 },
+    /// An opaque conjunct, evaluated against the raw line during the
+    /// scan.
+    Generic(Scalar),
+}
+
+impl PushedPred {
+    pub fn render(&self) -> String {
+        match self {
+            PushedPred::DayRange { lo, hi } => format!("day_range[{lo}..={hi}]"),
+            PushedPred::Generic(s) => s.render(),
+        }
+    }
+}
+
+/// One table scan with whatever the rewriter managed to push into it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableScan {
+    pub table: Table,
+    /// Conjuncts pushed below the join into this scan, in source order
+    /// (day-range extraction rewrites entries in place, so an opaque
+    /// conjunct can legitimately precede a `DayRange` — pruning still
+    /// fires because `leading_day_range` commutes past pure filters).
+    pub pushed: Vec<PushedPred>,
+    /// Columns the scan materializes; `None` = all (projection pushdown
+    /// not applied yet).
+    pub projected: Option<Vec<Column>>,
+}
+
+impl TableScan {
+    fn new(table: Table) -> TableScan {
+        TableScan { table, pushed: Vec::new(), projected: None }
+    }
+
+    pub fn columns(&self) -> Vec<Column> {
+        self.projected.clone().unwrap_or_else(|| self.table.columns().to_vec())
+    }
+
+    /// Extracted day ranges, in pushed order.
+    pub fn day_ranges(&self) -> Vec<(i32, i32)> {
+        self.pushed
+            .iter()
+            .filter_map(|p| match p {
+                PushedPred::DayRange { lo, hi } => Some((*lo, *hi)),
+                PushedPred::Generic(_) => None,
+            })
+            .collect()
+    }
+
+    /// Pushed opaque conjuncts, in pushed order.
+    pub fn generic_preds(&self) -> Vec<&Scalar> {
+        self.pushed
+            .iter()
+            .filter_map(|p| match p {
+                PushedPred::Generic(s) => Some(s),
+                PushedPred::DayRange { .. } => None,
+            })
+            .collect()
+    }
+
+    fn render(&self) -> String {
+        let mut s = format!("Scan {}", self.table.name());
+        match &self.projected {
+            None => s.push_str(" columns=[*]"),
+            Some(cols) => {
+                let names: Vec<&str> = cols.iter().map(|c| c.name()).collect();
+                let _ = write!(s, " columns=[{}]", names.join(", "));
+            }
+        }
+        if !self.pushed.is_empty() {
+            let preds: Vec<String> = self.pushed.iter().map(PushedPred::render).collect();
+            let _ = write!(s, " pushed=[{}]", preds.join(" AND "));
+        }
+        s
+    }
+}
+
+/// The (single, equi-) join of the logical plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinInfo {
+    pub dim: TableScan,
+    /// Key expression over the FROM-side table.
+    pub fact_key: Scalar,
+    /// Key expression over the JOIN-side table.
+    pub dim_key: Scalar,
+}
+
+/// What the query computes per surviving row.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Mode {
+    /// Plain `SELECT expr, …` — one output row per input row.
+    Project { exprs: Vec<Scalar> },
+    /// `GROUP BY` / aggregate query: shuffle on `keys`, fold `aggs`,
+    /// then evaluate `select` per group.
+    Aggregate { keys: Vec<Scalar>, aggs: Vec<Aggregate>, select: Vec<OutExpr> },
+}
+
+/// The analyzed (and, after `rewrite`, optimized) logical plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogicalPlan {
+    pub fact: TableScan,
+    pub join: Option<JoinInfo>,
+    /// Conjuncts evaluated above the join (or above the scan when there
+    /// is none). Pushdown drains single-table conjuncts out of here.
+    pub filter: Vec<Scalar>,
+    pub mode: Mode,
+    pub having: Option<OutExpr>,
+    /// Output column names (aliases or rendered expressions).
+    pub columns: Vec<String>,
+    /// Whether each output column is integer-valued.
+    pub int_outputs: Vec<bool>,
+    /// `(select index, descending)` — applied at the driver.
+    pub order_by: Vec<(usize, bool)>,
+    pub limit: Option<usize>,
+}
+
+impl LogicalPlan {
+    /// Render the plan tree (EXPLAIN's logical / optimized sections).
+    pub fn render(&self) -> String {
+        let mut lines: Vec<String> = Vec::new();
+        if let Some(n) = self.limit {
+            lines.push(format!("Limit {n}"));
+        }
+        if !self.order_by.is_empty() {
+            let keys: Vec<String> = self
+                .order_by
+                .iter()
+                .map(|(i, desc)| {
+                    format!("{}{}", self.columns[*i], if *desc { " DESC" } else { "" })
+                })
+                .collect();
+            lines.push(format!("Sort [{}]", keys.join(", ")));
+        }
+        match &self.mode {
+            Mode::Project { exprs } => {
+                let items: Vec<String> = exprs.iter().map(Scalar::render).collect();
+                lines.push(format!("Project [{}]", items.join(", ")));
+            }
+            Mode::Aggregate { keys, aggs, select } => {
+                let ks: Vec<String> = keys.iter().map(Scalar::render).collect();
+                let ags: Vec<String> = aggs.iter().map(Aggregate::render).collect();
+                let sel: Vec<String> = select.iter().map(|e| e.render(keys, aggs)).collect();
+                let mut line = format!(
+                    "Aggregate keys=[{}] aggs=[{}] select=[{}]",
+                    ks.join(", "),
+                    ags.join(", "),
+                    sel.join(", ")
+                );
+                if let Some(h) = &self.having {
+                    let _ = write!(line, " having={}", h.render(keys, aggs));
+                }
+                lines.push(line);
+            }
+        }
+        if !self.filter.is_empty() {
+            let preds: Vec<String> = self.filter.iter().map(Scalar::render).collect();
+            lines.push(format!("Filter [{}]", preds.join(" AND ")));
+        }
+        let mut out = String::new();
+        for (depth, line) in lines.iter().enumerate() {
+            let _ = writeln!(out, "{}{}", "  ".repeat(depth), line);
+        }
+        let depth = lines.len();
+        match &self.join {
+            None => {
+                let _ = writeln!(out, "{}{}", "  ".repeat(depth), self.fact.render());
+            }
+            Some(j) => {
+                let _ = writeln!(
+                    out,
+                    "{}Join on {} = {}",
+                    "  ".repeat(depth),
+                    j.fact_key.render(),
+                    j.dim_key.render()
+                );
+                let _ = writeln!(out, "{}{}", "  ".repeat(depth + 1), self.fact.render());
+                let _ = writeln!(out, "{}{}", "  ".repeat(depth + 1), j.dim.render());
+            }
+        }
+        out
+    }
+
+    /// Every column the plan references on `table` (for projection
+    /// pushdown and the scan parsers).
+    pub fn referenced_columns(&self, table: Table) -> Vec<Column> {
+        let mut set = BTreeSet::new();
+        for pred in &self.filter {
+            pred.columns_into(&mut set);
+        }
+        for pred in self.fact.generic_preds() {
+            pred.columns_into(&mut set);
+        }
+        if let Some(j) = &self.join {
+            j.fact_key.columns_into(&mut set);
+            j.dim_key.columns_into(&mut set);
+            for pred in j.dim.generic_preds() {
+                pred.columns_into(&mut set);
+            }
+        }
+        match &self.mode {
+            Mode::Project { exprs } => {
+                for e in exprs {
+                    e.columns_into(&mut set);
+                }
+            }
+            Mode::Aggregate { keys, aggs, .. } => {
+                for k in keys {
+                    k.columns_into(&mut set);
+                }
+                for a in aggs {
+                    if let Some(arg) = &a.arg {
+                        arg.columns_into(&mut set);
+                    }
+                }
+            }
+        }
+        set.into_iter().filter(|c| c.table() == table).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Analysis: AST -> LogicalPlan
+// ---------------------------------------------------------------------
+
+/// A FROM/JOIN binding: which catalog table an alias refers to.
+struct Binding {
+    table: Table,
+    /// The name columns may be qualified with (alias if given, else the
+    /// table name).
+    qualifier: String,
+}
+
+struct Analyzer {
+    bindings: Vec<Binding>,
+}
+
+impl Analyzer {
+    fn bind(r: &TableRef) -> Result<(Table, Binding), SqlError> {
+        let table = Table::resolve(&r.name).ok_or_else(|| {
+            SqlError::new(
+                format!("unknown table `{}` (known: trips, weather)", r.name),
+                r.offset,
+            )
+        })?;
+        let qualifier = r.alias.clone().unwrap_or_else(|| r.name.clone());
+        Ok((table, Binding { table, qualifier }))
+    }
+
+    fn resolve_column(
+        &self,
+        table: &Option<String>,
+        name: &str,
+        offset: usize,
+    ) -> Result<Column, SqlError> {
+        match table {
+            Some(q) => {
+                let b = self
+                    .bindings
+                    .iter()
+                    .find(|b| b.qualifier.eq_ignore_ascii_case(q))
+                    .ok_or_else(|| {
+                        SqlError::new(format!("unknown table or alias `{q}`"), offset)
+                    })?;
+                b.table.lookup(name).ok_or_else(|| {
+                    SqlError::new(
+                        format!("no column `{name}` in table `{}`", b.table.name()),
+                        offset,
+                    )
+                })
+            }
+            None => {
+                let hits: Vec<Column> =
+                    self.bindings.iter().filter_map(|b| b.table.lookup(name)).collect();
+                match hits.len() {
+                    0 => Err(SqlError::new(format!("unknown column `{name}`"), offset)),
+                    1 => Ok(hits[0]),
+                    _ => Err(SqlError::new(
+                        format!("ambiguous column `{name}` — qualify it with a table alias"),
+                        offset,
+                    )),
+                }
+            }
+        }
+    }
+
+    /// AST expression -> Scalar. Aggregates are rejected (`where_ok`
+    /// contexts: WHERE / GROUP BY / ON / plain select items).
+    fn scalar(&self, e: &Expr) -> Result<Scalar, SqlError> {
+        match e {
+            Expr::Column { table, name, offset } => {
+                Ok(Scalar::Col(self.resolve_column(table, name, *offset)?))
+            }
+            Expr::Number { value, .. } => Ok(Scalar::lit(*value)),
+            Expr::Str { offset, .. } => Err(SqlError::new(
+                "string literals are not supported in expressions (no string columns)",
+                *offset,
+            )),
+            Expr::Neg { expr, .. } => Ok(Scalar::Neg(Box::new(self.scalar(expr)?))),
+            Expr::Not { expr, .. } => Ok(Scalar::Not(Box::new(self.scalar(expr)?))),
+            Expr::Binary { op, lhs, rhs, .. } => Ok(Scalar::Bin(
+                *op,
+                Box::new(self.scalar(lhs)?),
+                Box::new(self.scalar(rhs)?),
+            )),
+            Expr::Between { expr, lo, hi, .. } => Ok(Scalar::Between(
+                Box::new(self.scalar(expr)?),
+                Box::new(self.scalar(lo)?),
+                Box::new(self.scalar(hi)?),
+            )),
+            Expr::Agg { offset, .. } => {
+                Err(SqlError::new("aggregate function is not allowed here", *offset))
+            }
+        }
+    }
+}
+
+/// Split an AND-tree into conjuncts (WHERE lowering).
+fn split_conjuncts(e: &Expr, out: &mut Vec<Expr>) {
+    if let Expr::Binary { op: BinOp::And, lhs, rhs, .. } = e {
+        split_conjuncts(lhs, out);
+        split_conjuncts(rhs, out);
+    } else {
+        out.push(e.clone());
+    }
+}
+
+/// Collects aggregate slots while converting select/having expressions.
+struct OutBuilder<'a> {
+    az: &'a Analyzer,
+    keys: Vec<Scalar>,
+    key_renders: Vec<String>,
+    aggs: Vec<Aggregate>,
+    agg_renders: Vec<String>,
+}
+
+impl OutBuilder<'_> {
+    fn convert(&mut self, e: &Expr) -> Result<OutExpr, SqlError> {
+        // A whole non-aggregate subtree that matches a GROUP BY key is a
+        // key reference — the only way plain columns reach the output.
+        if !e.has_agg() {
+            if let Ok(s) = self.az.scalar(e) {
+                let r = s.render();
+                if let Some(i) = self.key_renders.iter().position(|k| *k == r) {
+                    return Ok(OutExpr::Key(i));
+                }
+                if s.is_const() {
+                    return Ok(match s {
+                        Scalar::LitI(v) => OutExpr::LitI(v),
+                        Scalar::LitF(v) => OutExpr::LitF(v),
+                        other => OutExpr::LitF(other.eval(&|_| 0.0)),
+                    });
+                }
+            }
+        }
+        match e {
+            Expr::Agg { func, arg, offset } => {
+                let arg = match arg {
+                    None => None,
+                    Some(a) => {
+                        if a.has_agg() {
+                            return Err(SqlError::new("nested aggregate", *offset));
+                        }
+                        Some(self.az.scalar(a)?)
+                    }
+                };
+                let agg = Aggregate { func: *func, arg };
+                let r = agg.render();
+                let i = match self.agg_renders.iter().position(|a| *a == r) {
+                    Some(i) => i,
+                    None => {
+                        self.aggs.push(agg);
+                        self.agg_renders.push(r);
+                        self.aggs.len() - 1
+                    }
+                };
+                Ok(OutExpr::Agg(i))
+            }
+            Expr::Number { value, .. } => Ok(match Scalar::lit(*value) {
+                Scalar::LitI(v) => OutExpr::LitI(v),
+                s => OutExpr::LitF(s.eval(&|_| 0.0)),
+            }),
+            Expr::Neg { expr, .. } => Ok(OutExpr::Neg(Box::new(self.convert(expr)?))),
+            Expr::Not { expr, .. } => Ok(OutExpr::Not(Box::new(self.convert(expr)?))),
+            Expr::Binary { op, lhs, rhs, .. } => Ok(OutExpr::Bin(
+                *op,
+                Box::new(self.convert(lhs)?),
+                Box::new(self.convert(rhs)?),
+            )),
+            Expr::Between { expr, lo, hi, offset } => {
+                // Desugar: e BETWEEN a AND b  ==  a <= e AND e <= b.
+                let e2 = Expr::Binary {
+                    op: BinOp::And,
+                    lhs: Box::new(Expr::Binary {
+                        op: BinOp::Le,
+                        lhs: lo.clone(),
+                        rhs: expr.clone(),
+                        offset: *offset,
+                    }),
+                    rhs: Box::new(Expr::Binary {
+                        op: BinOp::Le,
+                        lhs: expr.clone(),
+                        rhs: hi.clone(),
+                        offset: *offset,
+                    }),
+                    offset: *offset,
+                };
+                self.convert(&e2)
+            }
+            Expr::Column { name, offset, .. } => Err(SqlError::new(
+                format!("column `{name}` must appear in GROUP BY or inside an aggregate"),
+                *offset,
+            )),
+            Expr::Str { offset, .. } => Err(SqlError::new(
+                "string literals are not supported in expressions (no string columns)",
+                *offset,
+            )),
+        }
+    }
+}
+
+/// Default rendered name of a select item (when it has no alias).
+fn item_name(e: &Expr, az: &Analyzer) -> String {
+    match e {
+        Expr::Column { name, .. } => name.clone(),
+        Expr::Agg { func, arg: None, .. } => format!("{}(*)", func.name()),
+        Expr::Agg { func, arg: Some(a), .. } => match az.scalar(a) {
+            Ok(s) => format!("{}({})", func.name(), s.render()),
+            Err(_) => format!("{}(expr)", func.name()),
+        },
+        other => match az.scalar(other) {
+            Ok(s) => s.render(),
+            Err(_) => "expr".to_string(),
+        },
+    }
+}
+
+/// Analyze a parsed query into the (unoptimized) logical plan: all
+/// WHERE conjuncts sit in `filter`, scans project every column, no day
+/// ranges are extracted — the rewriter's job.
+pub fn analyze(q: &SelectQuery) -> Result<LogicalPlan, SqlError> {
+    let (fact_table, fact_binding) = Analyzer::bind(&q.from)?;
+    let mut bindings = vec![fact_binding];
+    let mut dim_table = None;
+    if let Some(j) = &q.join {
+        let (t, b) = Analyzer::bind(&j.table)?;
+        if t == fact_table {
+            return Err(SqlError::new(
+                format!("self-join of `{}` is not supported", t.name()),
+                j.table.offset,
+            ));
+        }
+        bindings.push(b);
+        dim_table = Some(t);
+    }
+    let az = Analyzer { bindings };
+
+    // Join keys: an equality with exactly one side per table.
+    let join = match (&q.join, dim_table) {
+        (Some(j), Some(dim)) => {
+            let Expr::Binary { op: BinOp::Eq, lhs, rhs, offset } = &j.on else {
+                return Err(SqlError::new(
+                    "JOIN … ON requires an equality condition",
+                    j.on.offset(),
+                ));
+            };
+            let l = az.scalar(lhs)?;
+            let r = az.scalar(rhs)?;
+            let fact_name = fact_table.name();
+            let dim_name = dim.name();
+            let (fact_key, dim_key) = if l.tables().iter().all(|t| *t == fact_name)
+                && r.tables().iter().all(|t| *t == dim_name)
+            {
+                (l, r)
+            } else if l.tables().iter().all(|t| *t == dim_name)
+                && r.tables().iter().all(|t| *t == fact_name)
+            {
+                (r, l)
+            } else {
+                return Err(SqlError::new(
+                    "each side of the join condition must reference exactly one table",
+                    *offset,
+                ));
+            };
+            if fact_key.is_const() || dim_key.is_const() {
+                return Err(SqlError::new(
+                    "each side of the join condition must reference exactly one table",
+                    *offset,
+                ));
+            }
+            Some(JoinInfo { dim: TableScan::new(dim), fact_key, dim_key })
+        }
+        _ => None,
+    };
+
+    // WHERE -> conjuncts (all residual until pushdown).
+    let mut filter = Vec::new();
+    if let Some(w) = &q.where_clause {
+        if w.has_agg() {
+            return Err(SqlError::new(
+                "aggregate function is not allowed in WHERE",
+                w.offset(),
+            ));
+        }
+        let mut parts = Vec::new();
+        split_conjuncts(w, &mut parts);
+        for p in &parts {
+            filter.push(az.scalar(p)?);
+        }
+    }
+
+    let grouped = !q.group_by.is_empty()
+        || q.having.is_some()
+        || q.items.iter().any(|it| matches!(it, SelectItem::Expr { expr, .. } if expr.has_agg()));
+
+    let mut columns = Vec::new();
+    let mut int_outputs = Vec::new();
+    let (mode, having, select_renders) = if grouped {
+        let mut keys = Vec::new();
+        for g in &q.group_by {
+            if g.has_agg() {
+                return Err(SqlError::new(
+                    "aggregate function is not allowed in GROUP BY",
+                    g.offset(),
+                ));
+            }
+            keys.push(az.scalar(g)?);
+        }
+        let key_renders: Vec<String> = keys.iter().map(Scalar::render).collect();
+        let mut ob = OutBuilder {
+            az: &az,
+            keys,
+            key_renders,
+            aggs: Vec::new(),
+            agg_renders: Vec::new(),
+        };
+        let mut select = Vec::new();
+        let mut renders = Vec::new();
+        for item in &q.items {
+            match item {
+                SelectItem::Star { offset } => {
+                    return Err(SqlError::new(
+                        "SELECT * cannot be combined with GROUP BY or aggregates",
+                        *offset,
+                    ));
+                }
+                SelectItem::Expr { expr, alias } => {
+                    let out = ob.convert(expr)?;
+                    columns.push(alias.clone().unwrap_or_else(|| item_name(expr, &az)));
+                    renders.push(out.render(&ob.keys, &ob.aggs));
+                    select.push(out);
+                }
+            }
+        }
+        let having = match &q.having {
+            None => None,
+            Some(h) => Some(ob.convert(h)?),
+        };
+        for s in &select {
+            int_outputs.push(s.is_int(&ob.keys, &ob.aggs));
+        }
+        (
+            Mode::Aggregate { keys: ob.keys, aggs: ob.aggs, select },
+            having,
+            renders,
+        )
+    } else {
+        let mut exprs = Vec::new();
+        let mut renders = Vec::new();
+        for item in &q.items {
+            match item {
+                SelectItem::Star { .. } => {
+                    for b in &az.bindings {
+                        for c in b.table.columns() {
+                            columns.push(c.name().to_string());
+                            renders.push(Scalar::Col(*c).render());
+                            exprs.push(Scalar::Col(*c));
+                        }
+                    }
+                }
+                SelectItem::Expr { expr, alias } => {
+                    let s = az.scalar(expr)?;
+                    columns.push(alias.clone().unwrap_or_else(|| item_name(expr, &az)));
+                    renders.push(s.render());
+                    exprs.push(s);
+                }
+            }
+        }
+        for e in &exprs {
+            int_outputs.push(e.is_int());
+        }
+        (Mode::Project { exprs }, None, renders)
+    };
+
+    // ORDER BY: positional (1-based), alias, or a select-matching expr.
+    let mut order_by = Vec::new();
+    for item in &q.order_by {
+        let idx = match &item.expr {
+            Expr::Number { value, offset } => {
+                let n = *value;
+                if n.fract() != 0.0 || n < 1.0 || n > columns.len() as f64 {
+                    return Err(SqlError::new(
+                        format!(
+                            "ORDER BY position {n} is out of range (1..={})",
+                            columns.len()
+                        ),
+                        *offset,
+                    ));
+                }
+                n as usize - 1
+            }
+            Expr::Column { table: None, name, offset } if columns.iter().any(|c| c == name) => {
+                columns
+                    .iter()
+                    .position(|c| c == name)
+                    .ok_or_else(|| SqlError::new("unreachable", *offset))?
+            }
+            other => {
+                // Structural match against a select item's render.
+                let rendered = match &mode {
+                    Mode::Project { .. } => az.scalar(other)?.render(),
+                    Mode::Aggregate { keys, aggs, .. } => {
+                        let mut ob = OutBuilder {
+                            az: &az,
+                            keys: keys.clone(),
+                            key_renders: keys.iter().map(Scalar::render).collect(),
+                            aggs: aggs.clone(),
+                            agg_renders: aggs.iter().map(Aggregate::render).collect(),
+                        };
+                        let out = ob.convert(other)?;
+                        if ob.aggs.len() != aggs.len() {
+                            return Err(SqlError::new(
+                                "ORDER BY expression must appear in the SELECT list",
+                                other.offset(),
+                            ));
+                        }
+                        out.render(&ob.keys, &ob.aggs)
+                    }
+                };
+                select_renders.iter().position(|r| *r == rendered).ok_or_else(|| {
+                    SqlError::new(
+                        "ORDER BY expression must appear in the SELECT list",
+                        other.offset(),
+                    )
+                })?
+            }
+        };
+        order_by.push((idx, item.desc));
+    }
+
+    Ok(LogicalPlan {
+        fact: TableScan::new(fact_table),
+        join,
+        filter,
+        mode,
+        having,
+        columns,
+        int_outputs,
+        order_by,
+        limit: q.limit,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::parse::parse;
+
+    fn plan(text: &str) -> LogicalPlan {
+        analyze(&parse(text).unwrap().query).unwrap()
+    }
+
+    fn plan_err(text: &str) -> SqlError {
+        analyze(&parse(text).unwrap().query).unwrap_err()
+    }
+
+    #[test]
+    fn resolves_tables_aliases_and_derived_columns() {
+        let p = plan(
+            "SELECT w.bucket, COUNT(*) FROM trips t JOIN weather w ON t.day = w.day \
+             GROUP BY w.bucket",
+        );
+        assert_eq!(p.fact.table, Table::Trips);
+        let j = p.join.as_ref().unwrap();
+        assert_eq!(j.dim.table, Table::Weather);
+        assert_eq!(j.fact_key, Scalar::Col(Column::Day));
+        assert_eq!(j.dim_key, Scalar::Col(Column::WeatherDay));
+        let Mode::Aggregate { keys, aggs, select } = &p.mode else { panic!() };
+        assert_eq!(keys, &[Scalar::Col(Column::Bucket)]);
+        assert_eq!(aggs.len(), 1);
+        assert_eq!(select, &[OutExpr::Key(0), OutExpr::Agg(0)]);
+        assert_eq!(p.int_outputs, vec![true, true]);
+    }
+
+    #[test]
+    fn reversed_join_condition_normalizes_sides() {
+        let p = plan("SELECT COUNT(*) FROM trips t JOIN weather w ON w.day = t.day");
+        let j = p.join.unwrap();
+        assert_eq!(j.fact_key, Scalar::Col(Column::Day));
+        assert_eq!(j.dim_key, Scalar::Col(Column::WeatherDay));
+    }
+
+    #[test]
+    fn where_splits_into_conjuncts() {
+        let p = plan(
+            "SELECT hour FROM trips WHERE tip_amount > 10 AND day BETWEEN 5 AND 9 AND hour = 3",
+        );
+        assert_eq!(p.filter.len(), 3);
+        // Nothing pushed before the rewriter runs.
+        assert!(p.fact.pushed.is_empty());
+        assert!(p.fact.day_ranges().is_empty());
+        assert!(p.fact.projected.is_none());
+    }
+
+    #[test]
+    fn shared_aggregates_dedupe_and_arithmetic_over_them_works() {
+        let p = plan(
+            "SELECT month, SUM(credit) / COUNT(*), COUNT(*) FROM trips GROUP BY month",
+        );
+        let Mode::Aggregate { aggs, select, .. } = &p.mode else { panic!() };
+        assert_eq!(aggs.len(), 2, "COUNT(*) shared: {aggs:?}");
+        let OutExpr::Bin(BinOp::Div, l, r) = &select[1] else { panic!("{select:?}") };
+        assert_eq!(**l, OutExpr::Agg(0));
+        assert_eq!(**r, OutExpr::Agg(1));
+        assert_eq!(select[2], OutExpr::Agg(1));
+        assert_eq!(p.int_outputs, vec![true, false, true]);
+    }
+
+    #[test]
+    fn order_by_position_alias_and_expression() {
+        let p = plan("SELECT hour, COUNT(*) AS n FROM trips GROUP BY hour ORDER BY n DESC, 1");
+        assert_eq!(p.order_by, vec![(1, true), (0, false)]);
+        let p = plan("SELECT hour, COUNT(*) FROM trips GROUP BY hour ORDER BY COUNT(*) DESC");
+        assert_eq!(p.order_by, vec![(1, true)]);
+    }
+
+    #[test]
+    fn error_paths_carry_offsets() {
+        let e = plan_err("SELECT x FROM nowhere");
+        assert!(e.message.contains("unknown table"), "{e}");
+        assert_eq!(e.offset, 14);
+        let e = plan_err("SELECT nope FROM trips");
+        assert!(e.message.contains("unknown column"), "{e}");
+        let e = plan_err("SELECT day FROM trips t JOIN weather w ON t.day = w.day");
+        assert!(e.message.contains("ambiguous"), "{e}");
+        let e = plan_err("SELECT hour FROM trips GROUP BY month");
+        assert!(e.message.contains("GROUP BY"), "{e}");
+        let e = plan_err("SELECT COUNT(*) FROM trips WHERE COUNT(*) > 1");
+        assert!(e.message.contains("WHERE"), "{e}");
+        let e = plan_err("SELECT COUNT(*) FROM trips t JOIN weather w ON t.day < w.day");
+        assert!(e.message.contains("equality"), "{e}");
+        let e = plan_err("SELECT t1.day FROM trips t1 JOIN trips t2 ON t1.day = t2.day");
+        assert!(e.message.contains("self-join"), "{e}");
+        let e = plan_err("SELECT hour FROM trips ORDER BY tip_amount");
+        assert!(e.message.contains("SELECT list"), "{e}");
+    }
+
+    #[test]
+    fn select_star_expands_catalog_order() {
+        let p = plan("SELECT * FROM trips");
+        let Mode::Project { exprs } = &p.mode else { panic!() };
+        assert_eq!(exprs.len(), Table::Trips.columns().len());
+        assert_eq!(p.columns[0], "taxi_type");
+        let p = plan("SELECT * FROM trips t JOIN weather w ON t.day = w.day");
+        let Mode::Project { exprs } = &p.mode else { panic!() };
+        assert_eq!(
+            exprs.len(),
+            Table::Trips.columns().len() + Table::Weather.columns().len()
+        );
+    }
+
+    #[test]
+    fn scalar_eval_and_typing() {
+        let s = plan("SELECT tip_amount / trip_distance FROM trips");
+        let Mode::Project { exprs } = &s.mode else { panic!() };
+        let v = exprs[0].eval(&|c| match c {
+            Column::TipAmount => 6.0,
+            Column::TripDistance => 3.0,
+            _ => 0.0,
+        });
+        assert_eq!(v, 2.0);
+        assert_eq!(s.int_outputs, vec![false]);
+
+        let s = plan("SELECT hour + 1 FROM trips WHERE NOT (hour = 3 OR hour > 20)");
+        assert!(s.filter[0].test(&|_| 4.0));
+        assert!(!s.filter[0].test(&|_| 3.0));
+        assert!(!s.filter[0].test(&|_| 21.0));
+        assert_eq!(s.int_outputs, vec![true]);
+    }
+}

@@ -1,0 +1,616 @@
+//! Recursive-descent parser for the supported SQL subset:
+//!
+//! ```text
+//! [EXPLAIN] SELECT item [, item]*
+//!   FROM table [alias]
+//!   [JOIN table [alias] ON expr]
+//!   [WHERE expr]
+//!   [GROUP BY expr [, expr]*]
+//!   [HAVING expr]
+//!   [ORDER BY expr [ASC|DESC] [, ...]]
+//!   [LIMIT n]
+//! ```
+//!
+//! Expressions: column refs (optionally `alias.`-qualified), numeric
+//! literals, string literals, `+ - * /`, comparisons (`= != <> < <= >
+//! >=`), `BETWEEN a AND b`, `AND`/`OR`/`NOT`, parentheses, and the
+//! aggregates `COUNT(*) | COUNT(e) | SUM | AVG | MIN | MAX`.
+//!
+//! Every AST node keeps the byte offset of the token that produced it,
+//! so semantic errors downstream point into the query text.
+
+use crate::sql::lex::{lex, SqlError, Sym, Tok, Token};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Eq,
+    NotEq,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn text(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Eq => "=",
+            BinOp::NotEq => "!=",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::And => "AND",
+            BinOp::Or => "OR",
+        }
+    }
+
+    pub fn is_comparison(self) -> bool {
+        matches!(self, BinOp::Eq | BinOp::NotEq | BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggFunc {
+    Count,
+    Sum,
+    Avg,
+    Min,
+    Max,
+}
+
+impl AggFunc {
+    pub fn name(self) -> &'static str {
+        match self {
+            AggFunc::Count => "count",
+            AggFunc::Sum => "sum",
+            AggFunc::Avg => "avg",
+            AggFunc::Min => "min",
+            AggFunc::Max => "max",
+        }
+    }
+
+    fn from_ident(s: &str) -> Option<AggFunc> {
+        match s.to_ascii_lowercase().as_str() {
+            "count" => Some(AggFunc::Count),
+            "sum" => Some(AggFunc::Sum),
+            "avg" => Some(AggFunc::Avg),
+            "min" => Some(AggFunc::Min),
+            "max" => Some(AggFunc::Max),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Column { table: Option<String>, name: String, offset: usize },
+    Number { value: f64, offset: usize },
+    Str { value: String, offset: usize },
+    Neg { expr: Box<Expr>, offset: usize },
+    Not { expr: Box<Expr>, offset: usize },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr>, offset: usize },
+    Between { expr: Box<Expr>, lo: Box<Expr>, hi: Box<Expr>, offset: usize },
+    /// `COUNT(*)` carries `arg: None`.
+    Agg { func: AggFunc, arg: Option<Box<Expr>>, offset: usize },
+}
+
+impl Expr {
+    pub fn offset(&self) -> usize {
+        match self {
+            Expr::Column { offset, .. }
+            | Expr::Number { offset, .. }
+            | Expr::Str { offset, .. }
+            | Expr::Neg { offset, .. }
+            | Expr::Not { offset, .. }
+            | Expr::Binary { offset, .. }
+            | Expr::Between { offset, .. }
+            | Expr::Agg { offset, .. } => *offset,
+        }
+    }
+
+    /// Does any aggregate call appear in this expression?
+    pub fn has_agg(&self) -> bool {
+        match self {
+            Expr::Agg { .. } => true,
+            Expr::Column { .. } | Expr::Number { .. } | Expr::Str { .. } => false,
+            Expr::Neg { expr, .. } | Expr::Not { expr, .. } => expr.has_agg(),
+            Expr::Binary { lhs, rhs, .. } => lhs.has_agg() || rhs.has_agg(),
+            Expr::Between { expr, lo, hi, .. } => {
+                expr.has_agg() || lo.has_agg() || hi.has_agg()
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum SelectItem {
+    /// `SELECT *` — expands to every column of the FROM (and JOIN) table.
+    Star { offset: usize },
+    Expr { expr: Expr, alias: Option<String> },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableRef {
+    pub name: String,
+    pub alias: Option<String>,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct JoinClause {
+    pub table: TableRef,
+    pub on: Expr,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OrderItem {
+    pub expr: Expr,
+    pub desc: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectQuery {
+    pub items: Vec<SelectItem>,
+    pub from: TableRef,
+    pub join: Option<JoinClause>,
+    pub where_clause: Option<Expr>,
+    pub group_by: Vec<Expr>,
+    pub having: Option<Expr>,
+    pub order_by: Vec<OrderItem>,
+    pub limit: Option<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Statement {
+    /// `EXPLAIN SELECT …` — render plans instead of executing.
+    pub explain: bool,
+    pub query: SelectQuery,
+}
+
+/// Parse one statement (an optional trailing `;` is accepted).
+pub fn parse(text: &str) -> Result<Statement, SqlError> {
+    let tokens = lex(text)?;
+    let mut p = Parser { tokens, pos: 0, eof: text.len() };
+    let explain = p.eat_kw("EXPLAIN");
+    p.expect_kw("SELECT")?;
+    let query = p.select_body()?;
+    p.eat_sym(Sym::Semi);
+    if let Some(t) = p.peek() {
+        return Err(SqlError::new(format!("unexpected {} after statement", t.describe()), t.offset));
+    }
+    Ok(Statement { explain, query })
+}
+
+struct Parser {
+    tokens: Vec<Token>,
+    pos: usize,
+    /// Offset reported for errors at end of input.
+    eof: usize,
+}
+
+/// Identifiers that end an expression list — never column names.
+const CLAUSE_KWS: &[&str] =
+    &["FROM", "JOIN", "INNER", "ON", "WHERE", "GROUP", "HAVING", "ORDER", "LIMIT", "BY", "AS", "ASC", "DESC", "AND", "OR", "NOT", "BETWEEN", "SELECT", "EXPLAIN"];
+
+impl Parser {
+    fn peek(&self) -> Option<&Token> {
+        self.tokens.get(self.pos)
+    }
+
+    fn next(&mut self) -> Option<Token> {
+        let t = self.tokens.get(self.pos).cloned();
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn here(&self) -> usize {
+        self.peek().map_or(self.eof, |t| t.offset)
+    }
+
+    fn err_here(&self, want: &str) -> SqlError {
+        match self.peek() {
+            Some(t) => SqlError::new(format!("expected {want}, found {}", t.describe()), t.offset),
+            None => SqlError::new(format!("expected {want}, found end of query"), self.eof),
+        }
+    }
+
+    fn eat_kw(&mut self, kw: &str) -> bool {
+        if self.peek().is_some_and(|t| t.is_kw(kw)) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_kw(&mut self, kw: &str) -> Result<(), SqlError> {
+        if self.eat_kw(kw) {
+            Ok(())
+        } else {
+            Err(self.err_here(&format!("`{kw}`")))
+        }
+    }
+
+    fn eat_sym(&mut self, sym: Sym) -> bool {
+        if self.peek().is_some_and(|t| t.tok == Tok::Sym(sym)) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_sym(&mut self, sym: Sym) -> Result<(), SqlError> {
+        if self.eat_sym(sym) {
+            Ok(())
+        } else {
+            Err(self.err_here(&format!("`{}`", sym.text())))
+        }
+    }
+
+    /// A non-keyword identifier (column/table/alias name).
+    fn ident(&mut self, what: &str) -> Result<(String, usize), SqlError> {
+        match self.peek() {
+            Some(Token { tok: Tok::Ident(s), offset })
+                if !CLAUSE_KWS.iter().any(|k| s.eq_ignore_ascii_case(k)) =>
+            {
+                let out = (s.clone(), *offset);
+                self.pos += 1;
+                Ok(out)
+            }
+            _ => Err(self.err_here(what)),
+        }
+    }
+
+    fn select_body(&mut self) -> Result<SelectQuery, SqlError> {
+        let mut items = vec![self.select_item()?];
+        while self.eat_sym(Sym::Comma) {
+            items.push(self.select_item()?);
+        }
+        self.expect_kw("FROM")?;
+        let from = self.table_ref()?;
+        let join = if self.peek().is_some_and(|t| t.is_kw("JOIN") || t.is_kw("INNER")) {
+            let offset = self.here();
+            self.eat_kw("INNER");
+            self.expect_kw("JOIN")?;
+            let table = self.table_ref()?;
+            self.expect_kw("ON")?;
+            let on = self.expr()?;
+            Some(JoinClause { table, on, offset })
+        } else {
+            None
+        };
+        let where_clause = if self.eat_kw("WHERE") { Some(self.expr()?) } else { None };
+        let mut group_by = Vec::new();
+        if self.eat_kw("GROUP") {
+            self.expect_kw("BY")?;
+            group_by.push(self.expr()?);
+            while self.eat_sym(Sym::Comma) {
+                group_by.push(self.expr()?);
+            }
+        }
+        let having = if self.eat_kw("HAVING") { Some(self.expr()?) } else { None };
+        let mut order_by = Vec::new();
+        if self.eat_kw("ORDER") {
+            self.expect_kw("BY")?;
+            loop {
+                let expr = self.expr()?;
+                let desc = self.eat_kw("DESC");
+                if !desc {
+                    self.eat_kw("ASC");
+                }
+                order_by.push(OrderItem { expr, desc });
+                if !self.eat_sym(Sym::Comma) {
+                    break;
+                }
+            }
+        }
+        let limit = if self.eat_kw("LIMIT") {
+            let off = self.here();
+            match self.next() {
+                Some(Token { tok: Tok::Number(n), .. })
+                    if n >= 0.0 && n.fract() == 0.0 && n <= usize::MAX as f64 =>
+                {
+                    Some(n as usize)
+                }
+                _ => return Err(SqlError::new("LIMIT takes a non-negative integer", off)),
+            }
+        } else {
+            None
+        };
+        Ok(SelectQuery { items, from, join, where_clause, group_by, having, order_by, limit })
+    }
+
+    fn select_item(&mut self) -> Result<SelectItem, SqlError> {
+        if let Some(Token { tok: Tok::Sym(Sym::Star), offset }) = self.peek() {
+            let offset = *offset;
+            self.pos += 1;
+            return Ok(SelectItem::Star { offset });
+        }
+        let expr = self.expr()?;
+        let alias = if self.eat_kw("AS") {
+            Some(self.ident("alias after AS")?.0)
+        } else {
+            // Bare alias: `SELECT hour h FROM …`.
+            match self.peek() {
+                Some(Token { tok: Tok::Ident(s), .. })
+                    if !CLAUSE_KWS.iter().any(|k| s.eq_ignore_ascii_case(k)) =>
+                {
+                    Some(self.ident("alias")?.0)
+                }
+                _ => None,
+            }
+        };
+        Ok(SelectItem::Expr { expr, alias })
+    }
+
+    fn table_ref(&mut self) -> Result<TableRef, SqlError> {
+        let (name, offset) = self.ident("table name")?;
+        let alias = if self.eat_kw("AS") {
+            Some(self.ident("alias after AS")?.0)
+        } else {
+            match self.peek() {
+                Some(Token { tok: Tok::Ident(s), .. })
+                    if !CLAUSE_KWS.iter().any(|k| s.eq_ignore_ascii_case(k)) =>
+                {
+                    Some(self.ident("alias")?.0)
+                }
+                _ => None,
+            }
+        };
+        Ok(TableRef { name, alias, offset })
+    }
+
+    // Precedence climbing: OR < AND < NOT < comparison/BETWEEN < +- < */ < unary.
+    fn expr(&mut self) -> Result<Expr, SqlError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, SqlError> {
+        let mut lhs = self.and_expr()?;
+        while self.peek().is_some_and(|t| t.is_kw("OR")) {
+            let offset = self.here();
+            self.pos += 1;
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary { op: BinOp::Or, lhs: Box::new(lhs), rhs: Box::new(rhs), offset };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, SqlError> {
+        let mut lhs = self.not_expr()?;
+        while self.peek().is_some_and(|t| t.is_kw("AND")) {
+            let offset = self.here();
+            self.pos += 1;
+            let rhs = self.not_expr()?;
+            lhs = Expr::Binary { op: BinOp::And, lhs: Box::new(lhs), rhs: Box::new(rhs), offset };
+        }
+        Ok(lhs)
+    }
+
+    fn not_expr(&mut self) -> Result<Expr, SqlError> {
+        if self.peek().is_some_and(|t| t.is_kw("NOT")) {
+            let offset = self.here();
+            self.pos += 1;
+            let expr = self.not_expr()?;
+            return Ok(Expr::Not { expr: Box::new(expr), offset });
+        }
+        self.comparison()
+    }
+
+    fn comparison(&mut self) -> Result<Expr, SqlError> {
+        let lhs = self.additive()?;
+        if self.peek().is_some_and(|t| t.is_kw("BETWEEN")) {
+            let offset = self.here();
+            self.pos += 1;
+            let lo = self.additive()?;
+            self.expect_kw("AND")?;
+            let hi = self.additive()?;
+            return Ok(Expr::Between {
+                expr: Box::new(lhs),
+                lo: Box::new(lo),
+                hi: Box::new(hi),
+                offset,
+            });
+        }
+        let op = match self.peek().map(|t| &t.tok) {
+            Some(Tok::Sym(Sym::Eq)) => BinOp::Eq,
+            Some(Tok::Sym(Sym::NotEq)) => BinOp::NotEq,
+            Some(Tok::Sym(Sym::Lt)) => BinOp::Lt,
+            Some(Tok::Sym(Sym::Le)) => BinOp::Le,
+            Some(Tok::Sym(Sym::Gt)) => BinOp::Gt,
+            Some(Tok::Sym(Sym::Ge)) => BinOp::Ge,
+            _ => return Ok(lhs),
+        };
+        let offset = self.here();
+        self.pos += 1;
+        let rhs = self.additive()?;
+        Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), offset })
+    }
+
+    fn additive(&mut self) -> Result<Expr, SqlError> {
+        let mut lhs = self.multiplicative()?;
+        loop {
+            let op = match self.peek().map(|t| &t.tok) {
+                Some(Tok::Sym(Sym::Plus)) => BinOp::Add,
+                Some(Tok::Sym(Sym::Minus)) => BinOp::Sub,
+                _ => break,
+            };
+            let offset = self.here();
+            self.pos += 1;
+            let rhs = self.multiplicative()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), offset };
+        }
+        Ok(lhs)
+    }
+
+    fn multiplicative(&mut self) -> Result<Expr, SqlError> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek().map(|t| &t.tok) {
+                Some(Tok::Sym(Sym::Star)) => BinOp::Mul,
+                Some(Tok::Sym(Sym::Slash)) => BinOp::Div,
+                _ => break,
+            };
+            let offset = self.here();
+            self.pos += 1;
+            let rhs = self.unary()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs), offset };
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, SqlError> {
+        if self.eat_sym(Sym::Plus) {
+            return self.unary();
+        }
+        if let Some(Token { tok: Tok::Sym(Sym::Minus), offset }) = self.peek() {
+            let offset = *offset;
+            self.pos += 1;
+            let expr = self.unary()?;
+            return Ok(Expr::Neg { expr: Box::new(expr), offset });
+        }
+        self.primary()
+    }
+
+    fn primary(&mut self) -> Result<Expr, SqlError> {
+        let Some(t) = self.peek().cloned() else {
+            return Err(self.err_here("an expression"));
+        };
+        match &t.tok {
+            Tok::Number(n) => {
+                self.pos += 1;
+                Ok(Expr::Number { value: *n, offset: t.offset })
+            }
+            Tok::Str(s) => {
+                self.pos += 1;
+                Ok(Expr::Str { value: s.clone(), offset: t.offset })
+            }
+            Tok::Sym(Sym::LParen) => {
+                self.pos += 1;
+                let inner = self.expr()?;
+                self.expect_sym(Sym::RParen)?;
+                Ok(inner)
+            }
+            Tok::Ident(name) => {
+                if let Some(func) = AggFunc::from_ident(name) {
+                    // Aggregate call only when followed by `(`; otherwise
+                    // treat `count`/`min` etc. as a plain identifier.
+                    if self.tokens.get(self.pos + 1).map(|t| &t.tok)
+                        == Some(&Tok::Sym(Sym::LParen))
+                    {
+                        self.pos += 2;
+                        if func == AggFunc::Count && self.eat_sym(Sym::Star) {
+                            self.expect_sym(Sym::RParen)?;
+                            return Ok(Expr::Agg { func, arg: None, offset: t.offset });
+                        }
+                        let arg = self.expr()?;
+                        self.expect_sym(Sym::RParen)?;
+                        return Ok(Expr::Agg {
+                            func,
+                            arg: Some(Box::new(arg)),
+                            offset: t.offset,
+                        });
+                    }
+                }
+                if CLAUSE_KWS.iter().any(|k| name.eq_ignore_ascii_case(k)) {
+                    return Err(self.err_here("an expression"));
+                }
+                let (first, offset) = self.ident("a column name")?;
+                if self.eat_sym(Sym::Dot) {
+                    let (col, _) = self.ident("a column name after `.`")?;
+                    Ok(Expr::Column { table: Some(first), name: col, offset })
+                } else {
+                    Ok(Expr::Column { table: None, name: first, offset })
+                }
+            }
+            _ => Err(self.err_here("an expression")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_clause_set() {
+        let s = parse(
+            "EXPLAIN SELECT hour, COUNT(*) AS n FROM trips t \
+             JOIN weather w ON t.day = w.day \
+             WHERE tip_amount > 1 AND day BETWEEN 10 AND 20 \
+             GROUP BY hour HAVING COUNT(*) > 5 \
+             ORDER BY n DESC, hour LIMIT 7;",
+        )
+        .unwrap();
+        assert!(s.explain);
+        let q = s.query;
+        assert_eq!(q.items.len(), 2);
+        assert_eq!(q.from.alias.as_deref(), Some("t"));
+        assert!(q.join.is_some());
+        assert!(q.where_clause.is_some());
+        assert_eq!(q.group_by.len(), 1);
+        assert!(q.having.is_some());
+        assert_eq!(q.order_by.len(), 2);
+        assert!(q.order_by[0].desc);
+        assert!(!q.order_by[1].desc);
+        assert_eq!(q.limit, Some(7));
+    }
+
+    #[test]
+    fn precedence_and_asts() {
+        let s = parse("SELECT a + b * 2 FROM trips WHERE NOT a = 1 OR b = 2 AND c = 3").unwrap();
+        let SelectItem::Expr { expr, .. } = &s.query.items[0] else { panic!() };
+        // a + (b * 2)
+        let Expr::Binary { op: BinOp::Add, rhs, .. } = expr else { panic!("{expr:?}") };
+        assert!(matches!(&**rhs, Expr::Binary { op: BinOp::Mul, .. }));
+        // (NOT (a=1)) OR ((b=2) AND (c=3))
+        let w = s.query.where_clause.unwrap();
+        let Expr::Binary { op: BinOp::Or, lhs, rhs, .. } = w else { panic!("{w:?}") };
+        assert!(matches!(&*lhs, Expr::Not { .. }));
+        assert!(matches!(&*rhs, Expr::Binary { op: BinOp::And, .. }));
+    }
+
+    #[test]
+    fn count_star_and_qualified_columns() {
+        let s = parse("SELECT COUNT(*), SUM(t.tip_amount) FROM trips t").unwrap();
+        let SelectItem::Expr { expr, .. } = &s.query.items[0] else { panic!() };
+        assert!(matches!(expr, Expr::Agg { func: AggFunc::Count, arg: None, .. }));
+        let SelectItem::Expr { expr, .. } = &s.query.items[1] else { panic!() };
+        let Expr::Agg { func: AggFunc::Sum, arg: Some(a), .. } = expr else { panic!() };
+        assert!(
+            matches!(&**a, Expr::Column { table: Some(t), name, .. } if t == "t" && name == "tip_amount")
+        );
+    }
+
+    #[test]
+    fn errors_point_into_the_text() {
+        let text = "SELECT FROM trips";
+        let e = parse(text).unwrap_err();
+        assert_eq!(e.offset, 7, "{e}");
+        let text = "SELECT a FROM";
+        let e = parse(text).unwrap_err();
+        assert_eq!(e.offset, text.len());
+        let e = parse("SELECT a FROM t LIMIT x").unwrap_err();
+        assert_eq!(e.offset, 22);
+        let e = parse("SELECT a FROM t WHERE a BETWEEN 1 2").unwrap_err();
+        assert!(e.message.contains("AND"), "{e}");
+        // Trailing garbage after a complete statement.
+        let e = parse("SELECT a FROM t; SELECT b FROM t").unwrap_err();
+        assert_eq!(e.offset, 17);
+    }
+}

@@ -1,0 +1,777 @@
+//! The cost-based physical planner and the lowering onto the generic
+//! [`Rdd`] lineage API.
+//!
+//! Physical decisions, made from table-size estimates (summing each
+//! source's input-split bytes) against the simulator's own cost
+//! constants:
+//!
+//! - **Join strategy** — broadcast (build the dimension table at the
+//!   driver, ship it inside the probe side's map closure) vs shuffle
+//!   (hash-partition both sides through the shuffle backend). The cost
+//!   model mirrors the A5 `join_crossover` study: broadcast pays a
+//!   per-map-wave read of the build table, shuffle pays an extra
+//!   full-table hop through the shuffle backend plus two extra stages.
+//!   `flint.sql.broadcast_threshold_bytes` caps broadcast eligibility
+//!   (0 forces every join through the shuffle — how Q6J is expressed).
+//! - **Join order** — the smaller estimated side becomes the build
+//!   side, whichever side of the JOIN it was written on.
+//! - **Partition counts** — shuffle widths are clamped to the
+//!   estimated distinct-key counts instead of always using
+//!   `flint.default_shuffle_partitions`.
+//!
+//! Lowering produces ordinary lineage — `text_file → (DayRange |
+//! Filter)* → flat_map(parse) → [join] → reduce_by_key → map` — so the
+//! DAG compiler, both schedulers, speculation, and the multi-tenant
+//! service run SQL exactly like any hand-built RDD program.
+
+use crate::compute::value::Value;
+use crate::config::FlintConfig;
+use crate::data::chrono::{day_index, hour_of_day, month_index, parse_datetime};
+use crate::data::schema::{NUM_COLUMNS, PAYMENT_CREDIT};
+use crate::data::weather::precip_bucket;
+use crate::exec::FlintContext;
+use crate::plan::Rdd;
+use crate::sql::lex::SqlError;
+use crate::sql::logical::{
+    Aggregate, Column, LogicalPlan, Mode, PushedPred, Scalar, Table, TableScan,
+};
+use crate::sql::parse::AggFunc;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+// ---------------------------------------------------------------------
+// Row parsing (projection-aware, both tables)
+// ---------------------------------------------------------------------
+
+/// Parse a raw trips CSV line into the values of `cols`, in layout
+/// order. Structurally malformed lines (wrong column count, unparsable
+/// referenced field) yield `None` and are dropped — the same contract
+/// as the kernel path's projected parse.
+pub fn parse_trip_row(line: &str, cols: &[Column]) -> Option<Vec<Value>> {
+    let mut fields = [""; NUM_COLUMNS];
+    let mut n = 0;
+    for f in line.split(',') {
+        if n == NUM_COLUMNS {
+            return None;
+        }
+        fields[n] = f;
+        n += 1;
+    }
+    if n != NUM_COLUMNS {
+        return None;
+    }
+    let needs_time =
+        cols.iter().any(|c| matches!(c, Column::Day | Column::Month | Column::Hour));
+    let ts = if needs_time { Some(parse_datetime(fields[2].as_bytes())?) } else { None };
+    let mut out = Vec::with_capacity(cols.len());
+    for c in cols {
+        let int = |i: usize| fields[i].parse::<i64>().ok().map(Value::I64);
+        let float = |i: usize| fields[i].parse::<f64>().ok().map(Value::F64);
+        out.push(match c {
+            Column::TaxiType => int(0)?,
+            Column::Day => Value::I64(day_index(ts?) as i64),
+            Column::Month => Value::I64(month_index(ts?) as i64),
+            Column::Hour => Value::I64(hour_of_day(ts?) as i64),
+            Column::PassengerCount => int(3)?,
+            Column::TripDistance => float(4)?,
+            Column::PickupLon => float(5)?,
+            Column::PickupLat => float(6)?,
+            Column::DropoffLon => float(7)?,
+            Column::DropoffLat => float(8)?,
+            Column::PaymentType => int(9)?,
+            Column::Credit => {
+                Value::I64(i64::from(fields[9].parse::<i64>().ok()? == PAYMENT_CREDIT as i64))
+            }
+            Column::FareAmount => float(10)?,
+            Column::TipAmount => float(11)?,
+            Column::TotalAmount => float(12)?,
+            Column::WeatherDay | Column::Precip | Column::Bucket => return None,
+        });
+    }
+    Some(out)
+}
+
+/// Parse a `day_index,precip` weather line into the values of `cols`.
+pub fn parse_weather_row(line: &str, cols: &[Column]) -> Option<Vec<Value>> {
+    let (d, p) = line.split_once(',')?;
+    let day: i64 = d.trim().parse().ok()?;
+    let precip: f64 = p.trim().parse().ok()?;
+    let mut out = Vec::with_capacity(cols.len());
+    for c in cols {
+        out.push(match c {
+            Column::WeatherDay => Value::I64(day),
+            Column::Precip => Value::F64(precip),
+            Column::Bucket => Value::I64(precip_bucket(precip as f32) as i64),
+            _ => return None,
+        });
+    }
+    Some(out)
+}
+
+pub fn parse_row(table: Table, line: &str, cols: &[Column]) -> Option<Vec<Value>> {
+    match table {
+        Table::Trips => parse_trip_row(line, cols),
+        Table::Weather => parse_weather_row(line, cols),
+    }
+}
+
+/// A row accessor over a parsed layout, for [`Scalar::eval`]. Missing
+/// columns read as NaN (every comparison on them is false).
+fn col_accessor<'a>(layout: &'a [Column], cells: &'a [Value]) -> impl Fn(Column) -> f64 + 'a {
+    move |c| {
+        layout
+            .iter()
+            .position(|x| *x == c)
+            .and_then(|i| cells.get(i))
+            .and_then(Value::as_f64)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+/// Canonical `-0.0 -> 0.0` so float keys hash identically on both join
+/// sides (`Value::stable_hash` is bit-based).
+fn norm(v: f64) -> f64 {
+    if v == 0.0 {
+        0.0
+    } else {
+        v
+    }
+}
+
+fn key_value(int_key: bool, v: f64) -> Value {
+    if int_key {
+        Value::I64(v as i64)
+    } else {
+        Value::F64(norm(v))
+    }
+}
+
+fn out_value(int: bool, v: f64) -> Value {
+    if int && v.is_finite() {
+        Value::I64(v as i64)
+    } else {
+        Value::F64(norm(v))
+    }
+}
+
+/// Does a raw trips line fall inside an inclusive day range? (The
+/// driver-side mirror of [`crate::plan::DynOp::DayRange`].)
+fn line_in_day_range(line: &str, lo: i32, hi: i32) -> bool {
+    line.split(',')
+        .nth(2)
+        .and_then(|f| parse_datetime(f.as_bytes()))
+        .map(day_index)
+        .is_some_and(|d| (lo..=hi).contains(&d))
+}
+
+// ---------------------------------------------------------------------
+// Cost model (calibrated against the A5 join_crossover study)
+// ---------------------------------------------------------------------
+
+/// Average bytes of one trips CSV row (the generator produces ~131).
+const TRIP_ROW_BYTES: f64 = 131.0;
+/// Encoded bytes of one shuffled `(key, row)` pair on the join edge.
+const SHUFFLED_PAIR_BYTES: f64 = 24.0;
+
+/// Extra latency a broadcast join adds over a plain scan: every wave of
+/// probe-side map tasks reads the whole build table from S3 before it
+/// can join (A5's Q6 path — per-task GETs of the dimension table).
+pub fn broadcast_join_cost_s(cfg: &FlintConfig, probe_bytes: u64, build_bytes: u64) -> f64 {
+    let sim = &cfg.sim;
+    let tasks = (probe_bytes as f64 / cfg.flint.input_split_bytes as f64).ceil().max(1.0);
+    let waves = (tasks / sim.max_concurrency.max(1) as f64).ceil().max(1.0);
+    waves * (sim.s3_first_byte_s + build_bytes as f64 / (sim.s3_flint_mbps * 1e6))
+}
+
+/// Extra latency a shuffle join adds: two extra stages (build-side
+/// scan + join) on the schedule, the build-side scan itself, and one
+/// full probe-side hop through the shuffle backend (every probe row is
+/// re-keyed and shuffled before it can meet the build side — A5's Q6J
+/// path).
+pub fn shuffle_join_cost_s(cfg: &FlintConfig, probe_bytes: u64, build_bytes: u64) -> f64 {
+    let sim = &cfg.sim;
+    let conc = sim.max_concurrency.max(1) as f64;
+    let split = cfg.flint.input_split_bytes.max(1) as f64;
+    let stages = 2.0 * sim.scheduler_overhead_per_stage_s;
+    let build_tasks = (build_bytes as f64 / split).ceil().max(1.0);
+    let build_waves = (build_tasks / conc).ceil().max(1.0);
+    let build_scan =
+        build_waves * (sim.s3_first_byte_s + (build_bytes as f64).min(split) / (sim.s3_flint_mbps * 1e6));
+    let probe_rows = probe_bytes as f64 / TRIP_ROW_BYTES;
+    let shuffle_bytes = probe_rows * SHUFFLED_PAIR_BYTES;
+    let probe_tasks = (probe_bytes as f64 / split).ceil().max(1.0);
+    let writers = probe_tasks.min(conc).max(1.0);
+    let readers = (cfg.flint.default_shuffle_partitions as f64).min(conc).max(1.0);
+    let transfer =
+        shuffle_bytes / (sim.sqs_mbps * 1e6) * (1.0 / writers + 1.0 / readers);
+    stages + build_scan + transfer
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinStrategy {
+    Broadcast,
+    Shuffle,
+}
+
+impl JoinStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            JoinStrategy::Broadcast => "broadcast",
+            JoinStrategy::Shuffle => "shuffle",
+        }
+    }
+}
+
+/// Pick the join strategy for a build side of `build_bytes` against a
+/// probe side of `probe_bytes`. Returns the choice plus both estimated
+/// extra costs. `flint.sql.broadcast_threshold_bytes` is an
+/// eligibility cap: a build side larger than it never broadcasts, and
+/// a threshold of 0 forces every join through the shuffle.
+pub fn choose_join_strategy(
+    cfg: &FlintConfig,
+    probe_bytes: u64,
+    build_bytes: u64,
+) -> (JoinStrategy, f64, f64) {
+    let b = broadcast_join_cost_s(cfg, probe_bytes, build_bytes);
+    let s = shuffle_join_cost_s(cfg, probe_bytes, build_bytes);
+    let eligible = build_bytes <= cfg.flint.sql.broadcast_threshold_bytes;
+    let strategy = if eligible && b <= s { JoinStrategy::Broadcast } else { JoinStrategy::Shuffle };
+    (strategy, b, s)
+}
+
+#[derive(Debug, Clone)]
+pub struct JoinChoice {
+    pub strategy: JoinStrategy,
+    pub build: Table,
+    pub probe: Table,
+    pub build_bytes: u64,
+    pub probe_bytes: u64,
+    pub broadcast_cost_s: f64,
+    pub shuffle_cost_s: f64,
+    /// Shuffle-join partition count (unused by a broadcast join).
+    pub partitions: usize,
+    /// Human-readable rationale, rendered in EXPLAIN.
+    pub reason: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct PhysicalChoice {
+    pub optimizer: bool,
+    pub join: Option<JoinChoice>,
+    /// Aggregation shuffle width, when the plan aggregates.
+    pub agg_partitions: Option<usize>,
+}
+
+impl PhysicalChoice {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if let Some(j) = &self.join {
+            out.push_str(&format!(
+                "join: {} build={} ({} B) probe={} ({} B) cost[broadcast]={:.3}s cost[shuffle]={:.3}s partitions={} — {}\n",
+                j.strategy.name(),
+                j.build.name(),
+                j.build_bytes,
+                j.probe.name(),
+                j.probe_bytes,
+                j.broadcast_cost_s,
+                j.shuffle_cost_s,
+                j.partitions,
+                j.reason,
+            ));
+        }
+        if let Some(p) = self.agg_partitions {
+            out.push_str(&format!("aggregate: partitions={p}\n"));
+        }
+        if !self.optimizer {
+            out.push_str("(optimizer off: no pushdown, shuffle join, default partitions)\n");
+        }
+        out
+    }
+}
+
+/// Total bytes a source scan will read, from the session's split
+/// resolution (manifest-backed sources included).
+fn source_bytes(sc: &FlintContext, table: Table) -> u64 {
+    sc.input_splits(table.bucket(), table.prefix())
+        .iter()
+        .map(|s| s.end - s.start)
+        .sum()
+}
+
+/// Make the physical decisions for an (optimized) logical plan,
+/// possibly swapping the join sides so the smaller table builds.
+/// Returns the final plan and the recorded choices.
+pub fn plan_physical(sc: &FlintContext, plan: &LogicalPlan, optimizer: bool) -> (LogicalPlan, PhysicalChoice) {
+    let cfg = sc.env().config();
+    let mut p = plan.clone();
+    let default_parts = cfg.flint.default_shuffle_partitions.max(1);
+
+    let join = if p.join.is_some() {
+        let fact_bytes = source_bytes(sc, p.fact.table);
+        let dim_bytes = source_bytes(sc, p.join.as_ref().expect("join").dim.table);
+        if optimizer && fact_bytes < dim_bytes {
+            // Reorder: build from the smaller side. Swapping scan and
+            // key keeps the (symmetric) inner equi-join's semantics.
+            let j = p.join.as_mut().expect("join");
+            std::mem::swap(&mut p.fact, &mut j.dim);
+            std::mem::swap(&mut j.fact_key, &mut j.dim_key);
+        }
+        let j = p.join.as_ref().expect("join");
+        let (probe_bytes, build_bytes) =
+            if optimizer && fact_bytes < dim_bytes { (dim_bytes, fact_bytes) } else { (fact_bytes, dim_bytes) };
+        let key_ndv = j.fact_key.ndv().min(j.dim_key.ndv());
+        let partitions = key_ndv.min(default_parts as u64).max(1) as usize;
+        let choice = if optimizer {
+            let (strategy, b, s) = choose_join_strategy(cfg, probe_bytes, build_bytes);
+            let reason = if build_bytes > cfg.flint.sql.broadcast_threshold_bytes {
+                format!(
+                    "build side exceeds flint.sql.broadcast_threshold_bytes={}",
+                    cfg.flint.sql.broadcast_threshold_bytes
+                )
+            } else if strategy == JoinStrategy::Broadcast {
+                "broadcast estimated cheaper".to_string()
+            } else {
+                "shuffle estimated cheaper".to_string()
+            };
+            JoinChoice {
+                strategy,
+                build: j.dim.table,
+                probe: p.fact.table,
+                build_bytes,
+                probe_bytes,
+                broadcast_cost_s: b,
+                shuffle_cost_s: s,
+                partitions,
+                reason,
+            }
+        } else {
+            let (_, b, s) = choose_join_strategy(cfg, probe_bytes, build_bytes);
+            JoinChoice {
+                strategy: JoinStrategy::Shuffle,
+                build: j.dim.table,
+                probe: p.fact.table,
+                build_bytes,
+                probe_bytes,
+                broadcast_cost_s: b,
+                shuffle_cost_s: s,
+                partitions: default_parts,
+                reason: "optimizer off".to_string(),
+            }
+        };
+        Some(choice)
+    } else {
+        None
+    };
+
+    let agg_partitions = match &p.mode {
+        Mode::Project { .. } => None,
+        Mode::Aggregate { keys, .. } => {
+            if optimizer {
+                let mut groups: u64 = 1;
+                for k in keys {
+                    groups = groups.saturating_mul(k.ndv());
+                }
+                Some(groups.min(default_parts as u64).max(1) as usize)
+            } else {
+                Some(default_parts)
+            }
+        }
+    };
+
+    (p, PhysicalChoice { optimizer, join, agg_partitions })
+}
+
+// ---------------------------------------------------------------------
+// Lowering onto the Rdd lineage API
+// ---------------------------------------------------------------------
+
+/// One scan's lineage: source, pushed predicate ops in source order
+/// (typed `DayRange`s stay visible to split pruning; opaque conjuncts
+/// become raw-line `Filter`s), then the projection-aware parse.
+fn scan_lineage(sc: &FlintContext, scan: &TableScan) -> Rdd {
+    let mut rdd = sc.text_file(scan.table.bucket(), scan.table.prefix());
+    let table = scan.table;
+    for pred in &scan.pushed {
+        match pred {
+            PushedPred::DayRange { lo, hi } => rdd = rdd.filter_day_range(*lo, *hi),
+            PushedPred::Generic(s) => {
+                let s = s.clone();
+                let cols: Vec<Column> = s.columns().into_iter().collect();
+                rdd = rdd.filter(move |v| {
+                    let Some(line) = v.as_str() else { return false };
+                    let Some(cells) = parse_row(table, line, &cols) else { return false };
+                    s.test(&col_accessor(&cols, &cells))
+                });
+            }
+        }
+    }
+    let layout = scan.columns();
+    rdd.flat_map(move |v| {
+        let Some(line) = v.as_str() else { return Vec::new() };
+        match parse_row(table, line, &layout) {
+            Some(cells) => vec![Value::List(cells)],
+            None => Vec::new(),
+        }
+    })
+}
+
+/// Read and filter the build table at the driver, keyed for the probe
+/// side's map closure (the "broadcast variable").
+fn broadcast_build(
+    sc: &FlintContext,
+    scan: &TableScan,
+    key: &Scalar,
+    int_key: bool,
+) -> Result<HashMap<u64, Vec<Vec<Value>>>, SqlError> {
+    let env = sc.env();
+    let layout = scan.columns();
+    let mut map: HashMap<u64, Vec<Vec<Value>>> = HashMap::new();
+    let listed = env
+        .s3()
+        .list(scan.table.bucket(), scan.table.prefix())
+        .map_err(|e| SqlError::new(format!("broadcast build of `{}`: {e}", scan.table.name()), 0))?;
+    for (obj_key, _) in listed {
+        let (obj, _dt) = env
+            .s3()
+            .get_object(scan.table.bucket(), &obj_key, env.flint_read_profile())
+            .map_err(|e| {
+                SqlError::new(format!("broadcast build of `{}`: {e}", scan.table.name()), 0)
+            })?;
+        let text = String::from_utf8_lossy(obj.bytes());
+        'line: for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            for pred in &scan.pushed {
+                let keep = match pred {
+                    PushedPred::DayRange { lo, hi } => line_in_day_range(line, *lo, *hi),
+                    PushedPred::Generic(s) => {
+                        let cols: Vec<Column> = s.columns().into_iter().collect();
+                        match parse_row(scan.table, line, &cols) {
+                            Some(cells) => s.test(&col_accessor(&cols, &cells)),
+                            None => false,
+                        }
+                    }
+                };
+                if !keep {
+                    continue 'line;
+                }
+            }
+            let Some(cells) = parse_row(scan.table, line, &layout) else { continue };
+            let k = key.eval(&col_accessor(&layout, &cells));
+            map.entry(encode_key(int_key, k)).or_default().push(cells);
+        }
+    }
+    Ok(map)
+}
+
+fn encode_key(int_key: bool, v: f64) -> u64 {
+    if int_key {
+        (v as i64) as u64
+    } else {
+        norm(v).to_bits()
+    }
+}
+
+/// Lower the final logical plan (post-physical-decisions) to lineage.
+pub fn build_rdd(
+    sc: &FlintContext,
+    p: &LogicalPlan,
+    choice: &PhysicalChoice,
+) -> Result<Rdd, SqlError> {
+    let fact_layout = p.fact.columns();
+    let mut layout = fact_layout.clone();
+    let mut rdd = scan_lineage(sc, &p.fact);
+
+    if let Some(j) = &p.join {
+        let jc = choice.join.as_ref().expect("join choice");
+        let int_key = j.fact_key.is_int() && j.dim_key.is_int();
+        let dim_layout = j.dim.columns();
+        layout.extend(dim_layout.iter().copied());
+        match jc.strategy {
+            JoinStrategy::Broadcast => {
+                let map = Arc::new(broadcast_build(sc, &j.dim, &j.dim_key, int_key)?);
+                let fkey = j.fact_key.clone();
+                let flayout = fact_layout.clone();
+                rdd = rdd.flat_map(move |v| {
+                    let Value::List(cells) = v else { return Vec::new() };
+                    let k = fkey.eval(&col_accessor(&flayout, &cells));
+                    match map.get(&encode_key(int_key, k)) {
+                        None => Vec::new(),
+                        Some(rows) => rows
+                            .iter()
+                            .map(|dim_cells| {
+                                let mut merged = cells.clone();
+                                merged.extend(dim_cells.iter().cloned());
+                                Value::List(merged)
+                            })
+                            .collect(),
+                    }
+                });
+            }
+            JoinStrategy::Shuffle => {
+                let fkey = j.fact_key.clone();
+                let flayout = fact_layout.clone();
+                let fact_pairs = rdd.flat_map(move |v| {
+                    let Value::List(cells) = v else { return Vec::new() };
+                    let k = key_value(int_key, fkey.eval(&col_accessor(&flayout, &cells)));
+                    vec![Value::pair(k, Value::List(cells))]
+                });
+                let dkey = j.dim_key.clone();
+                let dlayout = dim_layout.clone();
+                let dim_pairs = scan_lineage(sc, &j.dim).flat_map(move |v| {
+                    let Value::List(cells) = v else { return Vec::new() };
+                    let k = key_value(int_key, dkey.eval(&col_accessor(&dlayout, &cells)));
+                    vec![Value::pair(k, Value::List(cells))]
+                });
+                rdd = fact_pairs.join(&dim_pairs, jc.partitions).flat_map(|v| {
+                    let Value::Pair(_, lr) = v else { return Vec::new() };
+                    let Value::Pair(l, r) = *lr else { return Vec::new() };
+                    let (Value::List(mut lc), Value::List(rc)) = (*l, *r) else {
+                        return Vec::new();
+                    };
+                    lc.extend(rc);
+                    vec![Value::List(lc)]
+                });
+            }
+        }
+    }
+
+    // Residual (cross-table or un-pushed) conjuncts above the join.
+    for pred in &p.filter {
+        let s = pred.clone();
+        let lay = layout.clone();
+        rdd = rdd.filter(move |v| {
+            let Value::List(cells) = v else { return false };
+            s.test(&col_accessor(&lay, &cells))
+        });
+    }
+
+    match &p.mode {
+        Mode::Project { exprs } => {
+            let exprs = exprs.clone();
+            let ints = p.int_outputs.clone();
+            let lay = layout.clone();
+            rdd = rdd.flat_map(move |v| {
+                let Value::List(cells) = v else { return Vec::new() };
+                let acc = col_accessor(&lay, &cells);
+                let row = exprs
+                    .iter()
+                    .zip(&ints)
+                    .map(|(e, int)| out_value(*int, e.eval(&acc)))
+                    .collect();
+                vec![Value::List(row)]
+            });
+        }
+        Mode::Aggregate { keys, aggs, select } => {
+            let partitions = choice.agg_partitions.expect("aggregate partitions");
+            let n_keys = keys.len();
+            // Map side: (group key, per-aggregate state slots).
+            let keys_cl = keys.clone();
+            let key_ints: Vec<bool> = keys.iter().map(Scalar::is_int).collect();
+            let aggs_cl = aggs.clone();
+            let lay = layout.clone();
+            rdd = rdd.flat_map(move |v| {
+                let Value::List(cells) = v else { return Vec::new() };
+                let acc = col_accessor(&lay, &cells);
+                let key = match keys_cl.len() {
+                    0 => Value::I64(0),
+                    1 => key_value(key_ints[0], keys_cl[0].eval(&acc)),
+                    _ => Value::List(
+                        keys_cl
+                            .iter()
+                            .zip(&key_ints)
+                            .map(|(k, int)| key_value(*int, k.eval(&acc)))
+                            .collect(),
+                    ),
+                };
+                let mut state = Vec::new();
+                for a in &aggs_cl {
+                    let arg = a.arg.as_ref().map(|e| e.eval(&acc)).unwrap_or(1.0);
+                    match a.func {
+                        AggFunc::Count => state.push(Value::I64(1)),
+                        AggFunc::Sum | AggFunc::Min | AggFunc::Max => {
+                            state.push(Value::F64(arg));
+                        }
+                        AggFunc::Avg => {
+                            state.push(Value::F64(arg));
+                            state.push(Value::I64(1));
+                        }
+                    }
+                }
+                vec![Value::pair(key, Value::List(state))]
+            });
+            // Combine: slot-wise fold (associative + commutative; sums
+            // of integral values stay exact in f64 well past any
+            // realistic row count, so fold order cannot change them).
+            let ops = slot_ops(aggs);
+            rdd = rdd.reduce_by_key(partitions, move |a, b| {
+                let (Value::List(xa), Value::List(xb)) = (a, b) else { return Value::Null };
+                let cells = xa
+                    .into_iter()
+                    .zip(xb)
+                    .zip(&ops)
+                    .map(|((x, y), op)| {
+                        let (xf, yf) =
+                            (x.as_f64().unwrap_or(f64::NAN), y.as_f64().unwrap_or(f64::NAN));
+                        match op {
+                            SlotOp::AddI => {
+                                Value::I64(x.as_i64().unwrap_or(0) + y.as_i64().unwrap_or(0))
+                            }
+                            SlotOp::AddF => Value::F64(xf + yf),
+                            SlotOp::MinF => Value::F64(xf.min(yf)),
+                            SlotOp::MaxF => Value::F64(xf.max(yf)),
+                        }
+                    })
+                    .collect();
+                Value::List(cells)
+            });
+            // Finalize each group into `[key…, aggregate…]` f64 cells.
+            let aggs_fin = aggs.clone();
+            rdd = rdd.flat_map(move |v| {
+                let Value::Pair(k, s) = v else { return Vec::new() };
+                let Value::List(state) = *s else { return Vec::new() };
+                let mut row: Vec<f64> = Vec::with_capacity(n_keys + aggs_fin.len());
+                match (n_keys, *k) {
+                    (0, _) => {}
+                    (1, key) => row.push(key.as_f64().unwrap_or(f64::NAN)),
+                    (_, Value::List(parts)) => {
+                        row.extend(parts.iter().map(|p| p.as_f64().unwrap_or(f64::NAN)));
+                    }
+                    _ => return Vec::new(),
+                }
+                let mut i = 0;
+                for a in &aggs_fin {
+                    let slot = |j: usize| {
+                        state.get(j).and_then(Value::as_f64).unwrap_or(f64::NAN)
+                    };
+                    match a.func {
+                        AggFunc::Count | AggFunc::Sum | AggFunc::Min | AggFunc::Max => {
+                            row.push(slot(i));
+                            i += 1;
+                        }
+                        AggFunc::Avg => {
+                            row.push(slot(i) / slot(i + 1));
+                            i += 2;
+                        }
+                    }
+                }
+                vec![Value::List(row.into_iter().map(Value::F64).collect())]
+            });
+            // HAVING filters groups before the final projection.
+            if let Some(h) = &p.having {
+                let h = h.clone();
+                rdd = rdd.filter(move |v| {
+                    let Value::List(cells) = v else { return false };
+                    let vals: Vec<f64> =
+                        cells.iter().map(|c| c.as_f64().unwrap_or(f64::NAN)).collect();
+                    h.eval(&vals[..n_keys.min(vals.len())], &vals[n_keys.min(vals.len())..])
+                        != 0.0
+                });
+            }
+            let select = select.clone();
+            let ints = p.int_outputs.clone();
+            rdd = rdd.flat_map(move |v| {
+                let Value::List(cells) = v else { return Vec::new() };
+                let vals: Vec<f64> =
+                    cells.iter().map(|c| c.as_f64().unwrap_or(f64::NAN)).collect();
+                let split = n_keys.min(vals.len());
+                let (kv, av) = vals.split_at(split);
+                let row = select
+                    .iter()
+                    .zip(&ints)
+                    .map(|(e, int)| out_value(*int, e.eval(kv, av)))
+                    .collect();
+                vec![Value::List(row)]
+            });
+        }
+    }
+    Ok(rdd)
+}
+
+#[derive(Debug, Clone, Copy)]
+enum SlotOp {
+    AddI,
+    AddF,
+    MinF,
+    MaxF,
+}
+
+fn slot_ops(aggs: &[Aggregate]) -> Vec<SlotOp> {
+    let mut ops = Vec::new();
+    for a in aggs {
+        match a.func {
+            AggFunc::Count => ops.push(SlotOp::AddI),
+            AggFunc::Sum => ops.push(SlotOp::AddF),
+            AggFunc::Min => ops.push(SlotOp::MinF),
+            AggFunc::Max => ops.push(SlotOp::MaxF),
+            AggFunc::Avg => {
+                ops.push(SlotOp::AddF);
+                ops.push(SlotOp::AddI);
+            }
+        }
+    }
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trip_row_parses_projected_fields_only() {
+        let line = "1,2013-01-08 10:15:00,2013-01-08 10:35:30,2,3.5,-74.0,40.7,-74.01,40.71,1,12.5,2.0,15.5";
+        let cols = [Column::Hour, Column::Credit, Column::TipAmount];
+        let row = parse_trip_row(line, &cols).unwrap();
+        assert_eq!(row, vec![Value::I64(10), Value::I64(1), Value::F64(2.0)]);
+        // A full-layout parse works too.
+        let all = parse_trip_row(line, Table::Trips.columns()).unwrap();
+        assert_eq!(all.len(), Table::Trips.columns().len());
+        // Wrong column counts and garbage referenced fields drop.
+        assert!(parse_trip_row("1,2,3", &cols).is_none());
+        assert!(parse_trip_row(&format!("{line},extra"), &cols).is_none());
+        let bad = line.replace("2013-01-08 10:35:30", "not-a-date");
+        assert!(parse_trip_row(&bad, &cols).is_none());
+        // …but garbage in an *unreferenced* field is fine.
+        let bad_fare = line.replace(",12.5,", ",oops,");
+        assert!(parse_trip_row(&bad_fare, &[Column::Hour]).is_some());
+        assert!(parse_trip_row(&bad_fare, &[Column::FareAmount]).is_none());
+    }
+
+    #[test]
+    fn weather_row_parses_and_buckets() {
+        let row = parse_weather_row("17,0.300", Table::Weather.columns()).unwrap();
+        assert_eq!(row[0], Value::I64(17));
+        assert_eq!(row[1], Value::F64(0.3));
+        assert_eq!(row[2], Value::I64(precip_bucket(0.3) as i64));
+        // Inflated weather lines (padded fraction digits) still parse.
+        assert!(parse_weather_row("17,0.3000000000", &[Column::Bucket]).is_some());
+        assert!(parse_weather_row("not-a-line", &[Column::Bucket]).is_none());
+    }
+
+    #[test]
+    fn cost_model_crosses_over_in_build_bytes() {
+        // Production scale (64 MB splits, concurrency 80): the probe
+        // side runs in one wave. Under `for_tests()`'s 64 KB splits the
+        // same probe would take 1024 waves, each re-reading the build
+        // table — there broadcast genuinely loses even at 30 KB, which
+        // is the model working, not the property under test.
+        let cfg = FlintConfig::default();
+        let probe = 512 * 1024 * 1024;
+        // Tiny build side: broadcast must win.
+        let (s, b, sh) = choose_join_strategy(&cfg, probe, 30_000);
+        assert_eq!(s, JoinStrategy::Broadcast, "b={b} sh={sh}");
+        // Build cost grows linearly with build bytes; shuffle cost is
+        // flat in build bytes (modulo its own tiny scan term), so a
+        // large enough build side must flip the choice.
+        let (s2, b2, sh2) = choose_join_strategy(&cfg, probe, 8 * 1024 * 1024 * 1024);
+        assert_eq!(s2, JoinStrategy::Shuffle, "b={b2} sh={sh2}");
+        assert!(b2 > b, "broadcast cost is increasing in build bytes");
+        // The threshold is an eligibility cap: 0 forces shuffle even
+        // when broadcast is estimated cheaper.
+        let mut forced = cfg.clone();
+        forced.flint.sql.broadcast_threshold_bytes = 0;
+        let (s3, _, _) = choose_join_strategy(&forced, probe, 30_000);
+        assert_eq!(s3, JoinStrategy::Shuffle);
+    }
+}

@@ -1,0 +1,385 @@
+//! Rule-based logical rewrites, applied in order when
+//! `flint.sql.optimizer = on`:
+//!
+//! 1. **Constant folding** — any expression subtree without a column
+//!    reference collapses to a literal.
+//! 2. **Predicate pushdown** — WHERE conjuncts referencing a single
+//!    table move below the join into that table's scan (always-true
+//!    conjuncts are dropped outright).
+//! 3. **Day-range extraction** — pushed trip conjuncts of the shape
+//!    `day/month <cmp> literal` or `day/month BETWEEN a AND b` become
+//!    typed day ranges. These lower to [`crate::plan::DynOp::DayRange`]
+//!    ops, which the engine's stats-based pruning (`flint.scan.prune`)
+//!    can skip whole splits with — an opaque closure never prunes.
+//!    `month` converts exactly: month boundaries align with day
+//!    boundaries, so `month BETWEEN a AND b` is the day interval
+//!    `[first_day(a), last_day(b)]`.
+//! 4. **Projection pushdown** — each scan materializes only the
+//!    columns the plan references above it.
+
+use crate::data::chrono::days_from_civil;
+use crate::sql::logical::{Column, LogicalPlan, Mode, PushedPred, Scalar, Table, TableScan};
+use crate::sql::parse::BinOp;
+
+/// Apply every rewrite rule, producing the optimized logical plan.
+pub fn rewrite(plan: &LogicalPlan) -> LogicalPlan {
+    let mut p = plan.clone();
+    fold_plan(&mut p);
+    push_predicates(&mut p);
+    extract_day_ranges(&mut p.fact);
+    if let Some(j) = &mut p.join {
+        extract_day_ranges(&mut j.dim);
+    }
+    push_projection(&mut p);
+    p
+}
+
+// ---------------------------------------------------------------------
+// Constant folding
+// ---------------------------------------------------------------------
+
+/// Fold one scalar bottom-up: constant subtrees evaluate to literals.
+pub fn fold(s: &Scalar) -> Scalar {
+    let folded = match s {
+        Scalar::Col(_) | Scalar::LitI(_) | Scalar::LitF(_) => s.clone(),
+        Scalar::Neg(e) => Scalar::Neg(Box::new(fold(e))),
+        Scalar::Not(e) => Scalar::Not(Box::new(fold(e))),
+        Scalar::Bin(op, l, r) => Scalar::Bin(*op, Box::new(fold(l)), Box::new(fold(r))),
+        Scalar::Between(e, lo, hi) => {
+            Scalar::Between(Box::new(fold(e)), Box::new(fold(lo)), Box::new(fold(hi)))
+        }
+    };
+    if matches!(folded, Scalar::Col(_) | Scalar::LitI(_) | Scalar::LitF(_)) {
+        return folded;
+    }
+    if folded.is_const() {
+        let v = folded.eval(&|_| 0.0);
+        if v.is_finite() {
+            return Scalar::lit(v);
+        }
+    }
+    folded
+}
+
+fn fold_plan(p: &mut LogicalPlan) {
+    for pred in &mut p.filter {
+        *pred = fold(pred);
+    }
+    if let Some(j) = &mut p.join {
+        j.fact_key = fold(&j.fact_key);
+        j.dim_key = fold(&j.dim_key);
+    }
+    match &mut p.mode {
+        Mode::Project { exprs } => {
+            for e in exprs {
+                *e = fold(e);
+            }
+        }
+        Mode::Aggregate { keys, aggs, .. } => {
+            for k in keys {
+                *k = fold(k);
+            }
+            for a in aggs {
+                if let Some(arg) = &mut a.arg {
+                    *arg = fold(arg);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Predicate pushdown
+// ---------------------------------------------------------------------
+
+fn push_predicates(p: &mut LogicalPlan) {
+    let dim_name = p.join.as_ref().map(|j| j.dim.table.name());
+    let mut residual = Vec::new();
+    for pred in p.filter.drain(..) {
+        // An always-true conjunct disappears; an always-false one is
+        // pushed like any other (the scan then emits nothing).
+        if pred == Scalar::LitI(1) {
+            continue;
+        }
+        let tables = pred.tables();
+        let single = tables.len() <= 1;
+        let touches_dim = dim_name.is_some_and(|d| tables.contains(d));
+        if single && !touches_dim {
+            p.fact.pushed.push(PushedPred::Generic(pred));
+        } else if single && touches_dim {
+            p.join
+                .as_mut()
+                .expect("dim conjunct implies a join")
+                .dim
+                .pushed
+                .push(PushedPred::Generic(pred));
+        } else {
+            residual.push(pred);
+        }
+    }
+    p.filter = residual;
+}
+
+// ---------------------------------------------------------------------
+// Day-range extraction
+// ---------------------------------------------------------------------
+
+/// First day index of month-index `m` (months since Jan 2009).
+fn first_day_of_month(m: i64) -> i64 {
+    let y = 2009 + m.div_euclid(12);
+    let mo = (m.rem_euclid(12) + 1) as u32;
+    days_from_civil(y, mo, 1) - days_from_civil(2009, 1, 1)
+}
+
+/// Clamp an `f64`/`i64` bound into day-index space.
+fn clamp_day(v: i64) -> i32 {
+    v.clamp(i32::MIN as i64, i32::MAX as i64) as i32
+}
+
+/// Inclusive integer interval implied by `col <cmp> value` on an
+/// integer column: `(lo, hi)` with `i64::MIN`/`MAX` for unbounded.
+fn int_bounds(op: BinOp, v: f64, col_on_left: bool) -> Option<(i64, i64)> {
+    // Normalize to `col <op> v`.
+    let op = if col_on_left {
+        op
+    } else {
+        match op {
+            BinOp::Lt => BinOp::Gt,
+            BinOp::Le => BinOp::Ge,
+            BinOp::Gt => BinOp::Lt,
+            BinOp::Ge => BinOp::Le,
+            other => other,
+        }
+    };
+    Some(match op {
+        BinOp::Eq => {
+            if v.fract() == 0.0 {
+                (v as i64, v as i64)
+            } else {
+                (1, 0) // unsatisfiable on an integer column
+            }
+        }
+        BinOp::Ge => (v.ceil() as i64, i64::MAX),
+        BinOp::Gt => (v.floor() as i64 + 1, i64::MAX),
+        BinOp::Le => (i64::MIN, v.floor() as i64),
+        BinOp::Lt => (i64::MIN, v.ceil() as i64 - 1),
+        _ => return None,
+    })
+}
+
+fn const_val(s: &Scalar) -> Option<f64> {
+    match s {
+        Scalar::LitI(v) => Some(*v as f64),
+        Scalar::LitF(v) => Some(*v),
+        _ => None,
+    }
+}
+
+/// The day range equivalent to a (folded) trips conjunct, if it is a
+/// `day`/`month` range pattern over a bare column.
+fn day_range_of(pred: &Scalar) -> Option<(i32, i32)> {
+    let to_days = |col: Column, lo: i64, hi: i64| -> (i32, i32) {
+        match col {
+            Column::Day => (clamp_day(lo), clamp_day(hi)),
+            Column::Month => {
+                let lo = if lo == i64::MIN { i64::MIN } else { first_day_of_month(lo) };
+                let hi = if hi == i64::MAX { i64::MAX } else { first_day_of_month(hi + 1) - 1 };
+                (clamp_day(lo), clamp_day(hi))
+            }
+            _ => unreachable!(),
+        }
+    };
+    match pred {
+        Scalar::Between(e, lo, hi) => {
+            let Scalar::Col(col @ (Column::Day | Column::Month)) = **e else { return None };
+            let (a, b) = (const_val(lo)?, const_val(hi)?);
+            let (lo1, _) = int_bounds(BinOp::Ge, a, true)?;
+            let (_, hi1) = int_bounds(BinOp::Le, b, true)?;
+            Some(to_days(col, lo1, hi1))
+        }
+        Scalar::Bin(op, l, r) if op.is_comparison() && *op != BinOp::NotEq => {
+            let (col, v, col_on_left) = match (&**l, &**r) {
+                (Scalar::Col(c @ (Column::Day | Column::Month)), rhs) => {
+                    (*c, const_val(rhs)?, true)
+                }
+                (lhs, Scalar::Col(c @ (Column::Day | Column::Month))) => {
+                    (*c, const_val(lhs)?, false)
+                }
+                _ => return None,
+            };
+            let (lo, hi) = int_bounds(*op, v, col_on_left)?;
+            Some(to_days(col, lo, hi))
+        }
+        _ => None,
+    }
+}
+
+fn extract_day_ranges(scan: &mut TableScan) {
+    if scan.table != Table::Trips {
+        return;
+    }
+    for pred in &mut scan.pushed {
+        if let PushedPred::Generic(s) = pred {
+            if let Some((lo, hi)) = day_range_of(s) {
+                *pred = PushedPred::DayRange { lo, hi };
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Projection pushdown
+// ---------------------------------------------------------------------
+
+fn push_projection(p: &mut LogicalPlan) {
+    let fact_cols = p.referenced_columns(p.fact.table);
+    let dim_cols = p.join.as_ref().map(|j| p.referenced_columns(j.dim.table));
+    p.fact.projected = Some(fact_cols);
+    if let (Some(j), Some(cols)) = (p.join.as_mut(), dim_cols) {
+        j.dim.projected = Some(cols);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sql::logical::analyze;
+    use crate::sql::parse::parse;
+
+    fn optimized(text: &str) -> LogicalPlan {
+        rewrite(&analyze(&parse(text).unwrap().query).unwrap())
+    }
+
+    #[test]
+    fn folds_constants() {
+        let p = optimized("SELECT tip_amount + (2 * 3 + 4) FROM trips WHERE 1 + 1 = 2");
+        let Mode::Project { exprs } = &p.mode else { panic!() };
+        assert_eq!(exprs[0], Scalar::Bin(
+            BinOp::Add,
+            Box::new(Scalar::Col(Column::TipAmount)),
+            Box::new(Scalar::LitI(10)),
+        ));
+        // The always-true WHERE conjunct folded away entirely.
+        assert!(p.filter.is_empty());
+        assert!(p.fact.pushed.is_empty());
+    }
+
+    #[test]
+    fn pushes_single_table_conjuncts_below_the_join() {
+        let p = optimized(
+            "SELECT COUNT(*) FROM trips t JOIN weather w ON t.day = w.day \
+             WHERE t.tip_amount > 5 AND w.precip > 0.1 AND t.fare_amount > w.precip",
+        );
+        assert_eq!(p.fact.pushed.len(), 1, "{:?}", p.fact.pushed);
+        let j = p.join.as_ref().unwrap();
+        assert_eq!(j.dim.pushed.len(), 1, "{:?}", j.dim.pushed);
+        // The cross-table conjunct stays above the join.
+        assert_eq!(p.filter.len(), 1, "{:?}", p.filter);
+    }
+
+    #[test]
+    fn extracts_day_and_month_ranges() {
+        let p = optimized("SELECT COUNT(*) FROM trips WHERE day BETWEEN 100 AND 200");
+        assert_eq!(p.fact.day_ranges(), vec![(100, 200)]);
+        assert!(p.fact.generic_preds().is_empty());
+
+        let p = optimized("SELECT COUNT(*) FROM trips WHERE day >= 10.5 AND day < 20");
+        assert_eq!(p.fact.day_ranges(), vec![(11, i32::MAX), (i32::MIN, 19)]);
+
+        // month 0 = Jan 2009 (days 0..=30), month 1 = Feb 2009 (31..=58).
+        let p = optimized("SELECT COUNT(*) FROM trips WHERE month = 0");
+        assert_eq!(p.fact.day_ranges(), vec![(0, 30)]);
+        let p = optimized("SELECT COUNT(*) FROM trips WHERE month BETWEEN 0 AND 1");
+        assert_eq!(p.fact.day_ranges(), vec![(0, 58)]);
+
+        // Equality on a fractional literal can never hold on an int column.
+        let p = optimized("SELECT COUNT(*) FROM trips WHERE day = 10.5");
+        let ranges = p.fact.day_ranges();
+        assert_eq!(ranges.len(), 1);
+        assert!(ranges[0].0 > ranges[0].1, "unsatisfiable range prunes everything");
+
+        // A range mixed with an opaque conjunct still extracts, and the
+        // WHERE source order is preserved — the opaque conjunct lowers
+        // to a Filter op *ahead of* the DayRange op, the exact chain
+        // shape the leading_day_range commute fix keeps prunable.
+        let p = optimized(
+            "SELECT COUNT(*) FROM trips WHERE tip_amount > 5 AND day BETWEEN 100 AND 200",
+        );
+        assert_eq!(p.fact.pushed.len(), 2);
+        assert!(matches!(p.fact.pushed[0], PushedPred::Generic(_)));
+        assert!(matches!(p.fact.pushed[1], PushedPred::DayRange { lo: 100, hi: 200 }));
+    }
+
+    #[test]
+    fn projection_pushdown_narrows_scans() {
+        let p = optimized(
+            "SELECT hour, COUNT(*) FROM trips WHERE tip_amount > 10 GROUP BY hour",
+        );
+        assert_eq!(
+            p.fact.projected,
+            Some(vec![Column::Hour, Column::TipAmount]),
+        );
+
+        let p = optimized(
+            "SELECT w.bucket, COUNT(*) FROM trips t JOIN weather w ON t.day = w.day \
+             GROUP BY w.bucket",
+        );
+        assert_eq!(p.fact.projected, Some(vec![Column::Day]));
+        assert_eq!(
+            p.join.unwrap().dim.projected,
+            Some(vec![Column::WeatherDay, Column::Bucket]),
+        );
+
+        // COUNT(*) alone needs no columns at all.
+        let p = optimized("SELECT COUNT(*) FROM trips");
+        assert_eq!(p.fact.projected, Some(Vec::new()));
+    }
+
+    #[test]
+    fn day_range_semantics_match_generic_eval() {
+        // The extracted range must accept exactly the days the original
+        // predicate accepts — spot-check across the patterns.
+        for (sql, pred) in [
+            ("day BETWEEN 100 AND 200", None),
+            ("day > 99.5", None),
+            ("day <= 0", None),
+            ("month = 3", None),
+            ("month >= 88", None),
+            ("month < 2", None),
+            ("NOT day > 10", Some(())), // not a range pattern — must NOT extract
+        ] {
+            let p = optimized(&format!("SELECT COUNT(*) FROM trips WHERE {sql}"));
+            if pred.is_some() {
+                assert!(p.fact.day_ranges().is_empty(), "{sql} must not extract");
+                continue;
+            }
+            let ranges = p.fact.day_ranges();
+            assert_eq!(ranges.len(), 1, "{sql}");
+            let (lo, hi) = ranges[0];
+            let original = analyze(
+                &parse(&format!("SELECT COUNT(*) FROM trips WHERE {sql}")).unwrap().query,
+            )
+            .unwrap()
+            .filter
+            .remove(0);
+            for day in -5..NUM_DAYS_TEST {
+                let month = month_of_day(day);
+                let in_range = day >= lo && day <= hi;
+                let keeps = original.test(&|c| match c {
+                    Column::Day => day as f64,
+                    Column::Month => month as f64,
+                    _ => 0.0,
+                });
+                assert_eq!(in_range, keeps, "{sql} at day {day}");
+            }
+        }
+    }
+
+    const NUM_DAYS_TEST: i32 = 2750;
+
+    fn month_of_day(day: i32) -> i32 {
+        let days = days_from_civil(2009, 1, 1) + day as i64;
+        let (y, m, _) = crate::data::chrono::civil_from_days(days);
+        ((y - 2009) * 12 + m as i64 - 1) as i32
+    }
+}
