@@ -7,18 +7,23 @@
 //! columnar chunks) and the A7 stats-based scan-pruning GET counts,
 //! plus the A9 SQL-optimizer ablation (every Table I query compiled
 //! from SQL with `flint.sql.optimizer` on vs off, and the cost-based
-//! join planner checked against the measured A5 crossover); `--smoke`
-//! mode (CI) runs a small dataset and exits non-zero if the columnar
-//! codec fails to shrink any shuffling Table I query or Q6J, if
-//! pruning stops skipping GETs, if optimizer-on ever loses to
-//! optimizer-off on any SQL query, or if the planner's broadcast-vs-
-//! shuffle pick disagrees with the measured winner — so a codec,
-//! pruning, or optimizer regression fails PRs instead of waiting for a
-//! nightly bench run.
+//! join planner checked against the measured A5 crossover) and the A10
+//! scale-out exchange sweep (the direct S3 exchange's O(P·R) object
+//! count vs the multi-level tree's O((P+R)·√n), plus the per-edge
+//! `flint.shuffle.backend = auto` selection); `--smoke` mode (CI) runs
+//! a small dataset and exits non-zero if the columnar codec fails to
+//! shrink any shuffling Table I query or Q6J, if pruning stops
+//! skipping GETs, if optimizer-on ever loses to optimizer-off on any
+//! SQL query, if the planner's broadcast-vs-shuffle pick disagrees
+//! with the measured winner, if the tree exchange stops beating direct
+//! on total S3 requests at a ≥1024-way fan-out, or if the auto backend
+//! ever loses to the better fixed backend — so a codec, pruning,
+//! optimizer, or exchange regression fails PRs instead of waiting for
+//! a nightly bench run.
 
 use flint::bench::micro::{
-    codec_byte_ratio, join_crossover, pruning_ablation, shuffle_ablation, sql_cbo_agreement,
-    sql_optimizer_ablation,
+    backend_auto_ablation, codec_byte_ratio, exchange_sweep, join_crossover, pruning_ablation,
+    shuffle_ablation, sql_cbo_agreement, sql_optimizer_ablation,
 };
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
@@ -141,6 +146,75 @@ fn main() {
         }
     }
 
+    // A10 — exchange sweep: direct vs tree S3 exchange on a synthetic
+    // P-producer × R-partition edge (the tree forced on at every point,
+    // so both sides of the crossover are measured; record streams are
+    // checked identical inside the harness). At ≥1024-way fan-outs the
+    // merge level must pay for itself in total S3 requests.
+    println!("\n## A10 — direct vs tree S3 exchange (request totals per topology)\n");
+    println!("| producers x partitions | direct reqs | tree reqs | direct wall (s) | tree wall (s) |");
+    println!("|---|---|---|---|---|");
+    let sweep_points: &[(u32, u32)] = if smoke {
+        &[(8, 8), (32, 1024)]
+    } else {
+        &[(8, 8), (16, 64), (32, 256), (32, 1024), (64, 2048)]
+    };
+    let exchange_rows = exchange_sweep(&cfg, sweep_points).expect("exchange sweep");
+    let mut exchange_json = Vec::new();
+    for r in &exchange_rows {
+        println!(
+            "| {}x{} | {} | {} | {:.3} | {:.3} |",
+            r.producers,
+            r.partitions,
+            r.direct_requests,
+            r.tree_requests,
+            r.direct_wall_s,
+            r.tree_wall_s
+        );
+        if r.producers.max(r.partitions) >= 1024 && r.tree_requests >= r.direct_requests {
+            eprintln!(
+                "REGRESSION: {}x{} tree exchange made {} S3 requests vs direct's {}",
+                r.producers, r.partitions, r.tree_requests, r.direct_requests
+            );
+            failed = true;
+        }
+        exchange_json.push(
+            Json::obj()
+                .set("producers", r.producers as u64)
+                .set("partitions", r.partitions as u64)
+                .set("direct_requests", r.direct_requests)
+                .set("tree_requests", r.tree_requests)
+                .set("direct_wall_s", r.direct_wall_s)
+                .set("tree_wall_s", r.tree_wall_s),
+        );
+    }
+
+    // A10 — backend auto-selection: `auto` must never lose to the
+    // better fixed backend (same tolerance as the A9 optimizer gate).
+    println!("\n## A10 — per-edge backend auto-selection (latency per backend)\n");
+    println!("| query | sqs (s) | s3 (s) | auto (s) |");
+    println!("|---|---|---|---|");
+    let auto_rows =
+        backend_auto_ablation(&cfg, trips.min(100_000), &[QueryId::Q1, QueryId::Q6J])
+            .expect("auto ablation");
+    let mut auto_json = Vec::new();
+    for (q, sqs_s, s3_s, auto_s) in &auto_rows {
+        println!("| {q} | {sqs_s:.3} | {s3_s:.3} | {auto_s:.3} |");
+        if *auto_s > sqs_s.min(*s3_s) * 1.02 + 1e-6 {
+            eprintln!(
+                "REGRESSION: {q} auto backend {auto_s:.3}s lost to sqs {sqs_s:.3}s / s3 {s3_s:.3}s"
+            );
+            failed = true;
+        }
+        auto_json.push(
+            Json::obj()
+                .set("query", q.name())
+                .set("sqs_s", *sqs_s)
+                .set("s3_s", *s3_s)
+                .set("auto_s", *auto_s),
+        );
+    }
+
     println!(
         "\n{}",
         Json::obj()
@@ -151,12 +225,14 @@ fn main() {
             .set("unpruned_gets", unpruned_gets)
             .set("splits_pruned", skipped)
             .set("sql_optimizer", Json::Arr(sql_json))
+            .set("exchange_sweep", Json::Arr(exchange_json))
+            .set("backend_auto", Json::Arr(auto_json))
             .encode()
     );
     if smoke {
-        // CI smoke stops here: the codec/pruning/optimizer gates above
-        // are the point; the latency sweeps below are nightly-bench
-        // material.
+        // CI smoke stops here: the codec/pruning/optimizer/exchange
+        // gates above are the point; the latency sweeps below are
+        // nightly-bench material.
         if failed {
             std::process::exit(1);
         }

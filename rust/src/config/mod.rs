@@ -194,11 +194,22 @@ pub struct ServiceParams {
     /// Per-tenant fair-share weights (`flint.service.weight.<tenant>`,
     /// each must be positive and finite). Tenants absent here weigh 1.0.
     pub weights: BTreeMap<String, f64>,
+    /// Per-tenant concurrency quotas (`flint.service.max_slots.<tenant>`,
+    /// each must be ≥ 1): a hard cap on the slots a tenant's queries may
+    /// hold at once, layered on top of the fair-share weights. Tenants
+    /// absent here are uncapped. A quota caps *primaries and backups
+    /// combined*, so a capped tenant cannot speculate its way past it.
+    pub max_slots: BTreeMap<String, usize>,
 }
 
 impl Default for ServiceParams {
     fn default() -> Self {
-        ServiceParams { policy: ServicePolicy::Fair, max_queued: 64, weights: BTreeMap::new() }
+        ServiceParams {
+            policy: ServicePolicy::Fair,
+            max_queued: 64,
+            weights: BTreeMap::new(),
+            max_slots: BTreeMap::new(),
+        }
     }
 }
 
@@ -206,6 +217,11 @@ impl ServiceParams {
     /// Effective weight of a tenant (1.0 unless configured).
     pub fn weight_of(&self, tenant: &str) -> f64 {
         self.weights.get(tenant).copied().unwrap_or(1.0)
+    }
+
+    /// Concurrency quota of a tenant (`None` = uncapped).
+    pub fn quota_of(&self, tenant: &str) -> Option<usize> {
+        self.max_slots.get(tenant).copied()
     }
 }
 
@@ -241,8 +257,24 @@ pub struct FlintParams {
     pub shuffle_buffer_bytes: usize,
     /// Max task retries before the query fails.
     pub max_task_retries: u32,
-    /// Shuffle transport: "sqs" (the paper) or "s3" (the Qubole ablation).
+    /// Shuffle transport: "sqs" (the paper), "s3" (the Qubole ablation),
+    /// or "auto" — pick per DAG edge from estimated partition size ×
+    /// fan-out using the calibrated cost model (payload-inline for tiny
+    /// edges, SQS mid-range, S3 for wide fan-outs).
     pub shuffle_backend: ShuffleBackend,
+    /// Exchange topology for the S3 shuffle (`flint.shuffle.exchange`):
+    /// "direct" writes one object per (producer, consumer-partition) edge
+    /// — O(n²) requests at n×n fan-out — while "tree" inserts a merge
+    /// level above `tree_fanout` (Lambada's multi-level exchange):
+    /// producers write one combined object per consumer *group*, a merge
+    /// level re-partitions, and consumers read O(n·√n)-ish objects.
+    pub shuffle_exchange: ShuffleExchange,
+    /// Fan-out (max(producers, partitions)) above which `exchange = tree`
+    /// actually inserts the merge level; below it even tree-mode edges
+    /// run direct, since the extra level only pays for itself once
+    /// per-edge request counts dominate (`flint.shuffle.tree_fanout`,
+    /// must be ≥ 2).
+    pub tree_fanout: usize,
     /// Shuffle wire codec: "columnar" (the default — sorted runs of
     /// kernel partials ride as delta-encoded column chunks, dyn pairs as
     /// front-coded groups) or "rows" (one record per wire entry, the
@@ -280,6 +312,8 @@ pub struct FlintParams {
 pub enum ShuffleBackend {
     Sqs,
     S3,
+    /// Per-edge auto-selection from the calibrated cost model.
+    Auto,
 }
 
 impl std::str::FromStr for ShuffleBackend {
@@ -288,7 +322,28 @@ impl std::str::FromStr for ShuffleBackend {
         match s {
             "sqs" => Ok(ShuffleBackend::Sqs),
             "s3" => Ok(ShuffleBackend::S3),
-            other => Err(format!("unknown shuffle backend `{other}` (want sqs|s3)")),
+            "auto" => Ok(ShuffleBackend::Auto),
+            other => Err(format!("unknown shuffle backend `{other}` (want sqs|s3|auto)")),
+        }
+    }
+}
+
+/// Exchange topology for S3-backed shuffles (`flint.shuffle.exchange`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShuffleExchange {
+    /// One object per (producer, consumer-partition) edge.
+    Direct,
+    /// Multi-level: combined per-group intermediates + a merge level.
+    Tree,
+}
+
+impl std::str::FromStr for ShuffleExchange {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "direct" => Ok(ShuffleExchange::Direct),
+            "tree" => Ok(ShuffleExchange::Tree),
+            other => Err(format!("unknown shuffle exchange `{other}` (want direct|tree)")),
         }
     }
 }
@@ -319,6 +374,8 @@ impl Default for FlintParams {
             shuffle_buffer_bytes: 48 * 1024 * 1024,
             max_task_retries: 3,
             shuffle_backend: ShuffleBackend::Sqs,
+            shuffle_exchange: ShuffleExchange::Direct,
+            tree_fanout: 64,
             shuffle_codec: ShuffleCodec::Columnar,
             scan_prune: true,
             scheduler: ScheduleMode::Pipelined,
@@ -457,8 +514,17 @@ impl FlintConfig {
                         match self.flint.shuffle_backend {
                             ShuffleBackend::Sqs => "sqs",
                             ShuffleBackend::S3 => "s3",
+                            ShuffleBackend::Auto => "auto",
                         },
                     )
+                    .set(
+                        "shuffle_exchange",
+                        match self.flint.shuffle_exchange {
+                            ShuffleExchange::Direct => "direct",
+                            ShuffleExchange::Tree => "tree",
+                        },
+                    )
+                    .set("tree_fanout", self.flint.tree_fanout)
                     .set(
                         "shuffle_codec",
                         match self.flint.shuffle_codec {
@@ -486,6 +552,13 @@ impl FlintConfig {
                                     w = w.set(tenant.as_str(), *weight);
                                 }
                                 w
+                            })
+                            .set("max_slots", {
+                                let mut q = Json::obj();
+                                for (tenant, slots) in &self.flint.service.max_slots {
+                                    q = q.set(tenant.as_str(), *slots);
+                                }
+                                q
                             }),
                     )
                     .set(
@@ -527,6 +600,9 @@ mod tests {
         assert_eq!(c.sim.max_concurrency, 160);
         c.set("flint.shuffle_backend", "s3").unwrap();
         assert_eq!(c.flint.shuffle_backend, ShuffleBackend::S3);
+        c.set("flint.shuffle_backend", "auto").unwrap();
+        assert_eq!(c.flint.shuffle_backend, ShuffleBackend::Auto);
+        assert!(c.set("flint.shuffle_backend", "carrier-pigeon").is_err());
         assert_eq!(
             c.flint.scheduler,
             ScheduleMode::Pipelined,
@@ -640,6 +716,62 @@ mod tests {
         let sql = j.get("flint").unwrap().get("sql").unwrap();
         assert_eq!(sql.get("optimizer").and_then(|v| v.as_bool()), Some(false));
         assert_eq!(sql.get("broadcast_threshold_bytes").and_then(|v| v.as_u64()), Some(4096));
+    }
+
+    #[test]
+    fn exchange_knobs_parse_and_validate() {
+        let mut c = FlintConfig::default();
+        assert_eq!(c.flint.shuffle_exchange, ShuffleExchange::Direct, "direct is the default");
+        assert_eq!(c.flint.tree_fanout, 64);
+        c.set("flint.shuffle.exchange", "tree").unwrap();
+        assert_eq!(c.flint.shuffle_exchange, ShuffleExchange::Tree);
+        c.set("flint.shuffle.exchange", "direct").unwrap();
+        assert_eq!(c.flint.shuffle_exchange, ShuffleExchange::Direct);
+        assert!(c.set("flint.shuffle.exchange", "ring").is_err());
+
+        c.set("flint.shuffle.tree_fanout", "128").unwrap();
+        assert_eq!(c.flint.tree_fanout, 128);
+        for bad in ["0", "1", "-4", "wide"] {
+            let err = c.set("flint.shuffle.tree_fanout", bad).unwrap_err();
+            assert!(err.contains("flint.shuffle.tree_fanout"), "{err}");
+        }
+        assert_eq!(c.flint.tree_fanout, 128, "failed overrides must not apply");
+
+        // JSON dump round-trips the exchange knobs.
+        c.set("flint.shuffle.exchange", "tree").unwrap();
+        let j = c.to_json();
+        let f = j.get("flint").unwrap();
+        assert_eq!(f.get("shuffle_exchange").and_then(|v| v.as_str()), Some("tree"));
+        assert_eq!(f.get("tree_fanout").and_then(|v| v.as_u64()), Some(128));
+    }
+
+    #[test]
+    fn tenant_quota_knobs_parse_and_round_trip() {
+        let mut c = FlintConfig::default();
+        assert!(c.flint.service.max_slots.is_empty());
+        assert_eq!(c.flint.service.quota_of("anyone"), None, "uncapped by default");
+
+        c.set("flint.service.max_slots.alice", "4").unwrap();
+        c.set("flint.service.max_slots.bob", "1").unwrap();
+        assert_eq!(c.flint.service.quota_of("alice"), Some(4));
+        assert_eq!(c.flint.service.quota_of("bob"), Some(1));
+        assert_eq!(c.flint.service.quota_of("carol"), None);
+        for bad in ["0", "-1", "lots", "2.5"] {
+            let err = c.set("flint.service.max_slots.alice", bad).unwrap_err();
+            assert!(err.contains("flint.service.max_slots.alice"), "{err}");
+        }
+        assert_eq!(c.flint.service.quota_of("alice"), Some(4), "failed overrides must not apply");
+        assert!(c.set("flint.service.max_slots.", "2").is_err(), "tenant name required");
+
+        // TOML layer reaches the same map, and the JSON dump round-trips.
+        let mut t = FlintConfig::default();
+        parse::apply_toml(&mut t, "[flint.service.max_slots]\nalice = 4\nbob = 1\n").unwrap();
+        assert_eq!(t.flint.service.quota_of("alice"), Some(4));
+        assert_eq!(t.flint.service.quota_of("bob"), Some(1));
+        let j = t.to_json();
+        let q = j.get("flint").unwrap().get("service").unwrap().get("max_slots").unwrap();
+        assert_eq!(q.get("alice").and_then(|v| v.as_u64()), Some(4));
+        assert_eq!(q.get("bob").and_then(|v| v.as_u64()), Some(1));
     }
 
     #[test]

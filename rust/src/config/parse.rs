@@ -5,7 +5,7 @@
 //! That covers every config file this project ships; exotic TOML (arrays
 //! of tables, datetimes, multi-line strings) is intentionally rejected.
 
-use super::{FlintConfig, ShuffleBackend, ShuffleCodec};
+use super::{FlintConfig, ShuffleBackend, ShuffleCodec, ShuffleExchange};
 
 /// Apply the contents of a TOML document to `cfg`.
 pub fn apply_toml(cfg: &mut FlintConfig, text: &str) -> Result<(), String> {
@@ -121,10 +121,28 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
         }
         "flint.shuffle_buffer_bytes" => parse_to!(cfg.flint.shuffle_buffer_bytes, value, key),
         "flint.max_task_retries" => parse_to!(cfg.flint.max_task_retries, value, key),
-        "flint.shuffle_backend" => {
+        // The dotted spelling joins the `flint.shuffle.*` family; the
+        // flat legacy key keeps working.
+        "flint.shuffle_backend" | "flint.shuffle.backend" => {
             cfg.flint.shuffle_backend = value.parse::<ShuffleBackend>()?
         }
         "flint.shuffle.codec" => cfg.flint.shuffle_codec = value.parse::<ShuffleCodec>()?,
+        "flint.shuffle.exchange" => {
+            cfg.flint.shuffle_exchange = value.parse::<ShuffleExchange>()?
+        }
+        "flint.shuffle.tree_fanout" => {
+            // A merge level needs at least two groups on a side to be a
+            // tree at all; 0/1 would also divide-by-zero the grouping.
+            let n: usize = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{key}`"))?;
+            if n < 2 {
+                return Err(format!(
+                    "bad value `{value}` for `{key}` (tree fan-out must be ≥ 2)"
+                ));
+            }
+            cfg.flint.tree_fanout = n;
+        }
         "flint.scan.prune" => parse_to!(cfg.flint.scan_prune, value, key),
         "flint.scheduler" => {
             cfg.flint.scheduler = value.parse::<crate::simtime::ScheduleMode>()?
@@ -178,6 +196,23 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
                 ));
             }
             cfg.flint.service.weights.insert(tenant.to_string(), w);
+        }
+        k if k.starts_with("flint.service.max_slots.") => {
+            let tenant = &k["flint.service.max_slots.".len()..];
+            if tenant.is_empty() {
+                return Err(format!("unknown config key `{k}` (missing tenant name)"));
+            }
+            let n: usize = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{k}`"))?;
+            // A zero quota would deadlock the tenant's queries: admitted
+            // but never able to claim a slot.
+            if n == 0 {
+                return Err(format!(
+                    "bad value `{value}` for `{k}` (max slots must be positive)"
+                ));
+            }
+            cfg.flint.service.max_slots.insert(tenant.to_string(), n);
         }
         "flint.sql.optimizer" => {
             cfg.flint.sql.optimizer = match value {

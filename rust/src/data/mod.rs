@@ -34,6 +34,36 @@ pub struct ObjectStats {
 }
 
 impl ObjectStats {
+    /// Encode as S3 user metadata. On real S3 metadata rides the PUT
+    /// itself, so stamping stats onto each generated object is free —
+    /// and any later HEAD can recover the `flint.scan.prune` signal
+    /// without a manifest.
+    pub fn to_meta(&self) -> Vec<(String, String)> {
+        vec![
+            ("stats-min-day".to_string(), self.min_day.to_string()),
+            ("stats-max-day".to_string(), self.max_day.to_string()),
+            ("stats-min-month".to_string(), self.min_month.to_string()),
+            ("stats-max-month".to_string(), self.max_month.to_string()),
+            ("stats-rows".to_string(), self.rows.to_string()),
+        ]
+    }
+
+    /// Decode from HEAD user metadata. `None` unless every stat key is
+    /// present and well-formed — partial or corrupt stats must read as
+    /// *no* stats, never as a narrower (unsafe) range.
+    pub fn from_meta(meta: &[(String, String)]) -> Option<ObjectStats> {
+        fn get<T: std::str::FromStr>(meta: &[(String, String)], key: &str) -> Option<T> {
+            meta.iter().find(|(k, _)| k == key)?.1.parse().ok()
+        }
+        Some(ObjectStats {
+            min_day: get(meta, "stats-min-day")?,
+            max_day: get(meta, "stats-max-day")?,
+            min_month: get(meta, "stats-min-month")?,
+            max_month: get(meta, "stats-max-month")?,
+            rows: get(meta, "stats-rows")?,
+        })
+    }
+
     /// Whether a day predicate `[lo, hi]` can possibly match rows here.
     pub fn overlaps_days(&self, lo: i32, hi: i32) -> bool {
         self.max_day >= lo && self.min_day <= hi
@@ -142,6 +172,11 @@ pub fn generate_taxi_dataset(env: &SimEnv, prefix: &str, trips: u64) -> Dataset 
             max_month: month_of_day(day_hi),
             rows: count,
         };
+        // Stamp the stats onto the object itself, so listing-resolved
+        // scans (no manifest) can recover them via HEAD.
+        env2.s3()
+            .set_object_meta(INPUT_BUCKET, &key, stats.to_meta())
+            .expect("object was just written");
         (key, size, stats)
     });
 
@@ -263,6 +298,24 @@ mod tests {
         assert!(first.overlaps_days(0, 10));
         assert!(!last.overlaps_days(0, 10));
         assert!(!first.overlaps_months(last.min_month.max(first.max_month + 1), 200));
+    }
+
+    #[test]
+    fn object_stats_meta_roundtrip() {
+        let st = ObjectStats { min_day: 3, max_day: 9, min_month: 0, max_month: 1, rows: 42 };
+        assert_eq!(ObjectStats::from_meta(&st.to_meta()), Some(st));
+        // Partial or empty metadata decodes to no stats at all.
+        let mut partial = st.to_meta();
+        partial.pop();
+        assert_eq!(ObjectStats::from_meta(&partial), None);
+        assert_eq!(ObjectStats::from_meta(&[]), None);
+        // Every generated object carries its stats in S3 user metadata.
+        let env = SimEnv::new(FlintConfig::for_tests());
+        let ds = generate_taxi_dataset(&env, "trips", 1_000);
+        for (key, _) in &ds.objects {
+            let (_, meta) = env.s3().head_object_meta(INPUT_BUCKET, key).unwrap();
+            assert_eq!(ObjectStats::from_meta(&meta), Some(ds.object_stats[key]));
+        }
     }
 
     #[test]

@@ -59,8 +59,9 @@
 //! run, so ablations never need a second execution.
 
 use crate::compute::value::Value;
+use crate::exec::exchange::plan_exchanges;
 use crate::exec::executor::{run_task, Emitted, ExecCtx, IoMode, TaskOutcome};
-use crate::exec::shuffle::{queue_name, Transport};
+use crate::exec::shuffle::{merge_tree_level, queue_name, s3_edge_prefix, Transport};
 use crate::plan::{
     PhysicalPlan, ResumeState, Stage, StageInput, StageOutput, TaskDescriptor, TaskInput,
     TaskOutput,
@@ -192,11 +193,22 @@ pub fn run_plan(
 ) -> Result<RunOutput> {
     plan.validate().map_err(|e| anyhow!("invalid plan {}: {e}", plan.plan_id))?;
     let cfg = env.config();
+    // Resolve every DAG edge to its transport/exchange up front (the
+    // `flint.shuffle.backend = auto` cost model and the tree exchange
+    // both live here; explicit backends map every edge to the base
+    // transport as before).
+    let exchange = std::sync::Arc::new(plan_exchanges(&cfg, plan, &params.transport));
+    // One-shot list-then-get S3 edges cannot overlap reduce drain with
+    // map flushes, so any S3-resolved edge demotes the selected clock
+    // to the barrier model (explicit `backend = s3` already arrives
+    // with barrier forced; this generalizes the rule to `auto`).
+    let schedule = if exchange.any_s3() { ScheduleMode::Barrier } else { params.schedule };
     let ctx = ExecCtx {
         env,
         runtime,
         plan,
         transport: params.transport.clone(),
+        exchange: exchange.clone(),
         mode: params.mode,
         time_limit_s: params.lambda.then_some(cfg.sim.lambda_time_limit_s),
         chain_margin_s: cfg.sim.lambda_chain_margin_s,
@@ -256,17 +268,18 @@ pub fn run_plan(
     // overlaps the stages.
     for stage in &plan.stages {
         // Create this stage's output queues before launching it: one
-        // queue set per consuming edge (§III-A: "queue management is
-        // performed by the scheduler"). A shuffle stage nothing consumes
+        // queue set per SQS-resolved consuming edge (§III-A: "queue
+        // management is performed by the scheduler") — payload and S3
+        // edges need no queues. A shuffle stage nothing consumes
         // (degenerate plans) has no edges and so no queues — its writer
         // drops the stream.
-        if let (StageOutput::Shuffle { partitions, .. }, Transport::Sqs) =
-            (&stage.output, &params.transport)
-        {
+        if let StageOutput::Shuffle { partitions, .. } = &stage.output {
             for to in plan.children(stage.id) {
-                for p in 0..*partitions {
-                    env.sqs()
-                        .create_queue(&queue_name(&plan.plan_id, stage.id, to, p as u32));
+                if matches!(exchange.transport_for(stage.id, to), Transport::Sqs) {
+                    for p in 0..*partitions {
+                        env.sqs()
+                            .create_queue(&queue_name(&plan.plan_id, stage.id, to, p as u32));
+                    }
                 }
             }
         }
@@ -298,29 +311,24 @@ pub fn run_plan(
         if let Some(policy) = &policy {
             let durations: Vec<f64> = primaries.iter().map(|s| s.duration_s).collect();
             let mut decisions = tail_signal(&durations, params.slots, policy);
-            // Which tasks may actually speculate:
-            // * S3-materializing tasks fed by a shuffle partition never
-            //   do — a backup re-materializing would PUT over the
-            //   winner's part file (real engines scope attempt output
-            //   through a committer: temp key + rename; this sim has
-            //   none yet).
-            // * On destructive-read backends (SQS, memory), NO
-            //   shuffle-input task speculates: the primary's commit
-            //   acked the partition away, so a backup would drain an
-            //   empty queue in ~0s — an unmeasurable (and dishonestly
-            //   flattering) duration. The host runs stages serially, so
-            //   it cannot reproduce the real race against the
-            //   visibility timeout. The S3 shuffle is re-readable and
-            //   its reduce backups re-execute (and race dedup) for
-            //   real.
-            // Scan tasks (re-readable S3 splits) always may.
-            let shuffle_input_rereadable = matches!(params.transport, Transport::S3);
-            decisions.retain(|d| {
-                match (&descriptors[d.task].input, &descriptors[d.task].output) {
-                    (TaskInput::ShufflePartition { .. }, TaskOutput::S3 { .. }) => false,
-                    (TaskInput::ShufflePartition { .. }, _) => shuffle_input_rereadable,
-                    _ => true,
-                }
+            // Which tasks may actually speculate — a per-edge question
+            // since auto backend selection: a shuffle-input task may
+            // back up only when EVERY parent edge is re-readable
+            // (list-then-get S3). On destructive-read edges (SQS,
+            // memory, payload-inline) the primary's commit acked the
+            // partition away, so a backup would drain an empty queue in
+            // ~0s — an unmeasurable (and dishonestly flattering)
+            // duration; the host runs stages serially and cannot
+            // reproduce the real race against the visibility timeout.
+            // S3-materializing reduce tasks speculate like any other
+            // since the attempt-scoped output committer (temp key +
+            // first-wins rename) — the PR 4 carve-out is lifted. Scan
+            // tasks (re-readable S3 splits) always may.
+            decisions.retain(|d| match &descriptors[d.task].input {
+                TaskInput::ShufflePartition { parents, .. } => parents
+                    .iter()
+                    .all(|p| exchange.transport_for(*p, stage.id).rereadable()),
+                _ => true,
             });
             // Straggler prediction (the PR-4 follow-up): a task past the
             // tail threshold on a container whose history says "not
@@ -414,6 +422,34 @@ pub fn run_plan(
             }
         }
 
+        // Tree exchange: run each tree edge's merge level now that every
+        // attempt of this stage (primaries and backups) has committed
+        // its level-1 objects. The merge tasks sit between this stage
+        // and its consumers; packing their durations onto the slot pool
+        // and folding the makespan into this stage's overhead models the
+        // extra level exactly under the barrier clock — which S3 edges
+        // pin (see the `schedule` demotion above).
+        let mut merge_overhead_s = 0.0;
+        for to in plan.children(stage.id) {
+            let Some(tp) = exchange.edge(stage.id, to).and_then(|e| e.tree) else { continue };
+            let report = merge_tree_level(env, &plan.plan_id, stage.id, to, &tp)?;
+            if report.task_durations.is_empty() {
+                continue;
+            }
+            if params.lambda {
+                // Merge tasks hold live Lambdas for their modeled
+                // duration; billed as GB-seconds (no failure injection —
+                // the level is driver-coordinated and single-attempt).
+                env.lambda().bill_idle(report.task_durations.iter().sum());
+            }
+            env.metrics()
+                .add("shuffle.tree_merge_tasks", report.task_durations.len() as u64);
+            env.metrics().add("shuffle.tree_objects_read", report.objects_read);
+            env.metrics().add("shuffle.tree_objects_written", report.objects_written);
+            merged_tl.merge(&report.timeline);
+            merge_overhead_s += makespan(&report.task_durations, params.slots);
+        }
+
         let mut durations = Vec::with_capacity(n_tasks);
         for stats in primaries {
             durations.push(stats.duration_s);
@@ -437,7 +473,8 @@ pub fn run_plan(
         totals.tasks += n_tasks as u64;
 
         let overhead = cfg.sim.scheduler_overhead_per_stage_s
-            + n_tasks as f64 * cfg.sim.scheduler_overhead_per_task_s;
+            + n_tasks as f64 * cfg.sim.scheduler_overhead_per_task_s
+            + merge_overhead_s;
         merged_tl.charge(Component::Scheduler, overhead);
         let ms = makespan(&durations, params.slots);
         stage_latencies.push(ms + overhead);
@@ -449,13 +486,23 @@ pub fn run_plan(
             overhead_s: overhead,
         });
 
-        // Per-edge teardown: queues belong to exactly one (parent →
-        // this stage) edge, so they die the moment this stage — their
-        // only consumer — completes. A fan-out parent's other edges are
-        // untouched (their consumers haven't run yet).
-        if let Transport::Sqs = &params.transport {
-            for &p in &stage.parents {
-                delete_edge_queues(env, plan, p, stage.id);
+        // Per-edge teardown: an edge's substrate belongs to exactly one
+        // (parent → this stage) pair, so it dies the moment this stage —
+        // its only consumer — completes. SQS edges delete their queue
+        // set; S3 edges (and payload edges' spill leg) delete the edge's
+        // whole key prefix — committed objects, tree group objects, and
+        // any crashed attempt's orphaned temps alike. A fan-out parent's
+        // other edges are untouched (their consumers haven't run yet).
+        for &p in &stage.parents {
+            match exchange.transport_for(p, stage.id) {
+                Transport::Sqs => delete_edge_queues(env, plan, p, stage.id),
+                Transport::S3 | Transport::Payload(_) => {
+                    let _ = env.s3().delete_prefix(
+                        crate::data::SHUFFLE_BUCKET,
+                        &s3_edge_prefix(&plan.plan_id, p, stage.id),
+                    );
+                }
+                Transport::Memory(_) => {}
             }
         }
     }
@@ -481,7 +528,7 @@ pub fn run_plan(
     }
 
     totals.out = merge_emits(final_emits)?;
-    totals.latency_s = match params.schedule {
+    totals.latency_s = match schedule {
         ScheduleMode::Barrier => barrier.latency_s,
         ScheduleMode::Pipelined => pipelined.latency_s,
     };
@@ -492,7 +539,7 @@ pub fn run_plan(
     // only on Lambda-backed engines — cluster executors bill by the
     // hour, idle included, already. The multi-tenant service clears
     // `bill_idle` and charges each query's idle from the shared clock.
-    if params.lambda && params.bill_idle && params.schedule == ScheduleMode::Pipelined {
+    if params.lambda && params.bill_idle && schedule == ScheduleMode::Pipelined {
         env.lambda().bill_idle(pipelined.idle_s);
     }
     totals.barrier_latency_s = barrier.latency_s;

@@ -1,0 +1,321 @@
+//! Per-edge shuffle exchange planning: resolve every DAG edge to a
+//! concrete transport (payload-inline, SQS, or S3) and — for S3 edges
+//! above the tree fan-out threshold — to the multi-level exchange shape.
+//!
+//! With `flint.shuffle.backend = sqs|s3` every edge uses the configured
+//! backend, exactly as before this module existed. With `auto`, each
+//! edge is priced under the calibrated service constants (the same
+//! constants the simulator charges, so the pick optimizes exactly what
+//! the virtual clock measures) and the cheapest backend wins:
+//!
+//! * **payload-inline** (Flock-style) when the producer's output is
+//!   known-small — kernel histogram partials bounded by the bucket
+//!   count — so partitions ride the invocation payload for free, with
+//!   the 6 MB payload-spill machinery as the overflow guard-rail;
+//! * **SQS** for mid-size edges, where a ~1.5 ms queue round trip beats
+//!   a ~20 ms S3 request and fan-out is too small for request counts to
+//!   dominate;
+//! * **S3** (direct or tree per `flint.shuffle.exchange`) once the edge
+//!   is wide enough that the tree's O(P·√R + √P·R) object count beats
+//!   the per-message queue costs.
+//!
+//! Ties break toward SQS — the engine default — so `auto` never loses
+//! to the backend a user would have gotten without the knob.
+
+use crate::config::{FlintConfig, ShuffleBackend, ShuffleExchange};
+use crate::exec::shuffle::{tree_plan, EdgeExchange, MemoryShuffle, Transport, TreePlan};
+use crate::plan::{PhysicalPlan, StageCompute, StageOutput};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// What the auto cost model knows about one DAG edge before running it.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeStats {
+    /// Producing-stage task count (level-0 writers).
+    pub producers: u32,
+    /// Consumer-side partition count.
+    pub partitions: u32,
+    /// Producer output is known-small: kernel stages emit per-bucket
+    /// histogram partials whose row count is bounded by the spec's
+    /// bucket count, so the whole edge fits the invocation payload.
+    /// Generic (dyn) stages can ship arbitrarily wide data and never
+    /// qualify.
+    pub compact_output: bool,
+}
+
+/// The auto pick for one edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    Payload,
+    Sqs,
+    S3,
+}
+
+/// One DAG edge's resolved exchange: what every producing task's writer
+/// uses, plus the merge-level shape the driver runs for tree edges.
+#[derive(Clone)]
+pub struct PlannedEdge {
+    pub exchange: EdgeExchange,
+    pub tree: Option<TreePlan>,
+}
+
+/// Per-plan map of resolved exchanges, keyed by (producer, consumer)
+/// stage ids. Built once per run by the driver and threaded into every
+/// writer/reader through [`crate::exec::executor::ExecCtx`].
+pub struct ExchangePlan {
+    edges: BTreeMap<(u32, u32), PlannedEdge>,
+    /// Fallback for lookups off the map (degenerate edges); also what
+    /// non-shuffle code paths see.
+    default: Transport,
+}
+
+impl ExchangePlan {
+    pub fn edge(&self, from: u32, to: u32) -> Option<&PlannedEdge> {
+        self.edges.get(&(from, to))
+    }
+
+    /// The transport a reader of edge (from → to) drains.
+    pub fn transport_for(&self, from: u32, to: u32) -> Transport {
+        self.edges
+            .get(&(from, to))
+            .map(|e| e.exchange.transport.clone())
+            .unwrap_or_else(|| self.default.clone())
+    }
+
+    /// Writer-side exchange vector aligned with a stage's consumer list.
+    pub fn edges_for(&self, from: u32, consumers: &[u32]) -> Vec<EdgeExchange> {
+        consumers
+            .iter()
+            .map(|&to| {
+                self.edges
+                    .get(&(from, to))
+                    .map(|e| e.exchange.clone())
+                    .unwrap_or_else(|| EdgeExchange::direct(self.default.clone()))
+            })
+            .collect()
+    }
+
+    /// Whether any edge resolved to the S3 backend (direct or tree).
+    /// The one-shot list-then-get S3 shuffle cannot overlap reduce
+    /// drain with map flushes, so the driver demotes the schedule to
+    /// the barrier model whenever this is true.
+    pub fn any_s3(&self) -> bool {
+        self.edges
+            .values()
+            .any(|e| matches!(e.exchange.transport, Transport::S3))
+    }
+}
+
+/// Resolve every shuffle edge of a plan. Cluster engines (memory
+/// transport) keep each edge on the base transport — auto-selection and
+/// the tree exchange are Flint-only.
+pub fn plan_exchanges(cfg: &FlintConfig, plan: &PhysicalPlan, base: &Transport) -> ExchangePlan {
+    let mut edges = BTreeMap::new();
+    let flint_base = matches!(base, Transport::Sqs | Transport::S3);
+    // One in-process store shared by every payload edge of this run
+    // (messages are keyed by (from, to, partition), so edges never mix).
+    let mut payload: Option<Arc<MemoryShuffle>> = None;
+    for stage in &plan.stages {
+        let StageOutput::Shuffle { partitions, .. } = &stage.output else { continue };
+        let stats = EdgeStats {
+            producers: stage.num_tasks() as u32,
+            partitions: *partitions as u32,
+            compact_output: matches!(
+                stage.compute,
+                StageCompute::KernelScan { .. }
+                    | StageCompute::KernelReduce { .. }
+                    | StageCompute::KernelJoin { .. }
+            ),
+        };
+        for to in plan.children(stage.id) {
+            let planned = if flint_base {
+                resolve_edge(cfg, &stats, &mut payload)
+            } else {
+                PlannedEdge { exchange: EdgeExchange::direct(base.clone()), tree: None }
+            };
+            edges.insert((stage.id, to), planned);
+        }
+    }
+    ExchangePlan { edges, default: base.clone() }
+}
+
+/// Resolve one edge under the configured backend.
+fn resolve_edge(
+    cfg: &FlintConfig,
+    stats: &EdgeStats,
+    payload: &mut Option<Arc<MemoryShuffle>>,
+) -> PlannedEdge {
+    let choice = match cfg.flint.shuffle_backend {
+        ShuffleBackend::Sqs => BackendChoice::Sqs,
+        ShuffleBackend::S3 => BackendChoice::S3,
+        ShuffleBackend::Auto => choose_backend(cfg, stats),
+    };
+    match choice {
+        BackendChoice::Payload => {
+            let store = payload.get_or_insert_with(MemoryShuffle::new).clone();
+            PlannedEdge { exchange: EdgeExchange::direct(Transport::Payload(store)), tree: None }
+        }
+        BackendChoice::Sqs => {
+            PlannedEdge { exchange: EdgeExchange::direct(Transport::Sqs), tree: None }
+        }
+        BackendChoice::S3 => {
+            let tree = edge_tree(cfg, stats);
+            PlannedEdge {
+                exchange: EdgeExchange {
+                    transport: Transport::S3,
+                    tree_groups: tree.map(|t| t.consumer_groups),
+                },
+                tree,
+            }
+        }
+    }
+}
+
+/// The tree shape an S3 edge uses, when `flint.shuffle.exchange = tree`
+/// and the edge clears the fan-out threshold.
+pub fn edge_tree(cfg: &FlintConfig, stats: &EdgeStats) -> Option<TreePlan> {
+    if cfg.flint.shuffle_exchange != ShuffleExchange::Tree {
+        return None;
+    }
+    tree_plan(stats.producers, stats.partitions, cfg.flint.tree_fanout)
+}
+
+/// Auto backend pick for one edge: cheapest modeled exchange time wins,
+/// ties toward SQS.
+pub fn choose_backend(cfg: &FlintConfig, stats: &EdgeStats) -> BackendChoice {
+    // Known-small edges ride the invocation payload: the inline leg has
+    // no per-request transport charge at all, and overflow past the
+    // 6 MB cap degrades gracefully through the S3 spill leg.
+    if stats.compact_output {
+        return BackendChoice::Payload;
+    }
+    let sqs = est_sqs_s(cfg, stats);
+    let s3 = est_s3_s(cfg, stats);
+    if s3 < sqs {
+        BackendChoice::S3
+    } else {
+        BackendChoice::Sqs
+    }
+}
+
+/// Modeled per-edge seconds on the SQS backend: each producer sends one
+/// message round trip per populated partition (bounded by R), and each
+/// reader drains its P producer messages in receive batches.
+pub fn est_sqs_s(cfg: &FlintConfig, stats: &EdgeStats) -> f64 {
+    let rtt = cfg.sim.sqs_rtt_s;
+    let batch = cfg.sim.sqs_batch_max_msgs.max(1) as f64;
+    stats.partitions as f64 * rtt + (stats.producers as f64 / batch).ceil() * rtt
+}
+
+/// Modeled per-edge seconds on the S3 backend — the tree shape when it
+/// activates, the direct O(P·R) exchange otherwise.
+pub fn est_s3_s(cfg: &FlintConfig, stats: &EdgeStats) -> f64 {
+    match edge_tree(cfg, stats) {
+        Some(tp) => est_s3_tree_s(cfg, &tp),
+        None => est_s3_direct_s(cfg, stats),
+    }
+}
+
+/// Direct S3 exchange: each producer PUTs one object per partition;
+/// each reader LISTs its partition prefix and GETs P objects.
+pub fn est_s3_direct_s(cfg: &FlintConfig, stats: &EdgeStats) -> f64 {
+    let fb = cfg.sim.s3_first_byte_s;
+    stats.partitions as f64 * fb + (1.0 + stats.producers as f64) * fb
+}
+
+/// Tree exchange: producers write one combined object per consumer
+/// group; each merge task lists its group, GETs its producer-rank
+/// share, and PUT+renames one merged object per partition of its group;
+/// readers GET one merged object per producer group.
+pub fn est_s3_tree_s(cfg: &FlintConfig, tp: &TreePlan) -> f64 {
+    let fb = cfg.sim.s3_first_byte_s;
+    let level1 = tp.consumer_groups as f64 * fb;
+    let merge = (1.0
+        + (tp.producers as f64 / tp.producer_groups as f64).ceil()
+        + 2.0 * (tp.partitions as f64 / tp.consumer_groups as f64).ceil())
+        * fb;
+    let read = (1.0 + tp.producer_groups as f64) * fb;
+    level1 + merge + read
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FlintConfig;
+
+    fn dyn_edge(producers: u32, partitions: u32) -> EdgeStats {
+        EdgeStats { producers, partitions, compact_output: false }
+    }
+
+    #[test]
+    fn auto_inlines_compact_kernel_edges() {
+        let cfg = FlintConfig::default();
+        let stats = EdgeStats { producers: 400, partitions: 8, compact_output: true };
+        assert_eq!(choose_backend(&cfg, &stats), BackendChoice::Payload);
+    }
+
+    #[test]
+    fn auto_keeps_small_dyn_edges_on_sqs() {
+        let cfg = FlintConfig::default();
+        for (p, r) in [(2, 2), (40, 8), (256, 64), (1024, 256)] {
+            assert_eq!(
+                choose_backend(&cfg, &dyn_edge(p, r)),
+                BackendChoice::Sqs,
+                "{p}x{r} should stay on the default backend"
+            );
+        }
+    }
+
+    #[test]
+    fn auto_moves_huge_fanout_to_tree_s3() {
+        let mut cfg = FlintConfig::default();
+        cfg.set("flint.shuffle.exchange", "tree").unwrap();
+        let stats = dyn_edge(8192, 8192);
+        // The tree estimate is O(√n)·s3_first_byte while SQS stays
+        // linear in n, so the pick flips at large fan-out…
+        assert!(est_s3_tree_s(&cfg, &edge_tree(&cfg, &stats).unwrap()) < est_sqs_s(&cfg, &stats));
+        assert_eq!(choose_backend(&cfg, &stats), BackendChoice::S3);
+        // …but never without the tree: direct S3's O(n²) requests lose
+        // to SQS at every size, so `exchange = direct` pins auto to SQS.
+        let mut direct = FlintConfig::default();
+        direct.set("flint.shuffle.exchange", "direct").unwrap();
+        assert_eq!(choose_backend(&direct, &stats), BackendChoice::Sqs);
+    }
+
+    #[test]
+    fn estimates_are_monotone_in_fanout() {
+        let cfg = FlintConfig::default();
+        assert!(est_sqs_s(&cfg, &dyn_edge(64, 64)) < est_sqs_s(&cfg, &dyn_edge(1024, 1024)));
+        assert!(
+            est_s3_direct_s(&cfg, &dyn_edge(64, 64))
+                < est_s3_direct_s(&cfg, &dyn_edge(1024, 1024))
+        );
+    }
+
+    #[test]
+    fn explicit_backends_bypass_the_cost_model() {
+        let mut cfg = FlintConfig::default();
+        cfg.set("flint.shuffle.backend", "s3").unwrap();
+        cfg.set("flint.shuffle.exchange", "tree").unwrap();
+        cfg.set("flint.shuffle.tree_fanout", "64").unwrap();
+        let mut payload = None;
+        // A huge dyn edge under explicit s3 + tree: S3 transport with
+        // level-1 grouping active.
+        let stats = dyn_edge(1024, 1024);
+        let planned = resolve_edge(&cfg, &stats, &mut payload);
+        assert!(matches!(planned.exchange.transport, Transport::S3));
+        let tp = planned.tree.expect("tree activates above the fan-out threshold");
+        assert_eq!(planned.exchange.tree_groups, Some(tp.consumer_groups));
+        assert_eq!((tp.producer_groups, tp.consumer_groups), (32, 32));
+        // Below the threshold the same config stays direct.
+        let small = resolve_edge(&cfg, &dyn_edge(8, 8), &mut payload);
+        assert!(matches!(small.exchange.transport, Transport::S3));
+        assert!(small.tree.is_none() && small.exchange.tree_groups.is_none());
+        // Explicit sqs ignores the exchange knob entirely.
+        cfg.set("flint.shuffle.backend", "sqs").unwrap();
+        let sqs = resolve_edge(&cfg, &stats, &mut payload);
+        assert!(matches!(sqs.exchange.transport, Transport::Sqs));
+        assert!(sqs.tree.is_none());
+        assert!(payload.is_none(), "no payload store unless an edge chose it");
+    }
+}

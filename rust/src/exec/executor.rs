@@ -33,6 +33,7 @@ use crate::compute::queries::KeySource;
 use crate::compute::value::Value;
 use crate::config::ShuffleCodec;
 use crate::data::weather::WeatherTable;
+use crate::exec::exchange::ExchangePlan;
 use crate::exec::shuffle::{
     dyn_chunk_values, dyn_partition, kernel_partition, pack_dyn_run, pack_kernel_run,
     ShuffleReader, ShuffleRec, ShuffleWriter, Transport,
@@ -46,6 +47,7 @@ use crate::services::SimEnv;
 use crate::simtime::{Component, CpuStopwatch, Timeline};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashSet};
+use std::sync::Arc;
 
 /// Which engine's I/O model this executor runs under.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,6 +66,10 @@ pub struct ExecCtx<'a> {
     pub runtime: Option<&'a PjrtRuntime>,
     pub plan: &'a PhysicalPlan,
     pub transport: Transport,
+    /// Per-edge transport/exchange resolution (auto backend selection
+    /// and the tree exchange) — every writer and reader consults this
+    /// instead of assuming the base transport.
+    pub exchange: Arc<ExchangePlan>,
     pub mode: IoMode,
     /// Virtual duration cap per invocation (Lambda limit); None on the
     /// cluster.
@@ -195,6 +201,69 @@ pub fn billed_duration(tl: &Timeline) -> f64 {
     (tl.total() - tl.get(Component::ColdStart) - tl.get(Component::WarmStart)).max(0.0)
 }
 
+/// Build a task's shuffle writer with the run's per-edge exchange
+/// resolution and the task's attempt scope applied — every producing
+/// site goes through here so a speculative backup's S3 output is
+/// temp-keyed by its own attempt number.
+fn make_writer<'a>(
+    ctx: &ExecCtx<'a>,
+    task: &TaskDescriptor,
+    partitions: u32,
+    resume_seqs: Option<Vec<u64>>,
+) -> ShuffleWriter<'a> {
+    let consumers = ctx.plan.children(task.stage_id);
+    let edges = ctx.exchange.edges_for(task.stage_id, &consumers);
+    ShuffleWriter::new(
+        ctx.env,
+        ctx.transport.clone(),
+        &ctx.plan.plan_id,
+        task.stage_id,
+        consumers,
+        task.producer_id(),
+        partitions,
+        resume_seqs,
+    )
+    .with_attempt(task.attempt)
+    .with_edges(edges)
+}
+
+/// Attempt-scoped output committer for final S3 part files
+/// (`saveAsTextFile` and the kernel reduce's materialized partials):
+/// the part is staged under an attempt-suffixed temp key and atomically
+/// renamed into place, first-commit-wins, so racing attempts — retries
+/// and speculative backups — can never tear or clobber a part file.
+/// The winning attempt sweeps any crashed older attempts' orphaned
+/// temps off its task's temp prefix.
+fn commit_part(
+    ctx: &ExecCtx,
+    bucket: &str,
+    prefix: &str,
+    task_index: u32,
+    attempt: u32,
+    bytes: Vec<u8>,
+    tl: &mut Timeline,
+) -> Result<()> {
+    let tmp_prefix = format!("{prefix}/_tmp/part-{task_index:05}.");
+    let tmp = format!("{tmp_prefix}a{attempt}");
+    let dst = format!("{prefix}/part-{task_index:05}");
+    let dt = ctx
+        .env
+        .s3()
+        .put_object(bucket, &tmp, bytes)
+        .map_err(|e| anyhow!("save: {e}"))?;
+    tl.charge(Component::S3Write, dt);
+    let (dt, won) = ctx
+        .env
+        .s3()
+        .commit_rename(bucket, &tmp, &dst)
+        .map_err(|e| anyhow!("save commit: {e}"))?;
+    tl.charge(Component::S3Write, dt);
+    if won {
+        let _ = ctx.env.s3().delete_prefix(bucket, &tmp_prefix);
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------
 // Kernel scan (map stage of the benchmark queries)
 // ---------------------------------------------------------------------
@@ -225,19 +294,9 @@ fn kernel_scan(
     let TaskInput::Split(split) = &task.input else { unreachable!() };
 
     let mut accum = HistAccum::new(spec.buckets);
-    let mut writer = match &stage_output_partitions(ctx, task) {
-        Some(parts) => Some(ShuffleWriter::new(
-            ctx.env,
-            ctx.transport.clone(),
-            &ctx.plan.plan_id,
-            task.stage_id,
-            ctx.plan.children(task.stage_id),
-            task.producer_id(),
-            *parts,
-            task.resume.as_ref().map(|r| r.next_seqs.clone()),
-        )),
-        None => None,
-    };
+    let mut writer = stage_output_partitions(ctx, task).map(|parts| {
+        make_writer(ctx, task, parts, task.resume.as_ref().map(|r| r.next_seqs.clone()))
+    });
     let count_only = spec.key == KeySource::None && spec.reduce_partitions == 0;
     let has_ranges = spec.day_range.is_some() || spec.month_range.is_some();
     // Count can skip parsing entirely — unless a day/month predicate is
@@ -581,7 +640,7 @@ fn open_parent_readers<'a>(
         .map(|&p| {
             ShuffleReader::new(
                 ctx.env,
-                ctx.transport.clone(),
+                ctx.exchange.transport_for(p, task.stage_id),
                 &ctx.plan.plan_id,
                 p,
                 task.stage_id,
@@ -773,12 +832,20 @@ fn kernel_reduce(
             for (k, (s, c)) in &agg {
                 text.push_str(&format!("{k}\t{s}\t{c}\n"));
             }
-            let key = format!("{prefix}/part-{:05}", task.task_index);
-            let dt = match ctx.env.s3().put_object(bucket, &key, text.into_bytes()) {
-                Ok(dt) => dt,
-                Err(e) => return abandon_and_fail(&mut readers, anyhow!("save: {e}")),
-            };
-            resp.timeline.charge(Component::S3Write, dt);
+            // Attempt-scoped commit: a speculative backup racing the
+            // primary stages its own temp and the rename resolves
+            // first-wins — no clobbered or torn part files.
+            if let Err(e) = commit_part(
+                ctx,
+                bucket,
+                prefix,
+                task.task_index,
+                task.attempt,
+                text.into_bytes(),
+                &mut resp.timeline,
+            ) {
+                return abandon_and_fail(&mut readers, e);
+            }
             resp.emitted = Emitted::Saved(1);
         }
         out => {
@@ -958,16 +1025,7 @@ fn kernel_join(
     // silently empty join result.
     match &task.output {
         TaskOutput::Shuffle { partitions } => {
-            let mut w = ShuffleWriter::new(
-                ctx.env,
-                ctx.transport.clone(),
-                &ctx.plan.plan_id,
-                task.stage_id,
-                ctx.plan.children(task.stage_id),
-                task.producer_id(),
-                *partitions,
-                None,
-            );
+            let mut w = make_writer(ctx, task, *partitions, None);
             let codec = ctx.env.config().flint.shuffle_codec;
             if let Err(e) = write_join_output(&mut w, joined, *partitions, codec, &mut resp.timeline)
             {
@@ -1132,16 +1190,7 @@ fn dyn_scan(
         _ => None,
     };
     let mut writer = out_parts.map(|parts| {
-        ShuffleWriter::new(
-            ctx.env,
-            ctx.transport.clone(),
-            &ctx.plan.plan_id,
-            task.stage_id,
-            ctx.plan.children(task.stage_id),
-            task.producer_id(),
-            parts,
-            task.resume.as_ref().map(|r| r.next_seqs.clone()),
-        )
+        make_writer(ctx, task, parts, task.resume.as_ref().map(|r| r.next_seqs.clone()))
     });
 
     // Map-side combine buffer (deterministic BTreeMap by encoded key).
@@ -1265,8 +1314,7 @@ fn dyn_scan(
             };
         }
         TaskOutput::S3 { bucket, prefix } => {
-            resp.emitted =
-                save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)?;
+            resp.emitted = save_values(ctx, bucket, prefix, task, &collected, &mut resp.timeline)?;
         }
     }
     Ok(None)
@@ -1474,18 +1522,7 @@ fn route_pairs<'a>(
         StageOutput::Shuffle { combine, .. } => combine.clone(),
         _ => None,
     };
-    let mut writer = out_parts.map(|parts| {
-        ShuffleWriter::new(
-            ctx.env,
-            ctx.transport.clone(),
-            &ctx.plan.plan_id,
-            task.stage_id,
-            ctx.plan.children(task.stage_id),
-            task.producer_id(),
-            parts,
-            None,
-        )
-    });
+    let mut writer = out_parts.map(|parts| make_writer(ctx, task, parts, None));
     let mut collected = Vec::new();
     let mut count = 0u64;
     let mut buf = Vec::new();
@@ -1569,8 +1606,7 @@ fn route_post_ops(
             };
         }
         TaskOutput::S3 { bucket, prefix } => {
-            match save_values(ctx, bucket, prefix, task.task_index, &collected, &mut resp.timeline)
-            {
+            match save_values(ctx, bucket, prefix, task, &collected, &mut resp.timeline) {
                 Ok(emitted) => resp.emitted = emitted,
                 Err(e) => return abandon_and_fail(readers, e),
             }
@@ -1586,7 +1622,7 @@ fn save_values(
     ctx: &ExecCtx,
     bucket: &str,
     prefix: &str,
-    task_index: u32,
+    task: &TaskDescriptor,
     values: &[Value],
     tl: &mut Timeline,
 ) -> Result<Emitted> {
@@ -1597,13 +1633,7 @@ fn save_values(
             other => text.push_str(&format!("{other:?}\n")),
         }
     }
-    let key = format!("{prefix}/part-{task_index:05}");
-    let dt = ctx
-        .env
-        .s3()
-        .put_object(bucket, &key, text.into_bytes())
-        .map_err(|e| anyhow!("save: {e}"))?;
-    tl.charge(Component::S3Write, dt);
+    commit_part(ctx, bucket, prefix, task.task_index, task.attempt, text.into_bytes(), tl)?;
     Ok(Emitted::Saved(1))
 }
 

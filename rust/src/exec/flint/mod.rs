@@ -95,6 +95,10 @@ impl FlintEngine {
         match self.env.config().flint.shuffle_backend {
             crate::config::ShuffleBackend::Sqs => Transport::Sqs,
             crate::config::ShuffleBackend::S3 => Transport::S3,
+            // Auto resolves per DAG edge inside the driver
+            // (`exec::exchange`); the engine default is the base/fallback
+            // transport for anything off the edge map.
+            crate::config::ShuffleBackend::Auto => Transport::Sqs,
         }
     }
 
@@ -108,6 +112,9 @@ impl FlintEngine {
         let schedule = match cfg.flint.shuffle_backend {
             crate::config::ShuffleBackend::Sqs => cfg.flint.scheduler,
             crate::config::ShuffleBackend::S3 => crate::simtime::ScheduleMode::Barrier,
+            // Auto starts from the configured scheduler; the driver
+            // demotes to barrier per plan when any edge resolves to S3.
+            crate::config::ShuffleBackend::Auto => cfg.flint.scheduler,
         };
         RunParams {
             mode: IoMode::Flint,

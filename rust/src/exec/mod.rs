@@ -3,6 +3,7 @@
 
 pub mod cluster;
 pub mod driver;
+pub mod exchange;
 pub mod executor;
 pub mod flint;
 pub mod service;

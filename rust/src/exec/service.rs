@@ -326,6 +326,11 @@ impl FlintService {
         let mode = match cfg.flint.shuffle_backend {
             ShuffleBackend::Sqs => cfg.flint.scheduler,
             ShuffleBackend::S3 => ScheduleMode::Barrier,
+            // Auto starts from the configured scheduler; inside each
+            // query's run the driver demotes to barrier when an edge
+            // resolves to S3, and the shared clock's stage specs carry
+            // those measured durations either way.
+            ShuffleBackend::Auto => cfg.flint.scheduler,
         };
         let spec_policy = cfg.flint.speculation.enabled.then(|| SpecPolicy {
             multiplier: cfg.flint.speculation.multiplier.max(1.0),
@@ -362,6 +367,7 @@ impl FlintService {
                 stages: out.stage_specs.clone(),
                 arrival_s: p.arrival_s,
                 weight: svc.weight_of(&p.tenant),
+                quota: svc.quota_of(&p.tenant),
             });
             partial.push(ServiceQueryReport {
                 qid: p.qid,

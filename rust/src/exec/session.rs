@@ -27,7 +27,7 @@
 //! which lowers onto the same `Rdd` lineage API.
 
 use crate::compute::value::Value;
-use crate::data::Dataset;
+use crate::data::{Dataset, ObjectStats};
 use crate::exec::cluster::{ClusterEngine, ClusterMode};
 use crate::exec::flint::FlintEngine;
 use crate::exec::QueryReport;
@@ -76,6 +76,38 @@ struct SessionInner {
     /// Out-of-band dataset manifests (sources whose objects are not
     /// listable in the simulated store).
     manifests: Mutex<Vec<Dataset>>,
+    /// Per-object stats recovered via HEAD for listing-resolved splits,
+    /// keyed `bucket/key`. `None` records a HEAD that found no stats
+    /// metadata, so even stat-less objects are HEADed at most once per
+    /// session (repeat queries hit the cache: `scan.stats_cache_hits`).
+    stats_cache: Mutex<std::collections::BTreeMap<String, Option<ObjectStats>>>,
+}
+
+impl SessionInner {
+    /// Stats for one listed object: session cache first, then one HEAD
+    /// (priced as a GET-class request) to read the user metadata the
+    /// generator stamped at PUT time.
+    fn object_stats(&self, bucket: &str, key: &str) -> Option<ObjectStats> {
+        let env = self.backend.env();
+        let id = format!("{bucket}/{key}");
+        {
+            let cache = self.stats_cache.lock().expect("session stats cache");
+            if let Some(hit) = cache.get(&id) {
+                env.metrics().incr("scan.stats_cache_hits");
+                return *hit;
+            }
+        }
+        let stats = env
+            .s3()
+            .head_object_meta(bucket, key)
+            .ok()
+            .and_then(|(_, meta)| ObjectStats::from_meta(&meta));
+        self.stats_cache
+            .lock()
+            .expect("session stats cache")
+            .insert(id, stats);
+        stats
+    }
 }
 
 impl SessionBinding for SessionInner {
@@ -102,8 +134,14 @@ impl SessionBinding for SessionInner {
             }
         }
         let listed = env.s3().list(bucket, prefix).unwrap_or_default();
+        let prune = env.config().flint.scan_prune;
         let mut splits = Vec::new();
         for (key, size) in listed {
+            // A listing names objects but carries no column stats; one
+            // HEAD per object (cached for the session) recovers the
+            // stats the generator stamped into S3 user metadata, so
+            // `flint.scan.prune` works without a registered manifest.
+            let stats = if prune { self.object_stats(bucket, &key) } else { None };
             for (start, end) in crate::compute::csv::split_ranges(size, split_bytes) {
                 splits.push(InputSplit {
                     bucket: bucket.to_string(),
@@ -111,8 +149,7 @@ impl SessionBinding for SessionInner {
                     start,
                     end,
                     object_size: size,
-                    // A raw bucket listing carries no manifest stats.
-                    stats: None,
+                    stats,
                 });
             }
         }
@@ -142,6 +179,7 @@ impl FlintContext {
                 backend,
                 tenant: tenant.to_string(),
                 manifests: Mutex::new(Vec::new()),
+                stats_cache: Mutex::new(std::collections::BTreeMap::new()),
             }),
         }
     }

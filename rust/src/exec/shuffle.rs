@@ -32,7 +32,7 @@
 use crate::compute::value::Value;
 use crate::config::ShuffleCodec;
 use crate::data::SHUFFLE_BUCKET;
-use crate::services::{Message, SimEnv};
+use crate::services::{Message, S3Error, SimEnv};
 use crate::simtime::{Component, Timeline};
 use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, HashSet};
@@ -532,6 +532,13 @@ pub enum Transport {
     Sqs,
     S3,
     Memory(Arc<MemoryShuffle>),
+    /// Flock-style payload-inline transport for small edges: partitions
+    /// ride the next invocation's request payload (modeled as the
+    /// in-process store, free of per-request transport charges), with
+    /// overflow past the 6 MB payload cap spilled to the ordinary S3
+    /// shuffle prefix. `(producer, seq)` dedup makes the two legs'
+    /// union safe.
+    Payload(Arc<MemoryShuffle>),
 }
 
 impl Transport {
@@ -540,9 +547,79 @@ impl Transport {
             Transport::Sqs => "sqs",
             Transport::S3 => "s3",
             Transport::Memory(_) => "memory",
+            Transport::Payload(_) => "payload",
         }
     }
+
+    /// Whether a consumer can re-read this edge after a successful drain
+    /// (list-then-get semantics) — what makes a consuming task safe to
+    /// speculate: a backup attempt re-reads the same input instead of
+    /// racing its primary for destructively-read messages.
+    pub fn rereadable(&self) -> bool {
+        matches!(self, Transport::S3)
+    }
 }
+
+/// Per-edge exchange configuration, aligned with a writer's `consumers`
+/// list: which transport the edge uses and, for S3 edges, whether the
+/// tree exchange's level-1 grouping is active (`Some(consumer_groups)`).
+#[derive(Clone)]
+pub struct EdgeExchange {
+    pub transport: Transport,
+    pub tree_groups: Option<u32>,
+}
+
+impl EdgeExchange {
+    pub fn direct(transport: Transport) -> EdgeExchange {
+        EdgeExchange { transport, tree_groups: None }
+    }
+}
+
+/// Shape of one edge's tree (multi-level) exchange: producers write one
+/// combined object per consumer *group* (level 1), then
+/// `producer_groups` × `consumer_groups` merge tasks re-partition those
+/// into the ordinary per-partition prefixes. √n-sized groups turn the
+/// direct exchange's O(P·R) object count into O(P·√R + √P·R).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TreePlan {
+    pub producers: u32,
+    pub partitions: u32,
+    pub producer_groups: u32,
+    pub consumer_groups: u32,
+}
+
+/// Consumer group of a partition: contiguous ascending ranges, so merged
+/// keys (which sort by producer group) preserve the direct exchange's
+/// lexicographic (producer, seq) record order exactly.
+pub fn consumer_group_of(partition: u32, partitions: u32, groups: u32) -> u32 {
+    (partition as u64 * groups as u64 / partitions as u64) as u32
+}
+
+/// Decide whether the tree exchange activates for an edge, and with what
+/// group counts. `None` below the fan-out threshold (or on degenerate
+/// edges): the extra level only pays for itself once per-edge request
+/// counts dominate, so small edges stay direct even under
+/// `flint.shuffle.exchange = tree`.
+pub fn tree_plan(producers: u32, partitions: u32, fanout_threshold: usize) -> Option<TreePlan> {
+    if producers < 2 || partitions < 2 {
+        return None;
+    }
+    if (producers.max(partitions) as usize) < fanout_threshold {
+        return None;
+    }
+    Some(TreePlan {
+        producers,
+        partitions,
+        producer_groups: (producers as f64).sqrt().ceil() as u32,
+        consumer_groups: (partitions as f64).sqrt().ceil() as u32,
+    })
+}
+
+/// High bit marks merge-level producer ids. Real producers are
+/// `(stage << 32) | task` (`TaskDescriptor::producer_id`) and can never
+/// set it, so merged objects share the `p{partition}/` key space without
+/// aliasing a producer's dedup identity.
+pub const MERGE_PRODUCER_BASE: u64 = 0x8000_0000_0000_0000;
 
 /// Queue name for one DAG edge's partition (plan, producing stage,
 /// consuming stage, partition) — created/deleted by the scheduler
@@ -556,6 +633,53 @@ pub fn s3_prefix(plan_id: &str, from: u32, to: u32, partition: u32) -> String {
     format!("{plan_id}/s{from}-s{to}/p{partition}/")
 }
 
+/// Prefix owning every object of one DAG edge (partition prefixes, tree
+/// group prefixes, and attempt temp prefixes alike) — what the
+/// scheduler's lifecycle cleanup deletes when the edge's consumer is
+/// done.
+pub fn s3_edge_prefix(plan_id: &str, from: u32, to: u32) -> String {
+    format!("{plan_id}/s{from}-s{to}/")
+}
+
+/// Attempt-scoped temp sibling of [`s3_prefix`]: uncommitted objects
+/// live here (suffixed `.a{attempt}`) until the writing attempt commits
+/// them via atomic rename, so a reader's `p{partition}/` listing can
+/// never observe a torn or partial attempt, and racing attempts resolve
+/// first-commit-wins per object.
+pub fn s3_temp_prefix(plan_id: &str, from: u32, to: u32, partition: u32) -> String {
+    format!("{plan_id}/s{from}-s{to}/t{partition}/")
+}
+
+/// Level-1 prefix of the tree exchange: producers write combined
+/// objects per consumer *group* here; the merge level re-partitions
+/// them into the ordinary `p{partition}/` prefixes.
+pub fn s3_group_prefix(plan_id: &str, from: u32, to: u32, group: u32) -> String {
+    format!("{plan_id}/s{from}-s{to}/g{group}/")
+}
+
+/// Temp sibling of [`s3_group_prefix`] (same commit protocol).
+pub fn s3_group_temp_prefix(plan_id: &str, from: u32, to: u32, group: u32) -> String {
+    format!("{plan_id}/s{from}-s{to}/tg{group}/")
+}
+
+/// Frame one sealed message into a tree-exchange combined object:
+/// varint(partition), varint(len), body. The producer rides in the
+/// object key; per-message seq identity is not needed past level 1
+/// because merge output carries merge-level identities.
+fn put_frame(out: &mut Vec<u8>, partition: u32, body: &[u8]) {
+    put_varint(out, partition as u64);
+    put_varint(out, body.len() as u64);
+    out.extend_from_slice(body);
+}
+
+fn get_frame<'b>(bytes: &'b [u8], pos: &mut usize) -> Option<(u32, &'b [u8])> {
+    let partition = get_varint(bytes, pos)?;
+    let len = get_varint(bytes, pos)? as usize;
+    let body = bytes.get(*pos..pos.checked_add(len)?)?;
+    *pos += len;
+    Some((u32::try_from(partition).ok()?, body))
+}
+
 /// Target message body size: leave headroom under the 256 KB batch cap
 /// for wire overhead; ten ~24 KB messages fill one batch call.
 const MSG_TARGET_BYTES: usize = 24 * 1024;
@@ -566,19 +690,31 @@ const MSG_TARGET_BYTES: usize = 24 * 1024;
 /// common single-consumer case stays one send.
 pub struct ShuffleWriter<'a> {
     env: &'a SimEnv,
-    transport: Transport,
     plan_id: String,
     stage: u32,
     /// Consuming stage ids — the DAG edges this stage's shuffle feeds.
     consumers: Vec<u32>,
+    /// Per-edge transport/exchange, aligned with `consumers` (all edges
+    /// share the `new()` transport unless overridden via `with_edges`).
+    edges: Vec<EdgeExchange>,
     producer: u64,
     partitions: u32,
+    /// Attempt number scoping this writer's S3 temp keys (`with_attempt`).
+    attempt: u32,
     /// Per-partition encode buffer (records encoded back-to-back).
     bufs: Vec<Vec<u8>>,
     /// Per-partition pending messages awaiting a batch send.
     pending: Vec<Vec<Message>>,
     /// Per-partition next sequence number.
     seqs: Vec<u64>,
+    /// Per-edge tree-exchange buffers: consumer group → framed sealed
+    /// messages awaiting a level-1 combined-object flush.
+    group_bufs: Vec<BTreeMap<u32, Vec<u8>>>,
+    /// Staged `(temp key, final key)` renames awaiting commit.
+    staged: Vec<(String, String)>,
+    /// Per-edge, per-partition bytes already riding the invocation
+    /// payload (the Payload transport's 6 MB cap accounting).
+    payload_bytes: Vec<Vec<u64>>,
     pub msgs_sent: u64,
     pub bytes_sent: u64,
     /// Bytes sent per consuming edge, aligned with `consumers`.
@@ -599,21 +735,45 @@ impl<'a> ShuffleWriter<'a> {
         let seqs = resume_seqs.unwrap_or_else(|| vec![0; partitions as usize]);
         assert_eq!(seqs.len(), partitions as usize);
         let edge_bytes = vec![0; consumers.len()];
+        let edges: Vec<EdgeExchange> =
+            consumers.iter().map(|_| EdgeExchange::direct(transport.clone())).collect();
+        let group_bufs = consumers.iter().map(|_| BTreeMap::new()).collect();
+        let payload_bytes = consumers.iter().map(|_| vec![0; partitions as usize]).collect();
         ShuffleWriter {
             env,
-            transport,
             plan_id: plan_id.to_string(),
             stage,
             consumers,
+            edges,
             producer,
             partitions,
+            attempt: 0,
             bufs: (0..partitions).map(|_| Vec::new()).collect(),
             pending: (0..partitions).map(|_| Vec::new()).collect(),
             seqs,
+            group_bufs,
+            staged: Vec::new(),
+            payload_bytes,
             msgs_sent: 0,
             bytes_sent: 0,
             edge_bytes,
         }
+    }
+
+    /// Scope this writer's S3 temp keys to a task attempt: a speculative
+    /// backup or retry writes `.a{attempt}` temps and commits through
+    /// first-wins renames instead of clobbering the primary's objects.
+    pub fn with_attempt(mut self, attempt: u32) -> Self {
+        self.attempt = attempt;
+        self
+    }
+
+    /// Per-edge transport/exchange overrides (auto backend selection and
+    /// the tree exchange), aligned with `consumers`.
+    pub fn with_edges(mut self, edges: Vec<EdgeExchange>) -> Self {
+        assert_eq!(edges.len(), self.consumers.len());
+        self.edges = edges;
+        self
     }
 
     /// Bytes sent so far per consuming edge: `(consumer stage, bytes)`.
@@ -633,6 +793,11 @@ impl<'a> ShuffleWriter<'a> {
                 .pending
                 .iter()
                 .flat_map(|p| p.iter().map(Message::wire_bytes))
+                .sum::<usize>()
+            + self
+                .group_bufs
+                .iter()
+                .flat_map(|e| e.values().map(Vec::len))
                 .sum::<usize>()
     }
 
@@ -684,7 +849,8 @@ impl<'a> ShuffleWriter<'a> {
             self.msgs_sent += edge_msgs.len() as u64;
             self.bytes_sent += bytes as u64;
             self.edge_bytes[ci] += bytes as u64;
-            match &self.transport {
+            let transport = self.edges[ci].transport.clone();
+            match &transport {
                 Transport::Sqs => {
                     // Chunk by message count AND wire bytes: a message seals
                     // only after crossing MSG_TARGET_BYTES, so one big record
@@ -722,21 +888,27 @@ impl<'a> ShuffleWriter<'a> {
                     }
                 }
                 Transport::S3 => {
-                    // One object per message-equivalent flush; key carries the
-                    // dedup identity so retries overwrite idempotently.
-                    for m in edge_msgs {
-                        let key = format!(
-                            "{}{:016x}-{:08}",
-                            s3_prefix(&self.plan_id, self.stage, to, partition),
-                            m.producer,
-                            m.seq
-                        );
-                        let dt = self
-                            .env
-                            .s3()
-                            .put_object(SHUFFLE_BUCKET, &key, m.body)
-                            .map_err(|e| anyhow!("shuffle put: {e}"))?;
-                        tl.charge(Component::S3Write, dt);
+                    if let Some(groups) = self.edges[ci].tree_groups {
+                        // Tree exchange level 1: frame the sealed
+                        // messages into this partition's consumer-group
+                        // buffer; combined objects flush on a byte
+                        // threshold and at `flush_all`.
+                        let cg = consumer_group_of(partition, self.partitions, groups);
+                        let buf = self.group_bufs[ci].entry(cg).or_default();
+                        for m in edge_msgs {
+                            put_frame(buf, partition, &m.body);
+                        }
+                        if self.group_bufs[ci][&cg].len() >= GROUP_TARGET_BYTES {
+                            self.flush_group(ci, cg, tl)?;
+                        }
+                    } else {
+                        // One object per message-equivalent flush, staged
+                        // under the attempt's temp prefix; the key stem
+                        // carries the dedup identity so retries commit
+                        // idempotently.
+                        for m in edge_msgs {
+                            self.stage_object(to, partition, m, tl)?;
+                        }
                     }
                 }
                 Transport::Memory(mem) => {
@@ -746,20 +918,125 @@ impl<'a> ShuffleWriter<'a> {
                         mem.push(self.stage, to, partition, m);
                     }
                 }
+                Transport::Payload(mem) => {
+                    // Inline until the edge-partition's payload budget is
+                    // spent (the invocation itself is billed elsewhere;
+                    // the ride is free), then spill to the ordinary S3
+                    // prefix. Spills commit like any S3 object.
+                    let cap = self.env.config().sim.lambda_payload_limit_bytes;
+                    for m in edge_msgs {
+                        let w = m.wire_bytes() as u64;
+                        let used = &mut self.payload_bytes[ci][partition as usize];
+                        if *used + w > cap {
+                            self.env.metrics().incr("shuffle.payload_spills");
+                            self.stage_object(to, partition, m, tl)?;
+                        } else {
+                            *used += w;
+                            mem.push(self.stage, to, partition, m);
+                        }
+                    }
+                }
             }
         }
         Ok(())
     }
 
-    /// Seal and send everything buffered (end of task or chain point).
+    /// Stage one message as an attempt-scoped S3 temp object; the final
+    /// key becomes visible only when [`flush_all`] commits the rename.
+    fn stage_object(
+        &mut self,
+        to: u32,
+        partition: u32,
+        m: Message,
+        tl: &mut Timeline,
+    ) -> Result<()> {
+        let stem = format!("{:016x}-{:08}", m.producer, m.seq);
+        let tmp = format!(
+            "{}{stem}.a{}",
+            s3_temp_prefix(&self.plan_id, self.stage, to, partition),
+            self.attempt
+        );
+        let dst = format!("{}{stem}", s3_prefix(&self.plan_id, self.stage, to, partition));
+        let dt = self
+            .env
+            .s3()
+            .put_object(SHUFFLE_BUCKET, &tmp, m.body)
+            .map_err(|e| anyhow!("shuffle put: {e}"))?;
+        tl.charge(Component::S3Write, dt);
+        self.staged.push((tmp, dst));
+        Ok(())
+    }
+
+    /// Flush one edge's consumer-group buffer as a level-1 combined
+    /// object. The object's sequence number is the sum of the group's
+    /// partition seq counters: strictly increasing between flushes
+    /// (every flush carries at least one newly sealed message) and
+    /// identical on a resumed or retried attempt, so keys are unique
+    /// yet retry-idempotent.
+    fn flush_group(&mut self, ci: usize, group: u32, tl: &mut Timeline) -> Result<()> {
+        let buf = match self.group_bufs[ci].get_mut(&group) {
+            Some(b) if !b.is_empty() => std::mem::take(b),
+            _ => return Ok(()),
+        };
+        let to = self.consumers[ci];
+        let groups = self.edges[ci].tree_groups.expect("tree edge");
+        let gseq: u64 = (0..self.partitions)
+            .filter(|&p| consumer_group_of(p, self.partitions, groups) == group)
+            .map(|p| self.seqs[p as usize])
+            .sum();
+        let stem = format!("{:016x}-{:08}", self.producer, gseq);
+        let tmp = format!(
+            "{}{stem}.a{}",
+            s3_group_temp_prefix(&self.plan_id, self.stage, to, group),
+            self.attempt
+        );
+        let dst = format!("{}{stem}", s3_group_prefix(&self.plan_id, self.stage, to, group));
+        let dt = self
+            .env
+            .s3()
+            .put_object(SHUFFLE_BUCKET, &tmp, buf)
+            .map_err(|e| anyhow!("shuffle group put: {e}"))?;
+        tl.charge(Component::S3Write, dt);
+        self.staged.push((tmp, dst));
+        Ok(())
+    }
+
+    /// Commit every staged S3 object: rename temp → final, first commit
+    /// wins. A rename whose source vanished lost to a winner's temp
+    /// cleanup; both loss shapes are benign because a task's final key
+    /// set and bytes are deterministic across attempts.
+    fn commit_staged(&mut self, tl: &mut Timeline) -> Result<()> {
+        for (src, dst) in std::mem::take(&mut self.staged) {
+            match self.env.s3().commit_rename(SHUFFLE_BUCKET, &src, &dst) {
+                Ok((dt, _won)) => tl.charge(Component::S3Write, dt),
+                Err(S3Error::NoSuchKey(..)) => {}
+                Err(e) => return Err(anyhow!("shuffle commit: {e}")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal, send, and commit everything buffered (end of task or chain
+    /// point — either way the attempt's output must be durably visible
+    /// before the input it derives from is acked).
     pub fn flush_all(&mut self, tl: &mut Timeline) -> Result<()> {
         for p in 0..self.partitions {
             self.seal(p);
             self.flush_partition(p, tl)?;
         }
-        Ok(())
+        for ci in 0..self.consumers.len() {
+            let groups: Vec<u32> = self.group_bufs[ci].keys().copied().collect();
+            for g in groups {
+                self.flush_group(ci, g, tl)?;
+            }
+        }
+        self.commit_staged(tl)
     }
 }
+
+/// Byte threshold for flushing a tree-exchange combined object mid-task
+/// (deterministic, like message sealing).
+const GROUP_TARGET_BYTES: usize = 256 * 1024;
 
 /// Reduce-side reader outcome.
 pub struct ShuffleRead {
@@ -835,40 +1112,7 @@ impl<'a> ShuffleReader<'a> {
                     self.take(msg, &mut out)?;
                 }
             },
-            Transport::S3 => {
-                let prefix = s3_prefix(&self.plan_id, self.stage, self.to_stage, self.partition);
-                let listed = self
-                    .env
-                    .s3()
-                    .list(SHUFFLE_BUCKET, &prefix)
-                    .map_err(|e| anyhow!("shuffle list: {e}"))?;
-                // LIST round trip.
-                tl.charge(Component::S3Read, self.env.config().sim.s3_first_byte_s);
-                for (key, _) in listed {
-                    let (obj, dt) = self
-                        .env
-                        .s3()
-                        .get_object(SHUFFLE_BUCKET, &key, self.env.flint_read_profile())
-                        .map_err(|e| anyhow!("shuffle get: {e}"))?;
-                    tl.charge(Component::S3Read, dt);
-                    // Reconstruct dedup identity from the key. A key that
-                    // does not parse is a hard error: defaulting (the old
-                    // behaviour) made every malformed/foreign key alias
-                    // to (0, 0), so dedup silently dropped all but the
-                    // first such object's records.
-                    let stem = key.rsplit('/').next().unwrap_or("");
-                    let (p, s) = stem.split_once('-').ok_or_else(|| {
-                        anyhow!("shuffle object key {key:?} lacks a producer-seq stem")
-                    })?;
-                    let producer = u64::from_str_radix(p, 16).map_err(|e| {
-                        anyhow!("shuffle object key {key:?} has a bad producer id: {e}")
-                    })?;
-                    let seq: u64 = s.parse().map_err(|e| {
-                        anyhow!("shuffle object key {key:?} has a bad sequence number: {e}")
-                    })?;
-                    self.take(Message::new(obj.bytes().to_vec(), producer, seq), &mut out)?;
-                }
-            }
+            Transport::S3 => self.drain_s3(&mut out, tl)?,
             Transport::Memory(mem) => {
                 let msgs = mem.drain(self.stage, self.to_stage, self.partition);
                 let bytes: usize = msgs.iter().map(Message::wire_bytes).sum();
@@ -878,8 +1122,57 @@ impl<'a> ShuffleReader<'a> {
                     self.take(m, &mut out)?;
                 }
             }
+            Transport::Payload(mem) => {
+                // The inline leg rode the invocation payload — no
+                // transport charge of its own. Overflow spilled past the
+                // payload cap lives under the ordinary S3 prefix;
+                // (producer, seq) dedup makes the two legs' union safe.
+                let msgs = mem.drain(self.stage, self.to_stage, self.partition);
+                for m in msgs {
+                    self.take(m, &mut out)?;
+                }
+                self.drain_s3(&mut out, tl)?;
+            }
         }
         Ok(out)
+    }
+
+    /// Drain the edge-partition's S3 prefix (the S3 backend's whole
+    /// stream; the Payload backend's spill leg).
+    fn drain_s3(&mut self, out: &mut ShuffleRead, tl: &mut Timeline) -> Result<()> {
+        let prefix = s3_prefix(&self.plan_id, self.stage, self.to_stage, self.partition);
+        let listed = self
+            .env
+            .s3()
+            .list(SHUFFLE_BUCKET, &prefix)
+            .map_err(|e| anyhow!("shuffle list: {e}"))?;
+        // LIST round trip.
+        tl.charge(Component::S3Read, self.env.config().sim.s3_first_byte_s);
+        for (key, _) in listed {
+            let (obj, dt) = self
+                .env
+                .s3()
+                .get_object(SHUFFLE_BUCKET, &key, self.env.flint_read_profile())
+                .map_err(|e| anyhow!("shuffle get: {e}"))?;
+            tl.charge(Component::S3Read, dt);
+            // Reconstruct dedup identity from the key. A key that
+            // does not parse is a hard error: defaulting (the old
+            // behaviour) made every malformed/foreign key alias
+            // to (0, 0), so dedup silently dropped all but the
+            // first such object's records.
+            let stem = key.rsplit('/').next().unwrap_or("");
+            let (p, s) = stem.split_once('-').ok_or_else(|| {
+                anyhow!("shuffle object key {key:?} lacks a producer-seq stem")
+            })?;
+            let producer = u64::from_str_radix(p, 16).map_err(|e| {
+                anyhow!("shuffle object key {key:?} has a bad producer id: {e}")
+            })?;
+            let seq: u64 = s.parse().map_err(|e| {
+                anyhow!("shuffle object key {key:?} has a bad sequence number: {e}")
+            })?;
+            self.take(Message::new(obj.bytes().to_vec(), producer, seq), out)?;
+        }
+        Ok(())
     }
 
     fn take(&mut self, msg: Message, out: &mut ShuffleRead) -> Result<()> {
@@ -912,7 +1205,9 @@ impl<'a> ShuffleReader<'a> {
                     tl.charge(Component::SqsReceive, dt);
                 }
             }
-            Transport::Memory(mem) => mem.ack(self.stage, self.to_stage, self.partition),
+            Transport::Memory(mem) | Transport::Payload(mem) => {
+                mem.ack(self.stage, self.to_stage, self.partition)
+            }
             Transport::S3 => {}
         }
         self.receipts.clear();
@@ -929,11 +1224,133 @@ impl<'a> ShuffleReader<'a> {
                 let q = self.queue();
                 let _ = self.env.sqs().nack(&q, &self.receipts);
             }
-            Transport::Memory(mem) => mem.nack(self.stage, self.to_stage, self.partition),
+            Transport::Memory(mem) | Transport::Payload(mem) => {
+                mem.nack(self.stage, self.to_stage, self.partition)
+            }
             Transport::S3 => {}
         }
         self.receipts.clear();
     }
+}
+
+/// Accounting for one edge's tree-exchange merge level.
+#[derive(Debug, Default, Clone)]
+pub struct TreeMergeReport {
+    /// Modeled duration of each (producer group × consumer group) merge
+    /// task. The driver packs these onto the slot pool and folds the
+    /// resulting makespan into the producing stage's overhead, so the
+    /// event clock sees the extra level's requests and serialization
+    /// exactly (the S3 backend pins barrier scheduling, under which the
+    /// merge level really does sit between the two stages).
+    pub task_durations: Vec<f64>,
+    pub objects_read: u64,
+    pub objects_written: u64,
+    /// Component-wise sum over the merge tasks (folded into the run's
+    /// aggregate timeline so the extra level's time is attributed).
+    pub timeline: Timeline,
+}
+
+/// Run the tree exchange's merge level for one DAG edge: list each
+/// consumer group's combined level-1 objects, re-partition their frames,
+/// and commit one merged object per (producer group, partition) into the
+/// ordinary `p{partition}/` prefix — [`ShuffleReader`] consumes tree
+/// output unchanged.
+///
+/// Record order is preserved exactly. Producer groups are contiguous
+/// ascending producer-id ranges and merged keys sort by producer group,
+/// so a reader's lexicographic listing replays the direct exchange's
+/// (producer asc, seq asc) merge stream — bit-identical results with
+/// O(√n) objects per partition instead of O(n).
+pub fn merge_tree_level(
+    env: &SimEnv,
+    plan_id: &str,
+    from: u32,
+    to: u32,
+    plan: &TreePlan,
+) -> Result<TreeMergeReport> {
+    let mut report = TreeMergeReport::default();
+    for cg in 0..plan.consumer_groups {
+        let prefix = s3_group_prefix(plan_id, from, to, cg);
+        let listed = env
+            .s3()
+            .list(SHUFFLE_BUCKET, &prefix)
+            .map_err(|e| anyhow!("tree merge list: {e}"))?;
+        if listed.is_empty() {
+            continue;
+        }
+        // Group the level-1 objects by producer, ascending.
+        let mut by_producer: BTreeMap<u64, Vec<(u64, String)>> = BTreeMap::new();
+        for (key, _) in listed {
+            let stem = key.rsplit('/').next().unwrap_or("");
+            let (p, s) = stem.split_once('-').ok_or_else(|| {
+                anyhow!("tree level-1 key {key:?} lacks a producer-seq stem")
+            })?;
+            let producer = u64::from_str_radix(p, 16)
+                .map_err(|e| anyhow!("tree level-1 key {key:?} has a bad producer id: {e}"))?;
+            let gseq: u64 = s.parse().map_err(|e| {
+                anyhow!("tree level-1 key {key:?} has a bad sequence number: {e}")
+            })?;
+            by_producer.entry(producer).or_default().push((gseq, key));
+        }
+        let producers: Vec<u64> = by_producer.keys().copied().collect();
+        let n = producers.len() as u64;
+        let pgs = plan.producer_groups.min(producers.len() as u32).max(1);
+        for pg in 0..pgs {
+            // Contiguous rank ranges over the observed producers.
+            let lo = (pg as u64 * n / pgs as u64) as usize;
+            let hi = ((pg as u64 + 1) * n / pgs as u64) as usize;
+            if lo == hi {
+                continue;
+            }
+            let mut tl = Timeline::new();
+            // Each merge task lists its group prefix once.
+            tl.charge(Component::S3Read, env.config().sim.s3_first_byte_s);
+            let mut per_part: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
+            for producer in &producers[lo..hi] {
+                let mut objs = by_producer[producer].clone();
+                objs.sort(); // numeric gseq order, robust past 8 digits
+                for (_gseq, key) in objs {
+                    let (obj, dt) = env
+                        .s3()
+                        .get_object(SHUFFLE_BUCKET, &key, env.flint_read_profile())
+                        .map_err(|e| anyhow!("tree merge get: {e}"))?;
+                    tl.charge(Component::S3Read, dt);
+                    report.objects_read += 1;
+                    let bytes = obj.bytes();
+                    let mut pos = 0usize;
+                    while pos < bytes.len() {
+                        let (part, body) = get_frame(bytes, &mut pos)
+                            .ok_or_else(|| anyhow!("corrupt tree frame in {key:?}"))?;
+                        per_part.entry(part).or_default().extend_from_slice(body);
+                    }
+                }
+            }
+            // One merged object per partition, committed through the
+            // same temp + rename protocol as every S3-materializing
+            // writer (the merge level is driver-driven and single-
+            // attempt, but uniformity keeps partial state invisible).
+            let merger = MERGE_PRODUCER_BASE | pg as u64;
+            for (part, body) in per_part {
+                let stem = format!("{merger:016x}-{part:08}");
+                let tmp = format!("{}{stem}.a0", s3_temp_prefix(plan_id, from, to, part));
+                let dst = format!("{}{stem}", s3_prefix(plan_id, from, to, part));
+                let dt = env
+                    .s3()
+                    .put_object(SHUFFLE_BUCKET, &tmp, body)
+                    .map_err(|e| anyhow!("tree merge put: {e}"))?;
+                tl.charge(Component::S3Write, dt);
+                let (dt, _won) = env
+                    .s3()
+                    .commit_rename(SHUFFLE_BUCKET, &tmp, &dst)
+                    .map_err(|e| anyhow!("tree merge commit: {e}"))?;
+                tl.charge(Component::S3Write, dt);
+                report.objects_written += 1;
+            }
+            report.task_durations.push(tl.total());
+            report.timeline.merge(&tl);
+        }
+    }
+    Ok(report)
 }
 
 /// Hash-partitioner for kernel records (bucket keys): mirrors Spark's
@@ -1573,5 +1990,156 @@ mod tests {
         assert!(per_edge[0].1 > 0);
         assert_eq!(per_edge[0].1, per_edge[1].1, "each edge gets a full copy");
         assert_eq!(per_edge[0].1 + per_edge[1].1, w.bytes_sent);
+    }
+
+    #[test]
+    fn payload_roundtrip_delivers_everything() {
+        let env = env_with(0.0);
+        let (recs, _) = roundtrip(Transport::Payload(MemoryShuffle::new()), &env, true);
+        assert_eq!(recs.len(), 200);
+        assert_eq!(env.metrics().get("shuffle.payload_spills"), 0, "small edge stays inline");
+    }
+
+    #[test]
+    fn payload_spills_past_cap_to_s3_and_union_drains() {
+        let mut cfg = FlintConfig::for_tests();
+        // A 50 KB payload budget: ~24 KB sealed messages spill quickly.
+        cfg.sim.lambda_payload_limit_bytes = 50 * 1024;
+        let env = SimEnv::new(cfg);
+        env.s3().create_bucket(SHUFFLE_BUCKET);
+        let mem = MemoryShuffle::new();
+        let transport = Transport::Payload(Arc::clone(&mem));
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, transport.clone(), "pl", 0, vec![1], 7, 1, None);
+        let n = 20_000i64;
+        for i in 0..n {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        w.flush_all(&mut tl).unwrap();
+        assert!(env.metrics().get("shuffle.payload_spills") > 0, "cap forced spills");
+        let spilled = env.s3().list(SHUFFLE_BUCKET, &s3_prefix("pl", 0, 1, 0)).unwrap();
+        assert!(!spilled.is_empty(), "spilled objects committed under the ordinary prefix");
+        let mut r = ShuffleReader::new(&env, transport, "pl", 0, 1, 0, true);
+        let read = r.drain(&mut tl).unwrap();
+        r.ack(&mut tl).unwrap();
+        let total: usize = unpacked(&read.records).len();
+        assert_eq!(total as i64, n, "inline + spill legs union to the full stream");
+        assert_eq!(read.duplicates_dropped, 0, "the two legs never alias");
+    }
+
+    #[test]
+    fn s3_temp_objects_invisible_until_commit() {
+        let env = env_with(0.0);
+        let mut tl = Timeline::new();
+        let mut w = ShuffleWriter::new(&env, Transport::S3, "tmp", 0, vec![1], 7, 1, None)
+            .with_attempt(2);
+        // Enough records that mid-task flushes stage temp objects.
+        for i in 0..20_000i64 {
+            w.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        let visible = env.s3().list(SHUFFLE_BUCKET, &s3_prefix("tmp", 0, 1, 0)).unwrap();
+        assert!(visible.is_empty(), "nothing visible before commit");
+        let temps = env.s3().list(SHUFFLE_BUCKET, &s3_temp_prefix("tmp", 0, 1, 0)).unwrap();
+        assert!(!temps.is_empty(), "mid-task flushes staged temp objects");
+        assert!(temps.iter().all(|(k, _)| k.ends_with(".a2")), "temps are attempt-scoped");
+        w.flush_all(&mut tl).unwrap();
+        let visible = env.s3().list(SHUFFLE_BUCKET, &s3_prefix("tmp", 0, 1, 0)).unwrap();
+        assert!(!visible.is_empty(), "commit renamed everything into place");
+        let temps = env.s3().list(SHUFFLE_BUCKET, &s3_temp_prefix("tmp", 0, 1, 0)).unwrap();
+        assert!(temps.is_empty(), "commit consumed every temp");
+    }
+
+    #[test]
+    fn racing_s3_attempts_commit_first_wins_without_duplicates() {
+        // A primary and a speculative backup write byte-identical output
+        // under different attempt temps; whoever commits a key first
+        // wins it, the other's rename is consumed benignly, and the
+        // reader sees exactly one copy.
+        let env = env_with(0.0);
+        let mut tl = Timeline::new();
+        let mut primary =
+            ShuffleWriter::new(&env, Transport::S3, "race", 3, vec![4], 9, 1, None);
+        let mut backup = ShuffleWriter::new(&env, Transport::S3, "race", 3, vec![4], 9, 1, None)
+            .with_attempt(1);
+        for i in 0..500i64 {
+            primary.write(0, &krec(i, 1.0), &mut tl).unwrap();
+            backup.write(0, &krec(i, 1.0), &mut tl).unwrap();
+        }
+        primary.flush_all(&mut tl).unwrap();
+        backup.flush_all(&mut tl).unwrap();
+        assert!(env.metrics().get("s3.commit_lost") > 0, "the backup really lost races");
+        let mut r = ShuffleReader::new(&env, Transport::S3, "race", 3, 4, 0, true);
+        let read = r.drain(&mut tl).unwrap();
+        assert_eq!(unpacked(&read.records).len(), 500, "exactly one copy survives");
+        assert_eq!(read.duplicates_dropped, 0, "renames, not duplicate keys");
+        let temps = env.s3().list(SHUFFLE_BUCKET, &s3_temp_prefix("race", 3, 4, 0)).unwrap();
+        assert!(temps.is_empty(), "both attempts' temps consumed");
+    }
+
+    #[test]
+    fn tree_exchange_is_bit_identical_to_direct() {
+        // 6 producers × 8 partitions through both exchanges: the merged
+        // per-partition record streams must be byte-for-byte identical,
+        // in order, to direct's.
+        let env = env_with(0.0);
+        let mut tl = Timeline::new();
+        let producers: Vec<u64> = (0..6).map(|t| (2u64 << 32) | t).collect();
+        let plan = tree_plan(6, 8, 2).expect("above threshold");
+        assert_eq!(plan.producer_groups, 3);
+        assert_eq!(plan.consumer_groups, 3);
+        for &p in &producers {
+            let mut wd = ShuffleWriter::new(&env, Transport::S3, "dir", 2, vec![3], p, 8, None);
+            let mut wt = ShuffleWriter::new(&env, Transport::S3, "tre", 2, vec![3], p, 8, None)
+                .with_edges(vec![EdgeExchange {
+                    transport: Transport::S3,
+                    tree_groups: Some(plan.consumer_groups),
+                }]);
+            for i in 0..4000i64 {
+                let rec = krec(i.wrapping_mul(p as i64 | 1), 1.0);
+                let part = (i % 8) as u32;
+                wd.write(part, &rec, &mut tl).unwrap();
+                wt.write(part, &rec, &mut tl).unwrap();
+            }
+            wd.flush_all(&mut tl).unwrap();
+            wt.flush_all(&mut tl).unwrap();
+        }
+        // Level 1 wrote combined objects only; partitions are empty
+        // until the merge level runs.
+        assert!(env.s3().list(SHUFFLE_BUCKET, &s3_prefix("tre", 2, 3, 0)).unwrap().is_empty());
+        let report = merge_tree_level(&env, "tre", 2, 3, &plan).unwrap();
+        assert!(!report.task_durations.is_empty());
+        assert!(report.objects_written > 0);
+        for part in 0..8u32 {
+            let mut rd = ShuffleReader::new(&env, Transport::S3, "dir", 2, 3, part, true);
+            let mut rt = ShuffleReader::new(&env, Transport::S3, "tre", 2, 3, part, true);
+            let direct = rd.drain(&mut tl).unwrap();
+            let tree = rt.drain(&mut tl).unwrap();
+            assert_eq!(
+                unpacked(&direct.records),
+                unpacked(&tree.records),
+                "partition {part}: tree must replay direct's record stream exactly"
+            );
+            assert!(
+                tree.messages < direct.messages,
+                "partition {part}: merged objects arrive in fewer, larger reads"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_plan_respects_fanout_threshold() {
+        assert!(tree_plan(8, 8, 64).is_none(), "below threshold stays direct");
+        assert!(tree_plan(2, 1024, 64).is_some(), "partition fan-out alone can trigger");
+        assert!(tree_plan(1, 1024, 2).is_none(), "degenerate edges stay direct");
+        let p = tree_plan(1024, 1024, 64).unwrap();
+        assert_eq!(p.producer_groups, 32);
+        assert_eq!(p.consumer_groups, 32);
+        // Contiguous ascending group ranges (order preservation).
+        let mut last = 0;
+        for part in 0..1024 {
+            let g = consumer_group_of(part, 1024, p.consumer_groups);
+            assert!(g >= last && g < p.consumer_groups);
+            last = g;
+        }
     }
 }

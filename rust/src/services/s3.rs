@@ -83,6 +83,9 @@ type Buckets = BTreeMap<String, BTreeMap<String, Arc<Vec<u8>>>>;
 /// callers charge the duration to their task timeline.
 pub struct ObjectStore {
     buckets: RwLock<Buckets>,
+    /// User metadata per `bucket/key` (set at PUT time on real S3, here
+    /// via [`ObjectStore::set_object_meta`]; returned by HEAD).
+    meta: RwLock<BTreeMap<String, Arc<Vec<(String, String)>>>>,
     put_mbps: f64,
     first_byte_s: f64,
     get_per_1000: f64,
@@ -95,6 +98,7 @@ impl ObjectStore {
     pub fn new(config: &FlintConfig, cost: Arc<CostTracker>, metrics: Metrics) -> Self {
         ObjectStore {
             buckets: RwLock::new(BTreeMap::new()),
+            meta: RwLock::new(BTreeMap::new()),
             put_mbps: config.sim.s3_put_mbps,
             first_byte_s: config.sim.s3_first_byte_s,
             get_per_1000: config.pricing.s3_get_per_1000,
@@ -180,6 +184,83 @@ impl ObjectStore {
         let data = self.lookup(bucket, key)?;
         self.metrics.incr("s3.head");
         Ok(data.len() as u64)
+    }
+
+    /// Attach user metadata to an existing object. On real S3 metadata
+    /// rides the PUT itself, so this books no extra request or time —
+    /// it only has to happen before anyone HEADs the object.
+    pub fn set_object_meta(
+        &self,
+        bucket: &str,
+        key: &str,
+        meta: Vec<(String, String)>,
+    ) -> Result<(), S3Error> {
+        // Existence check under the bucket lock keeps meta from outliving
+        // (or predating) its object.
+        let _ = self.lookup(bucket, key)?;
+        self.meta
+            .write()
+            .expect("s3 meta lock")
+            .insert(format!("{bucket}/{key}"), Arc::new(meta));
+        Ok(())
+    }
+
+    /// HEAD an object, returning `(size, user_metadata)`. Priced as a
+    /// GET-class request (that is how AWS bills HEAD).
+    pub fn head_object_meta(
+        &self,
+        bucket: &str,
+        key: &str,
+    ) -> Result<(u64, Arc<Vec<(String, String)>>), S3Error> {
+        let data = self.lookup(bucket, key)?;
+        self.cost.charge(CostCategory::S3Requests, self.get_per_1000 / 1000.0);
+        self.metrics.incr("s3.head");
+        let meta = self
+            .meta
+            .read()
+            .expect("s3 meta lock")
+            .get(&format!("{bucket}/{key}"))
+            .cloned()
+            .unwrap_or_default();
+        Ok((data.len() as u64, meta))
+    }
+
+    /// Atomic rename-on-commit — the attempt-scoped output committer's
+    /// primitive. Moves `src` to `dst` unless `dst` already exists
+    /// (first-commit-wins); either way `src` is consumed. One write lock
+    /// covers the probe and the move, so two racing commits can never
+    /// both win or leave `dst` torn. Returns `(duration, won)`: the
+    /// modeled server-side copy time (request round-trip only, no body
+    /// transfer) and whether this commit took the final key.
+    pub fn commit_rename(
+        &self,
+        bucket: &str,
+        src: &str,
+        dst: &str,
+    ) -> Result<(f64, bool), S3Error> {
+        let won = {
+            let mut buckets = self.buckets.write().expect("s3 lock");
+            let b = buckets
+                .get_mut(bucket)
+                .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+            let data = b
+                .remove(src)
+                .ok_or_else(|| S3Error::NoSuchKey(bucket.to_string(), src.to_string()))?;
+            if b.contains_key(dst) {
+                false // lost the race: the temp object is dropped
+            } else {
+                b.insert(dst.to_string(), data);
+                true
+            }
+        };
+        // Billed like a COPY (PUT-class) + free DELETE; server-side, so
+        // the modeled time is one request round-trip regardless of size.
+        self.cost.charge(CostCategory::S3Requests, self.put_per_1000 / 1000.0);
+        self.metrics.incr("s3.rename");
+        if !won {
+            self.metrics.incr("s3.commit_lost");
+        }
+        Ok((self.first_byte_s, won))
     }
 
     /// List `(key, size)` under a prefix, lexicographically.
@@ -347,6 +428,46 @@ mod tests {
         assert_eq!(metrics.get("s3.get"), 1);
         assert_eq!(metrics.get("s3.bytes_read"), 1000);
         assert!(cost.total() > 0.0);
+    }
+
+    #[test]
+    fn commit_rename_first_wins_and_consumes_src() {
+        let s3 = store();
+        s3.create_bucket("b");
+        s3.put_object("b", "tmp/part.a0", b"winner".to_vec()).unwrap();
+        s3.put_object("b", "tmp/part.a1", b"loser".to_vec()).unwrap();
+        let (dt, won) = s3.commit_rename("b", "tmp/part.a0", "part").unwrap();
+        assert!(won && dt > 0.0);
+        // The racing attempt loses, its temp object is consumed, and the
+        // winner's bytes are untouched (no tear, no clobber).
+        let (_, won2) = s3.commit_rename("b", "tmp/part.a1", "part").unwrap();
+        assert!(!won2);
+        let (obj, _) = s3.get_object("b", "part", profile()).unwrap();
+        assert_eq!(obj.bytes(), b"winner");
+        assert!(s3.list("b", "tmp/").unwrap().is_empty(), "both temps consumed");
+        // A commit without its temp object is an error, not a silent win.
+        assert!(matches!(
+            s3.commit_rename("b", "tmp/part.a0", "part"),
+            Err(S3Error::NoSuchKey(_, _))
+        ));
+    }
+
+    #[test]
+    fn head_object_meta_roundtrips_and_is_billed() {
+        let cfg = FlintConfig::default();
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Metrics::new();
+        let s3 = ObjectStore::new(&cfg, Arc::clone(&cost), metrics.clone());
+        s3.create_bucket("b");
+        s3.put_object("b", "k", vec![0; 64]).unwrap();
+        assert!(s3.set_object_meta("b", "missing", Vec::new()).is_err());
+        s3.set_object_meta("b", "k", vec![("min-day".into(), "3".into())]).unwrap();
+        let before = cost.total();
+        let (len, meta) = s3.head_object_meta("b", "k").unwrap();
+        assert_eq!(len, 64);
+        assert_eq!(meta.as_slice(), &[("min-day".to_string(), "3".to_string())]);
+        assert!(cost.total() > before, "HEAD is a billed request");
+        assert_eq!(metrics.get("s3.head"), 1);
     }
 
     #[test]

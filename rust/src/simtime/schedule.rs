@@ -320,6 +320,13 @@ pub struct ServiceQuerySpec {
     /// Fair-share weight (> 0; only consulted under
     /// [`ServicePolicy::Weighted`]).
     pub weight: f64,
+    /// Per-tenant concurrency quota (`flint.service.max_slots.<tenant>`):
+    /// a hard cap on the slots this query may hold at once, primaries
+    /// and backups combined. `None` = uncapped (the pool is the limit).
+    /// The cap only defers dispatch — capped work runs as the job's own
+    /// attempts finish, so it can never deadlock (a job at cap always
+    /// has running attempts about to free its slots).
+    pub quota: Option<usize>,
 }
 
 /// Where one query landed on the shared service clock.
@@ -375,6 +382,7 @@ pub fn schedule_service(
     for q in queries {
         assert!(q.weight > 0.0 && q.weight.is_finite(), "query weight must be positive");
         assert!(q.arrival_s >= 0.0, "query arrival must be non-negative");
+        assert!(q.quota != Some(0), "a zero quota would starve the query forever");
         for (i, s) in q.stages.iter().enumerate() {
             assert_eq!(s.id as usize, i, "stage ids must be dense and ordered");
             for &p in &s.parents {
@@ -419,7 +427,10 @@ fn schedule_service_fifo(
     for qi in order {
         let q = &queries[qi];
         let start = clock.max(q.arrival_s);
-        let solo = schedule_dag_spec(&q.stages, slots, mode, spec);
+        // Even running alone, a quota'd tenant never holds more than its
+        // cap: the solo schedule sees a pool shrunk to the quota.
+        let q_slots = q.quota.map_or(slots, |n| n.min(slots));
+        let solo = schedule_dag_spec(&q.stages, q_slots, mode, spec);
         let end = start + solo.latency_s;
         idle_s += solo.idle_s;
         windows[qi] = Some(QueryWindow {
@@ -595,6 +606,9 @@ struct SvcCtx {
     weight: Vec<f64>,
     /// Admission time per job.
     arrival: Vec<f64>,
+    /// Concurrency quota per job (`usize::MAX` = uncapped): dispatch
+    /// never grants a job a slot that would push `held` past it.
+    quota: Vec<usize>,
     /// Serialize each job's stages (barrier mode): a stage becomes ready
     /// only after every earlier stage of its job fully committed.
     barrier: bool,
@@ -975,12 +989,34 @@ impl<'a> Sim<'a> {
             self.claim(s);
             self.start_task(s, t, now);
         }
+        let mut deferred: VecDeque<(usize, usize)> = VecDeque::new();
         while self.free_slots > 0 {
             // A queued backup whose primary committed while it waited is
             // moot — skip it without ever launching.
             let Some((s, t)) = self.next_live_backup() else { break };
+            if self.quota_blocked(s) {
+                // The job is at its concurrency cap: the backup keeps its
+                // queue position and waits for one of the job's own
+                // attempts to free a slot.
+                deferred.push_back((s, t));
+                continue;
+            }
             self.claim(s);
             self.start_backup(s, t, now);
+        }
+        while let Some(e) = deferred.pop_back() {
+            self.spec_pending.push_front(e);
+        }
+    }
+
+    /// Would granting `stage`'s job one more slot exceed its quota?
+    fn quota_blocked(&self, stage: usize) -> bool {
+        match &self.svc {
+            Some(svc) => {
+                let j = svc.job[stage];
+                svc.held[j] >= svc.quota[j]
+            }
+            None => false,
         }
     }
 
@@ -1003,6 +1039,9 @@ impl<'a> Sim<'a> {
                 continue;
             }
             let j = svc.job[s];
+            if svc.held[j] >= svc.quota[j] {
+                continue; // at its per-tenant concurrency cap
+            }
             let Some((bj, _)) = best else {
                 best = Some((j, s));
                 continue;
@@ -1272,6 +1311,7 @@ fn simulate_service(
             .map(|q| if weighted { q.weight } else { 1.0 })
             .collect(),
         arrival: queries.iter().map(|q| q.arrival_s).collect(),
+        quota: queries.iter().map(|q| q.quota.unwrap_or(usize::MAX)).collect(),
         barrier,
         held: vec![0; nq],
         tasks_left: flat.iter().map(|s| s.task_durations.len()).collect(),
@@ -1747,7 +1787,7 @@ mod tests {
     // -- the multi-query service clock -------------------------------------
 
     fn query(stage_tasks: &[Vec<f64>], arrival: f64, weight: f64) -> ServiceQuerySpec {
-        ServiceQuerySpec { stages: chain(stage_tasks, 0.0), arrival_s: arrival, weight }
+        ServiceQuerySpec { stages: chain(stage_tasks, 0.0), arrival_s: arrival, weight, quota: None }
     }
 
     #[test]
@@ -1795,7 +1835,12 @@ mod tests {
         let stages = &[vec![3.0, 1.0, 2.0, 2.0], vec![1.0, 1.0]];
         for mode in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
             let solo = schedule_dag(&chain(stages, 0.3), 2, mode);
-            let q = ServiceQuerySpec { stages: chain(stages, 0.3), arrival_s: 0.0, weight: 1.0 };
+            let q = ServiceQuerySpec {
+                stages: chain(stages, 0.3),
+                arrival_s: 0.0,
+                weight: 1.0,
+                quota: None,
+            };
             let out = schedule_service(&[q], 2, mode, ServicePolicy::Fair, None);
             assert!(
                 (out.queries[0].latency_s - solo.latency_s).abs() < 1e-9,
@@ -1907,6 +1952,85 @@ mod tests {
     }
 
     #[test]
+    fn service_quota_caps_held_slots() {
+        // 8 unit tasks, quota 2, 8 free slots: the tenant may never hold
+        // more than 2, so the work runs in 4 waves (latency 4) and
+        // concurrency stays within the cap at every instant.
+        let mut q = query(&[vec![1.0; 8]], 0.0, 1.0);
+        q.quota = Some(2);
+        let out =
+            schedule_service(&[q], 8, ScheduleMode::Pipelined, ServicePolicy::Fair, None);
+        assert!((out.queries[0].latency_s - 4.0).abs() < 1e-9, "{}", out.queries[0].latency_s);
+    }
+
+    #[test]
+    fn service_quota_frees_slots_for_the_uncapped_tenant() {
+        // Both tenants want the whole 8-slot pool; tenant 0 is capped at
+        // 2. Fair sharing would split 4/4 and tie; the quota hands the
+        // other 6 slots to tenant 1, which must now finish first.
+        let mut q0 = query(&[vec![1.0; 12]], 0.0, 1.0);
+        q0.quota = Some(2);
+        let q1 = query(&[vec![1.0; 12]], 0.0, 1.0);
+        let out = schedule_service(
+            &[q0, q1],
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fair,
+            None,
+        );
+        // Capped tenant: 12 tasks / 2 slots = 6 waves.
+        assert!((out.queries[0].latency_s - 6.0).abs() < 1e-9, "{}", out.queries[0].latency_s);
+        // Uncapped tenant gets the remaining 6 slots: 12 / 6 = 2 waves.
+        assert!((out.queries[1].latency_s - 2.0).abs() < 1e-9, "{}", out.queries[1].latency_s);
+    }
+
+    #[test]
+    fn service_quota_caps_fifo_solo_runs() {
+        // FIFO runs each query alone, but a quota'd tenant still cannot
+        // exceed its cap: its solo schedule sees a pool of min(slots,
+        // quota) slots.
+        let mut q = query(&[vec![1.0; 8]], 0.0, 1.0);
+        q.quota = Some(2);
+        let out =
+            schedule_service(&[q], 8, ScheduleMode::Pipelined, ServicePolicy::Fifo, None);
+        assert!((out.queries[0].latency_s - 4.0).abs() < 1e-9, "{}", out.queries[0].latency_s);
+    }
+
+    #[test]
+    fn service_quota_defers_backups_behind_the_cap() {
+        // One straggler with a fast measured backup. Uncapped (or quota
+        // 2) the backup launches beside the still-running primary and
+        // wins; at quota 1 the backup would need a second slot the job
+        // may not hold, so it defers until the primary commits — at
+        // which point it is moot and never launches at all.
+        let make = |quota| {
+            let mut stages = chain(&[vec![1.0, 1.0, 1.0, 8.0]], 0.0);
+            stages[0].backups = vec![None, None, None, Some(1.0)];
+            ServiceQuerySpec { stages, arrival_s: 0.0, weight: 1.0, quota }
+        };
+        let capped = schedule_service(
+            &[make(Some(1))],
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fair,
+            Some(&POLICY),
+        );
+        assert_eq!(capped.queries[0].spec_launches, 0, "no second slot to launch into");
+        // Serial under quota 1: 1 + 1 + 1 + 8.
+        assert!((capped.queries[0].latency_s - 11.0).abs() < 1e-9);
+        let roomy = schedule_service(
+            &[make(Some(2))],
+            8,
+            ScheduleMode::Pipelined,
+            ServicePolicy::Fair,
+            Some(&POLICY),
+        );
+        assert_eq!(roomy.queries[0].spec_launches, 1);
+        assert_eq!(roomy.queries[0].spec_wins, 1);
+        assert!(roomy.queries[0].latency_s < capped.queries[0].latency_s - 1e-9);
+    }
+
+    #[test]
     fn service_respects_slot_cap_across_queries() {
         // Aggregate concurrency across all queries must never exceed the
         // pool. Reconstruct spans via a fair run on a tight pool.
@@ -1936,7 +2060,12 @@ mod tests {
         // overhead) exactly, overheads included.
         let stages = &[vec![3.0, 1.0, 2.0, 2.0], vec![1.0, 1.0]];
         let solo = schedule_dag(&chain(stages, 0.5), 2, ScheduleMode::Barrier);
-        let q = ServiceQuerySpec { stages: chain(stages, 0.5), arrival_s: 0.0, weight: 1.0 };
+        let q = ServiceQuerySpec {
+            stages: chain(stages, 0.5),
+            arrival_s: 0.0,
+            weight: 1.0,
+            quota: None,
+        };
         let out = schedule_service(&[q], 2, ScheduleMode::Barrier, ServicePolicy::Fair, None);
         assert!(
             (out.queries[0].latency_s - solo.latency_s).abs() < 1e-9,
@@ -1953,7 +2082,7 @@ mod tests {
         let mut stages = chain(&[vec![1.0, 1.0, 1.0, 8.0]], 0.0);
         stages[0].backups = vec![None, None, None, Some(1.0)];
         let qs = vec![
-            ServiceQuerySpec { stages, arrival_s: 0.0, weight: 1.0 },
+            ServiceQuerySpec { stages, arrival_s: 0.0, weight: 1.0, quota: None },
             query(&[vec![1.0; 4]], 0.0, 1.0),
         ];
         let out = schedule_service(
@@ -1997,6 +2126,7 @@ mod tests {
                     stages: chain(&[d0, d1], g.f64(0.0, 0.3)),
                     arrival_s: g.f64(0.0, 2.0),
                     weight: 1.0,
+                    quota: None,
                 });
             }
             let out = schedule_service(

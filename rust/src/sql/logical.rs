@@ -302,16 +302,27 @@ impl Scalar {
     /// Estimated distinct values this expression can take (for
     /// partition-count picking). Unknown → `u64::MAX`.
     pub fn ndv(&self) -> u64 {
+        self.ndv_refined(&|_| None)
+    }
+
+    /// [`Scalar::ndv`] with per-column refinements: the physical planner
+    /// passes stats-derived bounds (the day/month spans a scan's splits
+    /// actually cover), which tighten the schema-wide domain. A
+    /// refinement never widens — the schema estimate stays the ceiling.
+    pub fn ndv_refined(&self, refine: &dyn Fn(Column) -> Option<u64>) -> u64 {
         match self {
-            Scalar::Col(c) => c.ndv().unwrap_or(u64::MAX),
+            Scalar::Col(c) => {
+                let schema = c.ndv().unwrap_or(u64::MAX);
+                refine(*c).map_or(schema, |n| n.min(schema))
+            }
             Scalar::LitI(_) | Scalar::LitF(_) => 1,
-            Scalar::Neg(e) => e.ndv(),
+            Scalar::Neg(e) => e.ndv_refined(refine),
             Scalar::Not(_) | Scalar::Between(..) => 2,
             Scalar::Bin(op, l, r) => {
                 if op.is_comparison() || matches!(op, BinOp::And | BinOp::Or) {
                     2
                 } else {
-                    l.ndv().saturating_mul(r.ndv())
+                    l.ndv_refined(refine).saturating_mul(r.ndv_refined(refine))
                 }
             }
         }

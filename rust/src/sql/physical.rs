@@ -298,6 +298,51 @@ fn source_bytes(sc: &FlintContext, table: Table) -> u64 {
         .sum()
 }
 
+/// Stats-derived NDV bounds `(day, month)` for the plan's trips scan:
+/// the day/month spans its input splits actually cover (per-object
+/// manifest or HEAD-recovered stats — one stat-less split voids the
+/// bound), with the day span further narrowed by any pushed day-range
+/// predicate. These tighten the schema-wide `day`/`month` domains, and
+/// with them the exchange partition counts picked below: a one-month
+/// scan that groups by day needs ~31 partitions, not 2738.
+fn trips_stat_bounds(sc: &FlintContext, p: &LogicalPlan) -> (Option<u64>, Option<u64>) {
+    let scan = if p.fact.table == Table::Trips {
+        &p.fact
+    } else {
+        match p.join.as_ref().filter(|j| j.dim.table == Table::Trips) {
+            Some(j) => &j.dim,
+            None => return (None, None),
+        }
+    };
+    let splits = sc.input_splits(scan.table.bucket(), scan.table.prefix());
+    if splits.is_empty() {
+        return (None, None);
+    }
+    let mut days: Option<(i32, i32)> = None;
+    let mut months: Option<(i32, i32)> = None;
+    for s in &splits {
+        let Some(st) = &s.stats else { return (None, None) };
+        days = Some(days.map_or((st.min_day, st.max_day), |(lo, hi)| {
+            (lo.min(st.min_day), hi.max(st.max_day))
+        }));
+        months = Some(months.map_or((st.min_month, st.max_month), |(lo, hi)| {
+            (lo.min(st.min_month), hi.max(st.max_month))
+        }));
+    }
+    let (mut dlo, mut dhi) = days.expect("non-empty splits");
+    for pred in &scan.pushed {
+        if let PushedPred::DayRange { lo, hi } = pred {
+            dlo = dlo.max(*lo);
+            dhi = dhi.min(*hi);
+        }
+    }
+    // A disjoint predicate leaves zero groups; one partition still
+    // carries the (empty) exchange.
+    let span = |lo: i32, hi: i32| if hi < lo { 1 } else { (hi - lo) as u64 + 1 };
+    let (mlo, mhi) = months.expect("non-empty splits");
+    (Some(span(dlo, dhi)), Some(span(mlo, mhi)))
+}
+
 /// Make the physical decisions for an (optimized) logical plan,
 /// possibly swapping the join sides so the smaller table builds.
 /// Returns the final plan and the recorded choices.
@@ -305,6 +350,16 @@ pub fn plan_physical(sc: &FlintContext, plan: &LogicalPlan, optimizer: bool) -> 
     let cfg = sc.env().config();
     let mut p = plan.clone();
     let default_parts = cfg.flint.default_shuffle_partitions.max(1);
+    // NDV-from-stats: tighten day/month domains to what the trips scan's
+    // splits can actually produce (the swap below never moves the trips
+    // table out of the plan, so computing the bounds up front is safe).
+    let (day_ndv, month_ndv) =
+        if optimizer { trips_stat_bounds(sc, &p) } else { (None, None) };
+    let refine = move |c: Column| match c {
+        Column::Day => day_ndv,
+        Column::Month => month_ndv,
+        _ => None,
+    };
 
     let join = if p.join.is_some() {
         let fact_bytes = source_bytes(sc, p.fact.table);
@@ -319,7 +374,7 @@ pub fn plan_physical(sc: &FlintContext, plan: &LogicalPlan, optimizer: bool) -> 
         let j = p.join.as_ref().expect("join");
         let (probe_bytes, build_bytes) =
             if optimizer && fact_bytes < dim_bytes { (dim_bytes, fact_bytes) } else { (fact_bytes, dim_bytes) };
-        let key_ndv = j.fact_key.ndv().min(j.dim_key.ndv());
+        let key_ndv = j.fact_key.ndv_refined(&refine).min(j.dim_key.ndv_refined(&refine));
         let partitions = key_ndv.min(default_parts as u64).max(1) as usize;
         let choice = if optimizer {
             let (strategy, b, s) = choose_join_strategy(cfg, probe_bytes, build_bytes);
@@ -369,7 +424,7 @@ pub fn plan_physical(sc: &FlintContext, plan: &LogicalPlan, optimizer: bool) -> 
             if optimizer {
                 let mut groups: u64 = 1;
                 for k in keys {
-                    groups = groups.saturating_mul(k.ndv());
+                    groups = groups.saturating_mul(k.ndv_refined(&refine));
                 }
                 Some(groups.min(default_parts as u64).max(1) as usize)
             } else {

@@ -7,9 +7,10 @@
 
 use flint::compute::oracle;
 use flint::compute::queries::{QueryId, QueryResult};
+use flint::compute::value::Value;
 use flint::config::{FlintConfig, ShuffleBackend};
-use flint::data::{generate_taxi_dataset, Dataset};
-use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintEngine};
+use flint::data::{generate_taxi_dataset, Dataset, INPUT_BUCKET, OUTPUT_BUCKET};
+use flint::exec::{ClusterEngine, ClusterMode, Engine, FlintContext, FlintEngine};
 use flint::services::SimEnv;
 
 const TRIPS: u64 = 20_000;
@@ -172,6 +173,97 @@ fn speculative_reducer_backup_races_for_real_on_s3_shuffle() {
     let report = flint.run_query(QueryId::Q1, &ds).unwrap();
     assert!(report.speculative_launches >= 1, "reducer tail signal must fire");
     assert!(report.result.approx_eq(&expect), "{:?} vs {expect:?}", report.result);
+}
+
+/// The save lineage the committer suite runs: trips lines keyed by
+/// `len % 7`, counted into `parts` reduce partitions, each reduce task
+/// committing one final part file under `bucket/prefix`.
+fn save_pipeline(sc: &FlintContext, parts: usize, prefix: &str) -> u64 {
+    sc.text_file(INPUT_BUCKET, "trips/")
+        .map(|v| {
+            let len = v.as_str().map(|s| s.len() as i64).unwrap_or(0);
+            Value::pair(Value::I64(len % 7), Value::I64(1))
+        })
+        .reduce_by_key(parts, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+        .save_as_text_file(OUTPUT_BUCKET, prefix)
+        .unwrap()
+}
+
+#[test]
+fn speculative_save_attempts_race_the_committer_without_tearing_parts() {
+    // A straggling reduce task whose output is a *final S3 part file*:
+    // on the S3 shuffle backend the task draws a speculative backup, so
+    // two byte-identical attempts race `commit_rename` for the same
+    // part key. First-commit-wins must leave exactly one whole part per
+    // reduce task, sweep every attempt-suffixed temp, and the losing
+    // attempt must really have reached (and lost) the commit.
+    let run = |straggle: bool, prefix: &str| {
+        let mut c = cfg();
+        c.flint.shuffle_backend = ShuffleBackend::S3;
+        c.flint.speculation.enabled = true;
+        c.flint.speculation.quantile = 0.5;
+        let (env, ds) = setup(c);
+        if straggle {
+            env.failure().force_straggler(1, 0, 0, 8.0); // first save task
+        }
+        let sc = FlintContext::new(env.clone());
+        sc.register_manifest(&ds);
+        let saved = save_pipeline(&sc, 30, prefix);
+        (env, saved)
+    };
+    let (env, _saved) = run(true, "race-out");
+    assert!(
+        env.metrics().get("scheduler.speculative_launches") >= 1,
+        "the save-stage straggler must draw a backup"
+    );
+    assert!(
+        env.metrics().get("s3.commit_lost") >= 1,
+        "the losing attempt must reach the rename and lose it"
+    );
+    // Exactly one committed part per reduce task, nothing else — in
+    // particular no `_tmp/` orphans (they would sort first in the
+    // listing) and no attempt-suffixed duplicates.
+    let parts = env.s3().list(OUTPUT_BUCKET, "race-out/").unwrap();
+    let keys: Vec<String> = parts.iter().map(|(k, _)| k.clone()).collect();
+    let want: Vec<String> = (0..30).map(|i| format!("race-out/part-{i:05}")).collect();
+    assert_eq!(keys, want, "committed directory must be exactly one part per task");
+    // Byte-identical to a race-free control run: the race neither tore
+    // nor clobbered any part.
+    let (env2, saved2) = run(false, "race-out");
+    assert_eq!(saved2, 30, "control: one saved object per reduce task");
+    for (key, _) in &parts {
+        let (a, _) = env.s3().get_object(OUTPUT_BUCKET, key, env.flint_read_profile()).unwrap();
+        let (b, _) = env2.s3().get_object(OUTPUT_BUCKET, key, env2.flint_read_profile()).unwrap();
+        assert_eq!(a.bytes(), b.bytes(), "{key}: racing commits changed the part bytes");
+    }
+}
+
+#[test]
+fn crashed_save_attempts_retry_to_a_clean_commit_on_both_backends() {
+    // Kill a save task's first attempt mid-task on each shuffle backend:
+    // the retry is a fresh attempt with its own temp key, so the commit
+    // still lands exactly one part per task and the winner's sweep
+    // leaves no orphaned temps behind.
+    for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
+        let mut c = cfg();
+        c.flint.shuffle_backend = backend;
+        let (env, ds) = setup(c);
+        env.failure().force_task_failure(1, 2, 0); // a save task's first attempt
+        let sc = FlintContext::new(env.clone());
+        sc.register_manifest(&ds);
+        let saved = save_pipeline(&sc, 8, "crash-out");
+        assert_eq!(saved, 8, "{backend:?}: one saved object per reduce task");
+        assert_eq!(env.metrics().get("scheduler.task_retries"), 1, "{backend:?}");
+        let keys: Vec<String> = env
+            .s3()
+            .list(OUTPUT_BUCKET, "crash-out/")
+            .unwrap()
+            .into_iter()
+            .map(|(k, _)| k)
+            .collect();
+        let want: Vec<String> = (0..8).map(|i| format!("crash-out/part-{i:05}")).collect();
+        assert_eq!(keys, want, "{backend:?}: retry must commit cleanly, with no temps left");
+    }
 }
 
 #[test]

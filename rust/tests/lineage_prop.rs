@@ -18,8 +18,8 @@
 //! lineage shape the tests special-case either.
 
 use flint::compute::value::Value;
-use flint::config::{FlintConfig, ShuffleBackend};
-use flint::data::INPUT_BUCKET;
+use flint::config::{FlintConfig, ShuffleBackend, ShuffleExchange};
+use flint::data::{INPUT_BUCKET, SHUFFLE_BUCKET};
 use flint::exec::driver::{run_plan, ActionOut, RunParams};
 use flint::exec::executor::IoMode;
 use flint::exec::shuffle::{MemoryShuffle, Transport};
@@ -189,21 +189,44 @@ fn base_cfg() -> FlintConfig {
     c
 }
 
-/// One (backend, scheduler) execution of an unbound lineage.
+/// One (backend, scheduler, exchange) execution of an unbound lineage.
 fn run_config(
     rdd: &Rdd,
     backend: ShuffleBackend,
     sched: ScheduleMode,
+    exchange: ShuffleExchange,
 ) -> Result<Vec<Value>, String> {
     let mut c = base_cfg();
     c.flint.shuffle_backend = backend;
     c.flint.scheduler = sched;
+    c.flint.shuffle_exchange = exchange;
+    if exchange == ShuffleExchange::Tree {
+        // Minimum threshold: even these small stages go through the
+        // merge level, so speculative backups race tree group objects
+        // and merge-task commits, not just direct partition writes.
+        c.flint.tree_fanout = 2;
+    }
     let env = SimEnv::new(c);
     seed_sources(&env);
     let sc = FlintContext::new(env.clone());
-    let got = sc.collect(rdd).map_err(|e| format!("{backend:?}/{sched:?}: {e:#}"))?;
+    let got = sc
+        .collect(rdd)
+        .map_err(|e| format!("{backend:?}/{sched:?}/{exchange:?}: {e:#}"))?;
     if backend == ShuffleBackend::Sqs && !env.sqs().queue_names().is_empty() {
         return Err(format!("{backend:?}/{sched:?}: leaked edge queues"));
+    }
+    if backend == ShuffleBackend::S3 {
+        // Per-edge prefix teardown must sweep every shuffle object —
+        // committed partitions, tree group objects, merge outputs, and
+        // crashed/losing attempts' temps alike.
+        let left = env.s3().list(SHUFFLE_BUCKET, "").unwrap_or_default();
+        if !left.is_empty() {
+            return Err(format!(
+                "{backend:?}/{sched:?}/{exchange:?}: {} leaked shuffle objects: {:?}",
+                left.len(),
+                left.iter().take(5).collect::<Vec<_>>()
+            ));
+        }
     }
     Ok(got)
 }
@@ -248,13 +271,26 @@ fn prop_random_lineages_match_interpreter_oracle_on_all_backends() {
 
         for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
             for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
-                let got = run_config(&rdd, backend, sched)?;
+                let got = run_config(&rdd, backend, sched, ShuffleExchange::Direct)?;
                 if got != expect {
                     return Err(format!(
                         "{backend:?}/{sched:?} diverged from oracle for {rdd:?}:\n\
                          got    {got:?}\nexpect {expect:?}"
                     ));
                 }
+            }
+        }
+        // The multi-level tree exchange under the same speculation +
+        // straggler + duplicate injection: every S3 edge detours
+        // through producer-group objects and a merge level, and the
+        // answer still has to be bit-identical to the oracle.
+        for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {
+            let got = run_config(&rdd, ShuffleBackend::S3, sched, ShuffleExchange::Tree)?;
+            if got != expect {
+                return Err(format!(
+                    "s3-tree/{sched:?} diverged from oracle for {rdd:?}:\n\
+                     got    {got:?}\nexpect {expect:?}"
+                ));
             }
         }
         for sched in [ScheduleMode::Barrier, ScheduleMode::Pipelined] {

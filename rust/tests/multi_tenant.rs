@@ -195,6 +195,7 @@ fn equal_queries(n: usize, tasks: usize, weight: f64) -> Vec<ServiceQuerySpec> {
             }],
             arrival_s: 0.0,
             weight,
+            quota: None,
         })
         .collect()
 }

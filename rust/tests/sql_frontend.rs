@@ -140,6 +140,40 @@ fn sql_day_window_prunes_splits_behind_a_generic_predicate() {
     assert_eq!(got.rows, expect);
 }
 
+/// NDV-from-stats: the planner folds the trips scan's per-object
+/// day/month stats (manifest-carried here; HEAD-recovered on the
+/// listing path) into the day-domain estimate, so a narrow day window
+/// that groups by day plans a span-sized exchange instead of clamping
+/// the 2738-day schema domain to `flint.default_shuffle_partitions`.
+#[test]
+fn stats_tighten_group_by_day_exchange_width() {
+    let (env, _ds, sc) = setup(cfg(), TRIPS);
+    // No window: the generated data tiles the full timeline, so the
+    // stats-refined domain still clamps to the default width.
+    let wide = sc.sql_job("SELECT day, COUNT(*) FROM trips GROUP BY day").unwrap();
+    assert_eq!(wide.choice.agg_partitions, Some(30), "full-span scan keeps the default width");
+    let narrow = sc
+        .sql_job("SELECT day, COUNT(*) FROM trips WHERE day BETWEEN 100 AND 110 GROUP BY day")
+        .unwrap();
+    assert_eq!(narrow.choice.agg_partitions, Some(11), "an 11-day window needs 11 partitions");
+    // The tightened exchange must not move the answer.
+    let got = narrow.collect().unwrap();
+    let lines = s3_lines(&env);
+    assert_eq!(got.rows, narrow.shape(interp::interpret(&narrow.rdd, &lines)));
+
+    // Stat-less splits (no manifest, pruning off so the session issues
+    // no recovery HEADs) void the bound: back to the schema-wide clamp.
+    let mut c = cfg();
+    c.flint.scan_prune = false;
+    let env2 = SimEnv::new(c);
+    let _ds2 = generate_taxi_dataset(&env2, "trips", TRIPS);
+    let sc2 = FlintContext::new(env2.clone());
+    let narrow2 = sc2
+        .sql_job("SELECT day, COUNT(*) FROM trips WHERE day BETWEEN 100 AND 110 GROUP BY day")
+        .unwrap();
+    assert_eq!(narrow2.choice.agg_partitions, Some(30), "stat-less splits must not tighten");
+}
+
 /// The same regression through the raw Rdd API: `filter` then
 /// `filter_day_range` — the shape the old `leading_day_range` walk
 /// stopped at.
