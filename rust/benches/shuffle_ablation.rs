@@ -10,20 +10,27 @@
 //! join planner checked against the measured A5 crossover) and the A10
 //! scale-out exchange sweep (the direct S3 exchange's O(P·R) object
 //! count vs the multi-level tree's O((P+R)·√n), plus the per-edge
-//! `flint.shuffle.backend = auto` selection); `--smoke` mode (CI) runs
-//! a small dataset and exits non-zero if the columnar codec fails to
-//! shrink any shuffling Table I query or Q6J, if pruning stops
-//! skipping GETs, if optimizer-on ever loses to optimizer-off on any
-//! SQL query, if the planner's broadcast-vs-shuffle pick disagrees
-//! with the measured winner, if the tree exchange stops beating direct
-//! on total S3 requests at a ≥1024-way fan-out, or if the auto backend
-//! ever loses to the better fixed backend — so a codec, pruning,
-//! optimizer, or exchange regression fails PRs instead of waiting for
-//! a nightly bench run.
+//! `flint.shuffle.backend = auto` selection) and the A11 lineage-cache
+//! ablation (cold build vs warm cached re-run on a Table I-style
+//! aggregation and a Q6J-style join, plus the capacity-0 off switch);
+//! `--smoke` mode (CI) runs a small dataset and exits non-zero if the
+//! columnar codec fails to shrink any shuffling Table I query or Q6J,
+//! if pruning stops skipping GETs, if optimizer-on ever loses to
+//! optimizer-off on any SQL query, if the planner's
+//! broadcast-vs-shuffle pick disagrees with the measured winner, if
+//! the tree exchange stops beating direct on total S3 requests at a
+//! ≥1024-way fan-out, if the auto backend ever loses to the better
+//! fixed backend, if a warm cached re-run fails to beat its cold build
+//! run on BOTH latency and GB-seconds, or if the capacity-0 cache
+//! stops being byte-identical to a marker-free baseline — so a codec,
+//! pruning, optimizer, exchange, or cache regression fails PRs instead
+//! of waiting for a nightly bench run. The A11 rows are also dropped
+//! as `BENCH_cache.json` for the roadmap's numbers.
 
 use flint::bench::micro::{
-    backend_auto_ablation, codec_byte_ratio, exchange_sweep, join_crossover, pruning_ablation,
-    shuffle_ablation, sql_cbo_agreement, sql_optimizer_ablation,
+    backend_auto_ablation, cache_ablation, cache_off_identity, codec_byte_ratio, exchange_sweep,
+    join_crossover, pruning_ablation, shuffle_ablation, sql_cbo_agreement,
+    sql_optimizer_ablation,
 };
 use flint::compute::queries::QueryId;
 use flint::config::FlintConfig;
@@ -215,6 +222,65 @@ fn main() {
         );
     }
 
+    // A11 — lineage cache: the same handles run twice, cold build vs
+    // warm cached re-run. The warm row must win on BOTH axes — latency
+    // (a truncated plan skips the scan) and GB-seconds (the skipped
+    // work is also unbilled) — and the capacity-0 off switch must stay
+    // byte-identical to a marker-free baseline (checked inside the
+    // harness with modeled clocks).
+    println!("\n## A11 — lineage cache: cold build vs warm cached re-run\n");
+    println!("| workload | cold (s) | warm (s) | cold GB-s | warm GB-s | cold $ | warm $ | builds | hits |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let cache_rows = cache_ablation(&cfg, trips.min(100_000)).expect("cache ablation");
+    let mut cache_json = Vec::new();
+    for r in &cache_rows {
+        println!(
+            "| {} | {:.3} | {:.3} | {:.4} | {:.4} | {:.5} | {:.5} | {} | {} |",
+            r.name, r.cold_s, r.warm_s, r.cold_gb_s, r.warm_gb_s, r.cold_usd, r.warm_usd,
+            r.builds, r.hits
+        );
+        if r.warm_s >= r.cold_s {
+            eprintln!(
+                "REGRESSION: {} warm re-run {:.3}s did not beat cold {:.3}s",
+                r.name, r.warm_s, r.cold_s
+            );
+            failed = true;
+        }
+        if r.warm_gb_s >= r.cold_gb_s {
+            eprintln!(
+                "REGRESSION: {} warm re-run {:.4} GB-s did not beat cold {:.4} GB-s",
+                r.name, r.warm_gb_s, r.cold_gb_s
+            );
+            failed = true;
+        }
+        cache_json.push(
+            Json::obj()
+                .set("workload", r.name)
+                .set("cold_s", r.cold_s)
+                .set("warm_s", r.warm_s)
+                .set("cold_gb_s", r.cold_gb_s)
+                .set("warm_gb_s", r.warm_gb_s)
+                .set("cold_usd", r.cold_usd)
+                .set("warm_usd", r.warm_usd)
+                .set("builds", r.builds)
+                .set("hits", r.hits),
+        );
+    }
+    if let Err(e) = cache_off_identity(&cfg, trips.min(20_000)) {
+        eprintln!("REGRESSION: cache off-switch identity broke: {e:#}");
+        failed = true;
+    } else {
+        println!("\n(capacity-0 off switch: marker-laden report byte-identical to marker-free)");
+    }
+    let cache_blob = Json::obj()
+        .set("bench", "cache_ablation")
+        .set("trips", trips.min(100_000))
+        .set("rows", Json::Arr(cache_json.clone()))
+        .encode();
+    if let Err(e) = std::fs::write("BENCH_cache.json", format!("{cache_blob}\n")) {
+        eprintln!("warning: could not write BENCH_cache.json: {e}");
+    }
+
     println!(
         "\n{}",
         Json::obj()
@@ -227,6 +293,7 @@ fn main() {
             .set("sql_optimizer", Json::Arr(sql_json))
             .set("exchange_sweep", Json::Arr(exchange_json))
             .set("backend_auto", Json::Arr(auto_json))
+            .set("cache", Json::Arr(cache_json))
             .encode()
     );
     if smoke {

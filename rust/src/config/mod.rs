@@ -246,6 +246,61 @@ impl Default for SqlParams {
     }
 }
 
+/// Lineage-cache knobs (`flint.cache.*`), read by the session layer's
+/// cache registry (`exec::cache`). Capacity 0 — the default — disables
+/// the cache entirely: `Rdd::cache()` markers stay transparent and every
+/// plan, report, and metric is byte-identical to a build without them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheParams {
+    /// Total bytes the registry may hold across both tiers before LRU
+    /// eviction (`flint.cache.capacity_bytes`; 0 = cache off).
+    pub capacity_bytes: u64,
+    /// Which storage tiers admission may use
+    /// (`flint.cache.tier = memory|s3|both`). The effective tier of an
+    /// entry is this ∩ the `persist(StorageLevel)` the lineage asked for.
+    pub tier: CacheTier,
+}
+
+impl Default for CacheParams {
+    fn default() -> Self {
+        CacheParams { capacity_bytes: 0, tier: CacheTier::Both }
+    }
+}
+
+/// Storage tiers the cache registry may admit into (`flint.cache.tier`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheTier {
+    /// Warm-container memory only (entries die with the pool).
+    Memory,
+    /// Committed S3 objects only.
+    S3,
+    /// S3 always; memory additionally when the cost model says a
+    /// partition is worth pinning.
+    Both,
+}
+
+impl std::str::FromStr for CacheTier {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "memory" => Ok(CacheTier::Memory),
+            "s3" => Ok(CacheTier::S3),
+            "both" => Ok(CacheTier::Both),
+            other => Err(format!("unknown cache tier `{other}` (want memory|s3|both)")),
+        }
+    }
+}
+
+impl CacheTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CacheTier::Memory => "memory",
+            CacheTier::S3 => "s3",
+            CacheTier::Both => "both",
+        }
+    }
+}
+
 /// Flint engine knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlintParams {
@@ -299,6 +354,14 @@ pub struct FlintParams {
     pub service: ServiceParams,
     /// SQL frontend (`flint.sql.*`).
     pub sql: SqlParams,
+    /// Lineage cache (`flint.cache.*`).
+    pub cache: CacheParams,
+    /// Warm-container keep-alive window (`flint.lambda.keepalive_s`):
+    /// how long a returned container stays warm on the virtual clock
+    /// before its next draw is a cold start again. 0 (the default)
+    /// keeps containers warm forever once touched — the pre-keepalive
+    /// pool model, byte-identical to builds without this knob.
+    pub lambda_keepalive_s: f64,
     /// Enable sequence-id dedup of SQS messages (§VI).
     pub dedup_enabled: bool,
     /// Rows per columnar batch handed to the PJRT kernels.
@@ -382,6 +445,8 @@ impl Default for FlintParams {
             speculation: SpeculationParams::default(),
             service: ServiceParams::default(),
             sql: SqlParams::default(),
+            cache: CacheParams::default(),
+            lambda_keepalive_s: 0.0,
             dedup_enabled: true,
             batch_rows: 8192,
             use_pjrt: true,
@@ -570,6 +635,13 @@ impl FlintConfig {
                                 self.flint.sql.broadcast_threshold_bytes,
                             ),
                     )
+                    .set(
+                        "cache",
+                        Json::obj()
+                            .set("capacity_bytes", self.flint.cache.capacity_bytes)
+                            .set("tier", self.flint.cache.tier.name()),
+                    )
+                    .set("lambda_keepalive_s", self.flint.lambda_keepalive_s)
                     .set("dedup_enabled", self.flint.dedup_enabled)
                     .set("batch_rows", self.flint.batch_rows)
                     .set("use_pjrt", self.flint.use_pjrt),
@@ -772,6 +844,61 @@ mod tests {
         let q = j.get("flint").unwrap().get("service").unwrap().get("max_slots").unwrap();
         assert_eq!(q.get("alice").and_then(|v| v.as_u64()), Some(4));
         assert_eq!(q.get("bob").and_then(|v| v.as_u64()), Some(1));
+    }
+
+    #[test]
+    fn cache_knobs_parse_validate_and_round_trip() {
+        let mut c = FlintConfig::default();
+        assert_eq!(c.flint.cache.capacity_bytes, 0, "cache is off by default");
+        assert_eq!(c.flint.cache.tier, CacheTier::Both);
+        assert_eq!(c.flint.lambda_keepalive_s, 0.0, "containers stay warm forever by default");
+
+        c.set("flint.cache.capacity_bytes", "1048576").unwrap();
+        assert_eq!(c.flint.cache.capacity_bytes, 1 << 20);
+        c.set("flint.cache.capacity_bytes", "0").unwrap();
+        assert_eq!(c.flint.cache.capacity_bytes, 0, "0 is legal: cache off");
+        for bad in ["-1", "plenty", "1.5"] {
+            let err = c.set("flint.cache.capacity_bytes", bad).unwrap_err();
+            assert!(err.contains("flint.cache.capacity_bytes"), "{err}");
+        }
+        assert_eq!(c.flint.cache.capacity_bytes, 0, "failed overrides must not apply");
+
+        c.set("flint.cache.tier", "memory").unwrap();
+        assert_eq!(c.flint.cache.tier, CacheTier::Memory);
+        c.set("flint.cache.tier", "s3").unwrap();
+        assert_eq!(c.flint.cache.tier, CacheTier::S3);
+        c.set("flint.cache.tier", "both").unwrap();
+        assert_eq!(c.flint.cache.tier, CacheTier::Both);
+        assert!(c.set("flint.cache.tier", "tape").is_err());
+
+        c.set("flint.lambda.keepalive_s", "300").unwrap();
+        assert_eq!(c.flint.lambda_keepalive_s, 300.0);
+        c.set("flint.lambda.keepalive_s", "0").unwrap();
+        assert_eq!(c.flint.lambda_keepalive_s, 0.0, "0 keepalive is legal: never expire");
+        for bad in ["-1", "nan", "inf", "forever"] {
+            let err = c.set("flint.lambda.keepalive_s", bad).unwrap_err();
+            assert!(err.contains("flint.lambda.keepalive_s"), "{err}");
+        }
+        assert_eq!(c.flint.lambda_keepalive_s, 0.0, "failed overrides must not apply");
+
+        // TOML layer reaches the same fields.
+        let mut t = FlintConfig::default();
+        parse::apply_toml(
+            &mut t,
+            "[flint.cache]\ncapacity_bytes = 4096\ntier = \"s3\"\n[flint.lambda]\nkeepalive_s = 60.0\n",
+        )
+        .unwrap();
+        assert_eq!(t.flint.cache.capacity_bytes, 4096);
+        assert_eq!(t.flint.cache.tier, CacheTier::S3);
+        assert_eq!(t.flint.lambda_keepalive_s, 60.0);
+
+        // And the JSON dump round-trips what was set.
+        let j = t.to_json();
+        let f = j.get("flint").unwrap();
+        let cache = f.get("cache").unwrap();
+        assert_eq!(cache.get("capacity_bytes").and_then(|v| v.as_u64()), Some(4096));
+        assert_eq!(cache.get("tier").and_then(|v| v.as_str()), Some("s3"));
+        assert_eq!(f.get("lambda_keepalive_s").and_then(|v| v.as_f64()), Some(60.0));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! That covers every config file this project ships; exotic TOML (arrays
 //! of tables, datetimes, multi-line strings) is intentionally rejected.
 
-use super::{FlintConfig, ShuffleBackend, ShuffleCodec, ShuffleExchange};
+use super::{CacheTier, FlintConfig, ShuffleBackend, ShuffleCodec, ShuffleExchange};
 
 /// Apply the contents of a TOML document to `cfg`.
 pub fn apply_toml(cfg: &mut FlintConfig, text: &str) -> Result<(), String> {
@@ -229,6 +229,25 @@ pub fn apply_override(cfg: &mut FlintConfig, key: &str, value: &str) -> Result<(
             // u64, so any non-negative integer; 0 is meaningful (force
             // shuffle joins — the Q6J plan shape).
             parse_to!(cfg.flint.sql.broadcast_threshold_bytes, value, key)
+        }
+        "flint.cache.capacity_bytes" => {
+            // u64, so any non-negative integer; 0 is meaningful (cache
+            // off — `.cache()` markers stay transparent).
+            parse_to!(cfg.flint.cache.capacity_bytes, value, key)
+        }
+        "flint.cache.tier" => cfg.flint.cache.tier = value.parse::<CacheTier>()?,
+        "flint.lambda.keepalive_s" => {
+            let s: f64 = value
+                .parse()
+                .map_err(|_| format!("bad value `{value}` for `{key}`"))?;
+            // 0 = never expire (the pre-keepalive pool model); negative
+            // or non-finite windows have no meaning on the clock.
+            if !(s.is_finite() && s >= 0.0) {
+                return Err(format!(
+                    "bad value `{value}` for `{key}` (keep-alive must be ≥ 0 and finite)"
+                ));
+            }
+            cfg.flint.lambda_keepalive_s = s;
         }
         "flint.dedup_enabled" => parse_to!(cfg.flint.dedup_enabled, value, key),
         "flint.batch_rows" => {

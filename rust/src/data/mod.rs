@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 pub const INPUT_BUCKET: &str = "nyc-tlc";
 pub const OUTPUT_BUCKET: &str = "flint-results";
 pub const SHUFFLE_BUCKET: &str = "flint-shuffle";
+pub const CACHE_BUCKET: &str = "flint-cache";
 pub const WEATHER_KEY: &str = "weather/daily.csv";
 
 /// Per-object column statistics recorded in the dataset manifest.

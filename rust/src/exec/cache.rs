@@ -1,0 +1,399 @@
+//! The lineage-keyed cache: structural fingerprints over `Rdd` DAGs, a
+//! capacity-bounded registry of materialized cuts, and the state one
+//! `FlintService` shares across every query/tenant session (the cache
+//! registry plus the hoisted scan-listing cache).
+//!
+//! # Fingerprints
+//!
+//! A cached cut is keyed by a canonical 64-bit FNV-1a hash over
+//! everything that determines the cut's *bytes*:
+//!
+//! * the lineage structure below the marker (node kinds, partition
+//!   counts, op chains),
+//! * dataset identity: a `TextFile` source hashes its **resolved
+//!   splits** — bucket, key, byte ranges, object sizes, and manifest
+//!   stats — so re-generated data, a different split size, or a changed
+//!   `scan_prune` stats view all change the key (invalidation by
+//!   construction, never by TTL),
+//! * result-affecting ops: a typed `DayRange` hashes its parameters;
+//!   opaque closures (`Map`/`Filter`/`FlatMap`, `reduceByKey` combine)
+//!   hash by `Arc` pointer identity.
+//!
+//! Closure pointer identity means cross-query reuse requires the
+//! queries to *share* the op `Arc`s — i.e. be derived from the same
+//! `Rdd` handles, exactly how a driver program reuses a cached RDD in
+//! Spark. Two textually identical closures compiled separately never
+//! alias, so the registry can never serve a wrong entry; it can only
+//! miss. Diamonds hash each shared node once (pointer-memoized walk).
+//!
+//! # Registry
+//!
+//! Entries are LRU-over-bytes under `flint.cache.capacity_bytes`;
+//! `capacity_bytes = 0` disables the cache entirely (markers stay
+//! transparent, byte-identical to a build without this module). An
+//! evicted entry only drops the registry mapping — its committed S3
+//! objects stay until the bucket dies, and an identical rebuild
+//! re-commits the same keys idempotently (first-commit-wins renames).
+
+use crate::metrics::Metrics;
+use crate::plan::rdd::{DynOp, Rdd, RddNode};
+use crate::plan::task::{CachePart, InputSplit};
+use crate::util::fnv1a64;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Hash one op into the node buffer: kind tag, then parameters (typed
+/// predicates) or closure identity (opaque ones).
+fn fp_op(op: &DynOp, buf: &mut Vec<u8>) {
+    match op {
+        DynOp::Map(f) => {
+            buf.push(1);
+            buf.extend_from_slice(&(Arc::as_ptr(f) as *const () as usize as u64).to_le_bytes());
+        }
+        DynOp::Filter(f) => {
+            buf.push(2);
+            buf.extend_from_slice(&(Arc::as_ptr(f) as *const () as usize as u64).to_le_bytes());
+        }
+        DynOp::FlatMap(f) => {
+            buf.push(3);
+            buf.extend_from_slice(&(Arc::as_ptr(f) as *const () as usize as u64).to_le_bytes());
+        }
+        DynOp::DayRange { min_day, max_day } => {
+            buf.push(4);
+            buf.extend_from_slice(&min_day.to_le_bytes());
+            buf.extend_from_slice(&max_day.to_le_bytes());
+        }
+    }
+}
+
+fn fp_splits(splits: &[InputSplit], buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&(splits.len() as u64).to_le_bytes());
+    for s in splits {
+        buf.extend_from_slice(s.bucket.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(s.key.as_bytes());
+        buf.push(0);
+        buf.extend_from_slice(&s.start.to_le_bytes());
+        buf.extend_from_slice(&s.end.to_le_bytes());
+        buf.extend_from_slice(&s.object_size.to_le_bytes());
+        match &s.stats {
+            None => buf.push(0),
+            Some(st) => {
+                buf.push(1);
+                buf.extend_from_slice(&st.min_day.to_le_bytes());
+                buf.extend_from_slice(&st.max_day.to_le_bytes());
+                buf.extend_from_slice(&st.min_month.to_le_bytes());
+                buf.extend_from_slice(&st.max_month.to_le_bytes());
+                buf.extend_from_slice(&st.rows.to_le_bytes());
+            }
+        }
+    }
+}
+
+fn fp_node(
+    rdd: &Rdd,
+    splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
+    memo: &mut HashMap<usize, u64>,
+) -> u64 {
+    let key = Arc::as_ptr(&rdd.node) as *const () as usize;
+    if let Some(h) = memo.get(&key) {
+        return *h;
+    }
+    let mut buf = Vec::new();
+    match &*rdd.node {
+        RddNode::TextFile { bucket, prefix } => {
+            buf.push(1);
+            buf.extend_from_slice(bucket.as_bytes());
+            buf.push(0);
+            buf.extend_from_slice(prefix.as_bytes());
+            buf.push(0);
+            fp_splits(&splits(bucket, prefix), &mut buf);
+        }
+        RddNode::Narrow { parent, op } => {
+            buf.push(2);
+            fp_op(op, &mut buf);
+            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+        }
+        RddNode::ReduceByKey { parent, partitions, combine } => {
+            buf.push(3);
+            buf.extend_from_slice(&(*partitions as u64).to_le_bytes());
+            buf.extend_from_slice(
+                &(Arc::as_ptr(combine) as *const () as usize as u64).to_le_bytes(),
+            );
+            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+        }
+        RddNode::CoGroup { left, right, partitions } => {
+            buf.push(4);
+            buf.extend_from_slice(&(*partitions as u64).to_le_bytes());
+            buf.extend_from_slice(&fp_node(left, splits, memo).to_le_bytes());
+            buf.extend_from_slice(&fp_node(right, splits, memo).to_le_bytes());
+        }
+        // A nested marker is part of the structure but its storage level
+        // is not: `persist(Memory)` and `persist(S3)` over the same
+        // parent describe the same bytes, so they share one entry.
+        RddNode::Cached { parent, .. } => {
+            buf.push(5);
+            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+        }
+    }
+    let h = fnv1a64(&buf);
+    memo.insert(key, h);
+    h
+}
+
+/// Canonical fingerprint of a lineage (see module docs for what it
+/// covers). `splits` resolves `TextFile` sources exactly like lowering
+/// does — dataset identity and the stats view are part of the key.
+pub fn lineage_fingerprint(rdd: &Rdd, splits: &dyn Fn(&str, &str) -> Vec<InputSplit>) -> u64 {
+    fp_node(rdd, splits, &mut HashMap::new())
+}
+
+struct CacheEntry {
+    parts: Arc<Vec<CachePart>>,
+    bytes: u64,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    entries: HashMap<u64, CacheEntry>,
+    bytes: u64,
+    tick: u64,
+}
+
+/// The shared fingerprint → materialized-parts registry. Admission and
+/// eviction are byte-budgeted (LRU over bytes); the *tier* decision
+/// (which parts carry a memory copy) is made by the session that built
+/// the entry, before admitting it.
+#[derive(Default)]
+pub struct CacheRegistry {
+    inner: Mutex<RegistryInner>,
+}
+
+impl CacheRegistry {
+    pub fn new() -> CacheRegistry {
+        CacheRegistry::default()
+    }
+
+    /// Look up a fingerprint, bumping its recency on a hit.
+    pub fn lookup(&self, fp: u64) -> Option<Arc<Vec<CachePart>>> {
+        let mut inner = self.inner.lock().expect("cache registry lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner.entries.get_mut(&fp)?;
+        entry.last_used = tick;
+        Some(Arc::clone(&entry.parts))
+    }
+
+    /// Admit a freshly built entry, evicting least-recently-used entries
+    /// until it fits. An entry larger than the whole capacity is
+    /// rejected (the build's S3 objects still served the building query;
+    /// they just aren't registered for reuse). Returns whether the entry
+    /// was admitted.
+    pub fn admit(
+        &self,
+        fp: u64,
+        parts: Arc<Vec<CachePart>>,
+        capacity_bytes: u64,
+        metrics: &Metrics,
+    ) -> bool {
+        let bytes: u64 = parts.iter().map(|p| p.bytes).sum();
+        if bytes > capacity_bytes {
+            metrics.incr("cache.admission_rejected");
+            return false;
+        }
+        let mut inner = self.inner.lock().expect("cache registry lock");
+        if let Some(old) = inner.entries.remove(&fp) {
+            // Racing builders (two sessions missed concurrently): keep
+            // the newcomer, the bytes are identical by determinism.
+            inner.bytes -= old.bytes;
+        }
+        while inner.bytes + bytes > capacity_bytes {
+            let Some((&victim, _)) =
+                inner.entries.iter().min_by_key(|(_, e)| e.last_used)
+            else {
+                break;
+            };
+            let evicted = inner.entries.remove(&victim).expect("victim exists");
+            inner.bytes -= evicted.bytes;
+            metrics.incr("cache.evictions");
+        }
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.insert(fp, CacheEntry { parts, bytes, last_used: tick });
+        inner.bytes += bytes;
+        metrics.add("cache.bytes", bytes);
+        true
+    }
+
+    /// Number of registered entries (tests/diagnostics).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache registry lock").entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Registered bytes (tests/diagnostics).
+    pub fn bytes(&self) -> u64 {
+        self.inner.lock().expect("cache registry lock").bytes
+    }
+}
+
+/// The hoisted scan-listing cache: one `(bucket, prefix)` → resolved
+/// splits map shared by every session of a service, so repeat scans of
+/// a popular prefix stop paying the LIST + per-object HEAD tax on every
+/// query. Entries embed the stats view current at first resolution;
+/// the cache lives exactly as long as the service (no TTL — the sim's
+/// datasets are immutable once registered).
+#[derive(Default)]
+pub struct ScanCache {
+    inner: Mutex<HashMap<(String, String), Arc<Vec<InputSplit>>>>,
+}
+
+impl ScanCache {
+    pub fn get(&self, bucket: &str, prefix: &str) -> Option<Arc<Vec<InputSplit>>> {
+        self.inner
+            .lock()
+            .expect("scan cache lock")
+            .get(&(bucket.to_string(), prefix.to_string()))
+            .cloned()
+    }
+
+    pub fn put(&self, bucket: &str, prefix: &str, splits: Arc<Vec<InputSplit>>) {
+        self.inner
+            .lock()
+            .expect("scan cache lock")
+            .insert((bucket.to_string(), prefix.to_string()), splits);
+    }
+}
+
+/// Everything a `FlintService` shares across its per-query sessions:
+/// the lineage cache registry and the scan-listing cache. Standalone
+/// contexts own a private instance, which still gives repeat actions on
+/// one context the same reuse.
+#[derive(Default)]
+pub struct ServiceShared {
+    pub registry: CacheRegistry,
+    pub scans: ScanCache,
+}
+
+impl ServiceShared {
+    pub fn new() -> Arc<ServiceShared> {
+        Arc::new(ServiceShared::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn part(key: &str, bytes: u64) -> CachePart {
+        CachePart { bucket: "flint-cache".into(), key: key.into(), bytes, mem: None }
+    }
+
+    fn parts(total: u64, n: u64) -> Arc<Vec<CachePart>> {
+        Arc::new((0..n).map(|i| part(&format!("p{i}"), total / n)).collect())
+    }
+
+    #[test]
+    fn registry_lru_eviction_over_bytes() {
+        let reg = CacheRegistry::new();
+        let m = Metrics::new();
+        assert!(reg.admit(1, parts(400, 2), 1000, &m));
+        assert!(reg.admit(2, parts(400, 2), 1000, &m));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(reg.lookup(1).is_some());
+        assert!(reg.admit(3, parts(400, 2), 1000, &m));
+        assert_eq!(m.get("cache.evictions"), 1);
+        assert!(reg.lookup(2).is_none(), "LRU entry evicted");
+        assert!(reg.lookup(1).is_some());
+        assert!(reg.lookup(3).is_some());
+        assert_eq!(reg.bytes(), 800);
+        // An entry bigger than the whole budget is rejected outright.
+        assert!(!reg.admit(4, parts(2000, 4), 1000, &m));
+        assert_eq!(m.get("cache.admission_rejected"), 1);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn fingerprint_is_structural_and_pointer_memoized() {
+        let splits = |_: &str, _: &str| Vec::new();
+        let base = Rdd::text_file("b", "data/");
+        let mapped = base.map(|v| v);
+        // Same handle → same fingerprint; a diamond sharing the node
+        // hashes identically to either arm.
+        assert_eq!(
+            lineage_fingerprint(&mapped, &splits),
+            lineage_fingerprint(&mapped.clone(), &splits)
+        );
+        // A structurally identical but separately compiled closure does
+        // NOT alias (pointer identity): the registry can only miss, never
+        // serve a wrong entry.
+        let other = base.map(|v| v);
+        assert_ne!(lineage_fingerprint(&mapped, &splits), lineage_fingerprint(&other, &splits));
+        // Storage level is excluded: persist(Memory) and persist(S3)
+        // over one parent describe the same bytes.
+        use crate::plan::StorageLevel;
+        assert_eq!(
+            lineage_fingerprint(&mapped.persist(StorageLevel::Memory), &splits),
+            lineage_fingerprint(&mapped.persist(StorageLevel::S3), &splits)
+        );
+        // But the marker itself is structural: cached vs plain differ.
+        assert_ne!(
+            lineage_fingerprint(&mapped.cache(), &splits),
+            lineage_fingerprint(&mapped, &splits)
+        );
+        // Typed predicates hash by value, so two independently built
+        // DayRange chains over the same source DO share.
+        assert_eq!(
+            lineage_fingerprint(&base.filter_day_range(3, 9), &splits),
+            lineage_fingerprint(&base.filter_day_range(3, 9), &splits)
+        );
+        assert_ne!(
+            lineage_fingerprint(&base.filter_day_range(3, 9), &splits),
+            lineage_fingerprint(&base.filter_day_range(3, 10), &splits)
+        );
+    }
+
+    #[test]
+    fn fingerprint_covers_dataset_identity_via_splits() {
+        let rdd = Rdd::text_file("b", "data/");
+        let empty = |_: &str, _: &str| Vec::new();
+        let one = |_: &str, _: &str| {
+            vec![InputSplit {
+                bucket: "b".into(),
+                key: "data/part-0".into(),
+                start: 0,
+                end: 100,
+                object_size: 100,
+                stats: None,
+            }]
+        };
+        let grown = |_: &str, _: &str| {
+            vec![InputSplit {
+                bucket: "b".into(),
+                key: "data/part-0".into(),
+                start: 0,
+                end: 150,
+                object_size: 150,
+                stats: None,
+            }]
+        };
+        let a = lineage_fingerprint(&rdd, &empty);
+        let b = lineage_fingerprint(&rdd, &one);
+        let c = lineage_fingerprint(&rdd, &grown);
+        assert_ne!(a, b, "resolved splits are part of the key");
+        assert_ne!(b, c, "a re-written object invalidates the entry");
+    }
+
+    #[test]
+    fn scan_cache_round_trip() {
+        let sc = ScanCache::default();
+        assert!(sc.get("b", "p/").is_none());
+        sc.put("b", "p/", Arc::new(Vec::new()));
+        assert!(sc.get("b", "p/").is_some());
+        assert!(sc.get("b", "q/").is_none());
+    }
+}

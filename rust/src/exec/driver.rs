@@ -584,10 +584,16 @@ fn build_descriptors(plan: &PhysicalPlan, stage: &Stage) -> Vec<TaskDescriptor> 
         StageOutput::Act(crate::plan::Action::SaveAsText { bucket, prefix }) => {
             TaskOutput::S3 { bucket: bucket.clone(), prefix: prefix.clone() }
         }
+        StageOutput::Act(crate::plan::Action::CacheWrite { bucket, prefix }) => {
+            TaskOutput::S3 { bucket: bucket.clone(), prefix: prefix.clone() }
+        }
         StageOutput::Act(_) => TaskOutput::Driver,
     };
     let code_bytes = match &stage.compute {
         crate::plan::StageCompute::DynScan { ops } => {
+            ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 1024
+        }
+        crate::plan::StageCompute::CachedScan { ops } => {
             ops.iter().map(|o| o.code_bytes()).sum::<u64>() + 1024
         }
         crate::plan::StageCompute::DynReduce { post_ops, .. } => {
@@ -624,6 +630,20 @@ fn build_descriptors(plan: &PhysicalPlan, stage: &Stage) -> Vec<TaskDescriptor> 
                     partition: p as u32,
                     parents: stage.parents.clone(),
                 },
+                output: output.clone(),
+                resume: None,
+                code_bytes,
+            })
+            .collect(),
+        StageInput::CacheParts(parts) => parts
+            .iter()
+            .enumerate()
+            .map(|(i, part)| TaskDescriptor {
+                plan_id: plan.plan_id.clone(),
+                stage_id: stage.id,
+                task_index: i as u32,
+                attempt: 0,
+                input: TaskInput::CachedPart(part.clone()),
                 output: output.clone(),
                 resume: None,
                 code_bytes,

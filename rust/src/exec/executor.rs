@@ -177,6 +177,9 @@ pub fn run_task(ctx: &ExecCtx, task: &TaskDescriptor, base_timeline: Timeline) -
             kernel_reduce(ctx, task, *spec, &mut resp)
         }
         (StageCompute::DynScan { ops }, TaskInput::Split(_)) => dyn_scan(ctx, task, ops, &mut resp),
+        (StageCompute::CachedScan { ops }, TaskInput::CachedPart(_)) => {
+            cached_scan(ctx, task, ops, &mut resp)
+        }
         (StageCompute::DynReduce { combine, post_ops }, TaskInput::ShufflePartition { .. }) => {
             dyn_reduce(ctx, task, combine.clone(), post_ops, &mut resp)
         }
@@ -1320,6 +1323,145 @@ fn dyn_scan(
     Ok(None)
 }
 
+/// Scan a materialized cache partition (the warm-run replacement for a
+/// [`dyn_scan`] over the original input): read the committed `Value`
+/// stream from the warm container's memory tier when this invocation is
+/// warm and the part was promoted, else from the S3 tier, then run the
+/// post-marker op chain and route exactly like a dyn scan. Cache reads
+/// never chain — parts are bounded by one build task's output, far
+/// below the duration cap.
+fn cached_scan(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    ops: &[crate::plan::DynOp],
+    resp: &mut TaskResponse,
+) -> Result<Option<ResumeState>> {
+    let TaskInput::CachedPart(part) = &task.input else { unreachable!() };
+    // Warm-container placement: the driver charges ColdStart XOR
+    // WarmStart into the base timeline before the task runs, so a zero
+    // cold-start charge means this attempt landed on a live container —
+    // the only place the memory tier exists. Cold containers (and any
+    // engine that charges neither, which provisions nothing) fall back
+    // to the S3 tier object the build committed.
+    let warm = resp.timeline.get(Component::ColdStart) == 0.0;
+    let bytes: Arc<Vec<u8>> = match (&part.mem, warm) {
+        (Some(mem), true) => {
+            ctx.env.metrics().incr("cache.mem_reads");
+            // Memory-tier read: no S3 round trip, just a memcpy-rate
+            // walk of the resident bytes.
+            resp.timeline
+                .charge(Component::Compute, mem.len() as f64 / 1e10);
+            Arc::clone(mem)
+        }
+        _ => {
+            let (obj, dt) = ctx
+                .env
+                .s3()
+                .get_object(&part.bucket, &part.key, ctx.read_profile())
+                .map_err(|e| anyhow!("cache part: {e}"))?;
+            resp.timeline.charge(Component::S3Read, dt);
+            ctx.env.metrics().incr("cache.s3_reads");
+            Arc::new(obj.bytes().to_vec())
+        }
+    };
+
+    if ctx
+        .env
+        .failure()
+        .take_forced_failure(task.stage_id, task.task_index, task.attempt)
+    {
+        return Err(anyhow!(
+            "injected executor crash (stage {} task {} attempt {})",
+            task.stage_id,
+            task.task_index,
+            task.attempt
+        ));
+    }
+
+    let values =
+        Value::decode_stream(&bytes).ok_or_else(|| anyhow!("corrupt cache part {}", part.key))?;
+
+    let out_parts = stage_output_partitions(ctx, task);
+    let combine = match &ctx.plan.stages[task.stage_id as usize].output {
+        StageOutput::Shuffle { combine, .. } => combine.clone(),
+        _ => None,
+    };
+    let mut writer = out_parts.map(|parts| make_writer(ctx, task, parts, None));
+    let mut side: BTreeMap<Vec<u8>, Value> = BTreeMap::new();
+    let mut collected: Vec<Value> = Vec::new();
+    let mut count: u64 = 0;
+    let mut emitted_buf: Vec<Value> = Vec::new();
+
+    let sw = CpuStopwatch::start();
+    for input in values {
+        resp.rows += 1;
+        emitted_buf.clear();
+        crate::plan::DynOp::apply_chain(ops, input, &mut emitted_buf);
+        for v in emitted_buf.drain(..) {
+            match (&task.output, combine.as_ref()) {
+                (TaskOutput::Shuffle { .. }, Some(c)) => {
+                    let key_bytes = v.key().encode();
+                    let val = v.val().clone();
+                    match side.remove(&key_bytes) {
+                        Some(prev) => {
+                            side.insert(key_bytes, c(prev, val));
+                        }
+                        None => {
+                            side.insert(key_bytes, val);
+                        }
+                    }
+                }
+                (TaskOutput::Shuffle { partitions }, None) => {
+                    let p = dyn_partition(v.key(), *partitions);
+                    writer.as_mut().unwrap().write(
+                        p,
+                        &ShuffleRec::Dyn { pair: v },
+                        &mut resp.timeline,
+                    )?;
+                }
+                (TaskOutput::Driver, _) => match &ctx.plan.action {
+                    Action::Count => count += 1,
+                    _ => collected.push(v),
+                },
+                (TaskOutput::S3 { .. }, _) => collected.push(v),
+            }
+        }
+    }
+    resp.timeline
+        .charge(Component::Compute, sw.elapsed_s() * ctx.compute_scale());
+
+    let side_bytes: usize = side.iter().map(|(k, v)| k.len() + v.mem_bytes()).sum();
+    let mem_used = bytes.len() as u64
+        + side_bytes as u64
+        + writer.as_ref().map(|w| w.buffered_bytes() as u64).unwrap_or(0)
+        + collected.iter().map(|v| v.mem_bytes() as u64).sum::<u64>();
+    if mem_used > ctx.memory_limit_bytes {
+        return Err(anyhow!(
+            "executor memory exceeded ({mem_used} B) — increase partitions or split size"
+        ));
+    }
+
+    match &task.output {
+        TaskOutput::Shuffle { .. } => {
+            let w = writer.as_mut().expect("writer for shuffle output");
+            flush_side(&mut side, w, ctx.env.config().flint.shuffle_codec, &mut resp.timeline)?;
+            w.flush_all(&mut resp.timeline)?;
+            resp.msgs_sent = w.msgs_sent;
+            resp.edge_sent_bytes = w.edge_bytes();
+        }
+        TaskOutput::Driver => {
+            resp.emitted = match &ctx.plan.action {
+                Action::Count => Emitted::Count(count),
+                _ => Emitted::Values(std::mem::take(&mut collected)),
+            };
+        }
+        TaskOutput::S3 { bucket, prefix } => {
+            resp.emitted = save_values(ctx, bucket, prefix, task, &collected, &mut resp.timeline)?;
+        }
+    }
+    Ok(None)
+}
+
 fn flush_side(
     side: &mut BTreeMap<Vec<u8>, Value>,
     writer: &mut ShuffleWriter,
@@ -1626,14 +1768,26 @@ fn save_values(
     values: &[Value],
     tl: &mut Timeline,
 ) -> Result<Emitted> {
-    let mut text = String::new();
-    for v in values {
-        match v {
-            Value::Pair(k, val) => text.push_str(&format!("{k:?}\t{val:?}\n")),
-            other => text.push_str(&format!("{other:?}\n")),
+    // Cache materialization keeps the exact `Value` encoding so a warm
+    // run's `cached_scan` decodes bit-identical values back; user-facing
+    // saveAsTextFile keeps the readable text form.
+    let bytes = if matches!(ctx.plan.action, Action::CacheWrite { .. }) {
+        let mut out = Vec::new();
+        for v in values {
+            v.encode_into(&mut out);
         }
-    }
-    commit_part(ctx, bucket, prefix, task.task_index, task.attempt, text.into_bytes(), tl)?;
+        out
+    } else {
+        let mut text = String::new();
+        for v in values {
+            match v {
+                Value::Pair(k, val) => text.push_str(&format!("{k:?}\t{val:?}\n")),
+                other => text.push_str(&format!("{other:?}\n")),
+            }
+        }
+        text.into_bytes()
+    };
+    commit_part(ctx, bucket, prefix, task.task_index, task.attempt, bytes, tl)?;
     Ok(Emitted::Saved(1))
 }
 

@@ -134,8 +134,16 @@ impl FlintEngine {
     pub fn run_plan_raw(&self, plan: &PhysicalPlan) -> Result<RunOutput> {
         self.env.s3().create_bucket(crate::data::SHUFFLE_BUCKET);
         self.env.s3().create_bucket(crate::data::OUTPUT_BUCKET);
-        run_plan(&self.env, self.runtime.as_deref(), plan, &self.params())
-            .with_context(|| format!("flint plan {}", plan.plan_id))
+        self.env.s3().create_bucket(crate::data::CACHE_BUCKET);
+        let out = run_plan(&self.env, self.runtime.as_deref(), plan, &self.params())
+            .with_context(|| format!("flint plan {}", plan.plan_id))?;
+        // Warm-container model: a run occupies the pool for its virtual
+        // latency, so containers age by that much before the next plan
+        // (keepalive expiry is pruned lazily; `keepalive_s = 0` means
+        // never-expire, keeping this a no-op for the default config).
+        let lam = self.env.lambda();
+        lam.advance_to(lam.now() + out.latency_s);
+        Ok(out)
     }
 
     /// Execute an arbitrary physical plan and summarize it as a report.

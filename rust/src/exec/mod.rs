@@ -1,6 +1,7 @@
 //! Execution engines: Flint (serverless, the paper's system) and the
 //! cluster baselines (Scala Spark / PySpark) it is evaluated against.
 
+pub mod cache;
 pub mod cluster;
 pub mod driver;
 pub mod exchange;
@@ -10,6 +11,7 @@ pub mod service;
 pub mod session;
 pub mod shuffle;
 
+pub use cache::{lineage_fingerprint, CacheRegistry, ScanCache, ServiceShared};
 pub use cluster::{ClusterEngine, ClusterMode};
 pub use driver::{ActionOut, EdgeShuffle, RunOutput};
 pub use flint::FlintEngine;

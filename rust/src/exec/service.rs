@@ -48,6 +48,7 @@
 use crate::config::ShuffleBackend;
 use crate::cost::report::CostLedger;
 use crate::cost::{CostCategory, CostSnapshot};
+use crate::exec::cache::ServiceShared;
 use crate::exec::flint::FlintEngine;
 use crate::exec::session::FlintContext;
 use crate::plan::{Action, ActionOut, Rdd};
@@ -206,6 +207,11 @@ pub struct FlintService {
     env: SimEnv,
     runtime: Option<Arc<crate::runtime::PjrtRuntime>>,
     predictor: Arc<StragglerPredictor>,
+    /// Cross-query shared state: the lineage-keyed cache registry and
+    /// the LIST/stats scan cache. Every session and every submitted
+    /// query sees the same instance, so identical sub-lineages hit
+    /// across queries and tenants.
+    shared: Arc<ServiceShared>,
     state: Mutex<SvcState>,
 }
 
@@ -218,6 +224,7 @@ impl FlintService {
             env,
             runtime,
             predictor: Arc::new(StragglerPredictor::new()),
+            shared: ServiceShared::new(),
             state: Mutex::new(SvcState {
                 pending: Vec::new(),
                 next_qid: 0,
@@ -248,7 +255,13 @@ impl FlintService {
     pub fn session(&self, tenant: &str) -> FlintContext {
         let mut engine = FlintEngine::with_runtime(self.env.clone(), self.runtime.clone());
         engine.set_service_tuning(true, Some(Arc::clone(&self.predictor)));
-        FlintContext::with_engine_for_tenant(engine, tenant)
+        FlintContext::with_engine_for_tenant_shared(engine, tenant, Arc::clone(&self.shared))
+    }
+
+    /// The service-wide shared cache state (lineage cache registry +
+    /// scan cache) — exposed for tests and cache introspection.
+    pub fn shared(&self) -> &Arc<ServiceShared> {
+        &self.shared
     }
 
     /// Submit a query arriving at service time 0 (a concurrent burst).
@@ -348,9 +361,17 @@ impl FlintService {
             let qenv = self.env.scoped(&format!("q{}", p.qid));
             let mut engine = FlintEngine::with_runtime(qenv.clone(), self.runtime.clone());
             engine.set_service_tuning(false, Some(Arc::clone(&self.predictor)));
-            let ctx = FlintContext::with_engine_for_tenant(engine, &p.tenant);
-            let plan = ctx.lower(&p.rdd, p.action.clone());
+            let ctx =
+                FlintContext::with_engine_for_tenant_shared(engine, &p.tenant, Arc::clone(&self.shared));
+            // Warm-container model: containers released before this
+            // query's arrival past the keepalive window are gone.
+            self.env.lambda().advance_to(p.arrival_s);
+            // Snapshot BEFORE lowering: cache-marker resolution may
+            // build cache entries (whole sub-plans run through the
+            // shared substrates), and that spend belongs to the tenant
+            // whose query triggered the build.
             let before = self.env.cost().snapshot();
+            let plan = ctx.lower_for_run(&p.rdd, p.action.clone());
             let out = ctx
                 .flint_engine()
                 .expect("service sessions are Flint-backed")

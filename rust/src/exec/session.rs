@@ -27,14 +27,19 @@
 //! which lowers onto the same `Rdd` lineage API.
 
 use crate::compute::value::Value;
-use crate::data::{Dataset, ObjectStats};
+use crate::config::CacheTier;
+use crate::data::{Dataset, ObjectStats, CACHE_BUCKET};
+use crate::exec::cache::{lineage_fingerprint, ServiceShared};
 use crate::exec::cluster::{ClusterEngine, ClusterMode};
 use crate::exec::flint::FlintEngine;
 use crate::exec::QueryReport;
-use crate::plan::{dag, Action, ActionOut, InputSplit, PhysicalPlan, Rdd, SessionBinding};
+use crate::plan::rdd::RddNode;
+use crate::plan::{
+    dag, Action, ActionOut, CachePart, InputSplit, PhysicalPlan, Rdd, SessionBinding, StorageLevel,
+};
 use crate::services::SimEnv;
 use crate::sql::{SqlError, SqlJob, SqlResult};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::{Arc, Mutex};
 
 enum Backend {
@@ -81,6 +86,18 @@ struct SessionInner {
     /// metadata, so even stat-less objects are HEADed at most once per
     /// session (repeat queries hit the cache: `scan.stats_cache_hits`).
     stats_cache: Mutex<std::collections::BTreeMap<String, Option<ObjectStats>>>,
+    /// Cross-session shared state: the lineage cache registry and the
+    /// hoisted scan-listing cache. Under a [`FlintService`] every
+    /// per-query session holds the same instance; standalone contexts
+    /// own a private one.
+    ///
+    /// [`FlintService`]: crate::exec::service::FlintService
+    shared: Arc<ServiceShared>,
+    /// Latencies of cache-build sub-plans run by `resolve_cache` since
+    /// the last drain — a report-producing run folds them into its
+    /// `QueryReport` (the builds ran serially ahead of the truncated
+    /// plan, so a cold cached run is honestly slower end-to-end).
+    build_log: Mutex<Vec<f64>>,
 }
 
 impl SessionInner {
@@ -108,6 +125,111 @@ impl SessionInner {
             .insert(id, stats);
         stats
     }
+
+    /// Build one cache entry: run the sub-lineage below a `Cached`
+    /// marker as its own `CacheWrite` plan (committed S3 parts under
+    /// `fp-<fingerprint>/`), decide the memory tier, and register the
+    /// result. The build executes through this session's backend, so
+    /// its spend lands in whatever cost window the caller opened — the
+    /// builder pays, by construction.
+    fn build_cache_entry(
+        &self,
+        parent: &Rdd,
+        level: StorageLevel,
+        fp: u64,
+        resolution: &dag::CacheResolution,
+    ) -> Result<Arc<Vec<CachePart>>> {
+        let env = self.backend.env();
+        let cfg = env.config();
+        let prefix = format!("fp-{fp:016x}");
+        let action =
+            Action::CacheWrite { bucket: CACHE_BUCKET.to_string(), prefix: prefix.clone() };
+        // Inner markers already resolved (innermost-first order) cut the
+        // build plan too — a nested cache builds on top of the cache.
+        let plan = dag::lower_resolved(
+            parent,
+            action,
+            &|bucket, pfx| self.input_splits(bucket, pfx),
+            resolution,
+        );
+        let report = self.backend.run_plan(&plan)?;
+        env.metrics().incr("cache.builds");
+        self.build_log.lock().expect("session build log").push(report.latency_s);
+        // List the committed parts; the builder pays this LIST like any
+        // client finalizing an upload. Temp keys of crashed attempts are
+        // excluded (the committer's winner sweeps its own).
+        let listed = env
+            .s3()
+            .list(CACHE_BUCKET, &format!("{prefix}/"))
+            .map_err(|e| anyhow!("cache part listing: {e}"))?;
+        let mut parts: Vec<CachePart> = listed
+            .into_iter()
+            .filter(|(key, _)| !key.contains("/_tmp/"))
+            .map(|(key, bytes)| CachePart {
+                bucket: CACHE_BUCKET.to_string(),
+                key,
+                bytes,
+                mem: None,
+            })
+            .collect();
+        parts.sort_by(|a, b| a.key.cmp(&b.key));
+        // Tier decision: the effective tier is the per-node storage
+        // level ∩ the global `flint.cache.tier` policy, and the memory
+        // copy is only worth holding when recomputing the cut costs
+        // more than re-reading it from S3 (cost-based promotion).
+        let mem_allowed = matches!(cfg.flint.cache.tier, CacheTier::Memory | CacheTier::Both)
+            && matches!(level, StorageLevel::Memory | StorageLevel::MemoryAndS3);
+        if mem_allowed {
+            let total: u64 = parts.iter().map(|p| p.bytes).sum();
+            let s3_read_s = cfg.sim.s3_first_byte_s * parts.len().max(1) as f64
+                + total as f64 / (cfg.sim.s3_flint_mbps * 1e6);
+            if report.latency_s > s3_read_s {
+                for p in &mut parts {
+                    // Unpriced introspection: the real system keeps these
+                    // bytes in the container that just produced them.
+                    if let Ok(bytes) = env.s3().peek_object(CACHE_BUCKET, &p.key) {
+                        p.mem = Some(bytes);
+                    }
+                }
+            }
+        }
+        let parts = Arc::new(parts);
+        self.shared.registry.admit(
+            fp,
+            Arc::clone(&parts),
+            cfg.flint.cache.capacity_bytes,
+            env.metrics(),
+        );
+        Ok(parts)
+    }
+
+    /// Drain the build-latency log (the report-producing run folds these
+    /// into its latency — builds ran serially ahead of it).
+    fn take_builds(&self) -> Vec<f64> {
+        std::mem::take(&mut *self.build_log.lock().expect("session build log"))
+    }
+}
+
+/// Collect `Cached` markers innermost-first (post-order), one entry per
+/// distinct node — a diamond's shared marker resolves once.
+fn collect_cached(rdd: &Rdd, seen: &mut std::collections::HashSet<usize>, out: &mut Vec<Rdd>) {
+    if !seen.insert(dag::CacheResolution::node_key(rdd)) {
+        return;
+    }
+    match &*rdd.node {
+        RddNode::TextFile { .. } => {}
+        RddNode::Narrow { parent, .. } | RddNode::ReduceByKey { parent, .. } => {
+            collect_cached(parent, seen, out)
+        }
+        RddNode::CoGroup { left, right, .. } => {
+            collect_cached(left, seen, out);
+            collect_cached(right, seen, out);
+        }
+        RddNode::Cached { parent, .. } => {
+            collect_cached(parent, seen, out);
+            out.push(rdd.clone());
+        }
+    }
 }
 
 impl SessionBinding for SessionInner {
@@ -133,6 +255,15 @@ impl SessionBinding for SessionInner {
                 }
             }
         }
+        // Hoisted listing cache: every session of a service shares one
+        // `(bucket, prefix)` → splits map, so a popular prefix pays its
+        // LIST and per-object stats HEADs exactly once per service —
+        // not once per query (the per-session `stats_cache` only ever
+        // helped repeat queries on one session).
+        if let Some(cached) = self.shared.scans.get(bucket, prefix) {
+            env.metrics().incr("scan.list_cache_hits");
+            return (*cached).clone();
+        }
         let listed = env.s3().list(bucket, prefix).unwrap_or_default();
         let prune = env.config().flint.scan_prune;
         let mut splits = Vec::new();
@@ -153,11 +284,52 @@ impl SessionBinding for SessionInner {
                 });
             }
         }
+        self.shared.scans.put(bucket, prefix, Arc::new(splits.clone()));
         splits
     }
 
     fn execute(&self, plan: &PhysicalPlan) -> Result<ActionOut> {
         self.backend.run_plan_raw(plan)
+    }
+
+    /// Resolve every admitted `Cached` marker of `rdd` against the
+    /// shared registry, building missing entries. Innermost markers
+    /// resolve first, so an outer build's plan already cuts at inner
+    /// entries. Disabled (`capacity_bytes = 0`) or cluster sessions
+    /// resolve nothing — every marker stays transparent and lowering is
+    /// byte-identical to the pre-cache compiler. A failed build only
+    /// logs: the marker stays transparent and the query recomputes, it
+    /// never fails because a cache couldn't materialize.
+    fn resolve_cache(&self, rdd: &Rdd) -> dag::CacheResolution {
+        let mut resolution = dag::CacheResolution::default();
+        // The cache models warm Lambda containers + committed S3 cuts —
+        // a serverless-engine feature; cluster baselines stay exact.
+        if !matches!(self.backend, Backend::Flint(_)) {
+            return resolution;
+        }
+        let env = self.backend.env();
+        if env.config().flint.cache.capacity_bytes == 0 {
+            return resolution;
+        }
+        let mut markers = Vec::new();
+        collect_cached(rdd, &mut std::collections::HashSet::new(), &mut markers);
+        for marker in markers {
+            let RddNode::Cached { parent, level } = &*marker.node else { unreachable!() };
+            let fp = lineage_fingerprint(parent, &|b, p| self.input_splits(b, p));
+            let key = dag::CacheResolution::node_key(&marker);
+            if let Some(parts) = self.shared.registry.lookup(fp) {
+                env.metrics().incr("cache.hits");
+                resolution.insert(key, parts);
+                continue;
+            }
+            match self.build_cache_entry(parent, *level, fp, &resolution) {
+                Ok(parts) => resolution.insert(key, parts),
+                Err(e) => {
+                    log::warn!("cache build fp-{fp:016x} failed, marker left transparent: {e:#}")
+                }
+            }
+        }
+        resolution
     }
 }
 
@@ -174,12 +346,22 @@ impl FlintContext {
     }
 
     fn from_backend_for_tenant(backend: Backend, tenant: &str) -> FlintContext {
+        Self::from_backend_shared(backend, tenant, ServiceShared::new())
+    }
+
+    fn from_backend_shared(
+        backend: Backend,
+        tenant: &str,
+        shared: Arc<ServiceShared>,
+    ) -> FlintContext {
         FlintContext {
             inner: Arc::new(SessionInner {
                 backend,
                 tenant: tenant.to_string(),
                 manifests: Mutex::new(Vec::new()),
                 stats_cache: Mutex::new(std::collections::BTreeMap::new()),
+                shared,
+                build_log: Mutex::new(Vec::new()),
             }),
         }
     }
@@ -201,6 +383,17 @@ impl FlintContext {
     /// session to its cost ledger.
     pub fn with_engine_for_tenant(engine: FlintEngine, tenant: &str) -> FlintContext {
         Self::from_backend_for_tenant(Backend::Flint(engine), tenant)
+    }
+
+    /// A serverless session sharing a service's cache registry and scan
+    /// cache — how [`crate::exec::service::FlintService`] gives every
+    /// per-query session one lineage cache across queries and tenants.
+    pub fn with_engine_for_tenant_shared(
+        engine: FlintEngine,
+        tenant: &str,
+        shared: Arc<ServiceShared>,
+    ) -> FlintContext {
+        Self::from_backend_shared(Backend::Flint(engine), tenant, shared)
     }
 
     /// The tenant this session's spend is attributed to.
@@ -254,14 +447,49 @@ impl FlintContext {
 
     /// Compile `rdd` with this session's split resolution (works on
     /// lineages bound elsewhere or not at all — the cross-engine path).
+    /// Cache markers stay transparent: this is the build-free compile
+    /// `explain`-style callers want; running paths go through
+    /// [`FlintContext::lower_for_run`].
     pub fn lower(&self, rdd: &Rdd, action: Action) -> PhysicalPlan {
         dag::lower(rdd, action, &|bucket, prefix| self.inner.input_splits(bucket, prefix))
     }
 
+    /// Compile `rdd` for execution: resolve every admitted `Cached`
+    /// marker against the shared registry (building missing entries
+    /// through this session's backend — the caller's open cost window
+    /// pays), then lower with the plan cut at the resolved markers.
+    pub(crate) fn lower_for_run(&self, rdd: &Rdd, action: Action) -> PhysicalPlan {
+        let resolution = self.inner.resolve_cache(rdd);
+        dag::lower_resolved(
+            rdd,
+            action,
+            &|bucket, prefix| self.inner.input_splits(bucket, prefix),
+            &resolution,
+        )
+    }
+
     /// Run any lineage on this session and return the full report
-    /// (latencies, cost, per-edge shuffle volumes).
+    /// (latencies, cost, per-edge shuffle volumes). Cache builds this
+    /// run triggered are folded in: they ran serially ahead of the
+    /// truncated plan, so the report's latency and spend cover them —
+    /// a cold cached run is honestly slower, the warm re-run reaps it.
     pub fn run(&self, rdd: &Rdd, action: Action) -> Result<QueryReport> {
-        self.inner.backend.run_plan(&self.lower(rdd, action))
+        let env = self.inner.backend.env();
+        let before = env.cost().snapshot();
+        self.inner.take_builds();
+        let plan = self.lower_for_run(rdd, action);
+        let mut report = self.inner.backend.run_plan(&plan)?;
+        let builds = self.inner.take_builds();
+        if !builds.is_empty() {
+            let build_s: f64 = builds.iter().sum();
+            report.latency_s += build_s;
+            report.barrier_latency_s += build_s;
+            report.pipelined_latency_s += build_s;
+            report.pipelined_nospec_latency_s += build_s;
+            report.cost = env.cost().snapshot().since(&before);
+            report.cost_usd = report.cost.total();
+        }
+        Ok(report)
     }
 
     /// Collect any lineage on this session — including unbound ones, so
@@ -269,7 +497,7 @@ impl FlintContext {
     pub fn collect(&self, rdd: &Rdd) -> Result<Vec<Value>> {
         self.inner
             .backend
-            .run_plan_raw(&self.lower(rdd, Action::Collect))?
+            .run_plan_raw(&self.lower_for_run(rdd, Action::Collect))?
             .into_values()
     }
 
@@ -277,7 +505,7 @@ impl FlintContext {
     pub fn count(&self, rdd: &Rdd) -> Result<u64> {
         self.inner
             .backend
-            .run_plan_raw(&self.lower(rdd, Action::Count))?
+            .run_plan_raw(&self.lower_for_run(rdd, Action::Count))?
             .into_count()
     }
 

@@ -45,7 +45,7 @@ use crate::config::FlintConfig;
 use crate::data::weather::{precip_bucket, PRECIP_BUCKETS};
 use crate::data::Dataset;
 use crate::plan::rdd::{CombineFn, DynOp, Rdd, RddNode};
-use crate::plan::task::InputSplit;
+use crate::plan::task::{CachePart, InputSplit};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -58,6 +58,12 @@ pub enum Action {
     Collect,
     /// Write text output to `bucket/prefix` (`saveAsTextFile`).
     SaveAsText { bucket: String, prefix: String },
+    /// Materialize a cached lineage cut: one committed binary
+    /// `Value`-stream object per final-stage task under `bucket/prefix`
+    /// (the cache-build sub-plan the session runs on a `cache()` miss).
+    /// Never user-visible — actions on the original lineage read the
+    /// parts back through a `CachedScan` stage.
+    CacheWrite { bucket: String, prefix: String },
 }
 
 impl std::fmt::Debug for Action {
@@ -66,7 +72,44 @@ impl std::fmt::Debug for Action {
             Action::Count => f.write_str("Count"),
             Action::Collect => f.write_str("Collect"),
             Action::SaveAsText { bucket, prefix } => write!(f, "SaveAsText({bucket}/{prefix})"),
+            Action::CacheWrite { bucket, prefix } => write!(f, "CacheWrite({bucket}/{prefix})"),
         }
+    }
+}
+
+/// Resolved cache cut points for one lowering: `Cached` lineage nodes
+/// (by `Arc` identity) whose materialized partitions exist and may be
+/// scanned instead of recomputing the sub-lineage below them. Built by
+/// the session's [`crate::plan::rdd::SessionBinding::resolve_cache`]
+/// before an action lowers; the default (empty) resolution leaves every
+/// marker transparent, which is also what `explain` and the
+/// interpreter see.
+#[derive(Default, Clone)]
+pub struct CacheResolution {
+    entries: HashMap<usize, Arc<Vec<CachePart>>>,
+}
+
+impl CacheResolution {
+    /// Identity key of a lineage node (the same `Arc` pointer identity
+    /// the stage-sharing memo uses).
+    pub fn node_key(rdd: &Rdd) -> usize {
+        Arc::as_ptr(&rdd.node) as *const () as usize
+    }
+
+    pub fn insert(&mut self, key: usize, parts: Arc<Vec<CachePart>>) {
+        self.entries.insert(key, parts);
+    }
+
+    pub fn get(&self, key: usize) -> Option<&Arc<Vec<CachePart>>> {
+        self.entries.get(&key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -130,6 +173,9 @@ pub enum StageInput {
     /// Downstream stage: one task per shuffle partition, draining that
     /// partition's queue of **every** parent stage.
     Shuffle { partitions: usize },
+    /// Source stage: one task per materialized partition of a cached
+    /// lineage cut (`CachedScan` stages only).
+    CacheParts(Vec<CachePart>),
 }
 
 /// Where a stage writes to.
@@ -173,6 +219,10 @@ pub enum StageCompute {
     /// Generic cogroup: group each parent edge's pair-values by key,
     /// then feed `(key, [values_per_edge, ...])` through a post chain.
     DynCoGroup { post_ops: Vec<DynOp> },
+    /// Read a cached lineage cut's materialized `Value` stream (memory
+    /// tier when the container holds it, committed S3 object otherwise)
+    /// and apply the narrow ops layered *above* the cache marker.
+    CachedScan { ops: Vec<DynOp> },
 }
 
 impl std::fmt::Debug for StageCompute {
@@ -188,6 +238,7 @@ impl std::fmt::Debug for StageCompute {
             StageCompute::DynCoGroup { post_ops } => {
                 write!(f, "DynCoGroup(+{} post ops)", post_ops.len())
             }
+            StageCompute::CachedScan { ops } => write!(f, "CachedScan({} ops)", ops.len()),
         }
     }
 }
@@ -211,6 +262,7 @@ impl Stage {
         match &self.input {
             StageInput::S3Splits(splits) => splits.len(),
             StageInput::Shuffle { partitions } => *partitions,
+            StageInput::CacheParts(parts) => parts.len(),
         }
     }
 }
@@ -294,6 +346,9 @@ impl PhysicalPlan {
                 StageInput::S3Splits(_) if !s.parents.is_empty() => {
                     return Err(format!("stage {} reads S3 but lists parents", s.id));
                 }
+                StageInput::CacheParts(_) if !s.parents.is_empty() => {
+                    return Err(format!("stage {} reads a cache cut but lists parents", s.id));
+                }
                 _ => {}
             }
         }
@@ -308,6 +363,7 @@ impl PhysicalPlan {
             let input = match &s.input {
                 StageInput::S3Splits(sp) => format!("s3 x{}", sp.len()),
                 StageInput::Shuffle { partitions } => format!("sqs x{partitions}"),
+                StageInput::CacheParts(parts) => format!("cache x{}", parts.len()),
             };
             let deps = if s.parents.is_empty() {
                 String::new()
@@ -414,17 +470,22 @@ pub fn build_kernel_plan(query: QueryId, dataset: &Dataset, config: &FlintConfig
     }
 }
 
-/// What a narrow op chain bottoms out on: an S3 source or a wide
-/// (shuffle) dependency.
+/// What a narrow op chain bottoms out on: an S3 source, a wide
+/// (shuffle) dependency, or a *resolved* cached cut whose materialized
+/// partitions replace the sub-lineage below it.
 enum ChainBase {
     Source { bucket: String, prefix: String },
     Wide(Rdd),
+    Cached(Arc<Vec<CachePart>>),
 }
 
 /// Walk root-ward from `rdd` through narrow nodes only, returning the
 /// base the chain hangs off plus the ops in application (source-first)
-/// order.
-fn narrow_chain(rdd: &Rdd) -> (ChainBase, Vec<DynOp>) {
+/// order. A `Cached` marker with an entry in `resolution` terminates
+/// the walk (the cut's partitions stand in for everything below);
+/// an unresolved marker is transparent — the walk continues into its
+/// parent and the plan is exactly the uncached plan.
+fn narrow_chain(rdd: &Rdd, resolution: &CacheResolution) -> (ChainBase, Vec<DynOp>) {
     let mut ops = Vec::new();
     let mut node = rdd.clone();
     loop {
@@ -440,6 +501,15 @@ fn narrow_chain(rdd: &Rdd) -> (ChainBase, Vec<DynOp>) {
             RddNode::ReduceByKey { .. } | RddNode::CoGroup { .. } => {
                 ops.reverse();
                 return (ChainBase::Wide(node.clone()), ops);
+            }
+            RddNode::Cached { parent, .. } => {
+                match resolution.get(CacheResolution::node_key(&node)) {
+                    Some(parts) => {
+                        ops.reverse();
+                        return (ChainBase::Cached(parts.clone()), ops);
+                    }
+                    None => parent.clone(),
+                }
             }
         };
         node = next;
@@ -466,8 +536,21 @@ pub fn lower(
     action: Action,
     splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
 ) -> PhysicalPlan {
-    let mut lw = Lowering { stages: Vec::new(), memo: HashMap::new(), splits };
-    let (base, ops) = narrow_chain(rdd);
+    lower_resolved(rdd, action, splits, &CacheResolution::default())
+}
+
+/// [`lower`] with resolved cache cut points: every `Cached` node listed
+/// in `resolution` compiles to a [`StageCompute::CachedScan`] source
+/// stage over its materialized partitions instead of recompiling the
+/// sub-lineage below it. With an empty resolution this *is* `lower`.
+pub fn lower_resolved(
+    rdd: &Rdd,
+    action: Action,
+    splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
+    resolution: &CacheResolution,
+) -> PhysicalPlan {
+    let mut lw = Lowering { stages: Vec::new(), memo: HashMap::new(), splits, resolution };
+    let (base, ops) = narrow_chain(rdd, resolution);
     match base {
         ChainBase::Source { bucket, prefix } => {
             lw.push(
@@ -483,6 +566,14 @@ pub fn lower(
                 parents,
                 compute,
                 StageInput::Shuffle { partitions },
+                StageOutput::Act(action.clone()),
+            );
+        }
+        ChainBase::Cached(parts) => {
+            lw.push(
+                Vec::new(),
+                StageCompute::CachedScan { ops },
+                StageInput::CacheParts(parts.to_vec()),
                 StageOutput::Act(action.clone()),
             );
         }
@@ -506,6 +597,7 @@ struct Lowering<'a> {
     /// partition count) — the sub-lineage sharing map.
     memo: HashMap<(usize, usize), u32>,
     splits: &'a dyn Fn(&str, &str) -> Vec<InputSplit>,
+    resolution: &'a CacheResolution,
 }
 
 impl Lowering<'_> {
@@ -545,7 +637,7 @@ impl Lowering<'_> {
                 return id;
             }
         }
-        let (base, ops) = narrow_chain(rdd);
+        let (base, ops) = narrow_chain(rdd, self.resolution);
         let output = StageOutput::Shuffle { partitions, combine };
         let id = match base {
             ChainBase::Source { bucket, prefix } => self.push(
@@ -558,6 +650,12 @@ impl Lowering<'_> {
                 let (compute, parents, in_parts) = self.wide_inputs(&wide, ops);
                 self.push(parents, compute, StageInput::Shuffle { partitions: in_parts }, output)
             }
+            ChainBase::Cached(parts) => self.push(
+                Vec::new(),
+                StageCompute::CachedScan { ops },
+                StageInput::CacheParts(parts.to_vec()),
+                output,
+            ),
         };
         if share {
             self.memo.insert(key, id);
@@ -592,7 +690,7 @@ impl Lowering<'_> {
                 };
                 (StageCompute::DynCoGroup { post_ops }, vec![lp, rp], *partitions)
             }
-            RddNode::TextFile { .. } | RddNode::Narrow { .. } => {
+            RddNode::TextFile { .. } | RddNode::Narrow { .. } | RddNode::Cached { .. } => {
                 unreachable!("narrow_chain stops only at wide nodes")
             }
         }
@@ -959,6 +1057,114 @@ mod tests {
         let text = plan.explain();
         assert!(text.contains("DynCoGroup"), "{text}");
         assert!(text.contains("<- s0, s1"), "{text}");
+    }
+
+    fn fake_parts(n: usize) -> Arc<Vec<CachePart>> {
+        Arc::new(
+            (0..n)
+                .map(|i| CachePart {
+                    bucket: "flint-cache".into(),
+                    key: format!("fp-0000000000000000/part-{i:05}"),
+                    bytes: 100,
+                    mem: None,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn unresolved_cache_marker_is_transparent() {
+        let build = |cached: bool| {
+            let base = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1)));
+            let base = if cached { base.cache() } else { base };
+            base.reduce_by_key(4, |a, _| a)
+        };
+        let plain = lower(&build(false), Action::Collect, &|_, _| fake_splits(3));
+        let marked = lower(&build(true), Action::Collect, &|_, _| fake_splits(3));
+        assert_eq!(plain.explain().lines().count(), marked.explain().lines().count());
+        assert_eq!(marked.stages.len(), 2, "{}", marked.explain());
+        assert!(matches!(marked.stages[0].compute, StageCompute::DynScan { .. }));
+        assert!(
+            matches!(marked.stages[0].output, StageOutput::Shuffle { combine: Some(_), .. }),
+            "a transparent marker must not disturb the map-side combine"
+        );
+        marked.validate().unwrap();
+    }
+
+    #[test]
+    fn resolved_cache_truncates_the_plan() {
+        // scan -> shuffle -> reduce, cached, then one narrow op on top:
+        // with the cut resolved the whole shuffle below disappears.
+        let cached = Rdd::text_file("b", "p")
+            .map(|v| Value::pair(v, Value::I64(1)))
+            .reduce_by_key(4, |a, _| a)
+            .cache();
+        let rdd = cached.map(|v| v);
+        let mut res = CacheResolution::default();
+        res.insert(CacheResolution::node_key(&cached), fake_parts(4));
+        let plan = lower_resolved(&rdd, Action::Collect, &|_, _| fake_splits(3), &res);
+        assert_eq!(plan.stages.len(), 1, "{}", plan.explain());
+        let StageCompute::CachedScan { ops } = &plan.stages[0].compute else {
+            panic!("expected CachedScan: {:?}", plan.stages[0].compute)
+        };
+        assert_eq!(ops.len(), 1, "only the op above the cut survives");
+        assert!(matches!(&plan.stages[0].input, StageInput::CacheParts(p) if p.len() == 4));
+        assert_eq!(plan.stages[0].num_tasks(), 4, "one task per cached partition");
+        assert!(plan.explain().contains("cache x4"), "{}", plan.explain());
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn resolved_cache_feeds_a_downstream_shuffle() {
+        let cached = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1))).cache();
+        let rdd = cached.reduce_by_key(2, |a, _| a);
+        let mut res = CacheResolution::default();
+        res.insert(CacheResolution::node_key(&cached), fake_parts(3));
+        let plan = lower_resolved(&rdd, Action::Collect, &|_, _| fake_splits(5), &res);
+        assert_eq!(plan.stages.len(), 2, "{}", plan.explain());
+        assert!(matches!(plan.stages[0].compute, StageCompute::CachedScan { .. }));
+        assert!(
+            matches!(
+                plan.stages[0].output,
+                StageOutput::Shuffle { partitions: 2, combine: Some(_) }
+            ),
+            "a cached scan feeding a reduce keeps the map-side combine"
+        );
+        assert_eq!(plan.stages[0].num_tasks(), 3, "cache partitions, not S3 splits");
+        assert!(matches!(plan.stages[1].compute, StageCompute::DynReduce { .. }));
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn shared_cached_cut_plans_once_in_a_diamond() {
+        let cached = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1))).cache();
+        let a = cached.reduce_by_key(4, |a, _| a);
+        let b = cached.reduce_by_key(4, |_, b| b);
+        let rdd = a.join(&b, 3);
+        let mut res = CacheResolution::default();
+        res.insert(CacheResolution::node_key(&cached), fake_parts(2));
+        let plan = lower_resolved(&rdd, Action::Collect, &|_, _| fake_splits(5), &res);
+        assert_eq!(plan.stages.len(), 4, "one shared cached scan:\n{}", plan.explain());
+        assert!(matches!(plan.stages[0].compute, StageCompute::CachedScan { .. }));
+        assert_eq!(plan.children(0), vec![1, 2], "the cached scan fans out on two edges");
+        assert!(
+            matches!(plan.stages[0].output, StageOutput::Shuffle { combine: None, .. }),
+            "a shared cached stream ships raw records"
+        );
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_cache_parts_with_parents() {
+        let cached = Rdd::text_file("b", "p").map(|v| Value::pair(v, Value::I64(1))).cache();
+        let mut res = CacheResolution::default();
+        res.insert(CacheResolution::node_key(&cached), fake_parts(2));
+        let mut plan =
+            lower_resolved(&cached.reduce_by_key(2, |a, _| a), Action::Collect, &|_, _| {
+                fake_splits(1)
+            }, &res);
+        plan.stages[1].input = StageInput::CacheParts(fake_parts(2).to_vec());
+        assert!(plan.validate().is_err(), "cache-cut stages are sources");
     }
 
     #[test]

@@ -112,6 +112,11 @@ fn eval(
                 })
                 .collect()
         }
+        // Caching is a materialization hint, not an operator: the
+        // reference semantics see straight through it. Cached engine
+        // runs are pinned against this same oracle, which is exactly
+        // what makes the cache "semantically invisible".
+        RddNode::Cached { parent, .. } => eval(parent, lines, memo),
     };
     memo.insert(key, result.clone());
     result
@@ -167,6 +172,21 @@ mod tests {
             .expect("key 3 present");
         let Value::List(sides) = key3.val() else { panic!("{key3:?}") };
         assert_eq!(sides.len(), 2);
+    }
+
+    #[test]
+    fn cache_markers_are_invisible_to_the_oracle() {
+        let build = |cached: bool| {
+            let base = pairify(&Rdd::text_file("b", "l/"));
+            let base = if cached { base.cache() } else { base };
+            let summed = base.reduce_by_key(4, |a, b| {
+                Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap())
+            });
+            let summed = if cached { summed.cache() } else { summed };
+            summed.map(|v| v)
+        };
+        assert_eq!(interpret(&build(true), &src()), interpret(&build(false), &src()));
+        assert_eq!(interpret_count(&build(true), &src()), 2);
     }
 
     #[test]

@@ -27,11 +27,11 @@ pub mod rdd;
 pub mod task;
 
 pub use dag::{
-    build_kernel_join_plan, build_union_plan, lower, Action, ActionOut, PhysicalPlan, Stage,
-    StageCompute, StageInput, StageOutput, UnionBranch,
+    build_kernel_join_plan, build_union_plan, lower, lower_resolved, Action, ActionOut,
+    CacheResolution, PhysicalPlan, Stage, StageCompute, StageInput, StageOutput, UnionBranch,
 };
-pub use rdd::{DynOp, Rdd, SessionBinding};
-pub use task::{InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
+pub use rdd::{DynOp, Rdd, SessionBinding, StorageLevel};
+pub use task::{CachePart, InputSplit, ResumeState, TaskDescriptor, TaskInput, TaskOutput};
 
 use crate::compute::queries::QueryId;
 use crate::config::FlintConfig;

@@ -149,6 +149,21 @@ impl std::fmt::Debug for DynOp {
     }
 }
 
+/// Where a cached cut's partitions may live — Spark's `StorageLevel`,
+/// reduced to the tiers this engine models. The effective tier is the
+/// intersection of this per-node request and the global
+/// `flint.cache.tier` policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageLevel {
+    /// Warm-container memory tier only: partitions survive while the
+    /// builder's containers stay warm, vanish on cold starts.
+    Memory,
+    /// Committed S3 objects only (always durable, always a GET away).
+    S3,
+    /// Both: S3 for durability, warm-container memory for speed.
+    MemoryAndS3,
+}
+
 /// RDD lineage node.
 pub enum RddNode {
     /// Read text lines from every object under `bucket/prefix`; records
@@ -162,6 +177,13 @@ pub enum RddNode {
     /// edge* (the per-parent-tagged shuffle), yielding
     /// `(key, [left_values, right_values])`.
     CoGroup { left: Rdd, right: Rdd, partitions: usize },
+    /// Persistence marker (`rdd.cache()` / `rdd.persist(level)`).
+    /// Semantically the identity — the interpreter evaluates straight
+    /// through it — but the action path may *cut* here: a resolved
+    /// cache entry replaces the whole sub-lineage below with a
+    /// `CachedScan` over materialized partitions. Unresolved markers
+    /// (cache disabled, eviction, no session) are transparent.
+    Cached { parent: Rdd, level: StorageLevel },
 }
 
 /// What a session installs on the `Rdd`s it creates: how to resolve a
@@ -175,6 +197,14 @@ pub trait SessionBinding: Send + Sync {
     /// Execute a compiled physical plan, returning the action's merged
     /// output.
     fn execute(&self, plan: &PhysicalPlan) -> Result<ActionOut>;
+    /// Resolve the cached cut points of `rdd` before an action lowers
+    /// it: build or look up materialized partitions for every `Cached`
+    /// node this session's cache policy admits. The default (unbound
+    /// lineages, engines without a cache) resolves nothing, leaving
+    /// every `Cached` marker transparent.
+    fn resolve_cache(&self, _rdd: &Rdd) -> dag::CacheResolution {
+        dag::CacheResolution::default()
+    }
 }
 
 /// A handle to a lineage node (cheap to clone; lineage is immutable).
@@ -196,6 +226,9 @@ impl std::fmt::Debug for Rdd {
             }
             RddNode::CoGroup { left, right, partitions } => {
                 write!(f, "CoGroup({left:?}, {right:?}, {partitions})")
+            }
+            RddNode::Cached { parent, level } => {
+                write!(f, "{parent:?} -> Cached({level:?})")
             }
         }
     }
@@ -357,6 +390,21 @@ impl Rdd {
         self.join_with(other, partitions, true, true)
     }
 
+    /// `rdd.cache()`: mark this point of the lineage for reuse at the
+    /// default storage level (memory + S3). Lazy, like Spark: nothing
+    /// materializes until an action runs; actions after the first start
+    /// from the materialized cut instead of recomputing the sub-lineage
+    /// — including actions on *other* lineages that share this exact
+    /// sub-lineage, via the service-level fingerprint registry.
+    pub fn cache(&self) -> Rdd {
+        self.persist(StorageLevel::MemoryAndS3)
+    }
+
+    /// `rdd.persist(level)`: `cache()` with an explicit storage level.
+    pub fn persist(&self, level: StorageLevel) -> Rdd {
+        self.derive(RddNode::Cached { parent: self.clone(), level })
+    }
+
     // -- actions --------------------------------------------------------
 
     fn session(&self) -> Result<&Arc<dyn SessionBinding>> {
@@ -369,7 +417,11 @@ impl Rdd {
     }
 
     /// Compile this lineage for `action` with the bound session's split
-    /// resolution (the lazy→physical step every action takes).
+    /// resolution (the lazy→physical step every action takes). Cache
+    /// markers are left transparent — this is the build-free path
+    /// `explain` uses; actions go through [`Rdd::lower_for_action`],
+    /// which asks the session to resolve (and possibly build) caches
+    /// first.
     pub fn lower(&self, action: Action) -> Result<PhysicalPlan> {
         let session = self.session()?;
         Ok(dag::lower(self, action, &|bucket, prefix| {
@@ -377,15 +429,29 @@ impl Rdd {
         }))
     }
 
+    /// Compile for an action that is about to *run*: the session
+    /// resolves every admitted `Cached` marker (building missing
+    /// entries), and the compiled plan cuts at the resolved ones.
+    fn lower_for_action(&self, action: Action) -> Result<PhysicalPlan> {
+        let session = self.session()?;
+        let resolution = session.resolve_cache(self);
+        Ok(dag::lower_resolved(
+            self,
+            action,
+            &|bucket, prefix| session.input_splits(bucket, prefix),
+            &resolution,
+        ))
+    }
+
     /// `rdd.collect()`: execute and return all records (in the
     /// deterministic `Value::total_cmp` order).
     pub fn collect(&self) -> Result<Vec<Value>> {
-        self.session()?.execute(&self.lower(Action::Collect)?)?.into_values()
+        self.session()?.execute(&self.lower_for_action(Action::Collect)?)?.into_values()
     }
 
     /// `rdd.count()`: number of records the lineage produces.
     pub fn count(&self) -> Result<u64> {
-        self.session()?.execute(&self.lower(Action::Count)?)?.into_count()
+        self.session()?.execute(&self.lower_for_action(Action::Count)?)?.into_count()
     }
 
     /// `rdd.reduce(f)`: fold all records with `f` at the driver (`None`
@@ -409,7 +475,7 @@ impl Rdd {
     /// under `bucket/prefix`; returns the object count.
     pub fn save_as_text_file(&self, bucket: &str, prefix: &str) -> Result<u64> {
         let action = Action::SaveAsText { bucket: bucket.to_string(), prefix: prefix.to_string() };
-        self.session()?.execute(&self.lower(action)?)?.into_saved()
+        self.session()?.execute(&self.lower_for_action(action)?)?.into_saved()
     }
 
     /// Render the stage DAG this lineage compiles to (without running

@@ -6,6 +6,7 @@
 
 use crate::data::ObjectStats;
 use crate::util::json::Json;
+use std::sync::Arc;
 
 /// A byte-range split of one S3 object.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -74,6 +75,46 @@ impl InputSplit {
     }
 }
 
+/// One materialized partition of a cached lineage cut: a committed S3
+/// object of `Value::encode` records, optionally shadowed by a
+/// warm-container memory-tier copy.
+#[derive(Clone, PartialEq, Eq)]
+pub struct CachePart {
+    pub bucket: String,
+    pub key: String,
+    /// Size of the committed S3 object (admission/eviction accounting).
+    pub bytes: u64,
+    /// Memory-tier copy. Present only while the cache registry's memory
+    /// tier holds this partition; never serialized into payloads — the
+    /// bytes model data already resident in a kept-alive container, not
+    /// bytes shipped with the invocation.
+    pub mem: Option<Arc<Vec<u8>>>,
+}
+
+impl std::fmt::Debug for CachePart {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CachePart({}/{}, {}B{})",
+            self.bucket,
+            self.key,
+            self.bytes,
+            if self.mem.is_some() { ", mem" } else { "" }
+        )
+    }
+}
+
+impl CachePart {
+    pub fn to_json(&self) -> Json {
+        // `mem` intentionally omitted: the memory tier is container
+        // state, not payload.
+        Json::obj()
+            .set("bucket", self.bucket.as_str())
+            .set("key", self.key.as_str())
+            .set("bytes", self.bytes)
+    }
+}
+
 /// Where a task reads.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum TaskInput {
@@ -83,6 +124,9 @@ pub enum TaskInput {
     /// shuffle backend). A single-parent chain has one entry; unions and
     /// cogroups list all of their map stages.
     ShufflePartition { partition: u32, parents: Vec<u32> },
+    /// Read one materialized partition of a cached lineage cut
+    /// (`CachedScan` stages).
+    CachedPart(CachePart),
 }
 
 /// Where a task writes.
@@ -154,6 +198,7 @@ impl TaskDescriptor {
                     "parents",
                     Json::Arr(parents.iter().map(|p| Json::from(*p as u64)).collect()),
                 ),
+            TaskInput::CachedPart(p) => Json::obj().set("cache_part", p.to_json()),
         };
         let output = match &self.output {
             TaskOutput::Shuffle { partitions } => {
@@ -307,6 +352,34 @@ mod tests {
         assert_eq!(parents.len(), 2);
         assert_eq!(parents[1].as_u64(), Some(1));
         assert_eq!(input.req_u64("partition").unwrap(), 2);
+    }
+
+    #[test]
+    fn cached_part_payload_omits_mem_tier() {
+        let mut t = sample_task();
+        t.input = TaskInput::CachedPart(CachePart {
+            bucket: "flint-cache".into(),
+            key: "fp-0011223344556677/part-00000".into(),
+            bytes: 4096,
+            mem: None,
+        });
+        t.output = TaskOutput::Driver;
+        let base = t.payload_len();
+        if let TaskInput::CachedPart(p) = &mut t.input {
+            p.mem = Some(Arc::new(vec![0u8; 100_000]));
+        }
+        assert_eq!(
+            t.payload_len(),
+            base,
+            "memory-tier bytes are container state, not payload bytes"
+        );
+        let payload = t.to_payload();
+        let json_end = payload.iter().rposition(|&b| b == b'}').unwrap() + 1;
+        let j = Json::parse(std::str::from_utf8(&payload[..json_end]).unwrap()).unwrap();
+        let part = j.get("input").unwrap().get("cache_part").unwrap();
+        assert_eq!(part.req_str("bucket").unwrap(), "flint-cache");
+        assert_eq!(part.req_u64("bytes").unwrap(), 4096);
+        assert!(part.get("mem").is_none());
     }
 
     #[test]

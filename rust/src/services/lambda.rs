@@ -58,8 +58,15 @@ pub struct InvocationTicket {
 }
 
 pub struct LambdaService {
-    /// function name → warm container count.
-    warm: Mutex<BTreeMap<String, usize>>,
+    /// function name → release times of idle warm containers, oldest
+    /// first (a draw takes the most recently released).
+    warm: Mutex<BTreeMap<String, Vec<f64>>>,
+    /// Virtual wall clock the keep-alive window is judged against;
+    /// advanced by the engine between runs/queries (`advance_to`).
+    clock: Mutex<f64>,
+    /// How long a released container stays warm (`flint.lambda.
+    /// keepalive_s`); 0 = forever, the pre-keepalive pool model.
+    keepalive_s: f64,
     cold_start_s: f64,
     warm_start_s: f64,
     memory_mb: u64,
@@ -82,6 +89,8 @@ impl LambdaService {
     ) -> Self {
         LambdaService {
             warm: Mutex::new(BTreeMap::new()),
+            clock: Mutex::new(0.0),
+            keepalive_s: config.flint.lambda_keepalive_s,
             cold_start_s: config.sim.lambda_cold_start_s,
             warm_start_s: config.sim.lambda_warm_start_s,
             memory_mb: config.sim.lambda_memory_mb,
@@ -105,6 +114,37 @@ impl LambdaService {
         self.memory_mb * 1024 * 1024
     }
 
+    /// Advance the keep-alive clock to virtual time `t` (monotonic; a
+    /// stale `t` is ignored). The engine calls this between runs and
+    /// between service-query arrivals — containers released more than
+    /// `keepalive_s` before the new time have been reclaimed by the
+    /// provider and their next draw is cold again.
+    pub fn advance_to(&self, t: f64) {
+        let mut clock = self.clock.lock().expect("lambda clock lock");
+        if t > *clock {
+            *clock = t;
+        }
+    }
+
+    /// Current keep-alive clock reading.
+    pub fn now(&self) -> f64 {
+        *self.clock.lock().expect("lambda clock lock")
+    }
+
+    /// Drop containers whose keep-alive window has lapsed. Caller holds
+    /// the pool lock; `now` is the current clock reading.
+    fn prune_expired(&self, pool: &mut Vec<f64>, now: f64) {
+        if self.keepalive_s <= 0.0 {
+            return; // 0 = never expire (pre-keepalive model)
+        }
+        let before = pool.len();
+        pool.retain(|&released| now - released <= self.keepalive_s);
+        let expired = before - pool.len();
+        if expired > 0 {
+            self.metrics.add("lambda.keepalive_expired", expired as u64);
+        }
+    }
+
     /// Start an invocation: validates the payload size, draws a container
     /// from the warm pool (or pays a cold start), rolls failure injection.
     pub fn begin_invoke(
@@ -117,14 +157,13 @@ impl LambdaService {
             return Err(LambdaError::PayloadTooLarge(payload_bytes, self.payload_limit));
         }
         let cold = {
+            let now = self.now();
             let mut warm = self.warm.lock().expect("lambda lock");
-            let n = warm.entry(function.to_string()).or_insert(0);
-            if *n > 0 {
-                *n -= 1;
-                false
-            } else {
-                true
-            }
+            let pool = warm.entry(function.to_string()).or_default();
+            self.prune_expired(pool, now);
+            // Most recently released container first (deepest remaining
+            // keep-alive window stays in the pool).
+            pool.pop().is_none()
         };
         self.metrics.incr("lambda.invocations");
         if cold {
@@ -155,12 +194,13 @@ impl LambdaService {
             ));
         }
         self.bill(duration_s);
+        let now = self.now();
         let mut warm = self.warm.lock().expect("lambda lock");
-        let n = warm.entry(function.to_string()).or_insert(0);
+        let pool = warm.entry(function.to_string()).or_default();
         // The provider caps how many idle containers it keeps around; the
         // account concurrency limit is a reasonable stand-in.
-        if *n < self.max_concurrency {
-            *n += 1;
+        if pool.len() < self.max_concurrency {
+            pool.push(now);
         }
         Ok(())
     }
@@ -189,22 +229,37 @@ impl LambdaService {
         self.metrics.add("lambda.idle_billed_100ms", (billed * 10.0) as u64);
     }
 
-    /// Current warm-pool size for a function.
+    /// Current warm-pool size for a function (containers still inside
+    /// their keep-alive window; read-only, no expiry metric).
     pub fn warm_count(&self, function: &str) -> usize {
+        let now = self.now();
         self.warm
             .lock()
             .expect("lambda lock")
             .get(function)
-            .copied()
+            .map(|pool| {
+                if self.keepalive_s <= 0.0 {
+                    pool.len()
+                } else {
+                    pool.iter().filter(|&&released| now - released <= self.keepalive_s).count()
+                }
+            })
             .unwrap_or(0)
     }
 
     /// Pre-warm `n` containers (benchmarks measure "after warm-up", like
-    /// the paper's five post-warm-up trials).
+    /// the paper's five post-warm-up trials). Pre-warmed containers are
+    /// released "now", so their keep-alive window starts fresh.
     pub fn prewarm(&self, function: &str, n: usize) {
+        let now = self.now();
         let mut warm = self.warm.lock().expect("lambda lock");
-        let entry = warm.entry(function.to_string()).or_insert(0);
-        *entry = (*entry + n).min(self.max_concurrency);
+        let pool = warm.entry(function.to_string()).or_default();
+        for _ in 0..n {
+            if pool.len() >= self.max_concurrency {
+                break;
+            }
+            pool.push(now);
+        }
     }
 
     /// Drop all warm containers (to measure cold behaviour).
@@ -313,6 +368,65 @@ mod tests {
         svc.freeze();
         assert_eq!(svc.warm_count("exec"), 0);
         assert!(svc.begin_invoke("exec", 0).unwrap().cold);
+    }
+
+    fn keepalive_service(keepalive_s: f64) -> (LambdaService, Metrics) {
+        let mut cfg = FlintConfig::default();
+        cfg.flint.lambda_keepalive_s = keepalive_s;
+        let cost = Arc::new(CostTracker::new());
+        let metrics = Metrics::new();
+        let failure = Arc::new(FailureInjector::new(5, 0.0, 0.0));
+        let svc = LambdaService::new(&cfg, cost, metrics.clone(), failure);
+        (svc, metrics)
+    }
+
+    #[test]
+    fn keepalive_zero_never_expires() {
+        let (svc, metrics) = keepalive_service(0.0);
+        svc.begin_invoke("exec", 0).unwrap();
+        svc.finish_invoke("exec", 1.0).unwrap();
+        svc.advance_to(1.0e9);
+        assert_eq!(svc.warm_count("exec"), 1, "0 keepalive = the pre-keepalive model");
+        assert!(!svc.begin_invoke("exec", 0).unwrap().cold);
+        assert_eq!(metrics.get("lambda.keepalive_expired"), 0);
+    }
+
+    #[test]
+    fn keepalive_window_expires_containers() {
+        let (svc, metrics) = keepalive_service(60.0);
+        svc.begin_invoke("exec", 0).unwrap();
+        svc.finish_invoke("exec", 1.0).unwrap(); // released at t=0
+        svc.advance_to(59.0);
+        assert_eq!(svc.warm_count("exec"), 1, "inside the window");
+        assert!(!svc.begin_invoke("exec", 0).unwrap().cold);
+        svc.finish_invoke("exec", 1.0).unwrap(); // re-released at t=59
+        svc.advance_to(120.0);
+        assert_eq!(svc.warm_count("exec"), 0, "59 + 60 < 120");
+        assert!(svc.begin_invoke("exec", 0).unwrap().cold);
+        assert_eq!(metrics.get("lambda.keepalive_expired"), 1);
+    }
+
+    #[test]
+    fn keepalive_draws_most_recently_released_first() {
+        let (svc, _) = keepalive_service(100.0);
+        svc.begin_invoke("exec", 0).unwrap();
+        svc.begin_invoke("exec", 0).unwrap();
+        svc.finish_invoke("exec", 1.0).unwrap(); // released at t=0
+        svc.advance_to(90.0);
+        svc.finish_invoke("exec", 1.0).unwrap(); // released at t=90
+        // Draw one (takes the t=90 release), then expire the rest.
+        assert!(!svc.begin_invoke("exec", 0).unwrap().cold);
+        svc.advance_to(150.0);
+        // The t=0 container lapsed at t=100; only cold remains.
+        assert!(svc.begin_invoke("exec", 0).unwrap().cold);
+    }
+
+    #[test]
+    fn advance_to_is_monotonic() {
+        let (svc, _) = keepalive_service(10.0);
+        svc.advance_to(50.0);
+        svc.advance_to(20.0);
+        assert_eq!(svc.now(), 50.0, "stale advances are ignored");
     }
 
     #[test]

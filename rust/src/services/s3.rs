@@ -186,6 +186,18 @@ impl ObjectStore {
         Ok(data.len() as u64)
     }
 
+    /// Simulation-side introspection: the object's bytes with **no**
+    /// request, cost, or metric. Used where the simulator models data
+    /// that is already resident outside S3 — e.g. populating the
+    /// lineage cache's warm-container memory tier from the committed
+    /// object the builder just wrote (the real system keeps those bytes
+    /// in the container; round-tripping them through a priced GET would
+    /// double-charge the build). Never call this on a data path that
+    /// models a real S3 read — use `get_object`/`get_range`.
+    pub fn peek_object(&self, bucket: &str, key: &str) -> Result<Arc<Vec<u8>>, S3Error> {
+        self.lookup(bucket, key)
+    }
+
     /// Attach user metadata to an existing object. On real S3 metadata
     /// rides the PUT itself, so this books no extra request or time —
     /// it only has to happen before anyone HEADs the object.

@@ -1,0 +1,183 @@
+//! The lineage cache at the service layer, end to end:
+//!
+//! 1. **Cross-query reuse** — two tenants submitting the same lineage
+//!    handles share one cache entry: the first query builds (and pays),
+//!    the second hits without re-execution, results stay identical, and
+//!    Σ per-tenant ledgers still equals the pool's billed spend to the
+//!    last bit with builds and hits in play.
+//! 2. **Hoisted scan cache** — a service LISTs (and stats-HEADs) a
+//!    popular prefix once, not once per query: the second query's LIST
+//!    count is zero.
+//! 3. **Off means off** — with `flint.cache.capacity_bytes = 0` (the
+//!    default), a lineage full of `cache()` markers produces a report
+//!    and metrics registry byte-identical to the marker-free lineage in
+//!    a fresh environment: the feature is invisible until switched on.
+
+use flint::compute::value::Value;
+use flint::config::FlintConfig;
+use flint::data::{generate_taxi_dataset, INPUT_BUCKET};
+use flint::exec::{FlintContext, FlintService};
+use flint::plan::{Action, ActionOut, Rdd};
+use flint::services::SimEnv;
+
+/// Deterministic modeled config (no host-measured jitter).
+fn modeled_cfg() -> FlintConfig {
+    let mut c = FlintConfig::for_tests();
+    c.sim.compute_scale = 0.0;
+    c
+}
+
+/// Scan → reduce over the taxi trips, with a `cache()` marker over the
+/// scan when asked — the shared sub-lineage both tenants submit.
+fn hour_pairs(sc: &FlintContext, cached: bool) -> Rdd {
+    let scan = sc.text_file(INPUT_BUCKET, "trips/").map(|line| {
+        let text = line.as_str().expect("text input");
+        let hour = flint::data::schema::TripRecord::parse_csv(text.as_bytes())
+            .map(|r| flint::data::chrono::hour_of_day(r.dropoff_ts) as i64)
+            .unwrap_or(0);
+        Value::pair(Value::I64(hour), Value::I64(1))
+    });
+    let scan = if cached { scan.cache() } else { scan };
+    scan.reduce_by_key(8, |a, b| Value::I64(a.as_i64().unwrap() + b.as_i64().unwrap()))
+}
+
+#[test]
+fn cross_tenant_cache_hit_keeps_ledgers_exact() {
+    let mut cfg = modeled_cfg();
+    cfg.flint.cache.capacity_bytes = 1 << 30;
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env.clone());
+    service.prewarm();
+
+    // Both tenants submit the SAME lineage handles (shared op Arcs), so
+    // the fingerprints agree and the registry can serve the re-use.
+    let sc = service.session("acme");
+    let rdd = hour_pairs(&sc, true);
+    service.submit("acme", &rdd, Action::Collect).unwrap();
+    service.submit("globex", &rdd, Action::Collect).unwrap();
+    let report = service.run().unwrap();
+
+    // The builder built, the second query hit — and never re-built.
+    let m = env.metrics();
+    assert!(m.get("q0.cache.builds") >= 1, "first query must build the entry");
+    assert_eq!(m.get("q0.cache.hits"), 0);
+    assert!(m.get("q1.cache.hits") >= 1, "second query must hit the registry");
+    assert_eq!(m.get("q1.cache.builds"), 0, "a hit must not rebuild");
+    assert!(service.shared().registry.len() >= 1);
+    assert!(m.get("q0.cache.bytes") > 0, "admitted entries are metered in the builder's scope");
+
+    // Same answer for both queries.
+    let rows = |out: &ActionOut| match out {
+        ActionOut::Values(v) => v.clone(),
+        other => panic!("expected values, got {other:?}"),
+    };
+    assert_eq!(rows(&report.queries[0].out), rows(&report.queries[1].out));
+
+    // Billing stays exact with builds and hits in the windows: every
+    // dollar is in exactly one query's diff, so Σ ledgers == pool spend.
+    let ledger_sum: f64 = report.ledgers.values().map(|l| l.total_usd()).sum();
+    assert!(
+        (ledger_sum - report.run_cost.total()).abs() < 1e-15,
+        "ledgers {ledger_sum} != pool {}",
+        report.run_cost.total()
+    );
+    // The builder paid for the build; the hitter's truncated plan (a
+    // cached scan instead of the full input scan + build) costs less.
+    let acme = report.queries[0].cost.total();
+    let globex = report.queries[1].cost.total();
+    assert!(
+        globex < acme,
+        "cache hit must be cheaper than build: acme ${acme} vs globex ${globex}"
+    );
+}
+
+#[test]
+fn service_lists_a_popular_prefix_once() {
+    let cfg = modeled_cfg();
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let service = FlintService::new(env.clone());
+    service.prewarm();
+    let sc = service.session("acme");
+
+    // Two queries over the same prefix — DIFFERENT lineages (fresh
+    // closures), so nothing here rides the lineage cache; only the
+    // hoisted scan cache can save the second LIST.
+    service.submit("acme", &hour_pairs(&sc, false), Action::Collect).unwrap();
+    let first = service.run().unwrap();
+    assert_eq!(first.queries.len(), 1);
+    let lists_after_first = env.metrics().get("s3.list");
+    assert!(lists_after_first > 0, "the first query pays the LIST");
+
+    service.submit("globex", &hour_pairs(&sc, false), Action::Collect).unwrap();
+    service.run().unwrap();
+    assert_eq!(
+        env.metrics().get("s3.list"),
+        lists_after_first,
+        "the second query's LIST count must be zero (hoisted scan cache)"
+    );
+    assert!(env.metrics().get("q1.scan.list_cache_hits") >= 1);
+}
+
+#[test]
+fn cache_off_is_byte_identical_to_marker_free_runs() {
+    // The regression pin for "semantically invisible when off": the
+    // default config (capacity 0) with markers everywhere must produce
+    // the same report and the same metrics registry as a marker-free
+    // lineage in a fresh environment.
+    let cfg = modeled_cfg();
+    assert_eq!(cfg.flint.cache.capacity_bytes, 0, "off by default");
+    let run = |cached: bool| {
+        let env = SimEnv::new(cfg.clone());
+        generate_taxi_dataset(&env, "trips", cfg.data.trips);
+        let sc = FlintContext::new(env.clone());
+        sc.prewarm();
+        let report = sc.run(&hour_pairs(&sc, cached), Action::Collect).unwrap();
+        (format!("{report:?}"), env.metrics().snapshot())
+    };
+    let (marked, marked_metrics) = run(true);
+    let (plain, plain_metrics) = run(false);
+    assert_eq!(marked, plain, "cache off must reproduce the marker-free report");
+    assert_eq!(marked_metrics, plain_metrics, "and the exact metrics registry");
+    assert!(
+        marked_metrics.iter().all(|(k, _)| !k.starts_with("cache.")),
+        "no cache meters when off: {marked_metrics:?}"
+    );
+}
+
+#[test]
+fn warm_rerun_beats_cold_on_latency_and_gb_seconds() {
+    // The A11 gate's unit-level guard: one session, capacity on, the
+    // same handles run twice. The cold run pays the build; the warm
+    // re-run compiles a truncated plan over the cached cut and must win
+    // on BOTH latency and GB-seconds.
+    let mut cfg = modeled_cfg();
+    cfg.flint.cache.capacity_bytes = 1 << 30;
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let sc = FlintContext::new(env.clone());
+    sc.prewarm();
+    let rdd = hour_pairs(&sc, true);
+
+    let gb_s = |r: &flint::exec::QueryReport| {
+        r.cost.get(flint::cost::CostCategory::LambdaCompute) / cfg.pricing.lambda_gb_s
+    };
+    let cold = sc.run(&rdd, Action::Collect).unwrap();
+    assert!(env.metrics().get("cache.builds") >= 1);
+    let warm = sc.run(&rdd, Action::Collect).unwrap();
+    assert!(env.metrics().get("cache.hits") >= 1);
+    assert_eq!(format!("{:?}", cold.result), format!("{:?}", warm.result));
+    assert!(
+        warm.latency_s < cold.latency_s,
+        "warm {} must beat cold {} on latency",
+        warm.latency_s,
+        cold.latency_s
+    );
+    assert!(
+        gb_s(&warm) < gb_s(&cold),
+        "warm {} must beat cold {} on GB-seconds",
+        gb_s(&warm),
+        gb_s(&cold)
+    );
+}

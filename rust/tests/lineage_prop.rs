@@ -24,7 +24,8 @@ use flint::exec::driver::{run_plan, ActionOut, RunParams};
 use flint::exec::executor::IoMode;
 use flint::exec::shuffle::{MemoryShuffle, Transport};
 use flint::exec::{ClusterMode, FlintContext};
-use flint::plan::{interp, Action, Rdd};
+use flint::plan::rdd::RddNode;
+use flint::plan::{interp, Action, Rdd, StorageLevel};
 use flint::services::SimEnv;
 use flint::simtime::ScheduleMode;
 use flint::util::propcheck::{forall, Gen};
@@ -66,7 +67,10 @@ fn oracle_lines(_bucket: &str, prefix: &str) -> Vec<String> {
 
 /// Every generated lineage emits `(I64 key, I64 value)` pairs with keys
 /// in 0..7 and bounded values, so any node can legally feed any wide op.
-fn gen_lineage(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>) -> Rdd {
+/// `cache_prob` sprinkles random `cache()`/`persist(...)` markers over
+/// generated nodes (0.0 = the original marker-free generator); pool
+/// reuse then shares *cached* sub-lineages across diamonds too.
+fn gen_lineage(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>, cache_prob: f64) -> Rdd {
     // Reuse an already-built subtree sometimes: the shared-sublineage /
     // diamond path (same Arc node consumed twice).
     if !pool.is_empty() && g.chance(0.25) {
@@ -78,27 +82,36 @@ fn gen_lineage(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>) -> Rdd
         *wide_budget -= 1;
         if g.bool() {
             let parts = g.usize(4) + 1;
-            let child = gen_narrowed(g, wide_budget, pool);
+            let child = gen_narrowed(g, wide_budget, pool, cache_prob);
             gen_reduce(g, &child, parts)
         } else {
             let parts = g.usize(4) + 1;
-            let left = gen_narrowed(g, wide_budget, pool);
+            let left = gen_narrowed(g, wide_budget, pool, cache_prob);
             // Self-cogroup sometimes: both sides the same handle.
             let right = if g.chance(0.2) {
                 left.clone()
             } else {
-                gen_narrowed(g, wide_budget, pool)
+                gen_narrowed(g, wide_budget, pool, cache_prob)
             };
             cogroup_flatten(&left, &right, parts)
         }
+    };
+    let rdd = if cache_prob > 0.0 && g.chance(cache_prob) {
+        match g.usize(3) {
+            0 => rdd.cache(),
+            1 => rdd.persist(StorageLevel::Memory),
+            _ => rdd.persist(StorageLevel::S3),
+        }
+    } else {
+        rdd
     };
     pool.push(rdd.clone());
     rdd
 }
 
 /// A child lineage with 0..2 extra narrow ops on top.
-fn gen_narrowed(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>) -> Rdd {
-    let mut rdd = gen_lineage(g, wide_budget, pool);
+fn gen_narrowed(g: &mut Gen, wide_budget: &mut usize, pool: &mut Vec<Rdd>, cache_prob: f64) -> Rdd {
+    let mut rdd = gen_lineage(g, wide_budget, pool, cache_prob);
     for _ in 0..g.usize(3) {
         rdd = gen_narrow(g, &rdd);
     }
@@ -266,7 +279,7 @@ fn prop_random_lineages_match_interpreter_oracle_on_all_backends() {
     forall("random-lineage-vs-oracle", 8, |g| {
         let mut wide_budget = 3;
         let mut pool = Vec::new();
-        let rdd = gen_narrowed(g, &mut wide_budget, &mut pool);
+        let rdd = gen_narrowed(g, &mut wide_budget, &mut pool, 0.0);
         let expect = interp::interpret(&rdd, &oracle_lines);
 
         for backend in [ShuffleBackend::Sqs, ShuffleBackend::S3] {
@@ -311,6 +324,73 @@ fn prop_random_lineages_match_interpreter_oracle_on_all_backends() {
         let n = sc.count(&rdd).map_err(|e| format!("count: {e:#}"))?;
         if n != interp::interpret_count(&rdd, &oracle_lines) {
             return Err(format!("count action diverged: {n}"));
+        }
+        Ok(())
+    });
+}
+
+/// Distinct `Cached` markers in a lineage (diamonds counted once).
+fn count_markers(rdd: &Rdd, seen: &mut std::collections::HashSet<usize>) -> usize {
+    if !seen.insert(flint::plan::CacheResolution::node_key(rdd)) {
+        return 0;
+    }
+    match &*rdd.node {
+        RddNode::TextFile { .. } => 0,
+        RddNode::Narrow { parent, .. } | RddNode::ReduceByKey { parent, .. } => {
+            count_markers(parent, seen)
+        }
+        RddNode::CoGroup { left, right, .. } => {
+            count_markers(left, seen) + count_markers(right, seen)
+        }
+        RddNode::Cached { parent, .. } => 1 + count_markers(parent, seen),
+    }
+}
+
+/// Cache transparency under the full adversarial setup: random lineages
+/// with random `cache()`/`persist(...)` placements (shared sub-lineages
+/// and diamonds included) run **twice through one session** — with
+/// speculation, stragglers, and duplicate injection still on. Both runs
+/// must equal the interpreter oracle bit-exactly (the oracle never sees
+/// the markers — `interp` treats them as transparent), and the re-run
+/// must report at least one registry hit: every marker's fingerprint is
+/// stable across runs of the same handles, and capacity is ample.
+#[test]
+fn prop_cached_lineages_match_oracle_and_hit_on_rerun() {
+    forall("cached-lineage-vs-oracle", 8, |g| {
+        let mut wide_budget = 3;
+        let mut pool = Vec::new();
+        let mut rdd = gen_narrowed(g, &mut wide_budget, &mut pool, 0.35);
+        if count_markers(&rdd, &mut std::collections::HashSet::new()) == 0 {
+            rdd = rdd.cache();
+        }
+        let expect = interp::interpret(&rdd, &oracle_lines);
+
+        let mut c = base_cfg();
+        c.flint.cache.capacity_bytes = 1 << 30;
+        let env = SimEnv::new(c);
+        seed_sources(&env);
+        let sc = FlintContext::new(env.clone());
+
+        let cold = sc.collect(&rdd).map_err(|e| format!("cached cold run: {e:#}"))?;
+        if cold != expect {
+            return Err(format!(
+                "cached cold run diverged from oracle for {rdd:?}:\n\
+                 got    {cold:?}\nexpect {expect:?}"
+            ));
+        }
+        if env.metrics().get("cache.builds") == 0 {
+            return Err("cold run built no cache entries".to_string());
+        }
+        let hits_before = env.metrics().get("cache.hits");
+        let warm = sc.collect(&rdd).map_err(|e| format!("cached warm run: {e:#}"))?;
+        if warm != expect {
+            return Err(format!(
+                "cached warm run diverged from oracle for {rdd:?}:\n\
+                 got    {warm:?}\nexpect {expect:?}"
+            ));
+        }
+        if env.metrics().get("cache.hits") == hits_before {
+            return Err("warm re-run reported no cache hits".to_string());
         }
         Ok(())
     });

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate in one command: release build, the full test suite, and
+# the CI smoke benches. The shuffle_ablation smoke run includes the A11
+# lineage-cache ablation and drops `BENCH_cache.json` in the repo root,
+# so the first toolchain-equipped machine records real cache numbers as
+# a side effect of gating. CI calls this script; run it locally before
+# pushing to reproduce exactly what CI checks.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo build --release
+cargo test -q
+
+# Smoke benches are gates, not just measurements: each exits non-zero
+# on a modeled-performance regression (speculation, codec, pruning, SQL
+# optimizer, exchange, backend auto-selection, fair scheduling, and the
+# lineage cache's warm-beats-cold + off-switch identity).
+cargo bench --bench straggler_ablation -- --smoke
+cargo bench --bench shuffle_ablation -- --smoke
+cargo bench --bench concurrency_ablation -- --smoke
+
+echo "tier1: OK (cache ablation numbers in $(pwd)/BENCH_cache.json)"
