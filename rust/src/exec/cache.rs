@@ -26,6 +26,14 @@
 //! alias, so the registry can never serve a wrong entry; it can only
 //! miss. Diamonds hash each shared node once (pointer-memoized walk).
 //!
+//! Pointer identity is only sound while the hashed `Arc`s are alive —
+//! a freed closure's address can be reallocated to a new, semantically
+//! different closure. The registry outlives the query lineages it was
+//! fed, so every entry stores [`LineagePins`]: strong references to
+//! each pointer-hashed closure of the lineage that built it. While an
+//! entry can be served, its hashed addresses cannot be recycled; the
+//! pins drop with the entry on eviction or replacement.
+//!
 //! # Registry
 //!
 //! Entries are LRU-over-bytes under `flint.cache.capacity_bytes`;
@@ -36,15 +44,31 @@
 //! re-commits the same keys idempotently (first-commit-wins renames).
 
 use crate::metrics::Metrics;
-use crate::plan::rdd::{DynOp, Rdd, RddNode};
+use crate::plan::rdd::{CombineFn, DynOp, Rdd, RddNode};
 use crate::plan::task::{CachePart, InputSplit};
 use crate::util::fnv1a64;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+/// Strong references to every closure a fingerprint hashed by pointer
+/// identity. A registry entry keeps the pins of the lineage that built
+/// it, so the hashed addresses stay allocated for as long as the entry
+/// can be served — an equal fingerprint from a later query can then
+/// only come from the *same* live `Arc`s, never from a reallocation.
+/// Deliberately opaque: the closures are held, never called.
+///
+/// (Pinning whole `Rdd` handles would be simpler but leaks: an `Rdd`
+/// carries its session binding, and sessions hold the shared registry —
+/// a reference cycle through every admitted entry.)
+#[derive(Default)]
+pub struct LineagePins {
+    ops: Vec<DynOp>,
+    combines: Vec<CombineFn>,
+}
+
 /// Hash one op into the node buffer: kind tag, then parameters (typed
-/// predicates) or closure identity (opaque ones).
-fn fp_op(op: &DynOp, buf: &mut Vec<u8>) {
+/// predicates) or closure identity (opaque ones, pinned).
+fn fp_op(op: &DynOp, buf: &mut Vec<u8>, pins: &mut LineagePins) {
     match op {
         DynOp::Map(f) => {
             buf.push(1);
@@ -63,6 +87,11 @@ fn fp_op(op: &DynOp, buf: &mut Vec<u8>) {
             buf.extend_from_slice(&min_day.to_le_bytes());
             buf.extend_from_slice(&max_day.to_le_bytes());
         }
+    }
+    // DayRange hashes by value; everything else hashed an address and
+    // must be pinned.
+    if !matches!(op, DynOp::DayRange { .. }) {
+        pins.ops.push(op.clone());
     }
 }
 
@@ -94,6 +123,7 @@ fn fp_node(
     rdd: &Rdd,
     splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
     memo: &mut HashMap<usize, u64>,
+    pins: &mut LineagePins,
 ) -> u64 {
     let key = Arc::as_ptr(&rdd.node) as *const () as usize;
     if let Some(h) = memo.get(&key) {
@@ -111,8 +141,8 @@ fn fp_node(
         }
         RddNode::Narrow { parent, op } => {
             buf.push(2);
-            fp_op(op, &mut buf);
-            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+            fp_op(op, &mut buf, pins);
+            buf.extend_from_slice(&fp_node(parent, splits, memo, pins).to_le_bytes());
         }
         RddNode::ReduceByKey { parent, partitions, combine } => {
             buf.push(3);
@@ -120,20 +150,21 @@ fn fp_node(
             buf.extend_from_slice(
                 &(Arc::as_ptr(combine) as *const () as usize as u64).to_le_bytes(),
             );
-            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+            pins.combines.push(Arc::clone(combine));
+            buf.extend_from_slice(&fp_node(parent, splits, memo, pins).to_le_bytes());
         }
         RddNode::CoGroup { left, right, partitions } => {
             buf.push(4);
             buf.extend_from_slice(&(*partitions as u64).to_le_bytes());
-            buf.extend_from_slice(&fp_node(left, splits, memo).to_le_bytes());
-            buf.extend_from_slice(&fp_node(right, splits, memo).to_le_bytes());
+            buf.extend_from_slice(&fp_node(left, splits, memo, pins).to_le_bytes());
+            buf.extend_from_slice(&fp_node(right, splits, memo, pins).to_le_bytes());
         }
         // A nested marker is part of the structure but its storage level
         // is not: `persist(Memory)` and `persist(S3)` over the same
         // parent describe the same bytes, so they share one entry.
         RddNode::Cached { parent, .. } => {
             buf.push(5);
-            buf.extend_from_slice(&fp_node(parent, splits, memo).to_le_bytes());
+            buf.extend_from_slice(&fp_node(parent, splits, memo, pins).to_le_bytes());
         }
     }
     let h = fnv1a64(&buf);
@@ -145,13 +176,30 @@ fn fp_node(
 /// covers). `splits` resolves `TextFile` sources exactly like lowering
 /// does — dataset identity and the stats view are part of the key.
 pub fn lineage_fingerprint(rdd: &Rdd, splits: &dyn Fn(&str, &str) -> Vec<InputSplit>) -> u64 {
-    fp_node(rdd, splits, &mut HashMap::new())
+    pinned_lineage_fingerprint(rdd, splits).0
+}
+
+/// [`lineage_fingerprint`] plus the [`LineagePins`] that keep it sound:
+/// a caller admitting a registry entry under the returned hash MUST
+/// store the pins in the entry, so the pointer-hashed closures outlive
+/// every lookup that could match it.
+pub fn pinned_lineage_fingerprint(
+    rdd: &Rdd,
+    splits: &dyn Fn(&str, &str) -> Vec<InputSplit>,
+) -> (u64, LineagePins) {
+    let mut pins = LineagePins::default();
+    let h = fp_node(rdd, splits, &mut HashMap::new(), &mut pins);
+    (h, pins)
 }
 
 struct CacheEntry {
     parts: Arc<Vec<CachePart>>,
     bytes: u64,
     last_used: u64,
+    /// Keeps the building lineage's pointer-hashed closures alive while
+    /// this entry can be served (see [`LineagePins`]); released on
+    /// eviction or replacement by dropping the entry.
+    _pins: LineagePins,
 }
 
 #[derive(Default)]
@@ -188,12 +236,15 @@ impl CacheRegistry {
     /// Admit a freshly built entry, evicting least-recently-used entries
     /// until it fits. An entry larger than the whole capacity is
     /// rejected (the build's S3 objects still served the building query;
-    /// they just aren't registered for reuse). Returns whether the entry
-    /// was admitted.
+    /// they just aren't registered for reuse). `pins` must be the
+    /// [`LineagePins`] collected while fingerprinting `fp` — the entry
+    /// holds them so the hashed closure addresses can't be reallocated
+    /// while it lives. Returns whether the entry was admitted.
     pub fn admit(
         &self,
         fp: u64,
         parts: Arc<Vec<CachePart>>,
+        pins: LineagePins,
         capacity_bytes: u64,
         metrics: &Metrics,
     ) -> bool {
@@ -220,9 +271,13 @@ impl CacheRegistry {
         }
         inner.tick += 1;
         let tick = inner.tick;
-        inner.entries.insert(fp, CacheEntry { parts, bytes, last_used: tick });
+        inner
+            .entries
+            .insert(fp, CacheEntry { parts, bytes, last_used: tick, _pins: pins });
         inner.bytes += bytes;
-        metrics.add("cache.bytes", bytes);
+        // Cumulative admission volume; resident bytes (net of evictions
+        // and replacements) are [`CacheRegistry::bytes`].
+        metrics.add("cache.admitted_bytes", bytes);
         true
     }
 
@@ -244,28 +299,45 @@ impl CacheRegistry {
 /// The hoisted scan-listing cache: one `(bucket, prefix)` → resolved
 /// splits map shared by every session of a service, so repeat scans of
 /// a popular prefix stop paying the LIST + per-object HEAD tax on every
-/// query. Entries embed the stats view current at first resolution;
-/// the cache lives exactly as long as the service (no TTL — the sim's
-/// datasets are immutable once registered).
+/// query. There is no TTL; instead every entry records the bucket's S3
+/// write generation at resolution time and is served only while the
+/// bucket is still at that generation — any PUT/commit/DELETE under the
+/// bucket (including output the service itself just wrote with
+/// `save_as_text_file`) invalidates its entries by construction.
 #[derive(Default)]
 pub struct ScanCache {
-    inner: Mutex<HashMap<(String, String), Arc<Vec<InputSplit>>>>,
+    inner: Mutex<HashMap<(String, String), (u64, Arc<Vec<InputSplit>>)>>,
 }
 
 impl ScanCache {
-    pub fn get(&self, bucket: &str, prefix: &str) -> Option<Arc<Vec<InputSplit>>> {
-        self.inner
+    /// Look up a resolution, valid only at the bucket's current write
+    /// `generation` (see [`crate::services::s3::ObjectStore::write_generation`]).
+    pub fn get(&self, bucket: &str, prefix: &str, generation: u64) -> Option<Arc<Vec<InputSplit>>> {
+        match self
+            .inner
             .lock()
             .expect("scan cache lock")
             .get(&(bucket.to_string(), prefix.to_string()))
-            .cloned()
+        {
+            Some((gen, splits)) if *gen == generation => Some(Arc::clone(splits)),
+            _ => None,
+        }
     }
 
-    pub fn put(&self, bucket: &str, prefix: &str, splits: Arc<Vec<InputSplit>>) {
+    /// Record a resolution made while the bucket was at `generation`
+    /// (snapshot the generation *before* listing, so a racing write at
+    /// worst discards a fresh entry, never validates a stale one).
+    /// Empty resolutions are never cached: an empty listing usually
+    /// means the data isn't registered yet, and pinning it would starve
+    /// every later scan of the prefix.
+    pub fn put(&self, bucket: &str, prefix: &str, generation: u64, splits: Arc<Vec<InputSplit>>) {
+        if splits.is_empty() {
+            return;
+        }
         self.inner
             .lock()
             .expect("scan cache lock")
-            .insert((bucket.to_string(), prefix.to_string()), splits);
+            .insert((bucket.to_string(), prefix.to_string()), (generation, splits));
     }
 }
 
@@ -301,20 +373,48 @@ mod tests {
     fn registry_lru_eviction_over_bytes() {
         let reg = CacheRegistry::new();
         let m = Metrics::new();
-        assert!(reg.admit(1, parts(400, 2), 1000, &m));
-        assert!(reg.admit(2, parts(400, 2), 1000, &m));
+        let pins = LineagePins::default;
+        assert!(reg.admit(1, parts(400, 2), pins(), 1000, &m));
+        assert!(reg.admit(2, parts(400, 2), pins(), 1000, &m));
         // Touch 1 so 2 becomes the LRU victim.
         assert!(reg.lookup(1).is_some());
-        assert!(reg.admit(3, parts(400, 2), 1000, &m));
+        assert!(reg.admit(3, parts(400, 2), pins(), 1000, &m));
         assert_eq!(m.get("cache.evictions"), 1);
         assert!(reg.lookup(2).is_none(), "LRU entry evicted");
         assert!(reg.lookup(1).is_some());
         assert!(reg.lookup(3).is_some());
         assert_eq!(reg.bytes(), 800);
         // An entry bigger than the whole budget is rejected outright.
-        assert!(!reg.admit(4, parts(2000, 4), 1000, &m));
+        assert!(!reg.admit(4, parts(2000, 4), pins(), 1000, &m));
         assert_eq!(m.get("cache.admission_rejected"), 1);
         assert_eq!(reg.len(), 2);
+        // The admission meter is cumulative (3 × 400 admitted), while
+        // `bytes()` reports what is resident after evictions.
+        assert_eq!(m.get("cache.admitted_bytes"), 1200);
+    }
+
+    #[test]
+    fn admitted_entries_pin_their_hashed_closures() {
+        let splits = |_: &str, _: &str| Vec::new();
+        let reg = CacheRegistry::new();
+        let m = Metrics::new();
+        let lineage = Rdd::text_file("b", "data/").map(|v| v);
+        let f = match &*lineage.node {
+            RddNode::Narrow { op: DynOp::Map(f), .. } => Arc::clone(f),
+            _ => unreachable!("text_file().map() is a Narrow(Map) node"),
+        };
+        let (fp, pins) = pinned_lineage_fingerprint(&lineage, &splits);
+        assert!(reg.admit(fp, parts(100, 1), pins, 1000, &m));
+        drop(lineage);
+        // The query's lineage is gone, but the entry still pins the
+        // closure that was hashed by address: held here + by the entry,
+        // so the address can't be reallocated while `fp` is servable.
+        assert_eq!(Arc::strong_count(&f), 2, "entry keeps the hashed closure alive");
+        // Evicting the entry (a bigger admit floods the budget) releases
+        // the pin.
+        assert!(reg.admit(99, parts(1000, 1), LineagePins::default(), 1000, &m));
+        assert!(reg.lookup(fp).is_none());
+        assert_eq!(Arc::strong_count(&f), 1, "eviction drops the pin");
     }
 
     #[test]
@@ -389,11 +489,30 @@ mod tests {
     }
 
     #[test]
-    fn scan_cache_round_trip() {
+    fn scan_cache_round_trip_and_generation_invalidation() {
+        let split = |key: &str| InputSplit {
+            bucket: "b".into(),
+            key: key.into(),
+            start: 0,
+            end: 10,
+            object_size: 10,
+            stats: None,
+        };
         let sc = ScanCache::default();
-        assert!(sc.get("b", "p/").is_none());
-        sc.put("b", "p/", Arc::new(Vec::new()));
-        assert!(sc.get("b", "p/").is_some());
-        assert!(sc.get("b", "q/").is_none());
+        assert!(sc.get("b", "p/", 0).is_none());
+        sc.put("b", "p/", 3, Arc::new(vec![split("p/part-0")]));
+        assert!(sc.get("b", "p/", 3).is_some());
+        assert!(sc.get("b", "q/", 3).is_none());
+        // A bucket write advanced the generation: the entry is stale and
+        // must not be served (e.g. the service just committed output
+        // under the prefix it cached).
+        assert!(sc.get("b", "p/", 4).is_none());
+        // Re-resolution at the new generation replaces the entry.
+        sc.put("b", "p/", 4, Arc::new(vec![split("p/part-0"), split("p/part-1")]));
+        assert_eq!(sc.get("b", "p/", 4).unwrap().len(), 2);
+        // Empty resolutions are never cached: a prefix read before its
+        // data exists must re-list next time, not stay empty forever.
+        sc.put("b", "empty/", 4, Arc::new(Vec::new()));
+        assert!(sc.get("b", "empty/", 4).is_none());
     }
 }

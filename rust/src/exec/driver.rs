@@ -708,6 +708,9 @@ fn run_task_with_recovery(
 
         let mut base_tl = Timeline::new();
         let mut will_fail = false;
+        // Only a Lambda invocation that drew a live container from the
+        // warm pool runs "warm" — non-Lambda engines provision nothing.
+        let mut warm_container = false;
         if params.lambda {
             // Payload-split workaround (§III-B): oversized task state is
             // staged through S3 instead of the invocation payload.
@@ -733,6 +736,7 @@ fn run_task_with_recovery(
                 if ticket.cold { Component::ColdStart } else { Component::WarmStart },
                 ticket.start_latency_s,
             );
+            warm_container = !ticket.cold;
             will_fail = ticket.will_fail;
             stats.invocations += 1;
         }
@@ -744,7 +748,7 @@ fn run_task_with_recovery(
             // their own failure handling; an early crash received nothing).
             TaskOutcome::Failed { error: "injected invocation crash".into(), timeline: base_tl }
         } else {
-            run_task(ctx, &desc, base_tl)
+            run_task(ctx, &desc, base_tl, warm_container)
         };
 
         match outcome {

@@ -160,8 +160,17 @@ pub enum TaskOutcome {
 }
 
 /// Run one task attempt. `start_latency` (cold/warm start) is already
-/// charged by the caller into `base_timeline`.
-pub fn run_task(ctx: &ExecCtx, task: &TaskDescriptor, base_timeline: Timeline) -> TaskOutcome {
+/// charged by the caller into `base_timeline`. `warm_container` is the
+/// invocation ticket's verdict — true only when this attempt landed on
+/// a live container from the warm pool (always false for engines that
+/// provision nothing, like the cluster baselines); cached scans use it
+/// to decide whether the memory tier exists.
+pub fn run_task(
+    ctx: &ExecCtx,
+    task: &TaskDescriptor,
+    base_timeline: Timeline,
+    warm_container: bool,
+) -> TaskOutcome {
     let mut resp = TaskResponse::new();
     resp.timeline = base_timeline;
     // Payload decode: a fixed small cost plus size-proportional parse.
@@ -178,7 +187,7 @@ pub fn run_task(ctx: &ExecCtx, task: &TaskDescriptor, base_timeline: Timeline) -
         }
         (StageCompute::DynScan { ops }, TaskInput::Split(_)) => dyn_scan(ctx, task, ops, &mut resp),
         (StageCompute::CachedScan { ops }, TaskInput::CachedPart(_)) => {
-            cached_scan(ctx, task, ops, &mut resp)
+            cached_scan(ctx, task, ops, warm_container, &mut resp)
         }
         (StageCompute::DynReduce { combine, post_ops }, TaskInput::ShufflePartition { .. }) => {
             dyn_reduce(ctx, task, combine.clone(), post_ops, &mut resp)
@@ -1334,17 +1343,18 @@ fn cached_scan(
     ctx: &ExecCtx,
     task: &TaskDescriptor,
     ops: &[crate::plan::DynOp],
+    warm_container: bool,
     resp: &mut TaskResponse,
 ) -> Result<Option<ResumeState>> {
     let TaskInput::CachedPart(part) = &task.input else { unreachable!() };
-    // Warm-container placement: the driver charges ColdStart XOR
-    // WarmStart into the base timeline before the task runs, so a zero
-    // cold-start charge means this attempt landed on a live container —
-    // the only place the memory tier exists. Cold containers (and any
-    // engine that charges neither, which provisions nothing) fall back
+    // Warm-container placement: the driver threads the invocation
+    // ticket's cold/warm verdict through `run_task` — only a live
+    // container drawn from the warm pool holds the memory tier.
+    // (Inferring warmth from a zero ColdStart charge would misread cold
+    // invocations whenever `sim.lambda_cold_start_s` is configured 0.)
+    // Cold containers — and engines that provision nothing — fall back
     // to the S3 tier object the build committed.
-    let warm = resp.timeline.get(Component::ColdStart) == 0.0;
-    let bytes: Arc<Vec<u8>> = match (&part.mem, warm) {
+    let bytes: Arc<Vec<u8>> = match (&part.mem, warm_container) {
         (Some(mem), true) => {
             ctx.env.metrics().incr("cache.mem_reads");
             // Memory-tier read: no S3 round trip, just a memcpy-rate

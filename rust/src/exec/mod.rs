@@ -11,7 +11,10 @@ pub mod service;
 pub mod session;
 pub mod shuffle;
 
-pub use cache::{lineage_fingerprint, CacheRegistry, ScanCache, ServiceShared};
+pub use cache::{
+    lineage_fingerprint, pinned_lineage_fingerprint, CacheRegistry, LineagePins, ScanCache,
+    ServiceShared,
+};
 pub use cluster::{ClusterEngine, ClusterMode};
 pub use driver::{ActionOut, EdgeShuffle, RunOutput};
 pub use flint::FlintEngine;

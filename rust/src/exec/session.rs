@@ -29,7 +29,7 @@
 use crate::compute::value::Value;
 use crate::config::CacheTier;
 use crate::data::{Dataset, ObjectStats, CACHE_BUCKET};
-use crate::exec::cache::{lineage_fingerprint, ServiceShared};
+use crate::exec::cache::{pinned_lineage_fingerprint, LineagePins, ServiceShared};
 use crate::exec::cluster::{ClusterEngine, ClusterMode};
 use crate::exec::flint::FlintEngine;
 use crate::exec::QueryReport;
@@ -137,6 +137,7 @@ impl SessionInner {
         parent: &Rdd,
         level: StorageLevel,
         fp: u64,
+        pins: LineagePins,
         resolution: &dag::CacheResolution,
     ) -> Result<Arc<Vec<CachePart>>> {
         let env = self.backend.env();
@@ -197,6 +198,7 @@ impl SessionInner {
         self.shared.registry.admit(
             fp,
             Arc::clone(&parts),
+            pins,
             cfg.flint.cache.capacity_bytes,
             env.metrics(),
         );
@@ -259,8 +261,12 @@ impl SessionBinding for SessionInner {
         // `(bucket, prefix)` → splits map, so a popular prefix pays its
         // LIST and per-object stats HEADs exactly once per service —
         // not once per query (the per-session `stats_cache` only ever
-        // helped repeat queries on one session).
-        if let Some(cached) = self.shared.scans.get(bucket, prefix) {
+        // helped repeat queries on one session). Entries are validated
+        // against the bucket's write generation, snapshotted *before*
+        // the listing: output this service writes under a cached prefix
+        // (or late data registration) invalidates, never goes stale.
+        let generation = env.s3().write_generation(bucket);
+        if let Some(cached) = self.shared.scans.get(bucket, prefix, generation) {
             env.metrics().incr("scan.list_cache_hits");
             return (*cached).clone();
         }
@@ -284,7 +290,7 @@ impl SessionBinding for SessionInner {
                 });
             }
         }
-        self.shared.scans.put(bucket, prefix, Arc::new(splits.clone()));
+        self.shared.scans.put(bucket, prefix, generation, Arc::new(splits.clone()));
         splits
     }
 
@@ -315,14 +321,18 @@ impl SessionBinding for SessionInner {
         collect_cached(rdd, &mut std::collections::HashSet::new(), &mut markers);
         for marker in markers {
             let RddNode::Cached { parent, level } = &*marker.node else { unreachable!() };
-            let fp = lineage_fingerprint(parent, &|b, p| self.input_splits(b, p));
+            // Pins ride along to `admit` on a miss; on a hit they are
+            // dropped — the live entry already pins the same `Arc`s
+            // (equal fingerprint + live pins ⇒ same addresses ⇒ same
+            // closures).
+            let (fp, pins) = pinned_lineage_fingerprint(parent, &|b, p| self.input_splits(b, p));
             let key = dag::CacheResolution::node_key(&marker);
             if let Some(parts) = self.shared.registry.lookup(fp) {
                 env.metrics().incr("cache.hits");
                 resolution.insert(key, parts);
                 continue;
             }
-            match self.build_cache_entry(parent, *level, fp, &resolution) {
+            match self.build_cache_entry(parent, *level, fp, pins, &resolution) {
                 Ok(parts) => resolution.insert(key, parts),
                 Err(e) => {
                     log::warn!("cache build fp-{fp:016x} failed, marker left transparent: {e:#}")

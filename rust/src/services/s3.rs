@@ -86,6 +86,11 @@ pub struct ObjectStore {
     /// User metadata per `bucket/key` (set at PUT time on real S3, here
     /// via [`ObjectStore::set_object_meta`]; returned by HEAD).
     meta: RwLock<BTreeMap<String, Arc<Vec<(String, String)>>>>,
+    /// Per-bucket write generation: bumped by every mutation that can
+    /// change what a LIST/HEAD under the bucket observes (PUT, rename
+    /// commit, DELETE, metadata attach). Listing caches snapshot it to
+    /// validate their entries ([`ObjectStore::write_generation`]).
+    generation: RwLock<BTreeMap<String, u64>>,
     put_mbps: f64,
     first_byte_s: f64,
     get_per_1000: f64,
@@ -99,6 +104,7 @@ impl ObjectStore {
         ObjectStore {
             buckets: RwLock::new(BTreeMap::new()),
             meta: RwLock::new(BTreeMap::new()),
+            generation: RwLock::new(BTreeMap::new()),
             put_mbps: config.sim.s3_put_mbps,
             first_byte_s: config.sim.s3_first_byte_s,
             get_per_1000: config.pricing.s3_get_per_1000,
@@ -121,6 +127,30 @@ impl ObjectStore {
         self.buckets.read().expect("s3 lock").contains_key(bucket)
     }
 
+    /// Current write generation of a bucket (0 until its first
+    /// mutation). Any PUT, rename commit, DELETE, or metadata attach
+    /// under the bucket advances it, so a listing resolved while the
+    /// bucket was at generation `g` is valid exactly as long as the
+    /// bucket is still at `g` — the invalidation signal for shared
+    /// scan-listing caches.
+    pub fn write_generation(&self, bucket: &str) -> u64 {
+        self.generation
+            .read()
+            .expect("s3 generation lock")
+            .get(bucket)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    fn bump_generation(&self, bucket: &str) {
+        *self
+            .generation
+            .write()
+            .expect("s3 generation lock")
+            .entry(bucket.to_string())
+            .or_insert(0) += 1;
+    }
+
     /// PUT an object. Returns the modeled upload duration.
     pub fn put_object(
         &self,
@@ -136,6 +166,7 @@ impl ObjectStore {
                 .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
             b.insert(key.to_string(), Arc::new(data));
         }
+        self.bump_generation(bucket);
         self.cost.charge(CostCategory::S3Requests, self.put_per_1000 / 1000.0);
         self.metrics.incr("s3.put");
         self.metrics.add("s3.bytes_written", len);
@@ -214,6 +245,9 @@ impl ObjectStore {
             .write()
             .expect("s3 meta lock")
             .insert(format!("{bucket}/{key}"), Arc::new(meta));
+        // Metadata feeds the per-object stats that ride input splits, so
+        // attaching it changes what a scan resolution would observe.
+        self.bump_generation(bucket);
         Ok(())
     }
 
@@ -265,6 +299,9 @@ impl ObjectStore {
                 true
             }
         };
+        // Win or lose, the temp key is gone (and on a win the final key
+        // appeared) — either way listings changed.
+        self.bump_generation(bucket);
         // Billed like a COPY (PUT-class) + free DELETE; server-side, so
         // the modeled time is one request round-trip regardless of size.
         self.cost.charge(CostCategory::S3Requests, self.put_per_1000 / 1000.0);
@@ -289,30 +326,39 @@ impl ObjectStore {
     }
 
     pub fn delete_object(&self, bucket: &str, key: &str) -> Result<(), S3Error> {
-        let mut buckets = self.buckets.write().expect("s3 lock");
-        let b = buckets
-            .get_mut(bucket)
-            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
-        b.remove(key)
-            .map(|_| ())
-            .ok_or_else(|| S3Error::NoSuchKey(bucket.to_string(), key.to_string()))
+        {
+            let mut buckets = self.buckets.write().expect("s3 lock");
+            let b = buckets
+                .get_mut(bucket)
+                .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+            b.remove(key)
+                .ok_or_else(|| S3Error::NoSuchKey(bucket.to_string(), key.to_string()))?;
+        }
+        self.bump_generation(bucket);
+        Ok(())
     }
 
     /// Delete every object under a prefix; returns how many were removed.
     pub fn delete_prefix(&self, bucket: &str, prefix: &str) -> Result<usize, S3Error> {
-        let mut buckets = self.buckets.write().expect("s3 lock");
-        let b = buckets
-            .get_mut(bucket)
-            .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
-        let keys: Vec<String> = b
-            .range(prefix.to_string()..)
-            .take_while(|(k, _)| k.starts_with(prefix))
-            .map(|(k, _)| k.clone())
-            .collect();
-        for k in &keys {
-            b.remove(k);
+        let removed = {
+            let mut buckets = self.buckets.write().expect("s3 lock");
+            let b = buckets
+                .get_mut(bucket)
+                .ok_or_else(|| S3Error::NoSuchBucket(bucket.to_string()))?;
+            let keys: Vec<String> = b
+                .range(prefix.to_string()..)
+                .take_while(|(k, _)| k.starts_with(prefix))
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in &keys {
+                b.remove(k);
+            }
+            keys.len()
+        };
+        if removed > 0 {
+            self.bump_generation(bucket);
         }
-        Ok(keys.len())
+        Ok(removed)
     }
 
     /// Total bytes stored in a bucket (diagnostics).
@@ -480,6 +526,45 @@ mod tests {
         assert_eq!(meta.as_slice(), &[("min-day".to_string(), "3".to_string())]);
         assert!(cost.total() > before, "HEAD is a billed request");
         assert_eq!(metrics.get("s3.head"), 1);
+    }
+
+    #[test]
+    fn write_generation_tracks_every_mutation() {
+        let s3 = store();
+        s3.create_bucket("b");
+        assert_eq!(s3.write_generation("b"), 0, "fresh bucket");
+        assert_eq!(s3.write_generation("nope"), 0, "unknown bucket reads as 0");
+
+        s3.put_object("b", "tmp/k.a0", b"x".to_vec()).unwrap();
+        let after_put = s3.write_generation("b");
+        assert!(after_put > 0);
+
+        // Reads never advance the generation.
+        s3.get_object("b", "tmp/k.a0", profile()).unwrap();
+        s3.list("b", "").unwrap();
+        s3.head_object("b", "tmp/k.a0").unwrap();
+        assert_eq!(s3.write_generation("b"), after_put);
+
+        s3.set_object_meta("b", "tmp/k.a0", vec![("rows".into(), "1".into())]).unwrap();
+        let after_meta = s3.write_generation("b");
+        assert!(after_meta > after_put, "metadata feeds split stats");
+
+        s3.commit_rename("b", "tmp/k.a0", "k").unwrap();
+        let after_commit = s3.write_generation("b");
+        assert!(after_commit > after_meta, "a commit changes listings");
+
+        s3.delete_object("b", "k").unwrap();
+        let after_delete = s3.write_generation("b");
+        assert!(after_delete > after_commit);
+        assert!(s3.delete_object("b", "k").is_err());
+        assert_eq!(s3.write_generation("b"), after_delete, "a failed delete is not a write");
+
+        s3.put_object("b", "p/x", b"x".to_vec()).unwrap();
+        let g = s3.write_generation("b");
+        assert_eq!(s3.delete_prefix("b", "none/").unwrap(), 0);
+        assert_eq!(s3.write_generation("b"), g, "a no-op prefix delete is not a write");
+        assert_eq!(s3.delete_prefix("b", "p/").unwrap(), 1);
+        assert!(s3.write_generation("b") > g);
     }
 
     #[test]

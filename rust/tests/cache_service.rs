@@ -65,7 +65,10 @@ fn cross_tenant_cache_hit_keeps_ledgers_exact() {
     assert!(m.get("q1.cache.hits") >= 1, "second query must hit the registry");
     assert_eq!(m.get("q1.cache.builds"), 0, "a hit must not rebuild");
     assert!(service.shared().registry.len() >= 1);
-    assert!(m.get("q0.cache.bytes") > 0, "admitted entries are metered in the builder's scope");
+    assert!(
+        m.get("q0.cache.admitted_bytes") > 0,
+        "admitted entries are metered in the builder's scope"
+    );
 
     // Same answer for both queries.
     let rows = |out: &ActionOut| match out {
@@ -118,6 +121,42 @@ fn service_lists_a_popular_prefix_once() {
         "the second query's LIST count must be zero (hoisted scan cache)"
     );
     assert!(env.metrics().get("q1.scan.list_cache_hits") >= 1);
+}
+
+#[test]
+fn scan_resolution_never_goes_stale() {
+    // Regression: the hoisted scan cache must not pin a prefix's first
+    // resolution forever. A prefix read before its data exists, or read
+    // back after the service itself wrote output under it, must see the
+    // current objects — the cache invalidates on the bucket's write
+    // generation and never caches empty listings.
+    use flint::data::OUTPUT_BUCKET;
+    let cfg = modeled_cfg();
+    let env = SimEnv::new(cfg.clone());
+    generate_taxi_dataset(&env, "trips", cfg.data.trips);
+    let sc = FlintContext::new(env.clone());
+    sc.prewarm();
+
+    // Read the output prefix before anything lives there: empty, but
+    // the empty resolution must not poison later reads.
+    assert_eq!(sc.count(&sc.text_file(OUTPUT_BUCKET, "hist/")).unwrap(), 0);
+
+    // The same engine writes output under that prefix...
+    let saved = hour_pairs(&sc, false).save_as_text_file(OUTPUT_BUCKET, "hist").unwrap();
+    assert!(saved > 0);
+
+    // ...and reading it back must see the committed objects.
+    let lines = sc.count(&sc.text_file(OUTPUT_BUCKET, "hist/")).unwrap();
+    assert!(lines > 0, "read-back after save must see the new objects");
+
+    // With the bucket quiescent again, the re-listing IS reused: the
+    // next read of the same prefix hits the scan cache.
+    let hits_before = env.metrics().get("scan.list_cache_hits");
+    assert_eq!(sc.count(&sc.text_file(OUTPUT_BUCKET, "hist/")).unwrap(), lines);
+    assert!(
+        env.metrics().get("scan.list_cache_hits") > hits_before,
+        "a quiescent prefix is served from the scan cache"
+    );
 }
 
 #[test]
